@@ -1,0 +1,60 @@
+//! Table I end to end: evaluate every synthetic-GLUE task under all five
+//! arithmetic modes and print the paper-layout table plus the average
+//! degradation summary.  Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example glue_eval -- [--limit 64]`
+
+use amfma::config::Args;
+use amfma::model::{self, Weights};
+use amfma::systolic::EngineMode;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let limit = args.get("limit").and_then(|v| v.parse().ok());
+    let batch = args.get_usize("batch", 32);
+
+    let mut results = Vec::new();
+    for name in amfma::data::GLUE_TASKS {
+        let task = amfma::data::load_task(name)?;
+        let weights = Weights::load(&model::eval::weights_path(name))?;
+        for mode in model::paper_modes() {
+            let r = model::evaluate_task(&task, &weights, mode, batch, limit);
+            eprintln!(
+                "  {:<8} {:<11} {:>5.1} ({:.1}s)",
+                r.task,
+                r.mode,
+                r.headline(),
+                r.wall_secs
+            );
+            results.push(r);
+        }
+    }
+    println!("{}", model::render_table1(&results));
+    println!("paper expectation: an-1-1/an-1-2 within ~1 point of bf16 on average; an-2-2 several points worse\n");
+    for m in ["bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        println!(
+            "avg degradation vs bf16: {m} = {:+.2} points",
+            model::eval::avg_degradation_vs_bf16(&results, m)
+        );
+    }
+    // Also quantify raw-logit divergence on one task, as a numeric check
+    // that is independent of task difficulty.
+    let task = amfma::data::load_task("sst2")?;
+    let weights = Weights::load(&model::eval::weights_path("sst2"))?;
+    let n = 16.min(task.n_dev());
+    let toks = &task.dev_tokens[..n * task.seq_len];
+    let base = model::Encoder::new(
+        &weights,
+        amfma::systolic::MatrixEngine::new(EngineMode::parse("bf16").unwrap()),
+    )
+    .forward(toks, n);
+    for m in ["bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let y = model::Encoder::new(
+            &weights,
+            amfma::systolic::MatrixEngine::new(EngineMode::parse(m).unwrap()),
+        )
+        .forward(toks, n);
+        println!("max |logit delta| vs bf16, {m}: {:.4}", y.max_abs_diff(&base));
+    }
+    Ok(())
+}

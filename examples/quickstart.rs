@@ -1,0 +1,54 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds matrix engines in every numeric mode of the paper, runs the same
+//! GEMM through each, reports the numeric divergence, and prints the
+//! area/power story of Fig 4/7.  Needs no artifacts.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use amfma::cost;
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+use amfma::ApproxNorm;
+
+fn main() {
+    let (m, k, n) = (64, 256, 64);
+    let mut rng = Prng::new(2024);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+
+    // Reference result in FP32.
+    let fp32 = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, k, n);
+
+    println!("GEMM {m}x{k}x{n}, standard-normal operands\n");
+    println!("{:<12} {:>14} {:>14}", "mode", "mean |err|", "max |err|");
+    for mode in ["bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let engine = MatrixEngine::new(EngineMode::parse(mode).unwrap());
+        let y = engine.matmul(&x, &w, m, k, n);
+        let (mut sum, mut max) = (0.0f64, 0.0f64);
+        for (a, b) in y.iter().zip(&fp32) {
+            let e = (a - b).abs() as f64;
+            sum += e;
+            max = max.max(e);
+        }
+        println!("{:<12} {:>14.5} {:>14.5}", mode, sum / y.len() as f64, max);
+    }
+
+    println!("\n--- hardware cost story (Fig 4 / Fig 7) ---\n");
+    let cfg = ApproxNorm::AN_1_2;
+    println!("{}", cost::PeArea::accurate().render());
+    println!(
+        "PE-level area saving with approximate normalization ({}): {:.1}%",
+        cfg.label(),
+        100.0 * cost::pe_area_saving(cfg)
+    );
+    println!("\n{}", cost::render_fig7a(&cost::fig7a(cfg)));
+
+    // Cycle model of the physical array this engine stands in for.
+    let eng = MatrixEngine::with_grid(EngineMode::parse("bf16an-1-2").unwrap(), 16, 16);
+    println!(
+        "array timing: {m}x{k}x{n} on 16x16 PEs -> {} cycles, {:.1}% utilization",
+        eng.cycle_estimate(m, k, n),
+        100.0 * eng.utilization_estimate(m, k, n)
+    );
+}

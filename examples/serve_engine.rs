@@ -1,0 +1,146 @@
+//! End-to-end serving driver — the full stack under load.
+//!
+//! Router → dynamic batcher → engine workers over the trained task models
+//! (falls back to randomly initialized models when artifacts are absent, so
+//! the example always runs).  Two replicas with different numeric modes are
+//! deployed behind one router: the bf16an-1-2 "efficient" engine and the
+//! fp32 reference; the load generator splits traffic and the report
+//! contrasts latency, throughput, batch shapes and agreement of predictions.
+//!
+//! Run: `cargo run --release --example serve_engine -- [--requests 512]`
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use amfma::config::Args;
+use amfma::coordinator::{InferenceServer, Replica, Router, ServerConfig};
+use amfma::data::tasks::GLUE_TASKS;
+use amfma::model::{eval::weights_path, ModelConfig, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::EngineMode;
+
+fn load_models() -> (HashMap<String, Arc<Weights>>, Vec<amfma::data::Task>) {
+    let mut models = HashMap::new();
+    let mut tasks = Vec::new();
+    for name in GLUE_TASKS {
+        if let (Ok(t), Ok(w)) =
+            (amfma::data::load_task(name), Weights::load(&weights_path(name)))
+        {
+            models.insert(name.to_string(), Arc::new(w));
+            tasks.push(t);
+        }
+    }
+    if !models.is_empty() {
+        return (models, tasks);
+    }
+    eprintln!("(artifacts missing — serving a randomly initialized model)");
+    let cfg = ModelConfig {
+        vocab: 96, d_model: 64, n_heads: 4, d_ff: 128, n_layers: 3, max_seq: 24, n_classes: 2,
+    };
+    let mut models = HashMap::new();
+    models.insert("sst2".to_string(), Arc::new(Weights::random(cfg, 7)));
+    let mut rng = Prng::new(8);
+    let task = amfma::data::Task {
+        name: "sst2".into(),
+        n_classes: 2,
+        seq_len: 24,
+        vocab: 96,
+        train_tokens: vec![],
+        train_labels: vec![],
+        dev_tokens: (0..64 * 24).map(|_| 4 + rng.below(92) as u16).collect(),
+        dev_labels: vec![0.0; 64],
+    };
+    (models, vec![task])
+}
+
+fn main() {
+    let args = Args::from_env();
+    let requests = args.get_usize("requests", 512);
+    let concurrency = args.get_usize("concurrency", 8);
+
+    let (models, tasks) = load_models();
+    println!("deploying 2 replicas: bf16an-1-2 (efficient) + fp32 (reference)");
+
+    let mode_eff = EngineMode::parse("bf16an-1-2").unwrap();
+    let mode_ref = EngineMode::Fp32;
+    let srv_eff = InferenceServer::start(
+        models.clone(),
+        ServerConfig { mode: mode_eff, ..Default::default() },
+    );
+    let srv_ref = InferenceServer::start(
+        models.clone(),
+        ServerConfig { mode: mode_ref, ..Default::default() },
+    );
+    let router = Router::new(vec![
+        Replica { mode: mode_eff, handle: srv_eff.handle() },
+        Replica { mode: mode_ref, handle: srv_ref.handle() },
+    ]);
+
+    let t0 = Instant::now();
+    let agree = std::sync::atomic::AtomicU64::new(0);
+    let total_pairs = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..concurrency {
+            let router = &router;
+            let tasks = &tasks;
+            let agree = &agree;
+            let total_pairs = &total_pairs;
+            s.spawn(move || {
+                let mut rng = Prng::new(100 + c as u64);
+                for i in 0..requests / concurrency {
+                    let t = &tasks[(c + i) % tasks.len()];
+                    let ex = rng.below(t.n_dev().max(1) as u64) as usize;
+                    let toks = t.dev_example(ex).to_vec();
+                    // 1-in-4 requests are "shadow" pairs sent to both modes
+                    // to measure prediction agreement online.
+                    if i % 4 == 0 {
+                        let r1 = router
+                            .route_blocking(&t.name, toks.clone(), Some(mode_eff))
+                            .unwrap();
+                        let r2 =
+                            router.route_blocking(&t.name, toks, Some(mode_ref)).unwrap();
+                        let a1 = argmax(&r1.logits);
+                        let a2 = argmax(&r2.logits);
+                        total_pairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if a1 == a2 {
+                            agree.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    } else {
+                        let _ = router.route_blocking(&t.name, toks, Some(mode_eff));
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n--- per-replica metrics ---");
+    for (mode, snap) in router.metrics() {
+        println!("[{mode}]\n{}\n", snap.render());
+    }
+    let served: u64 = router.metrics().iter().map(|(_, s)| s.completed).sum();
+    println!("aggregate throughput: {:.1} seq/s over {wall:.2}s", served as f64 / wall);
+    let (a, t) = (
+        agree.load(std::sync::atomic::Ordering::Relaxed),
+        total_pairs.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    if t > 0 {
+        println!(
+            "prediction agreement bf16an-1-2 vs fp32: {a}/{t} = {:.1}%",
+            100.0 * a as f64 / t as f64
+        );
+    }
+    srv_eff.shutdown();
+    srv_ref.shutdown();
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..v.len() {
+        if v[i] > v[best] {
+            best = i;
+        }
+    }
+    best
+}

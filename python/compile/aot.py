@@ -1,0 +1,123 @@
+"""AOT lowering: JAX/Pallas computations -> HLO *text* artifacts for the
+Rust PJRT runtime, plus the golden parity vectors.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+`xla` crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Artifacts produced (under --out, default ../artifacts):
+  model_<task>_fp32.hlo.txt     encoder forward, weights baked as constants,
+                                tokens[B,S] i32 -> logits (serving fast path)
+  matmul_fp32.hlo.txt           plain f32 GEMM, fixed shape
+  matmul_bf16.hlo.txt           bit-exact emulated GEMM (accurate norm)
+  matmul_bf16an-1-2.hlo.txt     bit-exact emulated GEMM (approx norm) —
+                                loaded by rust and checked bit-for-bit
+                                against the native engine
+  golden/golden_fma.bin         scalar-oracle FMA vectors (all modes)
+  golden/golden_matmul.bin      scalar-oracle GEMM vectors (all modes)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .kernels.matmul_kernel import matmul_pallas
+from .model import MODEL_CONFIG, encoder_forward
+
+SERVE_BATCH = 8
+GEMM_SHAPE = (32, 64, 32)  # M, K, N for the matmul artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big literals as {...},
+    # which the HLO text parser (rust side) cannot round-trip.
+    return comp.as_hlo_text(True)
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def export_model(out: str, task: str) -> None:
+    from .train import MODEL_CONFIG as _  # noqa: F401  (same config)
+    import struct
+
+    # load trained weights back from the AMFW artifact
+    path = f"{out}/weights/{task}.amfw"
+    params = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"AMFW"
+        (ver,) = struct.unpack("<I", f.read(4))
+        cfg = struct.unpack("<7I", f.read(28))
+        (n_tensors,) = struct.unpack("<I", f.read(4))
+        for _i in range(n_tensors):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims))
+            params[name] = jnp.asarray(
+                np.frombuffer(f.read(4 * n), "<f4").reshape(dims)
+            )
+    tokens_spec = jax.ShapeDtypeStruct((SERVE_BATCH, MODEL_CONFIG["max_seq"]), jnp.int32)
+    fn = lambda tokens: (encoder_forward(params, tokens, mode="fp32"),)
+    lowered = jax.jit(fn).lower(tokens_spec)
+    write(f"{out}/model_{task}_fp32.hlo.txt", to_hlo_text(lowered))
+
+
+def export_matmuls(out: str) -> None:
+    m, k, n = GEMM_SHAPE
+    xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    fn32 = lambda x, w: (jnp.matmul(x, w),)
+    write(f"{out}/matmul_fp32.hlo.txt", to_hlo_text(jax.jit(fn32).lower(xs, ws)))
+
+    for label, kw in [
+        ("bf16", dict(accurate=True)),
+        ("bf16an-1-2", dict(accurate=False, k=1, lam=2)),
+    ]:
+        fn = lambda x, w, kw=kw: (matmul_pallas(x, w, block_m=m, block_n=n, **kw),)
+        write(f"{out}/matmul_{label}.hlo.txt", to_hlo_text(jax.jit(fn).lower(xs, ws)))
+
+
+def export_golden(out: str) -> None:
+    os.makedirs(f"{out}/golden", exist_ok=True)
+    ref.gen_golden_fma(f"{out}/golden/golden_fma.bin")
+    ref.gen_golden_matmul(f"{out}/golden/golden_matmul.bin",
+                          m=GEMM_SHAPE[0], kk=GEMM_SHAPE[1], n=GEMM_SHAPE[2])
+    print(f"  wrote {out}/golden/golden_fma.bin, golden_matmul.bin")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model-tasks", default="sst2,stsb")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    export_golden(args.out)
+    export_matmuls(args.out)
+    for t in args.model_tasks.split(","):
+        if os.path.exists(f"{args.out}/weights/{t}.amfw"):
+            export_model(args.out, t)
+        else:
+            print(f"  skip model export for {t} (no weights yet)")
+    print("aot done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Layer-1 kernels: bit-exact FMA emulation (`amfma_emu`), the Pallas
+matmul kernel (`matmul_kernel`) and the scalar oracle (`ref`)."""

@@ -1,0 +1,282 @@
+"""Vectorized (jax.numpy, int32) bit-exact emulation of the approximate-
+normalization FMA datapath — the Layer-1 compute core.
+
+This module implements the *identical* specification as the Rust substrate
+(`rust/src/arith/fma.rs`); the two are checked bit-for-bit against each
+other via golden vectors (`ref.py` generates, `rust/tests/` consumes) and
+via the PJRT round-trip integration test.
+
+Spec summary (see DESIGN.md for the full derivation):
+  * operands A, B: Bfloat16, FTZ subnormals;
+  * partial sum C: sign / 8-bit-saturating exponent / 16-bit Q1.15 mag;
+  * 20-bit Q4.16 adder frame, NORM_POS = 16, one guard bit below the
+    stored LSB; plain truncation at alignment and at the Q1.15 store;
+  * accurate normalization = exact leading-zero shift;
+  * approximate normalization = OR over top k bits -> no shift, else OR
+    over next lam bits -> left k, else left k+lam; overflow right side is
+    always exact; the exponent tracks the *applied* shift only;
+  * exp <= 0 flushes to zero, exp >= 255 saturates to Inf;
+  * final rounding (full normalize + RNE to bf16) happens once, at the
+    column's south edge.
+
+Everything here is traced by JAX, so it lowers to plain HLO integer ops and
+runs on any PJRT backend (including the Rust CPU client).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+ADD_FRAME_BITS = 20
+NORM_POS = 16
+
+# ExtFloat "kind" encoding (matches rust enum semantics).
+KIND_ZERO = 0
+KIND_FINITE = 1
+KIND_INF = 2
+KIND_NAN = 3
+
+
+class Ext(NamedTuple):
+    """Extended partial sum, as parallel int32 arrays."""
+
+    kind: jnp.ndarray
+    sign: jnp.ndarray  # 0/1
+    exp: jnp.ndarray  # biased
+    mag: jnp.ndarray  # Q1.15, 16-bit
+
+
+def ext_zero(shape) -> Ext:
+    z = jnp.zeros(shape, jnp.int32)
+    return Ext(kind=z, sign=z, exp=z, mag=z)
+
+
+# ---------------------------------------------------------------------------
+# bf16 <-> f32 conversion (RNE, FTZ, saturate) — must match rust softfloat.rs
+# ---------------------------------------------------------------------------
+
+
+def f32_to_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """Round f32 to the nearest bf16 bit pattern (int32 holding u16)."""
+    # Stay in uint32: for every finite input the RNE add cannot wrap
+    # (max finite 0xFF7F_FFFF + 0x8000 < 2^32); specials are overridden.
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    sign = (bits >> 31) & 1
+    e32 = (bits >> 23) & 0xFF
+    m32 = bits & 0x7F_FFFF
+    # RNE on the low 16 bits.
+    rounded = (bits + jnp.uint32(0x7FFF) + ((bits >> 16) & 1)) >> 16
+    nan = (e32 == 255) & (m32 != 0)
+    inf = (e32 == 255) & (m32 == 0)
+    ftz = e32 == 0  # zero or subnormal: flush
+    out = jnp.where(ftz, sign << 15, rounded)
+    out = jnp.where(inf, (sign << 15) | 0x7F80, out)
+    out = jnp.where(nan, (sign << 15) | 0x7FC0, out)
+    return out.astype(jnp.int32)
+
+
+def bf16_to_f32(b: jnp.ndarray) -> jnp.ndarray:
+    """Exact widening of bf16 patterns (int32) to f32, FTZ on subnormals."""
+    b = jnp.asarray(b, jnp.int32)
+    e = (b >> 7) & 0xFF
+    sign = (b >> 15) & 1
+    flushed = jnp.where(e == 0, sign << 15, b)
+    return jax.lax.bitcast_convert_type(
+        (flushed.astype(jnp.uint32) << 16).astype(jnp.uint32), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# The FMA datapath
+# ---------------------------------------------------------------------------
+
+
+def _msb_index(raw: jnp.ndarray) -> jnp.ndarray:
+    """Index of the most significant set bit (raw > 0); 0 for raw == 0."""
+    msb = jnp.zeros_like(raw)
+    for i in range(1, ADD_FRAME_BITS):
+        msb = msb + (raw >= (1 << i)).astype(jnp.int32)
+    return msb
+
+
+def fma_vec(
+    a_bits: jnp.ndarray,
+    b_bits: jnp.ndarray,
+    c: Ext,
+    *,
+    accurate: bool,
+    k: int = 1,
+    lam: int = 2,
+) -> Ext:
+    """One PE step: A*B + C, elementwise over arbitrary shapes."""
+    a = jnp.asarray(a_bits, jnp.int32)
+    b = jnp.asarray(b_bits, jnp.int32)
+
+    sa, ea, ma = (a >> 15) & 1, (a >> 7) & 0xFF, a & 0x7F
+    sb, eb, mb = (b >> 15) & 1, (b >> 7) & 0xFF, b & 0x7F
+    a_zero = ea == 0
+    b_zero = eb == 0
+    a_inf = (ea == 255) & (ma == 0)
+    b_inf = (eb == 255) & (mb == 0)
+    a_nan = (ea == 255) & (ma != 0)
+    b_nan = (eb == 255) & (mb != 0)
+    siga = ma | 0x80
+    sigb = mb | 0x80
+
+    psign = sa ^ sb
+    p_inf = a_inf | b_inf
+    any_nan = a_nan | b_nan | (c.kind == KIND_NAN)
+    inf_invalid = p_inf & (a_zero | b_zero)
+    inf_conflict = p_inf & (c.kind == KIND_INF) & (c.sign != psign)
+    res_nan = any_nan | inf_invalid | inf_conflict
+    res_inf_p = p_inf & ~res_nan
+    res_inf_c = (c.kind == KIND_INF) & ~p_inf & ~res_nan
+
+    p_zero = (a_zero | b_zero) & ~p_inf & ~a_nan & ~b_nan
+    c_zero = c.kind == KIND_ZERO
+    both_zero = p_zero & c_zero
+
+    # stage 1: exact product in the Q4.16 frame
+    fp = jnp.where(p_zero, 0, (siga * sigb) << 2)
+    ep = ea + eb - 127
+    fc = jnp.where(c_zero, 0, c.mag << 1)
+    ec = c.exp
+
+    # stage 2: align (truncate), add
+    d = ep - ec
+    sh_c = jnp.clip(d, 0, 31)
+    sh_p = jnp.clip(-d, 0, 31)
+    ap = fp >> sh_p
+    ac = fc >> sh_c
+    sp = jnp.where(psign == 1, -ap, ap)
+    sc = jnp.where(c.sign == 1, -ac, ac)
+    v = sp + sc
+    raw_nz = jnp.abs(v)
+    rsign_nz = (v < 0).astype(jnp.int32)
+    base_nz = jnp.maximum(ep, ec)
+
+    raw = jnp.where(p_zero, fc, jnp.where(c_zero, fp, raw_nz))
+    rsign = jnp.where(p_zero, c.sign, jnp.where(c_zero, psign, rsign_nz))
+    base = jnp.where(p_zero, ec, jnp.where(c_zero, ep, base_nz))
+
+    # normalize
+    msb = _msb_index(raw)
+    needed = msb - NORM_POS
+    if accurate:
+        applied = needed
+    else:
+        g1_mask = ((1 << k) - 1) << (NORM_POS + 1 - k)
+        g2_mask = ((1 << lam) - 1) << (NORM_POS + 1 - k - lam)
+        s = jnp.where(
+            (raw & g1_mask) != 0, 0, jnp.where((raw & g2_mask) != 0, k, k + lam)
+        )
+        applied = jnp.where(needed > 0, needed, -s)
+    frame_out = jnp.where(
+        applied >= 0, raw >> jnp.clip(applied, 0, 31), raw << jnp.clip(-applied, 0, 31)
+    )
+    e_out = base + applied
+    mag16 = frame_out >> 1
+
+    # classification of the result (order matters — mirror of fma.rs)
+    finite_kind = jnp.full_like(raw, KIND_FINITE)
+    finite_kind = jnp.where(mag16 == 0, KIND_ZERO, finite_kind)
+    finite_kind = jnp.where(e_out <= 0, KIND_ZERO, finite_kind)
+    finite_kind = jnp.where(e_out >= 255, KIND_INF, finite_kind)
+
+    kind = finite_kind
+    sign = rsign
+    # exact cancellation -> +0
+    kind = jnp.where(raw == 0, KIND_ZERO, kind)
+    sign = jnp.where(raw == 0, 0, sign)
+    # both contributions zero -> IEEE-ish signed zero
+    kind = jnp.where(both_zero, KIND_ZERO, kind)
+    sign = jnp.where(both_zero, psign & c.sign, sign)
+    # specials override
+    kind = jnp.where(res_inf_c, KIND_INF, kind)
+    sign = jnp.where(res_inf_c, c.sign, sign)
+    kind = jnp.where(res_inf_p, KIND_INF, kind)
+    sign = jnp.where(res_inf_p, psign, sign)
+    kind = jnp.where(res_nan, KIND_NAN, kind)
+    sign = jnp.where(res_nan, 0, sign)
+
+    is_fin = kind == KIND_FINITE
+    exp = jnp.where(is_fin, e_out, jnp.where(kind >= KIND_INF, 255, 0))
+    mag = jnp.where(is_fin, mag16, jnp.where(kind == KIND_NAN, 1, 0))
+    return Ext(kind=kind.astype(jnp.int32), sign=sign.astype(jnp.int32),
+               exp=exp.astype(jnp.int32), mag=mag.astype(jnp.int32))
+
+
+def round_to_bf16(c: Ext) -> jnp.ndarray:
+    """South-edge rounding: full normalization + RNE back to bf16 bits."""
+    mag = c.mag
+    # normalize within 16 bits
+    msb16 = jnp.zeros_like(mag)
+    for i in range(1, 16):
+        msb16 = msb16 + (mag >= (1 << i)).astype(jnp.int32)
+    lz = 15 - msb16
+    m = mag << jnp.clip(lz, 0, 31)
+    e = c.exp - lz
+    # RNE Q1.15 -> Q1.7 (drop 8 bits)
+    kept = m >> 8
+    round_bit = (m >> 7) & 1
+    sticky = (m & 0x7F) != 0
+    up = (round_bit == 1) & (sticky | ((kept & 1) == 1))
+    sig = kept + up.astype(jnp.int32)
+    carry = sig >> 8 != 0
+    sig = jnp.where(carry, sig >> 1, sig)
+    e = e + carry.astype(jnp.int32)
+
+    out = (c.sign << 15) | (jnp.clip(e, 0, 254) << 7) | (sig & 0x7F)
+    out = jnp.where(e <= 0, c.sign << 15, out)
+    out = jnp.where(e >= 255, (c.sign << 15) | 0x7F80, out)
+    out = jnp.where(c.kind == KIND_ZERO, c.sign << 15, out)
+    out = jnp.where(c.kind == KIND_INF, (c.sign << 15) | 0x7F80, out)
+    out = jnp.where(c.kind == KIND_NAN, 0x7FC0, out)
+    return out.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Emulated matmul (the jnp reference the Pallas kernel is checked against)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("accurate", "k", "lam"))
+def matmul_emulated(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    accurate: bool = True,
+    k: int = 1,
+    lam: int = 2,
+) -> jnp.ndarray:
+    """`Y = X·W` through the bit-exact engine: f32 in, f32 out.
+
+    The K loop is a sequential `fori_loop` carrying the Ext state — the
+    same chain order partial sums take down a weight-stationary column.
+    """
+    m, kk = x.shape
+    k2, n = w.shape
+    assert kk == k2, (x.shape, w.shape)
+    xb = f32_to_bf16(x)  # [M, K]
+    wb = f32_to_bf16(w)  # [K, N]
+
+    def body(i, c):
+        a = jax.lax.dynamic_slice_in_dim(xb, i, 1, axis=1)  # [M, 1]
+        b = jax.lax.dynamic_slice_in_dim(wb, i, 1, axis=0)  # [1, N]
+        return fma_vec(a, b, c, accurate=accurate, k=k, lam=lam)
+
+    c0 = ext_zero((m, n))
+    cf = jax.lax.fori_loop(0, kk, body, c0)
+    return bf16_to_f32(round_to_bf16(cf))
+
+
+MODES = {
+    "bf16": dict(accurate=True),
+    "bf16an-1-1": dict(accurate=False, k=1, lam=1),
+    "bf16an-1-2": dict(accurate=False, k=1, lam=2),
+    "bf16an-2-2": dict(accurate=False, k=2, lam=2),
+}

@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: blocked matmul through the bit-exact
+approximate-normalization FMA emulation.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's systolic
+column maps to the sequential K-chain inside one VMEM-resident tile; the
+BlockSpec grid tiles (M, N) the way the weight-stationary array tiles its
+output space.  The kernel must be lowered with ``interpret=True`` — on a
+real TPU this would become a Mosaic custom-call the CPU PJRT plugin cannot
+execute (and the arithmetic here is integer VPU work standing in for the
+MXU datapath the paper modifies).
+
+Always check against `ref.py` (pytest) — the kernel's value is that it
+lowers into the same HLO module as the surrounding JAX model (aot.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import amfma_emu as emu
+
+
+def _matmul_kernel_body(x_ref, w_ref, o_ref, *, accurate: bool, k: int, lam: int):
+    """One (bm, bn) output tile: sequential K-chain of emulated FMAs."""
+    xb = emu.f32_to_bf16(x_ref[...])  # [bm, K]
+    wb = emu.f32_to_bf16(w_ref[...])  # [K, bn]
+    bm, kk = x_ref.shape
+    bn = w_ref.shape[1]
+
+    def body(i, c):
+        a = jax.lax.dynamic_slice_in_dim(xb, i, 1, axis=1)  # [bm, 1]
+        b = jax.lax.dynamic_slice_in_dim(wb, i, 1, axis=0)  # [1, bn]
+        return emu.fma_vec(a, b, c, accurate=accurate, k=k, lam=lam)
+
+    cf = jax.lax.fori_loop(0, kk, body, emu.ext_zero((bm, bn)))
+    o_ref[...] = emu.bf16_to_f32(emu.round_to_bf16(cf))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("accurate", "k", "lam", "block_m", "block_n")
+)
+def matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    accurate: bool = True,
+    k: int = 1,
+    lam: int = 2,
+    block_m: int = 32,
+    block_n: int = 32,
+) -> jnp.ndarray:
+    """`Y = X·W` (f32 in/out) on the emulated engine, tiled for VMEM.
+
+    K stays whole inside each tile: the partial-sum chain is sequential by
+    construction (it *is* the paper's column order), so splitting K across
+    grid steps would need carried state; K·(block_m+block_n) operand slices
+    fit comfortably in VMEM for every shape the model uses.
+    """
+    m, kk = x.shape
+    _, n = w.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    body = functools.partial(_matmul_kernel_body, accurate=accurate, k=k, lam=lam)
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((kk, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # REQUIRED: CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def vmem_bytes_estimate(block_m: int, block_n: int, kk: int) -> int:
+    """Rough VMEM footprint of one grid step (used by DESIGN.md §Perf):
+    f32 x-tile + w-tile + bf16 copies + 4 int32 Ext planes + output."""
+    f32 = 4
+    return (
+        block_m * kk * f32 * 2          # x tile + bf16-as-int32 copy
+        + kk * block_n * f32 * 2        # w tile + copy
+        + block_m * block_n * f32 * 5   # Ext planes (4) + output
+    )

@@ -1,0 +1,275 @@
+"""Pure-Python scalar oracle for the approximate-normalization FMA.
+
+A direct, deliberately boring port of the specification (and of
+`rust/src/arith/fma.rs`) using Python integers — no numpy vectorization, no
+JAX.  This is the correctness anchor:
+
+  * `python/tests/test_emu.py` checks the vectorized jnp emulation against
+    it (hypothesis sweeps);
+  * `python/tests/test_kernel.py` checks the Pallas kernel against it;
+  * `gen_golden_*()` write binary golden vectors consumed by
+    `rust/tests/integration_golden.rs`, closing the Rust<->Python loop.
+"""
+
+from __future__ import annotations
+
+import struct
+
+ADD_FRAME_BITS = 20
+NORM_POS = 16
+
+KIND_ZERO, KIND_FINITE, KIND_INF, KIND_NAN = 0, 1, 2, 3
+
+
+def f32_to_bf16(x: float) -> int:
+    """RNE f32 -> bf16 bits, FTZ, saturate (matches rust encode_f32)."""
+    bits = struct.unpack("<I", struct.pack("<f", x))[0]
+    sign = bits >> 31
+    e32 = (bits >> 23) & 0xFF
+    m32 = bits & 0x7F_FFFF
+    if e32 == 255:
+        if m32:
+            return (sign << 15) | 0x7FC0
+        return (sign << 15) | 0x7F80
+    if e32 == 0:  # zero or subnormal: flush
+        return sign << 15
+    return ((bits + 0x7FFF + ((bits >> 16) & 1)) >> 16) & 0xFFFF
+
+
+def bf16_to_f32(b: int) -> float:
+    e = (b >> 7) & 0xFF
+    if e == 0:
+        b = b & 0x8000  # FTZ
+    return struct.unpack("<f", struct.pack("<I", (b & 0xFFFF) << 16))[0]
+
+
+class Ext:
+    __slots__ = ("kind", "sign", "exp", "mag")
+
+    def __init__(self, kind=KIND_ZERO, sign=0, exp=0, mag=0):
+        self.kind, self.sign, self.exp, self.mag = kind, sign, exp, mag
+
+    @staticmethod
+    def zero(sign=0):
+        return Ext(KIND_ZERO, sign, 0, 0)
+
+    @staticmethod
+    def inf(sign):
+        return Ext(KIND_INF, sign, 255, 0)
+
+    @staticmethod
+    def nan():
+        return Ext(KIND_NAN, 0, 255, 1)
+
+    def key(self):
+        return (self.kind, self.sign, self.exp, self.mag)
+
+    def to_float(self) -> float:
+        if self.kind == KIND_ZERO:
+            return -0.0 if self.sign else 0.0
+        if self.kind == KIND_INF:
+            return float("-inf") if self.sign else float("inf")
+        if self.kind == KIND_NAN:
+            return float("nan")
+        v = self.mag * 2.0 ** (self.exp - 127 - 15)
+        return -v if self.sign else v
+
+
+def _decode(b: int):
+    s = (b >> 15) & 1
+    e = (b >> 7) & 0xFF
+    m = b & 0x7F
+    if e == 0:
+        return ("zero", s, 0, 0)
+    if e == 255:
+        return ("nan" if m else "inf", s, e, m | 0x80)
+    return ("fin", s, e, m | 0x80)
+
+
+def fma(a: int, b: int, c: Ext, *, accurate: bool, k: int = 1, lam: int = 2) -> Ext:
+    """One PE step, scalar."""
+    ka, sa, ea, siga = _decode(a)
+    kb, sb, eb, sigb = _decode(b)
+
+    if ka == "nan" or kb == "nan" or c.kind == KIND_NAN:
+        return Ext.nan()
+    psign = sa ^ sb
+    if ka == "inf" or kb == "inf":
+        if ka == "zero" or kb == "zero":
+            return Ext.nan()
+        if c.kind == KIND_INF and c.sign != psign:
+            return Ext.nan()
+        return Ext.inf(psign)
+    if c.kind == KIND_INF:
+        return Ext.inf(c.sign)
+
+    p_zero = ka == "zero" or kb == "zero"
+    c_zero = c.kind == KIND_ZERO
+    if p_zero and c_zero:
+        return Ext.zero(psign & c.sign)
+
+    fp, ep = (0, 0) if p_zero else ((siga * sigb) << 2, ea + eb - 127)
+    fc, ec = (0, 0) if c_zero else (c.mag << 1, c.exp)
+
+    if p_zero:
+        raw, rsign, base = fc, c.sign, ec
+    elif c_zero:
+        raw, rsign, base = fp, psign, ep
+    else:
+        d = ep - ec
+        if d >= 0:
+            ap, ac, base = fp, fc >> min(d, 31), ep
+        else:
+            ap, ac, base = fp >> min(-d, 31), fc, ec
+        v = (-ap if psign else ap) + (-ac if c.sign else ac)
+        raw, rsign = abs(v), 1 if v < 0 else 0
+
+    if raw == 0:
+        return Ext.zero(0)
+
+    msb = raw.bit_length() - 1
+    needed = msb - NORM_POS
+    if msb > NORM_POS or accurate:
+        applied = needed
+    else:
+        g1 = ((1 << k) - 1) << (NORM_POS + 1 - k)
+        g2 = ((1 << lam) - 1) << (NORM_POS + 1 - k - lam)
+        if raw & g1:
+            applied = 0
+        elif raw & g2:
+            applied = -k
+        else:
+            applied = -(k + lam)
+    frame = raw >> applied if applied >= 0 else raw << -applied
+    e_out = base + applied
+    mag16 = frame >> 1
+    if mag16 == 0:
+        return Ext.zero(rsign)
+    if e_out <= 0:
+        return Ext.zero(rsign)
+    if e_out >= 255:
+        return Ext.inf(rsign)
+    return Ext(KIND_FINITE, rsign, e_out, mag16)
+
+
+def round_to_bf16(c: Ext) -> int:
+    if c.kind == KIND_ZERO:
+        return c.sign << 15
+    if c.kind == KIND_INF:
+        return (c.sign << 15) | 0x7F80
+    if c.kind == KIND_NAN:
+        return 0x7FC0
+    lz = 16 - c.mag.bit_length()
+    m = c.mag << lz
+    e = c.exp - lz
+    kept, rnd, sticky = m >> 8, (m >> 7) & 1, (m & 0x7F) != 0
+    sig = kept + (1 if rnd and (sticky or kept & 1) else 0)
+    if sig >> 8:
+        sig >>= 1
+        e += 1
+    if e <= 0:
+        return c.sign << 15
+    if e >= 255:
+        return (c.sign << 15) | 0x7F80
+    return (c.sign << 15) | (e << 7) | (sig & 0x7F)
+
+
+def column_dot(a_bits, b_bits, *, accurate: bool, k: int = 1, lam: int = 2) -> int:
+    acc = Ext.zero()
+    for x, w in zip(a_bits, b_bits):
+        acc = fma(x, w, acc, accurate=accurate, k=k, lam=lam)
+    return round_to_bf16(acc)
+
+
+def matmul(x, w, *, accurate: bool, k: int = 1, lam: int = 2):
+    """f32 lists-of-lists matmul through the scalar engine (slow, clear)."""
+    m, kk, n = len(x), len(x[0]), len(w[0])
+    xb = [[f32_to_bf16(v) for v in row] for row in x]
+    wb = [[f32_to_bf16(w[i][j]) for i in range(kk)] for j in range(n)]
+    out = []
+    for r in range(m):
+        row = []
+        for j in range(n):
+            row.append(
+                bf16_to_f32(column_dot(xb[r], wb[j], accurate=accurate, k=k, lam=lam))
+            )
+        out.append(row)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for the Rust parity tests
+# ---------------------------------------------------------------------------
+
+MODES = [
+    ("bf16", dict(accurate=True)),
+    ("bf16an-1-1", dict(accurate=False, k=1, lam=1)),
+    ("bf16an-1-2", dict(accurate=False, k=1, lam=2)),
+    ("bf16an-2-2", dict(accurate=False, k=2, lam=2)),
+]
+
+
+def gen_golden_fma(path: str, n: int = 4096, seed: int = 0xC0FFEE) -> None:
+    """Binary record stream: for each case, inputs + the Ext result under
+    all four modes.  Record layout (little-endian):
+      header: b"AMFG", u32 version, u32 n
+      per case: u16 a, u16 b, u16 c_kind, u16 c_sign, i32 c_exp, u16 c_mag, u16 pad
+                then per mode: u16 kind, u16 sign, i32 exp, u16 mag, u16 pad
+    """
+    import random
+
+    rng = random.Random(seed)
+
+    def rand_bf16():
+        # finite patterns, exponent biased toward activation scales
+        if rng.random() < 0.8:
+            e = rng.randint(110, 140)
+        else:
+            e = rng.randint(1, 254)
+        return (rng.randint(0, 1) << 15) | (e << 7) | rng.randint(0, 127)
+
+    def rand_ext():
+        r = rng.random()
+        if r < 0.05:
+            return Ext.zero(rng.randint(0, 1))
+        if r < 0.07:
+            return Ext.inf(rng.randint(0, 1))
+        if r < 0.08:
+            return Ext.nan()
+        # finite, possibly un-normalized (as approximate results are)
+        mag = rng.randint(1, 0xFFFF)
+        return Ext(KIND_FINITE, rng.randint(0, 1), rng.randint(1, 254), mag)
+
+    with open(path, "wb") as f:
+        f.write(b"AMFG")
+        f.write(struct.pack("<II", 1, n))
+        for _ in range(n):
+            a, b = rand_bf16(), rand_bf16()
+            if rng.random() < 0.02:
+                a = rng.choice([0x7F80, 0xFF80, 0x7FC0, 0x0000, 0x8000])
+            c = rand_ext()
+            f.write(struct.pack("<HHHHiHH", a, b, c.kind, c.sign, c.exp, c.mag, 0))
+            for _, kw in MODES:
+                r = fma(a, b, c, **kw)
+                f.write(struct.pack("<HHiHH", r.kind, r.sign, r.exp, r.mag, 0))
+
+
+def gen_golden_matmul(path: str, m: int = 8, kk: int = 24, n: int = 8, seed: int = 7) -> None:
+    """Golden matmul: f32 inputs + bf16-pattern outputs per mode."""
+    import random
+
+    rng = random.Random(seed)
+    x = [[rng.gauss(0, 2) for _ in range(kk)] for _ in range(m)]
+    w = [[rng.gauss(0, 2) for _ in range(n)] for _ in range(kk)]
+    with open(path, "wb") as f:
+        f.write(b"AMFM")
+        f.write(struct.pack("<IIII", 1, m, kk, n))
+        for row in x:
+            f.write(struct.pack(f"<{kk}f", *row))
+        for row in w:
+            f.write(struct.pack(f"<{n}f", *row))
+        for _, kw in MODES:
+            y = matmul(x, w, **kw)
+            for row in y:
+                for v in row:
+                    f.write(struct.pack("<H", f32_to_bf16(v)))

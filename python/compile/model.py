@@ -1,0 +1,142 @@
+"""Layer-2: BERT-style encoder forward pass in JAX, matmuls routed through
+the Layer-1 kernel.
+
+The architecture mirrors `rust/src/model/encoder.rs` exactly (post-LN,
+GELU-tanh, CLS pooling, fixed-length sequences, FP32 activations) so the
+Rust-native engine and the AOT-lowered HLO artifact are two executions of
+the same model.  `mode` selects the matmul backend:
+
+  * "fp32"        — jnp.matmul (the reference path, and the artifact the
+                    Rust serving runtime executes via PJRT);
+  * "bf16"/"bf16an-k-l" — the bit-exact Pallas kernel (interpret mode).
+
+Build-time only: nothing here runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_kernel import matmul_pallas
+
+MODEL_CONFIG = dict(
+    vocab=96, d_model=64, n_heads=4, d_ff=128, n_layers=3, max_seq=24
+)
+
+
+def parse_mode(mode: str):
+    if mode == "fp32":
+        return None
+    if mode == "bf16":
+        return dict(accurate=True)
+    assert mode.startswith("bf16an-"), mode
+    k, lam = mode[len("bf16an-"):].split("-")
+    return dict(accurate=False, k=int(k), lam=int(lam))
+
+
+def _mm(mode_kw, x, w, block_m=32, block_n=32):
+    """Matmul dispatcher: engine-emulated or plain f32."""
+    if mode_kw is None:
+        return jnp.matmul(x, w)
+    m, n = x.shape[0], w.shape[1]
+    bm = max(1, min(block_m, m))
+    while m % bm:
+        bm -= 1
+    bn = max(1, min(block_n, n))
+    while n % bn:
+        bn -= 1
+    return matmul_pallas(x, w, block_m=bm, block_n=bn, **mode_kw)
+
+
+def gelu(x):
+    c = 0.7978845608028654
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def encoder_forward(params: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                    cfg=None, mode: str = "fp32") -> jnp.ndarray:
+    """tokens [B, S] int32 -> logits [B, n_classes]."""
+    cfg = dict(MODEL_CONFIG, **(cfg or {}))
+    mode_kw = parse_mode(mode)
+    b, s = tokens.shape
+    d, h = cfg["d_model"], cfg["n_heads"]
+    dh = d // h
+
+    x = params["emb.tok"][tokens] + params["emb.pos"][None, :s, :]  # [B,S,D]
+    x = x.reshape(b * s, d)
+
+    for l in range(cfg["n_layers"]):
+        p = lambda n: params[f"layer{l}.{n}"]
+        q = _mm(mode_kw, x, p("q.w")) + p("q.b")
+        k = _mm(mode_kw, x, p("k.w")) + p("k.b")
+        v = _mm(mode_kw, x, p("v.w")) + p("v.b")
+        # [B,h,S,dh]
+        qh = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        if mode_kw is None:
+            scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(dh))
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+        else:
+            # emulated engine: per-(b,h) small GEMMs, exactly like the rust
+            # attention loop
+            qf = qh.reshape(b * h, s, dh)
+            kf = kh.reshape(b * h, s, dh)
+            vf = vh.reshape(b * h, s, dh)
+
+            def one_head(args):
+                qq, kk_, vv = args
+                sc = _mm(mode_kw, qq, kk_.T, block_m=s, block_n=s) / jnp.sqrt(float(dh))
+                pr = jax.nn.softmax(sc, axis=-1)
+                return _mm(mode_kw, pr, vv, block_m=s, block_n=dh)
+
+            ctx = jax.lax.map(one_head, (qf, kf, vf))
+            ctx = ctx.reshape(b, h, s, dh)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+        att = _mm(mode_kw, ctx, p("o.w")) + p("o.b")
+        x = layernorm(x + att, p("ln1.g"), p("ln1.b"))
+        hmid = gelu(_mm(mode_kw, x, p("ff1.w")) + p("ff1.b"))
+        ff = _mm(mode_kw, hmid, p("ff2.w")) + p("ff2.b")
+        x = layernorm(x + ff, p("ln2.g"), p("ln2.b"))
+
+    x = x.reshape(b, s, d)
+    pooled = x[:, 0, :]  # CLS
+    return _mm(mode_kw, pooled, params["head.w"]) + params["head.b"]
+
+
+def init_params(rng_key, cfg=None, n_classes: int = 2) -> Dict[str, jnp.ndarray]:
+    cfg = dict(MODEL_CONFIG, **(cfg or {}))
+    d, f = cfg["d_model"], cfg["d_ff"]
+    keys = iter(jax.random.split(rng_key, 64))
+    p = {
+        "emb.tok": 0.02 * jax.random.normal(next(keys), (cfg["vocab"], d)),
+        "emb.pos": 0.02 * jax.random.normal(next(keys), (cfg["max_seq"], d)),
+    }
+    for l in range(cfg["n_layers"]):
+        for nm, shape in [("q", (d, d)), ("k", (d, d)), ("v", (d, d)), ("o", (d, d)),
+                          ("ff1", (d, f)), ("ff2", (f, d))]:
+            fan_in = shape[0]
+            p[f"layer{l}.{nm}.w"] = jax.random.normal(next(keys), shape) / jnp.sqrt(fan_in)
+            p[f"layer{l}.{nm}.b"] = jnp.zeros((shape[1],))
+        for nm in ["ln1", "ln2"]:
+            p[f"layer{l}.{nm}.g"] = jnp.ones((d,))
+            p[f"layer{l}.{nm}.b"] = jnp.zeros((d,))
+    p["head.w"] = jax.random.normal(next(keys), (d, n_classes)) / jnp.sqrt(d)
+    p["head.b"] = jnp.zeros((n_classes,))
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def forward_jit(params, tokens, mode: str = "fp32"):
+    return encoder_forward(params, tokens, mode=mode)

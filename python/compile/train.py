@@ -1,0 +1,357 @@
+"""Build-time trainer: generate ten synthetic GLUE-shaped tasks, train one
+small FP32 encoder per task, and write the AMFT (tasks) and AMFW (weights)
+artifacts the Rust evaluation harness consumes.
+
+Substitution note (DESIGN.md): the paper fine-tunes BERT-base on real GLUE;
+we train a small transformer from scratch on synthetic tasks with matched
+*shapes* (single- and paired-sentence classification, one regression task)
+and difficulty spread, because Table I's quantity of interest is the
+sensitivity of a trained transformer to FMA normalization error, not the
+absolute GLUE scores.
+
+Vocabulary layout: 0=PAD(unused) 1=CLS 2=SEP 3=FILL, content tokens 4..95.
+Sequences are always exactly `max_seq` long (FILL-padded), so the encoder
+needs no attention mask.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import MODEL_CONFIG, encoder_forward, init_params
+
+CLS, SEP, FILL = 1, 2, 3
+CONTENT_LO, CONTENT_HI = 4, 96  # [lo, hi)
+SEQ = MODEL_CONFIG["max_seq"]
+
+
+# ---------------------------------------------------------------------------
+# Task generators
+# ---------------------------------------------------------------------------
+
+
+def _pad(seq, rng):
+    seq = list(seq)[: SEQ - 1]
+    out = [CLS] + seq + [FILL] * (SEQ - 1 - len(seq))
+    return out
+
+
+def _pair(a, b):
+    return list(a) + [SEP] + list(b)
+
+
+POS_SET = list(range(4, 16))
+NEG_SET = list(range(16, 28))
+NEUTRAL = list(range(28, 96))
+
+
+def gen_sst2(rng, n):
+    """Sentiment: label = more positive-set than negative-set tokens."""
+    toks, labs = [], []
+    for _ in range(n):
+        npos, nneg = rng.integers(0, 6), rng.integers(0, 6)
+        while npos == nneg:
+            nneg = rng.integers(0, 6)
+        body = (list(rng.choice(POS_SET, npos)) + list(rng.choice(NEG_SET, nneg))
+                + list(rng.choice(NEUTRAL, SEQ - 3 - npos - nneg)))
+        rng.shuffle(body)
+        toks.append(_pad(body, rng))
+        labs.append(1.0 if npos > nneg else 0.0)
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 2, 0.03
+
+
+def _gen_nli(rng, n, vocab_lo, vocab_hi, noise):
+    """3-class NLI: entail = hypothesis ⊂ premise; contradict = negation
+    pairs (t <-> t^1); neutral = low-overlap random."""
+    toks, labs = [], []
+    half = (SEQ - 3) // 2
+    for _ in range(n):
+        prem = rng.choice(np.arange(vocab_lo, vocab_hi), half, replace=False)
+        y = int(rng.integers(0, 3))
+        if y == 0:  # entail: subset + a couple of fillers
+            hyp = rng.permutation(prem)[: half - 2]
+        elif y == 1:  # contradict: flip low bit of several premise tokens
+            hyp = prem.copy()
+            idx = rng.choice(half, max(2, half // 3), replace=False)
+            hyp[idx] = hyp[idx] ^ 1
+        else:  # neutral: mostly fresh tokens
+            hyp = rng.choice(np.arange(vocab_lo, vocab_hi), half, replace=False)
+        toks.append(_pad(_pair(prem, hyp), rng))
+        labs.append(float(y))
+    labs = np.array(labs, np.float32)
+    return np.array(toks, np.uint16), labs, 3, noise
+
+
+def gen_mnli_m(rng, n):
+    return _gen_nli(rng, n, 4, 60, 0.08)
+
+
+def gen_mnli_mm(rng, n):
+    # "mismatched": different vocabulary slice + slightly noisier
+    return _gen_nli(rng, n, 40, 96, 0.10)
+
+
+def _gen_paraphrase(rng, n, overlap_hi, noise):
+    toks, labs = [], []
+    half = (SEQ - 3) // 2
+    for _ in range(n):
+        q1 = rng.choice(np.arange(4, 96), half, replace=False)
+        y = int(rng.integers(0, 2))
+        if y == 1:  # paraphrase: same order, a couple of substitutions
+            q2 = q1.copy()
+            ns = int(rng.integers(0, 3))
+            if ns:
+                idx = rng.choice(half, ns, replace=False)
+                q2[idx] = rng.choice(np.arange(4, 96), ns)
+        else:  # not a paraphrase: mostly fresh tokens, low overlap
+            keep = int(rng.integers(0, overlap_hi))
+            q2 = np.concatenate([
+                q1[:keep],
+                rng.choice(np.arange(4, 96), half - keep),
+            ])
+        toks.append(_pad(_pair(q1, q2), rng))
+        labs.append(float(y))
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 2, noise
+
+
+def gen_qqp(rng, n):
+    return _gen_paraphrase(rng, n, 3, 0.03)
+
+
+def gen_mrpc(rng, n):
+    return _gen_paraphrase(rng, n, 5, 0.08)
+
+
+def gen_qnli(rng, n):
+    """Question answering NLI: answer token = deterministic map of the
+    question key token; label = sentence contains it."""
+    toks, labs = [], []
+    half = (SEQ - 3) // 2
+    for _ in range(n):
+        q = rng.choice(np.arange(4, 96), half, replace=False)
+        key = int(q[0])
+        q[: max(2, half // 3)] = key  # emphasize the key token
+        sent = rng.choice(np.arange(4, 96), half, replace=False)
+        y = int(rng.integers(0, 2))
+        sent = sent[sent != key][: half - 2]
+        if y == 1:  # the sentence "answers" the question: contains its key
+            sent = np.concatenate([sent, [key, key]])
+        else:
+            sent = np.concatenate(
+                [sent, rng.choice(np.setdiff1d(np.arange(4, 96), [key]), 2)]
+            )
+        rng.shuffle(sent)
+        toks.append(_pad(_pair(q, sent), rng))
+        labs.append(float(y))
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 2, 0.05
+
+
+def gen_cola(rng, n):
+    """Acceptability: toy grammar DET NOUN VERB ... vs locally shuffled.
+    Deliberately hard (CoLA sits near 53 % in the paper)."""
+    classes = [list(range(4 + 18 * i, 4 + 18 * (i + 1))) for i in range(5)]
+    toks, labs = [], []
+    for _ in range(n):
+        body = []
+        for i in range(SEQ - 2):
+            body.append(int(rng.choice(classes[i % 5])))
+        y = int(rng.integers(0, 2))
+        if y == 0:  # corrupt: replace a few positions with wrong-class tokens
+            for _i in range(2):
+                i = int(rng.integers(0, len(body)))
+                wrong = (i % 5 + int(rng.integers(1, 5))) % 5
+                body[i] = int(rng.choice(classes[wrong]))
+        toks.append(_pad(body, rng))
+        labs.append(float(y))
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 2, 0.30
+
+
+def gen_rte(rng, n):
+    t, l, c, _ = _gen_nli(rng, n, 4, 96, 0.0)
+    # binarize: entail vs not
+    l = (l == 0).astype(np.float32)
+    return t, l, 2, 0.12
+
+
+def gen_wnli(rng, n):
+    """WNLI is adversarial/near-chance in practice: labels almost
+    independent of the input."""
+    toks, labs = [], []
+    for _ in range(n):
+        body = rng.choice(np.arange(4, 96), SEQ - 2, replace=False)
+        toks.append(_pad(body, rng))
+        labs.append(float(rng.integers(0, 2)))
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 2, 0.45
+
+
+def gen_stsb(rng, n):
+    """Similarity regression: score = 5 * token overlap of the two halves."""
+    toks, labs = [], []
+    half = (SEQ - 3) // 2
+    for _ in range(n):
+        a = rng.choice(np.arange(4, 96), half, replace=False)
+        keep_mask = rng.random(half) < rng.random()  # variable similarity
+        b = a.copy()
+        fresh = rng.choice(np.setdiff1d(np.arange(4, 96), a), half)
+        b[~keep_mask] = fresh[~keep_mask]
+        r = keep_mask.mean()
+        toks.append(_pad(_pair(a, b), rng))
+        labs.append(5.0 * float(r) + float(rng.normal(0, 0.1)))
+    return np.array(toks, np.uint16), np.array(labs, np.float32), 1, 0.0
+
+
+TASKS = [
+    ("sst2", gen_sst2),
+    ("mnli-m", gen_mnli_m),
+    ("mnli-mm", gen_mnli_mm),
+    ("qqp", gen_qqp),
+    ("qnli", gen_qnli),
+    ("cola", gen_cola),
+    ("mrpc", gen_mrpc),
+    ("rte", gen_rte),
+    ("wnli", gen_wnli),
+    ("stsb", gen_stsb),
+]
+
+
+def apply_label_noise(rng, labels, n_classes, noise):
+    if noise <= 0:
+        return labels
+    labels = labels.copy()
+    flip = rng.random(len(labels)) < noise
+    if n_classes == 1:
+        labels[flip] += rng.normal(0, 1.5, flip.sum()).astype(np.float32)
+        return np.clip(labels, 0, 5)
+    shift = rng.integers(1, max(2, n_classes), flip.sum())
+    labels[flip] = (labels[flip] + shift) % n_classes
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Training (hand-rolled Adam; optax is not installed)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, tokens, labels, n_classes):
+    logits = encoder_forward(params, tokens, mode="fp32")
+    if n_classes == 1:
+        return jnp.mean((logits[:, 0] - labels) ** 2)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(lp[jnp.arange(labels.shape[0]), labels.astype(jnp.int32)])
+
+
+def train_task(name, gen, seed, n_train, n_dev, steps, lr=1e-3, batch=64):
+    rng = np.random.default_rng(seed)
+    toks, labs, n_classes, noise = gen(rng, n_train + n_dev)
+    labs_noisy = apply_label_noise(rng, labs, n_classes, noise)
+    tr_t, tr_l = toks[:n_train], labs_noisy[:n_train]
+    dv_t, dv_l = toks[n_train:], labs_noisy[n_train:]
+
+    params = init_params(jax.random.PRNGKey(seed), n_classes=n_classes)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(params, m, v, t, tokens, labels):
+        g = jax.grad(loss_fn)(params, tokens, labels, n_classes)
+        m2 = {k: b1 * m[k] + (1 - b1) * g[k] for k in g}
+        v2 = {k: b2 * v[k] + (1 - b2) * g[k] ** 2 for k in g}
+        mh = {k: m2[k] / (1 - b1**t) for k in g}
+        vh = {k: v2[k] / (1 - b2**t) for k in g}
+        p2 = {k: params[k] - lr * mh[k] / (jnp.sqrt(vh[k]) + eps) for k in params}
+        return p2, m2, v2
+
+    t0 = time.time()
+    for i in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        params, m, v = step(params, m, v, i + 1,
+                            jnp.asarray(tr_t[idx].astype(np.int32)),
+                            jnp.asarray(tr_l[idx]))
+    # dev metric in fp32 (sanity print; the real Table I runs in rust)
+    logits = np.asarray(encoder_forward(params, jnp.asarray(dv_t.astype(np.int32)), mode="fp32"))
+    if n_classes == 1:
+        pred, gold = logits[:, 0], dv_l
+        pcc = np.corrcoef(pred, gold)[0, 1]
+        metric = f"pcc={100*pcc:.1f}"
+    else:
+        acc = float((logits.argmax(-1) == dv_l.astype(int)).mean())
+        metric = f"acc={100*acc:.1f}"
+    print(f"  {name:<8} classes={n_classes} {metric}  ({time.time()-t0:.1f}s)",
+          flush=True)
+    return params, (tr_t, tr_l, dv_t, dv_l, n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Artifact writers (AMFT / AMFW, see rust loaders for the format docs)
+# ---------------------------------------------------------------------------
+
+
+def write_task(path, name, data):
+    tr_t, tr_l, dv_t, dv_l, n_classes = data
+    with open(path, "wb") as f:
+        f.write(b"AMFT")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<H", len(name)))
+        f.write(name.encode())
+        f.write(struct.pack("<IIIII", n_classes, SEQ, MODEL_CONFIG["vocab"],
+                            len(tr_l), len(dv_l)))
+        f.write(np.ascontiguousarray(tr_t, "<u2").tobytes())
+        f.write(np.ascontiguousarray(dv_t, "<u2").tobytes())
+        f.write(np.ascontiguousarray(tr_l, "<f4").tobytes())
+        f.write(np.ascontiguousarray(dv_l, "<f4").tobytes())
+
+
+def write_weights(path, params, n_classes):
+    cfg = MODEL_CONFIG
+    items = sorted(params.items())
+    with open(path, "wb") as f:
+        f.write(b"AMFW")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<7I", cfg["vocab"], cfg["d_model"], cfg["n_heads"],
+                            cfg["d_ff"], cfg["n_layers"], cfg["max_seq"], n_classes))
+        f.write(struct.pack("<I", len(items)))
+        for name, val in items:
+            arr = np.asarray(val, np.float32)
+            f.write(struct.pack("<H", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr, "<f4").tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n-train", type=int, default=1600)
+    ap.add_argument("--n-dev", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--tasks", default="")
+    args = ap.parse_args()
+
+    os.makedirs(f"{args.out}/tasks", exist_ok=True)
+    os.makedirs(f"{args.out}/weights", exist_ok=True)
+    wanted = set(args.tasks.split(",")) if args.tasks else None
+    print(f"training {len(TASKS)} tasks ({args.steps} steps each)...", flush=True)
+    for i, (name, gen) in enumerate(TASKS):
+        if wanted and name not in wanted:
+            continue
+        params, data = train_task(name, gen, seed=1000 + i,
+                                  n_train=args.n_train, n_dev=args.n_dev,
+                                  steps=args.steps)
+        write_task(f"{args.out}/tasks/{name}.amft", name, data)
+        write_weights(f"{args.out}/weights/{name}.amfw", params, data[4])
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Vectorized jnp emulation vs the scalar oracle — hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import amfma_emu as emu
+from compile.kernels import ref
+
+MODES = [
+    dict(accurate=True),
+    dict(accurate=False, k=1, lam=1),
+    dict(accurate=False, k=1, lam=2),
+    dict(accurate=False, k=2, lam=2),
+    dict(accurate=False, k=3, lam=3),
+]
+
+
+def finite_bf16():
+    return st.integers(0, 0xFFFF).filter(lambda b: (b >> 7) & 0xFF != 255)
+
+
+any_bf16 = st.integers(0, 0xFFFF)
+
+
+def ext_strategy():
+    return st.one_of(
+        st.just(ref.Ext.zero()),
+        st.just(ref.Ext.zero(1)),
+        st.just(ref.Ext.inf(0)),
+        st.just(ref.Ext.inf(1)),
+        st.just(ref.Ext.nan()),
+        st.builds(
+            lambda s, e, m: ref.Ext(ref.KIND_FINITE, s, e, m),
+            st.integers(0, 1),
+            st.integers(1, 254),
+            st.integers(1, 0xFFFF),
+        ),
+    )
+
+
+def _ext_to_jnp(c: ref.Ext) -> emu.Ext:
+    return emu.Ext(
+        kind=jnp.array([c.kind], jnp.int32),
+        sign=jnp.array([c.sign], jnp.int32),
+        exp=jnp.array([c.exp], jnp.int32),
+        mag=jnp.array([c.mag], jnp.int32),
+    )
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=any_bf16, b=any_bf16, c=ext_strategy(), mode=st.sampled_from(range(len(MODES))))
+def test_fma_matches_oracle(a, b, c, mode):
+    kw = MODES[mode]
+    want = ref.fma(a, b, c, **kw)
+    got = emu.fma_vec(jnp.array([a], jnp.int32), jnp.array([b], jnp.int32),
+                      _ext_to_jnp(c), **kw)
+    assert (int(got.kind[0]), int(got.sign[0]), int(got.exp[0]), int(got.mag[0])) == want.key(), (
+        f"a={a:04x} b={b:04x} c={c.key()} mode={kw}"
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.data(),
+    m=st.integers(1, 5),
+    kk=st.integers(1, 17),
+    n=st.integers(1, 5),
+    mode=st.sampled_from(range(4)),
+)
+def test_matmul_matches_oracle(data, m, kk, n, mode):
+    kw = MODES[mode]
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    x = rng.normal(0, 2, (m, kk)).astype(np.float32)
+    w = rng.normal(0, 2, (kk, n)).astype(np.float32)
+    got = np.asarray(emu.matmul_emulated(x, w, **kw))
+    want = np.array(ref.matmul(x.tolist(), w.tolist(), **kw), np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_f32_bf16_conversion_matches_oracle():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate(
+        [
+            rng.normal(0, 1, 500),
+            rng.normal(0, 1e30, 100),
+            rng.normal(0, 1e-35, 100),
+            np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1e-40, -1e-40]),
+        ]
+    ).astype(np.float32)
+    got = np.asarray(emu.f32_to_bf16(vals))
+    want = np.array([ref.f32_to_bf16(float(v)) for v in vals])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bf16_to_f32_widening_ftz():
+    pats = np.arange(0, 0x10000, 17, dtype=np.int32)
+    got = np.asarray(emu.bf16_to_f32(pats))
+    want = np.array([ref.bf16_to_f32(int(p)) for p in pats], np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_round_to_bf16_matches_oracle():
+    rng = np.random.default_rng(1)
+    n = 2000
+    kind = np.full(n, ref.KIND_FINITE, np.int32)
+    sign = rng.integers(0, 2, n).astype(np.int32)
+    exp = rng.integers(1, 255, n).astype(np.int32)
+    mag = rng.integers(1, 0x10000, n).astype(np.int32)
+    c = emu.Ext(jnp.array(kind), jnp.array(sign), jnp.array(exp), jnp.array(mag))
+    got = np.asarray(emu.round_to_bf16(c))
+    want = np.array(
+        [ref.round_to_bf16(ref.Ext(int(k), int(s), int(e), int(m)))
+         for k, s, e, m in zip(kind, sign, exp, mag)]
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", range(4))
+def test_an_modes_are_truncations(mode):
+    """|approx| <= |accurate| elementwise on a random GEMM."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 2, (8, 64)).astype(np.float32)
+    w = rng.normal(0, 2, (64, 8)).astype(np.float32)
+    acc = np.asarray(emu.matmul_emulated(x, w, accurate=True))
+    kw = MODES[mode]
+    apx = np.asarray(emu.matmul_emulated(x, w, **kw))
+    assert np.all(np.abs(apx) <= np.abs(acc) * (1 + 1e-6) + 1e-30)

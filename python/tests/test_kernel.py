@@ -1,0 +1,79 @@
+"""Pallas kernel vs the scalar oracle and the jnp emulation.
+
+The CORE L1 correctness signal: hypothesis sweeps shapes/blocks/modes and
+asserts exact bit equality (f32 values are exact widenings of bf16, so
+`assert_array_equal` is the right comparison, not allclose).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import amfma_emu as emu
+from compile.kernels import ref
+from compile.kernels.matmul_kernel import matmul_pallas, vmem_bytes_estimate
+
+MODES = [
+    dict(accurate=True),
+    dict(accurate=False, k=1, lam=1),
+    dict(accurate=False, k=1, lam=2),
+    dict(accurate=False, k=2, lam=2),
+]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    m=st.integers(1, 4),
+    kk=st.integers(1, 20),
+    n=st.integers(1, 4),
+    mode=st.sampled_from(range(4)),
+)
+def test_pallas_matches_scalar_oracle(seed, m, kk, n, mode):
+    kw = MODES[mode]
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 2, (m, kk)).astype(np.float32)
+    w = rng.normal(0, 2, (kk, n)).astype(np.float32)
+    got = np.asarray(matmul_pallas(x, w, block_m=m, block_n=n, **kw))
+    want = np.array(ref.matmul(x.tolist(), w.tolist(), **kw), np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", range(4))
+@pytest.mark.parametrize("block", [(8, 8), (16, 32), (32, 16)])
+def test_pallas_blocking_invariance(mode, block):
+    """Tiling must not change results (tiles only partition the output)."""
+    kw = MODES[mode]
+    rng = np.random.default_rng(42)
+    x = rng.normal(0, 1.5, (32, 48)).astype(np.float32)
+    w = rng.normal(0, 1.5, (48, 32)).astype(np.float32)
+    whole = np.asarray(emu.matmul_emulated(x, w, **kw))
+    tiled = np.asarray(matmul_pallas(x, w, block_m=block[0], block_n=block[1], **kw))
+    np.testing.assert_array_equal(whole, tiled)
+
+
+def test_pallas_dtype_is_f32_bridge():
+    """Inputs/outputs are f32 but every output is an exact bf16 value."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 1, (8, 16)).astype(np.float32)
+    w = rng.normal(0, 1, (16, 8)).astype(np.float32)
+    y = np.asarray(matmul_pallas(x, w, accurate=True, block_m=8, block_n=8))
+    assert y.dtype == np.float32
+    for v in y.ravel():
+        assert ref.bf16_to_f32(ref.f32_to_bf16(float(v))) == v
+
+
+def test_vmem_estimate_within_budget():
+    """The model's largest tile must fit VMEM with headroom (DESIGN §Perf)."""
+    assert vmem_bytes_estimate(32, 32, 512) < 16 * 1024 * 1024
+
+
+def test_extreme_values_no_nan_poisoning():
+    """Saturation/flush paths keep finite workloads finite."""
+    x = np.full((4, 8), 3e38, np.float32)
+    w = np.full((8, 4), 3e38, np.float32)
+    y = np.asarray(matmul_pallas(x, w, accurate=True, block_m=4, block_n=4))
+    assert np.all(np.isinf(y)) and not np.any(np.isnan(y))
+    y2 = np.asarray(matmul_pallas(np.zeros_like(x), w, accurate=False, k=1, lam=2,
+                                  block_m=4, block_n=4))
+    assert np.all(y2 == 0)

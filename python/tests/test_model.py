@@ -1,0 +1,58 @@
+"""L2 model tests: shapes, mode plumbing, emulated-vs-fp32 proximity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (MODEL_CONFIG, encoder_forward, init_params,
+                           parse_mode)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = dict(MODEL_CONFIG, d_model=32, n_heads=2, d_ff=64, n_layers=2,
+               max_seq=8, vocab=32)
+    params = init_params(jax.random.PRNGKey(0), cfg=cfg, n_classes=3)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, 32, (4, 8)), jnp.int32)
+    return cfg, params, tokens
+
+
+def test_forward_shapes(small):
+    cfg, params, tokens = small
+    y = encoder_forward(params, tokens, cfg=cfg, mode="fp32")
+    assert y.shape == (4, 3)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_parse_mode():
+    assert parse_mode("fp32") is None
+    assert parse_mode("bf16") == dict(accurate=True)
+    assert parse_mode("bf16an-2-2") == dict(accurate=False, k=2, lam=2)
+    with pytest.raises(AssertionError):
+        parse_mode("fp64")
+
+
+@pytest.mark.parametrize("mode", ["bf16", "bf16an-1-2"])
+def test_emulated_mode_close_to_fp32(small, mode):
+    cfg, params, tokens = small
+    y32 = np.asarray(encoder_forward(params, tokens, cfg=cfg, mode="fp32"))
+    yem = np.asarray(encoder_forward(params, tokens, cfg=cfg, mode=mode))
+    scale = np.abs(y32).max() + 1e-6
+    assert np.abs(y32 - yem).max() / scale < 0.25
+
+
+def test_an22_diverges_more_than_an12(small):
+    cfg, params, tokens = small
+    base = np.asarray(encoder_forward(params, tokens, cfg=cfg, mode="bf16"))
+    d12 = np.abs(np.asarray(encoder_forward(params, tokens, cfg=cfg, mode="bf16an-1-2")) - base).max()
+    d22 = np.abs(np.asarray(encoder_forward(params, tokens, cfg=cfg, mode="bf16an-2-2")) - base).max()
+    assert d22 > d12
+
+
+def test_batch_invariance(small):
+    cfg, params, tokens = small
+    y = encoder_forward(params, tokens, cfg=cfg, mode="fp32")
+    y0 = encoder_forward(params, tokens[:1], cfg=cfg, mode="fp32")
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(y0)[0], rtol=2e-5, atol=2e-5)

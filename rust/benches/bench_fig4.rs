@@ -1,0 +1,36 @@
+//! Regenerates paper Fig. 4: the area breakdown of the Bfloat16 FMA PE, and
+//! times the cost-model evaluation itself.
+//!
+//! Run: `cargo bench --bench bench_fig4`
+
+use amfma::bench_harness::{bench_quick, section};
+use amfma::cost::{pe_area_saving, PeArea};
+use amfma::ApproxNorm;
+
+fn main() {
+    print!("{}", section("Fig 4 — PE area breakdown (accurate normalization)"));
+    let acc = PeArea::accurate();
+    println!("{}", acc.render());
+    println!(
+        "paper: normalization-related logic ~21% of the PE;  model: {:.1}%\n",
+        100.0 * acc.norm_fraction()
+    );
+
+    print!("{}", section("approximate-normalization PE variants"));
+    for cfg in [ApproxNorm::AN_1_1, ApproxNorm::AN_1_2, ApproxNorm::AN_2_2] {
+        let pe = PeArea::approximate(cfg);
+        println!(
+            "{:<12} total {:>7.1} GE  norm {:>5.1}%  PE-saving {:>5.1}%",
+            pe.label,
+            pe.total(),
+            100.0 * pe.norm_fraction(),
+            100.0 * pe_area_saving(cfg)
+        );
+    }
+    println!("\npaper: ~16% datapath area saving on average (abstract)");
+
+    let r = bench_quick("cost_model/pe_breakdown", || {
+        std::hint::black_box(PeArea::accurate().total());
+    });
+    println!("\n{}", r.render());
+}

@@ -1,0 +1,30 @@
+//! Regenerates paper Fig. 7: total area (a) and power (b) savings of whole
+//! matrix engines (8x8, 16x16, 32x32) with approximate normalization,
+//! with the normalization contribution split out.
+//!
+//! Power activities come from traced simulation of the same inference
+//! workload used for Table I when artifacts exist (the paper's methodology)
+//! and fall back to a typical activation profile otherwise.
+//!
+//! Run: `cargo bench --bench bench_fig7`
+
+use amfma::bench_harness::section;
+use amfma::cost::{fig7a, fig7b, render_fig7a, render_fig7b, Activities};
+use amfma::ApproxNorm;
+
+fn main() {
+    let cfg = ApproxNorm::AN_1_2; // the paper's most accurate config
+    print!("{}", section("Fig 7a — area savings"));
+    println!("{}", render_fig7a(&fig7a(cfg)));
+    println!("paper band: 14-19% total area saving, growing with size\n");
+
+    print!("{}", section("Fig 7b — power savings"));
+    let (aa, ax) = amfma::cli::measured_activities(cfg)
+        .unwrap_or((Activities::typical(), Activities::typical()));
+    println!("{}", render_fig7b(&fig7b(cfg, &aa, &ax)));
+    println!("paper band: 10-14% total power saving");
+    println!(
+        "\nactivities (accurate run): mult={:.3} adder={:.3} norm={:.3} ff={:.3}",
+        aa.mult, aa.adder, aa.norm_data, aa.ff
+    );
+}

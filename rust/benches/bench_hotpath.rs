@@ -1,0 +1,126 @@
+//! §Perf hot-path benchmarks: scalar FMA throughput, functional GEMM
+//! scaling across threads/modes, the cycle-accurate simulator, and the
+//! end-to-end serving pipeline.  These are the before/after numbers logged
+//! in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use std::time::Duration;
+
+use amfma::arith::{column_dot, fma, ExtFloat, NormMode};
+use amfma::bench_harness::{bench, section};
+use amfma::prng::Prng;
+use amfma::systolic::{CycleArray, EngineMode, MatrixEngine};
+use amfma::ApproxNorm;
+
+fn main() {
+    let mut rng = Prng::new(1);
+
+    print!("{}", section("scalar FMA (the innermost op)"));
+    let a: Vec<u16> = (0..4096).map(|_| rng.bf16_activation()).collect();
+    let b: Vec<u16> = (0..4096).map(|_| rng.bf16_activation()).collect();
+    for (name, mode) in [
+        ("fma/accurate", NormMode::Accurate),
+        ("fma/an-1-2", NormMode::Approx(ApproxNorm::AN_1_2)),
+    ] {
+        let r = bench(name, 3, 20, Duration::from_millis(300), || {
+            let mut acc = ExtFloat::ZERO;
+            for i in 0..4096 {
+                acc = fma(a[i], b[i], acc, mode);
+            }
+            std::hint::black_box(acc);
+        })
+        .with_ops(4096.0, "FMA/s");
+        println!("{}", r.render());
+    }
+
+    print!("{}", section("column reduction (K=256)"));
+    let ka: Vec<u16> = (0..256).map(|_| rng.bf16_activation()).collect();
+    let kb: Vec<u16> = (0..256).map(|_| rng.bf16_activation()).collect();
+    let r = bench("column_dot/256", 3, 50, Duration::from_millis(300), || {
+        std::hint::black_box(column_dot(&ka, &kb, NormMode::Accurate));
+    })
+    .with_ops(256.0, "FMA/s");
+    println!("{}", r.render());
+
+    print!("{}", section("functional GEMM 128x256x128"));
+    let (m, k, n) = (128usize, 256usize, 128usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    for mode in ["fp32", "bf16", "bf16an-1-2"] {
+        for threads in [1, amfma::systolic::matmul::default_threads()] {
+            let mut eng = MatrixEngine::new(EngineMode::parse(mode).unwrap());
+            eng.threads = threads;
+            let r = bench(
+                &format!("gemm/{mode}/t{threads}"),
+                1,
+                3,
+                Duration::from_millis(400),
+                || {
+                    std::hint::black_box(eng.matmul(&x, &w, m, k, n));
+                },
+            )
+            .with_ops((m * k * n) as f64, "FMA/s");
+            println!("{}", r.render());
+        }
+    }
+
+    print!("{}", section("cycle-accurate array (16x16, M=64)"));
+    let xb: Vec<u16> = (0..64 * 16).map(|_| rng.bf16_activation()).collect();
+    let wb: Vec<u16> = (0..16 * 16).map(|_| rng.bf16_activation()).collect();
+    let r = bench("cycle_sim/16x16xM64", 1, 3, Duration::from_millis(300), || {
+        let mut arr = CycleArray::new(16, 16, NormMode::Approx(ApproxNorm::AN_1_2), false);
+        arr.load_weights(&wb);
+        std::hint::black_box(arr.stream(&xb, 64));
+    });
+    let cycles = amfma::systolic::dataflow::stream_cycles(64, 16, 16) as f64;
+    println!("{}", r.clone().with_ops(cycles, "cycles/s").render());
+
+    print!("{}", section("serving pipeline (batched encoder, tiny model)"));
+    serving_bench();
+}
+
+fn serving_bench() {
+    use amfma::coordinator::{InferenceServer, ServerConfig};
+    use amfma::model::{ModelConfig, Weights};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let cfg = ModelConfig {
+        vocab: 96, d_model: 64, n_heads: 4, d_ff: 128, n_layers: 3, max_seq: 24, n_classes: 2,
+    };
+    let mut models = HashMap::new();
+    models.insert("bench".to_string(), Arc::new(Weights::random(cfg, 5)));
+    let srv = InferenceServer::start(
+        models,
+        ServerConfig {
+            mode: EngineMode::parse("bf16an-1-2").unwrap(),
+            ..Default::default()
+        },
+    );
+    let h = srv.handle();
+    let mut rng = Prng::new(6);
+    let n_req = 128;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..8u64 {
+            let h = h.clone();
+            let mut rng = Prng::new(rng.next_u64() ^ c);
+            s.spawn(move || {
+                for _ in 0..n_req / 8 {
+                    let toks: Vec<u16> = (0..24).map(|_| 4 + rng.below(92) as u16).collect();
+                    let _ = h.classify("bench", toks);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = srv.shutdown().snapshot();
+    println!(
+        "{n_req} requests in {wall:.2?}: {:.1} seq/s, p50={:.1}ms p99={:.1}ms, mean batch {:.1}",
+        n_req as f64 / wall.as_secs_f64(),
+        m.p50_ms,
+        m.p99_ms,
+        m.mean_batch
+    );
+}

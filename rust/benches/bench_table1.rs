@@ -1,0 +1,58 @@
+//! Regenerates paper Table I: accuracy/F1/PCC of the transformer under
+//! FP32, BF16 and the three BF16an configurations, over all ten
+//! synthetic-GLUE tasks.  Requires `make artifacts`.
+//!
+//! `AMFMA_T1_LIMIT` (env) caps dev examples per task (default 96 for the
+//! bench; `amfma eval` runs the full dev sets).
+//!
+//! Run: `cargo bench --bench bench_table1`
+
+use amfma::bench_harness::section;
+use amfma::model::{self, Weights};
+
+fn main() -> anyhow::Result<()> {
+    let limit: usize = std::env::var("AMFMA_T1_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(96);
+    print!("{}", section("Table I — GLUE-style accuracy per arithmetic mode"));
+
+    let mut results = Vec::new();
+    let t0 = std::time::Instant::now();
+    for name in amfma::data::GLUE_TASKS {
+        let task = match amfma::data::load_task(name) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("SKIP {name}: {e:#} (run `make artifacts`)");
+                continue;
+            }
+        };
+        let weights = Weights::load(&model::eval::weights_path(name))?;
+        for mode in model::paper_modes() {
+            let r = model::evaluate_task(&task, &weights, mode, 32, Some(limit));
+            eprintln!(
+                "  {:<8} {:<11} {:>5.1} ({:.1}s)",
+                r.task, r.mode, r.headline(), r.wall_secs
+            );
+            results.push(r);
+        }
+    }
+    if results.is_empty() {
+        eprintln!("no artifacts — nothing to do");
+        return Ok(());
+    }
+    println!("{}", model::render_table1(&results));
+    println!("paper Table I reference rows (BERT/GLUE):");
+    println!("  FP32      92.1 79.2 84.2 93.1 93.3 53.6 86.0 74.3 56.3 92.0");
+    println!("  BF16      93.1 80.0 83.3 93.1 93.3 53.6 86.0 74.3 56.3 92.0");
+    println!("  an-1-1/1-2: ~1 point below BF16 on average; an-2-2: ~7 points\n");
+    for m in ["bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        println!(
+            "measured vs bf16: {m}  degradation = {:+.2} points, decision flips = {:.2}%",
+            model::eval::avg_degradation_vs_bf16(&results, m),
+            100.0 * model::eval::flip_rate_vs_bf16(&results, m)
+        );
+    }
+    println!("total wall time: {:.1?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,257 @@
+//! The extended partial-sum representation flowing down each systolic
+//! column (paper Fig. 3: partial sum `C` and the PE output keep an 8-bit
+//! exponent and a **16-bit significand** — double the input significand
+//! width — so that rounding can happen only once, at the south end).
+//!
+//! Storage convention: `mag` is Q1.15 — value = `mag / 2^15 * 2^(exp-127)`.
+//! A *normalized* value has bit 15 set (value in `[1, 2)`).  Approximate
+//! normalization may leave results **partially normalized** (bit 15 clear);
+//! the value is still exact under this convention because the exponent is
+//! only adjusted by the shift that was actually applied.
+
+use super::softfloat::{bf16_to_f32, f32_to_bf16};
+
+/// Classification of an extended value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Zero,
+    Finite,
+    Inf,
+    Nan,
+}
+
+/// Extended partial sum: sign / 8-bit-saturating exponent / 16-bit Q1.15
+/// significand.  `exp` is kept as `i32` in code but every PE clamps it back
+/// to the 8-bit register range (`<=0` flushes to zero, `>=255` saturates to
+/// Inf), so no value that could not live in the real datapath ever escapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExtFloat {
+    pub kind: Kind,
+    pub sign: bool,
+    /// Biased exponent, `1..=254` for finite values.
+    pub exp: i32,
+    /// Q1.15 significand; nonzero for finite values.
+    pub mag: u16,
+}
+
+impl ExtFloat {
+    pub const ZERO: ExtFloat = ExtFloat { kind: Kind::Zero, sign: false, exp: 0, mag: 0 };
+
+    #[inline]
+    pub fn zero(sign: bool) -> Self {
+        ExtFloat { kind: Kind::Zero, sign, exp: 0, mag: 0 }
+    }
+
+    #[inline]
+    pub fn inf(sign: bool) -> Self {
+        ExtFloat { kind: Kind::Inf, sign, exp: 255, mag: 0 }
+    }
+
+    #[inline]
+    pub fn nan() -> Self {
+        ExtFloat { kind: Kind::Nan, sign: false, exp: 255, mag: 1 }
+    }
+
+    #[inline]
+    pub fn is_normalized(&self) -> bool {
+        self.kind != Kind::Finite || self.mag & 0x8000 != 0
+    }
+
+    /// Construct from a bf16 bit pattern (exact: the 8-bit significand is
+    /// placed in the top half of the 16-bit field).
+    pub fn from_bf16(b: u16) -> Self {
+        use super::format::BF16;
+        use super::softfloat::{decode, Decoded};
+        match decode(b as u32, &BF16) {
+            Decoded::Zero { sign } => ExtFloat::zero(sign),
+            Decoded::Inf { sign } => ExtFloat::inf(sign),
+            Decoded::Nan => ExtFloat::nan(),
+            Decoded::Finite { sign, exp, sig } => ExtFloat {
+                kind: Kind::Finite,
+                sign,
+                exp,
+                // 8-bit Q1.7 -> 16-bit Q1.15
+                mag: (sig as u16) << 8,
+            },
+        }
+    }
+
+    /// Construct from an `f32` (RNE to the 16-bit significand, FTZ,
+    /// saturate).  Used to seed column accumulators in tests.
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return ExtFloat::nan();
+        }
+        if x.is_infinite() {
+            return ExtFloat::inf(x < 0.0);
+        }
+        if x == 0.0 || x.is_subnormal() {
+            return ExtFloat::zero(x.is_sign_negative());
+        }
+        let bits = x.to_bits();
+        let sign = bits >> 31 == 1;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let sig24 = (bits & 0x7F_FFFF) | 0x80_0000; // Q1.23
+        let mut m = super::softfloat::rne_shift_right(sig24 as u64, 8) as u32; // Q1.15
+        let mut e = exp;
+        if m >> 16 != 0 {
+            m >>= 1;
+            e += 1;
+        }
+        if e <= 0 {
+            return ExtFloat::zero(sign);
+        }
+        if e >= 255 {
+            return ExtFloat::inf(sign);
+        }
+        ExtFloat { kind: Kind::Finite, sign, exp: e, mag: m as u16 }
+    }
+
+    /// Exact value as `f64` (every finite ExtFloat fits in f64).
+    pub fn to_f64(&self) -> f64 {
+        match self.kind {
+            Kind::Zero => {
+                if self.sign {
+                    -0.0
+                } else {
+                    0.0
+                }
+            }
+            Kind::Inf => {
+                if self.sign {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Kind::Nan => f64::NAN,
+            Kind::Finite => {
+                let v = self.mag as f64 * 2f64.powi(self.exp - 127 - 15);
+                if self.sign {
+                    -v
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Final (south-edge) rounding back to a bf16 bit pattern:
+    /// full normalization + round-to-nearest-even, FTZ, saturate.
+    /// This is the once-per-column rounding module of paper §II.
+    pub fn round_to_bf16(&self) -> u16 {
+        match self.kind {
+            Kind::Zero => (self.sign as u16) << 15,
+            Kind::Inf => {
+                if self.sign {
+                    0xFF80
+                } else {
+                    0x7F80
+                }
+            }
+            Kind::Nan => 0x7FC0,
+            Kind::Finite => {
+                // Normalize fully (the result may be partially normalized
+                // when approximate normalization was in use).
+                let lz = (self.mag as u32).leading_zeros() - 16; // within 16 bits
+                let m = (self.mag as u32) << lz; // bit15 set
+                let e = self.exp - lz as i32;
+                // RNE from Q1.15 to Q1.7.
+                let mut sig = super::softfloat::rne_shift_right(m as u64, 8) as u32;
+                let mut e = e;
+                if sig >> 8 != 0 {
+                    sig >>= 1;
+                    e += 1;
+                }
+                if e <= 0 {
+                    return (self.sign as u16) << 15;
+                }
+                if e >= 255 {
+                    return if self.sign { 0xFF80 } else { 0x7F80 };
+                }
+                ((self.sign as u16) << 15) | ((e as u16) << 7) | (sig as u16 & 0x7F)
+            }
+        }
+    }
+
+    /// Convenience: south-edge rounding, then exact widening to f32.
+    #[inline]
+    pub fn round_to_f32(&self) -> f32 {
+        bf16_to_f32(self.round_to_bf16())
+    }
+}
+
+/// Seed an accumulator chain from an f32 partial input via bf16
+/// (used when a column's north input comes from a previous tile).
+#[inline]
+pub fn acc_from_f32_via_bf16(x: f32) -> ExtFloat {
+    ExtFloat::from_bf16(f32_to_bf16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    #[test]
+    fn from_bf16_exact() {
+        let mut rng = Prng::new(11);
+        for _ in 0..5000 {
+            let b = rng.bf16_any_finite();
+            let e = ExtFloat::from_bf16(b);
+            let want = bf16_to_f32(b) as f64;
+            assert_eq!(e.to_f64(), want, "pattern {b:04x}");
+            assert!(e.is_normalized());
+        }
+    }
+
+    #[test]
+    fn roundtrip_bf16_identity() {
+        // from_bf16 -> round_to_bf16 must be the identity on finite values
+        // (16-bit significand is a superset of the 8-bit one).
+        let mut rng = Prng::new(12);
+        for _ in 0..5000 {
+            let b = rng.bf16_any_finite();
+            let e = ExtFloat::from_bf16(b);
+            let b2 = e.round_to_bf16();
+            // -0.0 and +0.0 both fine; compare via value for zeros.
+            if e.kind == Kind::Zero {
+                assert_eq!(b2 & 0x7FFF, 0);
+            } else {
+                assert_eq!(b, b2);
+            }
+        }
+    }
+
+    #[test]
+    fn from_f32_halfway_rne() {
+        // 1 + 2^-16 is exactly halfway between two Q1.15 significand steps
+        // at exponent 0: must round to even (i.e. down to 1.0).
+        let x = 1.0f32 + 2f32.powi(-16);
+        let e = ExtFloat::from_f32(x);
+        assert_eq!(e.to_f64(), 1.0);
+    }
+
+    #[test]
+    fn round_to_bf16_unnormalized_input() {
+        // A partially normalized value must still round to the right bf16.
+        // value = 1.5 stored with 2 leading zeros: mag = 0x3000 -> 0.375,
+        // exp bumped by 2 to compensate.
+        let e = ExtFloat { kind: Kind::Finite, sign: false, exp: 129, mag: 0x3000 };
+        assert_eq!(e.to_f64(), 1.5);
+        assert_eq!(bf16_to_f32(e.round_to_bf16()), 1.5);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(ExtFloat::nan().to_f64().is_nan());
+        assert_eq!(ExtFloat::inf(true).round_to_bf16(), 0xFF80);
+        assert_eq!(ExtFloat::zero(true).round_to_bf16() & 0x7FFF, 0);
+    }
+
+    #[test]
+    fn from_f32_saturates_and_flushes() {
+        assert_eq!(ExtFloat::from_f32(f32::INFINITY).kind, Kind::Inf);
+        assert_eq!(ExtFloat::from_f32(2f32.powi(-130)).kind, Kind::Zero);
+    }
+}

@@ -1,0 +1,642 @@
+//! The fused multiply-add PE datapath (paper Fig. 3), bit-exact.
+//!
+//! `result = A × B + C` with Bfloat16 operands `A`, `B` and an extended
+//! (16-bit-significand) partial sum `C`, matching the two-stage pipeline:
+//!
+//! * **Stage 1** — 8×8 significand multiply (exact 16-bit Q2.14 product in
+//!   `[1,4)`), exponent add `Ep = Ea + Eb − 127`, exponent compare vs `Ec`.
+//! * **Stage 2** — alignment of the smaller addend (right shift with plain
+//!   truncation: bits shifted out are *lost*, rounding happens only once at
+//!   the column's south end), effective add/subtract, normalization
+//!   (accurate via LZA-equivalent exact count, or approximate via the k/λ
+//!   OR-tree scheme of [`crate::arith::approx_norm`]), exponent adjust,
+//!   store back to the 16-bit Q1.15 partial-sum register.
+//!
+//! All arithmetic happens in a 20-bit **Q4.16 adder frame** (`ADD_FRAME_BITS`)
+//! with the normalized leading-one position at bit `NORM_POS` = 16 and one
+//! guard bit (bit 0) below the stored LSB.  The Python emulation
+//! (`python/compile/kernels/amfma_emu.py`) implements the identical spec and
+//! is checked bit-for-bit against this module via golden vectors and the
+//! PJRT round-trip integration test.
+
+use super::approx_norm::ApproxNorm;
+use super::ext::{ExtFloat, Kind};
+
+/// Width of the adder frame in bits (Q4.16: sum of a `[1,4)` product and a
+/// `[0,2)` partial sum is `< 6 < 8`, so 3 integer bits + carry headroom).
+pub const ADD_FRAME_BITS: u32 = 20;
+/// Bit position of the leading one of a normalized value in the frame.
+pub const NORM_POS: u32 = 16;
+
+/// Normalization mode of the PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NormMode {
+    /// Exact leading-zero normalization (the BF16 baseline).
+    Accurate,
+    /// The paper's approximate normalization with parameters (k, λ).
+    Approx(ApproxNorm),
+}
+
+impl NormMode {
+    pub fn label(&self) -> String {
+        match self {
+            NormMode::Accurate => "accurate".to_string(),
+            NormMode::Approx(cfg) => cfg.label(),
+        }
+    }
+}
+
+/// Per-operation trace for instrumentation (Fig. 6 histograms, power-model
+/// toggle extraction).  Produced only by [`fma_traced`]; the hot path
+/// [`fma`] computes none of it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FmaTrace {
+    /// Signed normalization shift the accurate datapath would apply:
+    /// `> 0` right shift, `< 0` left shift. `0` for zero/special results.
+    pub needed_shift: i32,
+    /// Signed shift actually applied under the configured mode.
+    pub applied_shift: i32,
+    /// Raw adder output magnitude (frame).
+    pub raw_sum: u32,
+    /// Product magnitude in the frame after alignment.
+    pub aligned_p: u32,
+    /// Partial-sum magnitude in the frame after alignment.
+    pub aligned_c: u32,
+    /// Exponent difference `Ep − Ec`.
+    pub exp_diff: i32,
+    /// Whether the effective operation was a subtraction.
+    pub effective_sub: bool,
+    /// Leading zeros (below NORM_POS) remaining after normalization.
+    pub residual_unnorm: u32,
+    /// True when either operand of the add was special/zero-skipped.
+    pub degenerate: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bf16Parts {
+    kind: Kind,
+    sign: bool,
+    exp: i32, // biased, 1..=254 when finite
+    sig: u32, // Q1.7 with hidden bit, 0x80..=0xFF when finite
+}
+
+#[inline]
+fn decode_bf16(b: u16) -> Bf16Parts {
+    let sign = b >> 15 == 1;
+    let exp = ((b >> 7) & 0xFF) as i32;
+    let man = (b & 0x7F) as u32;
+    if exp == 0 {
+        // zero or subnormal: FTZ
+        Bf16Parts { kind: Kind::Zero, sign, exp: 0, sig: 0 }
+    } else if exp == 255 {
+        if man == 0 {
+            Bf16Parts { kind: Kind::Inf, sign, exp, sig: 0 }
+        } else {
+            Bf16Parts { kind: Kind::Nan, sign, exp, sig: man | 0x80 }
+        }
+    } else {
+        Bf16Parts { kind: Kind::Finite, sign, exp, sig: man | 0x80 }
+    }
+}
+
+/// Fused multiply-add: `A × B + C` under the given normalization mode.
+/// The hot path — no tracing.  A branch-lean fast path covers the
+/// overwhelmingly common case (both operands and the partial sum finite and
+/// nonzero); everything else falls back to the general implementation.
+/// Bit-equivalence of the two paths is enforced by the `fast_path_*`
+/// property tests below and by the Python golden vectors.
+#[inline(always)]
+pub fn fma(a: u16, b: u16, c: ExtFloat, mode: NormMode) -> ExtFloat {
+    let ea = (a as u32 >> 7) & 0xFF;
+    let eb = (b as u32 >> 7) & 0xFF;
+    // Finite-nonzero bf16 exponents are 1..=254: (e-1) < 254 as u32.
+    if ea.wrapping_sub(1) < 254 && eb.wrapping_sub(1) < 254 && c.kind == Kind::Finite {
+        // ---- stage 1 ----
+        let sa = ((a as u32) & 0x7F) | 0x80;
+        let sb = ((b as u32) & 0x7F) | 0x80;
+        let fp = (sa * sb) << 2; // Q4.16 frame
+        let ep = (ea + eb) as i32 - 127;
+        let fc = (c.mag as u32) << 1;
+        let ec = c.exp;
+        // ---- stage 2: align (truncate) + add ----
+        let d = ep - ec;
+        let ap = (fp >> (-d).clamp(0, 31)) as i32;
+        let ac = (fc >> d.clamp(0, 31)) as i32;
+        let base = if d >= 0 { ep } else { ec };
+        let psign = ((a ^ b) >> 15) & 1 == 1;
+        let sp = if psign { -ap } else { ap };
+        let sc = if c.sign { -ac } else { ac };
+        let v = sp + sc;
+        let raw = v.unsigned_abs();
+        if raw == 0 {
+            return ExtFloat::zero(false);
+        }
+        let rsign = v < 0;
+        // ---- normalize ----
+        let msb = 31 - raw.leading_zeros();
+        let (frame_out, applied) = if msb > NORM_POS {
+            (raw >> (msb - NORM_POS), (msb - NORM_POS) as i32)
+        } else {
+            match mode {
+                NormMode::Accurate => (raw << (NORM_POS - msb), msb as i32 - NORM_POS as i32),
+                NormMode::Approx(cfg) => {
+                    let s = cfg.left_shift(raw);
+                    (raw << s, -(s as i32))
+                }
+            }
+        };
+        let e_out = base + applied;
+        let mag16 = (frame_out >> 1) as u16;
+        if mag16 != 0 && (e_out as u32).wrapping_sub(1) < 254 {
+            return ExtFloat { kind: Kind::Finite, sign: rsign, exp: e_out, mag: mag16 };
+        }
+        if mag16 == 0 || e_out <= 0 {
+            return ExtFloat::zero(rsign);
+        }
+        return ExtFloat::inf(rsign);
+    }
+    fma_impl(a, b, c, mode, None)
+}
+
+/// As [`fma`], additionally producing the instrumentation trace.
+#[inline]
+pub fn fma_traced(a: u16, b: u16, c: ExtFloat, mode: NormMode) -> (ExtFloat, FmaTrace) {
+    let mut t = FmaTrace::default();
+    let r = fma_impl(a, b, c, mode, Some(&mut t));
+    (r, t)
+}
+
+#[inline]
+fn fma_impl(
+    a: u16,
+    b: u16,
+    c: ExtFloat,
+    mode: NormMode,
+    mut trace: Option<&mut FmaTrace>,
+) -> ExtFloat {
+    let pa = decode_bf16(a);
+    let pb = decode_bf16(b);
+
+    // ---- specials ---------------------------------------------------------
+    if pa.kind == Kind::Nan || pb.kind == Kind::Nan || c.kind == Kind::Nan {
+        if let Some(t) = trace.as_deref_mut() {
+            t.degenerate = true;
+        }
+        return ExtFloat::nan();
+    }
+    let psign = pa.sign ^ pb.sign;
+    let p_inf = pa.kind == Kind::Inf || pb.kind == Kind::Inf;
+    if p_inf {
+        if let Some(t) = trace.as_deref_mut() {
+            t.degenerate = true;
+        }
+        // Inf × 0 is invalid.
+        if pa.kind == Kind::Zero || pb.kind == Kind::Zero {
+            return ExtFloat::nan();
+        }
+        if c.kind == Kind::Inf && c.sign != psign {
+            return ExtFloat::nan();
+        }
+        return ExtFloat::inf(psign);
+    }
+    if c.kind == Kind::Inf {
+        if let Some(t) = trace.as_deref_mut() {
+            t.degenerate = true;
+        }
+        return ExtFloat::inf(c.sign);
+    }
+
+    let p_zero = pa.kind == Kind::Zero || pb.kind == Kind::Zero;
+    let c_zero = c.kind == Kind::Zero;
+
+    if p_zero && c_zero {
+        if let Some(t) = trace.as_deref_mut() {
+            t.degenerate = true;
+        }
+        // IEEE-style: −0 only when both contributions are negative.
+        return ExtFloat::zero(psign && c.sign);
+    }
+
+    // ---- stage 1: multiply + exponent add ---------------------------------
+    // Q1.7 × Q1.7 = exact Q2.14 (16 bits), value in [1, 4).
+    // Frame: Q4.16 → product << 2, partial sum << 1.
+    let (fp, ep) = if p_zero { (0u32, 0i32) } else { ((pa.sig * pb.sig) << 2, pa.exp + pb.exp - 127) };
+    let (fc, ec) = if c_zero { (0u32, 0i32) } else { ((c.mag as u32) << 1, c.exp) };
+
+    // ---- stage 2: align, add, normalize ------------------------------------
+    let (raw, rsign, base, exp_diff, eff_sub, ap, ac) = if p_zero {
+        (fc, c.sign, ec, 0, false, 0, fc)
+    } else if c_zero {
+        (fp, psign, ep, 0, false, fp, 0)
+    } else {
+        let d = ep - ec;
+        let (ap, ac, base) = if d >= 0 {
+            // C is the smaller-exponent addend: right shift, truncate.
+            (fp, fc >> d.min(31) as u32, ep)
+        } else {
+            (fp >> (-d).min(31) as u32, fc, ec)
+        };
+        let sp = if psign { -(ap as i64) } else { ap as i64 };
+        let sc = if c.sign { -(ac as i64) } else { ac as i64 };
+        let v = sp + sc;
+        (v.unsigned_abs() as u32, v < 0, base, d, psign != c.sign, ap, ac)
+    };
+    debug_assert!(raw < 1 << (ADD_FRAME_BITS - 1));
+
+    if let Some(t) = trace.as_deref_mut() {
+        t.raw_sum = raw;
+        t.aligned_p = ap;
+        t.aligned_c = ac;
+        t.exp_diff = exp_diff;
+        t.effective_sub = eff_sub;
+    }
+
+    if raw == 0 {
+        // exact cancellation → +0 (round-to-nearest default).
+        return ExtFloat::zero(false);
+    }
+
+    let msb = 31 - raw.leading_zeros();
+    let needed = msb as i32 - NORM_POS as i32; // >0 right, <0 left
+
+    let (frame_out, applied) = if msb > NORM_POS {
+        // Adder-overflow side: exact small right shift (cheap carry-out
+        // detection, kept accurate in both modes).
+        (raw >> (msb - NORM_POS), needed)
+    } else {
+        match mode {
+            NormMode::Accurate => (raw << (NORM_POS - msb), needed),
+            NormMode::Approx(cfg) => {
+                let s = cfg.left_shift(raw);
+                (raw << s, -(s as i32))
+            }
+        }
+    };
+    let e_out = base + applied;
+
+    if let Some(t) = trace.as_deref_mut() {
+        t.needed_shift = needed;
+        t.applied_shift = applied;
+        t.residual_unnorm = (needed - applied).unsigned_abs();
+    }
+
+    // Store back to Q1.15: drop the guard bit (truncation — the only
+    // rounding in the engine is at the column's south end).
+    let mag16 = (frame_out >> 1) as u16;
+    if mag16 == 0 {
+        // The whole value fell below the stored LSB (only reachable with a
+        // deeply un-normalized approximate result).
+        return ExtFloat::zero(rsign);
+    }
+    if e_out <= 0 {
+        return ExtFloat::zero(rsign); // underflow: FTZ (8-bit exponent reg)
+    }
+    if e_out >= 255 {
+        return ExtFloat::inf(rsign); // overflow: saturate
+    }
+    ExtFloat { kind: Kind::Finite, sign: rsign, exp: e_out, mag: mag16 }
+}
+
+/// A full weight-stationary column reduction: `Σ_i a[i]·b[i]`, accumulated
+/// through the chained PE datapath in index order (the order partial sums
+/// flow south through the array), then rounded once to bf16 at the south
+/// edge.  This is the semantic contract the systolic simulator must match.
+pub fn column_dot(a: &[u16], b: &[u16], mode: NormMode) -> u16 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = ExtFloat::ZERO;
+    for (&x, &w) in a.iter().zip(b.iter()) {
+        acc = fma(x, w, acc, mode);
+    }
+    acc.round_to_bf16()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::softfloat::{bf16_to_f32, f32_to_bf16};
+    use crate::prng::Prng;
+
+    const MODES: [NormMode; 4] = [
+        NormMode::Accurate,
+        NormMode::Approx(ApproxNorm::AN_1_1),
+        NormMode::Approx(ApproxNorm::AN_1_2),
+        NormMode::Approx(ApproxNorm::AN_2_2),
+    ];
+
+    fn bf(v: f32) -> u16 {
+        f32_to_bf16(v)
+    }
+
+    #[test]
+    fn first_pe_product_exact() {
+        // C = 0: the result is the exact product (8×8 significand multiply
+        // is exact in 16 bits).
+        let mut rng = Prng::new(101);
+        for _ in 0..20_000 {
+            let a = rng.bf16_activation();
+            let b = rng.bf16_activation();
+            let exact = bf16_to_f32(a) as f64 * bf16_to_f32(b) as f64;
+            for mode in MODES {
+                let r = fma(a, b, ExtFloat::ZERO, mode);
+                if exact == 0.0 {
+                    assert_eq!(r.kind, Kind::Zero);
+                } else if r.kind == Kind::Finite {
+                    // Guard-bit truncation may drop the last product bit.
+                    let err = (r.to_f64() - exact).abs();
+                    let ulp = 2f64.powi((exact.abs().log2().floor() as i32) - 15);
+                    assert!(err <= 2.0 * ulp, "mode {mode:?}: {exact} vs {}", r.to_f64());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accurate_matches_f64_within_truncation_bound() {
+        let mut rng = Prng::new(102);
+        for _ in 0..50_000 {
+            let a = rng.bf16_activation();
+            let b = rng.bf16_activation();
+            let c = ExtFloat::from_f32(rng.f32_range(-8.0, 8.0));
+            let r = fma(a, b, c, NormMode::Accurate);
+            let exact =
+                bf16_to_f32(a) as f64 * bf16_to_f32(b) as f64 + c.to_f64();
+            if r.kind != Kind::Finite || !exact.is_finite() {
+                continue;
+            }
+            // base = max(Ep, Ec); three truncations (align, right-norm,
+            // guard-drop) each below 2^(base-127-14).
+            let pa = bf16_to_f32(a).abs() as f64 * bf16_to_f32(b).abs() as f64;
+            let base_mag = pa.max(c.to_f64().abs()).max(1e-300);
+            let bound = base_mag * 2f64.powi(-13);
+            let err = (r.to_f64() - exact).abs();
+            assert!(
+                err <= bound,
+                "a={a:04x} b={b:04x} c={:?} err={err} bound={bound}",
+                c
+            );
+        }
+    }
+
+    #[test]
+    fn approx_is_truncation_of_accurate() {
+        // The approximate result must equal the accurate one with low-order
+        // bits truncated: same sign, |approx| <= |accurate|, and the
+        // difference below the scale of the residual un-normalization.
+        let mut rng = Prng::new(103);
+        for _ in 0..50_000 {
+            let a = rng.bf16_activation();
+            let b = rng.bf16_activation();
+            let c = ExtFloat::from_f32(rng.f32_range(-4.0, 4.0));
+            let acc = fma(a, b, c, NormMode::Accurate);
+            for cfg in [ApproxNorm::AN_1_1, ApproxNorm::AN_1_2, ApproxNorm::AN_2_2] {
+                let apx = fma(a, b, c, NormMode::Approx(cfg));
+                if acc.kind != Kind::Finite || apx.kind != Kind::Finite {
+                    continue;
+                }
+                assert_eq!(acc.sign, apx.sign);
+                assert!(apx.to_f64().abs() <= acc.to_f64().abs() + 1e-300);
+                let scale = 2f64.powi(acc.exp - 127 - 15);
+                let diff = (acc.to_f64() - apx.to_f64()).abs();
+                // residual un-normalization <= 16 positions; each wasted
+                // position doubles the stored LSB.
+                assert!(diff <= scale * 65536.0, "diff {diff} scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_sign_addition_needs_at_most_right_shifts() {
+        // Paper §III.A: like signs → effective addition → normalization is
+        // a right shift or nothing. Verify via traces.
+        let mut rng = Prng::new(104);
+        for _ in 0..20_000 {
+            let a = rng.bf16_activation() & 0x7FFF; // positive
+            let b = rng.bf16_activation() & 0x7FFF;
+            let cv = rng.f32_range(0.01, 8.0);
+            let c = ExtFloat::from_f32(cv);
+            let (_, t) = fma_traced(a, b, c, NormMode::Accurate);
+            if t.degenerate || t.raw_sum == 0 {
+                continue;
+            }
+            assert!(!t.effective_sub);
+            assert!(t.needed_shift >= -1, "needed {}", t.needed_shift);
+            // (-1 can occur only when the product is in [1,2) and C
+            //  dominates... actually sum of [1,4) and [0,2) positives is
+            //  >= the larger, so the leading one is never below the larger
+            //  operand's: shift >= 0 when product normalized-or-above.)
+        }
+    }
+
+    #[test]
+    fn unlike_signs_large_expdiff_single_leading_zero() {
+        // Paper §III.A case (c): |exponent difference| > 1 → at most one
+        // leading zero after subtraction.
+        let mut rng = Prng::new(105);
+        for _ in 0..20_000 {
+            let a = rng.bf16_activation();
+            let b = rng.bf16_activation();
+            let c = ExtFloat::from_f32(rng.f32_range(-8.0, 8.0));
+            let (_, t) = fma_traced(a, b, c, NormMode::Accurate);
+            if t.degenerate || t.raw_sum == 0 || !t.effective_sub {
+                continue;
+            }
+            // product occupies [1,4): its "normalized" exponent may be one
+            // above Ep, so the guaranteed-single-leading-zero region is
+            // |d| > 2 conservatively.
+            if t.exp_diff.abs() > 2 {
+                assert!(
+                    t.needed_shift >= -1,
+                    "d={} needed={}",
+                    t.exp_diff,
+                    t.needed_shift
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn specials_propagate() {
+        let nan = 0x7FC0u16;
+        let inf = 0x7F80u16;
+        let one = bf(1.0);
+        assert_eq!(fma(nan, one, ExtFloat::ZERO, NormMode::Accurate).kind, Kind::Nan);
+        assert_eq!(fma(one, nan, ExtFloat::ZERO, NormMode::Accurate).kind, Kind::Nan);
+        assert_eq!(fma(one, one, ExtFloat::nan(), NormMode::Accurate).kind, Kind::Nan);
+        // inf * 0 = nan
+        assert_eq!(fma(inf, 0, ExtFloat::ZERO, NormMode::Accurate).kind, Kind::Nan);
+        // inf + (-inf) = nan
+        assert_eq!(fma(inf, one, ExtFloat::inf(true), NormMode::Accurate).kind, Kind::Nan);
+        // inf + finite = inf
+        let r = fma(inf, one, ExtFloat::from_f32(3.0), NormMode::Accurate);
+        assert_eq!(r.kind, Kind::Inf);
+        assert!(!r.sign);
+        // C inf passthrough
+        let r = fma(one, one, ExtFloat::inf(true), NormMode::Accurate);
+        assert_eq!((r.kind, r.sign), (Kind::Inf, true));
+    }
+
+    #[test]
+    fn signed_zero_rules() {
+        let pz = 0x0000u16;
+        let nz = 0x8000u16;
+        // (-0 * +0) + (-0): product sign negative, c negative -> -0
+        let r = fma(nz, pz, ExtFloat::zero(true), NormMode::Accurate);
+        assert_eq!((r.kind, r.sign), (Kind::Zero, true));
+        // (+0 * +0) + (-0) -> +0
+        let r = fma(pz, pz, ExtFloat::zero(true), NormMode::Accurate);
+        assert_eq!((r.kind, r.sign), (Kind::Zero, false));
+        // exact cancellation -> +0
+        let one = bf(1.0);
+        let r = fma(one, one, ExtFloat::from_f32(-1.0), NormMode::Accurate);
+        assert_eq!((r.kind, r.sign), (Kind::Zero, false));
+    }
+
+    #[test]
+    fn small_integers_exact() {
+        // Small-integer dot products are exactly representable end to end.
+        for mode in MODES {
+            let a: Vec<u16> = [1.0f32, 2.0, 3.0, 4.0, 5.0].iter().map(|&v| bf(v)).collect();
+            let b: Vec<u16> = [2.0f32, 2.0, 2.0, 2.0, 2.0].iter().map(|&v| bf(v)).collect();
+            let r = column_dot(&a, &b, mode);
+            assert_eq!(bf16_to_f32(r), 30.0, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn overflow_saturates_underflow_flushes() {
+        let big = bf(3e38);
+        let r = fma(big, bf(100.0), ExtFloat::ZERO, NormMode::Accurate);
+        assert_eq!(r.kind, Kind::Inf);
+        let tiny = bf(1e-38);
+        let r = fma(tiny, tiny, ExtFloat::ZERO, NormMode::Accurate);
+        assert_eq!(r.kind, Kind::Zero);
+    }
+
+    #[test]
+    fn zero_product_renormalizes_c() {
+        // A zero product still flows C through the normalizer: an
+        // un-normalized C becomes (more) normalized.
+        let c = ExtFloat { kind: Kind::Finite, sign: false, exp: 130, mag: 0x0400 };
+        let v = c.to_f64();
+        let r = fma(0, bf(1.0), c, NormMode::Accurate);
+        assert_eq!(r.to_f64(), v);
+        assert!(r.is_normalized());
+        // Approximate mode normalizes only partially.
+        let r2 = fma(0, bf(1.0), c, NormMode::Approx(ApproxNorm::AN_1_1));
+        assert_eq!(r2.to_f64(), v); // value preserved (exponent compensates)
+    }
+
+    #[test]
+    fn trace_reports_needed_vs_applied() {
+        // Build a cancellation that needs a 4-position left shift.
+        let a = bf(1.0);
+        let b = bf(1.0);
+        let c = ExtFloat::from_f32(-1.0 + 2f32.powi(-4) * 1.001);
+        let (_, t) = fma_traced(a, b, c, NormMode::Approx(ApproxNorm::AN_1_2));
+        assert!(t.effective_sub);
+        assert!(t.needed_shift <= -3, "needed {}", t.needed_shift);
+        assert!(t.applied_shift >= t.needed_shift);
+        assert_eq!(
+            (t.needed_shift - t.applied_shift).unsigned_abs(),
+            t.residual_unnorm
+        );
+    }
+
+    #[test]
+    fn fast_path_matches_general_impl() {
+        // `fma` (branch-lean fast path) vs `fma_traced` (general path) must
+        // agree bit-for-bit on every input class, including specials and
+        // un-normalized partial sums.
+        let mut rng = Prng::new(777);
+        for i in 0..200_000 {
+            let a = if i % 37 == 0 {
+                rng.next_u32() as u16 // include inf/nan patterns
+            } else {
+                rng.bf16_any_finite()
+            };
+            let b = if i % 53 == 0 { rng.next_u32() as u16 } else { rng.bf16_any_finite() };
+            let c = match i % 11 {
+                0 => ExtFloat::ZERO,
+                1 => ExtFloat::inf(i % 2 == 0),
+                2 => ExtFloat::nan(),
+                3 => ExtFloat {
+                    kind: Kind::Finite,
+                    sign: i % 2 == 0,
+                    exp: 1 + (rng.next_u32() % 254) as i32,
+                    mag: (rng.next_u32() % 0xFFFF + 1) as u16, // possibly unnormalized
+                },
+                _ => ExtFloat::from_f32(rng.f32_range(-100.0, 100.0)),
+            };
+            for mode in MODES {
+                let fast = fma(a, b, c, mode);
+                let (general, _) = fma_traced(a, b, c, mode);
+                assert_eq!(fast, general, "a={a:04x} b={b:04x} c={c:?} mode={mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_dot_order_dependence_is_modeled() {
+        // FP accumulation is order-dependent; the column order is fixed and
+        // must be deterministic.
+        let mut rng = Prng::new(106);
+        let a: Vec<u16> = (0..64).map(|_| rng.bf16_activation()).collect();
+        let b: Vec<u16> = (0..64).map(|_| rng.bf16_activation()).collect();
+        let r1 = column_dot(&a, &b, NormMode::Accurate);
+        let r2 = column_dot(&a, &b, NormMode::Accurate);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn column_dot_tracks_f64_reference() {
+        let mut rng = Prng::new(107);
+        for _ in 0..300 {
+            let n = 1 + rng.below(128) as usize;
+            let a: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+            let exact: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &w)| bf16_to_f32(x) as f64 * bf16_to_f32(w) as f64)
+                .sum();
+            let got = bf16_to_f32(column_dot(&a, &b, NormMode::Accurate)) as f64;
+            // bf16 output has 8-bit significand; accumulated truncation over
+            // n terms stays well below 1% of the running magnitude for
+            // activation-scale data.
+            let scale: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &w)| (bf16_to_f32(x) as f64 * bf16_to_f32(w) as f64).abs())
+                .sum::<f64>()
+                .max(1e-30);
+            assert!(
+                (got - exact).abs() <= scale * 0.02 + 1e-6,
+                "n={n} got={got} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn an22_worse_than_an12_on_cancellation_heavy_dots() {
+        // Statistical sanity for the paper's headline ordering.
+        let mut rng = Prng::new(108);
+        let (mut e12, mut e22) = (0.0f64, 0.0f64);
+        for _ in 0..400 {
+            let n = 96;
+            let a: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+            let exact: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &w)| bf16_to_f32(x) as f64 * bf16_to_f32(w) as f64)
+                .sum();
+            let g12 =
+                bf16_to_f32(column_dot(&a, &b, NormMode::Approx(ApproxNorm::AN_1_2))) as f64;
+            let g22 =
+                bf16_to_f32(column_dot(&a, &b, NormMode::Approx(ApproxNorm::AN_2_2))) as f64;
+            e12 += (g12 - exact).abs();
+            e22 += (g22 - exact).abs();
+        }
+        assert!(e22 > e12, "an-2-2 err {e22} should exceed an-1-2 err {e12}");
+    }
+}

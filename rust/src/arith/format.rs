@@ -1,0 +1,131 @@
+//! Floating-point format descriptors (paper Fig. 1).
+//!
+//! The paper's matrix engines operate on reduced-precision operands
+//! (Bfloat16 primarily, with FP8 variants discussed as motivation) while the
+//! partial sums keep a double-width significand.  This module describes the
+//! *storage* formats; the extended partial-sum representation lives in
+//! [`crate::arith::ext`].
+
+/// A parametric IEEE-754-style binary floating-point format:
+/// 1 sign bit, `exp_bits` exponent bits (biased), `man_bits` mantissa bits
+/// with an implicit hidden leading one for normal values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatFormat {
+    /// Human-readable name ("bf16", "fp32", ...).
+    pub name: &'static str,
+    /// Number of exponent bits.
+    pub exp_bits: u32,
+    /// Number of explicit mantissa (fraction) bits.
+    pub man_bits: u32,
+    /// Whether the maximum exponent encodes Inf/NaN (IEEE-style).  FP8 E4M3
+    /// follows the OCP convention where only mantissa==all-ones is NaN and
+    /// there are no infinities; we model that with `ieee_specials = false`.
+    pub ieee_specials: bool,
+}
+
+impl FloatFormat {
+    /// Exponent bias: `2^(exp_bits-1) - 1`.
+    #[inline]
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum biased exponent value (all ones).
+    #[inline]
+    pub const fn exp_max(&self) -> i32 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Total storage width in bits.
+    #[inline]
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Significand width including the hidden bit.
+    #[inline]
+    pub const fn sig_bits(&self) -> u32 {
+        self.man_bits + 1
+    }
+
+    /// Mask covering the mantissa field.
+    #[inline]
+    pub const fn man_mask(&self) -> u32 {
+        (1u32 << self.man_bits) - 1
+    }
+
+    /// Largest finite magnitude representable, as an f64.
+    pub fn max_finite(&self) -> f64 {
+        let max_e = if self.ieee_specials { self.exp_max() - 1 } else { self.exp_max() };
+        // significand just below 2.0 (for E4M3 the NaN pattern steals the
+        // very top mantissa code, but max_finite is only used for sanity
+        // checks, so the IEEE-style formula is close enough there too).
+        let sig = 2.0 - (0.5f64).powi(self.man_bits as i32 - 1) * 0.5;
+        sig * 2f64.powi(max_e - self.bias())
+    }
+}
+
+/// IEEE-754 single precision: 1/8/23.
+pub const FP32: FloatFormat =
+    FloatFormat { name: "fp32", exp_bits: 8, man_bits: 23, ieee_specials: true };
+
+/// Google Bfloat16: 1/8/7 — the paper's primary operand format.
+pub const BF16: FloatFormat =
+    FloatFormat { name: "bf16", exp_bits: 8, man_bits: 7, ieee_specials: true };
+
+/// IEEE half precision: 1/5/10.
+pub const FP16: FloatFormat =
+    FloatFormat { name: "fp16", exp_bits: 5, man_bits: 10, ieee_specials: true };
+
+/// FP8 E4M3 (OCP): 1/4/3, no infinities.
+pub const FP8_E4M3: FloatFormat =
+    FloatFormat { name: "fp8e4m3", exp_bits: 4, man_bits: 3, ieee_specials: false };
+
+/// FP8 E5M2 (OCP): 1/5/2, IEEE-style specials.
+pub const FP8_E5M2: FloatFormat =
+    FloatFormat { name: "fp8e5m2", exp_bits: 5, man_bits: 2, ieee_specials: true };
+
+/// All formats from the paper's Fig. 1, for sweep-style tests.
+pub const ALL_FORMATS: [FloatFormat; 5] = [FP32, BF16, FP16, FP8_E4M3, FP8_E5M2];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn biases_match_ieee() {
+        assert_eq!(FP32.bias(), 127);
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(FP16.bias(), 15);
+        assert_eq!(FP8_E4M3.bias(), 7);
+        assert_eq!(FP8_E5M2.bias(), 15);
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(FP32.width(), 32);
+        assert_eq!(BF16.width(), 16);
+        assert_eq!(FP16.width(), 16);
+        assert_eq!(FP8_E4M3.width(), 8);
+        assert_eq!(FP8_E5M2.width(), 8);
+    }
+
+    #[test]
+    fn sig_bits_includes_hidden_one() {
+        assert_eq!(BF16.sig_bits(), 8); // 7 mantissa + 1 hidden — paper §II
+        assert_eq!(FP32.sig_bits(), 24);
+    }
+
+    #[test]
+    fn bf16_max_finite_close_to_fp32_max() {
+        // bf16 shares the fp32 exponent range.
+        let m = BF16.max_finite();
+        assert!(m > 3.3e38 && m < 3.5e38, "bf16 max_finite = {m}");
+    }
+
+    #[test]
+    fn exp_max_all_ones() {
+        assert_eq!(BF16.exp_max(), 255);
+        assert_eq!(FP8_E4M3.exp_max(), 15);
+    }
+}

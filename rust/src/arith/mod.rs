@@ -1,0 +1,20 @@
+//! Bit-exact reduced-precision floating-point arithmetic substrate.
+//!
+//! This is the foundation everything else builds on: the storage formats of
+//! the paper's Fig. 1 ([`format`]), decode/encode with round-to-nearest-even
+//! ([`softfloat`]), the extended 16-bit-significand partial-sum type
+//! ([`ext`]), exact leading-zero normalization control ([`lza`]), the
+//! paper's approximate normalization ([`approx_norm`]) and the fused
+//! multiply-add PE datapath itself ([`fma`]).
+
+pub mod approx_norm;
+pub mod ext;
+pub mod fma;
+pub mod format;
+pub mod lza;
+pub mod softfloat;
+
+pub use approx_norm::ApproxNorm;
+pub use ext::{ExtFloat, Kind};
+pub use fma::{column_dot, fma, fma_traced, FmaTrace, NormMode, ADD_FRAME_BITS, NORM_POS};
+pub use softfloat::{bf16_to_f32, f32_to_bf16};

@@ -1,0 +1,325 @@
+//! Software decode/encode between `f32` and the reduced-precision storage
+//! formats of [`crate::arith::format`].
+//!
+//! Conventions (documented in DESIGN.md):
+//! * Round-to-nearest-even on encode.
+//! * **Flush-to-zero** for subnormals in both directions — the paper's
+//!   matrix engines (like most ML accelerators) do not implement gradual
+//!   underflow in the PE datapath.
+//! * Saturation to ±Inf on exponent overflow (to NaN for E4M3, which has no
+//!   infinities).
+
+use super::format::FloatFormat;
+
+/// A decoded reduced-precision value: the classification plus the unpacked
+/// fields.  `sig` carries the hidden bit (so for a normal bf16 value it is
+/// an 8-bit quantity in `[0x80, 0xFF]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decoded {
+    Zero { sign: bool },
+    Finite { sign: bool, exp: i32, sig: u32 },
+    Inf { sign: bool },
+    Nan,
+}
+
+impl Decoded {
+    #[inline]
+    pub fn sign(&self) -> bool {
+        match *self {
+            Decoded::Zero { sign } | Decoded::Finite { sign, .. } | Decoded::Inf { sign } => sign,
+            Decoded::Nan => false,
+        }
+    }
+
+    #[inline]
+    pub fn is_nan(&self) -> bool {
+        matches!(self, Decoded::Nan)
+    }
+
+    #[inline]
+    pub fn is_inf(&self) -> bool {
+        matches!(self, Decoded::Inf { .. })
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Decoded::Zero { .. })
+    }
+}
+
+/// Decode the raw bit pattern of a value stored in `fmt`.
+/// Subnormals are flushed to (signed) zero.
+pub fn decode(bits: u32, fmt: &FloatFormat) -> Decoded {
+    debug_assert!(fmt.width() <= 32);
+    let sign = (bits >> (fmt.width() - 1)) & 1 == 1;
+    let exp = ((bits >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)) as i32;
+    let man = bits & fmt.man_mask();
+
+    if exp == 0 {
+        // zero or subnormal: FTZ either way.
+        return Decoded::Zero { sign };
+    }
+    if exp == fmt.exp_max() {
+        if fmt.ieee_specials {
+            return if man == 0 { Decoded::Inf { sign } } else { Decoded::Nan };
+        }
+        // E4M3: only mantissa==all-ones is NaN; the rest are normal numbers.
+        if man == fmt.man_mask() {
+            return Decoded::Nan;
+        }
+    }
+    Decoded::Finite { sign, exp, sig: man | (1 << fmt.man_bits) }
+}
+
+/// Encode an `f32` into `fmt` with round-to-nearest-even, FTZ and
+/// saturation-to-Inf.  Returns the raw bit pattern (low `fmt.width()` bits).
+pub fn encode_f32(x: f32, fmt: &FloatFormat) -> u32 {
+    let bits = x.to_bits();
+    let sign = (bits >> 31) & 1;
+    let sbit = sign << (fmt.width() - 1);
+
+    if x.is_nan() {
+        // canonical quiet NaN
+        return if fmt.ieee_specials {
+            sbit | ((fmt.exp_max() as u32) << fmt.man_bits) | (1 << (fmt.man_bits - 1))
+        } else {
+            sbit | ((fmt.exp_max() as u32) << fmt.man_bits) | fmt.man_mask()
+        };
+    }
+    if x.is_infinite() {
+        return inf_bits(sign == 1, fmt);
+    }
+    if x == 0.0 {
+        return sbit;
+    }
+
+    // Unpack the f32.
+    let e32 = ((bits >> 23) & 0xFF) as i32;
+    let m32 = bits & 0x7F_FFFF;
+    // FTZ on the fp32 side too: a subnormal f32 is far below every target
+    // format's normal range anyway.
+    if e32 == 0 {
+        return sbit;
+    }
+    let sig32 = m32 | 0x80_0000; // 24-bit significand, Q1.23
+    let e_unb = e32 - 127;
+
+    // Target exponent (biased).
+    let mut e_t = e_unb + fmt.bias();
+    // Round the 24-bit significand to fmt.sig_bits() with RNE.
+    let drop = 24 - fmt.sig_bits();
+    let mut sig = rne_shift_right(sig32 as u64, drop) as u32;
+    // Rounding may carry out (e.g. 0x0.FF.. -> 0x1.00): renormalize.
+    if sig >> fmt.sig_bits() != 0 {
+        sig >>= 1;
+        e_t += 1;
+    }
+
+    if e_t <= 0 {
+        return sbit; // underflow: FTZ
+    }
+    let e_lim = if fmt.ieee_specials { fmt.exp_max() - 1 } else { fmt.exp_max() };
+    if e_t > e_lim || (!fmt.ieee_specials && e_t == e_lim && (sig & fmt.man_mask()) == fmt.man_mask())
+    {
+        return inf_bits(sign == 1, fmt); // overflow: saturate
+    }
+    sbit | ((e_t as u32) << fmt.man_bits) | (sig & fmt.man_mask())
+}
+
+/// Decode a bit pattern in `fmt` back to `f32` (exact for every format
+/// narrower than fp32).
+pub fn decode_to_f32(bits: u32, fmt: &FloatFormat) -> f32 {
+    match decode(bits, fmt) {
+        Decoded::Zero { sign } => {
+            if sign {
+                -0.0
+            } else {
+                0.0
+            }
+        }
+        Decoded::Inf { sign } => {
+            if sign {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            }
+        }
+        Decoded::Nan => f32::NAN,
+        Decoded::Finite { sign, exp, sig } => {
+            let v = sig as f64 * 2f64.powi(exp - fmt.bias() - fmt.man_bits as i32);
+            let v = if sign { -v } else { v };
+            v as f32
+        }
+    }
+}
+
+/// ±Inf bit pattern (max-magnitude NaN pattern for E4M3, which has no Inf —
+/// OCP saturating behaviour would use max-finite; we use NaN to make
+/// overflow *visible* in tests, and max-finite saturation is a documented
+/// alternative).
+pub fn inf_bits(sign: bool, fmt: &FloatFormat) -> u32 {
+    let sbit = (sign as u32) << (fmt.width() - 1);
+    if fmt.ieee_specials {
+        sbit | ((fmt.exp_max() as u32) << fmt.man_bits)
+    } else {
+        sbit | ((fmt.exp_max() as u32) << fmt.man_bits) | fmt.man_mask()
+    }
+}
+
+/// Round-to-nearest-even right shift of a non-negative value.
+#[inline]
+pub fn rne_shift_right(v: u64, shift: u32) -> u64 {
+    if shift == 0 {
+        return v;
+    }
+    if shift >= 64 {
+        return 0;
+    }
+    let kept = v >> shift;
+    let round_bit = (v >> (shift - 1)) & 1;
+    let sticky = v & ((1u64 << (shift - 1)) - 1) != 0;
+    if round_bit == 1 && (sticky || kept & 1 == 1) {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bf16 convenience wrappers: the hot path works directly on u16 patterns.
+// ---------------------------------------------------------------------------
+
+/// Round an `f32` to the nearest bf16 bit pattern (RNE, FTZ).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    encode_f32(x, &super::format::BF16) as u16
+}
+
+/// Exact widening of a bf16 bit pattern to `f32` (FTZ on subnormals).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    let bits = (b as u32) << 16;
+    let f = f32::from_bits(bits);
+    // FTZ: decode() flushes, mirror that here for consistency.
+    if f.is_subnormal() {
+        if f.is_sign_negative() {
+            -0.0
+        } else {
+            0.0
+        }
+    } else {
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::*;
+    use crate::prng::Prng;
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 100.0, 3.389e38] {
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            let again = f32_to_bf16(back);
+            assert_eq!(b, again, "roundtrip not idempotent for {v}");
+        }
+    }
+
+    #[test]
+    fn bf16_is_f32_truncation_family() {
+        // bf16(x) must equal the top 16 bits of x when x is already a bf16
+        // value (exactly representable).
+        let x = 1.5f32;
+        assert_eq!(f32_to_bf16(x), (x.to_bits() >> 16) as u16);
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 0b101 >> 1 with RNE: round bit 1, sticky 0, kept lsb 0 -> stays 0b10.
+        assert_eq!(rne_shift_right(0b101, 1), 0b10);
+        // 0b111 >> 1: round 1, kept lsb 1 -> rounds up to 0b100.
+        assert_eq!(rne_shift_right(0b111, 1), 0b100);
+        // 0b110 >> 1: round 0 -> 0b11.
+        assert_eq!(rne_shift_right(0b110, 1), 0b11);
+        // sticky forces up: 0b1011 >> 2 = kept 0b10, round 1, sticky 1 -> 0b11.
+        assert_eq!(rne_shift_right(0b1011, 2), 0b11);
+    }
+
+    #[test]
+    fn encode_decode_consistent_all_formats() {
+        let mut rng = Prng::new(0xA11CE);
+        for fmt in &ALL_FORMATS {
+            for _ in 0..2000 {
+                let x = f32::from_bits(rng.next_u32());
+                if !x.is_finite() {
+                    continue;
+                }
+                let enc = encode_f32(x, fmt);
+                let dec = decode_to_f32(enc, fmt);
+                if dec.is_nan() {
+                    continue; // E4M3 overflow-to-NaN
+                }
+                // Relative error bounded by half an ulp of the format
+                // (unless flushed/saturated).
+                if dec != 0.0 && dec.is_finite() {
+                    let rel = ((dec - x) / x).abs();
+                    let half_ulp = (0.5f32).powi(fmt.man_bits as i32);
+                    assert!(
+                        rel <= half_ulp * 1.01,
+                        "{}: x={x} dec={dec} rel={rel}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals_flush() {
+        // smallest bf16 normal is 2^-126; below that -> 0.
+        let tiny = 2f32.powi(-130);
+        assert_eq!(f32_to_bf16(tiny), 0);
+        assert_eq!(f32_to_bf16(-tiny), 0x8000);
+        // decode side: exp==0, man!=0 flushes.
+        assert_eq!(decode(0x0001, &BF16), Decoded::Zero { sign: false });
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80); // +Inf in bf16
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+        assert!(decode(0x7F80, &BF16).is_inf());
+    }
+
+    #[test]
+    fn nan_encodes_as_nan() {
+        let n = f32_to_bf16(f32::NAN);
+        assert!(decode(n as u32, &BF16).is_nan());
+    }
+
+    #[test]
+    fn e4m3_nan_is_mantissa_ones_only() {
+        // 0x7F = S=0 E=1111 M=111 -> NaN
+        assert!(decode(0x7F, &FP8_E4M3).is_nan());
+        // 0x7E = E=1111 M=110 -> a *normal* value in E4M3 (448).
+        match decode(0x7E, &FP8_E4M3) {
+            Decoded::Finite { exp, sig, .. } => {
+                assert_eq!(exp, 15);
+                assert_eq!(sig, 0b1110);
+            }
+            other => panic!("expected finite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rounding_carry_renormalizes() {
+        // A value whose mantissa rounds up past all-ones must bump the
+        // exponent, not corrupt the mantissa field.
+        // 1.9999999 in f32 rounds to 2.0 in bf16.
+        let b = f32_to_bf16(1.999_999_9);
+        assert_eq!(bf16_to_f32(b), 2.0);
+    }
+}

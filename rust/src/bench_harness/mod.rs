@@ -1,0 +1,113 @@
+//! Minimal benchmarking harness (criterion is not vendored in this
+//! environment): warmup + timed iterations, robust summary statistics, and
+//! a uniform report format shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional throughput annotation: (value, unit), e.g. (1.2e9, "FMA/s").
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn render(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|(v, u)| format!("  {:>10.3e} {u}", v))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10.3?} (median {:>10.3?}, p95 {:>10.3?}, n={}){tp}",
+            self.name, self.mean, self.median, self.p95, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then at least `min_iters`
+/// measured runs or until `min_time` has elapsed, whichever is later.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_time: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+/// Quick preset: 2 warmups, >=5 iters, >=200ms.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 2, 5, Duration::from_millis(200), f)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        median: samples[n / 2],
+        p95: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        min: samples[0],
+        throughput: None,
+    }
+}
+
+impl BenchResult {
+    /// Attach a throughput computed from work-per-iteration.
+    pub fn with_ops(mut self, ops_per_iter: f64, unit: &'static str) -> Self {
+        let secs = self.mean.as_secs_f64();
+        if secs > 0.0 {
+            self.throughput = Some((ops_per_iter / secs, unit));
+        }
+        self
+    }
+}
+
+/// Section header used by every bench binary.
+pub fn section(title: &str) -> String {
+    format!("\n=== {title} ===\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_orders() {
+        let r = bench("noop", 1, 5, Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let r = bench("sleepy", 0, 3, Duration::from_millis(1), || {
+            std::thread::sleep(Duration::from_millis(2));
+        })
+        .with_ops(1000.0, "ops/s");
+        let (v, u) = r.throughput.unwrap();
+        assert_eq!(u, "ops/s");
+        assert!(v > 100_000.0 && v < 1_000_000.0, "v = {v}");
+        assert!(r.render().contains("sleepy"));
+    }
+}

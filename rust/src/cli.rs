@@ -1,0 +1,276 @@
+//! Command-line interface of the `amfma` binary.
+//!
+//! ```text
+//! amfma eval  [--limit N] [--batch N] [--modes a,b,c]    Table I
+//! amfma hist  [--task NAME] [--examples N] [--mode M]    Fig 6
+//! amfma cost  [--fig4] [--fig7] [--k K --lambda L]       Fig 4 / Fig 7
+//! amfma serve [--mode M] [--requests N] [--concurrency C] serving demo
+//! amfma cycles --m M --k K --n N [--grid G]              array timing model
+//! amfma info                                             artifact status
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Args;
+use crate::cost::{self, Activities};
+use crate::data::tasks::{artifacts_dir, GLUE_TASKS};
+use crate::model::{self, Weights};
+use crate::systolic::{EngineMode, MatrixEngine};
+use crate::ApproxNorm;
+
+pub fn run(args: Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("eval") => cmd_eval(&args),
+        Some("hist") => cmd_hist(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("cycles") => cmd_cycles(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+pub const USAGE: &str = "amfma — approximate-normalization matrix engines
+USAGE:
+  amfma eval  [--limit N] [--batch N] [--modes fp32,bf16,...]   reproduce Table I
+  amfma hist  [--task sst2] [--examples N]                      reproduce Fig 6
+  amfma cost  [--fig4] [--fig7] [--k K --lambda L]              reproduce Fig 4/7
+  amfma serve [--mode bf16an-1-2] [--requests N] [--concurrency C]
+  amfma cycles --m M --k K --n N [--grid 16]
+  amfma info";
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let limit = args.get("limit").and_then(|v| v.parse().ok());
+    let batch = args.get_usize("batch", 32);
+    let modes: Vec<EngineMode> = match args.get("modes") {
+        None => model::paper_modes(),
+        Some(spec) => spec
+            .split(',')
+            .map(|s| EngineMode::parse(s).with_context(|| format!("bad mode {s}")).map_err(Into::into))
+            .collect::<Result<_>>()?,
+    };
+    let mut results = Vec::new();
+    for name in GLUE_TASKS {
+        let task = crate::data::tasks::load_task(name)?;
+        let weights = Weights::load(&model::eval::weights_path(name))?;
+        for &mode in &modes {
+            let r = model::evaluate_task(&task, &weights, mode, batch, limit);
+            eprintln!(
+                "  {:<8} {:<11} headline={:>5.1} ({} ex, {:.1}s)",
+                r.task, r.mode, r.headline(), r.n_examples, r.wall_secs
+            );
+            results.push(r);
+        }
+    }
+    println!("{}", model::render_table1(&results));
+    for m in ["bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let d = model::eval::avg_degradation_vs_bf16(&results, m);
+        let f = model::eval::flip_rate_vs_bf16(&results, m);
+        if d.is_finite() {
+            println!(
+                "vs bf16: {m}  avg headline degradation = {d:+.2} points, decision flips = {:.2}%",
+                100.0 * f
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_hist(args: &Args) -> Result<()> {
+    let task_name = args.get("task").unwrap_or("sst2");
+    let examples = args.get_usize("examples", 8);
+    let task = crate::data::tasks::load_task(task_name)?;
+    let weights = Weights::load(&model::eval::weights_path(task_name))?;
+    let enc = model::Encoder::new(
+        &weights,
+        MatrixEngine::new(EngineMode::Bf16(crate::NormMode::Accurate)),
+    );
+    let n = examples.min(task.n_dev());
+    let toks = &task.dev_tokens[..n * task.seq_len];
+    let (_, traces) = enc.forward_traced(toks, n);
+    println!(
+        "Fig 6 — normalization-shift histogram over the {} attention layers of '{}' ({} examples)\n",
+        traces.len(),
+        task_name,
+        n
+    );
+    for (l, st) in traces.iter().enumerate() {
+        println!("layer {l}  ({} FMA ops)", st.shifts.total());
+        println!("{}", st.shifts.render());
+    }
+    let mut all = crate::pe::ShiftHistogram::default();
+    for st in &traces {
+        all.merge(&st.shifts);
+    }
+    println!("all layers combined:\n{}", all.render());
+    println!(
+        "P(left shift > 3) = {:.4}%  — the rarity the paper's scheme exploits",
+        100.0 * all.frac_left_gt(3)
+    );
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 1) as u32;
+    let lambda = args.get_usize("lambda", 2) as u32;
+    let cfg = ApproxNorm::new(k, lambda);
+    let both = !args.has_flag("fig4") && !args.has_flag("fig7");
+    if args.has_flag("fig4") || both {
+        println!("{}", cost::PeArea::accurate().render());
+        println!("{}", cost::PeArea::approximate(cfg).render());
+        println!(
+            "PE-level area saving ({}): {:.1}%\n",
+            cfg.label(),
+            100.0 * cost::pe_area_saving(cfg)
+        );
+    }
+    if args.has_flag("fig7") || both {
+        println!("{}", cost::render_fig7a(&cost::fig7a(cfg)));
+        // Activity profiles measured from a real workload when artifacts
+        // exist; typical profile otherwise.
+        let (aa, ax) = measured_activities(cfg).unwrap_or((Activities::typical(), Activities::typical()));
+        println!("{}", cost::render_fig7b(&cost::fig7b(cfg, &aa, &ax)));
+    }
+    Ok(())
+}
+
+/// Trace one batch of a real task under accurate + approximate modes and
+/// extract per-component switching activities (the paper's power
+/// methodology: same vectors as the inference runs).
+pub fn measured_activities(cfg: ApproxNorm) -> Option<(Activities, Activities)> {
+    let task = crate::data::tasks::load_task("sst2").ok()?;
+    let weights = Weights::load(&model::eval::weights_path("sst2")).ok()?;
+    let n = 2usize.min(task.n_dev());
+    let toks = &task.dev_tokens[..n * task.seq_len];
+    let acc = model::Encoder::new(
+        &weights,
+        MatrixEngine::new(EngineMode::Bf16(crate::NormMode::Accurate)),
+    );
+    let apx = model::Encoder::new(
+        &weights,
+        MatrixEngine::new(EngineMode::Bf16(crate::NormMode::Approx(cfg))),
+    );
+    let (_, ta) = acc.forward_traced(toks, n);
+    let (_, tx) = apx.forward_traced(toks, n);
+    let mut sa = crate::pe::ToggleStats::default();
+    let mut sx = crate::pe::ToggleStats::default();
+    for t in &ta {
+        sa.merge(&t.toggles);
+    }
+    for t in &tx {
+        sx.merge(&t.toggles);
+    }
+    Some((Activities::from_stats(&sa), Activities::from_stats(&sx)))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::{InferenceServer, ServerConfig};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let mode = EngineMode::parse(args.get("mode").unwrap_or("bf16an-1-2"))
+        .context("bad --mode")?;
+    let requests = args.get_usize("requests", 256);
+    let concurrency = args.get_usize("concurrency", 8);
+    let max_batch = args.get_usize("max-batch", 16);
+
+    let mut models = HashMap::new();
+    let mut tasks = Vec::new();
+    for name in GLUE_TASKS {
+        if let (Ok(t), Ok(w)) = (
+            crate::data::tasks::load_task(name),
+            Weights::load(&model::eval::weights_path(name)),
+        ) {
+            models.insert(name.to_string(), Arc::new(w));
+            tasks.push(t);
+        }
+    }
+    if models.is_empty() {
+        bail!("no artifacts found — run `make artifacts` first");
+    }
+    println!(
+        "serving {} tasks with mode {} ({} requests, concurrency {})",
+        models.len(),
+        mode.label(),
+        requests,
+        concurrency
+    );
+    let srv = InferenceServer::start(
+        models,
+        ServerConfig { mode, max_batch, ..Default::default() },
+    );
+    let handle = srv.handle();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..concurrency {
+            let handle = handle.clone();
+            let tasks = &tasks;
+            s.spawn(move || {
+                let mut rng = crate::prng::Prng::new(c as u64 + 77);
+                for i in 0..requests / concurrency {
+                    let t = &tasks[(i + c) % tasks.len()];
+                    let ex = rng.below(t.n_dev() as u64) as usize;
+                    let toks = t.dev_example(ex).to_vec();
+                    let _ = handle.classify(&t.name, toks);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = srv.shutdown().snapshot();
+    println!("{}", m.render());
+    println!(
+        "throughput: {:.1} seq/s over {:.2}s",
+        m.completed as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_cycles(args: &Args) -> Result<()> {
+    let m = args.get_usize("m", 128);
+    let k = args.get_usize("k", 64);
+    let n = args.get_usize("n", 64);
+    let grid = args.get_usize("grid", 16);
+    let eng = MatrixEngine::with_grid(
+        EngineMode::Bf16(crate::NormMode::Approx(ApproxNorm::AN_1_2)),
+        grid,
+        grid,
+    );
+    println!(
+        "GEMM {m}x{k}x{n} on a {grid}x{grid} weight-stationary array:\n\
+         cycles = {}  utilization = {:.1}%  (1 GHz -> {:.2} µs)",
+        eng.cycle_estimate(m, k, n),
+        100.0 * eng.utilization_estimate(m, k, n),
+        eng.cycle_estimate(m, k, n) as f64 / 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    for name in GLUE_TASKS {
+        let t = dir.join("tasks").join(format!("{name}.amft"));
+        let w = dir.join("weights").join(format!("{name}.amfw"));
+        println!(
+            "  {name:<8} task={} weights={}",
+            if t.exists() { "ok" } else { "MISSING" },
+            if w.exists() { "ok" } else { "MISSING" },
+        );
+    }
+    for f in [
+        "matmul_fp32.hlo.txt",
+        "matmul_bf16.hlo.txt",
+        "matmul_bf16an-1-2.hlo.txt",
+        "model_sst2_fp32.hlo.txt",
+        "golden/golden_fma.bin",
+        "golden/golden_matmul.bin",
+    ] {
+        println!("  {f:<26} {}", if dir.join(f).exists() { "ok" } else { "MISSING" });
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: request counters, latency percentiles, batch-size
+//! distribution, queue depth — the observability layer of the coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    /// Latencies in microseconds (bounded reservoir).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+pub const RESERVOIR: usize = 100_000;
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut v = self.latencies_us.lock().unwrap();
+        if v.len() < RESERVOIR {
+            v.push(d.as_micros() as u64);
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() as f64 - 1.0) * p).round() as usize;
+            lat[idx] as f64 / 1000.0
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch_size(),
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: lat.last().map(|&v| v as f64 / 1000.0).unwrap_or(0.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests: submitted={} completed={} rejected={}\n\
+             batching: {} batches, mean size {:.2}\n\
+             latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.batches,
+            self.mean_batch,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::default();
+        for i in 1..=1000u64 {
+            m.record_latency(Duration::from_micros(i * 100));
+        }
+        let s = m.snapshot();
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms && s.p99_ms <= s.max_ms);
+        assert!((s.p50_ms - 50.0).abs() < 1.0, "p50 = {}", s.p50_ms);
+        assert_eq!(s.completed, 1000);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.completed, 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Serving coordinator — the L3 runtime layer.
+//!
+//! client → [`router::Router`] → [`server::InferenceServer`] (bounded
+//! ingress queue + dynamic batcher) → engine workers (the simulated matrix
+//! engine, or the PJRT-loaded FP32 artifact).  [`metrics`] provides the
+//! latency/batching observability used by the serving benchmarks.
+
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Replica, RouteError, Router};
+pub use server::{InferenceServer, Reply, Request, ServerConfig, ServerHandle, SubmitError};

@@ -1,0 +1,189 @@
+//! Request router: fronts a set of engine replicas (possibly with
+//! different numeric modes) and routes each request by mode preference +
+//! round-robin, with busy-failover across replicas of the same mode.
+//!
+//! This is the top of the serving stack: client → Router → InferenceServer
+//! (dynamic batcher) → engine workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::systolic::EngineMode;
+
+use super::server::{Reply, ServerHandle, SubmitError};
+
+pub struct Replica {
+    pub mode: EngineMode,
+    pub handle: ServerHandle,
+}
+
+pub struct Router {
+    replicas: Vec<Replica>,
+    rr: AtomicUsize,
+}
+
+#[derive(Debug)]
+pub enum RouteError {
+    NoReplicaForMode,
+    AllBusy,
+    Closed,
+}
+
+impl Router {
+    pub fn new(replicas: Vec<Replica>) -> Router {
+        Router { replicas, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn candidates(&self, mode: Option<EngineMode>) -> Vec<&Replica> {
+        self.replicas
+            .iter()
+            .filter(|r| mode.map(|m| r.mode == m).unwrap_or(true))
+            .collect()
+    }
+
+    /// Route one request. `mode = None` means "any replica".
+    /// Tries every matching replica once (round-robin start) before
+    /// reporting AllBusy.
+    pub fn route(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        mode: Option<EngineMode>,
+    ) -> Result<std::sync::mpsc::Receiver<Reply>, RouteError> {
+        let cands = self.candidates(mode);
+        if cands.is_empty() {
+            return Err(RouteError::NoReplicaForMode);
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut closed = 0;
+        for i in 0..cands.len() {
+            let r = cands[(start + i) % cands.len()];
+            match r.handle.submit(task, tokens.clone()) {
+                Ok(rx) => return Ok(rx),
+                Err(SubmitError::Busy) => continue,
+                Err(SubmitError::Closed) => closed += 1,
+            }
+        }
+        if closed == cands.len() {
+            Err(RouteError::Closed)
+        } else {
+            Err(RouteError::AllBusy)
+        }
+    }
+
+    /// Blocking route: spins on AllBusy (the caller is the load generator
+    /// in our examples; a network front-end would shed instead).
+    pub fn route_blocking(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        mode: Option<EngineMode>,
+    ) -> Result<Reply, RouteError> {
+        loop {
+            match self.route(task, tokens.clone(), mode) {
+                Ok(rx) => return rx.recv().map_err(|_| RouteError::Closed),
+                Err(RouteError::AllBusy) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200))
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Aggregate snapshot across distinct underlying servers.
+    pub fn metrics(&self) -> Vec<(String, super::metrics::MetricsSnapshot)> {
+        let mut seen: Vec<*const super::metrics::Metrics> = Vec::new();
+        let mut out = Vec::new();
+        for r in &self.replicas {
+            let ptr = Arc::as_ptr(&r.handle.metrics);
+            if !seen.contains(&ptr) {
+                seen.push(ptr);
+                out.push((r.mode.label(), r.handle.metrics.snapshot()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{InferenceServer, ServerConfig};
+    use crate::model::{ModelConfig, Weights};
+    use crate::prng::Prng;
+    use crate::NormMode;
+    use std::collections::HashMap;
+
+    fn mk_server(mode: EngineMode) -> (InferenceServer, ServerHandle) {
+        let cfg = ModelConfig {
+            vocab: 32, d_model: 16, n_heads: 2, d_ff: 32,
+            n_layers: 1, max_seq: 8, n_classes: 2,
+        };
+        let mut m = HashMap::new();
+        m.insert("sst2".to_string(), std::sync::Arc::new(Weights::random(cfg, 1)));
+        let srv = InferenceServer::start(m, ServerConfig { mode, ..Default::default() });
+        let h = srv.handle();
+        (srv, h)
+    }
+
+    #[test]
+    fn routes_by_mode() {
+        let m1 = EngineMode::Bf16(NormMode::Accurate);
+        let m2 = EngineMode::Fp32;
+        let (s1, h1) = mk_server(m1);
+        let (s2, h2) = mk_server(m2);
+        let router = Router::new(vec![
+            Replica { mode: m1, handle: h1 },
+            Replica { mode: m2, handle: h2 },
+        ]);
+        let mut rng = Prng::new(9);
+        let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+        let r = router.route_blocking("sst2", toks.clone(), Some(m2)).unwrap();
+        assert_eq!(r.logits.len(), 2);
+        // only the fp32 server saw traffic
+        assert_eq!(s2.handle().metrics.snapshot().completed, 1);
+        assert_eq!(s1.handle().metrics.snapshot().completed, 0);
+        s1.shutdown();
+        s2.shutdown();
+    }
+
+    #[test]
+    fn unknown_mode_errors() {
+        let m1 = EngineMode::Fp32;
+        let (s1, h1) = mk_server(m1);
+        let router = Router::new(vec![Replica { mode: m1, handle: h1 }]);
+        let err = router.route("sst2", vec![0; 8], Some(EngineMode::Bf16(NormMode::Accurate)));
+        assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
+        s1.shutdown();
+    }
+
+    #[test]
+    fn round_robin_spreads_load() {
+        let mode = EngineMode::Fp32;
+        let (s1, h1) = mk_server(mode);
+        let (s2, h2) = mk_server(mode);
+        let router = Router::new(vec![
+            Replica { mode, handle: h1 },
+            Replica { mode, handle: h2 },
+        ]);
+        let mut rng = Prng::new(10);
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+            rxs.push(router.route("sst2", toks, None).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let c1 = s1.handle().metrics.snapshot().completed;
+        let c2 = s2.handle().metrics.snapshot().completed;
+        assert_eq!(c1 + c2, 20);
+        assert!(c1 > 0 && c2 > 0, "both replicas should serve: {c1}/{c2}");
+        s1.shutdown();
+        s2.shutdown();
+    }
+}

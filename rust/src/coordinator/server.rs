@@ -1,0 +1,360 @@
+//! The inference server: bounded ingress queue (backpressure), a dynamic
+//! batcher thread, and a pool of engine workers running the encoder on the
+//! simulated matrix engine.
+//!
+//! Everything is std-threads + channels (no async runtime is vendored in
+//! this environment); the architecture mirrors a vLLM-style router→batcher→
+//! engine pipeline scaled down to one process.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::{Encoder, Weights};
+use crate::systolic::{EngineMode, MatrixEngine};
+
+use super::metrics::Metrics;
+
+/// One classification/regression request.
+pub struct Request {
+    pub task: String,
+    pub tokens: Vec<u16>,
+    pub reply: SyncSender<Reply>,
+    pub submitted_at: Instant,
+}
+
+/// Server reply: logits (or the regression score) for one sequence.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub mode: EngineMode,
+    /// Flush a batch when it reaches this many sequences...
+    pub max_batch: usize,
+    /// ...or when its oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Bounded ingress queue depth (backpressure boundary).
+    pub queue_depth: usize,
+    /// Engine worker threads.
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            mode: EngineMode::Bf16(crate::NormMode::Approx(crate::ApproxNorm::AN_1_2)),
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 256,
+            workers: 2,
+        }
+    }
+}
+
+/// Handle used by clients to submit work.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+}
+
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Queue full — backpressure; caller should retry/shed.
+    Busy,
+    /// Server shut down.
+    Closed,
+}
+
+impl ServerHandle {
+    /// Non-blocking submit; returns the reply channel.
+    pub fn submit(&self, task: &str, tokens: Vec<u16>) -> Result<Receiver<Reply>, SubmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request {
+            task: task.to_string(),
+            tokens,
+            reply: rtx,
+            submitted_at: Instant::now(),
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn classify(&self, task: &str, tokens: Vec<u16>) -> Result<Reply, SubmitError> {
+        loop {
+            match self.submit(task, tokens.clone()) {
+                Ok(rx) => return rx.recv().map_err(|_| SubmitError::Closed),
+                Err(SubmitError::Busy) => std::thread::sleep(Duration::from_micros(200)),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// A running server; dropping it (after `shutdown`) joins all threads.
+pub struct InferenceServer {
+    handle: ServerHandle,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start a server over the given per-task weights.
+    pub fn start(models: HashMap<String, Arc<Weights>>, cfg: ServerConfig) -> InferenceServer {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // --- batcher thread -------------------------------------------------
+        {
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            let cfg2 = cfg.clone();
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(rx, btx, metrics, cfg2, stop);
+            }));
+        }
+
+        // --- engine workers --------------------------------------------------
+        let brx = Arc::new(std::sync::Mutex::new(brx));
+        for _w in 0..cfg.workers {
+            let brx = brx.clone();
+            let metrics = metrics.clone();
+            let models = models.clone();
+            let mode = cfg.mode;
+            threads.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = brx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(batch) = batch else { break };
+                run_batch(&models, mode, batch, &metrics);
+            }));
+        }
+
+        InferenceServer { handle: ServerHandle { tx, metrics }, stop, threads }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.stop.store(true, Ordering::SeqCst);
+        let metrics = self.handle.metrics.clone();
+        // Dropping our sender closes the ingress; batcher then exits and
+        // closes the batch channel, so workers exit too.
+        let ServerHandle { tx, .. } = self.handle.clone();
+        drop(tx);
+        self.handle = ServerHandle { tx: sync_channel(1).0, metrics: metrics.clone() };
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        metrics
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    btx: SyncSender<Vec<Request>>,
+    metrics: Arc<Metrics>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    // Pending buckets keyed by task (different tasks use different weights,
+    // so they cannot share a batch).
+    let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
+    loop {
+        let timeout = cfg.max_wait / 2;
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let task = req.task.clone();
+                let bucket = pending.entry(task.clone()).or_default();
+                bucket.push(req);
+                if bucket.len() >= cfg.max_batch {
+                    let batch = pending.remove(&task).unwrap();
+                    metrics.record_batch(batch.len());
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // flush what's left and exit
+                for (_, batch) in pending.drain() {
+                    if !batch.is_empty() {
+                        metrics.record_batch(batch.len());
+                        let _ = btx.send(batch);
+                    }
+                }
+                return;
+            }
+        }
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // age-based flush
+        let now = Instant::now();
+        let expired: Vec<String> = pending
+            .iter()
+            .filter(|(_, b)| {
+                !b.is_empty()
+                    && now.duration_since(b[0].submitted_at) >= cfg.max_wait
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in expired {
+            let batch = pending.remove(&k).unwrap();
+            metrics.record_batch(batch.len());
+            if btx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn run_batch(
+    models: &HashMap<String, Arc<Weights>>,
+    mode: EngineMode,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) {
+    let Some(weights) = models.get(&batch[0].task) else {
+        // unknown task: drop replies (senders see Closed)
+        return;
+    };
+    let seq = weights.config.max_seq;
+    let b = batch.len();
+    let mut tokens = Vec::with_capacity(b * seq);
+    for r in &batch {
+        assert_eq!(r.tokens.len(), seq, "sequence length mismatch");
+        tokens.extend_from_slice(&r.tokens);
+    }
+    let engine = MatrixEngine::new(mode);
+    let enc = Encoder::new(weights, engine);
+    let logits = enc.forward(&tokens, b);
+    let now = Instant::now();
+    for (i, req) in batch.into_iter().enumerate() {
+        let latency = now.duration_since(req.submitted_at);
+        metrics.record_latency(latency);
+        let _ = req.reply.send(Reply { logits: logits.row(i).to_vec(), latency });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::prng::Prng;
+
+    fn tiny_models() -> HashMap<String, Arc<Weights>> {
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 1,
+            max_seq: 8,
+            n_classes: 2,
+        };
+        let mut m = HashMap::new();
+        m.insert("sst2".to_string(), Arc::new(Weights::random(cfg, 42)));
+        m.insert("rte".to_string(), Arc::new(Weights::random(cfg, 43)));
+        m
+    }
+
+    #[test]
+    fn serve_roundtrip() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let mut rng = Prng::new(1);
+        let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+        let reply = h.classify("sst2", toks).unwrap();
+        assert_eq!(reply.logits.len(), 2);
+        let m = srv.shutdown();
+        assert_eq!(m.snapshot().completed, 1);
+    }
+
+    #[test]
+    fn batching_groups_by_task() {
+        let cfg = ServerConfig { max_batch: 8, max_wait: Duration::from_millis(20), ..Default::default() };
+        let srv = InferenceServer::start(tiny_models(), cfg);
+        let h = srv.handle();
+        let mut rng = Prng::new(2);
+        let mut rxs = Vec::new();
+        for i in 0..32 {
+            let task = if i % 2 == 0 { "sst2" } else { "rte" };
+            let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+            rxs.push(h.submit(task, toks).unwrap());
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.logits.len(), 2);
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 32);
+        assert!(m.mean_batch > 1.0, "batching should kick in: {}", m.mean_batch);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue, no workers draining fast enough at first instant.
+        let cfg = ServerConfig {
+            queue_depth: 2,
+            max_batch: 64,
+            max_wait: Duration::from_millis(100),
+            workers: 1,
+            ..Default::default()
+        };
+        let srv = InferenceServer::start(tiny_models(), cfg);
+        let h = srv.handle();
+        let mut rng = Prng::new(3);
+        let mut busy = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+            match h.submit("sst2", toks) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Busy) => busy += 1,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        assert!(busy > 0, "expected backpressure rejections");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn age_based_flush_bounds_latency() {
+        let cfg = ServerConfig {
+            max_batch: 1000, // never reached
+            max_wait: Duration::from_millis(4),
+            ..Default::default()
+        };
+        let srv = InferenceServer::start(tiny_models(), cfg);
+        let h = srv.handle();
+        let toks: Vec<u16> = (0..8).collect();
+        let r = h.classify("sst2", toks).unwrap();
+        assert!(r.latency < Duration::from_millis(500));
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,185 @@
+//! Whole-matrix-engine area model (paper Fig. 7a).
+//!
+//! An engine is the `R×C` PE grid plus the peripherals that both designs
+//! share unchanged: the triangular input-skew / output-deskew register
+//! files, the per-column south-edge rounding units (rounding — and the one
+//! *accurate* normalizer it needs — happens once per column, paper §II),
+//! input/output line buffers and the control FSM.  Approximate
+//! normalization only touches the PEs, so the peripherals dilute the
+//! engine-level saving — which is why the paper's Fig. 7 savings grow with
+//! the array size.
+
+use super::gates as g;
+use super::pe_cost::PeArea;
+use crate::arith::approx_norm::ApproxNorm;
+
+/// Engine geometry + buffering parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineGeometry {
+    pub rows: usize,
+    pub cols: usize,
+    /// Depth (entries) of the west/south line buffers per row/column.
+    pub buffer_depth: usize,
+}
+
+impl EngineGeometry {
+    pub fn square(n: usize) -> Self {
+        EngineGeometry { rows: n, cols: n, buffer_depth: 64 }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.rows, self.cols)
+    }
+}
+
+/// The paper evaluates three engine sizes (Fig. 7).
+pub const PAPER_SIZES: [usize; 3] = [8, 16, 32];
+
+/// Area of one south-edge rounding unit: full 16-bit normalizer (LZC +
+/// barrel shifter), RNE incrementer, saturation logic and the output latch.
+pub fn rounding_unit_ge() -> f64 {
+    g::lzc(16) + g::barrel_shifter(16, 15) + g::adder_ripple(16) + g::comparator(9) + g::regs(16)
+}
+
+/// Peripheral area shared by accurate and approximate engines.
+pub fn peripheral_ge(geom: &EngineGeometry) -> f64 {
+    let (r, c) = (geom.rows as f64, geom.cols as f64);
+    // Triangular skew/deskew register files (16-bit operands).
+    let skew_bits = (r * (r - 1.0) / 2.0 + c * (c - 1.0) / 2.0) * 16.0;
+    // Line buffers: FF-based FIFOs on the west and south edges.
+    let buffer_bits = (r + c) * geom.buffer_depth as f64 * 16.0;
+    // Control FSM + weight-load sequencer: fixed + per-row/col decode.
+    let control = 2000.0 + 40.0 * (r + c);
+    g::DFF * skew_bits + 0.30 * g::DFF * buffer_bits /* banked FIFO density */
+        + geom.cols as f64 * rounding_unit_ge()
+        + control
+}
+
+/// Engine-level totals for a given PE flavour.
+#[derive(Debug, Clone)]
+pub struct EngineArea {
+    pub label: String,
+    pub geom: EngineGeometry,
+    pub pe_ge: f64,
+    pub pe_norm_ge: f64,
+    pub peripheral_ge: f64,
+}
+
+impl EngineArea {
+    pub fn new(geom: EngineGeometry, pe: &PeArea) -> Self {
+        let n_pe = (geom.rows * geom.cols) as f64;
+        EngineArea {
+            label: format!("{} {}", geom.label(), pe.label),
+            geom,
+            pe_ge: n_pe * pe.total(),
+            pe_norm_ge: n_pe * pe.norm_logic_total(),
+            peripheral_ge: peripheral_ge(&geom),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.pe_ge + self.peripheral_ge
+    }
+}
+
+/// Fig. 7a row: total area saving for one engine size, with the part
+/// attributable purely to the normalization-logic swap split out.
+#[derive(Debug, Clone)]
+pub struct AreaSaving {
+    pub size_label: String,
+    pub accurate_ge: f64,
+    pub approx_ge: f64,
+    /// Total engine-level saving, 0..1.
+    pub total_saving: f64,
+    /// Saving from the normalization-logic delta alone (the paper's
+    /// stacked-bar "contribution of approximate normalization").
+    pub norm_contribution: f64,
+}
+
+pub fn area_saving(geom: EngineGeometry, cfg: ApproxNorm) -> AreaSaving {
+    let acc = EngineArea::new(geom, &PeArea::accurate());
+    let apx = EngineArea::new(geom, &PeArea::approximate(cfg));
+    let norm_delta = acc.pe_norm_ge - apx.pe_norm_ge;
+    AreaSaving {
+        size_label: geom.label(),
+        accurate_ge: acc.total(),
+        approx_ge: apx.total(),
+        total_saving: (acc.total() - apx.total()) / acc.total(),
+        norm_contribution: norm_delta / acc.total(),
+    }
+}
+
+/// The full Fig. 7a sweep for the paper's most accurate config (an-1-2).
+pub fn fig7a(cfg: ApproxNorm) -> Vec<AreaSaving> {
+    PAPER_SIZES.iter().map(|&n| area_saving(EngineGeometry::square(n), cfg)).collect()
+}
+
+pub fn render_fig7a(rows: &[AreaSaving]) -> String {
+    let mut out = String::from(
+        "Fig 7a — engine area savings (approximate vs accurate normalization)\n\
+         size    accurate(GE)  approx(GE)   total-saving   norm-contribution\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<7} {:>12.0} {:>11.0} {:>12.1}% {:>17.1}%\n",
+            r.size_label,
+            r.accurate_ge,
+            r.approx_ge,
+            100.0 * r.total_saving,
+            100.0 * r.norm_contribution
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_in_paper_band() {
+        // Paper Fig. 7a: total area savings in the 14–19 % range.
+        for r in fig7a(ApproxNorm::AN_1_2) {
+            assert!(
+                (0.12..=0.20).contains(&r.total_saving),
+                "{}: {}",
+                r.size_label,
+                r.total_saving
+            );
+        }
+    }
+
+    #[test]
+    fn savings_grow_with_engine_size() {
+        // Peripherals amortize away → bigger arrays save (weakly) more.
+        let rows = fig7a(ApproxNorm::AN_1_2);
+        assert!(rows[0].total_saving <= rows[1].total_saving + 1e-9);
+        assert!(rows[1].total_saving <= rows[2].total_saving + 1e-9);
+    }
+
+    #[test]
+    fn norm_contribution_is_most_of_the_saving() {
+        for r in fig7a(ApproxNorm::AN_1_2) {
+            assert!(r.norm_contribution > 0.5 * r.total_saving);
+            assert!(r.norm_contribution <= r.total_saving + 1e-9);
+        }
+    }
+
+    #[test]
+    fn peripheral_fraction_shrinks_with_size() {
+        let f = |n: usize| {
+            let e = EngineArea::new(EngineGeometry::square(n), &PeArea::accurate());
+            e.peripheral_ge / e.total()
+        };
+        assert!(f(8) > f(16) && f(16) > f(32));
+        assert!(f(8) < 0.35, "peripheral fraction at 8x8 = {}", f(8));
+    }
+
+    #[test]
+    fn render_has_three_rows() {
+        let s = render_fig7a(&fig7a(ApproxNorm::AN_1_2));
+        for n in PAPER_SIZES {
+            assert!(s.contains(&format!("{n}x{n}")));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Gate-equivalent area and activity-based power models — the stand-in for
+//! the paper's 28 nm Cadence synthesis flow (see DESIGN.md substitutions).
+//!
+//! [`gates`] — standard-cell GE primitives; [`pe_cost`] — the per-PE
+//! breakdown of Fig. 4; [`array_cost`] — whole-engine area and the Fig. 7a
+//! savings; [`power`] — the toggle-activity power model and Fig. 7b.
+
+pub mod array_cost;
+pub mod gates;
+pub mod pe_cost;
+pub mod power;
+
+pub use array_cost::{area_saving, fig7a, render_fig7a, AreaSaving, EngineGeometry};
+pub use pe_cost::{pe_area_saving, PeArea};
+pub use power::{fig7b, power_saving, render_fig7b, Activities, PowerSaving};

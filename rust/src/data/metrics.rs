@@ -1,0 +1,104 @@
+//! Evaluation metrics of Table I: Accuracy, F1 score (binary, and macro-F1
+//! for the 3-class MNLI-style tasks) and the Pearson Correlation
+//! Coefficient (STS-B).
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    assert!(!pred.is_empty());
+    let hit = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// F1 of one class treated as "positive".
+pub fn f1_for_class(pred: &[usize], gold: &[usize], pos: usize) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(&p, &g)| p == pos && g == pos).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(&p, &g)| p == pos && g != pos).count() as f64;
+    let fnn = pred.iter().zip(gold).filter(|(&p, &g)| p != pos && g == pos).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fnn);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Binary F1 (positive class = 1) or macro-F1 for `n_classes > 2` — the
+/// paper reports a single F1 column for MNLI too, which we read as macro.
+pub fn f1(pred: &[usize], gold: &[usize], n_classes: usize) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if n_classes <= 2 {
+        f1_for_class(pred, gold, 1)
+    } else {
+        (0..n_classes).map(|c| f1_for_class(pred, gold, c)).sum::<f64>() / n_classes as f64
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[0], &[0]), 1.0);
+    }
+
+    #[test]
+    fn f1_binary_known_value() {
+        // tp=2, fp=1, fn=1 -> P=2/3, R=2/3 -> F1=2/3
+        let pred = [1, 1, 1, 0, 0];
+        let gold = [1, 1, 0, 1, 0];
+        assert!((f1(&pred, &gold, 2) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1(&[1, 0], &[1, 0], 2), 1.0);
+        assert_eq!(f1(&[0, 0], &[1, 1], 2), 0.0);
+    }
+
+    #[test]
+    fn macro_f1_three_class() {
+        let pred = [0, 1, 2, 0, 1, 2];
+        let gold = [0, 1, 2, 0, 1, 2];
+        assert_eq!(f1(&pred, &gold, 3), 1.0);
+        // one class always wrong drops macro-F1 below accuracy of others
+        let pred2 = [0, 1, 0, 0, 1, 0];
+        let m = f1(&pred2, &gold, 3);
+        assert!(m < 1.0 && m > 0.0);
+    }
+
+    #[test]
+    fn pearson_known_values() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert!((pearson(&x, &[2.0, 4.0, 6.0, 8.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &[8.0, 6.0, 4.0, 2.0]) + 1.0).abs() < 1e-12);
+        let r = pearson(&x, &[1.0, 3.0, 2.0, 5.0]);
+        assert!(r > 0.7 && r < 1.0);
+    }
+
+    #[test]
+    fn pearson_constant_input_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic-GLUE data substrate: the task container/loader ([`tasks`])
+//! and the Table I metrics ([`metrics`]).
+
+pub mod metrics;
+pub mod tasks;
+
+pub use tasks::{load_all_tasks, load_task, Task, GLUE_DISPLAY, GLUE_TASKS};

@@ -1,0 +1,230 @@
+//! Synthetic-GLUE task container and loader.
+//!
+//! The build-time trainer (`python/compile/train.py`) generates ten
+//! GLUE-shaped synthetic tasks (see DESIGN.md substitutions), trains one
+//! small encoder per task in FP32, and writes the dev split next to the
+//! weights so the Rust side evaluates the *identical* examples under every
+//! arithmetic mode.
+//!
+//! Format `AMFT` v1, little-endian:
+//! ```text
+//! magic  b"AMFT"
+//! u32    version (=1)
+//! u16    name_len, name (utf-8)
+//! u32    n_classes (1 => regression / PCC task)
+//! u32    seq_len, vocab
+//! u32    n_train, n_dev
+//! u16    tokens[(n_train+n_dev) * seq_len]
+//! f32    labels[n_train+n_dev]
+//! ```
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// The ten GLUE benchmarks of Table I, in the paper's column order.
+pub const GLUE_TASKS: [&str; 10] = [
+    "sst2", "mnli-m", "mnli-mm", "qqp", "qnli", "cola", "mrpc", "rte", "wnli", "stsb",
+];
+
+/// Paper Table I display names, index-matched to [`GLUE_TASKS`].
+pub const GLUE_DISPLAY: [&str; 10] = [
+    "STS-2", "MNLI-m", "MNLI-mm", "QQP", "QNLI", "CoLA", "MRPC", "RTE", "WNLI", "STS-B",
+];
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    /// 1 => regression (PCC metric), 2/3 => classification.
+    pub n_classes: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub train_tokens: Vec<u16>,
+    pub train_labels: Vec<f32>,
+    pub dev_tokens: Vec<u16>,
+    pub dev_labels: Vec<f32>,
+}
+
+impl Task {
+    pub fn is_regression(&self) -> bool {
+        self.n_classes == 1
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    pub fn n_dev(&self) -> usize {
+        self.dev_labels.len()
+    }
+
+    pub fn dev_example(&self, i: usize) -> &[u16] {
+        &self.dev_tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn load(path: &Path) -> Result<Task> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"AMFT" {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        let mut read_u32 = |r: &mut dyn Read| -> Result<u32> {
+            r.read_exact(&mut u32b)?;
+            Ok(u32::from_le_bytes(u32b))
+        };
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported AMFT version {version}");
+        }
+        let mut u16b = [0u8; 2];
+        r.read_exact(&mut u16b)?;
+        let name_len = u16::from_le_bytes(u16b) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let n_classes = read_u32(&mut r)? as usize;
+        let seq_len = read_u32(&mut r)? as usize;
+        let vocab = read_u32(&mut r)? as usize;
+        let n_train = read_u32(&mut r)? as usize;
+        let n_dev = read_u32(&mut r)? as usize;
+        if seq_len == 0 || seq_len > 4096 || n_train + n_dev == 0 {
+            bail!("implausible task header {name} seq={seq_len}");
+        }
+        let n_tok = (n_train + n_dev) * seq_len;
+        let mut tok_bytes = vec![0u8; n_tok * 2];
+        r.read_exact(&mut tok_bytes)?;
+        let tokens: Vec<u16> =
+            tok_bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+        let mut lab_bytes = vec![0u8; (n_train + n_dev) * 4];
+        r.read_exact(&mut lab_bytes)?;
+        let labels: Vec<f32> = lab_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Task {
+            name,
+            n_classes,
+            seq_len,
+            vocab,
+            train_tokens: tokens[..n_train * seq_len].to_vec(),
+            train_labels: labels[..n_train].to_vec(),
+            dev_tokens: tokens[n_train * seq_len..].to_vec(),
+            dev_labels: labels[n_train..].to_vec(),
+        })
+    }
+
+    /// Serialize in the AMFT v1 format (used by tests and the Rust-side
+    /// workload generator).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"AMFT");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
+        b.extend_from_slice(self.name.as_bytes());
+        for v in [
+            self.n_classes as u32,
+            self.seq_len as u32,
+            self.vocab as u32,
+            self.n_train() as u32,
+            self.n_dev() as u32,
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for t in self.train_tokens.iter().chain(&self.dev_tokens) {
+            b.extend_from_slice(&t.to_le_bytes());
+        }
+        for l in self.train_labels.iter().chain(&self.dev_labels) {
+            b.extend_from_slice(&l.to_le_bytes());
+        }
+        b
+    }
+}
+
+/// Locate the artifacts directory (env override → ./artifacts).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("AMFMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load one task by name from `artifacts/tasks/`.
+pub fn load_task(name: &str) -> Result<Task> {
+    Task::load(&artifacts_dir().join("tasks").join(format!("{name}.amft")))
+}
+
+/// Load every Table-I task that exists on disk, in paper order.
+pub fn load_all_tasks() -> Result<Vec<Task>> {
+    let mut out = Vec::new();
+    for name in GLUE_TASKS {
+        out.push(load_task(name).with_context(|| format!("task {name}"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    pub(crate) fn dummy_task(name: &str, n_classes: usize) -> Task {
+        let mut rng = Prng::new(7);
+        let (seq, ntr, ndv) = (8usize, 20usize, 10usize);
+        Task {
+            name: name.into(),
+            n_classes,
+            seq_len: seq,
+            vocab: 32,
+            train_tokens: (0..ntr * seq).map(|_| rng.below(32) as u16).collect(),
+            train_labels: (0..ntr).map(|_| rng.below(n_classes.max(2) as u64) as f32).collect(),
+            dev_tokens: (0..ndv * seq).map(|_| rng.below(32) as u16).collect(),
+            dev_labels: (0..ndv).map(|_| rng.below(n_classes.max(2) as u64) as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_serialization() {
+        let t = dummy_task("qqp", 2);
+        let bytes = t.to_bytes();
+        let dir = std::env::temp_dir().join("amfma_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("qqp.amft");
+        std::fs::write(&p, &bytes).unwrap();
+        let t2 = Task::load(&p).unwrap();
+        assert_eq!(t.name, t2.name);
+        assert_eq!(t.dev_tokens, t2.dev_tokens);
+        assert_eq!(t.train_labels, t2.train_labels);
+        assert_eq!(t.n_dev(), t2.n_dev());
+    }
+
+    #[test]
+    fn regression_flag() {
+        assert!(dummy_task("stsb", 1).is_regression());
+        assert!(!dummy_task("rte", 2).is_regression());
+    }
+
+    #[test]
+    fn dev_example_slicing() {
+        let t = dummy_task("sst2", 2);
+        let e = t.dev_example(3);
+        assert_eq!(e, &t.dev_tokens[24..32]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("amfma_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.amft");
+        std::fs::write(&p, b"WRONGSTUFF").unwrap();
+        assert!(Task::load(&p).is_err());
+    }
+
+    #[test]
+    fn paper_task_lists_aligned() {
+        assert_eq!(GLUE_TASKS.len(), GLUE_DISPLAY.len());
+        assert_eq!(GLUE_TASKS.len(), 10);
+    }
+}

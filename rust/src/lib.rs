@@ -1,0 +1,19 @@
+//! # amfma — Floating-Point Multiply-Add with Approximate Normalization
+//!
+//! A full-system reproduction of *"Floating-Point Multiply-Add with
+//! Approximate Normalization for Low-Cost Matrix Engines"* (Alexandridis,
+//! Peltekis, Filippas, Dimitrakopoulos — CS.AR 2024).
+pub mod arith;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod pe;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod model;
+pub mod prng;
+pub mod runtime;
+pub mod systolic;
+
+pub use arith::{ApproxNorm, ExtFloat, NormMode};

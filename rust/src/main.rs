@@ -1,0 +1,10 @@
+//! `amfma` — the leader binary: CLI entrypoint for every experiment
+//! (Table I, Fig 4/6/7), the serving demo and the array timing model.
+
+fn main() {
+    let args = amfma::config::Args::from_env();
+    if let Err(e) = amfma::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,346 @@
+//! BERT-style transformer encoder for sequence classification, with every
+//! matrix product routed through the simulated matrix engine.
+//!
+//! The numeric boundary mirrors Table I's setup exactly:
+//! * QKV/output projections, attention score & context products, FFN
+//!   matmuls and the classifier head run on the engine (FP32 or bit-exact
+//!   Bfloat16 with accurate/approximate normalization);
+//! * embeddings, layernorm, softmax, GELU and residual adds are FP32.
+//!
+//! Sequences are fixed-length (the synthetic tasks pad with a live filler
+//! token, so no attention mask is needed — documented in DESIGN.md).
+
+use crate::pe::PeStats;
+use crate::systolic::MatrixEngine;
+
+use super::layers::{gelu_inplace, layernorm, linear, softmax_rows};
+use super::tensor::Tensor2;
+use super::weights::Weights;
+
+/// Per-layer instrumentation collected by [`Encoder::forward_traced`]:
+/// aggregate PE stats over every matmul executed inside that layer
+/// (Fig. 6 uses the attention layers' histograms).
+pub type LayerTraces = Vec<PeStats>;
+
+pub struct Encoder<'w> {
+    pub weights: &'w Weights,
+    pub engine: MatrixEngine,
+}
+
+impl<'w> Encoder<'w> {
+    pub fn new(weights: &'w Weights, engine: MatrixEngine) -> Self {
+        Encoder { weights, engine }
+    }
+
+    /// Token + position embedding lookup: `[B, S]` ids → `[B·S, D]`.
+    fn embed(&self, tokens: &[u16], batch: usize, seq: usize) -> Tensor2 {
+        let cfg = &self.weights.config;
+        let tok = self.weights.get("emb.tok").expect("emb.tok");
+        let pos = self.weights.get("emb.pos").expect("emb.pos");
+        let mut x = Tensor2::zeros(batch * seq, cfg.d_model);
+        for b in 0..batch {
+            for s in 0..seq {
+                let id = tokens[b * seq + s] as usize % cfg.vocab;
+                let row = x.row_mut(b * seq + s);
+                for (i, v) in row.iter_mut().enumerate() {
+                    *v = tok.get(id, i) + pos.get(s, i);
+                }
+            }
+        }
+        x
+    }
+
+    /// Multi-head self-attention over `[B·S, D]` hidden states.
+    /// `(b, h)` pairs are simulated in parallel with single-thread engines;
+    /// results are bit-identical to the sequential order.
+    fn attention(&self, x: &Tensor2, layer: usize, batch: usize, seq: usize) -> Tensor2 {
+        let cfg = &self.weights.config;
+        let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let w = self.weights;
+        let q = linear(&self.engine, x, w.get(&format!("layer{layer}.q.w")).unwrap(), Some(w.vec(&format!("layer{layer}.q.b")).unwrap()));
+        let k = linear(&self.engine, x, w.get(&format!("layer{layer}.k.w")).unwrap(), Some(w.vec(&format!("layer{layer}.k.b")).unwrap()));
+        let v = linear(&self.engine, x, w.get(&format!("layer{layer}.v.w")).unwrap(), Some(w.vec(&format!("layer{layer}.v.b")).unwrap()));
+
+        let mut ctx = Tensor2::zeros(batch * seq, d);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut head_engine = self.engine.clone();
+        head_engine.threads = 1;
+
+        // Parallelize across batch items; each worker handles all heads of
+        // its slice of the batch.
+        let n_workers = self.engine.threads.max(1).min(batch.max(1));
+        let chunk = batch.div_ceil(n_workers);
+        std::thread::scope(|scope| {
+            for (wi, ctx_chunk) in ctx.data.chunks_mut(chunk * seq * d).enumerate() {
+                let b0 = wi * chunk;
+                let (q, k, v) = (&q, &k, &v);
+                let he = &head_engine;
+                scope.spawn(move || {
+                    let rows_here = ctx_chunk.len() / d;
+                    for db in 0..rows_here / seq {
+                        let b = b0 + db;
+                        for hh in 0..h {
+                            // Slice Q/K/V for (b, hh): [S, dh]
+                            let mut qb = Tensor2::zeros(seq, dh);
+                            let mut kb = Tensor2::zeros(seq, dh);
+                            let mut vb = Tensor2::zeros(seq, dh);
+                            for s in 0..seq {
+                                let r = b * seq + s;
+                                qb.row_mut(s).copy_from_slice(&q.row(r)[hh * dh..(hh + 1) * dh]);
+                                kb.row_mut(s).copy_from_slice(&k.row(r)[hh * dh..(hh + 1) * dh]);
+                                vb.row_mut(s).copy_from_slice(&v.row(r)[hh * dh..(hh + 1) * dh]);
+                            }
+                            // scores = (Q · Kᵀ) * scale  — engine matmul
+                            let kt = kb.transpose();
+                            let mut scores = Tensor2::from_vec(
+                                seq,
+                                seq,
+                                he.matmul(&qb.data, &kt.data, seq, dh, seq),
+                            );
+                            for val in scores.data.iter_mut() {
+                                *val *= scale;
+                            }
+                            softmax_rows(&mut scores);
+                            // ctx = P · V — engine matmul
+                            let cb = he.matmul(&scores.data, &vb.data, seq, seq, dh);
+                            for s in 0..seq {
+                                let dst = &mut ctx_chunk
+                                    [(db * seq + s) * d + hh * dh..(db * seq + s) * d + (hh + 1) * dh];
+                                dst.copy_from_slice(&cb[s * dh..(s + 1) * dh]);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        linear(
+            &self.engine,
+            &ctx,
+            w.get(&format!("layer{layer}.o.w")).unwrap(),
+            Some(w.vec(&format!("layer{layer}.o.b")).unwrap()),
+        )
+    }
+
+    fn ffn(&self, x: &Tensor2, layer: usize) -> Tensor2 {
+        let w = self.weights;
+        let mut hmid = linear(
+            &self.engine,
+            x,
+            w.get(&format!("layer{layer}.ff1.w")).unwrap(),
+            Some(w.vec(&format!("layer{layer}.ff1.b")).unwrap()),
+        );
+        gelu_inplace(&mut hmid);
+        linear(
+            &self.engine,
+            &hmid,
+            w.get(&format!("layer{layer}.ff2.w")).unwrap(),
+            Some(w.vec(&format!("layer{layer}.ff2.b")).unwrap()),
+        )
+    }
+
+    /// Full forward pass: `[B, S]` token ids → `[B, n_classes]` logits
+    /// (or `[B, 1]` regression scores).
+    pub fn forward(&self, tokens: &[u16], batch: usize) -> Tensor2 {
+        let cfg = &self.weights.config;
+        let seq = cfg.max_seq;
+        assert_eq!(tokens.len(), batch * seq, "token shape");
+        let mut x = self.embed(tokens, batch, seq);
+        for l in 0..cfg.n_layers {
+            // post-LN residual blocks, as in BERT
+            let att = self.attention(&x, l, batch, seq);
+            x.add_assign(&att);
+            layernorm(
+                &mut x,
+                self.weights.vec(&format!("layer{l}.ln1.g")).unwrap(),
+                self.weights.vec(&format!("layer{l}.ln1.b")).unwrap(),
+                1e-5,
+            );
+            let ff = self.ffn(&x, l);
+            x.add_assign(&ff);
+            layernorm(
+                &mut x,
+                self.weights.vec(&format!("layer{l}.ln2.g")).unwrap(),
+                self.weights.vec(&format!("layer{l}.ln2.b")).unwrap(),
+                1e-5,
+            );
+        }
+        // CLS (first token) pooling + classifier head on the engine.
+        let mut pooled = Tensor2::zeros(batch, cfg.d_model);
+        for b in 0..batch {
+            pooled.row_mut(b).copy_from_slice(x.row(b * seq));
+        }
+        linear(
+            &self.engine,
+            &pooled,
+            self.weights.get("head.w").unwrap(),
+            Some(self.weights.vec("head.b").unwrap()),
+        )
+    }
+
+    /// Forward pass with per-layer PE instrumentation (sequential, slow —
+    /// used by the Fig. 6 collection pass over a handful of examples).
+    /// Returns `(logits, per-layer attention-matmul stats)`.
+    pub fn forward_traced(&self, tokens: &[u16], batch: usize) -> (Tensor2, LayerTraces) {
+        let cfg = &self.weights.config;
+        let seq = cfg.max_seq;
+        let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let w = self.weights;
+        let mut x = self.embed(tokens, batch, seq);
+        let mut traces: LayerTraces = Vec::with_capacity(cfg.n_layers);
+
+        let traced_mm = |x: &Tensor2, wt: &Tensor2, stats: &mut PeStats| -> Tensor2 {
+            let (y, st) = self.engine.matmul_traced(&x.data, &wt.data, x.rows, x.cols, wt.cols);
+            stats.merge(&st);
+            Tensor2::from_vec(x.rows, wt.cols, y)
+        };
+
+        for l in 0..cfg.n_layers {
+            let mut st = PeStats::default();
+            // QKV projections (traced)
+            let mut q = traced_mm(&x, w.get(&format!("layer{l}.q.w")).unwrap(), &mut st);
+            q.add_bias(w.vec(&format!("layer{l}.q.b")).unwrap());
+            let mut k = traced_mm(&x, w.get(&format!("layer{l}.k.w")).unwrap(), &mut st);
+            k.add_bias(w.vec(&format!("layer{l}.k.b")).unwrap());
+            let mut v = traced_mm(&x, w.get(&format!("layer{l}.v.w")).unwrap(), &mut st);
+            v.add_bias(w.vec(&format!("layer{l}.v.b")).unwrap());
+
+            let mut ctx = Tensor2::zeros(batch * seq, d);
+            let scale = 1.0 / (dh as f32).sqrt();
+            for b in 0..batch {
+                for hh in 0..h {
+                    let mut qb = Tensor2::zeros(seq, dh);
+                    let mut kb = Tensor2::zeros(seq, dh);
+                    let mut vb = Tensor2::zeros(seq, dh);
+                    for s in 0..seq {
+                        let r = b * seq + s;
+                        qb.row_mut(s).copy_from_slice(&q.row(r)[hh * dh..(hh + 1) * dh]);
+                        kb.row_mut(s).copy_from_slice(&k.row(r)[hh * dh..(hh + 1) * dh]);
+                        vb.row_mut(s).copy_from_slice(&v.row(r)[hh * dh..(hh + 1) * dh]);
+                    }
+                    let kt = kb.transpose();
+                    let mut scores = traced_mm(&qb, &kt, &mut st);
+                    for val in scores.data.iter_mut() {
+                        *val *= scale;
+                    }
+                    softmax_rows(&mut scores);
+                    let cb = traced_mm(&scores, &vb, &mut st);
+                    for s in 0..seq {
+                        ctx.row_mut(b * seq + s)[hh * dh..(hh + 1) * dh]
+                            .copy_from_slice(cb.row(s));
+                    }
+                }
+            }
+            let mut att = traced_mm(&ctx, w.get(&format!("layer{l}.o.w")).unwrap(), &mut st);
+            att.add_bias(w.vec(&format!("layer{l}.o.b")).unwrap());
+            x.add_assign(&att);
+            layernorm(
+                &mut x,
+                w.vec(&format!("layer{l}.ln1.g")).unwrap(),
+                w.vec(&format!("layer{l}.ln1.b")).unwrap(),
+                1e-5,
+            );
+            let ff = self.ffn(&x, l);
+            x.add_assign(&ff);
+            layernorm(
+                &mut x,
+                w.vec(&format!("layer{l}.ln2.g")).unwrap(),
+                w.vec(&format!("layer{l}.ln2.b")).unwrap(),
+                1e-5,
+            );
+            traces.push(st);
+        }
+        let mut pooled = Tensor2::zeros(batch, cfg.d_model);
+        for b in 0..batch {
+            pooled.row_mut(b).copy_from_slice(x.row(b * seq));
+        }
+        let logits = linear(
+            &self.engine,
+            &pooled,
+            w.get("head.w").unwrap(),
+            Some(w.vec("head.b").unwrap()),
+        );
+        (logits, traces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{ModelConfig, Weights};
+    use crate::prng::Prng;
+    use crate::systolic::EngineMode;
+    use crate::NormMode;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 16, n_heads: 2, d_ff: 32, n_layers: 2, max_seq: 8, n_classes: 3 }
+    }
+
+    fn tokens(rng: &mut Prng, batch: usize, seq: usize, vocab: usize) -> Vec<u16> {
+        (0..batch * seq).map(|_| rng.below(vocab as u64) as u16).collect()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let w = Weights::random(cfg(), 3);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Fp32));
+        let mut rng = Prng::new(4);
+        let t = tokens(&mut rng, 5, 8, 32);
+        let y = enc.forward(&t, 5);
+        assert_eq!((y.rows, y.cols), (5, 3));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_deterministic_across_thread_counts() {
+        let w = Weights::random(cfg(), 5);
+        let mut rng = Prng::new(6);
+        let t = tokens(&mut rng, 4, 8, 32);
+        let mut e1 = MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate));
+        e1.threads = 1;
+        let mut e8 = e1.clone();
+        e8.threads = 8;
+        let y1 = Encoder::new(&w, e1).forward(&t, 4);
+        let y8 = Encoder::new(&w, e8).forward(&t, 4);
+        assert_eq!(y1.data, y8.data);
+    }
+
+    #[test]
+    fn bf16_close_to_fp32() {
+        let w = Weights::random(cfg(), 7);
+        let mut rng = Prng::new(8);
+        let t = tokens(&mut rng, 3, 8, 32);
+        let y32 = Encoder::new(&w, MatrixEngine::new(EngineMode::Fp32)).forward(&t, 3);
+        let y16 = Encoder::new(&w, MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)))
+            .forward(&t, 3);
+        let d = y32.max_abs_diff(&y16);
+        let scale = y32.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-3);
+        assert!(d / scale < 0.2, "relative logit divergence {d} / {scale}");
+    }
+
+    #[test]
+    fn traced_forward_matches_untraced_and_collects() {
+        let w = Weights::random(cfg(), 9);
+        let mut rng = Prng::new(10);
+        let t = tokens(&mut rng, 2, 8, 32);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)));
+        let y = enc.forward(&t, 2);
+        let (yt, traces) = enc.forward_traced(&t, 2);
+        assert_eq!(y.data, yt.data);
+        assert_eq!(traces.len(), 2);
+        assert!(traces[0].shifts.total() > 0);
+    }
+
+    #[test]
+    fn batch_of_one_equals_batched_row() {
+        let w = Weights::random(cfg(), 11);
+        let mut rng = Prng::new(12);
+        let t = tokens(&mut rng, 3, 8, 32);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)));
+        let y = enc.forward(&t, 3);
+        let y1 = enc.forward(&t[8..16], 1);
+        for c in 0..3 {
+            assert_eq!(y.get(1, c), y1.get(0, c), "batch invariance");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! FP32 element-wise layers (layernorm, softmax, GELU) and the
+//! engine-backed linear layer.
+//!
+//! The numeric boundary is exactly the paper's: matrix products run on the
+//! (simulated) reduced-precision matrix engine; everything around them —
+//! bias adds, activation functions, normalizations — stays in FP32.
+
+use crate::systolic::MatrixEngine;
+
+use super::tensor::Tensor2;
+
+/// `y = x · W + b` with the product on the matrix engine.
+pub fn linear(engine: &MatrixEngine, x: &Tensor2, w: &Tensor2, b: Option<&[f32]>) -> Tensor2 {
+    assert_eq!(x.cols, w.rows, "linear: inner dim");
+    let y = engine.matmul(&x.data, &w.data, x.rows, x.cols, w.cols);
+    let mut y = Tensor2::from_vec(x.rows, w.cols, y);
+    if let Some(b) = b {
+        y.add_bias(b);
+    }
+    y
+}
+
+/// Row-wise layer normalization with learned scale/shift (FP32).
+pub fn layernorm(x: &mut Tensor2, gamma: &[f32], beta: &[f32], eps: f32) {
+    assert_eq!(gamma.len(), x.cols);
+    assert_eq!(beta.len(), x.cols);
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let n = row.len() as f32;
+        let mean: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+}
+
+/// Numerically stable row-wise softmax (FP32).
+pub fn softmax_rows(x: &mut Tensor2) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// GELU (tanh approximation, as used by BERT).
+#[inline]
+pub fn gelu(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+}
+
+pub fn gelu_inplace(x: &mut Tensor2) {
+    for v in x.data.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// tanh for the pooler head.
+pub fn tanh_inplace(x: &mut Tensor2) {
+    for v in x.data.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::EngineMode;
+
+    #[test]
+    fn linear_fp32_identity() {
+        let engine = MatrixEngine::new(EngineMode::Fp32);
+        let x = Tensor2::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let w = Tensor2::from_vec(2, 2, vec![1., 0., 0., 1.]);
+        let y = linear(&engine, &x, &w, Some(&[10.0, 20.0]));
+        assert_eq!(y.data, vec![11., 22., 13., 24.]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut x = Tensor2::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layernorm(&mut x, &g, &b, 1e-5);
+        let mean: f32 = x.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.data.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_stable() {
+        let mut x = Tensor2::from_vec(2, 3, vec![1e4, 1e4, 1e4, 0.0, 1.0, 2.0]);
+        softmax_rows(&mut x);
+        for r in 0..2 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!((x.get(0, 0) - 1.0 / 3.0).abs() < 1e-6); // huge but equal
+        assert!(x.get(1, 2) > x.get(1, 1));
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // large |v|: approaches identity / zero
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+}

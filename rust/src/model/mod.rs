@@ -1,0 +1,18 @@
+//! BERT-style transformer inference on the simulated matrix engine.
+//!
+//! [`tensor`] — minimal f32 tensors; [`layers`] — FP32 element-wise ops +
+//! the engine-backed linear layer; [`encoder`] — the multi-head
+//! self-attention encoder with CLS-pooled classification head;
+//! [`weights`] — the AMFW weights container written by the build-time
+//! trainer; [`eval`] — the Table I evaluation harness.
+
+pub mod encoder;
+pub mod eval;
+pub mod layers;
+pub mod tensor;
+pub mod weights;
+
+pub use encoder::Encoder;
+pub use eval::{evaluate_task, paper_modes, render_table1, run_table1, EvalResult};
+pub use tensor::Tensor2;
+pub use weights::{ModelConfig, Weights};

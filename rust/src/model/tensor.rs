@@ -1,0 +1,145 @@
+//! Minimal row-major 2-D f32 tensor used by the inference engine.
+//!
+//! Deliberately tiny: the heavy lifting is done by the simulated matrix
+//! engine ([`crate::systolic::MatrixEngine`]); everything else (layernorm,
+//! softmax, GELU, bias adds) is element-wise FP32 host math, exactly the
+//! paper's setup ("activation functions are computed in FP32").
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Transpose (used for Kᵀ in attention).
+    pub fn transpose(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Copy a contiguous column block `[col0, col0+width)` of every row.
+    pub fn col_block(&self, col0: usize, width: usize) -> Tensor2 {
+        assert!(col0 + width <= self.cols);
+        let mut out = Tensor2::zeros(self.rows, width);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[col0..col0 + width]);
+        }
+        out
+    }
+
+    /// Write a block back into a column range.
+    pub fn set_col_block(&mut self, col0: usize, block: &Tensor2) {
+        assert_eq!(block.rows, self.rows);
+        assert!(col0 + block.cols <= self.cols);
+        for r in 0..self.rows {
+            let w = block.cols;
+            self.row_mut(r)[col0..col0 + w].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Row slice view as a new tensor (rows `[r0, r0+n)`).
+    pub fn row_block(&self, r0: usize, n: usize) -> Tensor2 {
+        assert!(r0 + n <= self.rows);
+        Tensor2::from_vec(n, self.cols, self.data[r0 * self.cols..(r0 + n) * self.cols].to_vec())
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor2) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Broadcast-add a bias row to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (v, b) in self.row_mut(r).iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor2::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+        assert_eq!(t.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn col_block_roundtrip() {
+        let t = Tensor2::from_vec(2, 4, (0..8).map(|x| x as f32).collect());
+        let b = t.col_block(1, 2);
+        assert_eq!(b.data, vec![1., 2., 5., 6.]);
+        let mut t2 = Tensor2::zeros(2, 4);
+        t2.set_col_block(1, &b);
+        assert_eq!(t2.get(1, 2), 6.0);
+        assert_eq!(t2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut t = Tensor2::zeros(3, 2);
+        t.add_bias(&[1.0, -1.0]);
+        assert_eq!(t.row(2), &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn row_block_views() {
+        let t = Tensor2::from_vec(3, 2, vec![0., 1., 2., 3., 4., 5.]);
+        let b = t.row_block(1, 2);
+        assert_eq!(b.data, vec![2., 3., 4., 5.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor2::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,247 @@
+//! Binary weights container (`artifacts/weights/<task>.amfw`).
+//!
+//! Written once by the build-time trainer (`python/compile/train.py`),
+//! loaded here at runtime — Python never runs on the request path.
+//!
+//! Format `AMFW` v1, little-endian:
+//! ```text
+//! magic  b"AMFW"
+//! u32    version (=1)
+//! u32    vocab, d_model, n_heads, d_ff, n_layers, max_seq, n_classes
+//! u32    n_tensors
+//! repeat n_tensors:
+//!   u16  name_len,  name (utf-8)
+//!   u8   ndim,  u32 dims[ndim]
+//!   f32  data[prod(dims)]   (row-major)
+//! ```
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor2;
+
+/// Model hyper-parameters, as recorded in the weights file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub n_classes: usize, // 1 => regression head
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * (d * d + d) + (d * self.d_ff + self.d_ff) + (self.d_ff * d + d) + 4 * d;
+        self.vocab * d + self.max_seq * d + self.n_layers * per_layer + d * self.n_classes
+            + self.n_classes
+    }
+}
+
+/// A parsed weights file: config + named tensors.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub config: ModelConfig,
+    tensors: HashMap<String, Tensor2>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"AMFW" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported AMFW version {version}");
+        }
+        let config = ModelConfig {
+            vocab: read_u32(&mut r)? as usize,
+            d_model: read_u32(&mut r)? as usize,
+            n_heads: read_u32(&mut r)? as usize,
+            d_ff: read_u32(&mut r)? as usize,
+            n_layers: read_u32(&mut r)? as usize,
+            max_seq: read_u32(&mut r)? as usize,
+            n_classes: read_u32(&mut r)? as usize,
+        };
+        if config.d_model == 0 || config.n_heads == 0 || config.d_model % config.n_heads != 0 {
+            bail!("invalid config {config:?}");
+        }
+        let n_tensors = read_u32(&mut r)? as usize;
+        let mut tensors = HashMap::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name utf8")?;
+            let mut ndim = [0u8; 1];
+            r.read_exact(&mut ndim)?;
+            let ndim = ndim[0] as usize;
+            if !(1..=2).contains(&ndim) {
+                bail!("tensor {name}: ndim {ndim} unsupported");
+            }
+            let mut dims = [1usize; 2];
+            for d in dims.iter_mut().take(ndim) {
+                *d = read_u32(&mut r)? as usize;
+            }
+            let (rows, cols) = if ndim == 1 { (1, dims[0]) } else { (dims[0], dims[1]) };
+            let n = rows * cols;
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf).with_context(|| format!("tensor {name} data"))?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, Tensor2::from_vec(rows, cols, data));
+        }
+        Ok(Weights { config, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor2> {
+        self.tensors.get(name).with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn vec(&self, name: &str) -> Result<&[f32]> {
+        Ok(&self.get(name)?.data)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Synthesize random weights (tests / benches that need no artifacts).
+    pub fn random(config: ModelConfig, seed: u64) -> Weights {
+        let mut rng = crate::prng::Prng::new(seed);
+        let mut tensors = HashMap::new();
+        let d = config.d_model;
+        let scale = |fan_in: usize| (1.0 / fan_in as f64).sqrt();
+        fn mk(
+            tensors: &mut HashMap<String, Tensor2>,
+            name: String,
+            rows: usize,
+            cols: usize,
+            sd: f64,
+            rng: &mut crate::prng::Prng,
+        ) {
+            let data: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * sd) as f32).collect();
+            tensors.insert(name, Tensor2::from_vec(rows, cols, data));
+        }
+        mk(&mut tensors, "emb.tok".into(), config.vocab, d, 0.02, &mut rng);
+        mk(&mut tensors, "emb.pos".into(), config.max_seq, d, 0.02, &mut rng);
+        for l in 0..config.n_layers {
+            for nm in ["q", "k", "v", "o"] {
+                mk(&mut tensors, format!("layer{l}.{nm}.w"), d, d, scale(d), &mut rng);
+                mk(&mut tensors, format!("layer{l}.{nm}.b"), 1, d, 0.0, &mut rng);
+            }
+            mk(&mut tensors, format!("layer{l}.ff1.w"), d, config.d_ff, scale(d), &mut rng);
+            mk(&mut tensors, format!("layer{l}.ff1.b"), 1, config.d_ff, 0.0, &mut rng);
+            mk(&mut tensors, format!("layer{l}.ff2.w"), config.d_ff, d, scale(config.d_ff), &mut rng);
+            mk(&mut tensors, format!("layer{l}.ff2.b"), 1, d, 0.0, &mut rng);
+            for nm in ["ln1", "ln2"] {
+                tensors.insert(
+                    format!("layer{l}.{nm}.g"),
+                    Tensor2::from_vec(1, d, vec![1.0; d]),
+                );
+                tensors.insert(
+                    format!("layer{l}.{nm}.b"),
+                    Tensor2::from_vec(1, d, vec![0.0; d]),
+                );
+            }
+        }
+        mk(&mut tensors, "head.w".into(), d, config.n_classes, scale(d), &mut rng);
+        mk(&mut tensors, "head.b".into(), 1, config.n_classes, 0.0, &mut rng);
+        Weights { config, tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_config() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 16, n_heads: 2, d_ff: 32, n_layers: 2, max_seq: 8, n_classes: 2 }
+    }
+
+    #[test]
+    fn random_weights_complete() {
+        let w = Weights::random(tiny_config(), 1);
+        assert!(w.get("emb.tok").is_ok());
+        assert!(w.get("layer1.ff2.w").is_ok());
+        assert!(w.get("head.b").is_ok());
+        assert!(w.get("layer2.q.w").is_err()); // only 2 layers: 0, 1
+        assert_eq!(w.get("layer0.q.w").unwrap().rows, 16);
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let c = tiny_config();
+        let w = Weights::random(c, 2);
+        let total: usize = w.names().iter().map(|n| w.get(n).unwrap().data.len()).sum();
+        // ln tensors counted in formula as 4*d per layer
+        assert_eq!(total, c.param_count());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("amfma_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.amfw");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(Weights::load(&p).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_writer() {
+        // Write a file in the AMFW format by hand and load it back.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"AMFW");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        for v in [32u32, 16, 2, 32, 1, 8, 2] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        let name = b"emb.tok";
+        buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.push(2);
+        buf.extend_from_slice(&32u32.to_le_bytes());
+        buf.extend_from_slice(&16u32.to_le_bytes());
+        for i in 0..32 * 16 {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("amfma_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ok.amfw");
+        std::fs::write(&p, &buf).unwrap();
+        let w = Weights::load(&p).unwrap();
+        assert_eq!(w.config.vocab, 32);
+        assert_eq!(w.get("emb.tok").unwrap().get(1, 0), 16.0);
+    }
+}

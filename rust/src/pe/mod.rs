@@ -1,0 +1,12 @@
+//! Processing-element pipeline model and instrumentation.
+//!
+//! [`pipeline`] models the two-stage PE of paper Fig. 3 at register
+//! granularity (used by the cycle-accurate systolic simulator);
+//! [`stats`] collects the normalization-shift histograms of Fig. 6 and the
+//! per-component toggle activities that drive the power model of Fig. 7.
+
+pub mod pipeline;
+pub mod stats;
+
+pub use pipeline::{pe_cycle, PeRegs};
+pub use stats::{PeStats, ShiftHistogram, ToggleStats};

@@ -1,0 +1,131 @@
+//! The two-stage pipelined processing element (paper Fig. 3).
+//!
+//! Stage 1 latches the west-edge activation and the locally stored weight
+//! (multiply + exponent add/compare happen combinationally before the
+//! inter-stage register); stage 2 performs alignment, addition and
+//! normalization against the north partial sum and latches the south-bound
+//! result.  The activation is simultaneously forwarded east with a
+//! one-cycle latch, giving the classic weight-stationary skew.
+//!
+//! The cycle-accurate systolic simulator ([`crate::systolic::array`])
+//! advances a grid of these registers with two-phase (compute-then-commit)
+//! semantics; the *functional* engine bypasses the registers entirely and
+//! calls [`crate::arith::fma`] in chain order — both produce bit-identical
+//! results, which the integration tests assert.
+
+use crate::arith::{fma, fma_traced, ExtFloat, NormMode};
+
+use super::stats::PeStats;
+
+/// Architectural register state of one PE.
+#[derive(Debug, Clone, Copy)]
+pub struct PeRegs {
+    /// The stationary weight (loaded from the north before streaming).
+    pub weight: u16,
+    /// East-forwarding activation latch.
+    pub a_east: u16,
+    /// Stage-1/2 interface register: the operand pair whose product was
+    /// formed in stage 1 this cycle (we latch the operands; the product is
+    /// a pure function of them, so this is bit-equivalent to latching the
+    /// 16-bit product + exponent fields as the RTL does).
+    pub s1_a: u16,
+    /// Stage-1 latch of the weight operand (constant while stationary, but
+    /// kept explicit so weight reloads mid-stream behave like hardware).
+    pub s1_w: u16,
+    /// South-bound partial-sum output latch.
+    pub c_south: ExtFloat,
+}
+
+impl Default for PeRegs {
+    fn default() -> Self {
+        PeRegs { weight: 0, a_east: 0, s1_a: 0, s1_w: 0, c_south: ExtFloat::ZERO }
+    }
+}
+
+/// Combinational next-state of a PE for one clock: consumes the west
+/// activation and the north partial sum, produces the updated registers.
+/// `stats`, when present, records the stage-2 trace (shift histogram +
+/// toggles) — the traced path is only used by instrumented runs.
+#[inline]
+pub fn pe_cycle(
+    regs: &PeRegs,
+    a_west: u16,
+    c_north: ExtFloat,
+    mode: NormMode,
+    stats: Option<&mut PeStats>,
+) -> PeRegs {
+    let c_new = match stats {
+        None => fma(regs.s1_a, regs.s1_w, c_north, mode),
+        Some(st) => {
+            let (r, t) = fma_traced(regs.s1_a, regs.s1_w, c_north, mode);
+            st.record(regs.s1_a, regs.s1_w, &t);
+            r
+        }
+    };
+    PeRegs {
+        weight: regs.weight,
+        a_east: a_west,
+        s1_a: a_west,
+        s1_w: regs.weight,
+        c_south: c_new,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::column_dot;
+    use crate::prng::Prng;
+
+    /// Drive a single column of chained PEs cycle by cycle and check the
+    /// emerging value equals the functional column reduction.
+    #[test]
+    fn single_column_matches_functional() {
+        let mut rng = Prng::new(42);
+        let k = 8;
+        let a: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+
+        let mut regs: Vec<PeRegs> = w
+            .iter()
+            .map(|&wi| PeRegs { weight: wi, ..Default::default() })
+            .collect();
+
+        // One output row, skewed feed: element a[i] enters row i at cycle i
+        // (latched into the stage-1 register at the end of that cycle, added
+        // during cycle i+1): the wave's result is in row k-1's south latch
+        // at the end of cycle (k-1)+1 = k, i.e. after k+1 iterations.
+        let mut result = ExtFloat::ZERO;
+        for cycle in 0..=k {
+            let mut new = regs.clone();
+            for i in 0..k {
+                let a_in = if cycle == i { a[i] } else { 0 };
+                let c_north = if i == 0 { ExtFloat::ZERO } else { regs[i - 1].c_south };
+                new[i] = pe_cycle(&regs[i], a_in, c_north, NormMode::Accurate, None);
+            }
+            regs = new;
+            result = regs[k - 1].c_south;
+        }
+        let want = column_dot(&a, &w, NormMode::Accurate);
+        assert_eq!(result.round_to_bf16(), want);
+    }
+
+    #[test]
+    fn stats_are_recorded_per_cycle() {
+        let mut st = PeStats::default();
+        let regs = PeRegs { weight: 0x3F80, s1_a: 0x3F80, s1_w: 0x3F80, ..Default::default() };
+        let _ = pe_cycle(&regs, 0x4000, ExtFloat::from_f32(0.5), NormMode::Accurate, Some(&mut st));
+        assert_eq!(st.shifts.total(), 1);
+        assert_eq!(st.toggles.cycles, 1);
+    }
+
+    #[test]
+    fn weight_reload_takes_effect_next_cycle() {
+        let mut regs = PeRegs::default();
+        regs.weight = 0x3F80; // 1.0
+        regs = pe_cycle(&regs, 0x4000, ExtFloat::ZERO, NormMode::Accurate, None); // latch a=2.0,w=1.0
+        regs.weight = 0x4040; // reload 3.0 — the already-latched pair is unaffected
+        regs = pe_cycle(&regs, 0, ExtFloat::ZERO, NormMode::Accurate, None);
+        assert_eq!(regs.c_south.to_f64(), 2.0); // 2.0 * 1.0, not * 3.0
+    }
+}

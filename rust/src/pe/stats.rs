@@ -1,0 +1,266 @@
+//! Instrumentation sinks: normalization-shift histograms (paper Fig. 6) and
+//! per-component toggle counts feeding the activity-based power model
+//! (paper §IV.B).
+
+use crate::arith::FmaTrace;
+
+/// Histogram of the normalization shifts the *accurate* datapath needs.
+/// Index semantics: `right[r]` counts right shifts by `r+1`; `left[l]`
+/// counts left shifts by `l+1`; `none` counts already-normalized results.
+#[derive(Debug, Clone, Default)]
+pub struct ShiftHistogram {
+    pub none: u64,
+    pub right: [u64; 4],
+    pub left: [u64; 17],
+    /// Zero / special results that bypass normalization.
+    pub degenerate: u64,
+}
+
+impl ShiftHistogram {
+    pub fn record(&mut self, t: &FmaTrace) {
+        if t.degenerate || t.raw_sum == 0 {
+            self.degenerate += 1;
+            return;
+        }
+        match t.needed_shift {
+            0 => self.none += 1,
+            s if s > 0 => self.right[(s as usize - 1).min(3)] += 1,
+            s => self.left[((-s) as usize - 1).min(16)] += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.none + self.right.iter().sum::<u64>() + self.left.iter().sum::<u64>() + self.degenerate
+    }
+
+    /// Fraction of operations needing a left shift strictly greater than `n`.
+    pub fn frac_left_gt(&self, n: usize) -> f64 {
+        let t = (self.total() - self.degenerate).max(1) as f64;
+        let big: u64 = self.left.iter().skip(n).sum();
+        big as f64 / t
+    }
+
+    /// Probability mass for shift amount `s` (signed; 0 = none).
+    pub fn prob(&self, s: i32) -> f64 {
+        let t = (self.total() - self.degenerate).max(1) as f64;
+        let c = match s {
+            0 => self.none,
+            s if s > 0 => *self.right.get(s as usize - 1).unwrap_or(&0),
+            s => *self.left.get((-s) as usize - 1).unwrap_or(&0),
+        };
+        c as f64 / t
+    }
+
+    pub fn merge(&mut self, other: &ShiftHistogram) {
+        self.none += other.none;
+        self.degenerate += other.degenerate;
+        for i in 0..self.right.len() {
+            self.right[i] += other.right[i];
+        }
+        for i in 0..self.left.len() {
+            self.left[i] += other.left[i];
+        }
+    }
+
+    /// Render the Fig.-6-style table: one row per shift amount with its
+    /// percentage.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("shift    frequency\n");
+        for r in (1..=2).rev() {
+            out.push_str(&format!("R{r:<7} {:>8.4}%\n", 100.0 * self.prob(r)));
+        }
+        out.push_str(&format!("0        {:>8.4}%\n", 100.0 * self.prob(0)));
+        for l in 1..=16 {
+            out.push_str(&format!("L{l:<7} {:>8.4}%\n", 100.0 * self.prob(-l)));
+        }
+        out
+    }
+}
+
+/// Per-component switching activity, accumulated as average Hamming distance
+/// between consecutive values seen on each signal group.  Dynamic power is
+/// `Σ_i C_i · α_i · V² · f`; the cost model multiplies these activities by
+/// the per-component gate capacitance proxies.
+#[derive(Debug, Clone, Default)]
+pub struct ToggleStats {
+    pub cycles: u64,
+    pub mult_in: Accum,
+    pub mult_out: Accum,
+    pub align_out: Accum,
+    pub adder_out: Accum,
+    pub norm_out: Accum,
+    pub exp_logic: Accum,
+    /// Shift-select control lines (LZA output or OR-tree outputs).
+    pub norm_ctrl: Accum,
+}
+
+/// Running average of Hamming distance on a signal group.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    prev: u32,
+    pub toggles: u64,
+    pub samples: u64,
+}
+
+impl Accum {
+    #[inline]
+    pub fn push(&mut self, v: u32) {
+        self.toggles += (v ^ self.prev).count_ones() as u64;
+        self.prev = v;
+        self.samples += 1;
+    }
+
+    /// Mean toggles per sample (per-cycle switching activity).
+    pub fn rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.toggles as f64 / self.samples as f64
+        }
+    }
+}
+
+impl ToggleStats {
+    pub fn record(&mut self, a: u16, b: u16, t: &FmaTrace) {
+        self.cycles += 1;
+        self.mult_in.push(((a as u32) << 16) | b as u32);
+        self.mult_out.push(t.aligned_p);
+        self.align_out.push(t.aligned_c);
+        self.adder_out.push(t.raw_sum);
+        let shifted = if t.applied_shift >= 0 {
+            t.raw_sum >> t.applied_shift.min(31)
+        } else {
+            t.raw_sum << (-t.applied_shift).min(31)
+        };
+        self.norm_out.push(shifted);
+        self.exp_logic.push(t.exp_diff.unsigned_abs());
+        self.norm_ctrl.push(t.applied_shift.unsigned_abs());
+    }
+
+    pub fn merge(&mut self, o: &ToggleStats) {
+        self.cycles += o.cycles;
+        for (a, b) in [
+            (&mut self.mult_in, &o.mult_in),
+            (&mut self.mult_out, &o.mult_out),
+            (&mut self.align_out, &o.align_out),
+            (&mut self.adder_out, &o.adder_out),
+            (&mut self.norm_out, &o.norm_out),
+            (&mut self.exp_logic, &o.exp_logic),
+            (&mut self.norm_ctrl, &o.norm_ctrl),
+        ] {
+            a.toggles += b.toggles;
+            a.samples += b.samples;
+        }
+    }
+}
+
+/// Everything a traced run can collect.
+#[derive(Debug, Clone, Default)]
+pub struct PeStats {
+    pub shifts: ShiftHistogram,
+    pub toggles: ToggleStats,
+}
+
+impl PeStats {
+    pub fn record(&mut self, a: u16, b: u16, t: &FmaTrace) {
+        self.shifts.record(t);
+        self.toggles.record(a, b, t);
+    }
+
+    pub fn merge(&mut self, o: &PeStats) {
+        self.shifts.merge(&o.shifts);
+        self.toggles.merge(&o.toggles);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{fma_traced, ExtFloat, NormMode};
+    use crate::prng::Prng;
+
+    #[test]
+    fn histogram_totals_match_ops() {
+        let mut rng = Prng::new(1);
+        let mut h = ShiftHistogram::default();
+        let n = 10_000;
+        let mut c = ExtFloat::ZERO;
+        for _ in 0..n {
+            let a = rng.bf16_activation();
+            let b = rng.bf16_activation();
+            let (r, t) = fma_traced(a, b, c, NormMode::Accurate);
+            h.record(&t);
+            c = r;
+        }
+        assert_eq!(h.total(), n);
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let mut rng = Prng::new(2);
+        let mut h = ShiftHistogram::default();
+        let mut c = ExtFloat::from_f32(0.5);
+        for _ in 0..20_000 {
+            let (r, t) = fma_traced(rng.bf16_activation(), rng.bf16_activation(), c, NormMode::Accurate);
+            h.record(&t);
+            c = r;
+        }
+        let mut p = h.prob(0);
+        for r in 1..=4 {
+            p += h.prob(r);
+        }
+        for l in 1..=17 {
+            p += h.prob(-l);
+        }
+        assert!((p - 1.0).abs() < 1e-9, "p = {p}");
+    }
+
+    #[test]
+    fn small_shifts_dominate_on_activations() {
+        // The decades-old observation the paper leans on: shifts of 0..3
+        // cover nearly all operations for real-scale data (Fig 6).
+        let mut rng = Prng::new(3);
+        let mut h = ShiftHistogram::default();
+        for _ in 0..2_000 {
+            let mut c = ExtFloat::ZERO;
+            for _ in 0..32 {
+                let (r, t) =
+                    fma_traced(rng.bf16_activation(), rng.bf16_activation(), c, NormMode::Accurate);
+                h.record(&t);
+                c = r;
+            }
+        }
+        assert!(h.frac_left_gt(3) < 0.05, "P(left>3) = {}", h.frac_left_gt(3));
+    }
+
+    #[test]
+    fn toggle_accum_counts_hamming() {
+        let mut a = Accum::default();
+        a.push(0b1010);
+        a.push(0b0101); // 4 bits toggle
+        a.push(0b0101); // 0 toggles
+        assert_eq!(a.toggles, 2 + 4); // first push toggles from 0
+        assert_eq!(a.samples, 3);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut h1 = ShiftHistogram::default();
+        let mut h2 = ShiftHistogram::default();
+        h1.none = 5;
+        h2.none = 7;
+        h2.left[0] = 3;
+        h1.merge(&h2);
+        assert_eq!(h1.none, 12);
+        assert_eq!(h1.left[0], 3);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let h = ShiftHistogram::default();
+        let s = h.render();
+        assert!(s.contains("L16"));
+        assert!(s.contains("R1"));
+    }
+}

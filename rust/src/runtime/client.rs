@@ -1,0 +1,121 @@
+//! PJRT runtime: load AOT-lowered HLO **text** artifacts and execute them
+//! from the Rust hot path.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.  The
+//! interchange format is HLO text, not serialized protos — xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids, while the text parser
+//! reassigns ids (see DESIGN.md and aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT CPU client (one per process is the PJRT model).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+}
+
+/// A compiled module.  All our artifacts are lowered with
+/// `return_tuple=True`, so outputs come back as a 1-tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+/// Host-side input literal description.
+pub enum Arg<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+impl Executable {
+    fn literal(arg: &Arg) -> Result<xla::Literal> {
+        Ok(match arg {
+            Arg::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Arg::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+        })
+    }
+
+    /// Execute and return the first tuple element as f32s.
+    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(Self::literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Default artifact path helper.
+pub fn artifact(name: &str) -> PathBuf {
+    crate::data::tasks::artifacts_dir().join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have(name: &str) -> bool {
+        artifact(name).exists()
+    }
+
+    /// Smoke: compile + run the plain-f32 GEMM artifact and compare with a
+    /// host matmul.  Skips (passes vacuously) when artifacts are absent —
+    /// the integration tests in rust/tests/ require them.
+    #[test]
+    fn pjrt_matmul_fp32_roundtrip() {
+        if !have("matmul_fp32.hlo.txt") {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load(&artifact("matmul_fp32.hlo.txt")).unwrap();
+        let (m, k, n) = (32usize, 64usize, 32usize);
+        let mut rng = crate::prng::Prng::new(5);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let y = exe
+            .run_f32(&[
+                Arg::F32(&x, vec![m as i64, k as i64]),
+                Arg::F32(&w, vec![k as i64, n as i64]),
+            ])
+            .unwrap();
+        assert_eq!(y.len(), m * n);
+        let want = crate::systolic::matmul::matmul_f32(&x, &w, m, k, n, 1);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime wrapper: loads the AOT artifacts (`artifacts/*.hlo.txt`)
+//! produced once at build time by `python/compile/aot.py` and executes them
+//! on the request path.  Python never runs at serving time.
+
+pub mod client;
+
+pub use client::{artifact, Arg, Executable, Runtime};

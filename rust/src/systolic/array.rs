@@ -1,0 +1,204 @@
+//! Cycle-accurate weight-stationary systolic array simulator.
+//!
+//! Advances a `K×N` grid of two-stage PEs ([`crate::pe::pipeline`]) with
+//! two-phase (compute-then-commit) register semantics, feeds the west-edge
+//! skew, samples the de-skewed south edge, and (optionally) records
+//! per-component instrumentation for the Fig. 6 histogram and the power
+//! model.  Its outputs are asserted bit-identical to the functional engine
+//! ([`super::matmul`]) in the integration tests — the functional path is
+//! what the transformer evaluation uses (it is orders of magnitude faster),
+//! the cycle path is what the utilization/latency numbers and the toggle
+//! activities come from.
+
+use crate::arith::{ExtFloat, NormMode};
+use crate::pe::{pe_cycle, PeRegs, PeStats};
+
+use super::dataflow;
+
+/// Cycle-accurate simulator state.
+pub struct CycleArray {
+    pub k_rows: usize,
+    pub n_cols: usize,
+    pub mode: NormMode,
+    regs: Vec<PeRegs>,
+    /// Per-PE instrumentation (allocated only when tracing).
+    stats: Option<Vec<PeStats>>,
+    pub cycles_elapsed: u64,
+}
+
+impl CycleArray {
+    pub fn new(k_rows: usize, n_cols: usize, mode: NormMode, traced: bool) -> Self {
+        assert!(k_rows > 0 && n_cols > 0);
+        CycleArray {
+            k_rows,
+            n_cols,
+            mode,
+            regs: vec![PeRegs::default(); k_rows * n_cols],
+            stats: traced.then(|| vec![PeStats::default(); k_rows * n_cols]),
+            cycles_elapsed: 0,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        row * self.n_cols + col
+    }
+
+    /// Load a `K×N` weight tile (row-major bf16 patterns).  Models the
+    /// north-side pre-load: costs `K` cycles on the clock.
+    pub fn load_weights(&mut self, w: &[u16]) {
+        assert_eq!(w.len(), self.k_rows * self.n_cols);
+        for r in 0..self.k_rows {
+            for c in 0..self.n_cols {
+                let i = self.idx(r, c);
+                self.regs[i].weight = w[i];
+            }
+        }
+        self.cycles_elapsed += dataflow::weight_load_cycles(self.k_rows) as u64;
+    }
+
+    /// Advance one clock.  `west[r]` is the activation presented at the
+    /// west edge of row `r` this cycle (0 bits = bubble).  Returns the
+    /// south-edge extended partial sums latched at the end of this cycle.
+    pub fn step(&mut self, west: &[u16]) -> Vec<ExtFloat> {
+        assert_eq!(west.len(), self.k_rows);
+        let mut new = self.regs.clone();
+        for r in 0..self.k_rows {
+            for c in 0..self.n_cols {
+                let i = self.idx(r, c);
+                let a_in = if c == 0 { west[r] } else { self.regs[self.idx(r, c - 1)].a_east };
+                let c_north =
+                    if r == 0 { ExtFloat::ZERO } else { self.regs[self.idx(r - 1, c)].c_south };
+                let st = self.stats.as_mut().map(|v| &mut v[i]);
+                new[i] = pe_cycle(&self.regs[i], a_in, c_north, self.mode, st);
+            }
+        }
+        self.regs = new;
+        self.cycles_elapsed += 1;
+        (0..self.n_cols).map(|c| self.regs[self.idx(self.k_rows - 1, c)].c_south).collect()
+    }
+
+    /// Stream an `M×K` activation tile through the loaded weights and
+    /// return the `M×N` Bfloat16 result (south-edge rounding included),
+    /// plus the number of streaming cycles consumed.
+    pub fn stream(&mut self, x: &[u16], m_rows: usize) -> (Vec<u16>, u64) {
+        assert_eq!(x.len(), m_rows * self.k_rows);
+        let k = self.k_rows;
+        let n = self.n_cols;
+        let total = dataflow::stream_cycles(m_rows, k, n);
+        let mut out = vec![0u16; m_rows * n];
+        let start = self.cycles_elapsed;
+        for cycle in 0..total {
+            let mut west = vec![0u16; k];
+            for r in 0..k {
+                // wave m enters row r at cycle m + r
+                if cycle >= r {
+                    let m = cycle - r;
+                    if m < m_rows {
+                        west[r] = x[m * k + r];
+                    }
+                }
+            }
+            let south = self.step(&west);
+            // sample de-skewed outputs: wave m, column j valid at end of
+            // cycle m + k + j
+            for j in 0..n {
+                if cycle + 1 >= k + j + 1 {
+                    let m = cycle - k - j + 1;
+                    if m >= 1 && m - 1 < m_rows {
+                        // cycle = m' + k + j  with m' = m - 1
+                        out[(m - 1) * n + j] = south[j].round_to_bf16();
+                    }
+                }
+            }
+        }
+        (out, self.cycles_elapsed - start)
+    }
+
+    /// Merge all per-PE instrumentation into one aggregate.
+    pub fn collect_stats(&self) -> Option<PeStats> {
+        self.stats.as_ref().map(|v| {
+            let mut agg = PeStats::default();
+            for s in v {
+                agg.merge(s);
+            }
+            agg
+        })
+    }
+
+    /// Per-PE stats grid (row-major), for spatial analyses.
+    pub fn stats_grid(&self) -> Option<&[PeStats]> {
+        self.stats.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{column_dot, ApproxNorm};
+    use crate::prng::Prng;
+
+    fn run_case(m: usize, k: usize, n: usize, mode: NormMode, seed: u64) {
+        let mut rng = Prng::new(seed);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<u16> = (0..k * n).map(|_| rng.bf16_activation()).collect();
+        let mut arr = CycleArray::new(k, n, mode, false);
+        arr.load_weights(&w);
+        let (y, cycles) = arr.stream(&x, m);
+        assert_eq!(cycles, dataflow::stream_cycles(m, k, n) as u64);
+        // Bit-exact vs the functional column reduction.
+        for mm in 0..m {
+            for j in 0..n {
+                let a: Vec<u16> = (0..k).map(|i| x[mm * k + i]).collect();
+                let b: Vec<u16> = (0..k).map(|i| w[i * n + j]).collect();
+                let want = column_dot(&a, &b, mode);
+                assert_eq!(
+                    y[mm * n + j],
+                    want,
+                    "m={mm} j={j} ({m}x{k}x{n}, {mode:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_sim_matches_functional_accurate() {
+        run_case(4, 8, 8, NormMode::Accurate, 1);
+        run_case(1, 16, 4, NormMode::Accurate, 2);
+        run_case(7, 3, 5, NormMode::Accurate, 3);
+    }
+
+    #[test]
+    fn cycle_sim_matches_functional_approx() {
+        for cfg in [ApproxNorm::AN_1_1, ApproxNorm::AN_1_2, ApproxNorm::AN_2_2] {
+            run_case(5, 8, 6, NormMode::Approx(cfg), 4);
+        }
+    }
+
+    #[test]
+    fn traced_run_collects_stats() {
+        let mut rng = Prng::new(9);
+        let (m, k, n) = (4, 8, 8);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<u16> = (0..k * n).map(|_| rng.bf16_activation()).collect();
+        let mut arr = CycleArray::new(k, n, NormMode::Accurate, true);
+        arr.load_weights(&w);
+        let _ = arr.stream(&x, m);
+        let st = arr.collect_stats().unwrap();
+        let cycles = dataflow::stream_cycles(m, k, n) as u64;
+        assert_eq!(st.toggles.cycles, cycles * (k * n) as u64);
+        assert_eq!(st.shifts.total(), cycles * (k * n) as u64);
+    }
+
+    #[test]
+    fn single_pe_array() {
+        run_case(3, 1, 1, NormMode::Accurate, 10);
+    }
+
+    #[test]
+    fn weight_load_costs_k_cycles() {
+        let mut arr = CycleArray::new(8, 4, NormMode::Accurate, false);
+        arr.load_weights(&vec![0u16; 32]);
+        assert_eq!(arr.cycles_elapsed, 8);
+    }
+}

@@ -1,0 +1,326 @@
+//! The functional matrix engine — the runtime hot path.
+//!
+//! Semantically identical to streaming tiles through the cycle-accurate
+//! array (asserted in tests and `rust/tests/integration_systolic.rs`), but
+//! evaluated as straight column-chain reductions, parallelized across
+//! output rows with scoped threads.  The engine also *models* the physical
+//! array it stands in for: [`MatrixEngine::cycle_estimate`] reports the
+//! cycle count a `K×N`-PE weight-stationary array would need for the same
+//! GEMM, which the serving metrics and EXPERIMENTS.md use.
+
+use crate::arith::{bf16_to_f32, f32_to_bf16, fma, fma_traced, ExtFloat, NormMode};
+use crate::pe::PeStats;
+
+use super::dataflow;
+
+/// Numeric mode of an engine: the paper's three families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineMode {
+    /// Reference: every matmul in IEEE single precision.
+    Fp32,
+    /// Bfloat16 PEs with the given normalization mode (accurate = the BF16
+    /// baseline, approximate = BF16an-k-λ).
+    Bf16(NormMode),
+}
+
+impl EngineMode {
+    pub fn label(&self) -> String {
+        match self {
+            EngineMode::Fp32 => "fp32".into(),
+            EngineMode::Bf16(NormMode::Accurate) => "bf16".into(),
+            EngineMode::Bf16(NormMode::Approx(cfg)) => format!("bf16{}", cfg.label()),
+        }
+    }
+
+    /// Parse labels like `fp32`, `bf16`, `bf16an-1-2`.
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        if s == "fp32" {
+            return Some(EngineMode::Fp32);
+        }
+        if s == "bf16" {
+            return Some(EngineMode::Bf16(NormMode::Accurate));
+        }
+        let rest = s.strip_prefix("bf16an-")?;
+        let mut it = rest.split('-');
+        let k: u32 = it.next()?.parse().ok()?;
+        let l: u32 = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(EngineMode::Bf16(NormMode::Approx(crate::arith::ApproxNorm::new(k, l))))
+    }
+}
+
+/// A matrix engine instance: numeric mode + the physical array geometry it
+/// models + host-side parallelism for the simulation itself.
+#[derive(Debug, Clone)]
+pub struct MatrixEngine {
+    pub mode: EngineMode,
+    /// Physical PE grid modeled (K rows × N cols), for cycle estimates.
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Host threads used to simulate (does not affect results).
+    pub threads: usize,
+}
+
+impl MatrixEngine {
+    pub fn new(mode: EngineMode) -> Self {
+        MatrixEngine { mode, pe_rows: 16, pe_cols: 16, threads: default_threads() }
+    }
+
+    pub fn with_grid(mode: EngineMode, pe_rows: usize, pe_cols: usize) -> Self {
+        MatrixEngine { mode, pe_rows, pe_cols, threads: default_threads() }
+    }
+
+    /// `Y = X · W` on f32 tensors (row-major).  Bf16 modes convert inputs
+    /// with RNE, run the bit-exact engine and widen the bf16 outputs back
+    /// to f32 — exactly the paper's setup (activations stay FP32 outside
+    /// the engine).
+    pub fn matmul(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), m * k, "x shape");
+        assert_eq!(w.len(), k * n, "w shape");
+        match self.mode {
+            EngineMode::Fp32 => matmul_f32(x, w, m, k, n, self.threads),
+            EngineMode::Bf16(mode) => {
+                let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+                // transpose W to column-major once: column chains become
+                // contiguous (the weight-stationary load order).
+                let wt = transpose_to_bf16(w, k, n);
+                let yb = matmul_bf16_pre(&xb, &wt, m, k, n, mode, self.threads);
+                yb.iter().map(|&b| bf16_to_f32(b)).collect()
+            }
+        }
+    }
+
+    /// As [`matmul`], but returning the aggregate PE instrumentation
+    /// (sequential — used by the Fig. 6 / power-model collection passes).
+    pub fn matmul_traced(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (Vec<f32>, PeStats) {
+        let mode = match self.mode {
+            EngineMode::Fp32 => NormMode::Accurate, // trace the bf16 shadow
+            EngineMode::Bf16(md) => md,
+        };
+        let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+        let wt = transpose_to_bf16(w, k, n);
+        let mut stats = PeStats::default();
+        let mut y = vec![0f32; m * n];
+        for mm in 0..m {
+            for j in 0..n {
+                let mut acc = ExtFloat::ZERO;
+                for i in 0..k {
+                    let (a, b) = (xb[mm * k + i], wt[j * k + i]);
+                    let (r, t) = fma_traced(a, b, acc, mode);
+                    stats.record(a, b, &t);
+                    acc = r;
+                }
+                y[mm * n + j] = acc.round_to_f32();
+            }
+        }
+        (y, stats)
+    }
+
+    /// Cycles a `pe_rows × pe_cols` weight-stationary array needs for this
+    /// GEMM (tiled over K and N, weight reload per tile).
+    pub fn cycle_estimate(&self, m: usize, k: usize, n: usize) -> u64 {
+        let kt = k.div_ceil(self.pe_rows);
+        let nt = n.div_ceil(self.pe_cols);
+        let per_tile = dataflow::weight_load_cycles(self.pe_rows)
+            + dataflow::stream_cycles(m, self.pe_rows, self.pe_cols);
+        (kt * nt * per_tile) as u64
+    }
+
+    /// Useful-MAC utilization for this GEMM on the modeled array.
+    pub fn utilization_estimate(&self, m: usize, k: usize, n: usize) -> f64 {
+        let macs = (m * k * n) as f64;
+        let cycles = self.cycle_estimate(m, k, n) as f64;
+        macs / (cycles * (self.pe_rows * self.pe_cols) as f64)
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Transpose a row-major `k×n` f32 matrix into a column-major bf16 buffer
+/// (`n×k`, row `j` = weight column `j`).
+pub fn transpose_to_bf16(w: &[f32], k: usize, n: usize) -> Vec<u16> {
+    let mut wt = vec![0u16; n * k];
+    for i in 0..k {
+        for j in 0..n {
+            wt[j * k + i] = f32_to_bf16(w[i * n + j]);
+        }
+    }
+    wt
+}
+
+/// FP32 reference GEMM (row-parallel).
+pub fn matmul_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    let chunk = m.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for (ci, ychunk) in y.chunks_mut(chunk * n).enumerate() {
+            let m0 = ci * chunk;
+            s.spawn(move || {
+                for (dm, yrow) in ychunk.chunks_mut(n).enumerate() {
+                    let xrow = &x[(m0 + dm) * k..(m0 + dm + 1) * k];
+                    for j in 0..n {
+                        let mut acc = 0f32;
+                        for i in 0..k {
+                            acc += xrow[i] * w[i * n + j];
+                        }
+                        yrow[j] = acc;
+                    }
+                }
+            });
+        }
+    });
+    y
+}
+
+/// Bit-exact bf16 GEMM over pre-converted operands: `x` row-major `m×k`
+/// bf16 patterns, `wt` **column-major** `n×k` (row `j` = column `j` of W).
+pub fn matmul_bf16_pre(
+    x: &[u16],
+    wt: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    mode: NormMode,
+    threads: usize,
+) -> Vec<u16> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(wt.len(), n * k);
+    let mut y = vec![0u16; m * n];
+    let chunk = m.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for (ci, ychunk) in y.chunks_mut(chunk * n).enumerate() {
+            let m0 = ci * chunk;
+            s.spawn(move || {
+                for (dm, yrow) in ychunk.chunks_mut(n).enumerate() {
+                    let xrow = &x[(m0 + dm) * k..(m0 + dm + 1) * k];
+                    for (out, wcol) in yrow.iter_mut().zip(wt.chunks_exact(k)) {
+                        // zip elides the per-element bounds checks in the
+                        // K-chain — the single hottest loop in the system.
+                        let mut acc = ExtFloat::ZERO;
+                        for (&xi, &wi) in xrow.iter().zip(wcol) {
+                            acc = fma(xi, wi, acc, mode);
+                        }
+                        *out = acc.round_to_bf16();
+                    }
+                }
+            });
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{column_dot, ApproxNorm};
+    use crate::prng::Prng;
+
+    #[test]
+    fn mode_labels_roundtrip() {
+        for s in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+            let m = EngineMode::parse(s).unwrap();
+            assert_eq!(m.label(), s);
+        }
+        assert!(EngineMode::parse("fp64").is_none());
+        assert!(EngineMode::parse("bf16an-1").is_none());
+        assert!(EngineMode::parse("bf16an-1-2-3").is_none());
+    }
+
+    #[test]
+    fn fp32_engine_matches_naive() {
+        let mut rng = Prng::new(21);
+        let (m, k, n) = (5, 7, 3);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let eng = MatrixEngine::new(EngineMode::Fp32);
+        let y = eng.matmul(&x, &w, m, k, n);
+        for mm in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for i in 0..k {
+                    acc += x[mm * k + i] * w[i * n + j];
+                }
+                assert_eq!(y[mm * n + j], acc);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_engine_matches_column_dot() {
+        let mut rng = Prng::new(22);
+        let (m, k, n) = (6, 33, 5);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        for mode in [
+            NormMode::Accurate,
+            NormMode::Approx(ApproxNorm::AN_1_2),
+            NormMode::Approx(ApproxNorm::AN_2_2),
+        ] {
+            let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+            let y = eng.matmul(&x, &w, m, k, n);
+            for mm in 0..m {
+                for j in 0..n {
+                    let a: Vec<u16> = (0..k).map(|i| f32_to_bf16(x[mm * k + i])).collect();
+                    let b: Vec<u16> = (0..k).map(|i| f32_to_bf16(w[i * n + j])).collect();
+                    let want = bf16_to_f32(column_dot(&a, &b, mode));
+                    assert_eq!(y[mm * n + j], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Prng::new(23);
+        let (m, k, n) = (17, 29, 11);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut e1 = MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate));
+        let mut e8 = e1.clone();
+        e1.threads = 1;
+        e8.threads = 8;
+        assert_eq!(e1.matmul(&x, &w, m, k, n), e8.matmul(&x, &w, m, k, n));
+    }
+
+    #[test]
+    fn traced_matches_untraced() {
+        let mut rng = Prng::new(24);
+        let (m, k, n) = (4, 16, 4);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let eng = MatrixEngine::new(EngineMode::Bf16(NormMode::Approx(ApproxNorm::AN_1_1)));
+        let y1 = eng.matmul(&x, &w, m, k, n);
+        let (y2, st) = eng.matmul_traced(&x, &w, m, k, n);
+        assert_eq!(y1, y2);
+        assert_eq!(st.shifts.total(), (m * k * n) as u64);
+    }
+
+    #[test]
+    fn cycle_estimate_scales_with_tiles() {
+        let eng = MatrixEngine::with_grid(EngineMode::Bf16(NormMode::Accurate), 16, 16);
+        let c1 = eng.cycle_estimate(64, 16, 16); // 1 tile
+        let c4 = eng.cycle_estimate(64, 32, 32); // 4 tiles
+        assert_eq!(c4, 4 * c1);
+        assert!(eng.utilization_estimate(4096, 16, 16) > 0.9);
+    }
+
+    #[test]
+    fn bf16_conversion_boundary_is_engine_input() {
+        // Engine must see RNE-converted bf16 operands, not raw f32.
+        let eng = MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate));
+        // 1.003 rounds to 1.0 in bf16 (half mantissa step is 2^-8 ≈ 0.0039)
+        let y = eng.matmul(&[1.003f32], &[1.0f32], 1, 1, 1);
+        assert_eq!(y[0], 1.0);
+    }
+}

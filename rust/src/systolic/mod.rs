@@ -1,0 +1,13 @@
+//! Weight-stationary systolic-array matrix engine (paper Fig. 2).
+//!
+//! [`dataflow`] — the skew/schedule arithmetic; [`array`] — the
+//! cycle-accurate register-level simulator; [`matmul`] — the functional
+//! engine used on the runtime hot path (bit-identical outputs, asserted in
+//! tests), plus the cycle/utilization model of the physical array.
+
+pub mod array;
+pub mod dataflow;
+pub mod matmul;
+
+pub use array::CycleArray;
+pub use matmul::{matmul_bf16_pre, EngineMode, MatrixEngine};

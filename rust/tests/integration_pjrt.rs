@@ -1,0 +1,122 @@
+//! PJRT round-trip integration: the AOT artifacts lowered from JAX/Pallas
+//! must compute the same numbers as the native Rust substrate.
+//!
+//! * `matmul_bf16an-1-2.hlo.txt` (the Pallas kernel with the int32 bit-exact
+//!   emulation) vs `MatrixEngine` — **bit-for-bit**, closing the three-way
+//!   loop python-oracle ↔ jnp/Pallas ↔ rust.
+//! * `model_sst2_fp32.hlo.txt` (encoder with baked trained weights) vs the
+//!   Rust-native FP32 encoder — within FP32 reassociation tolerance.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use amfma::model::{eval::weights_path, Encoder, Weights};
+use amfma::prng::Prng;
+use amfma::runtime::{Arg, Runtime};
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    let p = amfma::data::tasks::artifacts_dir().join(name);
+    p.exists().then_some(p)
+}
+
+#[test]
+fn pallas_kernel_bit_exact_vs_native_engine() {
+    let Some(path) = artifact("matmul_bf16an-1-2.hlo.txt") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+    let (m, k, n) = (32usize, 64usize, 32usize); // aot.py GEMM_SHAPE
+    let mut rng = Prng::new(99);
+    for trial in 0..3 {
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let y_pjrt = exe
+            .run_f32(&[
+                Arg::F32(&x, vec![m as i64, k as i64]),
+                Arg::F32(&w, vec![k as i64, n as i64]),
+            ])
+            .unwrap();
+        let eng = MatrixEngine::new(EngineMode::parse("bf16an-1-2").unwrap());
+        let y_native = eng.matmul(&x, &w, m, k, n);
+        assert_eq!(y_pjrt.len(), y_native.len());
+        for (i, (a, b)) in y_pjrt.iter().zip(&y_native).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "trial {trial} element {i}: pjrt {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_accurate_kernel_bit_exact_too() {
+    let Some(path) = artifact("matmul_bf16.hlo.txt") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+    let (m, k, n) = (32usize, 64usize, 32usize);
+    let mut rng = Prng::new(100);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let y_pjrt = exe
+        .run_f32(&[
+            Arg::F32(&x, vec![m as i64, k as i64]),
+            Arg::F32(&w, vec![k as i64, n as i64]),
+        ])
+        .unwrap();
+    let eng = MatrixEngine::new(EngineMode::parse("bf16").unwrap());
+    let y_native = eng.matmul(&x, &w, m, k, n);
+    for (a, b) in y_pjrt.iter().zip(&y_native) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn aot_model_matches_rust_fp32_encoder() {
+    let Some(path) = artifact("model_sst2_fp32.hlo.txt") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let task = amfma::data::load_task("sst2").unwrap();
+    let weights = Weights::load(&weights_path("sst2")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+
+    let b = 8usize; // aot.py SERVE_BATCH
+    let seq = task.seq_len;
+    let toks_u16 = &task.dev_tokens[..b * seq];
+    let toks_i32: Vec<i32> = toks_u16.iter().map(|&t| t as i32).collect();
+    let logits_pjrt = exe
+        .run_f32(&[Arg::I32(&toks_i32, vec![b as i64, seq as i64])])
+        .unwrap();
+
+    let enc = Encoder::new(&weights, MatrixEngine::new(EngineMode::Fp32));
+    let logits_rust = enc.forward(toks_u16, b);
+    assert_eq!(logits_pjrt.len(), logits_rust.data.len());
+    let scale = logits_rust
+        .data
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()))
+        .max(1.0);
+    for (i, (a, b)) in logits_pjrt.iter().zip(&logits_rust.data).enumerate() {
+        assert!(
+            (a - b).abs() / scale < 5e-3,
+            "logit {i}: pjrt {a} vs rust {b} (scale {scale})"
+        );
+    }
+    // And the *decisions* must agree exactly.
+    for r in 0..b {
+        let row_p = &logits_pjrt[r * 2..r * 2 + 2];
+        let row_r = logits_rust.row(r);
+        assert_eq!(
+            (row_p[0] < row_p[1]),
+            (row_r[0] < row_r[1]),
+            "prediction mismatch on example {r}"
+        );
+    }
+}

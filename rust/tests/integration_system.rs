@@ -1,0 +1,176 @@
+//! Cross-module integration: cycle-accurate array vs functional engine at
+//! scale, engine → encoder composition, eval metrics plumbing, serving
+//! under concurrency, and the Table-I *shape* property on real artifacts.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use amfma::arith::NormMode;
+use amfma::coordinator::{InferenceServer, ServerConfig};
+use amfma::model::{self, Encoder, ModelConfig, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{CycleArray, EngineMode, MatrixEngine};
+use amfma::ApproxNorm;
+
+/// The cycle-accurate simulator and the functional engine must agree
+/// bit-for-bit on a multi-tile GEMM in every mode.
+#[test]
+fn cycle_array_matches_functional_engine_at_scale() {
+    let mut rng = Prng::new(404);
+    let (m, k, n) = (24usize, 16usize, 16usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    for mode in [
+        NormMode::Accurate,
+        NormMode::Approx(ApproxNorm::AN_1_1),
+        NormMode::Approx(ApproxNorm::AN_2_2),
+    ] {
+        let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+        let y_func = eng.matmul(&x, &w, m, k, n);
+
+        let xb: Vec<u16> = x.iter().map(|&v| amfma::arith::f32_to_bf16(v)).collect();
+        let wb: Vec<u16> = w.iter().map(|&v| amfma::arith::f32_to_bf16(v)).collect();
+        let mut arr = CycleArray::new(k, n, mode, false);
+        arr.load_weights(&wb);
+        let (y_bits, _) = arr.stream(&xb, m);
+        let y_cycle: Vec<f32> = y_bits.iter().map(|&b| amfma::arith::bf16_to_f32(b)).collect();
+        assert_eq!(y_func, y_cycle, "mode {mode:?}");
+    }
+}
+
+/// Degradation ordering must hold on a *trained* model (the Table I shape):
+/// logit divergence of an-1-2 << an-2-2, both measured against bf16.
+#[test]
+fn table1_shape_holds_on_artifacts_or_random_model() {
+    let (weights, toks, n) =
+        match (amfma::data::load_task("sst2"), Weights::load(&model::eval::weights_path("sst2"))) {
+            (Ok(task), Ok(w)) => {
+                let n = 24usize.min(task.n_dev());
+                (w, task.dev_tokens[..n * task.seq_len].to_vec(), n)
+            }
+            _ => {
+                let cfg = ModelConfig {
+                    vocab: 96, d_model: 64, n_heads: 4, d_ff: 128,
+                    n_layers: 3, max_seq: 24, n_classes: 2,
+                };
+                let mut rng = Prng::new(5);
+                let toks: Vec<u16> =
+                    (0..24 * 24).map(|_| 4 + rng.below(92) as u16).collect();
+                (Weights::random(cfg, 21), toks, 24)
+            }
+        };
+    let fwd = |mode: &str| {
+        Encoder::new(&weights, MatrixEngine::new(EngineMode::parse(mode).unwrap()))
+            .forward(&toks, n)
+    };
+    let base = fwd("bf16");
+    let d12 = fwd("bf16an-1-2").max_abs_diff(&base) as f64;
+    let d22 = fwd("bf16an-2-2").max_abs_diff(&base) as f64;
+    assert!(
+        d22 > 2.0 * d12.max(1e-6),
+        "an-2-2 divergence ({d22}) should far exceed an-1-2 ({d12})"
+    );
+}
+
+/// Full eval plumbing on real artifacts: metrics exist, are in range, and
+/// fp32 ≈ bf16 on the headline metric.
+#[test]
+fn eval_pipeline_on_artifacts() {
+    let Ok(task) = amfma::data::load_task("sst2") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let weights = Weights::load(&model::eval::weights_path("sst2")).unwrap();
+    let limit = Some(48usize);
+    let r32 = model::evaluate_task(&task, &weights, EngineMode::Fp32, 16, limit);
+    let r16 = model::evaluate_task(
+        &task,
+        &weights,
+        EngineMode::parse("bf16").unwrap(),
+        16,
+        limit,
+    );
+    for r in [&r32, &r16] {
+        let h = r.headline();
+        assert!((0.0..=100.0).contains(&h), "headline {h}");
+        assert!(r.f1.unwrap() >= 0.0 && r.f1.unwrap() <= 1.0);
+    }
+    assert!(
+        (r32.headline() - r16.headline()).abs() <= 10.0,
+        "fp32 {} vs bf16 {} should be close",
+        r32.headline(),
+        r16.headline()
+    );
+}
+
+/// Serving a trained model end to end under concurrency: replies arrive,
+/// predictions match the offline encoder exactly.
+#[test]
+fn serving_matches_offline_inference() {
+    let (weights, task) = match (
+        amfma::data::load_task("sst2"),
+        Weights::load(&model::eval::weights_path("sst2")),
+    ) {
+        (Ok(t), Ok(w)) => (Arc::new(w), t),
+        _ => {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+    };
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let mut models = HashMap::new();
+    models.insert("sst2".to_string(), weights.clone());
+    let srv = InferenceServer::start(models, ServerConfig { mode, ..Default::default() });
+    let h = srv.handle();
+
+    let n = 16usize.min(task.n_dev());
+    let offline = Encoder::new(&weights, MatrixEngine::new(mode))
+        .forward(&task.dev_tokens[..n * task.seq_len], n);
+
+    let replies: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let h = h.clone();
+                let toks = task.dev_example(i).to_vec();
+                s.spawn(move || h.classify("sst2", toks).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    for (i, r) in replies.iter().enumerate() {
+        // Batch composition differs between offline and serving runs, but
+        // the engine is batch-invariant, so logits must be identical bits.
+        assert_eq!(r.logits.as_slice(), offline.row(i), "example {i}");
+    }
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed as usize, n);
+}
+
+/// Fig-6 instrumentation composes with the real model: attention-layer
+/// histograms dominated by small shifts.
+#[test]
+fn fig6_shape_on_trained_model() {
+    let Ok(task) = amfma::data::load_task("sst2") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let weights = Weights::load(&model::eval::weights_path("sst2")).unwrap();
+    let enc = Encoder::new(
+        &weights,
+        MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)),
+    );
+    let n = 2usize;
+    let (_, traces) = enc.forward_traced(&task.dev_tokens[..n * task.seq_len], n);
+    assert_eq!(traces.len(), weights.config.n_layers);
+    let mut all = amfma::pe::ShiftHistogram::default();
+    for t in &traces {
+        all.merge(&t.shifts);
+    }
+    // The paper's observation: 0-3 position shifts cover almost everything.
+    assert!(
+        all.frac_left_gt(3) < 0.08,
+        "P(left>3) = {} too large",
+        all.frac_left_gt(3)
+    );
+    assert!(all.total() > 100_000, "expected substantial op count");
+}

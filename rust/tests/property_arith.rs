@@ -1,0 +1,190 @@
+//! Property tests over the arithmetic substrate — the invariants the
+//! paper's correctness argument rests on, checked at scale with the
+//! deterministic PRNG (no proptest crate is vendored; the loops below are
+//! the same shrink-free random-property pattern).
+
+use amfma::arith::{
+    bf16_to_f32, column_dot, f32_to_bf16, fma, fma_traced, ApproxNorm, ExtFloat, Kind, NormMode,
+};
+use amfma::prng::Prng;
+
+const MODES: [NormMode; 4] = [
+    NormMode::Accurate,
+    NormMode::Approx(ApproxNorm::AN_1_1),
+    NormMode::Approx(ApproxNorm::AN_1_2),
+    NormMode::Approx(ApproxNorm::AN_2_2),
+];
+
+/// Normalization (accurate or approximate) never changes the *value* of a
+/// finite result beyond the two documented truncations (alignment + guard
+/// drop): adding a zero product must preserve the value exactly.
+#[test]
+fn adding_zero_product_preserves_value() {
+    let mut rng = Prng::new(1);
+    for _ in 0..100_000 {
+        let c = ExtFloat {
+            kind: Kind::Finite,
+            sign: rng.below(2) == 1,
+            exp: 1 + (rng.next_u32() % 254) as i32,
+            mag: (rng.next_u32() % 0xFFFF + 1) as u16,
+        };
+        for mode in MODES {
+            let r = fma(0, f32_to_bf16(1.0), c, mode);
+            if r.kind == Kind::Finite || r.kind == Kind::Zero {
+                // Approx norm may flush a deeply-unnormalized tiny value
+                // whose whole magnitude sits below the stored LSB.
+                if r.kind == Kind::Finite {
+                    assert_eq!(r.to_f64(), c.to_f64(), "mode {mode:?} c={c:?}");
+                }
+            }
+        }
+    }
+}
+
+/// Same-sign accumulation is monotone (Mikaitis-style property the paper
+/// cites as the reason normalization must happen at every PE): adding a
+/// positive product never decreases a positive partial sum by more than
+/// the alignment-truncation ulp.
+#[test]
+fn same_sign_accumulation_monotone() {
+    let mut rng = Prng::new(2);
+    for _ in 0..50_000 {
+        let a = rng.bf16_activation() & 0x7FFF;
+        let b = rng.bf16_activation() & 0x7FFF;
+        let cv = rng.f32_range(0.001, 64.0);
+        let c = ExtFloat::from_f32(cv);
+        for mode in MODES {
+            let r = fma(a, b, c, mode);
+            if r.kind != Kind::Finite {
+                continue;
+            }
+            let ulp = 2f64.powi(c.exp - 127 - 13);
+            assert!(
+                r.to_f64() >= c.to_f64() - ulp,
+                "mode {mode:?}: {} < {} (a={a:04x} b={b:04x})",
+                r.to_f64(),
+                c.to_f64()
+            );
+        }
+    }
+}
+
+/// The engine's dot product commutes with global sign flip:
+/// dot(-a, b) == -dot(a, b) bit-for-bit (sign-magnitude datapath).
+#[test]
+fn sign_flip_antisymmetry() {
+    let mut rng = Prng::new(3);
+    for _ in 0..2_000 {
+        let n = 1 + rng.below(64) as usize;
+        let a: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+        let b: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+        let neg_a: Vec<u16> = a.iter().map(|&x| x ^ 0x8000).collect();
+        for mode in MODES {
+            let d = column_dot(&a, &b, mode);
+            let dn = column_dot(&neg_a, &b, mode);
+            let (vd, vdn) = (bf16_to_f32(d), bf16_to_f32(dn));
+            assert_eq!(vd, -vdn, "mode {mode:?}");
+        }
+    }
+}
+
+/// Scaling both operands by powers of two scales the result exactly
+/// (exponent arithmetic only — significand path untouched), away from the
+/// flush/saturate boundaries.
+#[test]
+fn power_of_two_scaling_exact() {
+    let mut rng = Prng::new(4);
+    for _ in 0..5_000 {
+        let n = 1 + rng.below(16) as usize;
+        let a: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+        let b: Vec<u16> = (0..n).map(|_| rng.bf16_activation()).collect();
+        let scale = 2f32.powi(rng.below(9) as i32 - 4);
+        let a2: Vec<u16> = a.iter().map(|&x| f32_to_bf16(bf16_to_f32(x) * scale)).collect();
+        for mode in MODES {
+            let d = bf16_to_f32(column_dot(&a, &b, mode)) as f64;
+            let d2 = bf16_to_f32(column_dot(&a2, &b, mode)) as f64;
+            if d.abs() > 1e-30 && d.abs() < 1e30 {
+                assert_eq!(d * scale as f64, d2, "mode {mode:?} scale {scale}");
+            }
+        }
+    }
+}
+
+/// Approximate modes never *increase* magnitude relative to accurate
+/// (truncation-only error model) at the single-FMA level.
+#[test]
+fn approx_never_exceeds_accurate_magnitude() {
+    let mut rng = Prng::new(5);
+    for _ in 0..100_000 {
+        let a = rng.bf16_activation();
+        let b = rng.bf16_activation();
+        let c = ExtFloat::from_f32(rng.f32_range(-16.0, 16.0));
+        let acc = fma(a, b, c, NormMode::Accurate);
+        for cfg in [ApproxNorm::AN_1_1, ApproxNorm::AN_1_2, ApproxNorm::AN_2_2] {
+            let apx = fma(a, b, c, NormMode::Approx(cfg));
+            if acc.kind == Kind::Finite && apx.kind == Kind::Finite {
+                assert!(apx.to_f64().abs() <= acc.to_f64().abs() + 1e-300);
+            }
+        }
+    }
+}
+
+/// The k=1 family is *identical* to accurate normalization whenever the
+/// needed left shift is within its exact coverage (0 for an-1-1's g1; the
+/// raw result already normalized), single-FMA granularity.
+#[test]
+fn an1x_exact_when_normalized() {
+    let mut rng = Prng::new(6);
+    let mut hits = 0u64;
+    for _ in 0..200_000 {
+        let a = rng.bf16_activation();
+        let b = rng.bf16_activation();
+        let c = ExtFloat::from_f32(rng.f32_range(-4.0, 4.0));
+        let (acc, t) = fma_traced(a, b, c, NormMode::Accurate);
+        if t.degenerate || t.raw_sum == 0 {
+            continue;
+        }
+        // covered cases: an-1-2 applies the exact shift for needed ∈ {R*, 0, -1, -3}
+        if matches!(t.needed_shift, 0 | -1 | -3) || t.needed_shift > 0 {
+            let apx = fma(a, b, c, NormMode::Approx(ApproxNorm::AN_1_2));
+            assert_eq!(acc, apx, "needed={}", t.needed_shift);
+            hits += 1;
+        }
+    }
+    assert!(hits > 50_000, "coverage too low: {hits}");
+}
+
+/// South-edge rounding agrees with a f64-computed RNE reference for
+/// normalized finite inputs.
+#[test]
+fn south_edge_rounding_is_rne() {
+    let mut rng = Prng::new(7);
+    for _ in 0..100_000 {
+        let mag = 0x8000 | (rng.next_u32() % 0x8000) as u16; // normalized
+        let exp = 2 + (rng.next_u32() % 250) as i32;
+        let c = ExtFloat { kind: Kind::Finite, sign: rng.below(2) == 1, exp, mag };
+        let v = c.to_f64();
+        let got = bf16_to_f32(c.round_to_bf16()) as f64;
+        // f64 -> f32 -> bf16 via the tested-in-isolation softfloat encode
+        let want = bf16_to_f32(f32_to_bf16(v as f32)) as f64;
+        assert_eq!(got, want, "c={c:?} v={v}");
+    }
+}
+
+/// Column dot handles pathological operand mixtures (zeros, denormal-range,
+/// huge magnitudes, sign cancellations) without producing NaN from finite
+/// inputs.
+#[test]
+fn no_nan_from_finite_inputs() {
+    let mut rng = Prng::new(8);
+    for _ in 0..5_000 {
+        let n = 1 + rng.below(48) as usize;
+        let a: Vec<u16> = (0..n).map(|_| rng.bf16_any_finite()).collect();
+        let b: Vec<u16> = (0..n).map(|_| rng.bf16_any_finite()).collect();
+        for mode in MODES {
+            let d = column_dot(&a, &b, mode);
+            let v = bf16_to_f32(d);
+            assert!(!v.is_nan(), "mode {mode:?}");
+        }
+    }
+}
