@@ -1,0 +1,9 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests`), the `python/` directory, or CI."""
+
+import sys
+from pathlib import Path
+
+PYTHON_ROOT = Path(__file__).resolve().parents[1]
+if str(PYTHON_ROOT) not in sys.path:
+    sys.path.insert(0, str(PYTHON_ROOT))

@@ -3,9 +3,12 @@
 import os
 import struct
 
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="AOT tests need jax")
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from compile.aot import to_hlo_text, GEMM_SHAPE
 from compile.kernels import ref

@@ -1,8 +1,11 @@
 """Vectorized jnp emulation vs the scalar oracle — hypothesis sweeps."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="emulation tests need jax")
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import amfma_emu as emu

@@ -7,6 +7,9 @@ asserts exact bit equality (f32 values are exact widenings of bf16, so
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="kernel tests need jax")
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import amfma_emu as emu

@@ -1,9 +1,11 @@
 """L2 model tests: shapes, mode plumbing, emulated-vs-fp32 proximity."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="model tests need jax")
+import jax
+import jax.numpy as jnp
 
 from compile.model import (MODEL_CONFIG, encoder_forward, init_params,
                            parse_mode)

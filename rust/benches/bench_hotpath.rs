@@ -1,7 +1,7 @@
 //! §Perf hot-path benchmarks: scalar FMA throughput, functional GEMM
-//! scaling across threads/modes, the cycle-accurate simulator, and the
-//! end-to-end serving pipeline.  These are the before/after numbers logged
-//! in EXPERIMENTS.md §Perf.
+//! scaling across threads/modes, the pooled-tiled-vs-seed before/after,
+//! the cycle-accurate simulator, and the end-to-end serving pipeline.
+//! These are the before/after numbers logged in EXPERIMENTS.md §Perf.
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
@@ -10,6 +10,7 @@ use std::time::Duration;
 use amfma::arith::{column_dot, fma, ExtFloat, NormMode};
 use amfma::bench_harness::{bench, section};
 use amfma::prng::Prng;
+use amfma::systolic::matmul::{default_threads, matmul_bf16_percall_seed, transpose_to_bf16};
 use amfma::systolic::{CycleArray, EngineMode, MatrixEngine};
 use amfma::ApproxNorm;
 
@@ -65,6 +66,9 @@ fn main() {
         }
     }
 
+    print!("{}", section("tiled pool + resident weights vs seed per-call path (256x256x256)"));
+    tiled_vs_seed_bench();
+
     print!("{}", section("cycle-accurate array (16x16, M=64)"));
     let xb: Vec<u16> = (0..64 * 16).map(|_| rng.bf16_activation()).collect();
     let wb: Vec<u16> = (0..16 * 16).map(|_| rng.bf16_activation()).collect();
@@ -78,6 +82,63 @@ fn main() {
 
     print!("{}", section("serving pipeline (batched encoder, tiny model)"));
     serving_bench();
+}
+
+/// The acceptance benchmark of the execution-engine overhaul: the seed's
+/// per-call hot path (RNE-convert the full W, spawn scoped threads, serial
+/// single-accumulator K-chains) against the overhauled path (weights
+/// resident as a pre-quantized bf16 plane, cache-blocked tiles on the
+/// persistent pool, 4-column register-blocked K-chains).  Both are
+/// bit-exact — asserted below before timing.
+fn tiled_vs_seed_bench() {
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mut rng = Prng::new(42);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mode = NormMode::Approx(ApproxNorm::AN_1_2);
+    let threads = default_threads();
+
+    let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+    // Residency: quantize W once, outside the timed region — this is what
+    // model loading does for every `*.w` tensor.
+    let wt = transpose_to_bf16(&w, k, n);
+
+    let y_seed = matmul_bf16_percall_seed(&x, &w, m, k, n, mode, threads);
+    let y_pool = eng.matmul_resident(&x, &wt, m, k, n);
+    assert_eq!(y_seed, y_pool, "overhauled path must stay bit-exact");
+
+    let fmas = (m * k * n) as f64;
+    let r_seed = bench(
+        "gemm256/seed per-call (convert W + scoped spawn)",
+        1,
+        3,
+        Duration::from_millis(800),
+        || {
+            std::hint::black_box(matmul_bf16_percall_seed(&x, &w, m, k, n, mode, threads));
+        },
+    )
+    .with_ops(fmas, "FMA/s");
+    println!("{}", r_seed.render());
+
+    let r_pool = bench(
+        "gemm256/pooled tiles + resident weights",
+        1,
+        3,
+        Duration::from_millis(800),
+        || {
+            std::hint::black_box(eng.matmul_resident(&x, &wt, m, k, n));
+        },
+    )
+    .with_ops(fmas, "FMA/s");
+    println!("{}", r_pool.render());
+
+    let speedup = r_seed.mean.as_secs_f64() / r_pool.mean.as_secs_f64();
+    println!(
+        "speedup (pooled+resident vs seed per-call): {speedup:.2}x  \
+         [{} threads, mode {}]",
+        threads,
+        mode.label()
+    );
 }
 
 fn serving_bench() {

@@ -10,7 +10,7 @@
 use amfma::bench_harness::section;
 use amfma::model::{self, Weights};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amfma::error::Result<()> {
     let limit: usize = std::env::var("AMFMA_T1_LIMIT")
         .ok()
         .and_then(|v| v.parse().ok())

@@ -8,7 +8,7 @@ use amfma::config::Args;
 use amfma::model::{self, Weights};
 use amfma::systolic::EngineMode;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amfma::error::Result<()> {
     let args = Args::from_env();
     let limit = args.get("limit").and_then(|v| v.parse().ok());
     let batch = args.get_usize("batch", 32);

@@ -9,7 +9,7 @@
 //! amfma info                                             artifact status
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::config::Args;
 use crate::cost::{self, Activities};

@@ -1,6 +1,13 @@
 //! The inference server: bounded ingress queue (backpressure), a dynamic
-//! batcher thread, and a pool of engine workers running the encoder on the
-//! simulated matrix engine.
+//! batcher thread, and engine workers running the encoder on one **shared**
+//! matrix engine whose GEMM tiles execute on the process-wide worker pool
+//! ([`crate::runtime::pool`]).  Workers no longer construct private engines
+//! per batch, and the model weights arrive pre-quantized to engine format
+//! (bf16 planes built once at load, see [`crate::model::Weights`]), so the
+//! request path performs no weight conversion and its GEMMs spawn no
+//! threads.  (The encoder's attention block still uses scoped threads for
+//! its per-head loop — see `Encoder::attention` — the remaining spawn site
+//! on this path.)
 //!
 //! Everything is std-threads + channels (no async runtime is vendored in
 //! this environment); the architecture mirrors a vLLM-style router→batcher→
@@ -132,19 +139,24 @@ impl InferenceServer {
         }
 
         // --- engine workers --------------------------------------------------
+        // One engine configuration, built once; the shared resource is the
+        // process-global worker pool its tile scheduler dispatches to, so
+        // per-batch parallelism comes from persistent pool workers rather
+        // than per-call thread spawns.
+        let engine = MatrixEngine::new(cfg.mode);
         let brx = Arc::new(std::sync::Mutex::new(brx));
         for _w in 0..cfg.workers {
             let brx = brx.clone();
             let metrics = metrics.clone();
             let models = models.clone();
-            let mode = cfg.mode;
+            let engine = engine.clone();
             threads.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = brx.lock().unwrap();
                     guard.recv()
                 };
                 let Ok(batch) = batch else { break };
-                run_batch(&models, mode, batch, &metrics);
+                run_batch(&models, &engine, batch, &metrics);
             }));
         }
 
@@ -232,7 +244,7 @@ fn batcher_loop(
 
 fn run_batch(
     models: &HashMap<String, Arc<Weights>>,
-    mode: EngineMode,
+    engine: &MatrixEngine,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) {
@@ -247,8 +259,7 @@ fn run_batch(
         assert_eq!(r.tokens.len(), seq, "sequence length mismatch");
         tokens.extend_from_slice(&r.tokens);
     }
-    let engine = MatrixEngine::new(mode);
-    let enc = Encoder::new(weights, engine);
+    let enc = Encoder::new(weights, engine.clone());
     let logits = enc.forward(&tokens, b);
     let now = Instant::now();
     for (i, req) in batch.into_iter().enumerate() {

@@ -21,7 +21,7 @@
 use std::io::Read;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 /// The ten GLUE benchmarks of Table I, in the paper's column order.
 pub const GLUE_TASKS: [&str; 10] = [

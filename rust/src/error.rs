@@ -1,0 +1,183 @@
+//! Minimal error-context plumbing (the anyhow-compatible subset the crate
+//! actually uses: `Result`, `Error`, `bail!`, `Context::{context,
+//! with_context}`).  No external crates are vendored in this environment,
+//! so we carry the ~100 lines ourselves.
+//!
+//! `Error` deliberately does **not** implement `std::error::Error`: that is
+//! what lets the blanket `From<E: std::error::Error>` conversion coexist
+//! with the reflexive `From<T> for T` impl, exactly as anyhow does.
+
+use std::fmt;
+
+/// Crate-wide result alias, defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error as a chain of human-readable messages, outermost context first.
+#[derive(Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a higher-level context message.
+    pub fn wrap(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The full context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Anything convertible into the message chain.  The blanket impl for
+    /// std errors and the concrete impl for [`Error`] are disjoint because
+    /// `Error` does not implement `std::error::Error`.
+    pub trait IntoChain {
+        fn into_chain(self) -> Error;
+    }
+
+    impl<E> IntoChain for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_chain(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoChain for Error {
+        fn into_chain(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to fallible values (`Result` with any std error or with
+/// [`Error`] itself, and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoChain> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_chain().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_chain().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use crate::bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_keeps_message() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("loading weights");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: missing file");
+        assert_eq!(e.chain().len(), 2);
+    }
+
+    #[test]
+    fn with_context_on_our_error_nests() {
+        fn inner() -> Result<()> {
+            bail!("level {}", 0)
+        }
+        let e = inner().with_context(|| "level 1").unwrap_err();
+        assert_eq!(format!("{e:#}"), "level 1: level 0");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        let some = Some(7u32).context("unused").unwrap();
+        assert_eq!(some, 7);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xFF])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -7,13 +7,15 @@ pub mod arith;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
-pub mod pe;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod error;
 pub mod model;
+pub mod pe;
 pub mod prng;
 pub mod runtime;
 pub mod systolic;
 
 pub use arith::{ApproxNorm, ExtFloat, NormMode};
+pub use error::{Context, Error, Result};

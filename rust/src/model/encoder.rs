@@ -13,7 +13,7 @@
 use crate::pe::PeStats;
 use crate::systolic::MatrixEngine;
 
-use super::layers::{gelu_inplace, layernorm, linear, softmax_rows};
+use super::layers::{gelu_inplace, layernorm, linear_resident, softmax_rows};
 use super::tensor::Tensor2;
 use super::weights::Weights;
 
@@ -30,6 +30,15 @@ pub struct Encoder<'w> {
 impl<'w> Encoder<'w> {
     pub fn new(weights: &'w Weights, engine: MatrixEngine) -> Self {
         Encoder { weights, engine }
+    }
+
+    /// Engine-backed projection `x · W[wname] + b[bname]`, consuming the
+    /// pre-quantized resident plane of the weight when the engine runs in a
+    /// bf16 mode (the hot path — no per-call RNE of `W`).
+    fn proj(&self, x: &Tensor2, wname: &str, bname: &str) -> Tensor2 {
+        let w = self.weights.get(wname).unwrap();
+        let b = self.weights.vec(bname).unwrap();
+        linear_resident(&self.engine, x, w, self.weights.plane(wname), Some(b))
     }
 
     /// Token + position embedding lookup: `[B, S]` ids → `[B·S, D]`.
@@ -56,10 +65,9 @@ impl<'w> Encoder<'w> {
     fn attention(&self, x: &Tensor2, layer: usize, batch: usize, seq: usize) -> Tensor2 {
         let cfg = &self.weights.config;
         let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
-        let w = self.weights;
-        let q = linear(&self.engine, x, w.get(&format!("layer{layer}.q.w")).unwrap(), Some(w.vec(&format!("layer{layer}.q.b")).unwrap()));
-        let k = linear(&self.engine, x, w.get(&format!("layer{layer}.k.w")).unwrap(), Some(w.vec(&format!("layer{layer}.k.b")).unwrap()));
-        let v = linear(&self.engine, x, w.get(&format!("layer{layer}.v.w")).unwrap(), Some(w.vec(&format!("layer{layer}.v.b")).unwrap()));
+        let q = self.proj(x, &format!("layer{layer}.q.w"), &format!("layer{layer}.q.b"));
+        let k = self.proj(x, &format!("layer{layer}.k.w"), &format!("layer{layer}.k.b"));
+        let v = self.proj(x, &format!("layer{layer}.v.w"), &format!("layer{layer}.v.b"));
 
         let mut ctx = Tensor2::zeros(batch * seq, d);
         let scale = 1.0 / (dh as f32).sqrt();
@@ -114,29 +122,14 @@ impl<'w> Encoder<'w> {
             }
         });
 
-        linear(
-            &self.engine,
-            &ctx,
-            w.get(&format!("layer{layer}.o.w")).unwrap(),
-            Some(w.vec(&format!("layer{layer}.o.b")).unwrap()),
-        )
+        self.proj(&ctx, &format!("layer{layer}.o.w"), &format!("layer{layer}.o.b"))
     }
 
     fn ffn(&self, x: &Tensor2, layer: usize) -> Tensor2 {
-        let w = self.weights;
-        let mut hmid = linear(
-            &self.engine,
-            x,
-            w.get(&format!("layer{layer}.ff1.w")).unwrap(),
-            Some(w.vec(&format!("layer{layer}.ff1.b")).unwrap()),
-        );
+        let mut hmid =
+            self.proj(x, &format!("layer{layer}.ff1.w"), &format!("layer{layer}.ff1.b"));
         gelu_inplace(&mut hmid);
-        linear(
-            &self.engine,
-            &hmid,
-            w.get(&format!("layer{layer}.ff2.w")).unwrap(),
-            Some(w.vec(&format!("layer{layer}.ff2.b")).unwrap()),
-        )
+        self.proj(&hmid, &format!("layer{layer}.ff2.w"), &format!("layer{layer}.ff2.b"))
     }
 
     /// Full forward pass: `[B, S]` token ids → `[B, n_classes]` logits
@@ -170,12 +163,7 @@ impl<'w> Encoder<'w> {
         for b in 0..batch {
             pooled.row_mut(b).copy_from_slice(x.row(b * seq));
         }
-        linear(
-            &self.engine,
-            &pooled,
-            self.weights.get("head.w").unwrap(),
-            Some(self.weights.vec("head.b").unwrap()),
-        )
+        self.proj(&pooled, "head.w", "head.b")
     }
 
     /// Forward pass with per-layer PE instrumentation (sequential, slow —
@@ -254,12 +242,7 @@ impl<'w> Encoder<'w> {
         for b in 0..batch {
             pooled.row_mut(b).copy_from_slice(x.row(b * seq));
         }
-        let logits = linear(
-            &self.engine,
-            &pooled,
-            w.get("head.w").unwrap(),
-            Some(w.vec("head.b").unwrap()),
-        );
+        let logits = self.proj(&pooled, "head.w", "head.b");
         (logits, traces)
     }
 }

@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::data::metrics::{accuracy, f1, pearson};
 use crate::data::tasks::{artifacts_dir, Task, GLUE_DISPLAY, GLUE_TASKS};

@@ -7,12 +7,38 @@
 
 use crate::systolic::MatrixEngine;
 
-use super::tensor::Tensor2;
+use super::tensor::{Bf16Plane, Tensor2};
 
 /// `y = x · W + b` with the product on the matrix engine.
 pub fn linear(engine: &MatrixEngine, x: &Tensor2, w: &Tensor2, b: Option<&[f32]>) -> Tensor2 {
     assert_eq!(x.cols, w.rows, "linear: inner dim");
     let y = engine.matmul(&x.data, &w.data, x.rows, x.cols, w.cols);
+    let mut y = Tensor2::from_vec(x.rows, w.cols, y);
+    if let Some(b) = b {
+        y.add_bias(b);
+    }
+    y
+}
+
+/// As [`linear`], but with the weight resident in engine format: bf16
+/// engines consume the pre-quantized plane (no per-call RNE of `W` — the
+/// serving hot path), FP32 engines fall back to the f32 tensor.  Bit-exact
+/// with [`linear`] in every mode.
+pub fn linear_resident(
+    engine: &MatrixEngine,
+    x: &Tensor2,
+    w: &Tensor2,
+    plane: Option<&Bf16Plane>,
+    b: Option<&[f32]>,
+) -> Tensor2 {
+    assert_eq!(x.cols, w.rows, "linear: inner dim");
+    let y = match plane {
+        Some(p) if engine.mode.is_bf16() => {
+            assert_eq!((p.rows, p.cols), (w.rows, w.cols), "plane shape");
+            engine.matmul_resident(&x.data, &p.wt, x.rows, x.cols, w.cols)
+        }
+        _ => engine.matmul(&x.data, &w.data, x.rows, x.cols, w.cols),
+    };
     let mut y = Tensor2::from_vec(x.rows, w.cols, y);
     if let Some(b) = b {
         y.add_bias(b);
@@ -85,6 +111,26 @@ mod tests {
         let w = Tensor2::from_vec(2, 2, vec![1., 0., 0., 1.]);
         let y = linear(&engine, &x, &w, Some(&[10.0, 20.0]));
         assert_eq!(y.data, vec![11., 22., 13., 24.]);
+    }
+
+    #[test]
+    fn linear_resident_bit_exact_vs_linear() {
+        use crate::model::tensor::Bf16Plane;
+        use crate::prng::Prng;
+        let mut rng = Prng::new(61);
+        let x = Tensor2::from_vec(4, 12, (0..48).map(|_| rng.normal() as f32).collect());
+        let w = Tensor2::from_vec(12, 6, (0..72).map(|_| rng.normal() as f32).collect());
+        let plane = Bf16Plane::from_tensor(&w);
+        let bias: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        for mode in ["fp32", "bf16", "bf16an-1-2"] {
+            let engine = MatrixEngine::new(EngineMode::parse(mode).unwrap());
+            let y0 = linear(&engine, &x, &w, Some(&bias));
+            let y1 = linear_resident(&engine, &x, &w, Some(&plane), Some(&bias));
+            assert_eq!(y0.data, y1.data, "mode {mode}");
+            // Missing plane falls back to the per-call path.
+            let y2 = linear_resident(&engine, &x, &w, None, Some(&bias));
+            assert_eq!(y0.data, y2.data, "mode {mode} (no plane)");
+        }
     }
 
     #[test]

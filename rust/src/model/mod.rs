@@ -14,5 +14,5 @@ pub mod weights;
 
 pub use encoder::Encoder;
 pub use eval::{evaluate_task, paper_modes, render_table1, run_table1, EvalResult};
-pub use tensor::Tensor2;
+pub use tensor::{Bf16Plane, Tensor2};
 pub use weights::{ModelConfig, Weights};

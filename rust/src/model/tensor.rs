@@ -1,4 +1,5 @@
-//! Minimal row-major 2-D f32 tensor used by the inference engine.
+//! Minimal row-major 2-D f32 tensor used by the inference engine, plus the
+//! pre-quantized engine-format weight plane ([`Bf16Plane`]).
 //!
 //! Deliberately tiny: the heavy lifting is done by the simulated matrix
 //! engine ([`crate::systolic::MatrixEngine`]); everything else (layernorm,
@@ -100,6 +101,37 @@ impl Tensor2 {
     }
 }
 
+/// A weight matrix resident in the engine's storage format: the RNE
+/// bf16 quantization of a `k × n` f32 weight tensor, laid out
+/// **column-major** (`n × k`, row `j` = weight column `j` — the
+/// weight-stationary load order the K-chain kernels stream).
+///
+/// Built once when weights are loaded (see [`crate::model::Weights`]);
+/// the per-call conversion of `W` then disappears from the matmul hot
+/// path.  Quantization goes through the same encoder as the per-call
+/// path ([`crate::systolic::matmul::transpose_to_bf16`]), so the two
+/// paths are bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bf16Plane {
+    /// Inner dimension K (rows of the original weight tensor).
+    pub rows: usize,
+    /// Output dimension N (columns of the original weight tensor).
+    pub cols: usize,
+    /// Column-major bf16 patterns, `cols × rows` elements.
+    pub wt: Vec<u16>,
+}
+
+impl Bf16Plane {
+    /// Quantize a row-major `k × n` weight tensor once.
+    pub fn from_tensor(t: &Tensor2) -> Bf16Plane {
+        Bf16Plane {
+            rows: t.rows,
+            cols: t.cols,
+            wt: crate::systolic::matmul::transpose_to_bf16(&t.data, t.rows, t.cols),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +173,20 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         Tensor2::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn bf16_plane_is_transposed_quantization() {
+        use crate::arith::f32_to_bf16;
+        let t = Tensor2::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let p = Bf16Plane::from_tensor(&t);
+        assert_eq!((p.rows, p.cols), (2, 3));
+        assert_eq!(p.wt.len(), 6);
+        // column j of W is contiguous at wt[j*k..(j+1)*k]
+        for j in 0..3 {
+            for i in 0..2 {
+                assert_eq!(p.wt[j * 2 + i], f32_to_bf16(t.get(i, j)), "i={i} j={j}");
+            }
+        }
     }
 }

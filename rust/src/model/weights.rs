@@ -19,9 +19,9 @@ use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
-use super::tensor::Tensor2;
+use super::tensor::{Bf16Plane, Tensor2};
 
 /// Model hyper-parameters, as recorded in the weights file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,11 +48,35 @@ impl ModelConfig {
     }
 }
 
-/// A parsed weights file: config + named tensors.
+/// A parsed weights file: config + named tensors + the engine-format
+/// planes.  Every matmul weight (tensor names ending in `.w`) is
+/// RNE-quantized to a column-major bf16 [`Bf16Plane`] exactly once, here —
+/// the resident format the serving hot path consumes, so no per-request
+/// weight conversion ever happens.  Deliberate trade-off: planes are built
+/// eagerly even for FP32-only consumers (+2 bytes per weight element and a
+/// one-time quantization pass at load), keeping load infallible and the
+/// hot path branch-free; revisit with lazy per-tensor init if model sizes
+/// make the resident copies matter.
 #[derive(Debug, Clone)]
 pub struct Weights {
     pub config: ModelConfig,
     tensors: HashMap<String, Tensor2>,
+    planes: HashMap<String, Bf16Plane>,
+}
+
+/// Matmul weights are the tensors named `*.w` (QKV/output projections,
+/// FFN matrices, classifier head); embeddings, biases and layernorm
+/// parameters stay FP32-only.
+fn is_engine_weight(name: &str) -> bool {
+    name.ends_with(".w")
+}
+
+fn build_planes(tensors: &HashMap<String, Tensor2>) -> HashMap<String, Bf16Plane> {
+    tensors
+        .iter()
+        .filter(|(name, _)| is_engine_weight(name))
+        .map(|(name, t)| (name.clone(), Bf16Plane::from_tensor(t)))
+        .collect()
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -119,7 +143,8 @@ impl Weights {
                 .collect();
             tensors.insert(name, Tensor2::from_vec(rows, cols, data));
         }
-        Ok(Weights { config, tensors })
+        let planes = build_planes(&tensors);
+        Ok(Weights { config, tensors, planes })
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor2> {
@@ -128,6 +153,17 @@ impl Weights {
 
     pub fn vec(&self, name: &str) -> Result<&[f32]> {
         Ok(&self.get(name)?.data)
+    }
+
+    /// The pre-quantized engine-format plane for a matmul weight, if the
+    /// tensor exists and is an engine weight (`*.w`).
+    pub fn plane(&self, name: &str) -> Option<&Bf16Plane> {
+        self.planes.get(name)
+    }
+
+    /// Number of resident planes (diagnostics / tests).
+    pub fn plane_count(&self) -> usize {
+        self.planes.len()
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -177,7 +213,8 @@ impl Weights {
         }
         mk(&mut tensors, "head.w".into(), d, config.n_classes, scale(d), &mut rng);
         mk(&mut tensors, "head.b".into(), 1, config.n_classes, 0.0, &mut rng);
-        Weights { config, tensors }
+        let planes = build_planes(&tensors);
+        Weights { config, tensors, planes }
     }
 }
 
@@ -206,6 +243,26 @@ mod tests {
         let total: usize = w.names().iter().map(|n| w.get(n).unwrap().data.len()).sum();
         // ln tensors counted in formula as 4*d per layer
         assert_eq!(total, c.param_count());
+    }
+
+    #[test]
+    fn planes_built_once_for_every_engine_weight() {
+        let c = tiny_config();
+        let w = Weights::random(c, 3);
+        // 4 attention + 2 FFN matrices per layer, plus the head.
+        assert_eq!(w.plane_count(), c.n_layers * 6 + 1);
+        let t = w.get("layer0.ff1.w").unwrap();
+        let p = w.plane("layer0.ff1.w").expect("ff1 plane");
+        assert_eq!((p.rows, p.cols), (t.rows, t.cols));
+        assert_eq!(
+            p.wt,
+            crate::systolic::matmul::transpose_to_bf16(&t.data, t.rows, t.cols),
+            "plane must match the per-call quantization bit for bit"
+        );
+        // Non-matmul tensors stay FP32-only.
+        assert!(w.plane("emb.tok").is_none());
+        assert!(w.plane("layer0.q.b").is_none());
+        assert!(w.plane("layer0.ln1.g").is_none());
     }
 
     #[test]

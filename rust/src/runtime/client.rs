@@ -1,54 +1,63 @@
 //! PJRT runtime: load AOT-lowered HLO **text** artifacts and execute them
 //! from the Rust hot path.
 //!
-//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`.  The
-//! interchange format is HLO text, not serialized protos — xla_extension
+//! The real implementation (adapted from `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) depends on the
+//! `xla_extension` bindings, which are **not vendored** in this container
+//! and cannot be fetched at build time.  This module therefore preserves
+//! the full API surface — [`Runtime`], [`Executable`], [`Arg`],
+//! [`artifact`] — as an honest stub: [`Runtime::available`] reports
+//! `false` and [`Runtime::cpu`] returns an error, so every PJRT-dependent
+//! test and tool skips gracefully instead of failing to link.  Restoring
+//! the backend is a matter of re-adding the `xla` dependency behind the
+//! `pjrt` cargo feature and filling in the four `unavailable()` sites; the
+//! interchange format stays HLO text, not serialized protos — xla_extension
 //! 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids, while the text parser
 //! reassigns ids (see DESIGN.md and aot.py).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::error::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::msg(
+        "PJRT runtime unavailable: the xla bindings are not vendored in this build \
+         (enable and vendor the `pjrt` feature to restore it)",
+    )
+}
 
 /// Process-wide PJRT CPU client (one per process is the PJRT model).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    _private: (),
 }
 
 impl Runtime {
+    /// Whether a PJRT backend is compiled into this binary.
+    pub fn available() -> bool {
+        false
+    }
+
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client })
+        Err(unavailable())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        0
     }
 
     /// Load + compile one HLO text artifact.
-    pub fn load(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Executable { exe, path: path.to_path_buf() })
+    pub fn load(&self, _path: &Path) -> Result<Executable> {
+        Err(unavailable())
     }
 }
 
 /// A compiled module.  All our artifacts are lowered with
 /// `return_tuple=True`, so outputs come back as a 1-tuple.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     pub path: PathBuf,
 }
 
@@ -59,22 +68,9 @@ pub enum Arg<'a> {
 }
 
 impl Executable {
-    fn literal(arg: &Arg) -> Result<xla::Literal> {
-        Ok(match arg {
-            Arg::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
-            Arg::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
-        })
-    }
-
     /// Execute and return the first tuple element as f32s.
-    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> =
-            args.iter().map(Self::literal).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let out = result.to_tuple1().context("unwrap 1-tuple")?;
-        Ok(out.to_vec::<f32>()?)
+    pub fn run_f32(&self, _args: &[Arg]) -> Result<Vec<f32>> {
+        Err(unavailable())
     }
 }
 
@@ -87,16 +83,30 @@ pub fn artifact(name: &str) -> PathBuf {
 mod tests {
     use super::*;
 
-    fn have(name: &str) -> bool {
-        artifact(name).exists()
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!Runtime::available());
+        let err = Runtime::cpu().err().expect("stub must not hand out a client");
+        assert!(format!("{err}").contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn artifact_paths_resolve_under_artifacts_dir() {
+        let p = artifact("matmul_fp32.hlo.txt");
+        assert!(p.ends_with("matmul_fp32.hlo.txt"));
     }
 
     /// Smoke: compile + run the plain-f32 GEMM artifact and compare with a
-    /// host matmul.  Skips (passes vacuously) when artifacts are absent —
-    /// the integration tests in rust/tests/ require them.
+    /// host matmul.  Skips (passes vacuously) while the PJRT backend is a
+    /// stub or when artifacts are absent — the full round-trip lives in
+    /// rust/tests/integration_pjrt.rs.
     #[test]
     fn pjrt_matmul_fp32_roundtrip() {
-        if !have("matmul_fp32.hlo.txt") {
+        if !Runtime::available() {
+            eprintln!("skipping: PJRT backend not vendored");
+            return;
+        }
+        if !artifact("matmul_fp32.hlo.txt").exists() {
             eprintln!("skipping: artifacts not built");
             return;
         }

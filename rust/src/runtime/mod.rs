@@ -1,7 +1,15 @@
-//! PJRT runtime wrapper: loads the AOT artifacts (`artifacts/*.hlo.txt`)
-//! produced once at build time by `python/compile/aot.py` and executes them
-//! on the request path.  Python never runs at serving time.
+//! Runtime layer: the persistent worker pool that executes tiled GEMMs
+//! ([`pool`]) and the PJRT artifact loader ([`client`]).
+//!
+//! The PJRT client loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! once at build time by `python/compile/aot.py`; Python never runs at
+//! serving time.  The `xla` bindings are not vendored in this container, so
+//! [`client`] compiles as an API-preserving stub unless the bindings are
+//! restored (see its module docs); everything else in the crate is
+//! self-contained.
 
 pub mod client;
+pub mod pool;
 
 pub use client::{artifact, Arg, Executable, Runtime};
+pub use pool::WorkerPool;

@@ -1,0 +1,289 @@
+//! Persistent worker pool — the execution substrate of the runtime layer.
+//!
+//! The seed implementation spawned fresh scoped threads inside every
+//! `MatrixEngine::matmul` call; at serving rates that is thread churn on
+//! the hottest path in the system.  This module keeps one process-wide set
+//! of workers alive (std threads + an mpsc job channel, matching the
+//! repo-wide no-async-runtime constraint) and lets callers run a batch of
+//! borrowed-closure jobs to completion, scoped-thread style:
+//!
+//! ```text
+//! pool::global().run(tiles.map(|t| move || compute(t)).collect());
+//! ```
+//!
+//! `run` blocks until every submitted job has finished, which is what makes
+//! handing non-`'static` closures to long-lived workers sound (the same
+//! contract as `std::thread::scope`, enforced here with a completion
+//! latch).  Panics inside jobs are captured and re-thrown in the caller.
+//!
+//! Nesting rule: jobs running **on** the pool must not call `run` on the
+//! same pool (a job blocking on sub-jobs can deadlock once every worker is
+//! blocked the same way).  The tile scheduler observes this by dispatching
+//! from engine/server threads only, never from inside a tile job.
+
+use std::any::Any;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch shared between one `run` call and its jobs.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+/// A fixed-size pool of persistent worker threads.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (at least one).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("amfma-pool-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        WorkerPool { tx: Some(tx), handles, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task to completion on the pool, blocking the caller until
+    /// the last one finishes.  Tasks may borrow from the caller's stack
+    /// (lifetime `'env`): the blocking wait below is what upholds the
+    /// lifetime extension performed when boxing them for the job channel.
+    /// A panicking task poisons nothing — the first captured panic payload
+    /// is re-thrown here after all tasks have drained.
+    pub fn run<'env, F>(&self, tasks: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if tasks.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let tx = self.tx.as_ref().expect("worker pool closed");
+        for task in tasks {
+            let latch = Arc::clone(&latch);
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                if let Err(payload) = result {
+                    let mut slot = latch.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                let mut remaining = latch.remaining.lock().unwrap();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    latch.done.notify_all();
+                }
+            });
+            // SAFETY: `run` does not return until `remaining` reaches zero,
+            // i.e. until every job (and thus every `'env` borrow it captured)
+            // has finished executing — the std::thread::scope contract.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            tx.send(job).expect("worker pool hung up");
+        }
+        let mut remaining = latch.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = latch.done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        if let Some(payload) = latch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel lets every worker's recv() fail and exit.
+        self.tx.take();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // pool dropped
+        }
+    }
+}
+
+/// Default worker count: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide shared pool.  The matrix-engine tile scheduler and the
+/// coordinator's engine workers all dispatch here; it is created on first
+/// use and lives for the process.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..100)
+            .map(|_| {
+                let counter = &counter;
+                move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_data() {
+        let pool = WorkerPool::new(3);
+        let input: Vec<u64> = (0..64).collect();
+        let sums: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<_> = (0..8)
+            .map(|chunk| {
+                let input = &input;
+                let sums = &sums;
+                move || {
+                    let s: u64 = input[chunk * 8..(chunk + 1) * 8].iter().sum();
+                    sums[chunk].store(s as usize, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        let total: usize = sums.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, (0..64).sum::<u64>() as usize);
+    }
+
+    #[test]
+    fn sequential_runs_reuse_workers() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..10 {
+            let tasks: Vec<_> = (0..4)
+                .map(|_| {
+                    let counter = &counter;
+                    move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn empty_task_list_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<fn()> = Vec::new();
+        pool.run(tasks);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile job failed")]
+    fn panics_propagate_to_caller() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<_> = (0..3)
+            .map(|i| {
+                move || {
+                    if i == 1 {
+                        panic!("tile job failed");
+                    }
+                }
+            })
+            .collect();
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = WorkerPool::new(2);
+        let bad: Vec<_> = (0..1).map(|_| move || panic!("boom")).collect();
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(bad)));
+        assert!(got.is_err());
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..8)
+            .map(|_| {
+                let counter = &counter;
+                move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn concurrent_runs_from_many_threads() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let counter = &counter;
+                s.spawn(move || {
+                    let tasks: Vec<_> = (0..16)
+                        .map(|_| {
+                            move || {
+                                counter.fetch_add(1, Ordering::Relaxed);
+                            }
+                        })
+                        .collect();
+                    pool.run(tasks);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().workers() >= 1);
+    }
+}

@@ -1,17 +1,24 @@
 //! The functional matrix engine — the runtime hot path.
 //!
 //! Semantically identical to streaming tiles through the cycle-accurate
-//! array (asserted in tests and `rust/tests/integration_systolic.rs`), but
-//! evaluated as straight column-chain reductions, parallelized across
-//! output rows with scoped threads.  The engine also *models* the physical
-//! array it stands in for: [`MatrixEngine::cycle_estimate`] reports the
-//! cycle count a `K×N`-PE weight-stationary array would need for the same
-//! GEMM, which the serving metrics and EXPERIMENTS.md use.
+//! array (asserted in module tests and `rust/tests/integration_systolic.rs`),
+//! but evaluated as straight column-chain reductions.  GEMMs are decomposed
+//! into cache-blocked output tiles by [`super::scheduler`] and dispatched to
+//! the persistent worker pool ([`crate::runtime::pool`]) — no threads are
+//! spawned per call.  Weights can be supplied *resident* (pre-quantized
+//! column-major bf16 planes built once at load, see
+//! [`crate::model::tensor::Bf16Plane`]), removing the per-call RNE
+//! conversion of `W` from the hot path.  The engine also *models* the
+//! physical array it stands in for: [`MatrixEngine::cycle_estimate`] reports
+//! the cycle count a `K×N`-PE weight-stationary array would need for the
+//! same GEMM, which the serving metrics and EXPERIMENTS.md use.
 
-use crate::arith::{bf16_to_f32, f32_to_bf16, fma, fma_traced, ExtFloat, NormMode};
+use crate::arith::{bf16_to_f32, f32_to_bf16, fma, fma_traced, ExtFloat, NormMode, NORM_POS};
 use crate::pe::PeStats;
+use crate::runtime::pool;
 
 use super::dataflow;
+use super::scheduler::TileScheduler;
 
 /// Numeric mode of an engine: the paper's three families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -32,7 +39,10 @@ impl EngineMode {
         }
     }
 
-    /// Parse labels like `fp32`, `bf16`, `bf16an-1-2`.
+    /// Parse labels like `fp32`, `bf16`, `bf16an-1-2`.  Malformed or
+    /// out-of-range `bf16an-k-λ` strings (k or λ of zero, shift range wider
+    /// than the adder frame, trailing fields) are rejected with `None`
+    /// rather than panicking in [`crate::arith::ApproxNorm::new`].
     pub fn parse(s: &str) -> Option<EngineMode> {
         if s == "fp32" {
             return Some(EngineMode::Fp32);
@@ -47,7 +57,17 @@ impl EngineMode {
         if it.next().is_some() {
             return None;
         }
+        // Range-check each parameter before summing: `k + l` on unchecked
+        // u32 would overflow (debug panic / release wrap) on huge inputs.
+        if k == 0 || l == 0 || k > NORM_POS || l > NORM_POS || k + l > NORM_POS {
+            return None;
+        }
         Some(EngineMode::Bf16(NormMode::Approx(crate::arith::ApproxNorm::new(k, l))))
+    }
+
+    /// True for the reduced-precision (bf16) families.
+    pub fn is_bf16(&self) -> bool {
+        matches!(self, EngineMode::Bf16(_))
     }
 }
 
@@ -59,7 +79,9 @@ pub struct MatrixEngine {
     /// Physical PE grid modeled (K rows × N cols), for cycle estimates.
     pub pe_rows: usize,
     pub pe_cols: usize,
-    /// Host threads used to simulate (does not affect results).
+    /// Host threads used to simulate (does not affect results).  `<= 1`
+    /// runs tiles inline on the calling thread; anything larger dispatches
+    /// tiles to the shared worker pool.
     pub threads: usize,
 }
 
@@ -72,28 +94,64 @@ impl MatrixEngine {
         MatrixEngine { mode, pe_rows, pe_cols, threads: default_threads() }
     }
 
+    /// The tile scheduler matching this engine's parallelism setting.
+    fn scheduler(&self) -> TileScheduler {
+        if self.threads <= 1 {
+            TileScheduler::inline()
+        } else {
+            TileScheduler::default()
+        }
+    }
+
     /// `Y = X · W` on f32 tensors (row-major).  Bf16 modes convert inputs
     /// with RNE, run the bit-exact engine and widen the bf16 outputs back
     /// to f32 — exactly the paper's setup (activations stay FP32 outside
-    /// the engine).
+    /// the engine).  `W` is RNE-converted per call here; serving paths use
+    /// [`MatrixEngine::matmul_resident`] with a pre-quantized plane instead.
     pub fn matmul(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         assert_eq!(x.len(), m * k, "x shape");
         assert_eq!(w.len(), k * n, "w shape");
         match self.mode {
-            EngineMode::Fp32 => matmul_f32(x, w, m, k, n, self.threads),
+            EngineMode::Fp32 => self.scheduler().gemm_f32(pool::global(), x, w, m, k, n),
             EngineMode::Bf16(mode) => {
                 let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
                 // transpose W to column-major once: column chains become
                 // contiguous (the weight-stationary load order).
                 let wt = transpose_to_bf16(w, k, n);
-                let yb = matmul_bf16_pre(&xb, &wt, m, k, n, mode, self.threads);
+                let yb = self.scheduler().gemm_bf16(pool::global(), &xb, &wt, m, k, n, mode);
                 yb.iter().map(|&b| bf16_to_f32(b)).collect()
             }
         }
     }
 
-    /// As [`matmul`], but returning the aggregate PE instrumentation
-    /// (sequential — used by the Fig. 6 / power-model collection passes).
+    /// As [`MatrixEngine::matmul`], but with the weight matrix already
+    /// resident in engine format: `wt` is the column-major `n × k` bf16
+    /// buffer a [`crate::model::tensor::Bf16Plane`] holds (built once at
+    /// weight load).  Only activations are converted per call.  Bit-exact
+    /// with the per-call-conversion path — both quantize `W` with the same
+    /// RNE encoder.  Panics for FP32 engines, which have no reduced-
+    /// precision storage format (callers route those through `matmul`).
+    pub fn matmul_resident(
+        &self,
+        x: &[f32],
+        wt: &[u16],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), m * k, "x shape");
+        assert_eq!(wt.len(), n * k, "wt shape");
+        let EngineMode::Bf16(mode) = self.mode else {
+            panic!("matmul_resident requires a bf16 engine mode");
+        };
+        let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+        let yb = self.scheduler().gemm_bf16(pool::global(), &xb, wt, m, k, n, mode);
+        yb.iter().map(|&b| bf16_to_f32(b)).collect()
+    }
+
+    /// As [`MatrixEngine::matmul`], but returning the aggregate PE
+    /// instrumentation (sequential — used by the Fig. 6 / power-model
+    /// collection passes).
     pub fn matmul_traced(
         &self,
         x: &[f32],
@@ -148,7 +206,9 @@ pub fn default_threads() -> usize {
 }
 
 /// Transpose a row-major `k×n` f32 matrix into a column-major bf16 buffer
-/// (`n×k`, row `j` = weight column `j`).
+/// (`n×k`, row `j` = weight column `j`).  This is the single quantization
+/// point for weights: the per-call path, the resident planes and the golden
+/// tests all go through it.
 pub fn transpose_to_bf16(w: &[f32], k: usize, n: usize) -> Vec<u16> {
     let mut wt = vec![0u16; n * k];
     for i in 0..k {
@@ -159,7 +219,8 @@ pub fn transpose_to_bf16(w: &[f32], k: usize, n: usize) -> Vec<u16> {
     wt
 }
 
-/// FP32 reference GEMM (row-parallel).
+/// FP32 reference GEMM (row-parallel, scoped threads).  This is the seed
+/// implementation, kept as a reference for equivalence tests.
 pub fn matmul_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
     let mut y = vec![0f32; m * n];
     let chunk = m.div_ceil(threads.max(1)).max(1);
@@ -185,6 +246,9 @@ pub fn matmul_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, threads: u
 
 /// Bit-exact bf16 GEMM over pre-converted operands: `x` row-major `m×k`
 /// bf16 patterns, `wt` **column-major** `n×k` (row `j` = column `j` of W).
+/// This is the seed engine's scoped-thread kernel, retained as the
+/// reference implementation and the `bench_hotpath` before/after baseline;
+/// the runtime path is [`TileScheduler::gemm_bf16`].
 pub fn matmul_bf16_pre(
     x: &[u16],
     wt: &[u16],
@@ -220,6 +284,24 @@ pub fn matmul_bf16_pre(
     y
 }
 
+/// The seed's complete per-call hot path: RNE-convert the full `W` to bf16,
+/// spawn scoped threads, reduce, widen.  Kept verbatim so `bench_hotpath`
+/// can report the before/after of the pooled + resident-weight overhaul.
+pub fn matmul_bf16_percall_seed(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mode: NormMode,
+    threads: usize,
+) -> Vec<f32> {
+    let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+    let wt = transpose_to_bf16(w, k, n);
+    let yb = matmul_bf16_pre(&xb, &wt, m, k, n, mode, threads);
+    yb.iter().map(|&b| bf16_to_f32(b)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,13 +310,56 @@ mod tests {
 
     #[test]
     fn mode_labels_roundtrip() {
-        for s in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        for s in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2", "bf16an-3-4"] {
             let m = EngineMode::parse(s).unwrap();
             assert_eq!(m.label(), s);
         }
         assert!(EngineMode::parse("fp64").is_none());
         assert!(EngineMode::parse("bf16an-1").is_none());
         assert!(EngineMode::parse("bf16an-1-2-3").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_out_of_range() {
+        for s in [
+            "",
+            "bf16an-",
+            "bf16an--",
+            "bf16an-x-2",
+            "bf16an-1-x",
+            "bf16an-1-",
+            "bf16an--2",
+            "bf16an-0-2",   // k must be >= 1 (ApproxNorm::new would panic)
+            "bf16an-1-0",   // λ must be >= 1
+            "bf16an-9-9",   // k + λ beyond the left-shift range
+            "bf16an-4294967295-2", // u32::MAX: must not overflow the range check
+            "bf16an-2-4294967295",
+            "bf16an-1-2 ",  // stray whitespace
+            "BF16AN-1-2",   // case sensitive
+            "bf16an-1--2",  // negative λ
+        ] {
+            assert!(EngineMode::parse(s).is_none(), "{s:?} should not parse");
+        }
+        // Boundary: k + λ == NORM_POS is the largest legal configuration.
+        let k = 1;
+        let l = NORM_POS - 1;
+        let m = EngineMode::parse(&format!("bf16an-{k}-{l}")).unwrap();
+        assert_eq!(m.label(), format!("bf16an-{k}-{l}"));
+    }
+
+    #[test]
+    fn mode_label_matches_approx_norm_label() {
+        for (k, l) in [(1u32, 1u32), (1, 2), (2, 2), (3, 3)] {
+            let cfg = ApproxNorm::new(k, l);
+            assert_eq!(cfg.label(), format!("an-{k}-{l}"));
+            let mode = EngineMode::Bf16(NormMode::Approx(cfg));
+            assert_eq!(mode.label(), format!("bf16{}", cfg.label()));
+            assert_eq!(EngineMode::parse(&mode.label()), Some(mode));
+            assert_eq!(NormMode::Approx(cfg).label(), cfg.label());
+        }
+        assert_eq!(NormMode::Accurate.label(), "accurate");
+        assert!(EngineMode::Bf16(NormMode::Accurate).is_bf16());
+        assert!(!EngineMode::Fp32.is_bf16());
     }
 
     #[test]
@@ -281,6 +406,28 @@ mod tests {
     }
 
     #[test]
+    fn resident_path_bit_exact_vs_per_call_conversion() {
+        let mut rng = Prng::new(25);
+        let (m, k, n) = (9, 40, 11);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_1_2)] {
+            let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+            let per_call = eng.matmul(&x, &w, m, k, n);
+            let resident = eng.matmul_resident(&x, &wt, m, k, n);
+            assert_eq!(per_call, resident, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bf16 engine mode")]
+    fn resident_path_rejects_fp32_engines() {
+        let eng = MatrixEngine::new(EngineMode::Fp32);
+        let _ = eng.matmul_resident(&[1.0], &[0x3F80], 1, 1, 1);
+    }
+
+    #[test]
     fn thread_count_does_not_change_results() {
         let mut rng = Prng::new(23);
         let (m, k, n) = (17, 29, 11);
@@ -291,6 +438,21 @@ mod tests {
         e1.threads = 1;
         e8.threads = 8;
         assert_eq!(e1.matmul(&x, &w, m, k, n), e8.matmul(&x, &w, m, k, n));
+    }
+
+    #[test]
+    fn pooled_engine_matches_seed_scoped_kernel() {
+        let mut rng = Prng::new(26);
+        // Big enough to clear the inline threshold: the pool path runs.
+        let (m, k, n) = (64, 48, 40);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_2_2)] {
+            let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+            let pooled = eng.matmul(&x, &w, m, k, n);
+            let seed = matmul_bf16_percall_seed(&x, &w, m, k, n, mode, 4);
+            assert_eq!(pooled, seed, "mode {mode:?}");
+        }
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Weight-stationary systolic-array matrix engine (paper Fig. 2).
 //!
 //! [`dataflow`] — the skew/schedule arithmetic; [`array`] — the
-//! cycle-accurate register-level simulator; [`matmul`] — the functional
-//! engine used on the runtime hot path (bit-identical outputs, asserted in
-//! tests), plus the cycle/utilization model of the physical array.
+//! cycle-accurate register-level simulator; [`scheduler`] — cache-blocked
+//! GEMM tile decomposition dispatched to the persistent worker pool;
+//! [`matmul`] — the functional engine used on the runtime hot path
+//! (bit-identical outputs, asserted in tests), plus the cycle/utilization
+//! model of the physical array.
 
 pub mod array;
 pub mod dataflow;
 pub mod matmul;
+pub mod scheduler;
 
 pub use array::CycleArray;
 pub use matmul::{matmul_bf16_pre, EngineMode, MatrixEngine};
+pub use scheduler::TileScheduler;

@@ -1,0 +1,353 @@
+//! GEMM tile scheduler: decomposes `Y = X · W` into cache-blocked output
+//! tiles and dispatches them to the persistent worker pool
+//! ([`crate::runtime::pool`]), replacing the per-call scoped-thread spawn
+//! of the seed engine.
+//!
+//! Decomposition happens over the **output** dimensions only (`M × N`
+//! rectangles).  The K-chain of every output element stays whole and in
+//! index order — bf16 accumulation through the PE datapath is order
+//! dependent, and the semantic contract of the engine is the full-K column
+//! chain ([`crate::arith::column_dot`]) rounded once at the south edge.
+//! Because every output element is an independent chain, the result is
+//! bit-identical for any tiling and any worker count.
+//!
+//! The bf16 tile kernel additionally register-blocks four output columns
+//! per K-sweep: four independent accumulator chains break the serial
+//! dependency on a single `acc` value that stalled the seed's inner loop,
+//! and each activation element is loaded once per four FMAs.  The per-
+//! element operation order within each chain is untouched.
+
+use crate::arith::{fma, ExtFloat, NormMode};
+use crate::runtime::pool::WorkerPool;
+
+/// Default output-tile height (rows of X per task).
+pub const TILE_M: usize = 32;
+/// Default output-tile width (columns of W per task).
+pub const TILE_N: usize = 32;
+
+/// Below this many scalar FMAs a GEMM runs inline on the calling thread:
+/// dispatch latency would dominate the work.
+pub const INLINE_FMA_THRESHOLD: usize = 1 << 15;
+
+/// One output tile: rows `[r0, r1)` × columns `[c0, c1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+/// Cache-blocked decomposition of an `m × n` output into tiles.
+pub fn tiles(m: usize, n: usize, tile_m: usize, tile_n: usize) -> Vec<Tile> {
+    let tile_m = tile_m.max(1);
+    let tile_n = tile_n.max(1);
+    let mut out = Vec::with_capacity(m.div_ceil(tile_m) * n.div_ceil(tile_n));
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + tile_m).min(m);
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + tile_n).min(n);
+            out.push(Tile { r0, r1, c0, c1 });
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    out
+}
+
+/// Raw output pointer smuggled into tile tasks.  Soundness: tiles are
+/// disjoint rectangles of the output, so no two tasks touch the same
+/// element, and the pool's `run` blocks until every task completes.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Scheduling knobs of one GEMM dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct TileScheduler {
+    pub tile_m: usize,
+    pub tile_n: usize,
+    /// Force inline (single-thread) execution regardless of size.
+    pub inline_only: bool,
+}
+
+impl Default for TileScheduler {
+    fn default() -> Self {
+        TileScheduler { tile_m: TILE_M, tile_n: TILE_N, inline_only: false }
+    }
+}
+
+impl TileScheduler {
+    pub fn inline() -> Self {
+        TileScheduler { inline_only: true, ..Default::default() }
+    }
+
+    fn should_inline(&self, m: usize, k: usize, n: usize, n_tiles: usize) -> bool {
+        self.inline_only || n_tiles <= 1 || m * k * n < INLINE_FMA_THRESHOLD
+    }
+
+    /// Bit-exact bf16 GEMM over pre-converted operands: `x` row-major
+    /// `m × k` bf16 patterns, `wt` **column-major** `n × k` (row `j` =
+    /// column `j` of W — the weight-stationary load order, and the layout
+    /// of the pre-quantized weight planes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_bf16(
+        &self,
+        pool: &WorkerPool,
+        x: &[u16],
+        wt: &[u16],
+        m: usize,
+        k: usize,
+        n: usize,
+        mode: NormMode,
+    ) -> Vec<u16> {
+        assert_eq!(x.len(), m * k, "x shape");
+        assert_eq!(wt.len(), n * k, "wt shape");
+        let mut y = vec![0u16; m * n];
+        if m == 0 || n == 0 {
+            return y;
+        }
+        let tile_list = tiles(m, n, self.tile_m, self.tile_n);
+        if self.should_inline(m, k, n, tile_list.len()) {
+            for t in &tile_list {
+                bf16_tile_kernel(x, wt, k, n, *t, mode, y.as_mut_ptr());
+            }
+            return y;
+        }
+        let out = SendPtr(y.as_mut_ptr());
+        let tasks: Vec<_> = tile_list
+            .into_iter()
+            .map(|t| {
+                move || {
+                    // Destructure inside the body so the closure captures the
+                    // whole `SendPtr` (Send), not the raw-pointer field
+                    // (2021-edition closures capture disjoint fields).
+                    let SendPtr(ptr) = out;
+                    bf16_tile_kernel(x, wt, k, n, t, mode, ptr);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        y
+    }
+
+    /// FP32 reference GEMM, tiled over the same decomposition.  Per-element
+    /// accumulation order (ascending k) matches the naive triple loop, so
+    /// results are identical to the seed implementation bit for bit.
+    pub fn gemm_f32(
+        &self,
+        pool: &WorkerPool,
+        x: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), m * k, "x shape");
+        assert_eq!(w.len(), k * n, "w shape");
+        let mut y = vec![0f32; m * n];
+        if m == 0 || n == 0 {
+            return y;
+        }
+        let tile_list = tiles(m, n, self.tile_m, self.tile_n);
+        if self.should_inline(m, k, n, tile_list.len()) {
+            for t in &tile_list {
+                f32_tile_kernel(x, w, k, n, *t, y.as_mut_ptr());
+            }
+            return y;
+        }
+        let out = SendPtr(y.as_mut_ptr());
+        let tasks: Vec<_> = tile_list
+            .into_iter()
+            .map(|t| {
+                move || {
+                    let SendPtr(ptr) = out;
+                    f32_tile_kernel(x, w, k, n, t, ptr);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        y
+    }
+}
+
+/// Compute one bf16 output tile.  Columns are processed four at a time with
+/// independent accumulator chains (ILP over the otherwise serial software
+/// FMA), falling back to single columns for the remainder.
+fn bf16_tile_kernel(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    for r in t.r0..t.r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        let mut j = t.c0;
+        while j + 4 <= t.c1 {
+            let w0 = &wt[j * k..(j + 1) * k];
+            let w1 = &wt[(j + 1) * k..(j + 2) * k];
+            let w2 = &wt[(j + 2) * k..(j + 3) * k];
+            let w3 = &wt[(j + 3) * k..(j + 4) * k];
+            let mut a0 = ExtFloat::ZERO;
+            let mut a1 = ExtFloat::ZERO;
+            let mut a2 = ExtFloat::ZERO;
+            let mut a3 = ExtFloat::ZERO;
+            for i in 0..k {
+                let xi = xrow[i];
+                a0 = fma(xi, w0[i], a0, mode);
+                a1 = fma(xi, w1[i], a1, mode);
+                a2 = fma(xi, w2[i], a2, mode);
+                a3 = fma(xi, w3[i], a3, mode);
+            }
+            // SAFETY: (r, j..j+4) lie inside this task's disjoint tile.
+            unsafe {
+                *out.add(r * n + j) = a0.round_to_bf16();
+                *out.add(r * n + j + 1) = a1.round_to_bf16();
+                *out.add(r * n + j + 2) = a2.round_to_bf16();
+                *out.add(r * n + j + 3) = a3.round_to_bf16();
+            }
+            j += 4;
+        }
+        while j < t.c1 {
+            let wcol = &wt[j * k..(j + 1) * k];
+            let mut acc = ExtFloat::ZERO;
+            for (&xi, &wi) in xrow.iter().zip(wcol) {
+                acc = fma(xi, wi, acc, mode);
+            }
+            // SAFETY: (r, j) lies inside this task's disjoint tile.
+            unsafe {
+                *out.add(r * n + j) = acc.round_to_bf16();
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Compute one fp32 output tile (`w` row-major `k × n`).
+fn f32_tile_kernel(x: &[f32], w: &[f32], k: usize, n: usize, t: Tile, out: *mut f32) {
+    for r in t.r0..t.r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        for j in t.c0..t.c1 {
+            let mut acc = 0f32;
+            for i in 0..k {
+                acc += xrow[i] * w[i * n + j];
+            }
+            // SAFETY: (r, j) lies inside this task's disjoint tile.
+            unsafe {
+                *out.add(r * n + j) = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{column_dot, f32_to_bf16, ApproxNorm};
+    use crate::prng::Prng;
+    use crate::runtime::pool;
+    use crate::systolic::matmul::{matmul_f32, transpose_to_bf16};
+
+    #[test]
+    fn tiling_covers_output_exactly_once() {
+        for (m, n, tm, tn) in [(7, 5, 3, 2), (32, 32, 32, 32), (1, 1, 8, 8), (65, 33, 16, 16)] {
+            let ts = tiles(m, n, tm, tn);
+            let mut hit = vec![0u32; m * n];
+            for t in &ts {
+                assert!(t.r1 <= m && t.c1 <= n && t.r0 < t.r1 && t.c0 < t.c1);
+                for r in t.r0..t.r1 {
+                    for c in t.c0..t.c1 {
+                        hit[r * n + c] += 1;
+                    }
+                }
+            }
+            assert!(hit.iter().all(|&h| h == 1), "{m}x{n} tiles {tm}x{tn}");
+        }
+    }
+
+    #[test]
+    fn bf16_matches_column_dot_all_modes_and_shapes() {
+        let mut rng = Prng::new(51);
+        let sched = TileScheduler { tile_m: 4, tile_n: 3, inline_only: false };
+        for (m, k, n) in [(1usize, 1usize, 1usize), (5, 33, 7), (13, 16, 13), (3, 64, 9)] {
+            let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let wt = transpose_to_bf16(&w, k, n);
+            for mode in [
+                NormMode::Accurate,
+                NormMode::Approx(ApproxNorm::AN_1_2),
+                NormMode::Approx(ApproxNorm::AN_2_2),
+            ] {
+                let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                for r in 0..m {
+                    for j in 0..n {
+                        let a: Vec<u16> = (0..k).map(|i| x[r * k + i]).collect();
+                        let b: Vec<u16> = (0..k).map(|i| f32_to_bf16(w[i * n + j])).collect();
+                        assert_eq!(
+                            y[r * n + j],
+                            column_dot(&a, &b, mode),
+                            "({m},{k},{n}) r={r} j={j} mode={mode:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_and_inline_agree_bitwise() {
+        let mut rng = Prng::new(52);
+        let (m, k, n) = (37, 50, 29);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        let mode = NormMode::Approx(ApproxNorm::AN_1_2);
+        let par = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false }
+            .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+        let inl = TileScheduler::inline().gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+        assert_eq!(par, inl);
+    }
+
+    #[test]
+    fn tile_shape_does_not_change_results() {
+        let mut rng = Prng::new(53);
+        let (m, k, n) = (20, 24, 18);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        let mode = NormMode::Accurate;
+        let mut last: Option<Vec<u16>> = None;
+        for (tm, tn) in [(1, 1), (3, 5), (7, 4), (64, 64)] {
+            let sched = TileScheduler { tile_m: tm, tile_n: tn, inline_only: false };
+            let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            if let Some(prev) = &last {
+                assert_eq!(prev, &y, "tiling {tm}x{tn} changed bits");
+            }
+            last = Some(y);
+        }
+    }
+
+    #[test]
+    fn f32_matches_seed_reference() {
+        let mut rng = Prng::new(54);
+        let (m, k, n) = (19, 31, 23);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let sched = TileScheduler { tile_m: 4, tile_n: 4, inline_only: false };
+        let y = sched.gemm_f32(pool::global(), &x, &w, m, k, n);
+        let want = matmul_f32(&x, &w, m, k, n, 1);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn empty_gemm_is_fine() {
+        let sched = TileScheduler::default();
+        let y = sched.gemm_bf16(pool::global(), &[], &[], 0, 4, 0, NormMode::Accurate);
+        assert!(y.is_empty());
+    }
+}

@@ -15,6 +15,10 @@ use amfma::runtime::{Arg, Runtime};
 use amfma::systolic::{EngineMode, MatrixEngine};
 
 fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    if !Runtime::available() {
+        eprintln!("skipping: PJRT backend not vendored in this build");
+        return None;
+    }
     let p = amfma::data::tasks::artifacts_dir().join(name);
     p.exists().then_some(p)
 }
