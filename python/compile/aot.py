@@ -28,12 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax._src.lib import xla_client as xc
 
-from .kernels import ref
+from .golden import export_golden, GEMM_SHAPE
 from .kernels.matmul_kernel import matmul_pallas
 from .model import MODEL_CONFIG, encoder_forward
 
 SERVE_BATCH = 8
-GEMM_SHAPE = (32, 64, 32)  # M, K, N for the matmul artifacts
 
 
 def to_hlo_text(lowered) -> str:
@@ -93,14 +92,6 @@ def export_matmuls(out: str) -> None:
     ]:
         fn = lambda x, w, kw=kw: (matmul_pallas(x, w, block_m=m, block_n=n, **kw),)
         write(f"{out}/matmul_{label}.hlo.txt", to_hlo_text(jax.jit(fn).lower(xs, ws)))
-
-
-def export_golden(out: str) -> None:
-    os.makedirs(f"{out}/golden", exist_ok=True)
-    ref.gen_golden_fma(f"{out}/golden/golden_fma.bin")
-    ref.gen_golden_matmul(f"{out}/golden/golden_matmul.bin",
-                          m=GEMM_SHAPE[0], kk=GEMM_SHAPE[1], n=GEMM_SHAPE[2])
-    print(f"  wrote {out}/golden/golden_fma.bin, golden_matmul.bin")
 
 
 def main():

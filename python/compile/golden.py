@@ -1,0 +1,46 @@
+"""Generate the Rust<->Python golden parity vectors with **no JAX/numpy
+dependency** — only the pure-Python scalar oracle (`kernels/ref.py`).
+
+This is the CI entry point for `rust/tests/integration_golden.rs`: the
+workflow runs it on a stock Python before `cargo test` so the golden tests
+actually execute (and fail loudly via `AMFMA_REQUIRE_GOLDEN=1`) instead of
+skipping.  The full artifact export (`python -m compile.aot`) calls
+`export_golden` from here, so both paths write identical bits.
+
+Usage: python python/compile/golden.py [--out artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__:
+    from .kernels import ref
+else:  # run as a plain script: make `compile` importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile.kernels import ref
+
+# M, K, N of the matmul golden vectors — shared with the AOT HLO export so
+# the two artifact sets always describe the same GEMM.
+GEMM_SHAPE = (32, 64, 32)
+
+
+def export_golden(out: str) -> None:
+    os.makedirs(f"{out}/golden", exist_ok=True)
+    ref.gen_golden_fma(f"{out}/golden/golden_fma.bin")
+    m, kk, n = GEMM_SHAPE
+    ref.gen_golden_matmul(f"{out}/golden/golden_matmul.bin", m=m, kk=kk, n=n)
+    print(f"  wrote {out}/golden/golden_fma.bin, golden_matmul.bin")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts")
+    args = ap.parse_args()
+    export_golden(args.out)
+
+
+if __name__ == "__main__":
+    main()

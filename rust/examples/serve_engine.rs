@@ -1,11 +1,15 @@
-//! End-to-end serving driver — the full stack under load.
+//! End-to-end serving driver — the full stack under variable-length load.
 //!
 //! Router → dynamic batcher → engine workers over the trained task models
 //! (falls back to randomly initialized models when artifacts are absent, so
-//! the example always runs).  Two replicas with different numeric modes are
-//! deployed behind one router: the bf16an-1-2 "efficient" engine and the
-//! fp32 reference; the load generator splits traffic and the report
-//! contrasts latency, throughput, batch shapes and agreement of predictions.
+//! the example always runs).  Three replicas are deployed behind one
+//! router: a **short-sequence** bf16an-1-2 deployment (length envelope
+//! `max_len = seq/2`, so its batches stay dense), the general bf16an-1-2
+//! "efficient" engine, and the fp32 reference.  The load generator
+//! truncates each example to a random live length (`--varlen`, default on;
+//! `--fixed` restores full-length traffic), splits traffic across modes,
+//! and the report contrasts latency, throughput, batch shapes, padding
+//! efficiency and agreement of predictions.
 //!
 //! Run: `cargo run --release --example serve_engine -- [--requests 512]`
 
@@ -58,12 +62,20 @@ fn main() {
     let args = Args::from_env();
     let requests = args.get_usize("requests", 512);
     let concurrency = args.get_usize("concurrency", 8);
+    let varlen = !args.has_flag("fixed");
 
     let (models, tasks) = load_models();
-    println!("deploying 2 replicas: bf16an-1-2 (efficient) + fp32 (reference)");
+    let short_cap = tasks.iter().map(|t| t.seq_len).max().unwrap_or(24) / 2;
+    println!(
+        "deploying 3 replicas: bf16an-1-2≤{short_cap} (short lane) + bf16an-1-2 + fp32 (reference)"
+    );
 
     let mode_eff = EngineMode::parse("bf16an-1-2").unwrap();
     let mode_ref = EngineMode::Fp32;
+    let srv_short = InferenceServer::start(
+        models.clone(),
+        ServerConfig { mode: mode_eff, ..Default::default() },
+    );
     let srv_eff = InferenceServer::start(
         models.clone(),
         ServerConfig { mode: mode_eff, ..Default::default() },
@@ -73,8 +85,9 @@ fn main() {
         ServerConfig { mode: mode_ref, ..Default::default() },
     );
     let router = Router::new(vec![
-        Replica { mode: mode_eff, handle: srv_eff.handle() },
-        Replica { mode: mode_ref, handle: srv_ref.handle() },
+        Replica::with_max_len(mode_eff, short_cap, srv_short.handle()),
+        Replica::new(mode_eff, srv_eff.handle()),
+        Replica::new(mode_ref, srv_ref.handle()),
     ]);
 
     let t0 = Instant::now();
@@ -91,7 +104,11 @@ fn main() {
                 for i in 0..requests / concurrency {
                     let t = &tasks[(c + i) % tasks.len()];
                     let ex = rng.below(t.n_dev().max(1) as u64) as usize;
-                    let toks = t.dev_example(ex).to_vec();
+                    let mut toks = t.dev_example(ex).to_vec();
+                    if varlen {
+                        let len = 1 + rng.below(toks.len() as u64) as usize;
+                        toks.truncate(len);
+                    }
                     // 1-in-4 requests are "shadow" pairs sent to both modes
                     // to measure prediction agreement online.
                     if i % 4 == 0 {
@@ -116,8 +133,8 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n--- per-replica metrics ---");
-    for (mode, snap) in router.metrics() {
-        println!("[{mode}]\n{}\n", snap.render());
+    for (label, snap) in router.metrics() {
+        println!("[{label}]\n{}\n", snap.render());
     }
     let served: u64 = router.metrics().iter().map(|(_, s)| s.completed).sum();
     println!("aggregate throughput: {:.1} seq/s over {wall:.2}s", served as f64 / wall);
@@ -131,6 +148,7 @@ fn main() {
             100.0 * a as f64 / t as f64
         );
     }
+    srv_short.shutdown();
     srv_eff.shutdown();
     srv_ref.shutdown();
 }

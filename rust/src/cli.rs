@@ -4,7 +4,7 @@
 //! amfma eval  [--limit N] [--batch N] [--modes a,b,c]    Table I
 //! amfma hist  [--task NAME] [--examples N] [--mode M]    Fig 6
 //! amfma cost  [--fig4] [--fig7] [--k K --lambda L]       Fig 4 / Fig 7
-//! amfma serve [--mode M] [--requests N] [--concurrency C] serving demo
+//! amfma serve [--mode M] [--requests N] [--varlen]       serving demo
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
 //! amfma info                                             artifact status
 //! ```
@@ -39,6 +39,7 @@ USAGE:
   amfma hist  [--task sst2] [--examples N]                      reproduce Fig 6
   amfma cost  [--fig4] [--fig7] [--k K --lambda L]              reproduce Fig 4/7
   amfma serve [--mode bf16an-1-2] [--requests N] [--concurrency C]
+              [--varlen] [--length-bucket W]                    batching server
   amfma cycles --m M --k K --n N [--grid 16]
   amfma info";
 
@@ -176,6 +177,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 256);
     let concurrency = args.get_usize("concurrency", 8);
     let max_batch = args.get_usize("max-batch", 16);
+    let length_bucket = args.get_usize("length-bucket", 8);
+    // --varlen: truncate each example to a random live length, exercising
+    // the masked/padded batching path.
+    let varlen = args.has_flag("varlen");
 
     let mut models = HashMap::new();
     let mut tasks = Vec::new();
@@ -200,7 +205,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, ..Default::default() },
+        ServerConfig { mode, max_batch, length_bucket, ..Default::default() },
     );
     let handle = srv.handle();
     let t0 = std::time::Instant::now();
@@ -213,7 +218,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 for i in 0..requests / concurrency {
                     let t = &tasks[(i + c) % tasks.len()];
                     let ex = rng.below(t.n_dev() as u64) as usize;
-                    let toks = t.dev_example(ex).to_vec();
+                    let mut toks = t.dev_example(ex).to_vec();
+                    if varlen {
+                        let len = 1 + rng.below(toks.len() as u64) as usize;
+                        toks.truncate(len);
+                    }
                     let _ = handle.classify(&t.name, toks);
                 }
             });

@@ -1,5 +1,11 @@
-//! Serving metrics: request counters, latency percentiles, batch-size
-//! distribution, queue depth — the observability layer of the coordinator.
+//! Serving metrics: request counters, latency percentiles, batch-size and
+//! padding-shape accounting — the observability layer of the coordinator.
+//!
+//! Counter invariant (asserted by `rust/tests/integration_serving.rs`):
+//! every submitted request is eventually **completed** (a successful reply)
+//! or **rejected** (shed at the ingress queue, or answered with an explicit
+//! error reply — the `errored` counter breaks the latter out), so
+//! `submitted == completed + rejected` once traffic has drained.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -9,9 +15,17 @@ use std::time::Duration;
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests that got no successful reply: queue sheds + error replies.
     pub rejected: AtomicU64,
+    /// Subset of `rejected` answered with an explicit error reply
+    /// (unknown task, invalid length) rather than shed at the queue.
+    pub errored: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Padded-shape accounting for variable-length batches: tokens the
+    /// engine computed (`B·S` per batch) vs tokens that were live.
+    pub padded_tokens: AtomicU64,
+    pub useful_tokens: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -32,12 +46,36 @@ impl Metrics {
         self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Record one explicit error reply (unknown task / invalid length).
+    pub fn record_error_reply(&self) {
+        self.errored.fetch_add(1, Ordering::Relaxed);
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the shape of one padded batch: `seqs` sequences padded to
+    /// `padded_len` tokens each, of which `useful` tokens were live.
+    pub fn record_shape(&self, seqs: usize, padded_len: usize, useful: usize) {
+        self.padded_tokens.fetch_add((seqs * padded_len) as u64, Ordering::Relaxed);
+        self.useful_tokens.fetch_add(useful as u64, Ordering::Relaxed);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
             0.0
         } else {
             self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Live fraction of the padded token volume (1.0 when nothing padded —
+    /// or nothing served yet).
+    pub fn padding_efficiency(&self) -> f64 {
+        let padded = self.padded_tokens.load(Ordering::Relaxed);
+        if padded == 0 {
+            1.0
+        } else {
+            self.useful_tokens.load(Ordering::Relaxed) as f64 / padded as f64
         }
     }
 
@@ -55,8 +93,10 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            errored: self.errored.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
+            padding_efficiency: self.padding_efficiency(),
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
@@ -70,8 +110,10 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub errored: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    pub padding_efficiency: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -81,14 +123,16 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests: submitted={} completed={} rejected={}\n\
-             batching: {} batches, mean size {:.2}\n\
+            "requests: submitted={} completed={} rejected={} (errored={})\n\
+             batching: {} batches, mean size {:.2}, padding efficiency {:.1}%\n\
              latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.submitted,
             self.completed,
             self.rejected,
+            self.errored,
             self.batches,
             self.mean_batch,
+            100.0 * self.padding_efficiency,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
@@ -114,6 +158,30 @@ mod tests {
     }
 
     #[test]
+    fn percentile_exact_positions() {
+        // 1..=100 ms: the nearest-rank estimator lands on round values.
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_millis(i));
+        }
+        let s = m.snapshot();
+        assert!((s.p50_ms - 51.0).abs() < 1.5, "p50 = {}", s.p50_ms);
+        assert!((s.p95_ms - 95.0).abs() < 1.5, "p95 = {}", s.p95_ms);
+        assert!((s.p99_ms - 99.0).abs() < 1.5, "p99 = {}", s.p99_ms);
+        assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn single_sample_percentiles_collapse() {
+        let m = Metrics::default();
+        m.record_latency(Duration::from_millis(7));
+        let s = m.snapshot();
+        assert_eq!(s.p50_ms, 7.0);
+        assert_eq!(s.p99_ms, 7.0);
+        assert_eq!(s.max_ms, 7.0);
+    }
+
+    #[test]
     fn batch_accounting() {
         let m = Metrics::default();
         m.record_batch(4);
@@ -122,9 +190,37 @@ mod tests {
     }
 
     #[test]
+    fn padding_efficiency_accounting() {
+        let m = Metrics::default();
+        assert_eq!(m.padding_efficiency(), 1.0, "no traffic => fully efficient");
+        // 4 sequences padded to 8 tokens, 20 live
+        m.record_shape(4, 8, 20);
+        assert_eq!(m.padded_tokens.load(Ordering::Relaxed), 32);
+        assert_eq!(m.useful_tokens.load(Ordering::Relaxed), 20);
+        assert!((m.padding_efficiency() - 20.0 / 32.0).abs() < 1e-12);
+        // a fully-live batch pulls efficiency up
+        m.record_shape(2, 4, 8);
+        assert!((m.snapshot().padding_efficiency - 28.0 / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_replies_count_as_rejected() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(1));
+        m.record_error_reply();
+        m.rejected.fetch_add(1, Ordering::Relaxed); // queue shed
+        let s = m.snapshot();
+        assert_eq!(s.errored, 1);
+        assert_eq!(s.submitted, s.completed + s.rejected, "counters must balance");
+    }
+
+    #[test]
     fn empty_snapshot_is_zero() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p99_ms, 0.0);
         assert_eq!(s.completed, 0);
+        assert_eq!(s.errored, 0);
+        assert_eq!(s.padding_efficiency, 1.0);
     }
 }

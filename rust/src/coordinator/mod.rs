@@ -1,9 +1,11 @@
 //! Serving coordinator — the L3 runtime layer.
 //!
-//! client → [`router::Router`] → [`server::InferenceServer`] (bounded
-//! ingress queue + dynamic batcher) → engine workers (the simulated matrix
-//! engine, or the PJRT-loaded FP32 artifact).  [`metrics`] provides the
-//! latency/batching observability used by the serving benchmarks.
+//! client → [`router::Router`] (mode + length preference) →
+//! [`server::InferenceServer`] (bounded ingress queue + dynamic batcher
+//! bucketing by task and padded length) → engine workers running the
+//! masked variable-length encoder on the shared pool-backed engine.
+//! [`metrics`] provides the latency/batching/padding observability used by
+//! the serving benchmarks.
 
 pub mod metrics;
 pub mod router;
@@ -11,4 +13,7 @@ pub mod server;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Replica, RouteError, Router};
-pub use server::{InferenceServer, Reply, Request, ServerConfig, ServerHandle, SubmitError};
+pub use server::{
+    InferenceServer, Reply, ReplyResult, Request, RequestError, ServerConfig, ServerHandle,
+    SubmitError,
+};

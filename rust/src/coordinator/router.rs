@@ -1,6 +1,14 @@
 //! Request router: fronts a set of engine replicas (possibly with
-//! different numeric modes) and routes each request by mode preference +
-//! round-robin, with busy-failover across replicas of the same mode.
+//! different numeric modes and sequence-length envelopes) and routes each
+//! request by mode + length preference, with round-robin inside a
+//! preference tier and busy-failover across tiers.
+//!
+//! Length preference: a replica may advertise `max_len` — the longest
+//! sequence it accepts (e.g. a dedicated short-sequence deployment whose
+//! batches stay dense).  Candidates are tried tightest-envelope-first, so
+//! short requests fill the short replica and only spill to the general
+//! one under load; requests longer than every envelope are rejected up
+//! front with [`RouteError::NoReplicaForMode`].
 //!
 //! This is the top of the serving stack: client → Router → InferenceServer
 //! (dynamic batcher) → engine workers.
@@ -10,11 +18,35 @@ use std::sync::Arc;
 
 use crate::systolic::EngineMode;
 
-use super::server::{Reply, ServerHandle, SubmitError};
+use super::server::{
+    BACKOFF_CAP, BACKOFF_START, Reply, ReplyResult, RequestError, ServerHandle, SubmitError,
+};
 
 pub struct Replica {
     pub mode: EngineMode,
+    /// Longest sequence this replica accepts; `None` = unlimited.
+    pub max_len: Option<usize>,
     pub handle: ServerHandle,
+}
+
+impl Replica {
+    /// A replica that serves any length.
+    pub fn new(mode: EngineMode, handle: ServerHandle) -> Replica {
+        Replica { mode, max_len: None, handle }
+    }
+
+    /// A replica dedicated to sequences of at most `max_len` tokens.
+    pub fn with_max_len(mode: EngineMode, max_len: usize, handle: ServerHandle) -> Replica {
+        Replica { mode, max_len: Some(max_len), handle }
+    }
+
+    /// Display label: mode plus the length envelope, if any.
+    pub fn label(&self) -> String {
+        match self.max_len {
+            Some(l) => format!("{}≤{l}", self.mode.label()),
+            None => self.mode.label(),
+        }
+    }
 }
 
 pub struct Router {
@@ -24,9 +56,12 @@ pub struct Router {
 
 #[derive(Debug)]
 pub enum RouteError {
+    /// No replica matches the requested mode and sequence length.
     NoReplicaForMode,
     AllBusy,
     Closed,
+    /// The serving stack answered with an explicit rejection.
+    Rejected(RequestError),
 }
 
 impl Router {
@@ -38,35 +73,50 @@ impl Router {
         self.replicas.len()
     }
 
-    fn candidates(&self, mode: Option<EngineMode>) -> Vec<&Replica> {
-        self.replicas
-            .iter()
-            .filter(|r| mode.map(|m| r.mode == m).unwrap_or(true))
-            .collect()
-    }
-
-    /// Route one request. `mode = None` means "any replica".
-    /// Tries every matching replica once (round-robin start) before
-    /// reporting AllBusy.
+    /// Route one request. `mode = None` means "any replica".  Candidates
+    /// matching the mode and length are grouped by length envelope
+    /// (tightest first); within a tier the start replica rotates
+    /// round-robin, and every candidate is tried once before reporting
+    /// `AllBusy`.
     pub fn route(
         &self,
         task: &str,
         tokens: Vec<u16>,
         mode: Option<EngineMode>,
-    ) -> Result<std::sync::mpsc::Receiver<Reply>, RouteError> {
-        let cands = self.candidates(mode);
+    ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
+        let mut cands: Vec<&Replica> = self
+            .replicas
+            .iter()
+            .filter(|r| mode.map(|m| r.mode == m).unwrap_or(true))
+            .filter(|r| r.max_len.map(|ml| tokens.len() <= ml).unwrap_or(true))
+            .collect();
         if cands.is_empty() {
             return Err(RouteError::NoReplicaForMode);
         }
+        cands.sort_by_key(|r| r.max_len.unwrap_or(usize::MAX));
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut closed = 0;
-        for i in 0..cands.len() {
-            let r = cands[(start + i) % cands.len()];
-            match r.handle.submit(task, tokens.clone()) {
-                Ok(rx) => return Ok(rx),
-                Err(SubmitError::Busy) => continue,
-                Err(SubmitError::Closed) => closed += 1,
+        let mut i = 0;
+        while i < cands.len() {
+            // tier [i, j): replicas sharing the same length envelope
+            let mut j = i + 1;
+            while j < cands.len() && cands[j].max_len == cands[i].max_len {
+                j += 1;
             }
+            let tier = j - i;
+            for g in 0..tier {
+                let r = cands[i + (start + g) % tier];
+                match r.handle.submit(task, tokens.clone()) {
+                    Ok(rx) => return Ok(rx),
+                    Err(SubmitError::Busy) => continue,
+                    // submit() never returns Rejected (explicit rejections
+                    // arrive on the reply channel); if it ever did, trying
+                    // the next replica beats miscounting it as Closed.
+                    Err(SubmitError::Rejected(_)) => continue,
+                    Err(SubmitError::Closed) => closed += 1,
+                }
+            }
+            i = j;
         }
         if closed == cands.len() {
             Err(RouteError::Closed)
@@ -75,19 +125,28 @@ impl Router {
         }
     }
 
-    /// Blocking route: spins on AllBusy (the caller is the load generator
-    /// in our examples; a network front-end would shed instead).
+    /// Blocking route: retries `AllBusy` with bounded exponential backoff
+    /// (the caller is the load generator in our examples; a network
+    /// front-end would shed instead).
     pub fn route_blocking(
         &self,
         task: &str,
         tokens: Vec<u16>,
         mode: Option<EngineMode>,
     ) -> Result<Reply, RouteError> {
+        let mut backoff = BACKOFF_START;
         loop {
             match self.route(task, tokens.clone(), mode) {
-                Ok(rx) => return rx.recv().map_err(|_| RouteError::Closed),
+                Ok(rx) => {
+                    return match rx.recv() {
+                        Ok(Ok(reply)) => Ok(reply),
+                        Ok(Err(e)) => Err(RouteError::Rejected(e)),
+                        Err(_) => Err(RouteError::Closed),
+                    }
+                }
                 Err(RouteError::AllBusy) => {
-                    std::thread::sleep(std::time::Duration::from_micros(200))
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
                 }
                 Err(e) => return Err(e),
             }
@@ -102,7 +161,7 @@ impl Router {
             let ptr = Arc::as_ptr(&r.handle.metrics);
             if !seen.contains(&ptr) {
                 seen.push(ptr);
-                out.push((r.mode.label(), r.handle.metrics.snapshot()));
+                out.push((r.label(), r.handle.metrics.snapshot()));
             }
         }
         out
@@ -112,11 +171,12 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::server::{InferenceServer, ServerConfig};
+    use crate::coordinator::server::{InferenceServer, Request, ServerConfig};
     use crate::model::{ModelConfig, Weights};
     use crate::prng::Prng;
     use crate::NormMode;
     use std::collections::HashMap;
+    use std::sync::mpsc::{sync_channel, Receiver};
 
     fn mk_server(mode: EngineMode) -> (InferenceServer, ServerHandle) {
         let cfg = ModelConfig {
@@ -130,16 +190,21 @@ mod tests {
         (srv, h)
     }
 
+    /// A bare handle over a raw channel: lets tests exercise Busy/Closed
+    /// deterministically (depth-0 channel with no reader = always Busy;
+    /// dropped receiver = Closed) and inspect where requests land.
+    fn raw_handle(depth: usize) -> (ServerHandle, Receiver<Request>) {
+        let (tx, rx) = sync_channel(depth);
+        (ServerHandle::over_channel(tx), rx)
+    }
+
     #[test]
     fn routes_by_mode() {
         let m1 = EngineMode::Bf16(NormMode::Accurate);
         let m2 = EngineMode::Fp32;
         let (s1, h1) = mk_server(m1);
         let (s2, h2) = mk_server(m2);
-        let router = Router::new(vec![
-            Replica { mode: m1, handle: h1 },
-            Replica { mode: m2, handle: h2 },
-        ]);
+        let router = Router::new(vec![Replica::new(m1, h1), Replica::new(m2, h2)]);
         let mut rng = Prng::new(9);
         let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
         let r = router.route_blocking("sst2", toks.clone(), Some(m2)).unwrap();
@@ -155,7 +220,7 @@ mod tests {
     fn unknown_mode_errors() {
         let m1 = EngineMode::Fp32;
         let (s1, h1) = mk_server(m1);
-        let router = Router::new(vec![Replica { mode: m1, handle: h1 }]);
+        let router = Router::new(vec![Replica::new(m1, h1)]);
         let err = router.route("sst2", vec![0; 8], Some(EngineMode::Bf16(NormMode::Accurate)));
         assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
         s1.shutdown();
@@ -166,10 +231,7 @@ mod tests {
         let mode = EngineMode::Fp32;
         let (s1, h1) = mk_server(mode);
         let (s2, h2) = mk_server(mode);
-        let router = Router::new(vec![
-            Replica { mode, handle: h1 },
-            Replica { mode, handle: h2 },
-        ]);
+        let router = Router::new(vec![Replica::new(mode, h1), Replica::new(mode, h2)]);
         let mut rng = Prng::new(10);
         let mut rxs = Vec::new();
         for _ in 0..20 {
@@ -177,7 +239,7 @@ mod tests {
             rxs.push(router.route("sst2", toks, None).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().expect("served");
         }
         let c1 = s1.handle().metrics.snapshot().completed;
         let c2 = s2.handle().metrics.snapshot().completed;
@@ -185,5 +247,96 @@ mod tests {
         assert!(c1 > 0 && c2 > 0, "both replicas should serve: {c1}/{c2}");
         s1.shutdown();
         s2.shutdown();
+    }
+
+    #[test]
+    fn length_preference_prefers_tightest_replica() {
+        let mode = EngineMode::Fp32;
+        let (h_short, rx_short) = raw_handle(8);
+        let (h_long, rx_long) = raw_handle(8);
+        let router = Router::new(vec![
+            Replica::new(mode, h_long),
+            Replica::with_max_len(mode, 4, h_short),
+        ]);
+        // A short request goes to the short-envelope replica regardless of
+        // declaration order or round-robin state...
+        for _ in 0..4 {
+            router.route("sst2", vec![1, 2, 3], None).unwrap();
+        }
+        for _ in 0..4 {
+            let req = rx_short.try_recv().expect("short replica must receive");
+            assert_eq!(req.tokens.len(), 3);
+        }
+        assert!(rx_long.try_recv().is_err(), "long replica must stay idle");
+        // ...a long request skips it.
+        router.route("sst2", vec![1; 6], None).unwrap();
+        assert_eq!(rx_long.try_recv().expect("long replica").tokens.len(), 6);
+        assert!(rx_short.try_recv().is_err());
+    }
+
+    #[test]
+    fn over_length_requests_have_no_candidate() {
+        let mode = EngineMode::Fp32;
+        let (h_short, _rx) = raw_handle(8);
+        let router = Router::new(vec![Replica::with_max_len(mode, 4, h_short)]);
+        let err = router.route("sst2", vec![0; 5], None);
+        assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
+    }
+
+    #[test]
+    fn busy_replica_fails_over() {
+        let mode = EngineMode::Fp32;
+        // depth-0 rendezvous channel with no reader: try_send always fails
+        // with Full, i.e. a deterministically-busy replica.
+        let (h_busy, _rx_busy) = raw_handle(0);
+        let (h_ok, rx_ok) = raw_handle(8);
+        // The busy replica sits in the preferred (tighter) tier.
+        let router = Router::new(vec![
+            Replica::with_max_len(mode, 8, h_busy),
+            Replica::new(mode, h_ok),
+        ]);
+        router.route("sst2", vec![1, 2], None).expect("must fail over");
+        assert_eq!(rx_ok.try_recv().expect("failover target").tokens.len(), 2);
+    }
+
+    #[test]
+    fn all_busy_and_closed_paths() {
+        let mode = EngineMode::Fp32;
+        let (h1, _rx1) = raw_handle(0);
+        let (h2, _rx2) = raw_handle(0);
+        let router = Router::new(vec![Replica::new(mode, h1), Replica::new(mode, h2)]);
+        assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
+
+        let (h3, rx3) = raw_handle(4);
+        let (h4, rx4) = raw_handle(4);
+        drop(rx3);
+        drop(rx4);
+        let router = Router::new(vec![Replica::new(mode, h3), Replica::new(mode, h4)]);
+        assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::Closed)));
+
+        // Mixed busy + closed reports AllBusy (a retry may still succeed).
+        let (h5, _rx5) = raw_handle(0);
+        let (h6, rx6) = raw_handle(4);
+        drop(rx6);
+        let router = Router::new(vec![Replica::new(mode, h5), Replica::new(mode, h6)]);
+        assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
+    }
+
+    #[test]
+    fn route_blocking_surfaces_explicit_rejections() {
+        let mode = EngineMode::Fp32;
+        let (s1, h1) = mk_server(mode);
+        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let err = router.route_blocking("no-such-task", vec![1, 2], None);
+        assert!(matches!(err, Err(RouteError::Rejected(RequestError::UnknownTask))), "{err:?}");
+        s1.shutdown();
+    }
+
+    #[test]
+    fn replica_labels_show_length_envelope() {
+        let mode = EngineMode::Fp32;
+        let (h1, _rx) = raw_handle(1);
+        assert_eq!(Replica::new(mode, h1.clone()).label(), "fp32");
+        assert_eq!(Replica::with_max_len(mode, 16, h1).label(), "fp32≤16");
     }
 }

@@ -1,13 +1,19 @@
 //! The inference server: bounded ingress queue (backpressure), a dynamic
-//! batcher thread, and engine workers running the encoder on one **shared**
+//! batcher thread that buckets pending requests by `(task, padded-length
+//! bucket)`, and engine workers running the encoder on one **shared**
 //! matrix engine whose GEMM tiles execute on the process-wide worker pool
-//! ([`crate::runtime::pool`]).  Workers no longer construct private engines
-//! per batch, and the model weights arrive pre-quantized to engine format
-//! (bf16 planes built once at load, see [`crate::model::Weights`]), so the
-//! request path performs no weight conversion and its GEMMs spawn no
-//! threads.  (The encoder's attention block still uses scoped threads for
-//! its per-head loop — see `Encoder::attention` — the remaining spawn site
-//! on this path.)
+//! ([`crate::runtime::pool`]).  Requests carry sequences of **any** length
+//! in `1..=max_seq`; a batch is padded to its longest member and the
+//! encoder masks the padding ([`crate::model::Encoder::forward_padded`]),
+//! so short requests never pay full-`max_seq` GEMM cost and the returned
+//! logits are bit-identical to running each sequence alone.  The request
+//! path spawns no threads anywhere: weights arrive pre-quantized to engine
+//! format (see [`crate::model::Weights`]), GEMM tiles and the encoder's
+//! per-sequence attention tasks all run on the persistent pool.
+//!
+//! Every accepted request is answered: successful sequences get
+//! `Ok(Reply)`, unknown tasks and invalid lengths get an explicit
+//! `Err(RequestError)` reply instead of a silently dropped sender.
 //!
 //! Everything is std-threads + channels (no async runtime is vendored in
 //! this environment); the architecture mirrors a vLLM-style router→batcher→
@@ -28,7 +34,7 @@ use super::metrics::Metrics;
 pub struct Request {
     pub task: String,
     pub tokens: Vec<u16>,
-    pub reply: SyncSender<Reply>,
+    pub reply: SyncSender<ReplyResult>,
     pub submitted_at: Instant,
 }
 
@@ -38,6 +44,19 @@ pub struct Reply {
     pub logits: Vec<f32>,
     pub latency: Duration,
 }
+
+/// Why a request was explicitly rejected by the serving stack (as opposed
+/// to shed at the ingress queue with [`SubmitError::Busy`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// No model is deployed under the requested task name.
+    UnknownTask,
+    /// Sequence length outside `1..=max_seq` for the task's model.
+    InvalidLength { len: usize, max_seq: usize },
+}
+
+/// What comes back on the reply channel: logits, or an explicit rejection.
+pub type ReplyResult = Result<Reply, RequestError>;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -50,6 +69,12 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Engine worker threads.
     pub workers: usize,
+    /// Length-bucket width in tokens: pending requests are grouped by
+    /// `(task, ceil(len / length_bucket))`, so only sequences within the
+    /// same bucket share a batch (and its padding).  Wider buckets batch
+    /// more aggressively at the cost of more padding; a width `>= max_seq`
+    /// restores one-bucket-per-task batching.
+    pub length_bucket: usize,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +85,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(5),
             queue_depth: 256,
             workers: 2,
+            length_bucket: 8,
         }
     }
 }
@@ -77,11 +103,30 @@ pub enum SubmitError {
     Busy,
     /// Server shut down.
     Closed,
+    /// The server answered with an explicit rejection (blocking wrappers
+    /// only — [`ServerHandle::submit`] itself never returns this).
+    Rejected(RequestError),
 }
 
+/// Initial sleep of the blocking wrappers' bounded exponential backoff.
+pub(crate) const BACKOFF_START: Duration = Duration::from_micros(50);
+/// Backoff cap: retries never sleep longer than this per attempt.
+pub(crate) const BACKOFF_CAP: Duration = Duration::from_millis(10);
+
 impl ServerHandle {
+    /// Test-only: a handle over a raw request channel, used by the router
+    /// unit tests to fabricate deterministically busy/closed replicas.
+    #[cfg(test)]
+    pub(crate) fn over_channel(tx: SyncSender<Request>) -> ServerHandle {
+        ServerHandle { tx, metrics: Arc::new(Metrics::default()) }
+    }
+
     /// Non-blocking submit; returns the reply channel.
-    pub fn submit(&self, task: &str, tokens: Vec<u16>) -> Result<Receiver<Reply>, SubmitError> {
+    pub fn submit(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+    ) -> Result<Receiver<ReplyResult>, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
         let req = Request {
             task: task.to_string(),
@@ -96,16 +141,34 @@ impl ServerHandle {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(TrySendError::Disconnected(_)) => {
+                // Count the shed so `submitted == completed + rejected`
+                // holds even for submits that race a shutdown.
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
         }
     }
 
-    /// Blocking convenience wrapper.
+    /// Blocking convenience wrapper: retries `Busy` with bounded
+    /// exponential backoff (doubling from [`BACKOFF_START`], capped at
+    /// [`BACKOFF_CAP`]) instead of a fixed-rate spin, and surfaces explicit
+    /// server rejections as [`SubmitError::Rejected`].
     pub fn classify(&self, task: &str, tokens: Vec<u16>) -> Result<Reply, SubmitError> {
+        let mut backoff = BACKOFF_START;
         loop {
             match self.submit(task, tokens.clone()) {
-                Ok(rx) => return rx.recv().map_err(|_| SubmitError::Closed),
-                Err(SubmitError::Busy) => std::thread::sleep(Duration::from_micros(200)),
+                Ok(rx) => {
+                    return match rx.recv() {
+                        Ok(Ok(reply)) => Ok(reply),
+                        Ok(Err(e)) => Err(SubmitError::Rejected(e)),
+                        Err(_) => Err(SubmitError::Closed),
+                    }
+                }
+                Err(SubmitError::Busy) => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -124,7 +187,7 @@ impl InferenceServer {
     pub fn start(models: HashMap<String, Arc<Weights>>, cfg: ServerConfig) -> InferenceServer {
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers.max(1) * 2);
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
@@ -156,7 +219,11 @@ impl InferenceServer {
                     guard.recv()
                 };
                 let Ok(batch) = batch else { break };
-                run_batch(&models, &engine, batch, &metrics);
+                // A panicking batch (which drops its reply senders — the
+                // clients observe `Closed`) must not kill the worker.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_batch(&models, &engine, batch, &metrics);
+                }));
             }));
         }
 
@@ -170,8 +237,9 @@ impl InferenceServer {
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.stop.store(true, Ordering::SeqCst);
         let metrics = self.handle.metrics.clone();
-        // Dropping our sender closes the ingress; batcher then exits and
-        // closes the batch channel, so workers exit too.
+        // Dropping our sender closes the ingress; batcher then drains its
+        // buckets and exits, closing the batch channel so workers finish
+        // the remaining batches and exit too.
         let ServerHandle { tx, .. } = self.handle.clone();
         drop(tx);
         self.handle = ServerHandle { tx: sync_channel(1).0, metrics: metrics.clone() };
@@ -182,6 +250,12 @@ impl InferenceServer {
     }
 }
 
+/// Pending-bucket key: requests only share a batch (and its padding) with
+/// requests of the same task in the same padded-length bucket.
+fn bucket_of(len: usize, width: usize) -> usize {
+    len.div_ceil(width.max(1))
+}
+
 fn batcher_loop(
     rx: Receiver<Request>,
     btx: SyncSender<Vec<Request>>,
@@ -189,18 +263,29 @@ fn batcher_loop(
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
 ) {
-    // Pending buckets keyed by task (different tasks use different weights,
-    // so they cannot share a batch).
-    let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
+    // Pending buckets keyed by (task, length bucket): different tasks use
+    // different weights so they cannot share a batch, and wildly different
+    // lengths should not share padding.
+    let mut pending: HashMap<(String, usize), Vec<Request>> = HashMap::new();
+    let flush_all = |pending: &mut HashMap<(String, usize), Vec<Request>>| {
+        for (_, batch) in pending.drain() {
+            if !batch.is_empty() {
+                metrics.record_batch(batch.len());
+                if btx.send(batch).is_err() {
+                    return;
+                }
+            }
+        }
+    };
     loop {
         let timeout = cfg.max_wait / 2;
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                let task = req.task.clone();
-                let bucket = pending.entry(task.clone()).or_default();
+                let key = (req.task.clone(), bucket_of(req.tokens.len(), cfg.length_bucket));
+                let bucket = pending.entry(key.clone()).or_default();
                 bucket.push(req);
                 if bucket.len() >= cfg.max_batch {
-                    let batch = pending.remove(&task).unwrap();
+                    let batch = pending.remove(&key).unwrap();
                     metrics.record_batch(batch.len());
                     if btx.send(batch).is_err() {
                         return;
@@ -210,25 +295,33 @@ fn batcher_loop(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // flush what's left and exit
-                for (_, batch) in pending.drain() {
-                    if !batch.is_empty() {
-                        metrics.record_batch(batch.len());
-                        let _ = btx.send(batch);
-                    }
-                }
+                flush_all(&mut pending);
                 return;
             }
         }
         if stop.load(Ordering::Relaxed) {
+            // Orderly stop: pull everything already accepted out of the
+            // ingress queue and hand it, with the buffered buckets, to the
+            // workers so clients still get answers instead of dropped
+            // senders.  A submit racing into the queue after this drain and
+            // before `rx` drops still observes a disconnect and is counted
+            // `submitted` but never answered — the counter invariant only
+            // holds once traffic has drained (see `coordinator::metrics`);
+            // draining until `Disconnected` instead would let any live
+            // handle clone stall shutdown forever.
+            while let Ok(req) = rx.try_recv() {
+                let key = (req.task.clone(), bucket_of(req.tokens.len(), cfg.length_bucket));
+                pending.entry(key).or_default().push(req);
+            }
+            flush_all(&mut pending);
             return;
         }
         // age-based flush
         let now = Instant::now();
-        let expired: Vec<String> = pending
+        let expired: Vec<(String, usize)> = pending
             .iter()
             .filter(|(_, b)| {
-                !b.is_empty()
-                    && now.duration_since(b[0].submitted_at) >= cfg.max_wait
+                !b.is_empty() && now.duration_since(b[0].submitted_at) >= cfg.max_wait
             })
             .map(|(k, _)| k.clone())
             .collect();
@@ -249,23 +342,45 @@ fn run_batch(
     metrics: &Metrics,
 ) {
     let Some(weights) = models.get(&batch[0].task) else {
-        // unknown task: drop replies (senders see Closed)
+        // Unknown task: answer every request explicitly instead of
+        // dropping the reply senders.
+        for req in batch {
+            metrics.record_error_reply();
+            let _ = req.reply.send(Err(RequestError::UnknownTask));
+        }
         return;
     };
-    let seq = weights.config.max_seq;
-    let b = batch.len();
-    let mut tokens = Vec::with_capacity(b * seq);
-    for r in &batch {
-        assert_eq!(r.tokens.len(), seq, "sequence length mismatch");
-        tokens.extend_from_slice(&r.tokens);
+    let max_seq = weights.config.max_seq;
+    let mut valid = Vec::with_capacity(batch.len());
+    for req in batch {
+        let len = req.tokens.len();
+        if len == 0 || len > max_seq {
+            metrics.record_error_reply();
+            let _ = req.reply.send(Err(RequestError::InvalidLength { len, max_seq }));
+        } else {
+            valid.push(req);
+        }
     }
+    if valid.is_empty() {
+        return;
+    }
+    // Pad the batch to its longest member; the encoder masks the rest.
+    let seq = valid.iter().map(|r| r.tokens.len()).max().unwrap();
+    let b = valid.len();
+    let mut tokens = vec![0u16; b * seq];
+    let mut lens = Vec::with_capacity(b);
+    for (i, r) in valid.iter().enumerate() {
+        tokens[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+        lens.push(r.tokens.len());
+    }
+    metrics.record_shape(b, seq, lens.iter().sum());
     let enc = Encoder::new(weights, engine.clone());
-    let logits = enc.forward(&tokens, b);
+    let logits = enc.forward_padded(&tokens, &lens, seq);
     let now = Instant::now();
-    for (i, req) in batch.into_iter().enumerate() {
+    for (i, req) in valid.into_iter().enumerate() {
         let latency = now.duration_since(req.submitted_at);
         metrics.record_latency(latency);
-        let _ = req.reply.send(Reply { logits: logits.row(i).to_vec(), latency });
+        let _ = req.reply.send(Ok(Reply { logits: logits.row(i).to_vec(), latency }));
     }
 }
 
@@ -304,6 +419,58 @@ mod tests {
     }
 
     #[test]
+    fn variable_length_requests_are_served() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let mut rng = Prng::new(7);
+        for len in [1usize, 3, 5, 8] {
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+            let reply = h.classify("sst2", toks).unwrap();
+            assert_eq!(reply.logits.len(), 2, "len {len}");
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 4);
+        assert!(m.padding_efficiency <= 1.0);
+    }
+
+    #[test]
+    fn unknown_task_gets_explicit_error_reply() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let rx = h.submit("no-such-task", vec![1, 2, 3]).unwrap();
+        // Answered, not dropped: the reply channel yields an explicit error.
+        let got = rx.recv().expect("reply must not be silently dropped");
+        assert_eq!(got.unwrap_err(), RequestError::UnknownTask);
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.errored, 1);
+        assert_eq!(m.submitted, m.completed + m.rejected);
+    }
+
+    #[test]
+    fn invalid_lengths_get_explicit_error_reply() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let too_long = h.submit("sst2", vec![0; 9]).unwrap(); // max_seq = 8
+        let empty = h.submit("sst2", Vec::new()).unwrap();
+        assert_eq!(
+            too_long.recv().unwrap().unwrap_err(),
+            RequestError::InvalidLength { len: 9, max_seq: 8 }
+        );
+        assert_eq!(
+            empty.recv().unwrap().unwrap_err(),
+            RequestError::InvalidLength { len: 0, max_seq: 8 }
+        );
+        // classify surfaces the rejection instead of hanging
+        match h.classify("sst2", vec![0; 20]) {
+            Err(SubmitError::Rejected(RequestError::InvalidLength { len: 20, max_seq: 8 })) => {}
+            other => panic!("expected Rejected(InvalidLength), got {other:?}"),
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.errored, 3);
+        assert_eq!(m.submitted, m.completed + m.rejected);
+    }
+
+    #[test]
     fn batching_groups_by_task() {
         let cfg = ServerConfig { max_batch: 8, max_wait: Duration::from_millis(20), ..Default::default() };
         let srv = InferenceServer::start(tiny_models(), cfg);
@@ -316,12 +483,39 @@ mod tests {
             rxs.push(h.submit(task, toks).unwrap());
         }
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().expect("served");
             assert_eq!(r.logits.len(), 2);
         }
         let m = srv.shutdown().snapshot();
         assert_eq!(m.completed, 32);
         assert!(m.mean_batch > 1.0, "batching should kick in: {}", m.mean_batch);
+    }
+
+    #[test]
+    fn length_buckets_do_not_share_batches() {
+        // Width-4 buckets: len 2 and len 7 land in different buckets, so
+        // they can never be padded into the same batch.
+        let cfg = ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            length_bucket: 4,
+            ..Default::default()
+        };
+        let srv = InferenceServer::start(tiny_models(), cfg);
+        let h = srv.handle();
+        let mut rxs = Vec::new();
+        for len in [2usize, 7, 2, 7] {
+            rxs.push(h.submit("sst2", vec![1; len]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().expect("served");
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 4);
+        assert!(m.batches >= 2, "distinct buckets must flush separately: {}", m.batches);
+        // Within-bucket padding waste is bounded by the bucket width: the
+        // len-2 pair pads to 2, the len-7 pair to 7 — nothing pads to 8.
+        assert!(m.padding_efficiency > 0.99, "efficiency {}", m.padding_efficiency);
     }
 
     #[test]

@@ -7,13 +7,21 @@
 //!   Bfloat16 with accurate/approximate normalization);
 //! * embeddings, layernorm, softmax, GELU and residual adds are FP32.
 //!
-//! Sequences are fixed-length (the synthetic tasks pad with a live filler
-//! token, so no attention mask is needed — documented in DESIGN.md).
+//! Sequences are **variable-length**: [`Encoder::forward_padded`] takes a
+//! padded `[B·S, D]` activation layout plus per-sequence lengths, masks the
+//! padded key columns out of attention with [`softmax_rows_masked`], and
+//! leaves the context rows of padding positions zero.  Because every other
+//! op is row-wise, the live rows of a padded batch are bit-identical to
+//! running each sequence alone at its natural length (asserted in
+//! `rust/tests/property_padding.rs`).  The per-sequence attention tasks run
+//! on the process-global worker pool ([`crate::runtime::pool`]) — no
+//! scoped-thread spawns remain anywhere on the request path.
 
 use crate::pe::PeStats;
+use crate::runtime::pool;
 use crate::systolic::MatrixEngine;
 
-use super::layers::{gelu_inplace, layernorm, linear_resident, softmax_rows};
+use super::layers::{gelu_inplace, layernorm, linear_resident, softmax_rows, softmax_rows_masked};
 use super::tensor::Tensor2;
 use super::weights::Weights;
 
@@ -59,10 +67,19 @@ impl<'w> Encoder<'w> {
         x
     }
 
-    /// Multi-head self-attention over `[B·S, D]` hidden states.
-    /// `(b, h)` pairs are simulated in parallel with single-thread engines;
-    /// results are bit-identical to the sequential order.
-    fn attention(&self, x: &Tensor2, layer: usize, batch: usize, seq: usize) -> Tensor2 {
+    /// Multi-head self-attention over padded `[B·S, D]` hidden states with
+    /// per-sequence live lengths.  Each sequence is one task on the
+    /// process-global worker pool (single-thread engines inside, so pool
+    /// jobs never nest); results are bit-identical to the sequential order
+    /// and to running each sequence alone at its natural length.
+    fn attention(
+        &self,
+        x: &Tensor2,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+    ) -> Tensor2 {
         let cfg = &self.weights.config;
         let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
         let q = self.proj(x, &format!("layer{layer}.q.w"), &format!("layer{layer}.q.b"));
@@ -74,53 +91,29 @@ impl<'w> Encoder<'w> {
         let mut head_engine = self.engine.clone();
         head_engine.threads = 1;
 
-        // Parallelize across batch items; each worker handles all heads of
-        // its slice of the batch.
-        let n_workers = self.engine.threads.max(1).min(batch.max(1));
-        let chunk = batch.div_ceil(n_workers);
-        std::thread::scope(|scope| {
-            for (wi, ctx_chunk) in ctx.data.chunks_mut(chunk * seq * d).enumerate() {
-                let b0 = wi * chunk;
+        // One task per sequence, writing that sequence's disjoint row range
+        // of the context tensor.
+        let tasks: Vec<_> = ctx
+            .data
+            .chunks_mut(seq * d)
+            .enumerate()
+            .map(|(b, ctx_b)| {
                 let (q, k, v) = (&q, &k, &v);
                 let he = &head_engine;
-                scope.spawn(move || {
-                    let rows_here = ctx_chunk.len() / d;
-                    for db in 0..rows_here / seq {
-                        let b = b0 + db;
-                        for hh in 0..h {
-                            // Slice Q/K/V for (b, hh): [S, dh]
-                            let mut qb = Tensor2::zeros(seq, dh);
-                            let mut kb = Tensor2::zeros(seq, dh);
-                            let mut vb = Tensor2::zeros(seq, dh);
-                            for s in 0..seq {
-                                let r = b * seq + s;
-                                qb.row_mut(s).copy_from_slice(&q.row(r)[hh * dh..(hh + 1) * dh]);
-                                kb.row_mut(s).copy_from_slice(&k.row(r)[hh * dh..(hh + 1) * dh]);
-                                vb.row_mut(s).copy_from_slice(&v.row(r)[hh * dh..(hh + 1) * dh]);
-                            }
-                            // scores = (Q · Kᵀ) * scale  — engine matmul
-                            let kt = kb.transpose();
-                            let mut scores = Tensor2::from_vec(
-                                seq,
-                                seq,
-                                he.matmul(&qb.data, &kt.data, seq, dh, seq),
-                            );
-                            for val in scores.data.iter_mut() {
-                                *val *= scale;
-                            }
-                            softmax_rows(&mut scores);
-                            // ctx = P · V — engine matmul
-                            let cb = he.matmul(&scores.data, &vb.data, seq, seq, dh);
-                            for s in 0..seq {
-                                let dst = &mut ctx_chunk
-                                    [(db * seq + s) * d + hh * dh..(db * seq + s) * d + (hh + 1) * dh];
-                                dst.copy_from_slice(&cb[s * dh..(s + 1) * dh]);
-                            }
-                        }
-                    }
-                });
+                let len = lens[b];
+                move || attention_sequence(he, q, k, v, ctx_b, b, seq, len, h, dh, scale)
+            })
+            .collect();
+        // Run inline for single-thread engines and degenerate batches, and
+        // whenever this forward is itself executing on a pool worker — a
+        // pool job must never block on sub-jobs (deadlock risk).
+        if self.engine.threads <= 1 || tasks.len() <= 1 || pool::on_worker_thread() {
+            for t in tasks {
+                t();
             }
-        });
+        } else {
+            pool::global().run(tasks);
+        }
 
         self.proj(&ctx, &format!("layer{layer}.o.w"), &format!("layer{layer}.o.b"))
     }
@@ -132,16 +125,33 @@ impl<'w> Encoder<'w> {
         self.proj(&hmid, &format!("layer{layer}.ff2.w"), &format!("layer{layer}.ff2.b"))
     }
 
-    /// Full forward pass: `[B, S]` token ids → `[B, n_classes]` logits
-    /// (or `[B, 1]` regression scores).
-    pub fn forward(&self, tokens: &[u16], batch: usize) -> Tensor2 {
+    /// Full forward pass over a **padded** batch: `tokens` is `[B, S]`
+    /// row-major with `S = seq` (any padded length `1..=max_seq`), and
+    /// `lens[b] ∈ 1..=seq` is the live prefix of sequence `b` — positions
+    /// beyond it are padding whose token ids are ignored by attention.
+    /// Returns `[B, n_classes]` logits (or `[B, 1]` regression scores).
+    ///
+    /// The live rows are bit-identical to running each sequence alone at
+    /// its natural length (`forward_padded(&toks[..len], &[len], len)`):
+    /// attention masks padded keys via [`softmax_rows_masked`] and feeds
+    /// only live weights/values to the engine, so every K-chain sees
+    /// exactly the operands of the unpadded run, in the same order.
+    pub fn forward_padded(&self, tokens: &[u16], lens: &[usize], seq: usize) -> Tensor2 {
         let cfg = &self.weights.config;
-        let seq = cfg.max_seq;
+        let batch = lens.len();
+        assert!(
+            (1..=cfg.max_seq).contains(&seq),
+            "padded length {seq} outside 1..={}",
+            cfg.max_seq
+        );
         assert_eq!(tokens.len(), batch * seq, "token shape");
+        for (b, &len) in lens.iter().enumerate() {
+            assert!((1..=seq).contains(&len), "sequence {b}: length {len} outside 1..={seq}");
+        }
         let mut x = self.embed(tokens, batch, seq);
         for l in 0..cfg.n_layers {
             // post-LN residual blocks, as in BERT
-            let att = self.attention(&x, l, batch, seq);
+            let att = self.attention(&x, l, batch, seq, lens);
             x.add_assign(&att);
             layernorm(
                 &mut x,
@@ -158,12 +168,27 @@ impl<'w> Encoder<'w> {
                 1e-5,
             );
         }
-        // CLS (first token) pooling + classifier head on the engine.
+        // CLS (first token) pooling + classifier head on the engine.  The
+        // CLS position is always a live token (lens[b] >= 1), so pooling
+        // never reads padding.
         let mut pooled = Tensor2::zeros(batch, cfg.d_model);
         for b in 0..batch {
             pooled.row_mut(b).copy_from_slice(x.row(b * seq));
         }
         self.proj(&pooled, "head.w", "head.b")
+    }
+
+    /// Fixed-length forward at an arbitrary sequence length `seq <= max_seq`
+    /// (every sequence fully live — no padding, no masking).
+    pub fn forward_seq(&self, tokens: &[u16], batch: usize, seq: usize) -> Tensor2 {
+        self.forward_padded(tokens, &vec![seq; batch], seq)
+    }
+
+    /// Full forward pass: `[B, max_seq]` token ids → `[B, n_classes]`
+    /// logits (or `[B, 1]` regression scores).  The fixed-length fast path,
+    /// kept bit-identical to the seed behavior.
+    pub fn forward(&self, tokens: &[u16], batch: usize) -> Tensor2 {
+        self.forward_seq(tokens, batch, self.weights.config.max_seq)
     }
 
     /// Forward pass with per-layer PE instrumentation (sequential, slow —
@@ -247,6 +272,61 @@ impl<'w> Encoder<'w> {
     }
 }
 
+/// Masked attention for one padded sequence, all heads: the body of one
+/// worker-pool task.  `ctx_b` is the sequence's `[S, D]` slice of the
+/// context tensor; rows `>= len` are left zero (padding positions produce
+/// no context), and padded **key** columns get exactly zero weight through
+/// [`softmax_rows_masked`], so the live rows match the unpadded computation
+/// bit for bit.  The engine handed in is single-threaded: its GEMMs run
+/// inline on this task's thread, never nesting pool dispatch.
+#[allow(clippy::too_many_arguments)]
+fn attention_sequence(
+    engine: &MatrixEngine,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    ctx_b: &mut [f32],
+    b: usize,
+    seq: usize,
+    len: usize,
+    heads: usize,
+    dh: usize,
+    scale: f32,
+) {
+    let d = heads * dh;
+    let r0 = b * seq;
+    for hh in 0..heads {
+        let c0 = hh * dh;
+        // Live query/value rows; keys keep their padded rows — the padded
+        // score columns are computed dense and masked below, exactly the
+        // batched-GEMM-plus-mask structure of a real padded attention.
+        let qb = q.block(r0, len, c0, dh);
+        let kb = k.block(r0, seq, c0, dh);
+        let vb = v.block(r0, len, c0, dh);
+        // scores = (Q · Kᵀ) * scale  — engine matmul, [len, seq]
+        let kt = kb.transpose();
+        let mut scores =
+            Tensor2::from_vec(len, seq, engine.matmul(&qb.data, &kt.data, len, dh, seq));
+        for val in scores.data.iter_mut() {
+            *val *= scale;
+        }
+        softmax_rows_masked(&mut scores, len);
+        // ctx = P · V over the live keys only — engine matmul, [len, dh].
+        // Full-length scores feed the engine directly (no copy on the
+        // fixed-length hot path); col_block(0, len) of a full-width matrix
+        // is the identity, so both arms are bit-identical.
+        let cb = if len == seq {
+            engine.matmul(&scores.data, &vb.data, len, len, dh)
+        } else {
+            let live = scores.col_block(0, len);
+            engine.matmul(&live.data, &vb.data, len, len, dh)
+        };
+        for s in 0..len {
+            ctx_b[s * d + c0..s * d + c0 + dh].copy_from_slice(&cb[s * dh..(s + 1) * dh]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +392,60 @@ mod tests {
         assert_eq!(y.data, yt.data);
         assert_eq!(traces.len(), 2);
         assert!(traces[0].shifts.total() > 0);
+    }
+
+    #[test]
+    fn padded_batch_matches_per_sequence_forward() {
+        let w = Weights::random(cfg(), 13);
+        let mut rng = Prng::new(14);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)));
+        let lens = [3usize, 8, 1, 5];
+        let seq = 8;
+        let mut padded = vec![0u16; lens.len() * seq];
+        let mut singles: Vec<Vec<u16>> = Vec::new();
+        for (b, &len) in lens.iter().enumerate() {
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+            padded[b * seq..b * seq + len].copy_from_slice(&toks);
+            singles.push(toks);
+        }
+        let y = enc.forward_padded(&padded, &lens, seq);
+        for (b, toks) in singles.iter().enumerate() {
+            let y1 = enc.forward_padded(toks, &[toks.len()], toks.len());
+            assert_eq!(y.row(b), y1.row(0), "sequence {b} (len {})", toks.len());
+        }
+    }
+
+    #[test]
+    fn padding_token_ids_do_not_leak_into_live_rows() {
+        // Same live tokens, two different paddings: identical logits.
+        let w = Weights::random(cfg(), 15);
+        let mut rng = Prng::new(16);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)));
+        let lens = [2usize, 6];
+        let seq = 8;
+        let mut a = vec![0u16; lens.len() * seq];
+        let mut b = vec![31u16; lens.len() * seq];
+        for (i, &len) in lens.iter().enumerate() {
+            for s in 0..len {
+                let t = rng.below(32) as u16;
+                a[i * seq + s] = t;
+                b[i * seq + s] = t;
+            }
+        }
+        let ya = enc.forward_padded(&a, &lens, seq);
+        let yb = enc.forward_padded(&b, &lens, seq);
+        assert_eq!(ya.data, yb.data, "padding content must be fully masked");
+    }
+
+    #[test]
+    fn shorter_than_max_seq_forward_works() {
+        let w = Weights::random(cfg(), 17);
+        let mut rng = Prng::new(18);
+        let t = tokens(&mut rng, 3, 5, 32);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::Fp32));
+        let y = enc.forward_seq(&t, 3, 5);
+        assert_eq!((y.rows, y.cols), (3, 3));
+        assert!(y.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

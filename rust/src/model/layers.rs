@@ -64,18 +64,36 @@ pub fn layernorm(x: &mut Tensor2, gamma: &[f32], beta: &[f32], eps: f32) {
 
 /// Numerically stable row-wise softmax (FP32).
 pub fn softmax_rows(x: &mut Tensor2) {
+    let cols = x.cols;
+    softmax_rows_masked(x, cols);
+}
+
+/// Masked row-wise softmax: normalize over the first `valid` columns of
+/// every row and assign exactly zero weight to the padding columns
+/// `[valid, cols)`.  The floating-point operation sequence over the live
+/// prefix is identical to [`softmax_rows`], so with `valid == cols` the two
+/// are bit-equal — the invariant the variable-length attention path relies
+/// on (padded batches must reproduce the unpadded results bit for bit).
+pub fn softmax_rows_masked(x: &mut Tensor2, valid: usize) {
+    assert!(valid <= x.cols, "mask width {valid} > {} columns", x.cols);
+    if valid == 0 {
+        // Degenerate all-padding mask: an empty distribution, not NaN.
+        x.data.fill(0.0);
+        return;
+    }
     for r in 0..x.rows {
-        let row = x.row_mut(r);
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let (live, pad) = x.row_mut(r).split_at_mut(valid);
+        let m = live.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0f32;
-        for v in row.iter_mut() {
+        for v in live.iter_mut() {
             *v = (*v - m).exp();
             sum += *v;
         }
         let inv = 1.0 / sum;
-        for v in row.iter_mut() {
+        for v in live.iter_mut() {
             *v *= inv;
         }
+        pad.fill(0.0);
     }
 }
 
@@ -155,6 +173,37 @@ mod tests {
         }
         assert!((x.get(0, 0) - 1.0 / 3.0).abs() < 1e-6); // huge but equal
         assert!(x.get(1, 2) > x.get(1, 1));
+    }
+
+    #[test]
+    fn masked_softmax_full_width_is_bitwise_softmax() {
+        use crate::prng::Prng;
+        let mut rng = Prng::new(71);
+        let data: Vec<f32> = (0..4 * 6).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let mut a = Tensor2::from_vec(4, 6, data.clone());
+        let mut b = Tensor2::from_vec(4, 6, data);
+        softmax_rows(&mut a);
+        softmax_rows_masked(&mut b, 6);
+        assert_eq!(a.data, b.data, "full-width mask must be bit-identical");
+    }
+
+    #[test]
+    fn masked_softmax_zeroes_padding_and_sums_to_one() {
+        let mut x = Tensor2::from_vec(2, 4, vec![0.5, -1.0, 9e9, 9e9, 2.0, 2.0, f32::NAN, 1.0]);
+        softmax_rows_masked(&mut x, 2);
+        for r in 0..2 {
+            let live: f32 = x.row(r)[..2].iter().sum();
+            assert!((live - 1.0).abs() < 1e-6, "row {r} live sum {live}");
+            // padding gets exactly zero weight, whatever garbage was there
+            assert_eq!(&x.row(r)[2..], &[0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn masked_softmax_zero_width_is_all_zero() {
+        let mut x = Tensor2::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        softmax_rows_masked(&mut x, 0);
+        assert_eq!(x.data, vec![0.0, 0.0, 0.0]);
     }
 
     #[test]

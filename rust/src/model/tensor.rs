@@ -49,14 +49,23 @@ impl Tensor2 {
         out
     }
 
-    /// Copy a contiguous column block `[col0, col0+width)` of every row.
-    pub fn col_block(&self, col0: usize, width: usize) -> Tensor2 {
-        assert!(col0 + width <= self.cols);
-        let mut out = Tensor2::zeros(self.rows, width);
-        for r in 0..self.rows {
-            out.row_mut(r).copy_from_slice(&self.row(r)[col0..col0 + width]);
+    /// Copy a rectangular block: rows `[r0, r0+nrows)` × columns
+    /// `[c0, c0+width)`.  Used by the attention path to gather the
+    /// per-(sequence, head) Q/K/V slices out of the padded `[B·S, D]`
+    /// activations.
+    pub fn block(&self, r0: usize, nrows: usize, c0: usize, width: usize) -> Tensor2 {
+        assert!(r0 + nrows <= self.rows, "row block out of range");
+        assert!(c0 + width <= self.cols, "column block out of range");
+        let mut out = Tensor2::zeros(nrows, width);
+        for r in 0..nrows {
+            out.row_mut(r).copy_from_slice(&self.row(r0 + r)[c0..c0 + width]);
         }
         out
+    }
+
+    /// Copy a contiguous column block `[col0, col0+width)` of every row.
+    pub fn col_block(&self, col0: usize, width: usize) -> Tensor2 {
+        self.block(0, self.rows, col0, width)
     }
 
     /// Write a block back into a column range.
@@ -153,6 +162,16 @@ mod tests {
         t2.set_col_block(1, &b);
         assert_eq!(t2.get(1, 2), 6.0);
         assert_eq!(t2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn block_extracts_rectangles() {
+        let t = Tensor2::from_vec(3, 4, (0..12).map(|x| x as f32).collect());
+        let b = t.block(1, 2, 1, 2);
+        assert_eq!((b.rows, b.cols), (2, 2));
+        assert_eq!(b.data, vec![5., 6., 9., 10.]);
+        // full-size block is a copy
+        assert_eq!(t.block(0, 3, 0, 4), t);
     }
 
     #[test]

@@ -18,10 +18,14 @@
 //!
 //! Nesting rule: jobs running **on** the pool must not call `run` on the
 //! same pool (a job blocking on sub-jobs can deadlock once every worker is
-//! blocked the same way).  The tile scheduler observes this by dispatching
-//! from engine/server threads only, never from inside a tile job.
+//! blocked the same way).  Worker threads advertise themselves through a
+//! thread-local ([`on_worker_thread`]); the tile scheduler consults it and
+//! automatically degrades to inline execution when a GEMM is issued from
+//! inside a pool job — e.g. the encoder's per-sequence attention tasks —
+//! so nested dispatch is structurally impossible, not just discouraged.
 
 use std::any::Any;
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
@@ -128,7 +132,20 @@ impl Drop for WorkerPool {
     }
 }
 
+thread_local! {
+    static ON_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the calling thread is a pool worker (of any [`WorkerPool`]).
+/// Blocking dispatchers use this to run work inline instead of `run`ning
+/// sub-jobs on the pool they are already executing on, which could deadlock
+/// once every worker blocks the same way.
+pub fn on_worker_thread() -> bool {
+    ON_POOL_WORKER.with(|f| f.get())
+}
+
 fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    ON_POOL_WORKER.with(|f| f.set(true));
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -277,6 +294,24 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn worker_threads_are_flagged() {
+        let pool = WorkerPool::new(2);
+        assert!(!on_worker_thread(), "caller is not a pool worker");
+        let on_flags: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<_> = (0..4)
+            .map(|i| {
+                let on_flags = &on_flags;
+                move || {
+                    on_flags[i].store(usize::from(on_worker_thread()), Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        assert!(on_flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+        assert!(!on_worker_thread(), "flag must not leak to the caller");
     }
 
     #[test]

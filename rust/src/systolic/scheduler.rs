@@ -85,7 +85,14 @@ impl TileScheduler {
     }
 
     fn should_inline(&self, m: usize, k: usize, n: usize, n_tiles: usize) -> bool {
-        self.inline_only || n_tiles <= 1 || m * k * n < INLINE_FMA_THRESHOLD
+        // The last clause makes nested dispatch structurally impossible:
+        // a GEMM issued from inside a pool job (e.g. the encoder's
+        // per-sequence attention tasks) runs inline on that worker instead
+        // of blocking it on sub-jobs, which could deadlock the pool.
+        self.inline_only
+            || n_tiles <= 1
+            || m * k * n < INLINE_FMA_THRESHOLD
+            || crate::runtime::pool::on_worker_thread()
     }
 
     /// Bit-exact bf16 GEMM over pre-converted operands: `x` row-major
@@ -342,6 +349,38 @@ mod tests {
         let y = sched.gemm_f32(pool::global(), &x, &w, m, k, n);
         let want = matmul_f32(&x, &w, m, k, n, 1);
         assert_eq!(y, want);
+    }
+
+    #[test]
+    fn dispatch_from_inside_a_pool_job_degrades_to_inline() {
+        // A GEMM issued from a pool worker must not `run` sub-jobs on the
+        // pool it is executing on (deadlock risk); it auto-inlines and the
+        // result stays bit-identical.  Without the worker-thread guard this
+        // test can deadlock, so it exercises the real hazard.
+        let mut rng = Prng::new(55);
+        let (m, k, n) = (40, 40, 40); // above INLINE_FMA_THRESHOLD
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        let mode = NormMode::Approx(ApproxNorm::AN_1_2);
+        let want = TileScheduler::inline().gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+        let results = std::sync::Mutex::new(Vec::new());
+        let tasks: Vec<_> = (0..4)
+            .map(|_| {
+                let (x, wt, results) = (&x, &wt, &results);
+                move || {
+                    let sched = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false };
+                    let y = sched.gemm_bf16(pool::global(), x, wt, m, k, n, mode);
+                    results.lock().unwrap().push(y);
+                }
+            })
+            .collect();
+        pool::global().run(tasks);
+        let results = results.into_inner().unwrap();
+        assert_eq!(results.len(), 4);
+        for y in results {
+            assert_eq!(y, want);
+        }
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Deterministic end-to-end serving tests for the variable-length stack:
+//! concurrent clients over mixed tasks and mixed (including invalid)
+//! lengths, the answered-or-explicitly-rejected contract, metrics counter
+//! balance, bit-exactness of padded batches against per-sequence forwards
+//! for every normalization mode, and shutdown draining.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amfma::coordinator::{InferenceServer, RequestError, ServerConfig, SubmitError};
+use amfma::model::{Encoder, ModelConfig, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+const MAX_SEQ: usize = 8;
+
+fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        vocab: 32,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_layers: 2,
+        max_seq: MAX_SEQ,
+        n_classes: 3,
+    }
+}
+
+fn tiny_models() -> HashMap<String, Arc<Weights>> {
+    let mut m = HashMap::new();
+    m.insert("sst2".to_string(), Arc::new(Weights::random(tiny_config(), 101)));
+    m.insert("rte".to_string(), Arc::new(Weights::random(tiny_config(), 102)));
+    m
+}
+
+/// Concurrent clients over mixed tasks and mixed lengths — including
+/// unknown tasks, empty and over-long sequences.  Every request must be
+/// answered or explicitly rejected (no silently dropped reply senders),
+/// and the metrics counters must balance once traffic has drained.
+#[test]
+fn mixed_traffic_is_answered_or_explicitly_rejected() {
+    let srv = InferenceServer::start(
+        tiny_models(),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            length_bucket: 4,
+            workers: 2,
+            ..Default::default()
+        },
+    );
+    let h = srv.handle();
+
+    let n_clients = 4usize;
+    let per_client = 16usize;
+    let mut served = 0u64;
+    let mut rejected = 0u64;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let h = h.clone();
+            handles.push(s.spawn(move || {
+                let mut rng = Prng::new(500 + c as u64);
+                let (mut ok, mut rej) = (0u64, 0u64);
+                for _ in 0..per_client {
+                    let task = match rng.below(4) {
+                        0 => "rte",
+                        1 => "no-such-task",
+                        _ => "sst2",
+                    };
+                    // lengths 0..=11: 0 and 9..=11 are invalid for max_seq 8
+                    let len = rng.below(12) as usize;
+                    let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+                    match h.classify(task, toks) {
+                        Ok(reply) => {
+                            assert_eq!(reply.logits.len(), 3);
+                            assert!(task != "no-such-task" && (1..=MAX_SEQ).contains(&len));
+                            ok += 1;
+                        }
+                        Err(SubmitError::Rejected(RequestError::UnknownTask)) => {
+                            assert_eq!(task, "no-such-task");
+                            rej += 1;
+                        }
+                        Err(SubmitError::Rejected(RequestError::InvalidLength {
+                            len: l,
+                            max_seq,
+                        })) => {
+                            assert_eq!((l, max_seq), (len, MAX_SEQ));
+                            assert!(len == 0 || len > MAX_SEQ);
+                            rej += 1;
+                        }
+                        Err(e) => panic!("request must not be dropped: {e:?}"),
+                    }
+                }
+                (ok, rej)
+            }));
+        }
+        for t in handles {
+            let (ok, rej) = t.join().unwrap();
+            served += ok;
+            rejected += rej;
+        }
+    });
+
+    assert_eq!(served + rejected, (n_clients * per_client) as u64);
+    assert!(served > 0 && rejected > 0, "traffic mix: {served} served, {rejected} rejected");
+
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, served);
+    assert_eq!(m.errored, rejected);
+    assert_eq!(m.submitted, m.completed + m.rejected, "counters must balance: {m:?}");
+    assert!(m.padding_efficiency > 0.0 && m.padding_efficiency <= 1.0);
+}
+
+/// Acceptance criterion: a padded mixed-length batch through the
+/// `InferenceServer` returns logits bit-identical to the per-sequence
+/// unbatched `forward`, for every normalization mode.
+#[test]
+fn padded_mixed_length_batches_are_bit_exact_for_all_modes() {
+    let models = tiny_models();
+    let weights = models.get("sst2").unwrap().clone();
+    for mode in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let mode = EngineMode::parse(mode).unwrap();
+        let srv = InferenceServer::start(
+            models.clone(),
+            ServerConfig {
+                mode,
+                max_batch: MAX_SEQ,
+                max_wait: Duration::from_millis(50),
+                // one bucket per task: every length shares a padded batch
+                length_bucket: MAX_SEQ,
+                ..Default::default()
+            },
+        );
+        let h = srv.handle();
+        let mut rng = Prng::new(900);
+        let mut rxs = Vec::new();
+        let mut inputs: Vec<Vec<u16>> = Vec::new();
+        for len in 1..=MAX_SEQ {
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+            rxs.push(h.submit("sst2", toks.clone()).unwrap());
+            inputs.push(toks);
+        }
+        let enc = Encoder::new(&weights, MatrixEngine::new(mode));
+        for (rx, toks) in rxs.into_iter().zip(&inputs) {
+            let reply = rx.recv().unwrap().expect("served");
+            let want = enc.forward_padded(toks, &[toks.len()], toks.len());
+            assert_eq!(
+                reply.logits,
+                want.row(0).to_vec(),
+                "mode {} len {}",
+                mode.label(),
+                toks.len()
+            );
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, MAX_SEQ as u64);
+        assert!(m.mean_batch > 1.0, "mixed lengths must share batches: {}", m.mean_batch);
+    }
+}
+
+/// `shutdown` must drain without deadlock even with requests still in
+/// flight: it returns, all worker threads join, and every outstanding
+/// reply channel resolves (successfully or by disconnection).
+#[test]
+fn shutdown_drains_inflight_requests_without_deadlock() {
+    let srv = InferenceServer::start(
+        tiny_models(),
+        ServerConfig {
+            max_batch: 1000, // only age-based flushes
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        },
+    );
+    let h = srv.handle();
+    let mut rng = Prng::new(77);
+    let mut rxs = Vec::new();
+    for _ in 0..24 {
+        let len = 1 + rng.below(MAX_SEQ as u64) as usize;
+        let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+        match h.submit("sst2", toks) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => panic!("queue must accept 24 requests: {e:?}"),
+        }
+    }
+    // Shut down with everything still buffered in the ingress queue and
+    // the batcher: the stop path drains both to the workers, so every
+    // accepted request is answered — no recv() may hang or disconnect.
+    let metrics = srv.shutdown();
+    for rx in rxs {
+        let res = rx.recv().expect("accepted requests must be answered across shutdown");
+        res.expect("no error replies for valid requests");
+    }
+    let m = metrics.snapshot();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.submitted, m.completed + m.rejected, "counters must balance: {m:?}");
+}
+
+/// The tentpole's structural guarantee: the encoder's attention block runs
+/// its per-sequence tasks on the process-global worker pool — the last
+/// scoped-thread spawn site on the request path is gone.
+#[test]
+fn encoder_attention_spawns_no_scoped_threads() {
+    let encoder_src = include_str!("../src/model/encoder.rs");
+    assert!(
+        !encoder_src.contains("thread::scope"),
+        "Encoder::attention must dispatch to runtime::pool, not std::thread::scope"
+    );
+    assert!(
+        encoder_src.contains("pool::global().run"),
+        "Encoder::attention must dispatch its per-sequence tasks to the shared pool"
+    );
+}

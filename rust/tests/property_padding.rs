@@ -1,0 +1,151 @@
+//! Property tests for the variable-length serving substrate, PRNG-loop
+//! style (as in `property_arith.rs` — no proptest crate is vendored):
+//!
+//! * a padded batched `forward` is bit-exact to the unpadded per-sequence
+//!   `forward` for all 4 normalization modes, across random lengths
+//!   `1..=max_seq` and random padding targets;
+//! * masked `softmax_rows` rows sum to 1 and assign exactly zero weight to
+//!   padding, and degenerate to the unmasked softmax bit-for-bit at full
+//!   width.
+
+use amfma::model::layers::{softmax_rows, softmax_rows_masked};
+use amfma::model::{Encoder, ModelConfig, Tensor2, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+const MODES: [&str; 4] = ["bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"];
+const MAX_SEQ: usize = 8;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 32,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_layers: 2,
+        max_seq: MAX_SEQ,
+        n_classes: 3,
+    }
+}
+
+/// The acceptance property of the whole variable-length path: for every
+/// normalization mode, random mixed-length batches padded to a random
+/// target length produce logits bit-identical to running each sequence
+/// alone at its natural length.
+#[test]
+fn padded_batched_forward_bit_exact_vs_per_sequence_all_modes() {
+    let w = Weights::random(cfg(), 301);
+    let mut rng = Prng::new(302);
+    for (mi, mode) in MODES.iter().enumerate() {
+        let mode = EngineMode::parse(mode).unwrap();
+        for round in 0..6 {
+            // Alternate between single-thread and pooled attention dispatch.
+            let mut engine = MatrixEngine::new(mode);
+            engine.threads = if round % 2 == 0 { 1 } else { 8 };
+            let enc = Encoder::new(&w, engine);
+
+            let batch = 1 + rng.below(4) as usize;
+            let lens: Vec<usize> =
+                (0..batch).map(|_| 1 + rng.below(MAX_SEQ as u64) as usize).collect();
+            let longest = lens.iter().copied().max().unwrap();
+            // Pad to the tightest target, max_seq, or something in between.
+            let seq = longest + rng.below((MAX_SEQ - longest + 1) as u64) as usize;
+
+            // Padding positions get random garbage token ids: the mask, not
+            // the pad value, must keep them out of the live rows.
+            let mut padded: Vec<u16> = (0..batch * seq).map(|_| rng.below(32) as u16).collect();
+            let mut singles: Vec<Vec<u16>> = Vec::new();
+            for (b, &len) in lens.iter().enumerate() {
+                let toks: Vec<u16> = (0..len).map(|_| rng.below(32) as u16).collect();
+                padded[b * seq..b * seq + len].copy_from_slice(&toks);
+                singles.push(toks);
+            }
+
+            let y = enc.forward_padded(&padded, &lens, seq);
+            assert_eq!((y.rows, y.cols), (batch, 3));
+            for (b, toks) in singles.iter().enumerate() {
+                let y1 = enc.forward_padded(toks, &[toks.len()], toks.len());
+                assert_eq!(
+                    y.row(b),
+                    y1.row(0),
+                    "mode {} round {round} seq {seq} lens {lens:?} b {b}",
+                    MODES[mi]
+                );
+            }
+        }
+    }
+}
+
+/// Full-length batches through the padded entry point must reproduce the
+/// fixed-length `forward` bit for bit (the seed behavior is a special case
+/// of the masked path).
+#[test]
+fn full_length_padded_forward_equals_fixed_forward() {
+    let w = Weights::random(cfg(), 303);
+    let mut rng = Prng::new(304);
+    for mode in MODES {
+        let mode = EngineMode::parse(mode).unwrap();
+        let enc = Encoder::new(&w, MatrixEngine::new(mode));
+        let batch = 3;
+        let toks: Vec<u16> = (0..batch * MAX_SEQ).map(|_| rng.below(32) as u16).collect();
+        let fixed = enc.forward(&toks, batch);
+        let padded = enc.forward_padded(&toks, &[MAX_SEQ; 3], MAX_SEQ);
+        assert_eq!(fixed.data, padded.data, "mode {:?}", mode.label());
+    }
+}
+
+/// Masked softmax: live prefix sums to 1, padding gets exactly zero
+/// weight, and the live-prefix computation matches running the plain
+/// softmax on just the prefix bit for bit.
+#[test]
+fn masked_softmax_rows_properties() {
+    let mut rng = Prng::new(305);
+    for _ in 0..2_000 {
+        let rows = 1 + rng.below(6) as usize;
+        let cols = 1 + rng.below(12) as usize;
+        let valid = 1 + rng.below(cols as u64) as usize;
+        let data: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 4.0) as f32).collect();
+
+        let mut masked = Tensor2::from_vec(rows, cols, data.clone());
+        softmax_rows_masked(&mut masked, valid);
+
+        // The live prefix alone, through the unmasked softmax.
+        let mut prefix = Tensor2::from_vec(rows, cols, data).block(0, rows, 0, valid);
+        softmax_rows(&mut prefix);
+
+        for r in 0..rows {
+            let row = masked.row(r);
+            let live_sum: f32 = row[..valid].iter().sum();
+            assert!(
+                (live_sum - 1.0).abs() < 1e-5,
+                "row {r} live weights must sum to 1, got {live_sum}"
+            );
+            assert!(
+                row[valid..].iter().all(|&v| v == 0.0),
+                "padding must get exactly zero weight: {row:?}"
+            );
+            assert_eq!(
+                &row[..valid],
+                prefix.row(r),
+                "live prefix must match the unmasked softmax bit for bit"
+            );
+        }
+    }
+}
+
+/// Full-width masking is bit-identical to the unmasked softmax on random
+/// inputs (the fixed-length fast path never diverges).
+#[test]
+fn masked_softmax_full_width_degenerates_bitwise() {
+    let mut rng = Prng::new(306);
+    for _ in 0..2_000 {
+        let rows = 1 + rng.below(5) as usize;
+        let cols = 1 + rng.below(10) as usize;
+        let data: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 8.0) as f32).collect();
+        let mut a = Tensor2::from_vec(rows, cols, data.clone());
+        let mut b = Tensor2::from_vec(rows, cols, data);
+        softmax_rows(&mut a);
+        softmax_rows_masked(&mut b, cols);
+        assert_eq!(a.data, b.data);
+    }
+}
