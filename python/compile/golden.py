@@ -7,13 +7,23 @@ actually execute (and fail loudly via `AMFMA_REQUIRE_GOLDEN=1`) instead of
 skipping.  The full artifact export (`python -m compile.aot`) calls
 `export_golden` from here, so both paths write identical bits.
 
+`--smoke-model NAME` additionally writes a tiny deterministic task
+(`tasks/NAME.amft`) and randomly-initialized weights (`weights/NAME.amfw`)
+in the same AMFT/AMFW formats as the trainer — enough for the `amfma tune`
+/ `amfma serve --policy` CI smoke without JAX or training.  Point it at a
+*separate* artifacts dir: the Rust test suite asserts trained-model
+properties when it finds task artifacts, and random smoke weights must not
+shadow real ones.
+
 Usage: python python/compile/golden.py [--out artifacts]
+                                       [--smoke-model sst2]
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import struct
 import sys
 
 if __package__:
@@ -25,6 +35,111 @@ else:  # run as a plain script: make `compile` importable
 # M, K, N of the matmul golden vectors — shared with the AOT HLO export so
 # the two artifact sets always describe the same GEMM.
 GEMM_SHAPE = (32, 64, 32)
+
+# ---------------------------------------------------------------------------
+# Smoke model: a tiny synthetic task + random-init weights, written without
+# numpy.  Hyper-parameters mirror the Rust test suite's `tiny_config`.
+# ---------------------------------------------------------------------------
+
+SMOKE_CONFIG = {
+    "vocab": 32,
+    "d_model": 16,
+    "n_heads": 2,
+    "d_ff": 32,
+    "n_layers": 2,
+    "max_seq": 8,
+    "n_classes": 2,
+}
+SMOKE_N_DEV = 64
+
+
+class _Rng:
+    """splitmix64 — deterministic across platforms, no numpy."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def uniform(self, scale: float) -> float:
+        return (self.next_u64() / 2.0**64 * 2.0 - 1.0) * scale
+
+
+def _f32s(vals) -> bytes:
+    return b"".join(struct.pack("<f", v) for v in vals)
+
+
+def _tensor(f, name: str, dims, data) -> None:
+    f.write(struct.pack("<H", len(name)))
+    f.write(name.encode())
+    f.write(struct.pack("<B", len(dims)))
+    for d in dims:
+        f.write(struct.pack("<I", d))
+    f.write(_f32s(data))
+
+
+def write_smoke_task(path: str, name: str, rng: _Rng) -> None:
+    """A dev-split-only AMFT task: random tokens, balanced labels."""
+    cfg = SMOKE_CONFIG
+    seq, vocab, n_classes = cfg["max_seq"], cfg["vocab"], cfg["n_classes"]
+    with open(path, "wb") as f:
+        f.write(b"AMFT")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<H", len(name)))
+        f.write(name.encode())
+        f.write(struct.pack("<IIIII", n_classes, seq, vocab, 0, SMOKE_N_DEV))
+        for _ in range(SMOKE_N_DEV * seq):  # dev tokens (no train split)
+            f.write(struct.pack("<H", rng.below(vocab)))
+        f.write(_f32s(float(i % n_classes) for i in range(SMOKE_N_DEV)))
+
+
+def write_smoke_weights(path: str, rng: _Rng) -> None:
+    """Random-init AMFW weights covering every tensor the encoder reads."""
+    cfg = SMOKE_CONFIG
+    d, ff = cfg["d_model"], cfg["d_ff"]
+
+    def mat(f, name, rows, cols, fan_in):
+        s = (1.0 / fan_in) ** 0.5
+        _tensor(f, name, [rows, cols], (rng.uniform(s) for _ in range(rows * cols)))
+
+    n_tensors = 2 + cfg["n_layers"] * 16 + 2
+    with open(path, "wb") as f:
+        f.write(b"AMFW")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<7I", cfg["vocab"], d, cfg["n_heads"], ff,
+                            cfg["n_layers"], cfg["max_seq"], cfg["n_classes"]))
+        f.write(struct.pack("<I", n_tensors))
+        mat(f, "emb.tok", cfg["vocab"], d, d)
+        mat(f, "emb.pos", cfg["max_seq"], d, d)
+        for l in range(cfg["n_layers"]):
+            for nm in ("q", "k", "v", "o"):
+                mat(f, f"layer{l}.{nm}.w", d, d, d)
+                _tensor(f, f"layer{l}.{nm}.b", [d], [0.0] * d)
+            mat(f, f"layer{l}.ff1.w", d, ff, d)
+            _tensor(f, f"layer{l}.ff1.b", [ff], [0.0] * ff)
+            mat(f, f"layer{l}.ff2.w", ff, d, ff)
+            _tensor(f, f"layer{l}.ff2.b", [d], [0.0] * d)
+            for nm in ("ln1", "ln2"):
+                _tensor(f, f"layer{l}.{nm}.g", [d], [1.0] * d)
+                _tensor(f, f"layer{l}.{nm}.b", [d], [0.0] * d)
+        mat(f, "head.w", d, cfg["n_classes"], d)
+        _tensor(f, "head.b", [cfg["n_classes"]], [0.0] * cfg["n_classes"])
+
+
+def export_smoke_model(out: str, name: str) -> None:
+    os.makedirs(f"{out}/tasks", exist_ok=True)
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    write_smoke_task(f"{out}/tasks/{name}.amft", name, _Rng(71))
+    write_smoke_weights(f"{out}/weights/{name}.amfw", _Rng(72))
+    print(f"  wrote {out}/tasks/{name}.amft, {out}/weights/{name}.amfw")
 
 
 def export_golden(out: str) -> None:
@@ -38,8 +153,13 @@ def export_golden(out: str) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--smoke-model", default=None, metavar="NAME",
+                    help="also write a tiny random-init task+weights pair "
+                         "for the autotune CI smoke (use a dedicated --out)")
     args = ap.parse_args()
     export_golden(args.out)
+    if args.smoke_model:
+        export_smoke_model(args.out, args.smoke_model)
 
 
 if __name__ == "__main__":

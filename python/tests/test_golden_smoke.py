@@ -1,0 +1,122 @@
+"""The `golden.py --smoke-model` artifacts must follow the AMFT/AMFW
+formats exactly (mirroring the Rust loaders in `rust/src/data/tasks.rs`
+and `rust/src/model/weights.rs`): the autotune CI smoke feeds them
+straight into `amfma tune`, so a drift here fails far from its cause.
+Pure stdlib — no numpy/JAX."""
+
+import struct
+
+from compile.golden import SMOKE_CONFIG, SMOKE_N_DEV, export_smoke_model
+
+
+def _read_task(path):
+    b = open(path, "rb").read()
+    off = 0
+    assert b[:4] == b"AMFT"
+    off += 4
+    (ver,) = struct.unpack_from("<I", b, off)
+    off += 4
+    assert ver == 1
+    (nl,) = struct.unpack_from("<H", b, off)
+    off += 2
+    name = b[off:off + nl].decode()
+    off += nl
+    n_classes, seq, vocab, n_train, n_dev = struct.unpack_from("<IIIII", b, off)
+    off += 20
+    n_tok = (n_train + n_dev) * seq
+    toks = struct.unpack_from(f"<{n_tok}H", b, off)
+    off += n_tok * 2
+    n_lab = n_train + n_dev
+    labels = struct.unpack_from(f"<{n_lab}f", b, off)
+    off += n_lab * 4
+    assert off == len(b), "trailing bytes in AMFT"
+    return name, n_classes, seq, vocab, n_train, n_dev, toks, labels
+
+
+def _read_weights(path):
+    b = open(path, "rb").read()
+    off = 0
+    assert b[:4] == b"AMFW"
+    off += 4
+    (ver,) = struct.unpack_from("<I", b, off)
+    off += 4
+    assert ver == 1
+    cfg = struct.unpack_from("<7I", b, off)
+    off += 28
+    (n_tensors,) = struct.unpack_from("<I", b, off)
+    off += 4
+    tensors = {}
+    for _ in range(n_tensors):
+        (nl,) = struct.unpack_from("<H", b, off)
+        off += 2
+        name = b[off:off + nl].decode()
+        off += nl
+        ndim = b[off]
+        off += 1
+        assert 1 <= ndim <= 2, name
+        dims = struct.unpack_from(f"<{ndim}I", b, off)
+        off += ndim * 4
+        n = 1
+        for d in dims:
+            n *= d
+        vals = struct.unpack_from(f"<{n}f", b, off)
+        off += n * 4
+        tensors[name] = (dims, vals)
+    assert off == len(b), "trailing bytes in AMFW"
+    return cfg, tensors
+
+
+def test_smoke_artifacts_parse_exactly(tmp_path):
+    export_smoke_model(str(tmp_path), "sst2")
+
+    name, n_classes, seq, vocab, n_train, n_dev, toks, labels = _read_task(
+        tmp_path / "tasks" / "sst2.amft"
+    )
+    assert name == "sst2"
+    assert (n_classes, seq, vocab) == (
+        SMOKE_CONFIG["n_classes"],
+        SMOKE_CONFIG["max_seq"],
+        SMOKE_CONFIG["vocab"],
+    )
+    assert n_train == 0 and n_dev == SMOKE_N_DEV
+    assert all(t < vocab for t in toks)
+    assert all(0 <= v < n_classes for v in labels)
+    # Both classes present: calibration measures accuracy degradation.
+    assert {int(v) for v in labels} == set(range(n_classes))
+
+    cfg, tensors = _read_weights(tmp_path / "weights" / "sst2.amfw")
+    d, ff = SMOKE_CONFIG["d_model"], SMOKE_CONFIG["d_ff"]
+    assert cfg == (
+        SMOKE_CONFIG["vocab"], d, SMOKE_CONFIG["n_heads"], ff,
+        SMOKE_CONFIG["n_layers"], SMOKE_CONFIG["max_seq"],
+        SMOKE_CONFIG["n_classes"],
+    )
+    # Every tensor the Rust encoder reads, with the shapes it expects.
+    want = {
+        "emb.tok": (SMOKE_CONFIG["vocab"], d),
+        "emb.pos": (SMOKE_CONFIG["max_seq"], d),
+        "head.w": (d, SMOKE_CONFIG["n_classes"]),
+        "head.b": (SMOKE_CONFIG["n_classes"],),
+    }
+    for l in range(SMOKE_CONFIG["n_layers"]):
+        for nm in ("q", "k", "v", "o"):
+            want[f"layer{l}.{nm}.w"] = (d, d)
+            want[f"layer{l}.{nm}.b"] = (d,)
+        want[f"layer{l}.ff1.w"] = (d, ff)
+        want[f"layer{l}.ff1.b"] = (ff,)
+        want[f"layer{l}.ff2.w"] = (ff, d)
+        want[f"layer{l}.ff2.b"] = (d,)
+        for nm in ("ln1", "ln2"):
+            want[f"layer{l}.{nm}.g"] = (d,)
+            want[f"layer{l}.{nm}.b"] = (d,)
+    assert {k: v[0] for k, v in tensors.items()} == want
+    # Sane values: finite, bounded, layernorm gains exactly 1.
+    for name, (_, vals) in tensors.items():
+        assert all(abs(v) <= 4.0 for v in vals), name
+    assert set(tensors["layer0.ln1.g"][1]) == {1.0}
+    assert set(tensors["layer0.ln1.b"][1]) == {0.0}
+
+    # Deterministic: a second export writes identical bytes.
+    export_smoke_model(str(tmp_path / "again"), "sst2")
+    for rel in ("tasks/sst2.amft", "weights/sst2.amfw"):
+        assert (tmp_path / rel).read_bytes() == (tmp_path / "again" / rel).read_bytes()

@@ -1,88 +1,16 @@
 //! Design-space exploration: sweep the (k, λ) parameters of approximate
 //! normalization and chart the accuracy/cost trade-off — the ablation the
 //! paper's §IV discusses qualitatively (why k=1 matters, why an-2-2 falls
-//! off).  Needs no artifacts: uses GEMM-level error on synthetic operands
-//! plus the cost model.
+//! off).  Needs no artifacts.
+//!
+//! This is a thin wrapper: the sweep, the Pareto frontier and the shared
+//! [`amfma::autotune::rel_err`] helper live in [`amfma::autotune`] (the
+//! `search` and `report` modules), where `amfma tune` reuses them.
 //!
 //! Run: `cargo run --release --example design_space`
 
-use amfma::cost;
-use amfma::prng::Prng;
-use amfma::systolic::{EngineMode, MatrixEngine};
-use amfma::{ApproxNorm, NormMode};
+use amfma::autotune::report::design_space_report;
 
 fn main() {
-    let (m, k, n) = (32, 512, 32);
-    let mut rng = Prng::new(77);
-    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
-    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-    let exact = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, k, n);
-    let bf16 = MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)).matmul(&x, &w, m, k, n);
-    let bf16_err = rel_err(&bf16, &exact);
-
-    println!("GEMM {m}x{k}x{n}; bf16 (accurate norm) relative error = {bf16_err:.5}\n");
-    println!(
-        "{:<8} {:>12} {:>14} {:>12} {:>12}",
-        "config", "rel err", "err vs bf16", "PE saving", "norm cost GE"
-    );
-    for kk in 1..=3u32 {
-        for lam in 1..=3u32 {
-            let cfg = ApproxNorm::new(kk, lam);
-            let eng = MatrixEngine::new(EngineMode::Bf16(NormMode::Approx(cfg)));
-            let y = eng.matmul(&x, &w, m, k, n);
-            let err = rel_err(&y, &exact);
-            let pe = cost::PeArea::approximate(cfg);
-            println!(
-                "{:<8} {:>12.5} {:>14.2}x {:>11.1}% {:>12.1}",
-                cfg.label(),
-                err,
-                err / bf16_err,
-                100.0 * cost::pe_area_saving(cfg),
-                pe.norm_logic_total(),
-            );
-        }
-    }
-    println!(
-        "\nreading: k=1 keeps the exact no-shift decision (bit at the normalized\n\
-         position), so an-1-* track bf16; k>=2 leaves 1-shift results\n\
-         un-normalized — the paper's explanation for an-2-2's accuracy cliff."
-    );
-
-    // Error amplification vs accumulation depth K — the mechanism behind
-    // Table I's an-2-2 cliff.  The paper's BERT-base chains are K=768..3072;
-    // at those depths an-2-2's relative error reaches the percent level
-    // that degrades task accuracy, while an-1-2 stays at bf16's floor.
-    println!("\nrelative GEMM error vs accumulation depth K (8x K x 8):");
-    println!("{:<8} {:>12} {:>12} {:>12} {:>14}", "K", "bf16", "an-1-2", "an-2-2", "an-2-2/bf16");
-    for kk in [64usize, 128, 256, 512, 1024, 2048, 3072] {
-        let xk: Vec<f32> = (0..8 * kk).map(|_| rng.normal() as f32).collect();
-        let wk: Vec<f32> = (0..kk * 8).map(|_| rng.normal() as f32).collect();
-        let ex = MatrixEngine::new(EngineMode::Fp32).matmul(&xk, &wk, 8, kk, 8);
-        let e = |mode: &str| {
-            let y = MatrixEngine::new(EngineMode::parse(mode).unwrap()).matmul(&xk, &wk, 8, kk, 8);
-            rel_err(&y, &ex)
-        };
-        let (eb, e12, e22) = (e("bf16"), e("bf16an-1-2"), e("bf16an-2-2"));
-        println!(
-            "{:<8} {:>12.5} {:>12.5} {:>12.5} {:>13.2}x",
-            kk, eb, e12, e22, e22 / eb
-        );
-    }
-
-    // Where do the cost savings saturate? Sweep the engine size.
-    println!("\nengine-level area saving (an-1-2) vs array size:");
-    for s in [4usize, 8, 16, 32, 64] {
-        let r = cost::area_saving(cost::EngineGeometry::square(s), ApproxNorm::AN_1_2);
-        println!("  {0}x{0}: {1:.1}%", s, 100.0 * r.total_saving);
-    }
-}
-
-fn rel_err(y: &[f32], exact: &[f32]) -> f64 {
-    let mut num = 0.0f64;
-    let mut den = 0.0f64;
-    for (a, b) in y.iter().zip(exact) {
-        num += ((a - b) as f64).powi(2);
-        den += (*b as f64).powi(2);
-    }
-    (num / den).sqrt()
+    println!("{}", design_space_report());
 }

@@ -3,13 +3,17 @@
 //! Router → dynamic batcher → engine workers over the trained task models
 //! (falls back to randomly initialized models when artifacts are absent, so
 //! the example always runs).  Three replicas are deployed behind one
-//! router: a **short-sequence** bf16an-1-2 deployment (length envelope
-//! `max_len = seq/2`, so its batches stay dense), the general bf16an-1-2
-//! "efficient" engine, and the fp32 reference.  The load generator
+//! router in two serving **lanes**: a *cheap* lane running a mixed
+//! precision policy (bf16an-1-2 everywhere except the classifier head,
+//! which stays on accurate bf16 — the same head guard `amfma tune`
+//! applies), split into a short-sequence deployment (length envelope
+//! `max_len = seq/2`, so its batches stay dense) plus a general one, and
+//! an *accurate* lane holding the fp32 reference.  The load generator
 //! truncates each example to a random live length (`--varlen`, default on;
-//! `--fixed` restores full-length traffic), splits traffic across modes,
-//! and the report contrasts latency, throughput, batch shapes, padding
-//! efficiency and agreement of predictions.
+//! `--fixed` restores full-length traffic), routes the bulk of the traffic
+//! to the cheap lane, and the shutdown report contrasts latency,
+//! throughput, batch shapes, padding efficiency, per-mode served-token
+//! counters and agreement of predictions across lanes.
 //!
 //! Run: `cargo run --release --example serve_engine -- [--requests 512]`
 
@@ -17,8 +21,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use amfma::autotune::{PrecisionPolicy, Site};
 use amfma::config::Args;
-use amfma::coordinator::{InferenceServer, Replica, Router, ServerConfig};
+use amfma::coordinator::{InferenceServer, Lane, Replica, Router, ServerConfig};
 use amfma::data::tasks::GLUE_TASKS;
 use amfma::model::{eval::weights_path, ModelConfig, Weights};
 use amfma::prng::Prng;
@@ -66,20 +71,29 @@ fn main() {
 
     let (models, tasks) = load_models();
     let short_cap = tasks.iter().map(|t| t.seq_len).max().unwrap_or(24) / 2;
-    println!(
-        "deploying 3 replicas: bf16an-1-2≤{short_cap} (short lane) + bf16an-1-2 + fp32 (reference)"
-    );
 
+    // The cheap lane runs a mixed policy: an-1-2 arithmetic everywhere
+    // except the classifier head (accurate bf16) — the head guard the
+    // tuner applies by default.  One policy per deployed task.
     let mode_eff = EngineMode::parse("bf16an-1-2").unwrap();
     let mode_ref = EngineMode::Fp32;
-    let srv_short = InferenceServer::start(
-        models.clone(),
-        ServerConfig { mode: mode_eff, ..Default::default() },
+    let mut policies = HashMap::new();
+    for name in models.keys() {
+        let mut p = PrecisionPolicy::uniform(mode_eff);
+        p.task = name.clone();
+        p.set(Site::head(), EngineMode::parse("bf16").unwrap());
+        policies.insert(name.clone(), Arc::new(p));
+    }
+    let policy_label = policies.values().next().map(|p| p.label()).unwrap_or_default();
+    println!(
+        "deploying 2 lanes / 3 replicas: cheap = {policy_label}≤{short_cap} (short) + \
+         {policy_label}, accurate = fp32 (reference)"
     );
-    let srv_eff = InferenceServer::start(
-        models.clone(),
-        ServerConfig { mode: mode_eff, ..Default::default() },
-    );
+
+    let cheap_cfg =
+        ServerConfig { mode: mode_eff, policies: policies.clone(), ..Default::default() };
+    let srv_short = InferenceServer::start(models.clone(), cheap_cfg.clone());
+    let srv_eff = InferenceServer::start(models.clone(), cheap_cfg);
     let srv_ref = InferenceServer::start(
         models.clone(),
         ServerConfig { mode: mode_ref, ..Default::default() },
@@ -89,6 +103,7 @@ fn main() {
         Replica::new(mode_eff, srv_eff.handle()),
         Replica::new(mode_ref, srv_ref.handle()),
     ]);
+    println!("lanes: {:?}", router.lanes().iter().map(|l| l.label()).collect::<Vec<_>>());
 
     let t0 = Instant::now();
     let agree = std::sync::atomic::AtomicU64::new(0);
@@ -109,14 +124,15 @@ fn main() {
                         let len = 1 + rng.below(toks.len() as u64) as usize;
                         toks.truncate(len);
                     }
-                    // 1-in-4 requests are "shadow" pairs sent to both modes
+                    // 1-in-4 requests are "shadow" pairs sent to both lanes
                     // to measure prediction agreement online.
                     if i % 4 == 0 {
                         let r1 = router
-                            .route_blocking(&t.name, toks.clone(), Some(mode_eff))
+                            .route_lane_blocking(&t.name, toks.clone(), Some(Lane::Cheap))
                             .unwrap();
-                        let r2 =
-                            router.route_blocking(&t.name, toks, Some(mode_ref)).unwrap();
+                        let r2 = router
+                            .route_lane_blocking(&t.name, toks, Some(Lane::Accurate))
+                            .unwrap();
                         let a1 = argmax(&r1.logits);
                         let a2 = argmax(&r2.logits);
                         total_pairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -124,7 +140,8 @@ fn main() {
                             agree.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                     } else {
-                        let _ = router.route_blocking(&t.name, toks, Some(mode_eff));
+                        let _ =
+                            router.route_lane_blocking(&t.name, toks, Some(Lane::Cheap));
                     }
                 }
             });
@@ -132,7 +149,7 @@ fn main() {
     });
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("\n--- per-replica metrics ---");
+    println!("\n--- per-replica metrics (note the per-mode token counters) ---");
     for (label, snap) in router.metrics() {
         println!("[{label}]\n{}\n", snap.render());
     }
@@ -144,7 +161,7 @@ fn main() {
     );
     if t > 0 {
         println!(
-            "prediction agreement bf16an-1-2 vs fp32: {a}/{t} = {:.1}%",
+            "prediction agreement cheap lane ({policy_label}) vs fp32: {a}/{t} = {:.1}%",
             100.0 * a as f64 / t as f64
         );
     }

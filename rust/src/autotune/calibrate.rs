@@ -1,0 +1,310 @@
+//! Greedy per-site mixed-mode calibration.
+//!
+//! The tuner sweeps candidate approximate-normalization modes per GEMM
+//! site against the FP32 reference on the task's dev split and assigns
+//! each site the cheapest mode (by the MAC-weighted PE-area model of
+//! [`super::search`]) whose *end-to-end* task-metric degradation stays
+//! within the user's budget.  Sites are visited biggest-MAC-volume first,
+//! so the largest savings are locked in before the budget tightens; every
+//! trial evaluates the whole policy assembled so far plus the one new
+//! assignment, which makes the final measured degradation exactly the last
+//! accepted trial's — within budget by construction whenever the fallback
+//! itself is.
+//!
+//! The classifier head is pinned to the accurate fallback mode by default
+//! (standard mixed-precision practice: the output layer feeds logits
+//! directly, and its MAC volume is negligible).  Pass `tune_head = true`
+//! to tune it too.  Note the emitted policy is non-uniform exactly when
+//! at least one site accepts a candidate — a pin to the fallback records
+//! no override, so an all-rejections run yields a uniform policy.
+
+use std::sync::Arc;
+
+use crate::data::tasks::Task;
+use crate::error::{bail, Result};
+use crate::model::eval::{evaluate_task, evaluate_task_policy, EvalResult};
+use crate::model::Weights;
+use crate::systolic::EngineMode;
+use crate::NormMode;
+
+use super::policy::{model_sites, PrecisionPolicy, Site, SiteKind};
+use super::search::{mode_pe_area, policy_area_saving, site_macs};
+
+/// Knobs of one calibration run.
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    /// Maximum allowed headline-metric degradation vs the FP32 reference,
+    /// in points (accuracy percent / PCC×100).
+    pub budget_points: f64,
+    pub batch_size: usize,
+    /// Dev-split truncation for quick runs (`None` = full split).
+    pub limit: Option<usize>,
+    /// Candidate reduced-cost modes; the tuner orders them cheapest-first
+    /// by the PE-area model and drops any not cheaper than the fallback.
+    pub candidates: Vec<EngineMode>,
+    /// Mode of sites no candidate fits (and the policy default).
+    pub fallback: EngineMode,
+    /// Tune the classifier head too instead of pinning it to the fallback.
+    pub tune_head: bool,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            budget_points: 1.0,
+            batch_size: 16,
+            limit: None,
+            candidates: ["bf16an-2-2", "bf16an-1-1", "bf16an-1-2"]
+                .iter()
+                .map(|s| EngineMode::parse(s).unwrap())
+                .collect(),
+            fallback: EngineMode::Bf16(NormMode::Accurate),
+            tune_head: false,
+        }
+    }
+}
+
+/// What the tuner decided for one site.
+#[derive(Debug, Clone)]
+pub struct SiteDecision {
+    pub site: Site,
+    pub mode: EngineMode,
+    /// MAC volume of the site at the task's sequence length.
+    pub macs: u64,
+    /// End-to-end degradation (points vs FP32) measured after this
+    /// decision — cumulative over everything assigned so far.
+    pub degradation: f64,
+    /// Decision-flip rate vs the FP32 reference after this decision
+    /// (classification tasks; 0 for regression).
+    pub flip_rate: f64,
+    /// True when the site was pinned (head guard), not calibrated.
+    pub pinned: bool,
+}
+
+/// The result of one calibration run.
+#[derive(Debug, Clone)]
+pub struct CalibrationOutcome {
+    pub policy: PrecisionPolicy,
+    /// FP32 reference headline metric.
+    pub reference_headline: f64,
+    /// Headline of the uniform-fallback policy (the starting point).
+    pub baseline_headline: f64,
+    /// Headline of the final mixed policy.
+    pub final_headline: f64,
+    /// `reference_headline - final_headline`, in points.
+    pub final_degradation: f64,
+    /// Decision-flip rate of the final policy vs the FP32 reference.
+    pub final_flip_rate: f64,
+    /// Whether the final degradation met the budget (false only when even
+    /// the uniform fallback misses it).
+    pub within_budget: bool,
+    /// MAC-weighted modeled area saving vs the uniform fallback (0..1).
+    pub area_saving_vs_fallback: f64,
+    pub decisions: Vec<SiteDecision>,
+    /// Number of full dev-split evaluations the run cost.
+    pub evals_run: usize,
+}
+
+/// Fraction of dev examples whose decision differs between two runs
+/// (classification only; 0 for regression tasks, whose sensitivity is
+/// already captured by the PCC headline).
+pub fn flip_rate(a: &EvalResult, b: &EvalResult) -> f64 {
+    if a.accuracy_pct.is_none() || b.accuracy_pct.is_none() {
+        return 0.0;
+    }
+    let total = a.preds.len().min(b.preds.len());
+    if total == 0 {
+        return 0.0;
+    }
+    let flips =
+        a.preds.iter().zip(&b.preds).filter(|(x, y)| x != y).count();
+    flips as f64 / total as f64
+}
+
+/// Run the greedy calibration for one task/model pair.
+pub fn calibrate(
+    task: &Task,
+    weights: &Weights,
+    cfg: &CalibrationConfig,
+) -> Result<CalibrationOutcome> {
+    if task.n_dev() == 0 {
+        bail!("task {} has no dev examples to calibrate on", task.name);
+    }
+    let mut evals = 0usize;
+    let mut eval_policy = |p: &PrecisionPolicy| {
+        evals += 1;
+        evaluate_task_policy(task, weights, Arc::new(p.clone()), cfg.batch_size, cfg.limit)
+    };
+
+    let reference = evaluate_task(task, weights, EngineMode::Fp32, cfg.batch_size, cfg.limit);
+    let ref_headline = reference.headline();
+
+    let mut policy = PrecisionPolicy::uniform(cfg.fallback);
+    policy.task = task.name.clone();
+    let baseline = eval_policy(&policy);
+
+    // Candidates cheapest-first; anything not cheaper than the fallback
+    // can never improve the objective and is dropped.
+    let mut candidates: Vec<EngineMode> = cfg
+        .candidates
+        .iter()
+        .copied()
+        .filter(|m| mode_pe_area(*m) < mode_pe_area(cfg.fallback))
+        .collect();
+    candidates.sort_by(|a, b| {
+        mode_pe_area(*a)
+            .partial_cmp(&mode_pe_area(*b))
+            .unwrap()
+            .then_with(|| a.label().cmp(&b.label()))
+    });
+    if candidates.is_empty() {
+        bail!("no candidate mode is cheaper than the fallback {}", cfg.fallback.label());
+    }
+
+    // Biggest sites first: lock in the largest savings before the budget
+    // tightens.
+    let mcfg = &weights.config;
+    let seq = task.seq_len;
+    let mut sites = model_sites(mcfg.n_layers);
+    sites.sort_by_key(|s| std::cmp::Reverse((site_macs(mcfg, seq, *s), *s)));
+
+    let mut decisions = Vec::new();
+    let mut last = baseline.clone();
+    for site in sites {
+        let macs = site_macs(mcfg, seq, site);
+        if site.kind == SiteKind::Head && !cfg.tune_head {
+            decisions.push(SiteDecision {
+                site,
+                mode: cfg.fallback,
+                macs,
+                degradation: ref_headline - last.headline(),
+                flip_rate: flip_rate(&last, &reference),
+                pinned: true,
+            });
+            continue;
+        }
+        let mut chosen = cfg.fallback;
+        for cand in &candidates {
+            let mut trial = policy.clone();
+            trial.set(site, *cand);
+            let r = eval_policy(&trial);
+            if ref_headline - r.headline() <= cfg.budget_points + 1e-9 {
+                chosen = *cand;
+                policy = trial;
+                last = r;
+                break;
+            }
+        }
+        decisions.push(SiteDecision {
+            site,
+            mode: chosen,
+            macs,
+            degradation: ref_headline - last.headline(),
+            flip_rate: flip_rate(&last, &reference),
+            pinned: false,
+        });
+    }
+
+    // `last` already *is* the evaluation of the final policy: every
+    // accepted trial evaluated the whole policy assembled so far, and with
+    // no acceptances it is the baseline eval of the unchanged uniform
+    // fallback — no need to pay one more full dev-split sweep.
+    let final_degradation = ref_headline - last.headline();
+    Ok(CalibrationOutcome {
+        area_saving_vs_fallback: policy_area_saving(&policy, mcfg, seq, cfg.fallback),
+        policy,
+        reference_headline: ref_headline,
+        baseline_headline: baseline.headline(),
+        final_headline: last.headline(),
+        final_degradation,
+        final_flip_rate: flip_rate(&last, &reference),
+        within_budget: final_degradation <= cfg.budget_points + 1e-9,
+        decisions,
+        evals_run: evals + 1, // + the FP32 reference run
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::prng::Prng;
+
+    fn tiny_task(n_dev: usize) -> Task {
+        let mut rng = Prng::new(11);
+        let seq = 8usize;
+        Task {
+            name: "sst2".into(),
+            n_classes: 2,
+            seq_len: seq,
+            vocab: 32,
+            train_tokens: vec![],
+            train_labels: vec![],
+            dev_tokens: (0..n_dev * seq).map(|_| rng.below(32) as u16).collect(),
+            dev_labels: (0..n_dev).map(|i| (i % 2) as f32).collect(),
+        }
+    }
+
+    fn tiny_weights() -> Weights {
+        Weights::random(
+            ModelConfig { vocab: 32, d_model: 16, n_heads: 2, d_ff: 32, n_layers: 2, max_seq: 8, n_classes: 2 },
+            23,
+        )
+    }
+
+    #[test]
+    fn generous_budget_yields_nonuniform_saving_policy() {
+        let task = tiny_task(16);
+        let w = tiny_weights();
+        let cfg = CalibrationConfig { budget_points: 100.0, batch_size: 8, ..Default::default() };
+        let out = calibrate(&task, &w, &cfg).unwrap();
+        // With a 100-point budget every non-head site accepts the cheapest
+        // candidate, so the policy carries overrides (the pinned head stays
+        // on the fallback and records none).
+        assert!(!out.policy.is_uniform());
+        assert_eq!(out.policy.mode_for(Site::head()), cfg.fallback);
+        assert!(out.within_budget);
+        assert!(out.final_degradation <= 100.0 + 1e-9);
+        assert!(
+            out.area_saving_vs_fallback > 0.0,
+            "saving {} must be strictly positive",
+            out.area_saving_vs_fallback
+        );
+        assert_eq!(out.decisions.len(), 13); // 2 layers × 6 sites + head
+        assert_eq!(out.policy.task, "sst2");
+        // Round-trips through the on-disk format intact.
+        let q = PrecisionPolicy::from_bytes(&out.policy.to_bytes()).unwrap();
+        assert_eq!(q, out.policy);
+    }
+
+    #[test]
+    fn impossible_budget_reports_honest_failure() {
+        let task = tiny_task(8);
+        let w = tiny_weights();
+        let cfg = CalibrationConfig {
+            budget_points: -1000.0, // unattainable: nothing can *gain* 1000 pts
+            batch_size: 8,
+            ..Default::default()
+        };
+        let out = calibrate(&task, &w, &cfg).unwrap();
+        assert!(out.policy.is_uniform(), "no site may accept a candidate");
+        assert!(!out.within_budget);
+        assert_eq!(out.area_saving_vs_fallback, 0.0);
+    }
+
+    #[test]
+    fn empty_dev_split_is_an_error() {
+        let task = tiny_task(0);
+        let w = tiny_weights();
+        assert!(calibrate(&task, &w, &CalibrationConfig::default()).is_err());
+    }
+
+    #[test]
+    fn flip_rate_counts_decision_changes() {
+        let task = tiny_task(8);
+        let w = tiny_weights();
+        let a = evaluate_task(&task, &w, EngineMode::Fp32, 8, None);
+        let same = flip_rate(&a, &a);
+        assert_eq!(same, 0.0);
+    }
+}

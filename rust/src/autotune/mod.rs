@@ -1,0 +1,33 @@
+//! Precision-policy autotuning — per-layer mixed-mode calibration.
+//!
+//! The paper's central claim is that approximate normalization is a
+//! *configuration choice*: each (k, λ) variant trades PE area/power
+//! against model accuracy.  This subsystem turns that choice from a
+//! global, hand-picked engine mode into a calibrated **per-site policy**:
+//!
+//! * [`policy`] — the serializable [`PrecisionPolicy`] mapping every
+//!   encoder GEMM site (QKV, attention score/context/output, FFN,
+//!   classifier head) to its own [`crate::systolic::EngineMode`], with the
+//!   versioned `AMFP` on-disk format;
+//! * [`calibrate`] — greedy per-site calibration against the FP32
+//!   reference on a task's dev split, assigning each site the cheapest
+//!   mode that keeps end-to-end task-metric degradation within budget;
+//! * [`search`] — the PE-area cost hooks, MAC-volume site weighting and
+//!   the (k, λ) Pareto-frontier sweep;
+//! * [`report`] — the text reports behind `amfma tune` and the
+//!   `design_space` example.
+//!
+//! Serving integration: `amfma tune` writes a policy file, `amfma serve
+//! --policy <file>` (and [`crate::coordinator::ServerConfig::policies`])
+//! runs it, and [`crate::coordinator::Router`] lanes route traffic between
+//! cheap (approximate) and accurate replicas.
+
+pub mod calibrate;
+pub mod policy;
+pub mod report;
+pub mod search;
+
+pub use calibrate::{calibrate, CalibrationConfig, CalibrationOutcome, SiteDecision};
+pub use policy::{model_sites, PrecisionPolicy, Site, SiteKind};
+pub use report::rel_err;
+pub use search::{mode_pe_area, pareto_frontier, policy_area_saving, site_macs, ParetoPoint};

@@ -1,0 +1,436 @@
+//! Per-site precision policies: which [`EngineMode`] each GEMM site of the
+//! encoder runs, with a versioned little-endian on-disk format.
+//!
+//! A *site* is one of the encoder's engine-backed matrix products — the
+//! fused QKV projections, the attention score/context products, the
+//! attention output projection and the two FFN matmuls of every layer, plus
+//! the classifier head.  (The embedding lookup is FP32 host math in this
+//! system; the `Embed` site is carried in the format for completeness but
+//! assigning it a mode has no effect.)
+//!
+//! A [`PrecisionPolicy`] maps sites to modes with a default for everything
+//! unlisted.  A *uniform* policy — every site on the default mode — is
+//! guaranteed bit-identical to running the encoder with that global mode
+//! (asserted in `rust/tests/integration_policy.rs`); that invariant is what
+//! lets the calibrated mixed-mode path replace the global-mode path without
+//! a numeric cliff.
+//!
+//! Format `AMFP` v1, little-endian (mirroring the `AMFT` task format):
+//! ```text
+//! magic  b"AMFP"
+//! u32    version (=1)
+//! u16    task_len,  task name (utf-8; empty = applies to any task)
+//! u16    mode_len,  default mode label (utf-8, e.g. "bf16an-1-2")
+//! u32    n_sites
+//! repeat n_sites:
+//!   u8   site kind (0=embed 1=qkv 2=attn.scores 3=attn.context
+//!                   4=attn.out 5=ffn1 6=ffn2 7=head)
+//!   u32  layer (0 for embed/head)
+//!   u16  mode_len,  mode label (utf-8)
+//! ```
+//! Mode labels are stored as strings so the format never drifts from
+//! [`EngineMode::parse`]; corrupt or truncated files surface as
+//! [`crate::error::Error`], never panics.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{bail, Context, Result};
+use crate::systolic::EngineMode;
+
+/// The kinds of engine-backed GEMM sites in the encoder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SiteKind {
+    /// Embedding lookup — FP32 host math today; reserved in the format.
+    Embed,
+    /// The Q, K and V projections of one layer (tuned as one unit: they
+    /// feed the same attention arithmetic and share an error budget).
+    Qkv,
+    /// The `Q·Kᵀ` score product of one layer.
+    AttnScores,
+    /// The `P·V` context product of one layer.
+    AttnContext,
+    /// The attention output projection of one layer.
+    AttnOut,
+    /// The first (expanding) FFN matmul of one layer.
+    Ffn1,
+    /// The second (contracting) FFN matmul of one layer.
+    Ffn2,
+    /// The CLS classifier head.
+    Head,
+}
+
+impl SiteKind {
+    fn code(self) -> u8 {
+        match self {
+            SiteKind::Embed => 0,
+            SiteKind::Qkv => 1,
+            SiteKind::AttnScores => 2,
+            SiteKind::AttnContext => 3,
+            SiteKind::AttnOut => 4,
+            SiteKind::Ffn1 => 5,
+            SiteKind::Ffn2 => 6,
+            SiteKind::Head => 7,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<SiteKind> {
+        Some(match c {
+            0 => SiteKind::Embed,
+            1 => SiteKind::Qkv,
+            2 => SiteKind::AttnScores,
+            3 => SiteKind::AttnContext,
+            4 => SiteKind::AttnOut,
+            5 => SiteKind::Ffn1,
+            6 => SiteKind::Ffn2,
+            7 => SiteKind::Head,
+            _ => return None,
+        })
+    }
+}
+
+/// One GEMM site: kind + encoder layer (0 for the layer-less kinds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Site {
+    pub kind: SiteKind,
+    pub layer: u32,
+}
+
+impl Site {
+    pub const fn embed() -> Site {
+        Site { kind: SiteKind::Embed, layer: 0 }
+    }
+    pub const fn qkv(layer: u32) -> Site {
+        Site { kind: SiteKind::Qkv, layer }
+    }
+    pub const fn attn_scores(layer: u32) -> Site {
+        Site { kind: SiteKind::AttnScores, layer }
+    }
+    pub const fn attn_context(layer: u32) -> Site {
+        Site { kind: SiteKind::AttnContext, layer }
+    }
+    pub const fn attn_out(layer: u32) -> Site {
+        Site { kind: SiteKind::AttnOut, layer }
+    }
+    pub const fn ffn1(layer: u32) -> Site {
+        Site { kind: SiteKind::Ffn1, layer }
+    }
+    pub const fn ffn2(layer: u32) -> Site {
+        Site { kind: SiteKind::Ffn2, layer }
+    }
+    pub const fn head() -> Site {
+        Site { kind: SiteKind::Head, layer: 0 }
+    }
+
+    /// Human-readable name, e.g. `layer0.attn.scores`, `head`.
+    pub fn label(&self) -> String {
+        let l = self.layer;
+        match self.kind {
+            SiteKind::Embed => "embed".to_string(),
+            SiteKind::Qkv => format!("layer{l}.qkv"),
+            SiteKind::AttnScores => format!("layer{l}.attn.scores"),
+            SiteKind::AttnContext => format!("layer{l}.attn.context"),
+            SiteKind::AttnOut => format!("layer{l}.attn.out"),
+            SiteKind::Ffn1 => format!("layer{l}.ffn1"),
+            SiteKind::Ffn2 => format!("layer{l}.ffn2"),
+            SiteKind::Head => "head".to_string(),
+        }
+    }
+}
+
+/// Every *tunable* engine site of an `n_layers`-deep encoder, in forward
+/// order (the `Embed` site is excluded: it never touches the engine).
+pub fn model_sites(n_layers: usize) -> Vec<Site> {
+    let mut out = Vec::with_capacity(n_layers * 6 + 1);
+    for l in 0..n_layers as u32 {
+        out.push(Site::qkv(l));
+        out.push(Site::attn_scores(l));
+        out.push(Site::attn_context(l));
+        out.push(Site::attn_out(l));
+        out.push(Site::ffn1(l));
+        out.push(Site::ffn2(l));
+    }
+    out.push(Site::head());
+    out
+}
+
+/// A per-site engine-mode assignment with a default for unlisted sites.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Task this policy was calibrated for (empty = any task).
+    pub task: String,
+    /// Mode of every site without an explicit override.
+    pub default_mode: EngineMode,
+    overrides: BTreeMap<Site, EngineMode>,
+}
+
+pub const POLICY_MAGIC: [u8; 4] = *b"AMFP";
+pub const POLICY_VERSION: u32 = 1;
+
+impl PrecisionPolicy {
+    /// A uniform policy: every site runs `mode`.
+    pub fn uniform(mode: EngineMode) -> PrecisionPolicy {
+        PrecisionPolicy { task: String::new(), default_mode: mode, overrides: BTreeMap::new() }
+    }
+
+    /// Assign one site a mode (replacing any previous assignment).
+    pub fn set(&mut self, site: Site, mode: EngineMode) {
+        self.overrides.insert(site, mode);
+    }
+
+    /// Mode a site runs under this policy.
+    pub fn mode_for(&self, site: Site) -> EngineMode {
+        self.overrides.get(&site).copied().unwrap_or(self.default_mode)
+    }
+
+    /// True when every site (listed or not) runs the default mode — the
+    /// case guaranteed bit-identical to a global-mode engine.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.values().all(|m| *m == self.default_mode)
+    }
+
+    /// Number of sites whose mode differs from the default.
+    pub fn override_count(&self) -> usize {
+        self.overrides.values().filter(|m| **m != self.default_mode).count()
+    }
+
+    /// The explicit (site, mode) assignments, in site order.
+    pub fn assignments(&self) -> impl Iterator<Item = (&Site, &EngineMode)> {
+        self.overrides.iter()
+    }
+
+    /// Display label: the plain mode label for uniform policies, a
+    /// `policy[...]` summary for mixed ones.  Used as the per-mode
+    /// served-token key in [`crate::coordinator::Metrics`].
+    pub fn label(&self) -> String {
+        if self.is_uniform() {
+            self.default_mode.label()
+        } else {
+            format!("policy[{}+{}ovr]", self.default_mode.label(), self.override_count())
+        }
+    }
+
+    /// Serialize in the `AMFP` v1 format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&POLICY_MAGIC);
+        b.extend_from_slice(&POLICY_VERSION.to_le_bytes());
+        b.extend_from_slice(&(self.task.len() as u16).to_le_bytes());
+        b.extend_from_slice(self.task.as_bytes());
+        let dm = self.default_mode.label();
+        b.extend_from_slice(&(dm.len() as u16).to_le_bytes());
+        b.extend_from_slice(dm.as_bytes());
+        b.extend_from_slice(&(self.overrides.len() as u32).to_le_bytes());
+        for (site, mode) in &self.overrides {
+            b.push(site.kind.code());
+            b.extend_from_slice(&site.layer.to_le_bytes());
+            let ml = mode.label();
+            b.extend_from_slice(&(ml.len() as u16).to_le_bytes());
+            b.extend_from_slice(ml.as_bytes());
+        }
+        b
+    }
+
+    /// Parse the `AMFP` v1 format.  Every malformed input — bad magic,
+    /// unknown version, truncation anywhere, undecodable labels, unknown
+    /// site kinds, duplicate sites — is an `Err`, never a panic.
+    pub fn from_bytes(b: &[u8]) -> Result<PrecisionPolicy> {
+        let mut off = 0usize;
+        let magic = take(b, &mut off, 4).context("policy magic")?;
+        if magic != &POLICY_MAGIC[..] {
+            bail!("bad policy magic {magic:?}");
+        }
+        let version = read_u32(b, &mut off).context("policy version")?;
+        if version != POLICY_VERSION {
+            bail!("unsupported AMFP version {version}");
+        }
+        let task = read_str(b, &mut off).context("policy task name")?;
+        let dm = read_str(b, &mut off).context("policy default mode")?;
+        let default_mode =
+            EngineMode::parse(&dm).with_context(|| format!("bad default mode {dm:?}"))?;
+        let n_sites = read_u32(b, &mut off).context("policy site count")? as usize;
+        // Each entry is at least 1 + 4 + 2 bytes: reject implausible counts
+        // before looping (a corrupt count must not spin for 4 G iterations).
+        if n_sites > b.len().saturating_sub(off) / 7 {
+            bail!("implausible site count {n_sites} for {} remaining bytes", b.len() - off);
+        }
+        let mut overrides = BTreeMap::new();
+        for i in 0..n_sites {
+            let kind_code = take(b, &mut off, 1).with_context(|| format!("site {i} kind"))?[0];
+            let kind = SiteKind::from_code(kind_code)
+                .with_context(|| format!("site {i}: unknown kind {kind_code}"))?;
+            let layer = read_u32(b, &mut off).with_context(|| format!("site {i} layer"))?;
+            let ml = read_str(b, &mut off).with_context(|| format!("site {i} mode"))?;
+            let mode =
+                EngineMode::parse(&ml).with_context(|| format!("site {i}: bad mode {ml:?}"))?;
+            if overrides.insert(Site { kind, layer }, mode).is_some() {
+                bail!("duplicate site entry {}", Site { kind, layer }.label());
+            }
+        }
+        if off != b.len() {
+            bail!("{} trailing bytes after policy", b.len() - off);
+        }
+        Ok(PrecisionPolicy { task, default_mode, overrides })
+    }
+
+    /// Write the policy to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write policy {}", path.display()))
+    }
+
+    /// Load a policy file.
+    pub fn load(path: &Path) -> Result<PrecisionPolicy> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("open policy {}", path.display()))?;
+        PrecisionPolicy::from_bytes(&bytes)
+            .with_context(|| format!("parse policy {}", path.display()))
+    }
+}
+
+fn take<'a>(b: &'a [u8], off: &mut usize, n: usize) -> Option<&'a [u8]> {
+    let end = off.checked_add(n)?;
+    if end > b.len() {
+        return None;
+    }
+    let s = &b[*off..end];
+    *off = end;
+    Some(s)
+}
+
+fn read_u32(b: &[u8], off: &mut usize) -> Option<u32> {
+    let s = take(b, off, 4)?;
+    Some(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn read_str(b: &[u8], off: &mut usize) -> Option<String> {
+    let s = take(b, off, 2)?;
+    let len = u16::from_le_bytes([s[0], s[1]]) as usize;
+    let s = take(b, off, len)?;
+    String::from_utf8(s.to_vec()).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::NormMode;
+
+    fn mixed_policy() -> PrecisionPolicy {
+        let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16").unwrap());
+        p.task = "sst2".into();
+        p.set(Site::qkv(0), EngineMode::parse("bf16an-2-2").unwrap());
+        p.set(Site::ffn1(1), EngineMode::parse("bf16an-1-2").unwrap());
+        p.set(Site::head(), EngineMode::Fp32);
+        p
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        for p in [
+            PrecisionPolicy::uniform(EngineMode::Fp32),
+            PrecisionPolicy::uniform(EngineMode::parse("bf16an-1-1").unwrap()),
+            mixed_policy(),
+        ] {
+            let q = PrecisionPolicy::from_bytes(&p.to_bytes()).unwrap();
+            assert_eq!(p, q);
+        }
+    }
+
+    #[test]
+    fn mode_lookup_and_uniformity() {
+        let p = mixed_policy();
+        assert!(!p.is_uniform());
+        assert_eq!(p.override_count(), 3);
+        assert_eq!(p.mode_for(Site::qkv(0)).label(), "bf16an-2-2");
+        assert_eq!(p.mode_for(Site::qkv(1)).label(), "bf16"); // default
+        assert_eq!(p.mode_for(Site::head()), EngineMode::Fp32);
+
+        let mut u = PrecisionPolicy::uniform(EngineMode::Bf16(NormMode::Accurate));
+        assert!(u.is_uniform());
+        // An override equal to the default keeps the policy uniform.
+        u.set(Site::head(), EngineMode::Bf16(NormMode::Accurate));
+        assert!(u.is_uniform());
+        assert_eq!(u.override_count(), 0);
+        assert_eq!(u.label(), "bf16");
+        assert!(mixed_policy().label().starts_with("policy["));
+    }
+
+    #[test]
+    fn corrupt_and_truncated_inputs_error_not_panic() {
+        let good = mixed_policy().to_bytes();
+        // Every strict prefix must fail cleanly.
+        for n in 0..good.len() {
+            assert!(
+                PrecisionPolicy::from_bytes(&good[..n]).is_err(),
+                "prefix of {n} bytes must not parse"
+            );
+        }
+        // Trailing garbage.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(PrecisionPolicy::from_bytes(&long).is_err());
+        // Wrong magic / version.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(PrecisionPolicy::from_bytes(&bad).is_err());
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(PrecisionPolicy::from_bytes(&bad).is_err());
+        // Unknown site kind / mode label.
+        let mut p = PrecisionPolicy::uniform(EngineMode::Fp32);
+        p.set(Site::qkv(0), EngineMode::Fp32);
+        let mut bytes = p.to_bytes();
+        let kind_pos = bytes.len() - (1 + 4 + 2 + 4); // kind, layer, len, "fp32"
+        bytes[kind_pos] = 42;
+        assert!(PrecisionPolicy::from_bytes(&bytes).is_err());
+        // Absurd site count must be rejected without looping.
+        let mut huge = PrecisionPolicy::uniform(EngineMode::Fp32).to_bytes();
+        let cnt_pos = huge.len() - 4;
+        huge[cnt_pos..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(PrecisionPolicy::from_bytes(&huge).is_err());
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let dir = std::env::temp_dir().join("amfma_policy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.amfp");
+        let p = mixed_policy();
+        p.save(&path).unwrap();
+        assert_eq!(PrecisionPolicy::load(&path).unwrap(), p);
+        std::fs::write(&path, b"AMFPgarbage").unwrap();
+        assert!(PrecisionPolicy::load(&path).is_err());
+    }
+
+    #[test]
+    fn model_sites_enumerates_forward_order() {
+        let s = model_sites(2);
+        assert_eq!(s.len(), 13);
+        assert_eq!(s[0], Site::qkv(0));
+        assert_eq!(s[6], Site::qkv(1));
+        assert_eq!(*s.last().unwrap(), Site::head());
+        // No embed site: it never touches the engine.
+        assert!(s.iter().all(|x| x.kind != SiteKind::Embed));
+        // Labels are unique.
+        let labels: std::collections::HashSet<String> =
+            s.iter().map(|x| x.label()).collect();
+        assert_eq!(labels.len(), s.len());
+    }
+
+    #[test]
+    fn site_kind_codes_roundtrip() {
+        for k in [
+            SiteKind::Embed,
+            SiteKind::Qkv,
+            SiteKind::AttnScores,
+            SiteKind::AttnContext,
+            SiteKind::AttnOut,
+            SiteKind::Ffn1,
+            SiteKind::Ffn2,
+            SiteKind::Head,
+        ] {
+            assert_eq!(SiteKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(SiteKind::from_code(8), None);
+    }
+}

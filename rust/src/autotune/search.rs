@@ -1,0 +1,245 @@
+//! Cost hooks and design-space search: price an [`EngineMode`] per PE,
+//! weight a [`PrecisionPolicy`] by each site's MAC volume, and sweep the
+//! (k, λ) space of approximate normalization for the Pareto frontier of
+//! (area cost, numeric error) — the quantitative version of the paper's
+//! §IV discussion that `examples/design_space.rs` used to hand-roll.
+
+use crate::cost::{pe_area_saving, PeArea};
+use crate::model::ModelConfig;
+use crate::prng::Prng;
+use crate::systolic::{EngineMode, MatrixEngine};
+use crate::{ApproxNorm, NormMode};
+
+use super::policy::{PrecisionPolicy, Site, SiteKind};
+use super::report::rel_err;
+
+/// Modeled PE area (gate equivalents) of one engine mode: the paper's
+/// accurate/approximate bf16 PEs, or the conventional FP32 reference PE
+/// ([`PeArea::fp32_reference`]) for sites a policy keeps in full precision.
+pub fn mode_pe_area(mode: EngineMode) -> f64 {
+    match mode {
+        EngineMode::Fp32 => PeArea::fp32_reference().total(),
+        EngineMode::Bf16(NormMode::Accurate) => PeArea::accurate().total(),
+        EngineMode::Bf16(NormMode::Approx(cfg)) => PeArea::approximate(cfg).total(),
+    }
+}
+
+/// MAC volume of one GEMM site for a single sequence of `seq` live tokens
+/// — the weight a site's mode carries in the policy-level cost model.
+pub fn site_macs(cfg: &ModelConfig, seq: usize, site: Site) -> u64 {
+    let d = cfg.d_model as u64;
+    let ff = cfg.d_ff as u64;
+    let s = seq as u64;
+    match site.kind {
+        SiteKind::Embed => 0, // FP32 table lookup, never on the engine
+        SiteKind::Qkv => 3 * s * d * d,
+        // heads × (seq × head_dim × seq) = seq² × d_model, for both the
+        // score and the context product.
+        SiteKind::AttnScores | SiteKind::AttnContext => s * s * d,
+        SiteKind::AttnOut => s * d * d,
+        SiteKind::Ffn1 => s * d * ff,
+        SiteKind::Ffn2 => s * ff * d,
+        SiteKind::Head => d * cfg.n_classes as u64,
+    }
+}
+
+/// MAC-weighted PE area of a policy over every tunable site: the cost a
+/// fleet of per-site-sized engines (or one time-multiplexed reconfigurable
+/// engine) would pay to run this model at this sequence length.
+pub fn policy_weighted_area(policy: &PrecisionPolicy, cfg: &ModelConfig, seq: usize) -> f64 {
+    super::policy::model_sites(cfg.n_layers)
+        .into_iter()
+        .map(|site| site_macs(cfg, seq, site) as f64 * mode_pe_area(policy.mode_for(site)))
+        .sum()
+}
+
+/// Modeled area saving of `policy` relative to running every site on
+/// `baseline` (0.12 = 12 % cheaper), MAC-weighted per site.
+pub fn policy_area_saving(
+    policy: &PrecisionPolicy,
+    cfg: &ModelConfig,
+    seq: usize,
+    baseline: EngineMode,
+) -> f64 {
+    let base = policy_weighted_area(&PrecisionPolicy::uniform(baseline), cfg, seq);
+    if base == 0.0 {
+        return 0.0;
+    }
+    (base - policy_weighted_area(policy, cfg, seq)) / base
+}
+
+/// One (cost, error) candidate; lower is better on both axes.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub label: String,
+    pub cost: f64,
+    pub error: f64,
+}
+
+/// Non-domination mask: `true` for points on the Pareto frontier.  A point
+/// is dominated when another point is no worse on both axes and strictly
+/// better on at least one.
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|p| {
+            !points.iter().any(|q| {
+                q.cost <= p.cost
+                    && q.error <= p.error
+                    && (q.cost < p.cost || q.error < p.error)
+            })
+        })
+        .collect()
+}
+
+/// One row of the (k, λ) design-space sweep.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub cfg: ApproxNorm,
+    /// Relative GEMM error vs the FP32 reference.
+    pub rel_err: f64,
+    /// Error amplification vs the accurate-norm bf16 baseline.
+    pub err_vs_bf16: f64,
+    /// PE-level area saving vs the accurate bf16 PE (0..1).
+    pub pe_saving: f64,
+    /// Normalization-logic area of the approximate PE (GE).
+    pub norm_ge: f64,
+    /// On the (area, error) Pareto frontier of the sweep.
+    pub on_frontier: bool,
+}
+
+/// The full design-space sweep: every (k, λ) in `1..=kmax × 1..=lmax`
+/// evaluated on one synthetic `m×k×n` GEMM, plus the bf16 baseline error.
+/// Deterministic for a given seed.
+pub fn design_space_sweep(
+    (m, kk, n): (usize, usize, usize),
+    kmax: u32,
+    lmax: u32,
+    seed: u64,
+) -> (f64, Vec<DesignPoint>) {
+    let mut rng = Prng::new(seed);
+    let x: Vec<f32> = (0..m * kk).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..kk * n).map(|_| rng.normal() as f32).collect();
+    let exact = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, kk, n);
+    let bf16 =
+        MatrixEngine::new(EngineMode::Bf16(NormMode::Accurate)).matmul(&x, &w, m, kk, n);
+    let bf16_err = rel_err(&bf16, &exact);
+
+    let mut points = Vec::new();
+    for k in 1..=kmax {
+        for lam in 1..=lmax {
+            let cfg = ApproxNorm::new(k, lam);
+            let eng = MatrixEngine::new(EngineMode::Bf16(NormMode::Approx(cfg)));
+            let y = eng.matmul(&x, &w, m, kk, n);
+            let err = rel_err(&y, &exact);
+            points.push(DesignPoint {
+                cfg,
+                rel_err: err,
+                err_vs_bf16: err / bf16_err,
+                pe_saving: pe_area_saving(cfg),
+                norm_ge: PeArea::approximate(cfg).norm_logic_total(),
+                on_frontier: false,
+            });
+        }
+    }
+    let mask = pareto_frontier(
+        &points
+            .iter()
+            .map(|p| ParetoPoint {
+                label: p.cfg.label(),
+                // Lower is better on both axes: cost = remaining PE area.
+                cost: 1.0 - p.pe_saving,
+                error: p.rel_err,
+            })
+            .collect::<Vec<_>>(),
+    );
+    for (p, on) in points.iter_mut().zip(mask) {
+        p.on_frontier = on;
+    }
+    (bf16_err, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 16, n_heads: 2, d_ff: 32, n_layers: 2, max_seq: 8, n_classes: 2 }
+    }
+
+    #[test]
+    fn mode_areas_ordered_fp32_heaviest() {
+        let fp32 = mode_pe_area(EngineMode::Fp32);
+        let bf16 = mode_pe_area(EngineMode::Bf16(NormMode::Accurate));
+        let an12 = mode_pe_area(EngineMode::parse("bf16an-1-2").unwrap());
+        assert!(fp32 > bf16, "fp32 {fp32} must exceed bf16 {bf16}");
+        assert!(bf16 > an12, "bf16 {bf16} must exceed an-1-2 {an12}");
+        // And the approx saving matches the PE-level model exactly.
+        let s = (bf16 - an12) / bf16;
+        assert!((s - pe_area_saving(ApproxNorm::AN_1_2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn site_macs_accounting() {
+        let cfg = tiny_cfg();
+        let seq = 8;
+        // QKV: 3 GEMMs of seq×d×d.
+        assert_eq!(site_macs(&cfg, seq, Site::qkv(0)), 3 * 8 * 16 * 16);
+        // Attention score/context: seq²·d.
+        assert_eq!(site_macs(&cfg, seq, Site::attn_scores(0)), 8 * 8 * 16);
+        assert_eq!(site_macs(&cfg, seq, Site::attn_context(1)), 8 * 8 * 16);
+        assert_eq!(site_macs(&cfg, seq, Site::ffn1(0)), 8 * 16 * 32);
+        assert_eq!(site_macs(&cfg, seq, Site::head()), 16 * 2);
+        assert_eq!(site_macs(&cfg, seq, Site::embed()), 0);
+    }
+
+    #[test]
+    fn uniform_policy_saving_is_zero_and_cheaper_modes_save() {
+        let cfg = tiny_cfg();
+        let bf16 = EngineMode::Bf16(NormMode::Accurate);
+        let u = PrecisionPolicy::uniform(bf16);
+        assert_eq!(policy_area_saving(&u, &cfg, 8, bf16), 0.0);
+
+        let mut p = PrecisionPolicy::uniform(bf16);
+        p.set(Site::ffn1(0), EngineMode::parse("bf16an-1-2").unwrap());
+        let s = policy_area_saving(&p, &cfg, 8, bf16);
+        assert!(s > 0.0, "approximating one site must save area: {s}");
+        // Bounded by the PE-level saving of the cheapest assigned mode.
+        assert!(s < pe_area_saving(ApproxNorm::AN_1_2));
+
+        // Promoting a site to fp32 *costs* area vs the bf16 baseline.
+        let mut q = PrecisionPolicy::uniform(bf16);
+        q.set(Site::ffn1(0), EngineMode::Fp32);
+        assert!(policy_area_saving(&q, &cfg, 8, bf16) < 0.0);
+    }
+
+    #[test]
+    fn pareto_mask_keeps_non_dominated() {
+        let pts = vec![
+            ParetoPoint { label: "a".into(), cost: 1.0, error: 0.1 },
+            ParetoPoint { label: "b".into(), cost: 0.5, error: 0.5 },
+            ParetoPoint { label: "c".into(), cost: 1.0, error: 0.5 }, // dominated by a & b
+            ParetoPoint { label: "d".into(), cost: 0.5, error: 0.5 }, // tie with b: both stay
+        ];
+        let mask = pareto_frontier(&pts);
+        assert_eq!(mask, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn design_sweep_shape_and_frontier() {
+        let (bf16_err, pts) = design_space_sweep((8, 64, 8), 2, 2, 77);
+        assert!(bf16_err > 0.0);
+        assert_eq!(pts.len(), 4);
+        // an-1-1 dominates on error among equal-ish areas; at least one
+        // point is on the frontier and at least the worst-error point with
+        // no area advantage is off it.
+        assert!(pts.iter().any(|p| p.on_frontier));
+        for p in &pts {
+            assert!(p.rel_err.is_finite() && p.rel_err > 0.0);
+            assert!((0.0..1.0).contains(&p.pe_saving));
+            // Approximate normalization does not beat the exact-norm error
+            // (up to statistical fluctuation of the small sample).
+            assert!(p.err_vs_bf16 >= 0.9, "{}: {}", p.cfg.label(), p.err_vs_bf16);
+        }
+    }
+}

@@ -4,13 +4,15 @@
 //! amfma eval  [--limit N] [--batch N] [--modes a,b,c]    Table I
 //! amfma hist  [--task NAME] [--examples N] [--mode M]    Fig 6
 //! amfma cost  [--fig4] [--fig7] [--k K --lambda L]       Fig 4 / Fig 7
-//! amfma serve [--mode M] [--requests N] [--varlen]       serving demo
+//! amfma tune  [--task NAME] [--budget P] [--out FILE]    calibrate a policy
+//! amfma serve [--mode M] [--policy FILE] [--varlen]      serving demo
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
 //! amfma info                                             artifact status
 //! ```
 
 use crate::error::{bail, Context, Result};
 
+use crate::autotune::{self, CalibrationConfig, PrecisionPolicy};
 use crate::config::Args;
 use crate::cost::{self, Activities};
 use crate::data::tasks::{artifacts_dir, GLUE_TASKS};
@@ -23,6 +25,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("hist") => cmd_hist(&args),
         Some("cost") => cmd_cost(&args),
+        Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("cycles") => cmd_cycles(&args),
         Some("info") => cmd_info(),
@@ -38,8 +41,11 @@ USAGE:
   amfma eval  [--limit N] [--batch N] [--modes fp32,bf16,...]   reproduce Table I
   amfma hist  [--task sst2] [--examples N]                      reproduce Fig 6
   amfma cost  [--fig4] [--fig7] [--k K --lambda L]              reproduce Fig 4/7
-  amfma serve [--mode bf16an-1-2] [--requests N] [--concurrency C]
-              [--varlen] [--length-bucket W]                    batching server
+  amfma tune  [--task sst2] [--budget 1.0] [--limit N] [--batch N]
+              [--candidates m1,m2] [--tune-head] [--out FILE]   calibrate a
+              per-site precision policy within an accuracy budget
+  amfma serve [--mode bf16an-1-2] [--policy FILE] [--requests N]
+              [--concurrency C] [--varlen] [--length-bucket W]  batching server
   amfma cycles --m M --k K --n N [--grid 16]
   amfma info";
 
@@ -167,6 +173,64 @@ pub fn measured_activities(cfg: ApproxNorm) -> Option<(Activities, Activities)> 
     Some((Activities::from_stats(&sa), Activities::from_stats(&sx)))
 }
 
+/// `amfma tune`: calibrate a per-site precision policy for one task within
+/// an accuracy budget and write it as an `AMFP` file (see
+/// [`crate::autotune`]).  Exits non-zero when even the accurate fallback
+/// misses the budget, so CI catches accuracy regressions.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let task_name = args.get("task").unwrap_or("sst2");
+    let task = crate::data::tasks::load_task(task_name)?;
+    let weights = Weights::load(&model::eval::weights_path(task_name))?;
+    let mut cfg = CalibrationConfig {
+        budget_points: args.get_f64("budget", 1.0),
+        batch_size: args.get_usize("batch", 16),
+        limit: args.get("limit").and_then(|v| v.parse().ok()),
+        tune_head: args.has_flag("tune-head"),
+        ..Default::default()
+    };
+    if let Some(spec) = args.get("candidates") {
+        cfg.candidates = spec
+            .split(',')
+            .map(|s| EngineMode::parse(s).with_context(|| format!("bad mode {s}")))
+            .collect::<Result<_>>()?;
+    }
+    println!(
+        "tuning '{task_name}' within {} points of fp32 ({} candidates, fallback {})",
+        cfg.budget_points,
+        cfg.candidates.len(),
+        cfg.fallback.label()
+    );
+    let outcome = autotune::calibrate(&task, &weights, &cfg)?;
+    println!("{}", autotune::report::render_calibration(&outcome));
+
+    let path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => artifacts_dir().join("policies").join(format!("{task_name}.amfp")),
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+    }
+    outcome.policy.save(&path)?;
+    // Round-trip verification: the file on disk must parse back to the
+    // exact policy we calibrated.
+    let reloaded = PrecisionPolicy::load(&path)?;
+    if reloaded != outcome.policy {
+        bail!("policy round-trip mismatch at {}", path.display());
+    }
+    println!("wrote {} (round-trip verified)", path.display());
+    if !outcome.within_budget {
+        bail!(
+            "budget missed: degradation {:.2} points > budget {:.2}",
+            outcome.final_degradation,
+            cfg.budget_points
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::coordinator::{InferenceServer, ServerConfig};
     use std::collections::HashMap;
@@ -196,6 +260,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if models.is_empty() {
         bail!("no artifacts found — run `make artifacts` first");
     }
+    // --policy FILE: run the tasks the policy targets through the
+    // calibrated mixed-mode encoder (an empty task name in the file means
+    // "every deployed task").
+    let mut policies = HashMap::new();
+    if let Some(pfile) = args.get("policy") {
+        let p = Arc::new(PrecisionPolicy::load(std::path::Path::new(pfile))?);
+        if p.task.is_empty() {
+            for name in models.keys() {
+                policies.insert(name.clone(), p.clone());
+            }
+        } else {
+            if !models.contains_key(&p.task) {
+                bail!("policy targets task '{}', which is not deployed", p.task);
+            }
+            policies.insert(p.task.clone(), p.clone());
+        }
+        println!(
+            "policy {} ({} site overrides) applied to {}",
+            p.label(),
+            p.override_count(),
+            if p.task.is_empty() { "all tasks" } else { p.task.as_str() }
+        );
+    }
     println!(
         "serving {} tasks with mode {} ({} requests, concurrency {})",
         models.len(),
@@ -205,7 +292,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, length_bucket, ..Default::default() },
+        ServerConfig { mode, max_batch, length_bucket, policies, ..Default::default() },
     );
     let handle = srv.handle();
     let t0 = std::time::Instant::now();

@@ -7,6 +7,7 @@
 //! error reply — the `errored` counter breaks the latter out), so
 //! `submitted == completed + rejected` once traffic has drained.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -26,6 +27,10 @@ pub struct Metrics {
     /// engine computed (`B·S` per batch) vs tokens that were live.
     pub padded_tokens: AtomicU64,
     pub useful_tokens: AtomicU64,
+    /// Live tokens served per numeric mode (engine-mode label, or a
+    /// policy label for mixed-mode lanes) — the observability hook that
+    /// makes cheap-vs-accurate lane splits visible.
+    mode_tokens: Mutex<BTreeMap<String, u64>>,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -57,6 +62,13 @@ impl Metrics {
     pub fn record_shape(&self, seqs: usize, padded_len: usize, useful: usize) {
         self.padded_tokens.fetch_add((seqs * padded_len) as u64, Ordering::Relaxed);
         self.useful_tokens.fetch_add(useful as u64, Ordering::Relaxed);
+    }
+
+    /// Record `tokens` live tokens served under the numeric mode (or
+    /// precision-policy) labeled `label`.
+    pub fn record_mode_tokens(&self, label: &str, tokens: u64) {
+        let mut map = self.mode_tokens.lock().unwrap();
+        *map.entry(label.to_string()).or_insert(0) += tokens;
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -97,6 +109,13 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
             padding_efficiency: self.padding_efficiency(),
+            mode_tokens: self
+                .mode_tokens
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
@@ -114,6 +133,8 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub mean_batch: f64,
     pub padding_efficiency: f64,
+    /// Live tokens served per mode/policy label, label-sorted.
+    pub mode_tokens: Vec<(String, u64)>,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -122,7 +143,7 @@ pub struct MetricsSnapshot {
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests: submitted={} completed={} rejected={} (errored={})\n\
              batching: {} batches, mean size {:.2}, padding efficiency {:.1}%\n\
              latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
@@ -137,7 +158,14 @@ impl MetricsSnapshot {
             self.p95_ms,
             self.p99_ms,
             self.max_ms
-        )
+        );
+        if !self.mode_tokens.is_empty() {
+            out.push_str("\ntokens by mode:");
+            for (label, n) in &self.mode_tokens {
+                out.push_str(&format!(" {label}={n}"));
+            }
+        }
+        out
     }
 }
 
@@ -201,6 +229,23 @@ mod tests {
         // a fully-live batch pulls efficiency up
         m.record_shape(2, 4, 8);
         assert!((m.snapshot().padding_efficiency - 28.0 / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_token_accounting() {
+        let m = Metrics::default();
+        assert!(m.snapshot().mode_tokens.is_empty());
+        m.record_mode_tokens("bf16an-1-2", 100);
+        m.record_mode_tokens("fp32", 10);
+        m.record_mode_tokens("bf16an-1-2", 28);
+        let s = m.snapshot();
+        // Label-sorted, accumulated.
+        assert_eq!(
+            s.mode_tokens,
+            vec![("bf16an-1-2".to_string(), 128), ("fp32".to_string(), 10)]
+        );
+        let r = s.render();
+        assert!(r.contains("tokens by mode: bf16an-1-2=128 fp32=10"), "{r}");
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Serving coordinator — the L3 runtime layer.
 //!
-//! client → [`router::Router`] (mode + length preference) →
+//! client → [`router::Router`] (mode/lane + length preference) →
 //! [`server::InferenceServer`] (bounded ingress queue + dynamic batcher
 //! bucketing by task and padded length) → engine workers running the
 //! masked variable-length encoder on the shared pool-backed engine.
-//! [`metrics`] provides the latency/batching/padding observability used by
-//! the serving benchmarks.
+//! Replicas sit in cheap/accurate [`router::Lane`]s and tasks may carry
+//! calibrated precision policies ([`crate::autotune`], wired through
+//! [`server::ServerConfig::policies`]); [`metrics`] provides the
+//! latency/batching/padding/per-mode-token observability used by the
+//! serving benchmarks.
 
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{Replica, RouteError, Router};
+pub use router::{Lane, Replica, RouteError, Router};
 pub use server::{
     InferenceServer, Reply, ReplyResult, Request, RequestError, ServerConfig, ServerHandle,
     SubmitError,

@@ -1,7 +1,7 @@
 //! Request router: fronts a set of engine replicas (possibly with
-//! different numeric modes and sequence-length envelopes) and routes each
-//! request by mode + length preference, with round-robin inside a
-//! preference tier and busy-failover across tiers.
+//! different numeric modes, serving lanes and sequence-length envelopes)
+//! and routes each request by mode or lane + length preference, with
+//! round-robin inside a preference tier and busy-failover across tiers.
 //!
 //! Length preference: a replica may advertise `max_len` — the longest
 //! sequence it accepts (e.g. a dedicated short-sequence deployment whose
@@ -9,6 +9,14 @@
 //! short requests fill the short replica and only spill to the general
 //! one under load; requests longer than every envelope are rejected up
 //! front with [`RouteError::NoReplicaForMode`].
+//!
+//! Lanes: every replica sits in a serving [`Lane`] — `Cheap` for
+//! approximate-normalization engines and calibrated mixed-mode policies
+//! ([`crate::autotune`]), `Accurate` for exact-norm bf16 and fp32
+//! deployments.  [`Router::route_lane`] lets clients pick "cheap is fine"
+//! vs "give me the reference arithmetic" without naming a concrete
+//! (k, λ) mode, and the per-mode served-token counters in
+//! [`super::metrics`] make the split observable.
 //!
 //! This is the top of the serving stack: client → Router → InferenceServer
 //! (dynamic batcher) → engine workers.
@@ -22,8 +30,40 @@ use super::server::{
     BACKOFF_CAP, BACKOFF_START, Reply, ReplyResult, RequestError, ServerHandle, SubmitError,
 };
 
+/// Serving lane of a replica: the cost/fidelity tier clients route by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Reduced-cost arithmetic: approximate normalization, or a mixed
+    /// precision policy.
+    Cheap,
+    /// Reference arithmetic: fp32 or exact-norm bf16.
+    Accurate,
+}
+
+impl Lane {
+    /// The default lane of a global engine mode: approximate
+    /// normalization is the cheap tier, everything else the accurate one.
+    pub fn of_mode(mode: EngineMode) -> Lane {
+        match mode {
+            EngineMode::Bf16(crate::NormMode::Approx(_)) => Lane::Cheap,
+            _ => Lane::Accurate,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Lane::Cheap => "cheap",
+            Lane::Accurate => "accurate",
+        }
+    }
+}
+
 pub struct Replica {
     pub mode: EngineMode,
+    /// Serving lane (defaults to [`Lane::of_mode`]; override with
+    /// [`Replica::with_lane`], e.g. a mixed-policy deployment whose
+    /// *default* mode is accurate but whose policy is cheap).
+    pub lane: Lane,
     /// Longest sequence this replica accepts; `None` = unlimited.
     pub max_len: Option<usize>,
     pub handle: ServerHandle,
@@ -32,12 +72,18 @@ pub struct Replica {
 impl Replica {
     /// A replica that serves any length.
     pub fn new(mode: EngineMode, handle: ServerHandle) -> Replica {
-        Replica { mode, max_len: None, handle }
+        Replica { mode, lane: Lane::of_mode(mode), max_len: None, handle }
     }
 
     /// A replica dedicated to sequences of at most `max_len` tokens.
     pub fn with_max_len(mode: EngineMode, max_len: usize, handle: ServerHandle) -> Replica {
-        Replica { mode, max_len: Some(max_len), handle }
+        Replica { mode, lane: Lane::of_mode(mode), max_len: Some(max_len), handle }
+    }
+
+    /// Override the serving lane (builder style).
+    pub fn with_lane(mut self, lane: Lane) -> Replica {
+        self.lane = lane;
+        self
     }
 
     /// Display label: mode plus the length envelope, if any.
@@ -84,10 +130,33 @@ impl Router {
         tokens: Vec<u16>,
         mode: Option<EngineMode>,
     ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
+        self.route_where(task, tokens, |r| mode.map(|m| r.mode == m).unwrap_or(true))
+    }
+
+    /// Route one request by serving lane instead of a concrete mode:
+    /// `Some(Lane::Cheap)` targets approximate/policy replicas,
+    /// `Some(Lane::Accurate)` the reference deployments, `None` any.
+    pub fn route_lane(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        lane: Option<Lane>,
+    ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
+        self.route_where(task, tokens, |r| lane.map(|l| r.lane == l).unwrap_or(true))
+    }
+
+    /// The shared candidate-selection / tiered-failover core behind
+    /// [`Router::route`] and [`Router::route_lane`].
+    fn route_where(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        keep: impl Fn(&Replica) -> bool,
+    ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
         let mut cands: Vec<&Replica> = self
             .replicas
             .iter()
-            .filter(|r| mode.map(|m| r.mode == m).unwrap_or(true))
+            .filter(|r| keep(r))
             .filter(|r| r.max_len.map(|ml| tokens.len() <= ml).unwrap_or(true))
             .collect();
         if cands.is_empty() {
@@ -134,23 +203,28 @@ impl Router {
         tokens: Vec<u16>,
         mode: Option<EngineMode>,
     ) -> Result<Reply, RouteError> {
-        let mut backoff = BACKOFF_START;
-        loop {
-            match self.route(task, tokens.clone(), mode) {
-                Ok(rx) => {
-                    return match rx.recv() {
-                        Ok(Ok(reply)) => Ok(reply),
-                        Ok(Err(e)) => Err(RouteError::Rejected(e)),
-                        Err(_) => Err(RouteError::Closed),
-                    }
-                }
-                Err(RouteError::AllBusy) => {
-                    std::thread::sleep(backoff);
-                    backoff = (backoff * 2).min(BACKOFF_CAP);
-                }
-                Err(e) => return Err(e),
+        blocking_retry(|| self.route(task, tokens.clone(), mode))
+    }
+
+    /// As [`Router::route_blocking`], selecting by serving lane.
+    pub fn route_lane_blocking(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        lane: Option<Lane>,
+    ) -> Result<Reply, RouteError> {
+        blocking_retry(|| self.route_lane(task, tokens.clone(), lane))
+    }
+
+    /// Lanes with at least one replica (diagnostics / examples).
+    pub fn lanes(&self) -> Vec<Lane> {
+        let mut out: Vec<Lane> = Vec::new();
+        for r in &self.replicas {
+            if !out.contains(&r.lane) {
+                out.push(r.lane);
             }
         }
+        out
     }
 
     /// Aggregate snapshot across distinct underlying servers.
@@ -165,6 +239,30 @@ impl Router {
             }
         }
         out
+    }
+}
+
+/// The shared blocking wrapper: retry `AllBusy` with bounded exponential
+/// backoff, await the reply, and surface explicit rejections.
+fn blocking_retry(
+    mut attempt: impl FnMut() -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError>,
+) -> Result<Reply, RouteError> {
+    let mut backoff = BACKOFF_START;
+    loop {
+        match attempt() {
+            Ok(rx) => {
+                return match rx.recv() {
+                    Ok(Ok(reply)) => Ok(reply),
+                    Ok(Err(e)) => Err(RouteError::Rejected(e)),
+                    Err(_) => Err(RouteError::Closed),
+                }
+            }
+            Err(RouteError::AllBusy) => {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
+            Err(e) => return Err(e),
+        }
     }
 }
 
@@ -329,6 +427,68 @@ mod tests {
         let router = Router::new(vec![Replica::new(mode, h1)]);
         let err = router.route_blocking("no-such-task", vec![1, 2], None);
         assert!(matches!(err, Err(RouteError::Rejected(RequestError::UnknownTask))), "{err:?}");
+        s1.shutdown();
+    }
+
+    #[test]
+    fn lane_of_mode_classifies_modes() {
+        assert_eq!(Lane::of_mode(EngineMode::Fp32), Lane::Accurate);
+        assert_eq!(Lane::of_mode(EngineMode::parse("bf16").unwrap()), Lane::Accurate);
+        assert_eq!(Lane::of_mode(EngineMode::parse("bf16an-1-2").unwrap()), Lane::Cheap);
+        assert_eq!(Lane::Cheap.label(), "cheap");
+        assert_eq!(Lane::Accurate.label(), "accurate");
+    }
+
+    #[test]
+    fn route_lane_targets_the_requested_tier() {
+        let cheap_mode = EngineMode::parse("bf16an-1-2").unwrap();
+        let (h_cheap, rx_cheap) = raw_handle(8);
+        let (h_acc, rx_acc) = raw_handle(8);
+        let router = Router::new(vec![
+            Replica::new(cheap_mode, h_cheap),
+            Replica::new(EngineMode::Fp32, h_acc),
+        ]);
+        assert_eq!(router.lanes(), vec![Lane::Cheap, Lane::Accurate]);
+        router.route_lane("sst2", vec![1, 2], Some(Lane::Cheap)).unwrap();
+        assert_eq!(rx_cheap.try_recv().expect("cheap lane").tokens.len(), 2);
+        assert!(rx_acc.try_recv().is_err());
+        router.route_lane("sst2", vec![1, 2, 3], Some(Lane::Accurate)).unwrap();
+        assert_eq!(rx_acc.try_recv().expect("accurate lane").tokens.len(), 3);
+        assert!(rx_cheap.try_recv().is_err());
+        // None = any lane still works.
+        router.route_lane("sst2", vec![1], None).unwrap();
+        // No replica in a lane => NoReplicaForMode.
+        let (h_only, _rx) = raw_handle(8);
+        let solo = Router::new(vec![Replica::new(EngineMode::Fp32, h_only)]);
+        assert!(matches!(
+            solo.route_lane("sst2", vec![1], Some(Lane::Cheap)),
+            Err(RouteError::NoReplicaForMode)
+        ));
+    }
+
+    #[test]
+    fn with_lane_overrides_the_mode_default() {
+        // A policy deployment whose *default* mode is accurate bf16 can be
+        // advertised in the cheap lane.
+        let (h, rx) = raw_handle(8);
+        let r = Replica::new(EngineMode::parse("bf16").unwrap(), h).with_lane(Lane::Cheap);
+        assert_eq!(r.lane, Lane::Cheap);
+        let router = Router::new(vec![r]);
+        router.route_lane("sst2", vec![9], Some(Lane::Cheap)).unwrap();
+        assert_eq!(rx.try_recv().unwrap().tokens.len(), 1);
+    }
+
+    #[test]
+    fn route_lane_blocking_round_trips() {
+        let mode = EngineMode::Fp32;
+        let (s1, h1) = mk_server(mode);
+        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let r = router
+            .route_lane_blocking("sst2", vec![1, 2, 3, 4], Some(Lane::Accurate))
+            .unwrap();
+        assert_eq!(r.logits.len(), 2);
+        let err = router.route_lane_blocking("nope", vec![1], Some(Lane::Accurate));
+        assert!(matches!(err, Err(RouteError::Rejected(RequestError::UnknownTask))));
         s1.shutdown();
     }
 

@@ -25,6 +25,7 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryS
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::autotune::PrecisionPolicy;
 use crate::model::{Encoder, Weights};
 use crate::systolic::{EngineMode, MatrixEngine};
 
@@ -75,6 +76,12 @@ pub struct ServerConfig {
     /// more aggressively at the cost of more padding; a width `>= max_seq`
     /// restores one-bucket-per-task batching.
     pub length_bucket: usize,
+    /// Per-task precision policies (see [`crate::autotune`]): a task with
+    /// an entry runs its batches through [`Encoder::with_policy`] instead
+    /// of the server's global `mode`; tasks without one keep the global
+    /// mode.  Per-mode served-token counters make the split observable in
+    /// [`super::metrics::MetricsSnapshot::mode_tokens`].
+    pub policies: HashMap<String, Arc<PrecisionPolicy>>,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +93,7 @@ impl Default for ServerConfig {
             queue_depth: 256,
             workers: 2,
             length_bucket: 8,
+            policies: HashMap::new(),
         }
     }
 }
@@ -213,6 +221,7 @@ impl InferenceServer {
             let metrics = metrics.clone();
             let models = models.clone();
             let engine = engine.clone();
+            let policies = cfg.policies.clone();
             threads.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = brx.lock().unwrap();
@@ -222,7 +231,7 @@ impl InferenceServer {
                 // A panicking batch (which drops its reply senders — the
                 // clients observe `Closed`) must not kill the worker.
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_batch(&models, &engine, batch, &metrics);
+                    run_batch(&models, &engine, &policies, batch, &metrics);
                 }));
             }));
         }
@@ -338,9 +347,11 @@ fn batcher_loop(
 fn run_batch(
     models: &HashMap<String, Arc<Weights>>,
     engine: &MatrixEngine,
+    policies: &HashMap<String, Arc<PrecisionPolicy>>,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) {
+    let task_name = batch[0].task.clone();
     let Some(weights) = models.get(&batch[0].task) else {
         // Unknown task: answer every request explicitly instead of
         // dropping the reply senders.
@@ -373,9 +384,22 @@ fn run_batch(
         tokens[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
         lens.push(r.tokens.len());
     }
-    metrics.record_shape(b, seq, lens.iter().sum());
-    let enc = Encoder::new(weights, engine.clone());
+    let useful: usize = lens.iter().sum();
+    metrics.record_shape(b, seq, useful);
+    // Policy lane: a task with a precision policy runs its batches through
+    // the per-site mixed-mode encoder; everything else keeps the server's
+    // global mode.  Either way the served tokens are counted per label.
+    let (enc, mode_label) = match policies.get(&task_name) {
+        Some(p) => (
+            Encoder::with_policy(weights, engine.with_mode(p.default_mode), p.clone()),
+            p.label(),
+        ),
+        None => (Encoder::new(weights, engine.clone()), engine.mode.label()),
+    };
     let logits = enc.forward_padded(&tokens, &lens, seq);
+    // Counted only after the forward succeeds: a panicking batch reaches
+    // no client, and "live tokens served" must not include it.
+    metrics.record_mode_tokens(&mode_label, useful as u64);
     let now = Instant::now();
     for (i, req) in valid.into_iter().enumerate() {
         let latency = now.duration_since(req.submitted_at);
@@ -468,6 +492,47 @@ mod tests {
         let m = srv.shutdown().snapshot();
         assert_eq!(m.errored, 3);
         assert_eq!(m.submitted, m.completed + m.rejected);
+    }
+
+    #[test]
+    fn policy_lane_serves_and_counts_tokens_per_mode() {
+        use crate::autotune::{PrecisionPolicy, Site};
+        let mode = EngineMode::parse("bf16").unwrap();
+        // sst2 runs a mixed policy (FFNs approximated), rte the global mode.
+        let mut policy = PrecisionPolicy::uniform(mode);
+        policy.set(Site::ffn1(0), EngineMode::parse("bf16an-2-2").unwrap());
+        let policy = Arc::new(policy);
+        let mut policies = HashMap::new();
+        policies.insert("sst2".to_string(), policy.clone());
+        let models = tiny_models();
+        let srv = InferenceServer::start(
+            models.clone(),
+            ServerConfig { mode, policies, ..Default::default() },
+        );
+        let h = srv.handle();
+        let mut rng = Prng::new(77);
+        let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
+        let r_policy = h.classify("sst2", toks.clone()).unwrap();
+        let r_plain = h.classify("rte", toks.clone()).unwrap();
+        assert_eq!(r_policy.logits.len(), 2);
+        assert_eq!(r_plain.logits.len(), 2);
+
+        // The policy lane reproduces the offline mixed-mode encoder bit
+        // for bit; the plain lane the global-mode encoder.
+        let w = models.get("sst2").unwrap();
+        let offline = Encoder::with_policy(w, MatrixEngine::new(mode), policy.clone())
+            .forward(&toks, 1);
+        assert_eq!(r_policy.logits.as_slice(), offline.row(0));
+        let w2 = models.get("rte").unwrap();
+        let offline2 = Encoder::new(w2, MatrixEngine::new(mode)).forward(&toks, 1);
+        assert_eq!(r_plain.logits.as_slice(), offline2.row(0));
+
+        let m = srv.shutdown().snapshot();
+        // 8 live tokens under each label, observable per mode.
+        assert_eq!(
+            m.mode_tokens,
+            vec![("bf16".to_string(), 8), (policy.label(), 8)]
+        );
     }
 
     #[test]

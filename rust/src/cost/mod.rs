@@ -2,8 +2,16 @@
 //! the paper's 28 nm Cadence synthesis flow (see DESIGN.md substitutions).
 //!
 //! [`gates`] — standard-cell GE primitives; [`pe_cost`] — the per-PE
-//! breakdown of Fig. 4; [`array_cost`] — whole-engine area and the Fig. 7a
-//! savings; [`power`] — the toggle-activity power model and Fig. 7b.
+//! breakdown of Fig. 4 (plus [`PeArea::fp32_reference`], the conventional
+//! FP32 PE the mixed-precision cost model prices full-precision sites
+//! against); [`array_cost`] — whole-engine area and the Fig. 7a savings;
+//! [`power`] — the toggle-activity power model and Fig. 7b.
+//!
+//! These models are what [`crate::autotune`] optimizes against: the tuner
+//! weighs [`pe_area_saving`] / [`PeArea`] totals by per-site MAC volume
+//! ([`crate::autotune::site_macs`]) to decide which approximate mode each
+//! encoder GEMM site can afford, and `amfma tune` reports the resulting
+//! policy-level saving.
 
 pub mod array_cost;
 pub mod gates;

@@ -50,6 +50,18 @@ pub struct PeArea {
 /// register and its double buffer (2×16).
 pub const PIPELINE_REG_BITS: u32 = 16 + (16 + 9 + 1 + 6) + (16 + 8 + 1) + 32;
 
+/// Adder-frame width of the FP32 reference PE: sum of a 48-bit exact
+/// product and the aligned addend, with integer/carry headroom (the FP32
+/// analogue of the bf16 datapath's Q4.16 frame).
+pub const FP32_FRAME_BITS: u32 = 50;
+
+/// Register bit budget of the FP32 reference PE: 32-bit east-forward
+/// activation latch + stage-1/2 interface (48-bit product, 10-bit
+/// exponent+carry, sign, 6 alignment-control bits) + south output latch
+/// (24-bit significand, 8-bit exponent, sign) + stationary 32-bit weight
+/// register and its double buffer.
+pub const FP32_PIPELINE_REG_BITS: u32 = 32 + (48 + 10 + 1 + 6) + (24 + 8 + 1) + 64;
+
 impl PeArea {
     /// The BF16 baseline PE with accurate (LZA-based) normalization.
     pub fn accurate() -> PeArea {
@@ -139,6 +151,61 @@ impl PeArea {
         pe
     }
 
+    /// A conventional FP32 FMA PE built from the same gate primitives —
+    /// the price [`crate::autotune`] charges a policy site kept in full
+    /// precision.  24-bit significands (hidden bit included) multiply into
+    /// an exact 48-bit product; alignment, addition and normalization run
+    /// in a ~`2×` wider frame with the full LZA + barrel-shifter control
+    /// path the paper's scheme removes.  Not a paper figure — a reference
+    /// point for the mixed-precision cost model, so only its *relative*
+    /// scale vs the bf16 PEs is load-bearing (pinned by tests at roughly
+    /// 3–6× the bf16 PE).
+    pub fn fp32_reference() -> PeArea {
+        let w = FP32_FRAME_BITS;
+        PeArea {
+            label: "fp32".into(),
+            components: vec![
+                Component {
+                    name: "significand multiplier (24x24)",
+                    area_ge: g::multiplier_array(24, 24),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "exponent add/compare",
+                    area_ge: g::adder_ripple(10) + g::comparator(10),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "alignment shifter",
+                    area_ge: g::barrel_shifter(w, w - 1),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "significand adder + sign",
+                    area_ge: g::adder_prefix(w) + g::XOR2 * w as f64,
+                    is_norm_logic: false,
+                },
+                Component { name: "LZA", area_ge: g::lza(w), is_norm_logic: true },
+                Component {
+                    name: "normalization shifter",
+                    // left up to the 24-bit significand width + right 2.
+                    area_ge: g::barrel_shifter(w, 26),
+                    is_norm_logic: true,
+                },
+                Component {
+                    name: "sign/exponent correction",
+                    area_ge: g::adder_ripple(10) + g::comparator(10) * 0.5 + g::MUX2 * 10.0,
+                    is_norm_logic: true,
+                },
+                Component {
+                    name: "pipeline FFs",
+                    area_ge: g::regs(FP32_PIPELINE_REG_BITS),
+                    is_norm_logic: false,
+                },
+            ],
+        }
+    }
+
     pub fn total(&self) -> f64 {
         self.components.iter().map(|c| c.area_ge).sum()
     }
@@ -226,6 +293,23 @@ mod tests {
             let s: f64 = pe.breakdown().iter().map(|(_, p)| p).sum();
             assert!((s - 100.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn fp32_reference_dwarfs_bf16_pes() {
+        // The cost model only needs the *relative* scale to be sane: an
+        // FP32 FMA PE lands at several times the bf16 PE (9× multiplier
+        // area, 2.5× frame widths, 2× register bits).
+        let fp32 = PeArea::fp32_reference().total();
+        let bf16 = PeArea::accurate().total();
+        let ratio = fp32 / bf16;
+        assert!((2.0..8.0).contains(&ratio), "fp32/bf16 PE area ratio = {ratio}");
+        assert!(fp32 > PeArea::approximate(ApproxNorm::AN_2_2).total());
+        // Same structural invariants as the bf16 PEs.
+        let pe = PeArea::fp32_reference();
+        let s: f64 = pe.breakdown().iter().map(|(_, p)| p).sum();
+        assert!((s - 100.0).abs() < 1e-9);
+        assert!(pe.norm_fraction() > 0.1 && pe.norm_fraction() < 0.5);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Approximate Normalization for Low-Cost Matrix Engines"* (Alexandridis,
 //! Peltekis, Filippas, Dimitrakopoulos — CS.AR 2024).
 pub mod arith;
+pub mod autotune;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;

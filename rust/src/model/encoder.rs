@@ -16,10 +16,20 @@
 //! `rust/tests/property_padding.rs`).  The per-sequence attention tasks run
 //! on the process-global worker pool ([`crate::runtime::pool`]) — no
 //! scoped-thread spawns remain anywhere on the request path.
+//!
+//! Every engine GEMM is a named **precision-policy site**
+//! ([`crate::autotune::Site`]): an encoder built with
+//! [`Encoder::with_policy`] resolves each site's [`EngineMode`] through the
+//! policy, so a calibrated model can run, say, FFNs on `bf16an-2-2` while
+//! the classifier head stays on accurate bf16.  A uniform policy is
+//! bit-identical to the plain global-mode path.
 
+use std::sync::Arc;
+
+use crate::autotune::{PrecisionPolicy, Site};
 use crate::pe::PeStats;
 use crate::runtime::pool;
-use crate::systolic::MatrixEngine;
+use crate::systolic::{EngineMode, MatrixEngine};
 
 use super::layers::{gelu_inplace, layernorm, linear_resident, softmax_rows, softmax_rows_masked};
 use super::tensor::Tensor2;
@@ -33,20 +43,52 @@ pub type LayerTraces = Vec<PeStats>;
 pub struct Encoder<'w> {
     pub weights: &'w Weights,
     pub engine: MatrixEngine,
+    /// Optional per-site mode assignment: every engine GEMM resolves its
+    /// mode through [`Encoder::site_mode`].  `None` (and any *uniform*
+    /// policy) is bit-identical to running `engine.mode` globally —
+    /// asserted in `rust/tests/integration_policy.rs`.
+    policy: Option<Arc<PrecisionPolicy>>,
 }
 
 impl<'w> Encoder<'w> {
     pub fn new(weights: &'w Weights, engine: MatrixEngine) -> Self {
-        Encoder { weights, engine }
+        Encoder { weights, engine, policy: None }
     }
 
-    /// Engine-backed projection `x · W[wname] + b[bname]`, consuming the
-    /// pre-quantized resident plane of the weight when the engine runs in a
-    /// bf16 mode (the hot path — no per-call RNE of `W`).
-    fn proj(&self, x: &Tensor2, wname: &str, bname: &str) -> Tensor2 {
+    /// An encoder whose GEMM sites run the modes a [`PrecisionPolicy`]
+    /// assigns (sites the policy does not list run its default mode; the
+    /// `engine` argument supplies grid/threads and the mode used by
+    /// [`Encoder::forward_traced`]).
+    pub fn with_policy(
+        weights: &'w Weights,
+        engine: MatrixEngine,
+        policy: Arc<PrecisionPolicy>,
+    ) -> Self {
+        Encoder { weights, engine, policy: Some(policy) }
+    }
+
+    /// The numeric mode a GEMM site runs: the policy's assignment, or the
+    /// engine's global mode when no policy is attached.
+    fn site_mode(&self, site: Site) -> EngineMode {
+        match &self.policy {
+            Some(p) => p.mode_for(site),
+            None => self.engine.mode,
+        }
+    }
+
+    /// The engine a GEMM site runs on (same grid/threads, site's mode).
+    fn site_engine(&self, site: Site) -> MatrixEngine {
+        self.engine.with_mode(self.site_mode(site))
+    }
+
+    /// Engine-backed projection `x · W[wname] + b[bname]` at the given
+    /// policy site, consuming the pre-quantized resident plane of the
+    /// weight when the site's mode is a bf16 mode (the hot path — no
+    /// per-call RNE of `W`).
+    fn proj(&self, x: &Tensor2, wname: &str, bname: &str, site: Site) -> Tensor2 {
         let w = self.weights.get(wname).unwrap();
         let b = self.weights.vec(bname).unwrap();
-        linear_resident(&self.engine, x, w, self.weights.plane(wname), Some(b))
+        linear_resident(&self.site_engine(site), x, w, self.weights.plane(wname), Some(b))
     }
 
     /// Token + position embedding lookup: `[B, S]` ids → `[B·S, D]`.
@@ -82,14 +124,20 @@ impl<'w> Encoder<'w> {
     ) -> Tensor2 {
         let cfg = &self.weights.config;
         let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
-        let q = self.proj(x, &format!("layer{layer}.q.w"), &format!("layer{layer}.q.b"));
-        let k = self.proj(x, &format!("layer{layer}.k.w"), &format!("layer{layer}.k.b"));
-        let v = self.proj(x, &format!("layer{layer}.v.w"), &format!("layer{layer}.v.b"));
+        let qkv_site = Site::qkv(layer as u32);
+        let q = self.proj(x, &format!("layer{layer}.q.w"), &format!("layer{layer}.q.b"), qkv_site);
+        let k = self.proj(x, &format!("layer{layer}.k.w"), &format!("layer{layer}.k.b"), qkv_site);
+        let v = self.proj(x, &format!("layer{layer}.v.w"), &format!("layer{layer}.v.b"), qkv_site);
 
         let mut ctx = Tensor2::zeros(batch * seq, d);
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut head_engine = self.engine.clone();
-        head_engine.threads = 1;
+        // Per-head engines are single-threaded (their GEMMs run inline on
+        // the task's thread); the score and context products are separate
+        // policy sites, so each gets its own mode.
+        let mut score_engine = self.site_engine(Site::attn_scores(layer as u32));
+        score_engine.threads = 1;
+        let mut ctx_engine = self.site_engine(Site::attn_context(layer as u32));
+        ctx_engine.threads = 1;
 
         // One task per sequence, writing that sequence's disjoint row range
         // of the context tensor.
@@ -99,9 +147,9 @@ impl<'w> Encoder<'w> {
             .enumerate()
             .map(|(b, ctx_b)| {
                 let (q, k, v) = (&q, &k, &v);
-                let he = &head_engine;
+                let (se, ce) = (&score_engine, &ctx_engine);
                 let len = lens[b];
-                move || attention_sequence(he, q, k, v, ctx_b, b, seq, len, h, dh, scale)
+                move || attention_sequence(se, ce, q, k, v, ctx_b, b, seq, len, h, dh, scale)
             })
             .collect();
         // Run inline for single-thread engines and degenerate batches, and
@@ -115,14 +163,28 @@ impl<'w> Encoder<'w> {
             pool::global().run(tasks);
         }
 
-        self.proj(&ctx, &format!("layer{layer}.o.w"), &format!("layer{layer}.o.b"))
+        self.proj(
+            &ctx,
+            &format!("layer{layer}.o.w"),
+            &format!("layer{layer}.o.b"),
+            Site::attn_out(layer as u32),
+        )
     }
 
     fn ffn(&self, x: &Tensor2, layer: usize) -> Tensor2 {
-        let mut hmid =
-            self.proj(x, &format!("layer{layer}.ff1.w"), &format!("layer{layer}.ff1.b"));
+        let mut hmid = self.proj(
+            x,
+            &format!("layer{layer}.ff1.w"),
+            &format!("layer{layer}.ff1.b"),
+            Site::ffn1(layer as u32),
+        );
         gelu_inplace(&mut hmid);
-        self.proj(&hmid, &format!("layer{layer}.ff2.w"), &format!("layer{layer}.ff2.b"))
+        self.proj(
+            &hmid,
+            &format!("layer{layer}.ff2.w"),
+            &format!("layer{layer}.ff2.b"),
+            Site::ffn2(layer as u32),
+        )
     }
 
     /// Full forward pass over a **padded** batch: `tokens` is `[B, S]`
@@ -175,7 +237,7 @@ impl<'w> Encoder<'w> {
         for b in 0..batch {
             pooled.row_mut(b).copy_from_slice(x.row(b * seq));
         }
-        self.proj(&pooled, "head.w", "head.b")
+        self.proj(&pooled, "head.w", "head.b", Site::head())
     }
 
     /// Fixed-length forward at an arbitrary sequence length `seq <= max_seq`
@@ -193,8 +255,17 @@ impl<'w> Encoder<'w> {
 
     /// Forward pass with per-layer PE instrumentation (sequential, slow —
     /// used by the Fig. 6 collection pass over a handful of examples).
-    /// Returns `(logits, per-layer attention-matmul stats)`.
+    /// Returns `(logits, per-layer attention-matmul stats)`.  The traced
+    /// attention-path matmuls run under the engine's *global* mode — use
+    /// this pass without a policy (the instrumentation exists to
+    /// characterize one arithmetic mode at a time); a policy-bearing
+    /// encoder would otherwise compute a hybrid matching no runnable
+    /// configuration, so that combination is rejected outright.
     pub fn forward_traced(&self, tokens: &[u16], batch: usize) -> (Tensor2, LayerTraces) {
+        assert!(
+            self.policy.is_none(),
+            "forward_traced characterizes one global mode; run it on a policy-free encoder"
+        );
         let cfg = &self.weights.config;
         let seq = cfg.max_seq;
         let (d, h, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
@@ -267,7 +338,7 @@ impl<'w> Encoder<'w> {
         for b in 0..batch {
             pooled.row_mut(b).copy_from_slice(x.row(b * seq));
         }
-        let logits = self.proj(&pooled, "head.w", "head.b");
+        let logits = self.proj(&pooled, "head.w", "head.b", Site::head());
         (logits, traces)
     }
 }
@@ -277,11 +348,14 @@ impl<'w> Encoder<'w> {
 /// context tensor; rows `>= len` are left zero (padding positions produce
 /// no context), and padded **key** columns get exactly zero weight through
 /// [`softmax_rows_masked`], so the live rows match the unpadded computation
-/// bit for bit.  The engine handed in is single-threaded: its GEMMs run
-/// inline on this task's thread, never nesting pool dispatch.
+/// bit for bit.  The score and context products run on separate engines —
+/// they are distinct precision-policy sites — and both engines handed in
+/// are single-threaded: their GEMMs run inline on this task's thread,
+/// never nesting pool dispatch.
 #[allow(clippy::too_many_arguments)]
 fn attention_sequence(
-    engine: &MatrixEngine,
+    score_engine: &MatrixEngine,
+    ctx_engine: &MatrixEngine,
     q: &Tensor2,
     k: &Tensor2,
     v: &Tensor2,
@@ -306,7 +380,7 @@ fn attention_sequence(
         // scores = (Q · Kᵀ) * scale  — engine matmul, [len, seq]
         let kt = kb.transpose();
         let mut scores =
-            Tensor2::from_vec(len, seq, engine.matmul(&qb.data, &kt.data, len, dh, seq));
+            Tensor2::from_vec(len, seq, score_engine.matmul(&qb.data, &kt.data, len, dh, seq));
         for val in scores.data.iter_mut() {
             *val *= scale;
         }
@@ -316,10 +390,10 @@ fn attention_sequence(
         // fixed-length hot path); col_block(0, len) of a full-width matrix
         // is the identity, so both arms are bit-identical.
         let cb = if len == seq {
-            engine.matmul(&scores.data, &vb.data, len, len, dh)
+            ctx_engine.matmul(&scores.data, &vb.data, len, len, dh)
         } else {
             let live = scores.col_block(0, len);
-            engine.matmul(&live.data, &vb.data, len, len, dh)
+            ctx_engine.matmul(&live.data, &vb.data, len, len, dh)
         };
         for s in 0..len {
             ctx_b[s * d + c0..s * d + c0 + dh].copy_from_slice(&cb[s * dh..(s + 1) * dh]);
@@ -446,6 +520,44 @@ mod tests {
         let y = enc.forward_seq(&t, 3, 5);
         assert_eq!((y.rows, y.cols), (3, 3));
         assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn uniform_policy_matches_global_mode_bitwise() {
+        use crate::autotune::PrecisionPolicy;
+        let w = Weights::random(cfg(), 19);
+        let mut rng = Prng::new(20);
+        let t = tokens(&mut rng, 3, 8, 32);
+        for mode in ["fp32", "bf16", "bf16an-1-2"] {
+            let mode = EngineMode::parse(mode).unwrap();
+            let plain = Encoder::new(&w, MatrixEngine::new(mode)).forward(&t, 3);
+            let policy = std::sync::Arc::new(PrecisionPolicy::uniform(mode));
+            let via_policy =
+                Encoder::with_policy(&w, MatrixEngine::new(mode), policy).forward(&t, 3);
+            assert_eq!(plain.data, via_policy.data, "mode {}", mode.label());
+        }
+    }
+
+    #[test]
+    fn mixed_policy_changes_assigned_sites_only() {
+        use crate::autotune::{PrecisionPolicy, Site};
+        let w = Weights::random(cfg(), 21);
+        let mut rng = Prng::new(22);
+        let t = tokens(&mut rng, 2, 8, 32);
+        let bf16 = EngineMode::parse("bf16").unwrap();
+        let base = Encoder::new(&w, MatrixEngine::new(bf16)).forward(&t, 2);
+        // Overriding one FFN site to an aggressive mode perturbs logits...
+        let mut p = PrecisionPolicy::uniform(bf16);
+        p.set(Site::ffn1(0), EngineMode::parse("bf16an-2-2").unwrap());
+        let mixed = Encoder::with_policy(&w, MatrixEngine::new(bf16), std::sync::Arc::new(p))
+            .forward(&t, 2);
+        assert_ne!(base.data, mixed.data, "an-2-2 FFN must perturb the logits");
+        // ...while an explicit override equal to the default does not.
+        let mut q = PrecisionPolicy::uniform(bf16);
+        q.set(Site::ffn1(0), bf16);
+        let same = Encoder::with_policy(&w, MatrixEngine::new(bf16), std::sync::Arc::new(q))
+            .forward(&t, 2);
+        assert_eq!(base.data, same.data);
     }
 
     #[test]

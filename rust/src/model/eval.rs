@@ -1,11 +1,19 @@
 //! Table I evaluation: run each GLUE-style task's dev split through the
 //! encoder under every arithmetic mode and compute the paper's metrics
 //! (Accuracy + F1, or PCC for the regression task).
+//!
+//! Besides the global-mode grid ([`evaluate_task`] / [`run_table1`]), the
+//! same harness evaluates mixed-mode [`PrecisionPolicy`] runs through
+//! [`evaluate_task_policy`] — this is the measurement loop
+//! [`crate::autotune::calibrate`] drives when `amfma tune` searches for
+//! the cheapest per-site mode assignment within an accuracy budget.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::error::{Context, Result};
 
+use crate::autotune::PrecisionPolicy;
 use crate::data::metrics::{accuracy, f1, pearson};
 use crate::data::tasks::{artifacts_dir, Task, GLUE_DISPLAY, GLUE_TASKS};
 use crate::systolic::{EngineMode, MatrixEngine};
@@ -56,8 +64,34 @@ pub fn evaluate_task(
     batch_size: usize,
     limit: Option<usize>,
 ) -> EvalResult {
-    let engine = MatrixEngine::new(mode);
-    let enc = Encoder::new(weights, engine);
+    let enc = Encoder::new(weights, MatrixEngine::new(mode));
+    run_eval(task, &enc, mode.label(), batch_size, limit)
+}
+
+/// As [`evaluate_task`], but running a per-site [`PrecisionPolicy`] instead
+/// of one global mode (the result's `mode` field carries the policy label).
+pub fn evaluate_task_policy(
+    task: &Task,
+    weights: &Weights,
+    policy: Arc<PrecisionPolicy>,
+    batch_size: usize,
+    limit: Option<usize>,
+) -> EvalResult {
+    let label = policy.label();
+    let engine = MatrixEngine::new(policy.default_mode);
+    let enc = Encoder::with_policy(weights, engine, policy);
+    run_eval(task, &enc, label, batch_size, limit)
+}
+
+/// The shared measurement loop: run `task`'s dev split through an
+/// already-configured encoder and compute the Table-I metrics.
+fn run_eval(
+    task: &Task,
+    enc: &Encoder,
+    mode_label: String,
+    batch_size: usize,
+    limit: Option<usize>,
+) -> EvalResult {
     let n = limit.unwrap_or(task.n_dev()).min(task.n_dev());
     let seq = task.seq_len;
     let start = std::time::Instant::now();
@@ -98,7 +132,7 @@ pub fn evaluate_task(
         EvalResult {
             task: task.name.clone(),
             display,
-            mode: mode.label(),
+            mode: mode_label,
             n_examples: n,
             accuracy_pct: None,
             f1: None,
@@ -111,7 +145,7 @@ pub fn evaluate_task(
         EvalResult {
             task: task.name.clone(),
             display,
-            mode: mode.label(),
+            mode: mode_label,
             n_examples: n,
             accuracy_pct: Some(100.0 * accuracy(&preds, &gold)),
             f1: Some(f1(&preds, &gold, task.n_classes)),
@@ -303,6 +337,29 @@ mod tests {
         let w = tiny_weights();
         let r = evaluate_task(&t, &w, EngineMode::Fp32, 4, Some(7));
         assert_eq!(r.n_examples, 7);
+    }
+
+    #[test]
+    fn policy_eval_matches_global_mode_eval() {
+        use crate::autotune::{PrecisionPolicy, Site};
+        use std::sync::Arc;
+        let t = tiny_task(2);
+        let w = tiny_weights();
+        let mode = EngineMode::parse("bf16an-1-2").unwrap();
+        let direct = evaluate_task(&t, &w, mode, 4, None);
+        let uniform = Arc::new(PrecisionPolicy::uniform(mode));
+        let via_policy = evaluate_task_policy(&t, &w, uniform, 4, None);
+        // A uniform policy is the same computation: identical predictions
+        // and metrics, and its label collapses to the plain mode label.
+        assert_eq!(direct.preds, via_policy.preds);
+        assert_eq!(direct.accuracy_pct, via_policy.accuracy_pct);
+        assert_eq!(via_policy.mode, "bf16an-1-2");
+        // A mixed policy is labeled as such.
+        let mut p = PrecisionPolicy::uniform(mode);
+        p.set(Site::head(), EngineMode::parse("bf16").unwrap());
+        let mixed = evaluate_task_policy(&t, &w, Arc::new(p), 4, None);
+        assert!(mixed.mode.starts_with("policy["), "label {}", mixed.mode);
+        assert_eq!(mixed.n_examples, 16);
     }
 
     #[test]

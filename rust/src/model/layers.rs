@@ -24,6 +24,11 @@ pub fn linear(engine: &MatrixEngine, x: &Tensor2, w: &Tensor2, b: Option<&[f32]>
 /// engines consume the pre-quantized plane (no per-call RNE of `W` — the
 /// serving hot path), FP32 engines fall back to the f32 tensor.  Bit-exact
 /// with [`linear`] in every mode.
+///
+/// The engine handed in carries the call's numeric mode — precision
+/// policies ([`crate::autotune`]) work by passing a per-site
+/// [`MatrixEngine::with_mode`] copy here, so one resident weight plane
+/// serves every bf16 mode and the fp32 fallback transparently.
 pub fn linear_resident(
     engine: &MatrixEngine,
     x: &Tensor2,

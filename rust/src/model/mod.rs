@@ -13,6 +13,8 @@ pub mod tensor;
 pub mod weights;
 
 pub use encoder::Encoder;
-pub use eval::{evaluate_task, paper_modes, render_table1, run_table1, EvalResult};
+pub use eval::{
+    evaluate_task, evaluate_task_policy, paper_modes, render_table1, run_table1, EvalResult,
+};
 pub use tensor::{Bf16Plane, Tensor2};
 pub use weights::{ModelConfig, Weights};

@@ -94,6 +94,16 @@ impl MatrixEngine {
         MatrixEngine { mode, pe_rows, pe_cols, threads: default_threads() }
     }
 
+    /// A copy of this engine running a different numeric mode (same grid,
+    /// same host parallelism) — the per-call mode-override hook the
+    /// precision-policy layer ([`crate::autotune`]) uses to run individual
+    /// GEMM sites under their calibrated modes.  With `mode == self.mode`
+    /// the copy is indistinguishable from `self`, which is what makes a
+    /// uniform policy bit-identical to the global-mode path.
+    pub fn with_mode(&self, mode: EngineMode) -> MatrixEngine {
+        MatrixEngine { mode, pe_rows: self.pe_rows, pe_cols: self.pe_cols, threads: self.threads }
+    }
+
     /// The tile scheduler matching this engine's parallelism setting.
     fn scheduler(&self) -> TileScheduler {
         if self.threads <= 1 {
