@@ -1,0 +1,195 @@
+"""Schema guard for the bench trajectory JSON (``amfma-bench-v1``).
+
+The Rust bench harness (``rust/src/bench_harness/json.rs``) hand-writes the
+JSON (no serde is vendored), so this is the independent parser that keeps
+the format honest.  It runs three ways:
+
+* under pytest in the Python CI job (validator self-tests always run; the
+  file-based test skips when no bench JSON is present);
+* under pytest with ``AMFMA_BENCH_JSON`` pointing at a generated file, in
+  which case that file MUST exist and validate;
+* standalone, with no pytest dependency, as CI's perf-smoke step does::
+
+      python python/tests/test_bench_schema.py rust/bench-results/BENCH_hotpath.json
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+_TOP_FIELDS = (
+    ("schema", str),
+    ("target", str),
+    ("git_rev", str),
+    ("unix_time", int),
+    ("quick", bool),
+    ("results", list),
+    ("metrics", list),
+    ("comparisons", list),
+)
+
+_RESULT_FIELDS = (
+    ("name", str),
+    ("iters", int),
+    ("mean_ns", int),
+    ("median_ns", int),
+    ("p95_ns", int),
+    ("min_ns", int),
+)
+
+
+def validate_report(doc):
+    """Raise AssertionError when ``doc`` is not a valid amfma-bench-v1 run."""
+    assert isinstance(doc, dict), "report must be a JSON object"
+    for key, typ in _TOP_FIELDS:
+        assert key in doc, f"missing key {key!r}"
+        assert isinstance(doc[key], typ), f"{key!r} must be {typ.__name__}"
+    assert doc["schema"] == "amfma-bench-v1", f"unknown schema {doc['schema']!r}"
+    assert doc["target"], "target must be non-empty"
+    assert doc["git_rev"], "git_rev must be non-empty"
+    for r in doc["results"]:
+        assert isinstance(r, dict), "result entries must be objects"
+        for key, typ in _RESULT_FIELDS:
+            assert key in r, f"result missing {key!r}"
+            assert isinstance(r[key], typ), f"result {key!r} must be {typ.__name__}"
+        assert r["iters"] > 0, "iters must be positive"
+        assert r["min_ns"] <= r["median_ns"] <= r["p95_ns"], (
+            f"order statistics out of order in {r['name']!r}"
+        )
+        tp = r.get("throughput")
+        assert tp is None or (
+            isinstance(tp, dict)
+            and isinstance(tp.get("unit"), str)
+            and isinstance(tp.get("value"), (int, float))
+        ), "throughput must be null or {value, unit}"
+    for m in doc["metrics"]:
+        assert isinstance(m, dict) and isinstance(m.get("name"), str)
+        assert isinstance(m.get("unit"), str)
+        v = m.get("value")
+        assert v is None or isinstance(v, (int, float)), "metric value must be number/null"
+    for c in doc["comparisons"]:
+        assert isinstance(c, dict) and isinstance(c.get("name"), str)
+        v = c.get("ratio")
+        assert v is None or isinstance(v, (int, float)), "ratio must be number/null"
+
+
+SAMPLE = {
+    "schema": "amfma-bench-v1",
+    "target": "hotpath",
+    "git_rev": "abc123def456",
+    "unix_time": 1_700_000_000,
+    "quick": True,
+    "results": [
+        {
+            "name": "gemm256/bf16an-1-2/wide-kernel",
+            "iters": 3,
+            "mean_ns": 120_000_000,
+            "median_ns": 118_000_000,
+            "p95_ns": 131_000_000,
+            "min_ns": 110_000_000,
+            "throughput": {"value": 1.4e8, "unit": "FMA/s"},
+        },
+        {
+            "name": "cycle_sim/16x16xM64",
+            "iters": 5,
+            "mean_ns": 9_000_000,
+            "median_ns": 9_000_000,
+            "p95_ns": 9_500_000,
+            "min_ns": 8_000_000,
+            "throughput": None,
+        },
+    ],
+    "metrics": [{"name": "padding_efficiency", "value": 0.71, "unit": "frac"}],
+    "comparisons": [
+        {"name": "wide_vs_scalar_gemm256_bf16an-1-2", "ratio": 1.8},
+        {"name": "degenerate", "ratio": None},
+    ],
+}
+
+
+def _must_fail(doc):
+    try:
+        validate_report(doc)
+    except AssertionError:
+        return
+    raise RuntimeError("validator accepted an invalid document")
+
+
+def test_validator_accepts_sample():
+    # Round-trip through a JSON string, as a real file would be read.
+    validate_report(json.loads(json.dumps(SAMPLE)))
+
+
+def test_validator_rejects_broken_documents():
+    for key in ("schema", "target", "results", "quick"):
+        bad = dict(SAMPLE)
+        bad.pop(key)
+        _must_fail(bad)
+
+    bad = dict(SAMPLE)
+    bad["schema"] = "amfma-bench-v0"
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["results"][0]["p95_ns"] = 1  # below the median: stats out of order
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["results"][0]["throughput"] = "fast"
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["results"][0].pop("median_ns")
+    _must_fail(bad)
+
+    _must_fail([])  # not an object
+
+
+def _bench_json_paths():
+    """(paths, required): explicit env wiring makes the file mandatory."""
+    env = os.environ.get("AMFMA_BENCH_JSON")
+    if env:
+        return [Path(env)], True
+    return sorted((REPO / "rust" / "bench-results").glob("BENCH_*.json")), False
+
+
+def _validate_file(path):
+    doc = json.loads(path.read_text())
+    validate_report(doc)
+    traj = path.parent / "BENCH_trajectory.jsonl"
+    lines = 0
+    if traj.exists():
+        for line in traj.read_text().splitlines():
+            if line.strip():
+                validate_report(json.loads(line))
+                lines += 1
+    return doc, lines
+
+
+def test_generated_bench_json_parses():
+    import pytest
+
+    paths, required = _bench_json_paths()
+    if required:
+        assert paths[0].exists(), f"AMFMA_BENCH_JSON points at missing file {paths[0]}"
+    existing = [p for p in paths if p.exists()]
+    if not existing:
+        pytest.skip("no bench JSON present (run `cargo bench` or `amfma bench --json`)")
+    for p in existing:
+        doc, _ = _validate_file(p)
+        assert doc["target"], p
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else os.environ.get("AMFMA_BENCH_JSON", "")
+    if not target:
+        sys.exit("usage: test_bench_schema.py <BENCH_*.json>  (or set AMFMA_BENCH_JSON)")
+    doc, lines = _validate_file(Path(target))
+    print(
+        f"ok: {target} is valid amfma-bench-v1 "
+        f"({len(doc['results'])} results, {len(doc['comparisons'])} comparisons, "
+        f"{lines} trajectory lines)"
+    )

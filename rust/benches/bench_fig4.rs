@@ -3,11 +3,13 @@
 //!
 //! Run: `cargo bench --bench bench_fig4`
 
+use amfma::bench_harness::json::BenchReport;
 use amfma::bench_harness::{bench_quick, section};
 use amfma::cost::{pe_area_saving, PeArea};
 use amfma::ApproxNorm;
 
 fn main() {
+    let mut report = BenchReport::new("fig4");
     print!("{}", section("Fig 4 — PE area breakdown (accurate normalization)"));
     let acc = PeArea::accurate();
     println!("{}", acc.render());
@@ -15,6 +17,8 @@ fn main() {
         "paper: normalization-related logic ~21% of the PE;  model: {:.1}%\n",
         100.0 * acc.norm_fraction()
     );
+    report.push_metric("pe_total_accurate", acc.total(), "GE");
+    report.push_metric("norm_fraction_accurate", acc.norm_fraction(), "frac");
 
     print!("{}", section("approximate-normalization PE variants"));
     for cfg in [ApproxNorm::AN_1_1, ApproxNorm::AN_1_2, ApproxNorm::AN_2_2] {
@@ -26,6 +30,7 @@ fn main() {
             100.0 * pe.norm_fraction(),
             100.0 * pe_area_saving(cfg)
         );
+        report.push_metric(&format!("pe_saving_{}", cfg.label()), pe_area_saving(cfg), "frac");
     }
     println!("\npaper: ~16% datapath area saving on average (abstract)");
 
@@ -33,4 +38,9 @@ fn main() {
         std::hint::black_box(PeArea::accurate().total());
     });
     println!("\n{}", r.render());
+    report.push(&r);
+    match report.write() {
+        Ok(p) => println!("bench trajectory: wrote {}", p.display()),
+        Err(e) => eprintln!("bench trajectory: write FAILED: {e}"),
+    }
 }

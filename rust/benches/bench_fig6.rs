@@ -8,6 +8,7 @@
 //!
 //! Run: `cargo bench --bench bench_fig6`
 
+use amfma::bench_harness::json::BenchReport;
 use amfma::bench_harness::section;
 use amfma::model::{eval::weights_path, Encoder, ModelConfig, Weights};
 use amfma::pe::ShiftHistogram;
@@ -66,4 +67,14 @@ fn main() {
         all.total(),
         wall
     );
+
+    let mut report = BenchReport::new("fig6");
+    report.push_metric("p_left_gt3", all.frac_left_gt(3), "frac");
+    report.push_metric("p_no_shift", all.prob(0), "frac");
+    report.push_metric("fma_ops_traced", all.total() as f64, "ops");
+    report.push_metric("trace_wall_s", wall.as_secs_f64(), "s");
+    match report.write() {
+        Ok(p) => println!("bench trajectory: wrote {}", p.display()),
+        Err(e) => eprintln!("bench trajectory: write FAILED: {e}"),
+    }
 }

@@ -8,23 +8,45 @@
 //!
 //! Run: `cargo bench --bench bench_fig7`
 
+use amfma::bench_harness::json::BenchReport;
 use amfma::bench_harness::section;
 use amfma::cost::{fig7a, fig7b, render_fig7a, render_fig7b, Activities};
 use amfma::ApproxNorm;
 
 fn main() {
     let cfg = ApproxNorm::AN_1_2; // the paper's most accurate config
+    let mut report = BenchReport::new("fig7");
     print!("{}", section("Fig 7a — area savings"));
-    println!("{}", render_fig7a(&fig7a(cfg)));
+    let area = fig7a(cfg);
+    println!("{}", render_fig7a(&area));
     println!("paper band: 14-19% total area saving, growing with size\n");
+    for row in &area {
+        report.push_metric(
+            &format!("area_saving_{}", row.size_label),
+            row.total_saving,
+            "frac",
+        );
+    }
 
     print!("{}", section("Fig 7b — power savings"));
     let (aa, ax) = amfma::cli::measured_activities(cfg)
         .unwrap_or((Activities::typical(), Activities::typical()));
-    println!("{}", render_fig7b(&fig7b(cfg, &aa, &ax)));
+    let power = fig7b(cfg, &aa, &ax);
+    println!("{}", render_fig7b(&power));
     println!("paper band: 10-14% total power saving");
     println!(
         "\nactivities (accurate run): mult={:.3} adder={:.3} norm={:.3} ff={:.3}",
         aa.mult, aa.adder, aa.norm_data, aa.ff
     );
+    for row in &power {
+        report.push_metric(
+            &format!("power_saving_{}", row.size_label),
+            row.total_saving,
+            "frac",
+        );
+    }
+    match report.write() {
+        Ok(p) => println!("bench trajectory: wrote {}", p.display()),
+        Err(e) => eprintln!("bench trajectory: write FAILED: {e}"),
+    }
 }

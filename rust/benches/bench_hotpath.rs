@@ -1,20 +1,29 @@
-//! §Perf hot-path benchmarks: scalar FMA throughput, functional GEMM
-//! scaling across threads/modes, the pooled-tiled-vs-seed before/after,
-//! the cycle-accurate simulator, and the end-to-end serving pipeline.
-//! These are the before/after numbers logged in EXPERIMENTS.md §Perf.
+//! §Perf hot-path benchmarks: scalar FMA throughput, the lane-parallel
+//! wide kernel vs the scalar seed kernel (chain- and GEMM-level), the
+//! pooled-tiled-vs-seed before/after, the cycle-accurate simulator, and
+//! the end-to-end serving pipeline.
+//!
+//! Every timed GEMM section first asserts the wide-vs-scalar bit-exactness
+//! contract on the full problem; the run is serialized to
+//! `bench-results/BENCH_hotpath.json` (+ a `BENCH_trajectory.jsonl` line)
+//! so the repo accumulates a perf trajectory.  `AMFMA_BENCH_QUICK=1` runs
+//! the reduced-iteration mode CI's perf smoke uses.
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
 use std::time::Duration;
 
+use amfma::arith::wide::{self, LANES};
 use amfma::arith::{column_dot, fma, ExtFloat, NormMode};
-use amfma::bench_harness::{bench, section};
+use amfma::bench_harness::json::BenchReport;
+use amfma::bench_harness::{bench, quick_mode, section};
 use amfma::prng::Prng;
 use amfma::systolic::matmul::{default_threads, matmul_bf16_percall_seed, transpose_to_bf16};
-use amfma::systolic::{CycleArray, EngineMode, MatrixEngine};
+use amfma::systolic::{CycleArray, EngineMode, GemmKernel, MatrixEngine, TileScheduler};
 use amfma::ApproxNorm;
 
 fn main() {
+    let mut report = BenchReport::new("hotpath");
     let mut rng = Prng::new(1);
 
     print!("{}", section("scalar FMA (the innermost op)"));
@@ -33,23 +42,18 @@ fn main() {
         })
         .with_ops(4096.0, "FMA/s");
         println!("{}", r.render());
+        report.push(&r);
     }
 
-    print!("{}", section("column reduction (K=256)"));
-    let ka: Vec<u16> = (0..256).map(|_| rng.bf16_activation()).collect();
-    let kb: Vec<u16> = (0..256).map(|_| rng.bf16_activation()).collect();
-    let r = bench("column_dot/256", 3, 50, Duration::from_millis(300), || {
-        std::hint::black_box(column_dot(&ka, &kb, NormMode::Accurate));
-    })
-    .with_ops(256.0, "FMA/s");
-    println!("{}", r.render());
+    print!("{}", section("column reduction: scalar chain vs wide lanes (K=256)"));
+    column_chain_bench(&mut report, &mut rng);
 
     print!("{}", section("functional GEMM 128x256x128"));
     let (m, k, n) = (128usize, 256usize, 128usize);
     let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
     let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
     for mode in ["fp32", "bf16", "bf16an-1-2"] {
-        for threads in [1, amfma::systolic::matmul::default_threads()] {
+        for threads in [1, default_threads()] {
             let mut eng = MatrixEngine::new(EngineMode::parse(mode).unwrap());
             eng.threads = threads;
             let r = bench(
@@ -63,11 +67,15 @@ fn main() {
             )
             .with_ops((m * k * n) as f64, "FMA/s");
             println!("{}", r.render());
+            report.push(&r);
         }
     }
 
+    print!("{}", section("wide vs scalar kernel, full GEMM 256x256x256 (bit-exact, then timed)"));
+    wide_vs_scalar_bench(&mut report);
+
     print!("{}", section("tiled pool + resident weights vs seed per-call path (256x256x256)"));
-    tiled_vs_seed_bench();
+    tiled_vs_seed_bench(&mut report);
 
     print!("{}", section("cycle-accurate array (16x16, M=64)"));
     let xb: Vec<u16> = (0..64 * 16).map(|_| rng.bf16_activation()).collect();
@@ -78,13 +86,131 @@ fn main() {
         std::hint::black_box(arr.stream(&xb, 64));
     });
     let cycles = amfma::systolic::dataflow::stream_cycles(64, 16, 16) as f64;
-    println!("{}", r.clone().with_ops(cycles, "cycles/s").render());
+    let r = r.with_ops(cycles, "cycles/s");
+    println!("{}", r.render());
+    report.push(&r);
 
     print!("{}", section("variable-length: padded batch vs per-sequence forward"));
-    padded_batch_bench();
+    padded_batch_bench(&mut report);
 
     print!("{}", section("serving pipeline (batched encoder, tiny model)"));
-    serving_bench();
+    serving_bench(&mut report);
+
+    match report.write() {
+        Ok(p) => println!("\nbench trajectory: wrote {}", p.display()),
+        Err(e) => eprintln!("\nbench trajectory: write FAILED: {e}"),
+    }
+}
+
+/// Chain-level before/after of the tentpole: one serial scalar chain per
+/// column against [`wide::dot_lanes`] advancing LANES independent chains
+/// per K-step.  Bit-exactness asserted per lane before timing.
+fn column_chain_bench(report: &mut BenchReport, rng: &mut Prng) {
+    let k = 256usize;
+    let ka: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+    let cols: Vec<Vec<u16>> =
+        (0..LANES).map(|_| (0..k).map(|_| rng.bf16_activation()).collect()).collect();
+    let refs: [&[u16]; LANES] = std::array::from_fn(|l| cols[l].as_slice());
+    let packed = wide::pack_lanes(&refs);
+    let mode = NormMode::Accurate;
+
+    // Hard contract: every lane must equal its scalar column chain.
+    let y = wide::dot_lanes(&ka, &packed, mode);
+    for (l, col) in cols.iter().enumerate() {
+        assert_eq!(y[l], column_dot(&ka, col, mode), "lane {l} broke the bit-exact contract");
+    }
+
+    let r = bench(
+        &format!("column_dot/scalar x{LANES} (K={k})"),
+        3,
+        50,
+        Duration::from_millis(300),
+        || {
+            for col in &cols {
+                std::hint::black_box(column_dot(&ka, col, mode));
+            }
+        },
+    )
+    .with_ops((k * LANES) as f64, "FMA/s");
+    println!("{}", r.render());
+    report.push(&r);
+
+    let rw = bench(
+        &format!("column_dot/wide {LANES} lanes (K={k})"),
+        3,
+        50,
+        Duration::from_millis(300),
+        || {
+            std::hint::black_box(wide::dot_lanes(&ka, &packed, mode));
+        },
+    )
+    .with_ops((k * LANES) as f64, "FMA/s");
+    println!("{}", rw.render());
+    report.push(&rw);
+
+    let speedup = r.mean.as_secs_f64() / rw.mean.as_secs_f64();
+    println!("speedup (wide vs scalar chains): {speedup:.2}x");
+    report.push_comparison("wide_vs_scalar_chains_k256", speedup);
+}
+
+/// The tentpole's acceptance benchmark: the same pooled tile scheduler
+/// running the scalar seed kernel vs the lane-parallel wide kernel on a
+/// full 256³ GEMM.  Bit-identity is asserted on the complete output for
+/// each mode before any timing.
+fn wide_vs_scalar_bench(report: &mut BenchReport) {
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mut rng = Prng::new(41);
+    let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let wt = transpose_to_bf16(&w, k, n);
+    let fmas = (m * k * n) as f64;
+    let pool = amfma::runtime::pool::global();
+
+    for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_1_2)] {
+        let label = mode.label();
+        let scalar = TileScheduler::with_kernel(GemmKernel::Scalar);
+        let wide_s = TileScheduler::with_kernel(GemmKernel::Wide);
+
+        let y_scalar = scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+        let y_wide = wide_s.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+        assert_eq!(
+            y_scalar, y_wide,
+            "HARD CONTRACT VIOLATED: wide kernel diverged from scalar on {m}x{k}x{n} ({label})"
+        );
+        println!("bit-exact: wide == scalar on {m}x{k}x{n} {label} ({} outputs)", y_wide.len());
+
+        let rs = bench(
+            &format!("gemm256/{label}/scalar-kernel"),
+            1,
+            3,
+            Duration::from_millis(800),
+            || {
+                std::hint::black_box(scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+            },
+        )
+        .with_ops(fmas, "FMA/s");
+        println!("{}", rs.render());
+        report.push(&rs);
+
+        let rw = bench(
+            &format!("gemm256/{label}/wide-kernel"),
+            1,
+            3,
+            Duration::from_millis(800),
+            || {
+                std::hint::black_box(wide_s.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+            },
+        )
+        .with_ops(fmas, "FMA/s");
+        println!("{}", rw.render());
+        report.push(&rw);
+
+        let speedup = rs.mean.as_secs_f64() / rw.mean.as_secs_f64();
+        println!("speedup (wide vs scalar kernel, {label}): {speedup:.2}x");
+        // Same comparison-key family as `amfma bench` (cli::cmd_bench), so
+        // trajectory consumers see one series regardless of the runner.
+        report.push_comparison(&format!("wide_vs_scalar_gemm_{label}"), speedup);
+    }
 }
 
 /// Throughput of the variable-length path: a mixed-length batch padded to
@@ -92,7 +218,7 @@ fn main() {
 /// running every sequence alone at its natural length.  Both produce
 /// bit-identical logits (asserted before timing); the padded batch amortizes
 /// projection/FFN GEMMs over `B·S` rows.
-fn padded_batch_bench() {
+fn padded_batch_bench(report: &mut BenchReport) {
     use amfma::model::{Encoder, ModelConfig, Weights};
 
     let cfg = ModelConfig {
@@ -136,6 +262,7 @@ fn padded_batch_bench() {
     )
     .with_ops(live as f64, "tok/s");
     println!("{}", r_single.render());
+    report.push(&r_single);
 
     let r_padded = bench(
         &format!("varlen/padded batch x{batch} (S={seq})"),
@@ -148,22 +275,26 @@ fn padded_batch_bench() {
     )
     .with_ops(live as f64, "tok/s");
     println!("{}", r_padded.render());
+    report.push(&r_padded);
 
+    let speedup = r_single.mean.as_secs_f64() / r_padded.mean.as_secs_f64();
+    let efficiency = live as f64 / (batch * seq) as f64;
     println!(
-        "speedup (padded batch vs per-sequence): {:.2}x  \
+        "speedup (padded batch vs per-sequence): {speedup:.2}x  \
          [padding efficiency {:.1}%]",
-        r_single.mean.as_secs_f64() / r_padded.mean.as_secs_f64(),
-        100.0 * live as f64 / (batch * seq) as f64
+        100.0 * efficiency
     );
+    report.push_comparison("padded_vs_per_sequence", speedup);
+    report.push_metric("padding_efficiency", efficiency, "frac");
 }
 
 /// The acceptance benchmark of the execution-engine overhaul: the seed's
 /// per-call hot path (RNE-convert the full W, spawn scoped threads, serial
 /// single-accumulator K-chains) against the overhauled path (weights
 /// resident as a pre-quantized bf16 plane, cache-blocked tiles on the
-/// persistent pool, 4-column register-blocked K-chains).  Both are
-/// bit-exact — asserted below before timing.
-fn tiled_vs_seed_bench() {
+/// persistent pool, lane-parallel K-chains).  Both are bit-exact —
+/// asserted below before timing.
+fn tiled_vs_seed_bench(report: &mut BenchReport) {
     let (m, k, n) = (256usize, 256usize, 256usize);
     let mut rng = Prng::new(42);
     let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
@@ -192,6 +323,7 @@ fn tiled_vs_seed_bench() {
     )
     .with_ops(fmas, "FMA/s");
     println!("{}", r_seed.render());
+    report.push(&r_seed);
 
     let r_pool = bench(
         "gemm256/pooled tiles + resident weights",
@@ -204,17 +336,20 @@ fn tiled_vs_seed_bench() {
     )
     .with_ops(fmas, "FMA/s");
     println!("{}", r_pool.render());
+    report.push(&r_pool);
 
     let speedup = r_seed.mean.as_secs_f64() / r_pool.mean.as_secs_f64();
     println!(
         "speedup (pooled+resident vs seed per-call): {speedup:.2}x  \
-         [{} threads, mode {}]",
+         [{} threads, mode {}, kernel {}]",
         threads,
-        mode.label()
+        mode.label(),
+        eng.kernel.label()
     );
+    report.push_comparison("pooled_resident_vs_seed_percall", speedup);
 }
 
-fn serving_bench() {
+fn serving_bench(report: &mut BenchReport) {
     use amfma::coordinator::{InferenceServer, ServerConfig};
     use amfma::model::{ModelConfig, Weights};
     use std::collections::HashMap;
@@ -234,7 +369,7 @@ fn serving_bench() {
     );
     let h = srv.handle();
     let mut rng = Prng::new(6);
-    let n_req = 128;
+    let n_req = if quick_mode() { 32 } else { 128 };
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         for c in 0..8u64 {
@@ -252,13 +387,15 @@ fn serving_bench() {
     });
     let wall = t0.elapsed();
     let m = srv.shutdown().snapshot();
+    let seq_s = n_req as f64 / wall.as_secs_f64();
     println!(
-        "{n_req} requests in {wall:.2?}: {:.1} seq/s, p50={:.1}ms p99={:.1}ms, \
+        "{n_req} requests in {wall:.2?}: {seq_s:.1} seq/s, p50={:.1}ms p99={:.1}ms, \
          mean batch {:.1}, padding efficiency {:.1}%",
-        n_req as f64 / wall.as_secs_f64(),
         m.p50_ms,
         m.p99_ms,
         m.mean_batch,
         100.0 * m.padding_efficiency
     );
+    report.push_metric("serving_seq_per_s", seq_s, "seq/s");
+    report.push_metric("serving_p99_ms", m.p99_ms, "ms");
 }

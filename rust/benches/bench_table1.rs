@@ -7,6 +7,7 @@
 //!
 //! Run: `cargo bench --bench bench_table1`
 
+use amfma::bench_harness::json::BenchReport;
 use amfma::bench_harness::section;
 use amfma::model::{self, Weights};
 
@@ -46,13 +47,25 @@ fn main() -> amfma::error::Result<()> {
     println!("  FP32      92.1 79.2 84.2 93.1 93.3 53.6 86.0 74.3 56.3 92.0");
     println!("  BF16      93.1 80.0 83.3 93.1 93.3 53.6 86.0 74.3 56.3 92.0");
     println!("  an-1-1/1-2: ~1 point below BF16 on average; an-2-2: ~7 points\n");
+    let mut report = BenchReport::new("table1");
+    for r in &results {
+        report.push_metric(&format!("headline_{}_{}", r.task, r.mode), r.headline(), "points");
+    }
     for m in ["bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let deg = model::eval::avg_degradation_vs_bf16(&results, m);
+        let flips = model::eval::flip_rate_vs_bf16(&results, m);
         println!(
-            "measured vs bf16: {m}  degradation = {:+.2} points, decision flips = {:.2}%",
-            model::eval::avg_degradation_vs_bf16(&results, m),
-            100.0 * model::eval::flip_rate_vs_bf16(&results, m)
+            "measured vs bf16: {m}  degradation = {deg:+.2} points, decision flips = {:.2}%",
+            100.0 * flips
         );
+        report.push_metric(&format!("degradation_vs_bf16_{m}"), deg, "points");
+        report.push_metric(&format!("flip_rate_vs_bf16_{m}"), flips, "frac");
     }
     println!("total wall time: {:.1?}", t0.elapsed());
+    report.push_metric("wall_s", t0.elapsed().as_secs_f64(), "s");
+    match report.write() {
+        Ok(p) => println!("bench trajectory: wrote {}", p.display()),
+        Err(e) => eprintln!("bench trajectory: write FAILED: {e}"),
+    }
     Ok(())
 }

@@ -63,6 +63,14 @@ impl ApproxNorm {
         format!("an-{}-{}", self.k, self.lambda)
     }
 
+    /// The precomputed `(g1, g2)` OR-tree operand masks.  Shared with the
+    /// lane-parallel kernel ([`crate::arith::wide`]) so the mask formula
+    /// lives in exactly one place.
+    #[inline]
+    pub(crate) fn masks(&self) -> (u32, u32) {
+        (self.g1_mask, self.g2_mask)
+    }
+
     /// The left shift selected by the two OR-trees for a nonzero `raw`
     /// adder output whose leading one is at or below `NORM_POS`
     /// (i.e. the overflow right-shift correction has already been applied).

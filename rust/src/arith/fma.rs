@@ -300,7 +300,8 @@ fn fma_impl(
 /// A full weight-stationary column reduction: `Σ_i a[i]·b[i]`, accumulated
 /// through the chained PE datapath in index order (the order partial sums
 /// flow south through the array), then rounded once to bf16 at the south
-/// edge.  This is the semantic contract the systolic simulator must match.
+/// edge.  This is the semantic contract the systolic simulator — and the
+/// lane-parallel batched kernel ([`crate::arith::wide`]) — must match.
 pub fn column_dot(a: &[u16], b: &[u16], mode: NormMode) -> u16 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = ExtFloat::ZERO;

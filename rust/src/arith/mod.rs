@@ -4,8 +4,10 @@
 //! the paper's Fig. 1 ([`format`]), decode/encode with round-to-nearest-even
 //! ([`softfloat`]), the extended 16-bit-significand partial-sum type
 //! ([`ext`]), exact leading-zero normalization control ([`lza`]), the
-//! paper's approximate normalization ([`approx_norm`]) and the fused
-//! multiply-add PE datapath itself ([`fma`]).
+//! paper's approximate normalization ([`approx_norm`]), the fused
+//! multiply-add PE datapath itself ([`fma`]) and its lane-parallel batched
+//! form ([`wide`]) — the same arithmetic advanced over independent column
+//! chains in struct-of-arrays form, bit-exact with the scalar chain.
 
 pub mod approx_norm;
 pub mod ext;
@@ -13,8 +15,10 @@ pub mod fma;
 pub mod format;
 pub mod lza;
 pub mod softfloat;
+pub mod wide;
 
 pub use approx_norm::ApproxNorm;
 pub use ext::{ExtFloat, Kind};
 pub use fma::{column_dot, fma, fma_traced, FmaTrace, NormMode, ADD_FRAME_BITS, NORM_POS};
 pub use softfloat::{bf16_to_f32, f32_to_bf16};
+pub use wide::{WideAcc, WideKernel};

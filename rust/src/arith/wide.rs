@@ -1,0 +1,470 @@
+//! Lane-parallel batched PE datapath — the Fig. 3 pipeline advanced over
+//! [`LANES`] independent output-column chains per K-step, in
+//! struct-of-arrays form.
+//!
+//! The scalar reference ([`crate::arith::fma`]) walks one `ExtFloat`
+//! accumulator through a serial dependency chain: every FMA must finish
+//! (align → add → normalize → store) before the next one starts, so the
+//! host CPU's wide issue ports sit idle.  A weight-stationary array has no
+//! such bottleneck — neighbouring columns run the same K-step on
+//! *independent* partial sums — and this module reproduces exactly that
+//! shape in software: flat `u32` lane arrays for sign / exponent /
+//! significand in the Q4.16 adder frame ([`WideAcc`]), and a branch-free
+//! align/add/normalize update per lane ([`WideKernel::step`]) that the
+//! compiler can software-pipeline or auto-vectorize across lanes.
+//!
+//! **Bit-exactness contract.** For every input — including zeros,
+//! subnormal-adjacent exponents, deep cancellation, FTZ underflow,
+//! saturation to infinity and NaN/Inf propagation — lane `j` after `t`
+//! steps holds *exactly* the `ExtFloat` the scalar chain
+//! `fma(a_t, b_t[j], …fma(a_0, b_0[j], ZERO))` would hold, for
+//! [`NormMode::Accurate`] and every `Approx(k, λ)` configuration.  The
+//! contract is enforced by the differential harness in
+//! `rust/tests/property_wide.rs`, by the GEMM-level assertions in
+//! `benches/bench_hotpath.rs`, and transitively by the Python emulator
+//! golden vectors (`python/compile/kernels/amfma_emu.py` specifies the
+//! same scalar semantics this module must match).
+//!
+//! Implementation notes:
+//!
+//! * Zero partial sums are stored as `mag == 0` with the exponent pinned to
+//!   [`ZERO_EXP`], a sentinel far enough below any finite biased exponent
+//!   that the alignment shift saturates (≥ 31) and the align/add datapath
+//!   reproduces the scalar zero-operand special cases *without branching*.
+//! * Inf/NaN lanes are **frozen**: the lane's final bf16 bit pattern is
+//!   latched in a side array and mask-selects override any further updates
+//!   (both are absorbing states of the scalar datapath when `a`/`b` stay
+//!   non-special).
+//! * Steps whose `a` or any `b[j]` is Inf/NaN take a cold scalar fallback
+//!   through [`crate::arith::fma`] itself, which trivially preserves the
+//!   contract on the paths where performance is irrelevant.
+
+use super::ext::{ExtFloat, Kind};
+use super::fma::{fma, NormMode, NORM_POS};
+
+/// Output-column chains advanced per K-step (the register-blocking width).
+pub const LANES: usize = 8;
+
+/// Exponent sentinel for zero lanes: so far below every finite biased
+/// exponent (≥ 1 − 254 bias headroom) that `d = ep − ec` saturates the
+/// 31-position alignment clamp in either direction, which is exactly what
+/// makes the zero-operand cases fall out of the common datapath.
+const ZERO_EXP: i32 = -0x200;
+
+/// bf16 bit patterns latched for frozen special lanes.
+const INF_BITS: u16 = 0x7F80;
+const NAN_BITS: u16 = 0x7FC0;
+
+#[inline(always)]
+fn sel_u32(mask: u32, a: u32, b: u32) -> u32 {
+    (a & mask) | (b & !mask)
+}
+
+#[inline(always)]
+fn sel_i32(mask: i32, a: i32, b: i32) -> i32 {
+    (a & mask) | (b & !mask)
+}
+
+/// Struct-of-arrays accumulator state: [`LANES`] partial-sum chains.
+///
+/// Live lanes mirror `ExtFloat` exactly (sign / biased exponent / Q1.15
+/// magnitude, zero as `mag == 0` + [`ZERO_EXP`]); frozen lanes (`spec != 0`)
+/// carry their final bf16 pattern instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WideAcc {
+    sign: [u32; LANES],
+    exp: [i32; LANES],
+    mag: [u32; LANES],
+    spec: [u16; LANES],
+}
+
+impl Default for WideAcc {
+    fn default() -> Self {
+        WideAcc::new()
+    }
+}
+
+impl WideAcc {
+    /// All lanes `+0` — the north-edge state of a fresh column group.
+    pub fn new() -> WideAcc {
+        WideAcc {
+            sign: [0; LANES],
+            exp: [ZERO_EXP; LANES],
+            mag: [0; LANES],
+            spec: [0; LANES],
+        }
+    }
+
+    /// Seed every lane from an explicit partial sum (tile-boundary
+    /// chaining, differential tests).
+    pub fn from_lanes(lanes: &[ExtFloat; LANES]) -> WideAcc {
+        let mut acc = WideAcc::new();
+        for (j, &e) in lanes.iter().enumerate() {
+            acc.store(j, e);
+        }
+        acc
+    }
+
+    /// The exact `ExtFloat` the scalar chain would hold for lane `j`.
+    pub fn lane(&self, j: usize) -> ExtFloat {
+        match self.spec[j] {
+            0 => {
+                if self.mag[j] == 0 {
+                    ExtFloat::zero(self.sign[j] != 0)
+                } else {
+                    ExtFloat {
+                        kind: Kind::Finite,
+                        sign: self.sign[j] != 0,
+                        exp: self.exp[j],
+                        mag: self.mag[j] as u16,
+                    }
+                }
+            }
+            NAN_BITS => ExtFloat::nan(),
+            s => ExtFloat::inf(s >> 15 != 0),
+        }
+    }
+
+    /// Every lane as an `ExtFloat` (index order).
+    pub fn lanes(&self) -> [ExtFloat; LANES] {
+        std::array::from_fn(|j| self.lane(j))
+    }
+
+    /// South-edge rounding of every lane (the once-per-column RNE).
+    pub fn round_to_bf16(&self) -> [u16; LANES] {
+        std::array::from_fn(|j| self.lane(j).round_to_bf16())
+    }
+
+    fn store(&mut self, j: usize, r: ExtFloat) {
+        match r.kind {
+            Kind::Zero => {
+                self.spec[j] = 0;
+                self.sign[j] = r.sign as u32;
+                self.exp[j] = ZERO_EXP;
+                self.mag[j] = 0;
+            }
+            Kind::Finite => {
+                self.spec[j] = 0;
+                self.sign[j] = r.sign as u32;
+                self.exp[j] = r.exp;
+                self.mag[j] = r.mag as u32;
+            }
+            Kind::Inf => {
+                self.spec[j] = if r.sign { 0x8000 | INF_BITS } else { INF_BITS };
+                self.exp[j] = ZERO_EXP;
+                self.mag[j] = 0;
+            }
+            Kind::Nan => {
+                self.spec[j] = NAN_BITS;
+                self.exp[j] = ZERO_EXP;
+                self.mag[j] = 0;
+            }
+        }
+    }
+}
+
+/// Precomputed per-GEMM normalization parameters: the accurate/approximate
+/// selection and the two OR-tree masks of [`crate::arith::ApproxNorm`]
+/// lowered to plain words, so the inner lane loop is pure mask arithmetic.
+#[derive(Debug, Clone, Copy)]
+pub struct WideKernel {
+    mode: NormMode,
+    /// All-ones when normalizing exactly (the BF16 baseline).
+    acc_mask: u32,
+    k: u32,
+    klam: u32,
+    g1: u32,
+    g2: u32,
+}
+
+impl WideKernel {
+    pub fn new(mode: NormMode) -> WideKernel {
+        match mode {
+            NormMode::Accurate => {
+                WideKernel { mode, acc_mask: !0, k: 0, klam: 0, g1: 0, g2: 0 }
+            }
+            NormMode::Approx(cfg) => {
+                let (g1, g2) = cfg.masks();
+                WideKernel { mode, acc_mask: 0, k: cfg.k, klam: cfg.k + cfg.lambda, g1, g2 }
+            }
+        }
+    }
+
+    /// The normalization mode this kernel was built for.
+    pub fn mode(&self) -> NormMode {
+        self.mode
+    }
+
+    /// Advance every lane one K-step: `acc[j] = a × b[j] + acc[j]` under
+    /// this kernel's normalization mode, bit-exact with the scalar
+    /// [`crate::arith::fma`] chain per lane.
+    #[inline]
+    pub fn step(&self, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        // Inf/NaN operands (exponent field saturated) take the scalar path.
+        let mut b_special = false;
+        for &v in b {
+            b_special |= (v & 0x7F80) == 0x7F80;
+        }
+        if (a & 0x7F80) == 0x7F80 || b_special {
+            self.step_scalar(acc, a, b);
+            return;
+        }
+
+        // ---- stage 1, shared across lanes: decode the activation --------
+        let ea = (a as u32 >> 7) & 0xFF;
+        let sa = ((a as u32) & 0x7F) | 0x80;
+        let asign = (a as u32) >> 15;
+        let a_nz = (ea != 0) as u32; // exp field 0 is zero/subnormal: FTZ
+
+        for j in 0..LANES {
+            // ---- stage 1, per lane: 8×8 multiply + exponent add ---------
+            let bj = b[j] as u32;
+            let eb = (bj >> 7) & 0xFF;
+            let p_nz = a_nz & ((eb != 0) as u32);
+            let pm = (p_nz as i32).wrapping_neg();
+            let sb = (bj & 0x7F) | 0x80;
+            let fp = ((sa * sb) << 2) & pm as u32; // Q4.16 frame
+            let ep = sel_i32(pm, (ea + eb) as i32 - 127, ZERO_EXP);
+            let psign = asign ^ (bj >> 15);
+
+            let csign = acc.sign[j];
+            let ec = acc.exp[j];
+            let fc = acc.mag[j] << 1; // Q4.16 frame
+            let c_nz = (acc.mag[j] != 0) as u32;
+
+            // ---- stage 2: align (plain truncation) + effective add ------
+            // Zero operands carry the ZERO_EXP sentinel, so `d` saturates
+            // the 31-position clamp and the zero cases need no branches.
+            let d = ep - ec;
+            let dm = d >> 31; // all-ones when Ec > Ep
+            let ap = (fp >> (-d).clamp(0, 31)) as i32;
+            let ac = (fc >> d.clamp(0, 31)) as i32;
+            let base = sel_i32(dm, ec, ep);
+            let ps = (psign as i32).wrapping_neg();
+            let cs = (csign as i32).wrapping_neg();
+            let v = ((ap ^ ps) - ps) + ((ac ^ cs) - cs);
+            let raw = v.unsigned_abs();
+            let rsign = (v >> 31) as u32 & 1;
+
+            // ---- normalize: exact right shift on the overflow side, ----
+            // mode-selected left shift below (mask arithmetic, no branch).
+            let msb = 31 - (raw | 1).leading_zeros();
+            let rsh = msb.saturating_sub(NORM_POS);
+            let not_over = ((msb <= NORM_POS) as u32).wrapping_neg();
+            let s_acc = NORM_POS - msb.min(NORM_POS);
+            let h1 = (((raw & self.g1) != 0) as u32).wrapping_neg();
+            let h2 = (((raw & self.g2) != 0) as u32).wrapping_neg();
+            let s_apx = !h1 & sel_u32(h2, self.k, self.klam);
+            let s_left = sel_u32(self.acc_mask, s_acc, s_apx) & not_over;
+            let frame = (raw >> rsh) << s_left;
+            let e_out = base + rsh as i32 - s_left as i32;
+            let mag16 = frame >> 1; // store back to Q1.15: drop guard bit
+
+            // ---- classify + select the new lane state -------------------
+            let raw_nz = (raw != 0) as u32;
+            let m_nz = (mag16 != 0) as u32;
+            let e_ok = ((e_out as u32).wrapping_sub(1) < 254) as u32;
+            let fin = (m_nz & e_ok & raw_nz).wrapping_neg();
+            let inf = (raw_nz & m_nz & ((e_out >= 255) as u32)).wrapping_neg();
+            // Exact cancellation yields +0; 0 + 0 keeps the IEEE sign rule
+            // (−0 only when both contributions are negative).
+            let sign0 = (1 ^ p_nz) & (1 ^ c_nz) & psign & csign;
+            let s_new = sel_u32(raw_nz.wrapping_neg(), rsign, sign0);
+            let spec_new = inf & (INF_BITS as u32 | (rsign << 15));
+
+            // Frozen (Inf/NaN) lanes are absorbing: keep their state.
+            let live = ((acc.spec[j] == 0) as u32).wrapping_neg();
+            let exp_new = sel_i32(fin as i32, e_out, ZERO_EXP);
+            acc.mag[j] = sel_u32(live, mag16 & fin, acc.mag[j]);
+            acc.exp[j] = sel_i32(live as i32, exp_new, acc.exp[j]);
+            acc.sign[j] = sel_u32(live, s_new, acc.sign[j]);
+            acc.spec[j] = sel_u32(live, spec_new, acc.spec[j] as u32) as u16;
+        }
+    }
+
+    /// Special-operand fallback: one scalar FMA per lane.  Bit-exact by
+    /// construction; cold because Inf/NaN activations and weights are
+    /// vanishingly rare in real workloads.
+    #[cold]
+    fn step_scalar(&self, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        for j in 0..LANES {
+            let r = fma(a, b[j], acc.lane(j), self.mode);
+            acc.store(j, r);
+        }
+    }
+}
+
+/// Interleave [`LANES`] equal-length weight columns into the layout
+/// [`dot_lanes`] and the wide tile kernel consume: step `i` reads the
+/// contiguous block `packed[i*LANES .. (i+1)*LANES]`.
+pub fn pack_lanes(cols: &[&[u16]; LANES]) -> Vec<u16> {
+    let k = cols[0].len();
+    debug_assert!(cols.iter().all(|c| c.len() == k), "ragged lane columns");
+    let mut out = Vec::with_capacity(k * LANES);
+    for i in 0..k {
+        for col in cols {
+            out.push(col[i]);
+        }
+    }
+    out
+}
+
+/// [`LANES`] column reductions in one pass: `y[j] = Σ_i a[i]·b_j[i]` with
+/// `packed` in [`pack_lanes`] layout, rounded once at the south edge.
+/// Bit-identical to [`crate::arith::column_dot`] per lane.
+pub fn dot_lanes(x: &[u16], packed: &[u16], mode: NormMode) -> [u16; LANES] {
+    debug_assert_eq!(packed.len(), x.len() * LANES, "packed shape");
+    let kern = WideKernel::new(mode);
+    let mut acc = WideAcc::new();
+    for (&xi, bch) in x.iter().zip(packed.chunks_exact(LANES)) {
+        let b: &[u16; LANES] = bch.try_into().expect("chunk is LANES wide");
+        kern.step(&mut acc, xi, b);
+    }
+    acc.round_to_bf16()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{column_dot, ApproxNorm};
+    use crate::prng::Prng;
+
+    const MODES: [NormMode; 4] = [
+        NormMode::Accurate,
+        NormMode::Approx(ApproxNorm::AN_1_1),
+        NormMode::Approx(ApproxNorm::AN_1_2),
+        NormMode::Approx(ApproxNorm::AN_2_2),
+    ];
+
+    /// Run the same chain both ways and require identical ExtFloat state
+    /// at every step and identical rounded outputs at the end.  The broad
+    /// PRNG chain sweeps live in `rust/tests/property_wide.rs`; the unit
+    /// tests here keep only the cases unique to this module's API.
+    fn check_chain(x: &[u16], cols: &[Vec<u16>; LANES], mode: NormMode) {
+        let kern = WideKernel::new(mode);
+        let mut acc = WideAcc::new();
+        let mut scalar = [ExtFloat::ZERO; LANES];
+        for (i, &xi) in x.iter().enumerate() {
+            let b: [u16; LANES] = std::array::from_fn(|l| cols[l][i]);
+            kern.step(&mut acc, xi, &b);
+            for (l, s) in scalar.iter_mut().enumerate() {
+                *s = fma(xi, b[l], *s, mode);
+                assert_eq!(
+                    acc.lane(l),
+                    *s,
+                    "step {i} lane {l} mode {mode:?} a={xi:04x} b={:04x}",
+                    b[l]
+                );
+            }
+        }
+        let rounded = acc.round_to_bf16();
+        for l in 0..LANES {
+            assert_eq!(rounded[l], scalar[l].round_to_bf16(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_column_dot() {
+        let mut rng = Prng::new(603);
+        for mode in MODES {
+            let k = 96;
+            let x: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+            let cols: [Vec<u16>; LANES] =
+                std::array::from_fn(|_| (0..k).map(|_| rng.bf16_activation()).collect());
+            let refs: [&[u16]; LANES] = std::array::from_fn(|l| cols[l].as_slice());
+            let packed = pack_lanes(&refs);
+            let y = dot_lanes(&x, &packed, mode);
+            for l in 0..LANES {
+                assert_eq!(y[l], column_dot(&x, &cols[l], mode), "lane {l} mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials_freeze_and_propagate() {
+        let one = crate::arith::f32_to_bf16(1.0);
+        let inf = 0x7F80u16;
+        for mode in MODES {
+            let kern = WideKernel::new(mode);
+            let mut acc = WideAcc::new();
+            let mut scalar = [ExtFloat::ZERO; LANES];
+            let track = |acc: &WideAcc, scalar: &mut [ExtFloat; LANES], a: u16, b: &[u16; LANES]| {
+                for (l, s) in scalar.iter_mut().enumerate() {
+                    *s = fma(a, b[l], *s, mode);
+                    assert_eq!(acc.lane(l), *s, "lane {l} mode {mode:?}");
+                }
+            };
+            // Lane 0: +inf weight, lane 1: −inf, lane 2: NaN, rest finite.
+            let mut b = [one; LANES];
+            b[0] = inf;
+            b[1] = inf | 0x8000;
+            b[2] = 0x7FC0;
+            kern.step(&mut acc, one, &b);
+            track(&acc, &mut scalar, one, &b);
+            // Lane 3: inf weight with a zero activation (inf × 0 → NaN).
+            let mut b2 = [one; LANES];
+            b2[3] = inf;
+            kern.step(&mut acc, 0, &b2);
+            track(&acc, &mut scalar, 0, &b2);
+            // Follow with ordinary finite steps: specials must be absorbing.
+            let mut rng = Prng::new(604);
+            for _ in 0..16 {
+                let a = rng.bf16_activation();
+                let bs: [u16; LANES] = std::array::from_fn(|_| rng.bf16_activation());
+                kern.step(&mut acc, a, &bs);
+                track(&acc, &mut scalar, a, &bs);
+            }
+            assert_eq!(acc.lane(0), ExtFloat::inf(false));
+            assert_eq!(acc.lane(1), ExtFloat::inf(true));
+            assert_eq!(acc.lane(2), ExtFloat::nan());
+            assert_eq!(acc.lane(3), ExtFloat::nan());
+        }
+    }
+
+    #[test]
+    fn overflow_saturates_like_scalar() {
+        // Finite operands can overflow to Inf inside the fast path; the
+        // lane must freeze exactly where the scalar chain saturates.
+        let big = crate::arith::f32_to_bf16(3e38);
+        let x = vec![big; 4];
+        let cols: [Vec<u16>; LANES] = std::array::from_fn(|_| vec![big; 4]);
+        for mode in MODES {
+            check_chain(&x, &cols, mode);
+        }
+    }
+
+    #[test]
+    fn from_lanes_round_trips() {
+        let vals = [
+            ExtFloat::ZERO,
+            ExtFloat::zero(true),
+            ExtFloat::from_f32(1.5),
+            ExtFloat::from_f32(-3.25e-30),
+            ExtFloat::inf(false),
+            ExtFloat::inf(true),
+            ExtFloat::nan(),
+            ExtFloat { kind: Kind::Finite, sign: true, exp: 130, mag: 0x0400 },
+        ];
+        let acc = WideAcc::from_lanes(&vals);
+        assert_eq!(acc.lanes(), vals);
+    }
+
+    #[test]
+    fn signed_zero_rules_match_scalar() {
+        // (−x · +y) + −0 chains: the sign of zero results must track the
+        // scalar rule (−0 only when both contributions are negative).
+        let nz = 0x8000u16; // −0
+        let pz = 0x0000u16;
+        for mode in MODES {
+            let kern = WideKernel::new(mode);
+            let mut acc = WideAcc::from_lanes(&[ExtFloat::zero(true); LANES]);
+            let b: [u16; LANES] = [nz, pz, nz, pz, nz, pz, nz, pz];
+            kern.step(&mut acc, nz, &b);
+            let mut scalar = [ExtFloat::zero(true); LANES];
+            for (l, s) in scalar.iter_mut().enumerate() {
+                *s = fma(nz, b[l], *s, mode);
+                assert_eq!(acc.lane(l), *s, "lane {l} mode {mode:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Machine-readable bench serialization (schema `amfma-bench-v1`).
+//!
+//! Every bench target builds a [`BenchReport`], pushes its measured
+//! [`BenchResult`]s (plus free-form metrics and before/after comparisons)
+//! and calls [`BenchReport::write`], which persists two artifacts under
+//! [`BenchReport::out_dir`] (`bench-results/`, or `AMFMA_BENCH_DIR`):
+//!
+//! * `BENCH_<target>.json` — the latest run, overwritten each time.  CI
+//!   uploads `BENCH_hotpath.json` as a build artifact on every push, so
+//!   the wide-vs-scalar throughput comparison is recorded per commit.
+//! * `BENCH_trajectory.jsonl` — one JSON line per run, append-only: the
+//!   accumulated perf trajectory of the machine the benches run on.
+//!
+//! Each record carries the git revision and a timestamp so trajectories
+//! can be joined against history.  The schema is validated end-to-end by
+//! `python/tests/test_bench_schema.py` (run standalone by CI's perf-smoke
+//! step and under pytest in the Python job).  No serde is vendored; the
+//! writer below emits the JSON by hand and keeps names/units ASCII-simple.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::{quick_mode, BenchResult};
+
+/// Schema tag checked by the Python guard.
+pub const SCHEMA: &str = "amfma-bench-v1";
+
+/// A free-form scalar observation (area saving, accuracy headline, ...).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// A before/after ratio, e.g. the wide-vs-scalar GEMM speedup.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    pub ratio: f64,
+}
+
+/// One bench run on its way to `BENCH_<target>.json`.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    target: String,
+    quick: bool,
+    results: Vec<BenchResult>,
+    metrics: Vec<Metric>,
+    comparisons: Vec<Comparison>,
+}
+
+impl BenchReport {
+    pub fn new(target: &str) -> BenchReport {
+        BenchReport {
+            target: target.to_string(),
+            quick: quick_mode(),
+            results: Vec::new(),
+            metrics: Vec::new(),
+            comparisons: Vec::new(),
+        }
+    }
+
+    /// Record a measured benchmark (call right after rendering it).
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    pub fn push_metric(&mut self, name: &str, value: f64, unit: &str) {
+        self.metrics.push(Metric { name: name.to_string(), value, unit: unit.to_string() });
+    }
+
+    pub fn push_comparison(&mut self, name: &str, ratio: f64) {
+        self.comparisons.push(Comparison { name: name.to_string(), ratio });
+    }
+
+    /// The run as one JSON object (single line, no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push_str(&format!(
+            "{{\"schema\":\"{}\",\"target\":\"{}\",\"git_rev\":\"{}\",\
+             \"unix_time\":{},\"quick\":{}",
+            SCHEMA,
+            esc(&self.target),
+            esc(&git_rev()),
+            unix_time(),
+            self.quick
+        ));
+        s.push_str(",\"results\":[");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let tp = match r.throughput {
+                Some((v, u)) => format!("{{\"value\":{},\"unit\":\"{}\"}}", num(v), esc(u)),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\
+                 \"p95_ns\":{},\"min_ns\":{},\"throughput\":{}}}",
+                esc(&r.name),
+                r.iters,
+                r.mean.as_nanos(),
+                r.median.as_nanos(),
+                r.p95.as_nanos(),
+                r.min.as_nanos(),
+                tp
+            ));
+        }
+        s.push_str("],\"metrics\":[");
+        for (i, m) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"name\":\"{}\",\"value\":{},\"unit\":\"{}\"}}",
+                esc(&m.name),
+                num(m.value),
+                esc(&m.unit)
+            ));
+        }
+        s.push_str("],\"comparisons\":[");
+        for (i, c) in self.comparisons.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"name\":\"{}\",\"ratio\":{}}}",
+                esc(&c.name),
+                num(c.ratio)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Where bench artifacts land: `AMFMA_BENCH_DIR`, else `bench-results/`
+    /// under the current directory (`rust/bench-results/` when invoked via
+    /// `cargo bench`).
+    pub fn out_dir() -> PathBuf {
+        std::env::var_os("AMFMA_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("bench-results"))
+    }
+
+    /// Persist snapshot + trajectory line under [`BenchReport::out_dir`];
+    /// returns the snapshot path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(&Self::out_dir())
+    }
+
+    /// As [`BenchReport::write`], into an explicit directory.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let json = self.to_json();
+        let path = dir.join(format!("BENCH_{}.json", self.target));
+        std::fs::write(&path, format!("{json}\n"))?;
+        let mut traj = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("BENCH_trajectory.jsonl"))?;
+        writeln!(traj, "{json}")?;
+        Ok(path)
+    }
+}
+
+/// JSON string escape (quotes, backslashes, control characters).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number, `null` otherwise (JSON has no inf/NaN).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn unix_time() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_secs()
+}
+
+/// Current git revision: `git rev-parse` when a repo is reachable, else the
+/// `GITHUB_SHA` CI env, else `"unknown"`.
+fn git_rev() -> String {
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            if let Ok(s) = String::from_utf8(out.stdout) {
+                let s = s.trim();
+                if !s.is_empty() {
+                    return s.to_string();
+                }
+            }
+        }
+    }
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            let end = sha.len().min(12);
+            return sha[..end].to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_report() -> BenchReport {
+        let mut rep = BenchReport::new("unit_test");
+        let r = crate::bench_harness::bench("sample \"quoted\"", 0, 1, Duration::ZERO, || {
+            std::hint::black_box(0);
+        })
+        .with_ops(100.0, "FMA/s");
+        rep.push(&r);
+        rep.push_metric("pe_saving", 0.16, "frac");
+        rep.push_comparison("wide_vs_scalar", 2.0);
+        rep
+    }
+
+    #[test]
+    fn report_structure_and_escaping() {
+        let j = sample_report().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"schema\":\"amfma-bench-v1\""));
+        assert!(j.contains("\"target\":\"unit_test\""));
+        assert!(j.contains("sample \\\"quoted\\\""), "{j}");
+        assert!(j.contains("\"ratio\":2"));
+        assert!(j.contains("\"unit\":\"FMA/s\""));
+        assert!(j.contains("\"git_rev\":\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(!j.contains('\n'), "trajectory lines must be single-line");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let mut rep = BenchReport::new("t");
+        rep.push_comparison("bad", f64::INFINITY);
+        rep.push_metric("worse", f64::NAN, "x");
+        let j = rep.to_json();
+        assert!(j.contains("\"ratio\":null"));
+        assert!(j.contains("\"value\":null"));
+    }
+
+    #[test]
+    fn write_creates_snapshot_and_appends_trajectory() {
+        let dir = std::env::temp_dir().join(format!("amfma-bench-json-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rep = sample_report();
+        let p = rep.write_to(&dir).unwrap();
+        assert!(p.ends_with("BENCH_unit_test.json"), "{}", p.display());
+        assert!(std::fs::read_to_string(&p).unwrap().contains("amfma-bench-v1"));
+        rep.write_to(&dir).unwrap();
+        let traj = std::fs::read_to_string(dir.join("BENCH_trajectory.jsonl")).unwrap();
+        assert_eq!(traj.lines().count(), 2, "one line per run");
+        for line in traj.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn esc_handles_control_characters() {
+        assert_eq!(esc("a\tb"), "a\\u0009b");
+        assert_eq!(esc("a\\b\"c"), "a\\\\b\\\"c");
+    }
+}

@@ -1,7 +1,17 @@
 //! Minimal benchmarking harness (criterion is not vendored in this
-//! environment): warmup + timed iterations, robust summary statistics, and
-//! a uniform report format shared by all `cargo bench` targets.
+//! environment): warmup + timed iterations, robust summary statistics, a
+//! uniform report format shared by all `cargo bench` targets, and a
+//! machine-readable serialization ([`json`]) that persists every run as a
+//! `BENCH_<target>.json` snapshot plus an append-only
+//! `BENCH_trajectory.jsonl` line — the repo's perf trajectory.
+//!
+//! Set `AMFMA_BENCH_QUICK=1` for the reduced-iteration mode CI's
+//! perf-smoke step uses: far fewer warmups/iterations and a small time
+//! floor, with every bit-exactness assertion still armed.
 
+pub mod json;
+
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 /// Result of one measured benchmark.
@@ -30,9 +40,31 @@ impl BenchResult {
     }
 }
 
+/// True when `AMFMA_BENCH_QUICK` requests reduced-iteration runs (read
+/// once; any value other than empty or `0` enables it).
+pub fn quick_mode() -> bool {
+    static QUICK: OnceLock<bool> = OnceLock::new();
+    *QUICK.get_or_init(|| {
+        std::env::var("AMFMA_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
 /// Run `f` repeatedly: `warmup` unmeasured runs, then at least `min_iters`
-/// measured runs or until `min_time` has elapsed, whichever is later.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_time: Duration, mut f: F) -> BenchResult {
+/// measured runs or until `min_time` has elapsed, whichever is later.  In
+/// [`quick_mode`] the warmup/iteration/time floors are clamped down so CI's
+/// perf smoke finishes fast while exercising the identical code path.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    min_time: Duration,
+    mut f: F,
+) -> BenchResult {
+    let (warmup, min_iters, min_time) = if quick_mode() {
+        (warmup.min(1), min_iters.min(3), min_time.min(Duration::from_millis(40)))
+    } else {
+        (warmup, min_iters, min_time)
+    };
     for _ in 0..warmup {
         f();
     }
@@ -54,6 +86,23 @@ pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench(name, 2, 5, Duration::from_millis(200), f)
 }
 
+/// Linear-interpolated order statistic over an ascending sample set: the
+/// `q`-quantile sits at rank `q·(n−1)`, and fractional ranks interpolate
+/// between the two neighbouring samples.  The seed's index-truncation
+/// formula degenerated for small `n` (e.g. the p95 of 5 samples collapsed
+/// onto the 4th), which is exactly the reduced-iteration regime CI runs.
+pub fn quantile(sorted: &[Duration], q: f64) -> Duration {
+    assert!(!sorted.is_empty(), "quantile of an empty sample set");
+    let q = q.clamp(0.0, 1.0);
+    let rank = q * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = (lo + 1).min(sorted.len() - 1);
+    let frac = rank - lo as f64;
+    let a = sorted[lo].as_nanos() as f64;
+    let b = sorted[hi].as_nanos() as f64;
+    Duration::from_nanos((a + (b - a) * frac).round() as u64)
+}
+
 fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
     assert!(!samples.is_empty());
     samples.sort_unstable();
@@ -63,8 +112,8 @@ fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
         name: name.to_string(),
         iters: n,
         mean: total / n as u32,
-        median: samples[n / 2],
-        p95: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        median: quantile(&samples, 0.5),
+        p95: quantile(&samples, 0.95),
         min: samples[0],
         throughput: None,
     }
@@ -90,6 +139,10 @@ pub fn section(title: &str) -> String {
 mod tests {
     use super::*;
 
+    fn d(ns: u64) -> Duration {
+        Duration::from_nanos(ns)
+    }
+
     #[test]
     fn bench_measures_and_orders() {
         let r = bench("noop", 1, 5, Duration::from_millis(1), || {
@@ -109,5 +162,47 @@ mod tests {
         assert_eq!(u, "ops/s");
         assert!(v > 100_000.0 && v < 1_000_000.0, "v = {v}");
         assert!(r.render().contains("sleepy"));
+    }
+
+    #[test]
+    fn summary_stats_on_known_samples() {
+        // Shuffled on purpose: summarize must sort before taking order
+        // statistics.
+        let r = summarize("known", vec![d(50), d(10), d(40), d(20), d(30)]);
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.min, d(10));
+        assert_eq!(r.mean, d(30));
+        assert_eq!(r.median, d(30));
+        // p95 rank = 0.95·4 = 3.8 → 40 + 0.8·(50−40) = 48.
+        assert_eq!(r.p95, d(48));
+    }
+
+    #[test]
+    fn median_interpolates_even_sample_counts() {
+        let r = summarize("even", vec![d(10), d(20), d(30), d(40)]);
+        assert_eq!(r.median, d(25));
+        // p95 rank = 0.95·3 = 2.85 → 30 + 0.85·10 = 38.5 → 39 (rounded).
+        assert_eq!(r.p95, d(39));
+    }
+
+    #[test]
+    fn quantile_interpolates_small_samples() {
+        let s = vec![d(100), d(200)];
+        assert_eq!(quantile(&s, 0.0), d(100));
+        assert_eq!(quantile(&s, 0.5), d(150));
+        assert_eq!(quantile(&s, 0.95), d(195));
+        assert_eq!(quantile(&s, 1.0), d(200));
+        assert_eq!(quantile(&[d(40)], 0.95), d(40));
+    }
+
+    #[test]
+    fn p95_stays_within_sample_range() {
+        for n in 1..12u64 {
+            let samples: Vec<Duration> = (1..=n).map(|i| d(i * 10)).collect();
+            let r = summarize("range", samples);
+            assert!(r.median <= r.p95, "n={n}");
+            assert!(r.p95 <= d(n * 10), "n={n}: p95 {:?} above max", r.p95);
+            assert!(r.p95 >= r.min, "n={n}");
+        }
     }
 }

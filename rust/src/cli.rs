@@ -4,6 +4,7 @@
 //! amfma eval  [--limit N] [--batch N] [--modes a,b,c]    Table I
 //! amfma hist  [--task NAME] [--examples N] [--mode M]    Fig 6
 //! amfma cost  [--fig4] [--fig7] [--k K --lambda L]       Fig 4 / Fig 7
+//! amfma bench [--json] [--m M --k K --n N] [--mode M]    hot-path bench
 //! amfma tune  [--task NAME] [--budget P] [--out FILE]    calibrate a policy
 //! amfma serve [--mode M] [--policy FILE] [--varlen]      serving demo
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
@@ -25,6 +26,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("hist") => cmd_hist(&args),
         Some("cost") => cmd_cost(&args),
+        Some("bench") => cmd_bench(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("cycles") => cmd_cycles(&args),
@@ -41,6 +43,9 @@ USAGE:
   amfma eval  [--limit N] [--batch N] [--modes fp32,bf16,...]   reproduce Table I
   amfma hist  [--task sst2] [--examples N]                      reproduce Fig 6
   amfma cost  [--fig4] [--fig7] [--k K --lambda L]              reproduce Fig 4/7
+  amfma bench [--json] [--m M --k K --n N] [--mode bf16an-1-2]  hot-path bench:
+              wide-vs-scalar kernel bit-exactness contract, then timing;
+              --json persists BENCH_hotpath.json + trajectory line
   amfma tune  [--task sst2] [--budget 1.0] [--limit N] [--batch N]
               [--candidates m1,m2] [--tune-head] [--out FILE]   calibrate a
               per-site precision policy within an accuracy budget
@@ -171,6 +176,89 @@ pub fn measured_activities(cfg: ApproxNorm) -> Option<(Activities, Activities)> 
         sx.merge(&t.toggles);
     }
     Some((Activities::from_stats(&sa), Activities::from_stats(&sx)))
+}
+
+/// `amfma bench`: the in-process hot-path benchmark.  Checks the hard
+/// wide-vs-scalar bit-exactness contract on a full GEMM first (a mismatch
+/// is a non-zero exit, which is what CI's perf smoke keys on), then times
+/// both kernels and reports the speedup.  `--json` persists the run via
+/// [`crate::bench_harness::json`] — the same `BENCH_hotpath.json` +
+/// trajectory files the `cargo bench` target writes.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use crate::bench_harness::json::BenchReport;
+    use crate::bench_harness::{bench, section};
+    use crate::systolic::matmul::transpose_to_bf16;
+    use crate::systolic::{GemmKernel, TileScheduler};
+    use std::time::Duration;
+
+    let m = args.get_usize("m", 128);
+    let k = args.get_usize("k", 256);
+    let n = args.get_usize("n", 128);
+    let mode_label = args.get("mode").unwrap_or("bf16an-1-2");
+    let engine_mode = EngineMode::parse(mode_label).context("bad --mode")?;
+    let EngineMode::Bf16(mode) = engine_mode else {
+        bail!("amfma bench drives the bf16 PE kernels; --mode must be bf16 or bf16an-k-l");
+    };
+
+    let mut rng = crate::prng::Prng::new(9);
+    let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let wt = transpose_to_bf16(&w, k, n);
+    let pool = crate::runtime::pool::global();
+
+    let scalar = TileScheduler::with_kernel(GemmKernel::Scalar);
+    let wide = TileScheduler::with_kernel(GemmKernel::Wide);
+    let y_scalar = scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    let y_wide = wide.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    if y_scalar != y_wide {
+        bail!(
+            "wide kernel diverged from the scalar path on a {m}x{k}x{n} {} GEMM — \
+             the bit-exactness contract is broken",
+            engine_mode.label()
+        );
+    }
+    println!(
+        "bit-exact: wide == scalar on {m}x{k}x{n} {} ({} outputs)",
+        engine_mode.label(),
+        y_scalar.len()
+    );
+
+    let mut report = BenchReport::new("hotpath");
+    print!("{}", section("wide vs scalar kernel (pooled tiles)"));
+    let fmas = (m * k * n) as f64;
+    let rs = bench(
+        &format!("gemm/{}/scalar-kernel", engine_mode.label()),
+        1,
+        3,
+        Duration::from_millis(300),
+        || {
+            std::hint::black_box(scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+        },
+    )
+    .with_ops(fmas, "FMA/s");
+    println!("{}", rs.render());
+    report.push(&rs);
+    let rw = bench(
+        &format!("gemm/{}/wide-kernel", engine_mode.label()),
+        1,
+        3,
+        Duration::from_millis(300),
+        || {
+            std::hint::black_box(wide.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+        },
+    )
+    .with_ops(fmas, "FMA/s");
+    println!("{}", rw.render());
+    report.push(&rw);
+    let speedup = rs.mean.as_secs_f64() / rw.mean.as_secs_f64();
+    println!("speedup (wide vs scalar kernel): {speedup:.2}x");
+    report.push_comparison(&format!("wide_vs_scalar_gemm_{}", engine_mode.label()), speedup);
+
+    if args.has_flag("json") {
+        let p = report.write().context("write bench JSON")?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
 }
 
 /// `amfma tune`: calibrate a per-site precision policy for one task within

@@ -18,7 +18,7 @@ use crate::pe::PeStats;
 use crate::runtime::pool;
 
 use super::dataflow;
-use super::scheduler::TileScheduler;
+use super::scheduler::{GemmKernel, TileScheduler};
 
 /// Numeric mode of an engine: the paper's three families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -83,15 +83,33 @@ pub struct MatrixEngine {
     /// runs tiles inline on the calling thread; anything larger dispatches
     /// tiles to the shared worker pool.
     pub threads: usize,
+    /// The bf16 inner kernel (does not affect results — the wide and
+    /// scalar kernels are bit-identical by contract; see
+    /// [`crate::systolic::scheduler::GemmKernel`]).  Defaults to the
+    /// process-wide `AMFMA_KERNEL` selection.
+    pub kernel: GemmKernel,
 }
 
 impl MatrixEngine {
     pub fn new(mode: EngineMode) -> Self {
-        MatrixEngine { mode, pe_rows: 16, pe_cols: 16, threads: default_threads() }
+        MatrixEngine {
+            mode,
+            pe_rows: 16,
+            pe_cols: 16,
+            threads: default_threads(),
+            kernel: GemmKernel::default_from_env(),
+        }
     }
 
     pub fn with_grid(mode: EngineMode, pe_rows: usize, pe_cols: usize) -> Self {
-        MatrixEngine { mode, pe_rows, pe_cols, threads: default_threads() }
+        MatrixEngine { pe_rows, pe_cols, ..MatrixEngine::new(mode) }
+    }
+
+    /// A copy of this engine running a different bf16 inner kernel —
+    /// runtime selection between the scalar seed path and the wide
+    /// lane-parallel path (results are bit-identical either way).
+    pub fn with_kernel(&self, kernel: GemmKernel) -> MatrixEngine {
+        MatrixEngine { kernel, ..self.clone() }
     }
 
     /// A copy of this engine running a different numeric mode (same grid,
@@ -101,16 +119,13 @@ impl MatrixEngine {
     /// the copy is indistinguishable from `self`, which is what makes a
     /// uniform policy bit-identical to the global-mode path.
     pub fn with_mode(&self, mode: EngineMode) -> MatrixEngine {
-        MatrixEngine { mode, pe_rows: self.pe_rows, pe_cols: self.pe_cols, threads: self.threads }
+        MatrixEngine { mode, ..self.clone() }
     }
 
-    /// The tile scheduler matching this engine's parallelism setting.
+    /// The tile scheduler matching this engine's parallelism and kernel
+    /// settings.
     fn scheduler(&self) -> TileScheduler {
-        if self.threads <= 1 {
-            TileScheduler::inline()
-        } else {
-            TileScheduler::default()
-        }
+        TileScheduler { inline_only: self.threads <= 1, kernel: self.kernel, ..Default::default() }
     }
 
     /// `Y = X · W` on f32 tensors (row-major).  Bf16 modes convert inputs
@@ -435,6 +450,33 @@ mod tests {
     fn resident_path_rejects_fp32_engines() {
         let eng = MatrixEngine::new(EngineMode::Fp32);
         let _ = eng.matmul_resident(&[1.0], &[0x3F80], 1, 1, 1);
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_results() {
+        // Engine-level runtime kernel selection: the wide lane-parallel
+        // path and the scalar seed path are bit-identical, per-call and
+        // resident, for every mode family.
+        let mut rng = Prng::new(27);
+        let (m, k, n) = (12, 40, 21); // ragged lane groups included
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_2_2)] {
+            let eng = MatrixEngine::new(EngineMode::Bf16(mode));
+            let scalar = eng.with_kernel(GemmKernel::Scalar);
+            let wide = eng.with_kernel(GemmKernel::Wide);
+            assert_eq!(
+                scalar.matmul(&x, &w, m, k, n),
+                wide.matmul(&x, &w, m, k, n),
+                "mode {mode:?}"
+            );
+            assert_eq!(
+                scalar.matmul_resident(&x, &wt, m, k, n),
+                wide.matmul_resident(&x, &wt, m, k, n),
+                "resident, mode {mode:?}"
+            );
+        }
     }
 
     #[test]

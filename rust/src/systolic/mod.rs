@@ -14,4 +14,4 @@ pub mod scheduler;
 
 pub use array::CycleArray;
 pub use matmul::{matmul_bf16_pre, EngineMode, MatrixEngine};
-pub use scheduler::TileScheduler;
+pub use scheduler::{GemmKernel, TileScheduler};

@@ -11,12 +11,27 @@
 //! Because every output element is an independent chain, the result is
 //! bit-identical for any tiling and any worker count.
 //!
-//! The bf16 tile kernel additionally register-blocks four output columns
-//! per K-sweep: four independent accumulator chains break the serial
-//! dependency on a single `acc` value that stalled the seed's inner loop,
-//! and each activation element is loaded once per four FMAs.  The per-
-//! element operation order within each chain is untouched.
+//! Two bf16 tile kernels implement the same contract, selected at runtime
+//! by [`GemmKernel`]:
+//!
+//! * [`GemmKernel::Scalar`] — the seed path: four output columns
+//!   register-blocked per K-sweep, each an independent scalar
+//!   [`crate::arith::fma`] chain.
+//! * [`GemmKernel::Wide`] — the lane-parallel batched PE kernel
+//!   ([`crate::arith::wide`]): [`wide::LANES`] column chains advanced per
+//!   K-step in struct-of-arrays form with branch-free per-lane
+//!   align/add/normalize, weight columns repacked lane-interleaved once
+//!   per column group.
+//!
+//! Both are **bit-identical** by the hard contract tested in
+//! `rust/tests/property_wide.rs` and asserted on full GEMMs before every
+//! timed section of `benches/bench_hotpath.rs`; the per-element operation
+//! order within each chain is untouched either way.  The process default
+//! is `Wide`, overridable with `AMFMA_KERNEL=scalar|wide`.
 
+use std::sync::OnceLock;
+
+use crate::arith::wide::{self, WideAcc, WideKernel, LANES};
 use crate::arith::{fma, ExtFloat, NormMode};
 use crate::runtime::pool::WorkerPool;
 
@@ -57,6 +72,45 @@ pub fn tiles(m: usize, n: usize, tile_m: usize, tile_n: usize) -> Vec<Tile> {
     out
 }
 
+/// Which bf16 inner kernel a scheduler runs.  Both satisfy the same
+/// bit-exact column-chain contract; the choice only affects speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmKernel {
+    /// Seed path: 4-column register-blocked scalar `fma` chains.
+    Scalar,
+    /// Lane-parallel SoA kernel ([`crate::arith::wide`]).
+    Wide,
+}
+
+impl GemmKernel {
+    pub fn label(self) -> &'static str {
+        match self {
+            GemmKernel::Scalar => "scalar",
+            GemmKernel::Wide => "wide",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GemmKernel> {
+        match s {
+            "scalar" => Some(GemmKernel::Scalar),
+            "wide" => Some(GemmKernel::Wide),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default kernel: `AMFMA_KERNEL=scalar|wide` if set (read
+    /// once), otherwise [`GemmKernel::Wide`].
+    pub fn default_from_env() -> GemmKernel {
+        static DEFAULT: OnceLock<GemmKernel> = OnceLock::new();
+        *DEFAULT.get_or_init(|| {
+            std::env::var("AMFMA_KERNEL")
+                .ok()
+                .and_then(|v| GemmKernel::parse(&v))
+                .unwrap_or(GemmKernel::Wide)
+        })
+    }
+}
+
 /// Raw output pointer smuggled into tile tasks.  Soundness: tiles are
 /// disjoint rectangles of the output, so no two tasks touch the same
 /// element, and the pool's `run` blocks until every task completes.
@@ -71,17 +125,28 @@ pub struct TileScheduler {
     pub tile_n: usize,
     /// Force inline (single-thread) execution regardless of size.
     pub inline_only: bool,
+    /// The bf16 inner kernel (scalar seed path or the wide SoA kernel).
+    pub kernel: GemmKernel,
 }
 
 impl Default for TileScheduler {
     fn default() -> Self {
-        TileScheduler { tile_m: TILE_M, tile_n: TILE_N, inline_only: false }
+        TileScheduler {
+            tile_m: TILE_M,
+            tile_n: TILE_N,
+            inline_only: false,
+            kernel: GemmKernel::default_from_env(),
+        }
     }
 }
 
 impl TileScheduler {
     pub fn inline() -> Self {
         TileScheduler { inline_only: true, ..Default::default() }
+    }
+
+    pub fn with_kernel(kernel: GemmKernel) -> Self {
+        TileScheduler { kernel, ..Default::default() }
     }
 
     fn should_inline(&self, m: usize, k: usize, n: usize, n_tiles: usize) -> bool {
@@ -117,9 +182,10 @@ impl TileScheduler {
             return y;
         }
         let tile_list = tiles(m, n, self.tile_m, self.tile_n);
+        let kernel = self.kernel;
         if self.should_inline(m, k, n, tile_list.len()) {
             for t in &tile_list {
-                bf16_tile_kernel(x, wt, k, n, *t, mode, y.as_mut_ptr());
+                bf16_tile_kernel(x, wt, k, n, *t, mode, kernel, y.as_mut_ptr());
             }
             return y;
         }
@@ -132,7 +198,7 @@ impl TileScheduler {
                     // whole `SendPtr` (Send), not the raw-pointer field
                     // (2021-edition closures capture disjoint fields).
                     let SendPtr(ptr) = out;
-                    bf16_tile_kernel(x, wt, k, n, t, mode, ptr);
+                    bf16_tile_kernel(x, wt, k, n, t, mode, kernel, ptr);
                 }
             })
             .collect();
@@ -180,10 +246,70 @@ impl TileScheduler {
     }
 }
 
-/// Compute one bf16 output tile.  Columns are processed four at a time with
+/// Compute one bf16 output tile with the selected inner kernel.
+#[allow(clippy::too_many_arguments)]
+fn bf16_tile_kernel(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    kernel: GemmKernel,
+    out: *mut u16,
+) {
+    match kernel {
+        GemmKernel::Scalar => bf16_tile_kernel_scalar(x, wt, k, n, t, mode, out),
+        GemmKernel::Wide => bf16_tile_kernel_wide(x, wt, k, n, t, mode, out),
+    }
+}
+
+/// Wide-kernel tile: columns are processed [`LANES`] at a time through the
+/// struct-of-arrays batched PE datapath.  The column group's weights are
+/// repacked lane-interleaved once and reused across every row of the tile;
+/// remainder columns (< LANES) are delegated to the scalar kernel on the
+/// leftover sub-tile (bit-identical by the kernel contract).
+fn bf16_tile_kernel_wide(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    let kern = WideKernel::new(mode);
+    let mut j = t.c0;
+    while j + LANES <= t.c1 {
+        let cols: [&[u16]; LANES] = std::array::from_fn(|l| &wt[(j + l) * k..(j + l + 1) * k]);
+        let packed = wide::pack_lanes(&cols);
+        for r in t.r0..t.r1 {
+            let xrow = &x[r * k..(r + 1) * k];
+            let mut acc = WideAcc::new();
+            for (&xi, bch) in xrow.iter().zip(packed.chunks_exact(LANES)) {
+                let b: &[u16; LANES] = bch.try_into().expect("chunk is LANES wide");
+                kern.step(&mut acc, xi, b);
+            }
+            let ys = acc.round_to_bf16();
+            for (l, &y) in ys.iter().enumerate() {
+                // SAFETY: (r, j..j+LANES) lie inside this task's disjoint tile.
+                unsafe {
+                    *out.add(r * n + j + l) = y;
+                }
+            }
+        }
+        j += LANES;
+    }
+    if j < t.c1 {
+        let rest = Tile { r0: t.r0, r1: t.r1, c0: j, c1: t.c1 };
+        bf16_tile_kernel_scalar(x, wt, k, n, rest, mode, out);
+    }
+}
+
+/// Scalar (seed) tile kernel.  Columns are processed four at a time with
 /// independent accumulator chains (ILP over the otherwise serial software
 /// FMA), falling back to single columns for the remainder.
-fn bf16_tile_kernel(
+fn bf16_tile_kernel_scalar(
     x: &[u16],
     wt: &[u16],
     k: usize,
@@ -278,32 +404,69 @@ mod tests {
     }
 
     #[test]
-    fn bf16_matches_column_dot_all_modes_and_shapes() {
+    fn bf16_matches_column_dot_all_modes_shapes_and_kernels() {
         let mut rng = Prng::new(51);
-        let sched = TileScheduler { tile_m: 4, tile_n: 3, inline_only: false };
-        for (m, k, n) in [(1usize, 1usize, 1usize), (5, 33, 7), (13, 16, 13), (3, 64, 9)] {
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+            let sched = TileScheduler { tile_m: 4, tile_n: 3, inline_only: false, kernel };
+            for (m, k, n) in [(1usize, 1usize, 1usize), (5, 33, 7), (13, 16, 13), (3, 64, 9)] {
+                let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+                let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+                let wt = transpose_to_bf16(&w, k, n);
+                for mode in [
+                    NormMode::Accurate,
+                    NormMode::Approx(ApproxNorm::AN_1_2),
+                    NormMode::Approx(ApproxNorm::AN_2_2),
+                ] {
+                    let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                    for r in 0..m {
+                        for j in 0..n {
+                            let a: Vec<u16> = (0..k).map(|i| x[r * k + i]).collect();
+                            let b: Vec<u16> = (0..k).map(|i| f32_to_bf16(w[i * n + j])).collect();
+                            assert_eq!(
+                                y[r * n + j],
+                                column_dot(&a, &b, mode),
+                                "({m},{k},{n}) r={r} j={j} mode={mode:?} kernel={kernel:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_and_scalar_kernels_bit_identical_on_full_gemms() {
+        // The hard contract behind the runtime kernel selection: both
+        // kernels produce the same bits on whole GEMMs, for every mode,
+        // with lane groups both full and ragged (n % LANES != 0).
+        let mut rng = Prng::new(56);
+        for (m, k, n) in [(7usize, 40usize, 16usize), (9, 33, 11), (4, 96, 29), (16, 24, 8)] {
             let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
             let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
             let wt = transpose_to_bf16(&w, k, n);
             for mode in [
                 NormMode::Accurate,
+                NormMode::Approx(ApproxNorm::AN_1_1),
                 NormMode::Approx(ApproxNorm::AN_1_2),
                 NormMode::Approx(ApproxNorm::AN_2_2),
             ] {
-                let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-                for r in 0..m {
-                    for j in 0..n {
-                        let a: Vec<u16> = (0..k).map(|i| x[r * k + i]).collect();
-                        let b: Vec<u16> = (0..k).map(|i| f32_to_bf16(w[i * n + j])).collect();
-                        assert_eq!(
-                            y[r * n + j],
-                            column_dot(&a, &b, mode),
-                            "({m},{k},{n}) r={r} j={j} mode={mode:?}"
-                        );
-                    }
-                }
+                let ys = TileScheduler { kernel: GemmKernel::Scalar, ..Default::default() }
+                    .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                let yw = TileScheduler { kernel: GemmKernel::Wide, ..Default::default() }
+                    .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                assert_eq!(ys, yw, "({m},{k},{n}) mode {mode:?}");
             }
         }
+    }
+
+    #[test]
+    fn kernel_labels_round_trip_and_env_default_is_stable() {
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+            assert_eq!(GemmKernel::parse(kernel.label()), Some(kernel));
+        }
+        assert_eq!(GemmKernel::parse("simd"), None);
+        // Read twice: the OnceLock must hand back the same choice.
+        assert_eq!(GemmKernel::default_from_env(), GemmKernel::default_from_env());
     }
 
     #[test]
@@ -314,10 +477,13 @@ mod tests {
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
         let wt = transpose_to_bf16(&w, k, n);
         let mode = NormMode::Approx(ApproxNorm::AN_1_2);
-        let par = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false }
-            .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-        let inl = TileScheduler::inline().gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-        assert_eq!(par, inl);
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+            let par = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false, kernel }
+                .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            let inl = TileScheduler { inline_only: true, kernel, ..Default::default() }
+                .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            assert_eq!(par, inl, "kernel {kernel:?}");
+        }
     }
 
     #[test]
@@ -330,12 +496,14 @@ mod tests {
         let mode = NormMode::Accurate;
         let mut last: Option<Vec<u16>> = None;
         for (tm, tn) in [(1, 1), (3, 5), (7, 4), (64, 64)] {
-            let sched = TileScheduler { tile_m: tm, tile_n: tn, inline_only: false };
-            let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-            if let Some(prev) = &last {
-                assert_eq!(prev, &y, "tiling {tm}x{tn} changed bits");
+            for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+                let sched = TileScheduler { tile_m: tm, tile_n: tn, inline_only: false, kernel };
+                let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                if let Some(prev) = &last {
+                    assert_eq!(prev, &y, "tiling {tm}x{tn} kernel {kernel:?} changed bits");
+                }
+                last = Some(y);
             }
-            last = Some(y);
         }
     }
 
@@ -345,7 +513,7 @@ mod tests {
         let (m, k, n) = (19, 31, 23);
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let sched = TileScheduler { tile_m: 4, tile_n: 4, inline_only: false };
+        let sched = TileScheduler { tile_m: 4, tile_n: 4, ..Default::default() };
         let y = sched.gemm_f32(pool::global(), &x, &w, m, k, n);
         let want = matmul_f32(&x, &w, m, k, n, 1);
         assert_eq!(y, want);
@@ -369,7 +537,7 @@ mod tests {
             .map(|_| {
                 let (x, wt, results) = (&x, &wt, &results);
                 move || {
-                    let sched = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false };
+                    let sched = TileScheduler { tile_m: 8, tile_n: 8, ..Default::default() };
                     let y = sched.gemm_bf16(pool::global(), x, wt, m, k, n, mode);
                     results.lock().unwrap().push(y);
                 }

@@ -9,8 +9,9 @@
 
 use amfma::arith::{bf16_to_f32, f32_to_bf16, ApproxNorm, NormMode};
 use amfma::prng::Prng;
+use amfma::runtime::pool;
 use amfma::systolic::matmul::transpose_to_bf16;
-use amfma::systolic::{CycleArray, EngineMode, MatrixEngine};
+use amfma::systolic::{CycleArray, EngineMode, GemmKernel, MatrixEngine, TileScheduler};
 
 const MODES: [NormMode; 4] = [
     NormMode::Accurate,
@@ -92,6 +93,38 @@ fn resident_plane_path_matches_cycle_array() {
         let (y_bits, _) = arr.stream(&xb, m);
         let y_cycle: Vec<f32> = y_bits.iter().map(|&b| bf16_to_f32(b)).collect();
         assert_eq!(y_resident, y_cycle, "mode {mode:?}");
+    }
+}
+
+/// The lane-parallel wide kernel must stay anchored to the
+/// hardware-faithful model too: a wide-kernel GEMM over random tiles must
+/// reproduce, bit for bit, the outputs streamed through the cycle-accurate
+/// register-level array — for every normalization mode and for tile widths
+/// both divisible and not divisible by the lane count (ragged remainder
+/// columns take the scalar path inside the wide kernel).
+#[test]
+fn wide_kernel_gemm_matches_cycle_accurate_array() {
+    let mut rng = Prng::new(2024);
+    for mode in MODES {
+        for rep in 0..2 {
+            let m = 1 + rng.below(10) as usize;
+            let k = 1 + rng.below(24) as usize;
+            // rep 0 forces a lane-multiple width, rep 1 a ragged one.
+            let n = if rep == 0 { 16 } else { 1 + rng.below(24) as usize };
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+
+            let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+            let wt = transpose_to_bf16(&w, k, n);
+            let sched = TileScheduler { kernel: GemmKernel::Wide, ..Default::default() };
+            let y_wide = sched.gemm_bf16(pool::global(), &xb, &wt, m, k, n, mode);
+
+            let wb: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+            let mut arr = CycleArray::new(k, n, mode, false);
+            arr.load_weights(&wb);
+            let (y_bits, _) = arr.stream(&xb, m);
+            assert_eq!(y_wide, y_bits, "{m}x{k}x{n} mode {mode:?}");
+        }
     }
 }
 

@@ -1,0 +1,270 @@
+//! Differential property harness: the lane-parallel batched PE kernel
+//! (`arith::wide`) against the scalar `arith::fma` chain, lane by lane and
+//! step by step.
+//!
+//! The wide kernel's *only* correctness claim is bit-identity with the
+//! scalar datapath, so every test here drives both sides with the same
+//! operands and requires equal `ExtFloat` accumulator state after every
+//! K-step and equal bf16 bits after the south-edge rounding.  Covered, per
+//! the engine-mode families of Table I (`fp32` is skipped — FP32 engines
+//! bypass the PE datapath entirely): `bf16` (accurate normalization),
+//! `bf16an-1-1`, `bf16an-1-2` and `bf16an-2-2`, plus the full (k, λ)
+//! Pareto grid of the design-space sweep for single steps.
+
+use amfma::arith::wide::{WideAcc, WideKernel, LANES};
+use amfma::arith::{column_dot, fma, ApproxNorm, ExtFloat, Kind, NormMode};
+use amfma::prng::Prng;
+
+const MODES: [NormMode; 4] = [
+    NormMode::Accurate, // the bf16 baseline
+    NormMode::Approx(ApproxNorm::AN_1_1),
+    NormMode::Approx(ApproxNorm::AN_1_2),
+    NormMode::Approx(ApproxNorm::AN_2_2),
+];
+
+/// Drive one chain through both datapaths, asserting lane equality after
+/// every step and rounded equality at the end.
+fn check_chain(x: &[u16], cols: &[Vec<u16>; LANES], mode: NormMode) {
+    let kern = WideKernel::new(mode);
+    let mut acc = WideAcc::new();
+    let mut scalar = [ExtFloat::ZERO; LANES];
+    for (i, &xi) in x.iter().enumerate() {
+        let b: [u16; LANES] = std::array::from_fn(|l| cols[l][i]);
+        kern.step(&mut acc, xi, &b);
+        for (l, s) in scalar.iter_mut().enumerate() {
+            *s = fma(xi, b[l], *s, mode);
+            assert_eq!(
+                acc.lane(l),
+                *s,
+                "step {i} lane {l} mode {mode:?} a={xi:04x} b={:04x}",
+                b[l]
+            );
+        }
+    }
+    let rounded = acc.round_to_bf16();
+    for (l, s) in scalar.iter().enumerate() {
+        assert_eq!(rounded[l], s.round_to_bf16(), "rounded lane {l} mode {mode:?}");
+        assert_eq!(rounded[l], column_dot(x, &cols[l], mode), "column_dot lane {l}");
+    }
+}
+
+fn random_cols<F>(rng: &mut Prng, k: usize, mut make: F) -> [Vec<u16>; LANES]
+where
+    F: FnMut(&mut Prng) -> u16,
+{
+    std::array::from_fn(|_| (0..k).map(|_| make(rng)).collect())
+}
+
+#[test]
+fn random_k_chains_all_modes() {
+    let mut rng = Prng::new(7001);
+    for rep in 0..48 {
+        let k = 1 + rng.below(96) as usize;
+        let x: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+        let cols = random_cols(&mut rng, k, |r| r.bf16_activation());
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn full_finite_exponent_range_chains() {
+    // Fully random finite patterns: wide exponent spreads exercise the
+    // 31-position alignment clamp, FTZ underflow and Inf saturation.
+    let mut rng = Prng::new(7002);
+    for rep in 0..32 {
+        let k = 1 + rng.below(48) as usize;
+        let x: Vec<u16> = (0..k).map(|_| rng.bf16_any_finite()).collect();
+        let cols = random_cols(&mut rng, k, |r| r.bf16_any_finite());
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn subnormal_adjacent_exponents() {
+    // Exponent fields 0..=2: exact zeros, FTZ'd subnormal patterns
+    // (exp 0, mantissa != 0) and the smallest normal binades, where the
+    // underflow/flush paths and the zero-sign rules live.
+    let mut rng = Prng::new(7003);
+    let tiny = |r: &mut Prng| {
+        let sign = (r.below(2) as u16) << 15;
+        let exp = (r.below(3) as u16) << 7;
+        let man = (r.below(128)) as u16;
+        sign | exp | man
+    };
+    for rep in 0..32 {
+        let k = 1 + rng.below(40) as usize;
+        // Mix tiny operands with activation-scale ones so products fall in
+        // and out of the representable range mid-chain.
+        let x: Vec<u16> = (0..k)
+            .map(|_| if rng.below(3) == 0 { rng.bf16_activation() } else { tiny(&mut rng) })
+            .collect();
+        let cols = random_cols(&mut rng, k, |r| {
+            if r.below(3) == 0 {
+                r.bf16_activation()
+            } else {
+                let sign = (r.below(2) as u16) << 15;
+                let exp = (r.below(3) as u16) << 7;
+                sign | exp | (r.below(128)) as u16
+            }
+        });
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn deep_cancellation_chains() {
+    // Adjacent (+p, −p) product pairs force exact cancellation back to
+    // zero mid-chain; near-miss pairs (low mantissa bit flipped) force the
+    // deep left-normalization shifts the approximate schemes truncate.
+    let mut rng = Prng::new(7004);
+    for rep in 0..32 {
+        let pairs = 1 + rng.below(16) as usize;
+        let k = pairs * 2;
+        let mut x = Vec::with_capacity(k);
+        let mut cols: [Vec<u16>; LANES] = std::array::from_fn(|_| Vec::with_capacity(k));
+        for _ in 0..pairs {
+            let a = rng.bf16_activation();
+            x.push(a);
+            x.push(a);
+            for col in cols.iter_mut() {
+                let b = rng.bf16_activation();
+                let twin = if rng.below(2) == 0 {
+                    b ^ 0x8000 // exact cancellation
+                } else {
+                    (b ^ 0x8000) ^ 0x0001 // off by one ulp: deep shift
+                };
+                col.push(b);
+                col.push(twin);
+            }
+        }
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn all_negative_chains() {
+    let mut rng = Prng::new(7005);
+    for rep in 0..24 {
+        let k = 1 + rng.below(48) as usize;
+        // Both operands negative: positive products, monotone growth.
+        let x: Vec<u16> = (0..k).map(|_| rng.bf16_activation() | 0x8000).collect();
+        let cols = random_cols(&mut rng, k, |r| r.bf16_activation() | 0x8000);
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+        // Negative activations against positive weights: all-negative
+        // products, monotone decay.
+        let cols_pos = random_cols(&mut rng, k, |r| r.bf16_activation() & 0x7FFF);
+        check_chain(&x, &cols_pos, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn nan_inf_propagation() {
+    // Inf/NaN injected into activations and weights at random positions:
+    // the wide kernel's frozen-lane handling must match scalar
+    // propagation (inf absorbing, inf×0 and inf−inf producing NaN, NaN
+    // absorbing) — including lanes that stay finite throughout.
+    const SPECIALS: [u16; 5] = [0x7F80, 0xFF80, 0x7FC0, 0x7FFF, 0xFFC1];
+    let mut rng = Prng::new(7006);
+    for rep in 0..32 {
+        let k = 2 + rng.below(24) as usize;
+        let x: Vec<u16> = (0..k)
+            .map(|_| {
+                if rng.below(8) == 0 {
+                    SPECIALS[rng.below(SPECIALS.len() as u64) as usize]
+                } else if rng.below(8) == 0 {
+                    0 // zeros meet infinities: inf × 0 → NaN
+                } else {
+                    rng.bf16_activation()
+                }
+            })
+            .collect();
+        let cols = random_cols(&mut rng, k, |r| {
+            if r.below(6) == 0 {
+                SPECIALS[r.below(SPECIALS.len() as u64) as usize]
+            } else {
+                r.bf16_activation()
+            }
+        });
+        check_chain(&x, &cols, MODES[rep % MODES.len()]);
+    }
+}
+
+#[test]
+fn saturation_to_inf_inside_the_fast_path() {
+    // No special operands at all — the overflow must come from the
+    // datapath itself (e_out ≥ 255) and freeze the lane exactly where the
+    // scalar chain saturates.
+    let big = amfma::arith::f32_to_bf16(2.5e38);
+    let x = vec![big; 6];
+    let cols: [Vec<u16>; LANES] = std::array::from_fn(|l| {
+        let mut c = vec![big; 6];
+        if l % 2 == 1 {
+            // odd lanes alternate signs: inf + (−inf) → NaN via scalar path
+            for (i, v) in c.iter_mut().enumerate() {
+                if i % 2 == 1 {
+                    *v |= 0x8000;
+                }
+            }
+        }
+        c
+    });
+    for mode in MODES {
+        check_chain(&x, &cols, mode);
+    }
+}
+
+#[test]
+fn exhaustive_small_exponent_single_step_across_pareto_grid() {
+    // Every (k, λ) in the design-space Pareto grid (1..=3 × 1..=3, the
+    // sweep behind `autotune::report::design_space_report`) plus the
+    // accurate baseline, single FMA step, operands concentrated at the
+    // subnormal boundary and partial sums spanning zero / deeply
+    // un-normalized / boundary magnitudes — exhaustive over the cross
+    // product.
+    let mut modes = vec![NormMode::Accurate];
+    for k in 1..=3 {
+        for l in 1..=3 {
+            modes.push(NormMode::Approx(ApproxNorm::new(k, l)));
+        }
+    }
+    let mans = [0x00u16, 0x01, 0x55, 0x7F];
+    let exps = [0u16, 1, 2, 3, 127, 128];
+    let mut abs: Vec<u16> = Vec::new();
+    for sign in [0u16, 1] {
+        for &exp in &exps {
+            for &man in &mans {
+                abs.push((sign << 15) | (exp << 7) | man);
+            }
+        }
+    }
+    let mut cs: Vec<ExtFloat> = vec![ExtFloat::ZERO, ExtFloat::zero(true)];
+    for sign in [false, true] {
+        for exp in [1, 2, 3, 4, 253, 254] {
+            for mag in [0x0001u16, 0x0400, 0x8000, 0xFFFF] {
+                cs.push(ExtFloat { kind: Kind::Finite, sign, exp, mag });
+            }
+        }
+    }
+    while cs.len() % LANES != 0 {
+        cs.push(ExtFloat::ZERO);
+    }
+    for mode in modes {
+        let kern = WideKernel::new(mode);
+        for &a in &abs {
+            for &b in &abs {
+                for group in cs.chunks_exact(LANES) {
+                    let lanes: &[ExtFloat; LANES] = group.try_into().unwrap();
+                    let mut acc = WideAcc::from_lanes(lanes);
+                    kern.step(&mut acc, a, &[b; LANES]);
+                    for (l, &c) in group.iter().enumerate() {
+                        assert_eq!(
+                            acc.lane(l),
+                            fma(a, b, c, mode),
+                            "a={a:04x} b={b:04x} c={c:?} mode={mode:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
