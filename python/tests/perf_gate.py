@@ -1,0 +1,174 @@
+"""Perf-trajectory regression gate over ``BENCH_trajectory.jsonl``.
+
+CI restores the previous runs' trajectory from the actions cache, appends
+this run's ``BENCH_hotpath.json`` and ``BENCH_serving.json`` snapshot
+lines (each snapshot *is* a trajectory line), then runs this gate: for
+every quick-mode result series ``(target, result name)`` it compares the
+newest interpolated median against the previous run's and **fails when
+median throughput regresses beyond a generous tolerance** (default: fail
+only when throughput drops below 40% of the previous run — CI runners are
+noisy; this catches step-function regressions, not jitter).
+
+A series seen for the first time (seeding the empty trajectory) passes
+trivially.  Non-quick entries are recorded but never gated: full local
+runs and reduced-iteration CI runs are not comparable.
+
+Runs two ways:
+
+* standalone, dependency-free, as CI's perf-gate job does::
+
+      python python/tests/perf_gate.py .perf-cache/BENCH_trajectory.jsonl --tolerance 0.4
+
+* under pytest, where the synthetic self-tests below keep the gate logic
+  honest.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def load_trajectory(path):
+    """Parse a .jsonl trajectory into a list of run documents."""
+    docs = []
+    for i, line in enumerate(Path(path).read_text().splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            docs.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            raise AssertionError(f"{path}:{i}: not valid JSON: {e}") from e
+    return docs
+
+
+def quick_series(docs):
+    """(target, result-name) -> ordered list of median_ns, quick runs only."""
+    series = {}
+    for doc in docs:
+        if not isinstance(doc, dict) or not doc.get("quick"):
+            continue
+        for r in doc.get("results", []):
+            median = r.get("median_ns")
+            if isinstance(median, int) and median > 0:
+                series.setdefault((doc.get("target"), r.get("name")), []).append(median)
+    return series
+
+
+def gate(docs, tolerance):
+    """Compare each quick series' newest median vs the previous run's.
+
+    Returns (checked, failures): ``checked`` lists every comparison as
+    ``(key, prev_ns, new_ns, throughput_ratio)``; ``failures`` is the
+    subset whose throughput ratio (prev_median / new_median, i.e. >1 is a
+    speedup) fell below ``tolerance``.
+    """
+    checked, failures = [], []
+    for key, medians in sorted(quick_series(docs).items()):
+        if len(medians) < 2:
+            continue  # first sighting: seeds the trajectory
+        prev, new = medians[-2], medians[-1]
+        ratio = prev / new
+        entry = (key, prev, new, ratio)
+        checked.append(entry)
+        if ratio < tolerance:
+            failures.append(entry)
+    return checked, failures
+
+
+# --- synthetic self-tests (pytest) ---------------------------------------
+
+
+def _doc(target, name, median_ns, quick=True):
+    return {
+        "schema": "amfma-bench-v1",
+        "target": target,
+        "git_rev": "deadbeef0000",
+        "unix_time": 1_700_000_000,
+        "quick": quick,
+        "results": [
+            {
+                "name": name,
+                "iters": 3,
+                "mean_ns": median_ns,
+                "median_ns": median_ns,
+                "p95_ns": median_ns + 1,
+                "min_ns": median_ns - 1,
+                "throughput": None,
+            }
+        ],
+        "metrics": [],
+        "comparisons": [],
+    }
+
+
+def test_first_sighting_seeds_without_gating():
+    checked, failures = gate([_doc("hotpath", "gemm", 100)], 0.4)
+    assert checked == [] and failures == []
+
+
+def test_jitter_within_tolerance_passes():
+    docs = [_doc("hotpath", "gemm", 100), _doc("hotpath", "gemm", 180)]
+    checked, failures = gate(docs, 0.4)  # 1.8x slower = 0.55 ratio: allowed
+    assert len(checked) == 1 and failures == []
+
+
+def test_step_regression_fails():
+    docs = [_doc("serving", "e2e", 100), _doc("serving", "e2e", 400)]
+    _, failures = gate(docs, 0.4)  # 4x slower = 0.25 ratio: gated
+    assert len(failures) == 1
+    (key, prev, new, ratio) = failures[0]
+    assert key == ("serving", "e2e") and prev == 100 and new == 400
+    assert abs(ratio - 0.25) < 1e-12
+
+
+def test_speedups_and_recovery_pass():
+    docs = [
+        _doc("hotpath", "gemm", 400),
+        _doc("hotpath", "gemm", 100),  # speedup
+        _doc("hotpath", "gemm", 110),  # newest vs previous, not vs oldest
+    ]
+    _, failures = gate(docs, 0.4)
+    assert failures == []
+
+
+def test_non_quick_entries_are_not_gated():
+    docs = [_doc("hotpath", "gemm", 100, quick=False), _doc("hotpath", "gemm", 900, quick=False)]
+    checked, failures = gate(docs, 0.4)
+    assert checked == [] and failures == []
+
+
+def test_series_are_independent():
+    docs = [
+        _doc("hotpath", "a", 100),
+        _doc("serving", "b", 100),
+        _doc("hotpath", "a", 105),
+        _doc("serving", "b", 1000),
+    ]
+    _, failures = gate(docs, 0.4)
+    assert [f[0] for f in failures] == [("serving", "b")]
+
+
+def main(argv):
+    if len(argv) < 2:
+        sys.exit("usage: perf_gate.py <BENCH_trajectory.jsonl> [--tolerance 0.4]")
+    path = argv[1]
+    tolerance = 0.4
+    if "--tolerance" in argv:
+        tolerance = float(argv[argv.index("--tolerance") + 1])
+    docs = load_trajectory(path)
+    checked, failures = gate(docs, tolerance)
+    print(f"perf gate over {path}: {len(docs)} runs, {len(checked)} series compared")
+    for (target, name), prev, new, ratio in checked:
+        verdict = "FAIL" if ratio < tolerance else "ok"
+        print(
+            f"  [{verdict}] {target}/{name}: median {prev}ns -> {new}ns "
+            f"(throughput x{ratio:.2f}, tolerance x{tolerance:.2f})"
+        )
+    if failures:
+        sys.exit(f"perf gate: {len(failures)} series regressed beyond tolerance {tolerance}")
+    print("perf gate: no regressions beyond tolerance" if checked else "perf gate: seeded")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

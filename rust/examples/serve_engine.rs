@@ -13,7 +13,9 @@
 //! `--fixed` restores full-length traffic), routes the bulk of the traffic
 //! to the cheap lane, and the shutdown report contrasts latency,
 //! throughput, batch shapes, padding efficiency, per-mode served-token
-//! counters and agreement of predictions across lanes.
+//! counters and agreement of predictions across lanes.  The finale puts
+//! the same router on the wire: an `AMFN` TCP frontend answers a remote
+//! client bit-identically to the in-process route.
 //!
 //! Run: `cargo run --release --example serve_engine -- [--requests 512]`
 
@@ -23,6 +25,7 @@ use std::time::Instant;
 
 use amfma::autotune::{PrecisionPolicy, Site};
 use amfma::config::Args;
+use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
 use amfma::coordinator::{InferenceServer, Lane, Replica, Router, ServerConfig};
 use amfma::data::tasks::GLUE_TASKS;
 use amfma::model::{eval::weights_path, ModelConfig, Weights};
@@ -98,11 +101,11 @@ fn main() {
         models.clone(),
         ServerConfig { mode: mode_ref, ..Default::default() },
     );
-    let router = Router::new(vec![
+    let router = Arc::new(Router::new(vec![
         Replica::with_max_len(mode_eff, short_cap, srv_short.handle()),
         Replica::new(mode_eff, srv_eff.handle()),
         Replica::new(mode_ref, srv_ref.handle()),
-    ]);
+    ]));
     println!("lanes: {:?}", router.lanes().iter().map(|l| l.label()).collect::<Vec<_>>());
 
     let t0 = Instant::now();
@@ -165,6 +168,30 @@ fn main() {
             100.0 * a as f64 / t as f64
         );
     }
+
+    // --- the same router on the wire: AMFN TCP frontend -----------------
+    // A remote client sees bit-identical replies to the in-process route:
+    // network requests feed the same batcher through the same `Request`
+    // channel, only the reply sink differs.
+    let net = NetServer::bind("127.0.0.1:0", router.clone(), NetServerConfig::default())
+        .expect("bind TCP frontend");
+    let mut client = Client::connect(net.local_addr()).expect("connect TCP client");
+    let task0 = &tasks[0];
+    let toks = task0.dev_example(0).to_vec();
+    let wire = client
+        .call(&task0.name, LaneSelector::Accurate, &toks)
+        .expect("call over TCP");
+    let (wire_logits, _server_latency) = wire.outcome.expect("served over TCP");
+    let local = router
+        .route_lane_blocking(&task0.name, toks, Some(Lane::Accurate))
+        .expect("in-process route");
+    assert_eq!(wire_logits, local.logits, "TCP reply must be bit-identical to in-process");
+    println!(
+        "TCP frontend at {}: wire reply bit-identical to the in-process route",
+        net.local_addr()
+    );
+    net.shutdown();
+
     srv_short.shutdown();
     srv_eff.shutdown();
     srv_ref.shutdown();

@@ -103,6 +103,14 @@ pub fn quantile(sorted: &[Duration], q: f64) -> Duration {
     Duration::from_nanos((a + (b - a) * frac).round() as u64)
 }
 
+/// Summarize externally collected samples (e.g. the per-request latencies
+/// a load generator measured) with the same interpolated order statistics
+/// as [`bench`] — so serving latency and kernel timings share one report
+/// format.
+pub fn summarize_samples(name: &str, samples: Vec<Duration>) -> BenchResult {
+    summarize(name, samples)
+}
+
 fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
     assert!(!samples.is_empty());
     samples.sort_unstable();

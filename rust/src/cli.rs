@@ -7,6 +7,8 @@
 //! amfma bench [--json] [--m M --k K --n N] [--mode M]    hot-path bench
 //! amfma tune  [--task NAME] [--budget P] [--out FILE]    calibrate a policy
 //! amfma serve [--mode M] [--policy FILE] [--varlen]      serving demo
+//! amfma serve --listen ADDR [--port-file F]              TCP frontend (AMFN)
+//! amfma loadgen --addr HOST:PORT [--quick] [--json]      TCP load generator
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
 //! amfma info                                             artifact status
 //! ```
@@ -29,6 +31,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("cycles") => cmd_cycles(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -51,6 +54,12 @@ USAGE:
               per-site precision policy within an accuracy budget
   amfma serve [--mode bf16an-1-2] [--policy FILE] [--requests N]
               [--concurrency C] [--varlen] [--length-bucket W]  batching server
+  amfma serve --listen 127.0.0.1:0 [--port-file F] ...          TCP frontend:
+              serves AMFN frames until a client sends a shutdown frame
+  amfma loadgen --addr HOST:PORT [--connections 4] [--requests N]
+              [--pipeline 4] [--lane any|cheap|accurate] [--varlen]
+              [--quick] [--json] [--shutdown]                   closed-loop TCP
+              load generator; --json writes BENCH_serving.json + trajectory
   amfma cycles --m M --k K --n N [--grid 16]
   amfma info";
 
@@ -371,6 +380,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if p.task.is_empty() { "all tasks" } else { p.task.as_str() }
         );
     }
+    // --listen ADDR: instead of generating load in-process, expose the
+    // server over the AMFN TCP frontend and serve remote clients until one
+    // of them sends a shutdown frame (`amfma loadgen --shutdown`).
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return serve_listen(args, &listen, mode, models, policies, max_batch, length_bucket);
+    }
     println!(
         "serving {} tasks with mode {} ({} requests, concurrency {})",
         models.len(),
@@ -412,6 +428,156 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wall.as_secs_f64()
     );
     Ok(())
+}
+
+/// The `serve --listen` path: one replica behind a router (advertised in
+/// the cheap lane when a precision policy is deployed), wrapped in the
+/// `AMFN` TCP frontend.  Runs until a client requests a drain with a
+/// shutdown frame, then shuts the net frontend down first (in-flight
+/// replies flush to their sockets) and the engine second, and verifies the
+/// `submitted == completed + rejected + errored` balance before exiting.
+fn serve_listen(
+    args: &Args,
+    listen: &str,
+    mode: EngineMode,
+    models: std::collections::HashMap<String, std::sync::Arc<Weights>>,
+    policies: std::collections::HashMap<String, std::sync::Arc<PrecisionPolicy>>,
+    max_batch: usize,
+    length_bucket: usize,
+) -> Result<()> {
+    use crate::coordinator::net::{NetServer, NetServerConfig};
+    use crate::coordinator::{InferenceServer, Lane, Replica, Router, ServerConfig};
+
+    let n_tasks = models.len();
+    let has_policy = !policies.is_empty();
+    let srv = InferenceServer::start(
+        models,
+        ServerConfig { mode, max_batch, length_bucket, policies, ..Default::default() },
+    );
+    let mut replica = Replica::new(mode, srv.handle());
+    if has_policy {
+        // A policy deployment is a cheap-lane offering even when its
+        // default mode is accurate (mirrors `Replica::with_lane` docs).
+        replica = replica.with_lane(Lane::Cheap);
+    }
+    let router = std::sync::Arc::new(Router::new(vec![replica]));
+    let net = NetServer::bind(listen, router, NetServerConfig::default())
+        .with_context(|| format!("bind {listen}"))?;
+    let addr = net.local_addr();
+    println!("listening on {addr} ({n_tasks} tasks, mode {})", mode.label());
+    if let Some(pf) = args.get("port-file") {
+        // Scripting hook: CI binds port 0 and reads the real address here.
+        std::fs::write(pf, format!("{addr}\n")).with_context(|| format!("write {pf}"))?;
+    }
+    while !net.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("shutdown frame received — draining");
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    println!("{}", m.render());
+    if !m.balanced() {
+        bail!("metrics IMBALANCED after drain: {m:?}");
+    }
+    println!(
+        "metrics balanced: submitted={} == completed={} + rejected={} + errored={}",
+        m.submitted, m.completed, m.rejected, m.errored
+    );
+    Ok(())
+}
+
+/// `amfma loadgen`: closed-loop load generator against a live
+/// `amfma serve --listen` frontend.  Samples requests from the same task
+/// artifacts the server deploys (so token ids stay in-vocab), keeps a
+/// pipelined window per connection, retries `Busy` backpressure, measures
+/// per-request latency through the shared bench harness, and exits
+/// non-zero unless every request was answered or explicitly rejected.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use crate::coordinator::net::loadgen::{self, LoadgenConfig};
+    use crate::coordinator::net::{Client, LaneSelector};
+
+    let quick = args.has_flag("quick");
+    if quick && std::env::var_os("AMFMA_BENCH_QUICK").is_none() {
+        // Mark the bench report as a quick run so the CI perf gate
+        // compares like with like (read once, before any bench call).
+        std::env::set_var("AMFMA_BENCH_QUICK", "1");
+    }
+    let Some(addr) = args.get("addr") else {
+        bail!("loadgen needs --addr HOST:PORT (the address `amfma serve --listen` printed)");
+    };
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        connections: args.get_usize("connections", 4),
+        requests: args.get_usize("requests", if quick { 64 } else { 256 }),
+        pipeline: args.get_usize("pipeline", 4),
+        lane: LaneSelector::parse(args.get("lane").unwrap_or("any"))
+            .context("bad --lane (any|cheap|accurate)")?,
+        varlen: args.has_flag("varlen"),
+        seed: args.get_usize("seed", 42) as u64,
+        ..Default::default()
+    };
+    let pool = load_request_pool(args.get_usize("pool", 32))?;
+    println!(
+        "loadgen: {} requests over {} connections (pipeline {}, {} pool entries) -> {}",
+        cfg.requests,
+        cfg.connections,
+        cfg.pipeline,
+        pool.len(),
+        cfg.addr
+    );
+    let outcome = loadgen::run(&pool, &cfg).map_err(crate::error::Error::msg)?;
+    println!("{}", outcome.latency.render());
+    println!(
+        "throughput: {:.1} seq/s over {:.2}s (completed={} rejected={} busy_retries={})",
+        outcome.throughput(),
+        outcome.wall.as_secs_f64(),
+        outcome.completed,
+        outcome.rejected,
+        outcome.busy_retries
+    );
+    if outcome.completed + outcome.rejected != cfg.requests as u64 {
+        bail!(
+            "lost replies: answered {} of {} requests",
+            outcome.completed + outcome.rejected,
+            cfg.requests
+        );
+    }
+    println!("lost replies: 0 (every request answered or explicitly rejected)");
+    if args.has_flag("json") {
+        let rep = loadgen::report(&outcome, &cfg);
+        let p = rep.write().context("write bench JSON")?;
+        println!("wrote {}", p.display());
+    }
+    if args.has_flag("shutdown") {
+        let mut c = Client::connect(addr).context("connect for shutdown")?;
+        c.send_shutdown().context("send shutdown frame")?;
+        let ack = c.recv_reply().map_err(crate::error::Error::msg)?;
+        match ack.outcome {
+            Ok((logits, _)) if logits.is_empty() => {
+                println!("server drain requested (acked)");
+            }
+            other => bail!("unexpected shutdown ack: {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Sample up to `per_task` dev examples from every loadable task — the
+/// request pool `amfma loadgen` draws from.  Both ends load the same
+/// artifacts, so every generated token id is valid for the served models.
+fn load_request_pool(per_task: usize) -> Result<Vec<(String, Vec<u16>)>> {
+    let mut pool = Vec::new();
+    for name in GLUE_TASKS {
+        if let Ok(t) = crate::data::tasks::load_task(name) {
+            for i in 0..per_task.min(t.n_dev()) {
+                pool.push((t.name.clone(), t.dev_example(i).to_vec()));
+            }
+        }
+    }
+    if pool.is_empty() {
+        bail!("no artifacts found — run `make artifacts` or golden.py --smoke-model first");
+    }
+    Ok(pool)
 }
 
 fn cmd_cycles(args: &Args) -> Result<()> {

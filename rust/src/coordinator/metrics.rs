@@ -1,11 +1,16 @@
 //! Serving metrics: request counters, latency percentiles, batch-size and
 //! padding-shape accounting — the observability layer of the coordinator.
 //!
-//! Counter invariant (asserted by `rust/tests/integration_serving.rs`):
-//! every submitted request is eventually **completed** (a successful reply)
-//! or **rejected** (shed at the ingress queue, or answered with an explicit
-//! error reply — the `errored` counter breaks the latter out), so
-//! `submitted == completed + rejected` once traffic has drained.
+//! Counter invariant (asserted by `rust/tests/integration_serving.rs` and
+//! `rust/tests/integration_net.rs`): every submitted request lands in
+//! exactly one of three disjoint buckets — **completed** (a successful
+//! reply was delivered), **rejected** (shed at the ingress queue with
+//! `Busy`/`Closed` before a worker ever saw it), or **errored** (the
+//! worker answered with an explicit error reply, *or* the reply could not
+//! be delivered because the client disconnected first — the
+//! `dropped_replies` counter breaks that sub-case out).  So
+//! `submitted == completed + rejected + errored` once traffic has
+//! drained.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,11 +21,19 @@ use std::time::Duration;
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
-    /// Requests that got no successful reply: queue sheds + error replies.
+    /// Requests shed at the ingress queue (`Busy` backpressure, or a
+    /// submit racing a shutdown) — a worker never saw them.
     pub rejected: AtomicU64,
-    /// Subset of `rejected` answered with an explicit error reply
-    /// (unknown task, invalid length) rather than shed at the queue.
+    /// Requests a worker answered with an explicit error reply (unknown
+    /// task, invalid length), plus replies that could not be delivered
+    /// because the client disconnected first.  Disjoint from both
+    /// `completed` and `rejected`.
     pub errored: AtomicU64,
+    /// Subset of `errored`: the reply (successful or not) was computed but
+    /// the client's reply channel was already gone when we tried to send
+    /// it.  A disconnecting client must never panic a worker or skew the
+    /// counter balance.
+    pub dropped_replies: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     /// Padded-shape accounting for variable-length batches: tokens the
@@ -54,7 +67,14 @@ impl Metrics {
     /// Record one explicit error reply (unknown task / invalid length).
     pub fn record_error_reply(&self) {
         self.errored.fetch_add(1, Ordering::Relaxed);
-        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a reply that could not be delivered: the client disconnected
+    /// (dropped its reply channel) before the send.  Counts as `errored`
+    /// so `submitted == completed + rejected + errored` still balances.
+    pub fn record_dropped_reply(&self) {
+        self.errored.fetch_add(1, Ordering::Relaxed);
+        self.dropped_replies.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record the shape of one padded batch: `seqs` sequences padded to
@@ -106,6 +126,7 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errored: self.errored.load(Ordering::Relaxed),
+            dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
             padding_efficiency: self.padding_efficiency(),
@@ -130,6 +151,7 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub errored: u64,
+    pub dropped_replies: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub padding_efficiency: f64,
@@ -142,15 +164,22 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// `submitted == completed + rejected + errored` — true once traffic
+    /// has drained (see the module docs for the shutdown race caveat).
+    pub fn balanced(&self) -> bool {
+        self.submitted == self.completed + self.rejected + self.errored
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
-            "requests: submitted={} completed={} rejected={} (errored={})\n\
+            "requests: submitted={} completed={} rejected={} errored={} (dropped_replies={})\n\
              batching: {} batches, mean size {:.2}, padding efficiency {:.1}%\n\
              latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.submitted,
             self.completed,
             self.rejected,
             self.errored,
+            self.dropped_replies,
             self.batches,
             self.mean_batch,
             100.0 * self.padding_efficiency,
@@ -249,15 +278,22 @@ mod tests {
     }
 
     #[test]
-    fn error_replies_count_as_rejected() {
+    fn disjoint_buckets_balance() {
         let m = Metrics::default();
-        m.submitted.fetch_add(3, Ordering::Relaxed);
-        m.record_latency(Duration::from_millis(1));
-        m.record_error_reply();
+        m.submitted.fetch_add(4, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(1)); // completed
+        m.record_error_reply(); // explicit error reply
+        m.record_dropped_reply(); // client gone before delivery
         m.rejected.fetch_add(1, Ordering::Relaxed); // queue shed
         let s = m.snapshot();
-        assert_eq!(s.errored, 1);
-        assert_eq!(s.submitted, s.completed + s.rejected, "counters must balance");
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.errored, 2, "error replies and dropped replies are both errored");
+        assert_eq!(s.dropped_replies, 1);
+        assert!(s.balanced(), "counters must balance: {s:?}");
+        assert_eq!(s.submitted, s.completed + s.rejected + s.errored);
+        let r = s.render();
+        assert!(r.contains("errored=2 (dropped_replies=1)"), "{r}");
     }
 
     #[test]
@@ -266,6 +302,8 @@ mod tests {
         assert_eq!(s.p99_ms, 0.0);
         assert_eq!(s.completed, 0);
         assert_eq!(s.errored, 0);
+        assert_eq!(s.dropped_replies, 0);
+        assert!(s.balanced());
         assert_eq!(s.padding_efficiency, 1.0);
     }
 }

@@ -1,22 +1,33 @@
 //! Serving coordinator — the L3 runtime layer.
 //!
-//! client → [`router::Router`] (mode/lane + length preference) →
-//! [`server::InferenceServer`] (bounded ingress queue + dynamic batcher
-//! bucketing by task and padded length) → engine workers running the
-//! masked variable-length encoder on the shared pool-backed engine.
+//! remote client → [`net::NetServer`] (TCP acceptor + per-connection
+//! `AMFN` framing workers) *or* in-process client → [`router::Router`]
+//! (mode/lane + length preference) → [`server::InferenceServer`] (bounded
+//! ingress queue + dynamic batcher bucketing by task and padded length) →
+//! engine workers running the masked variable-length encoder on the
+//! shared pool-backed engine.  Both entry points feed the **same**
+//! [`server::Request`] channel — a network request differs from an
+//! in-process one only in its [`server::ReplySink`] — so every serving
+//! scenario (varlen batching, lanes, per-site precision policies,
+//! per-mode token counters) is reachable from a remote socket.
+//!
 //! Replicas sit in cheap/accurate [`router::Lane`]s and tasks may carry
 //! calibrated precision policies ([`crate::autotune`], wired through
 //! [`server::ServerConfig::policies`]); [`metrics`] provides the
 //! latency/batching/padding/per-mode-token observability used by the
-//! serving benchmarks.
+//! serving benchmarks, with the disjoint
+//! `submitted == completed + rejected + errored` counter balance that the
+//! network path preserves even for clients that disconnect mid-flight.
 
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use net::{NetServer, NetServerConfig};
 pub use router::{Lane, Replica, RouteError, Router};
 pub use server::{
-    InferenceServer, Reply, ReplyResult, Request, RequestError, ServerConfig, ServerHandle,
-    SubmitError,
+    InferenceServer, Reply, ReplyResult, ReplySink, Request, RequestError, ServerConfig,
+    ServerHandle, SubmitError,
 };

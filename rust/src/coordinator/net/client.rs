@@ -1,0 +1,151 @@
+//! Blocking `AMFN` client over one TCP connection, with pipelining.
+//!
+//! [`Client::call`] is the simple request/response helper;
+//! [`Client::send_request`] / [`Client::recv_reply`] split the two halves
+//! so a closed-loop driver (see [`super::loadgen`]) can keep a window of
+//! requests in flight on one connection.  Replies may arrive out of order
+//! — match them up by [`NetReply::id`].
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::frame::{self, Frame, FrameBuffer, FrameError, LaneSelector, WireError};
+
+/// One decoded reply, matched to its request by `id`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetReply {
+    pub id: u64,
+    /// Logits + server-side latency, or the typed rejection.
+    pub outcome: Result<(Vec<f32>, Duration), WireError>,
+}
+
+/// Client-side failures (transport or protocol — typed *server*
+/// rejections arrive inside [`NetReply::outcome`] instead).
+#[derive(Debug)]
+pub enum NetError {
+    Io(std::io::Error),
+    Frame(FrameError),
+    /// The server closed the connection with replies still outstanding.
+    Disconnected,
+    /// The server sent a frame kind only clients may send.
+    UnexpectedFrame,
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "io: {e}"),
+            NetError::Frame(e) => write!(f, "frame: {e}"),
+            NetError::Disconnected => write!(f, "server disconnected"),
+            NetError::UnexpectedFrame => write!(f, "unexpected frame from server"),
+        }
+    }
+}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> NetError {
+        NetError::Io(e)
+    }
+}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> NetError {
+        NetError::Frame(e)
+    }
+}
+
+/// A blocking connection to an `amfma serve --listen` frontend.
+pub struct Client {
+    stream: TcpStream,
+    fb: FrameBuffer,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream, fb: FrameBuffer::default(), next_id: 0 })
+    }
+
+    /// Bound how long [`Client::recv_reply`] may block (`None` = forever,
+    /// the default).  On expiry `recv_reply` surfaces the timeout as
+    /// [`NetError::Io`] — how a driver turns a server-side forfeited
+    /// reply into a loud lost-reply error instead of a silent hang.
+    pub fn set_read_timeout(&mut self, d: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(d)
+    }
+
+    /// Send one request frame without waiting for the reply (pipelining).
+    /// Returns the request id the eventual reply will carry.  Task names
+    /// longer than the wire format's u8 length field are rejected here —
+    /// silently truncating could split a UTF-8 character and make the
+    /// server drop the connection as corrupt.
+    pub fn send_request(
+        &mut self,
+        task: &str,
+        lane: LaneSelector,
+        tokens: &[u16],
+    ) -> std::io::Result<u64> {
+        if task.len() > u8::MAX as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("task name {} bytes long exceeds the wire cap of 255", task.len()),
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let f = Frame::Request { id, lane, task: task.to_string(), tokens: tokens.to_vec() };
+        self.stream.write_all(&frame::encode(&f))?;
+        self.stream.flush()?;
+        Ok(id)
+    }
+
+    /// Ask the server to drain and exit (acked like a normal reply).
+    pub fn send_shutdown(&mut self) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&frame::encode(&Frame::Shutdown { id }))?;
+        self.stream.flush()?;
+        Ok(id)
+    }
+
+    /// Block until the next reply frame arrives.
+    pub fn recv_reply(&mut self) -> Result<NetReply, NetError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(frame) = self.fb.next_frame()? {
+                return match frame {
+                    Frame::ReplyOk { id, server_latency, logits } => {
+                        Ok(NetReply { id, outcome: Ok((logits, server_latency)) })
+                    }
+                    Frame::ReplyErr { id, err } => Ok(NetReply { id, outcome: Err(err) }),
+                    Frame::Request { .. } | Frame::Shutdown { .. } => {
+                        Err(NetError::UnexpectedFrame)
+                    }
+                };
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(NetError::Disconnected);
+            }
+            self.fb.push(&chunk[..n]);
+        }
+    }
+
+    /// Simple request/response: send one request and block for *its*
+    /// reply.  Only valid when no other requests are in flight on this
+    /// connection (pipelined callers match ids themselves).
+    pub fn call(
+        &mut self,
+        task: &str,
+        lane: LaneSelector,
+        tokens: &[u16],
+    ) -> Result<NetReply, NetError> {
+        let id = self.send_request(task, lane, tokens)?;
+        let reply = self.recv_reply()?;
+        debug_assert_eq!(reply.id, id, "call() must not be used with requests in flight");
+        Ok(reply)
+    }
+}

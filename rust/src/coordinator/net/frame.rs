@@ -1,0 +1,561 @@
+//! The `AMFN` binary wire protocol: versioned, length-prefixed frames.
+//!
+//! Every frame is a fixed 12-byte header followed by a body (all integers
+//! little-endian):
+//!
+//! | offset | size | field                                     |
+//! |--------|------|-------------------------------------------|
+//! | 0      | 4    | magic `b"AMFN"`                           |
+//! | 4      | 1    | version (1)                               |
+//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown) |
+//! | 6      | 2    | reserved (must be 0)                      |
+//! | 8      | 4    | body length in bytes                      |
+//!
+//! Request body: `id u64`, `lane u8` (0=any 1=cheap 2=accurate),
+//! `task_len u8` + task-name bytes (utf-8), `n_tokens u32`, then
+//! `n_tokens` × `u16` token ids.  Reply-ok body: `id u64`,
+//! `server_latency_us u64`, `n_logits u32`, then `n_logits` × `f32`.
+//! Reply-err body: `id u64`, `code u8`, plus `len u32` + `max_seq u32`
+//! for `InvalidLength`.  Shutdown body: `id u64` (acked with an empty
+//! reply-ok before the server drains).
+//!
+//! The decoder is hardened like the `AMFP` policy parser: truncation,
+//! absurd declared lengths, bad magic/version/kind/lane/error codes and
+//! length/count mismatches all return [`FrameError`] — never a panic
+//! (property-tested by `rust/tests/property_net.rs`).  A connection uses
+//! [`FrameBuffer`] to accumulate raw socket bytes and pop complete frames,
+//! so partial reads and pipelined back-to-back frames both just work.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::coordinator::server::RequestError;
+
+/// Format tag opening every frame.
+pub const MAGIC: [u8; 4] = *b"AMFN";
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a frame body: anything larger is a corrupt or hostile
+/// declared length and is rejected before any allocation.
+pub const MAX_BODY: usize = 1 << 20;
+/// Upper bound on tokens per request (fits any `max_seq` we serve).
+pub const MAX_TOKENS: usize = 1 << 16;
+/// Upper bound on logits per reply.
+pub const MAX_LOGITS: usize = 1 << 16;
+
+/// Which serving lane a request targets (wire encoding of
+/// `Option<coordinator::Lane>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneSelector {
+    /// Any replica (0 on the wire).
+    Any,
+    /// Approximate / policy replicas (1).
+    Cheap,
+    /// Reference-arithmetic replicas (2).
+    Accurate,
+}
+
+impl LaneSelector {
+    pub fn to_wire(self) -> u8 {
+        match self {
+            LaneSelector::Any => 0,
+            LaneSelector::Cheap => 1,
+            LaneSelector::Accurate => 2,
+        }
+    }
+
+    pub fn from_wire(b: u8) -> Result<LaneSelector, FrameError> {
+        match b {
+            0 => Ok(LaneSelector::Any),
+            1 => Ok(LaneSelector::Cheap),
+            2 => Ok(LaneSelector::Accurate),
+            other => Err(FrameError::BadLane(other)),
+        }
+    }
+
+    /// Parse the CLI spelling (`any` / `cheap` / `accurate`).
+    pub fn parse(s: &str) -> Option<LaneSelector> {
+        match s {
+            "any" => Some(LaneSelector::Any),
+            "cheap" => Some(LaneSelector::Cheap),
+            "accurate" => Some(LaneSelector::Accurate),
+            _ => None,
+        }
+    }
+
+    pub fn to_lane(self) -> Option<super::super::Lane> {
+        match self {
+            LaneSelector::Any => None,
+            LaneSelector::Cheap => Some(super::super::Lane::Cheap),
+            LaneSelector::Accurate => Some(super::super::Lane::Accurate),
+        }
+    }
+}
+
+/// Typed rejection carried by a reply-err frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// No model deployed under the requested task name (code 1).
+    UnknownTask,
+    /// Sequence length outside the task's `1..=max_seq` envelope (code 2).
+    InvalidLength { len: u32, max_seq: u32 },
+    /// Backpressure: every candidate replica's ingress queue is full
+    /// (code 3).  Retry after a backoff.
+    Busy,
+    /// No replica matches the requested lane / sequence length (code 4).
+    NoReplica,
+    /// The server is draining and no longer accepts work (code 5).
+    ShuttingDown,
+}
+
+impl WireError {
+    fn code(self) -> u8 {
+        match self {
+            WireError::UnknownTask => 1,
+            WireError::InvalidLength { .. } => 2,
+            WireError::Busy => 3,
+            WireError::NoReplica => 4,
+            WireError::ShuttingDown => 5,
+        }
+    }
+}
+
+impl From<RequestError> for WireError {
+    fn from(e: RequestError) -> WireError {
+        match e {
+            RequestError::UnknownTask => WireError::UnknownTask,
+            RequestError::InvalidLength { len, max_seq } => WireError::InvalidLength {
+                len: len.min(u32::MAX as usize) as u32,
+                max_seq: max_seq.min(u32::MAX as usize) as u32,
+            },
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::UnknownTask => write!(f, "unknown task"),
+            WireError::InvalidLength { len, max_seq } => {
+                write!(f, "invalid length {len} (max_seq {max_seq})")
+            }
+            WireError::Busy => write!(f, "busy"),
+            WireError::NoReplica => write!(f, "no replica for lane/length"),
+            WireError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+/// One decoded `AMFN` frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: classify `tokens` under `task`, route by `lane`.
+    Request { id: u64, lane: LaneSelector, task: String, tokens: Vec<u16> },
+    /// Server → client: the logits for request `id`.
+    ReplyOk { id: u64, server_latency: Duration, logits: Vec<f32> },
+    /// Server → client: a typed rejection of request `id`.
+    ReplyErr { id: u64, err: WireError },
+    /// Client → server: drain and exit (acked with an empty `ReplyOk`).
+    Shutdown { id: u64 },
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => 0,
+            Frame::ReplyOk { .. } => 1,
+            Frame::ReplyErr { .. } => 2,
+            Frame::Shutdown { .. } => 3,
+        }
+    }
+}
+
+/// Why a byte sequence is not a valid frame.  Every decoder path returns
+/// one of these — corruption never panics and never allocates unbounded
+/// memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    BadKind(u8),
+    BadReserved(u16),
+    BadLane(u8),
+    BadErrorCode(u8),
+    BadTaskName,
+    /// Declared body length exceeds [`MAX_BODY`] (or a declared element
+    /// count exceeds its cap) — an absurd length, rejected up front.
+    Oversize { declared: usize, max: usize },
+    /// The body is shorter than its declared contents require.
+    Truncated { need: usize, got: usize },
+    /// The body is longer than its declared contents: trailing garbage.
+    TrailingBytes { extra: usize },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            FrameError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::BadReserved(r) => write!(f, "reserved field must be 0, got {r}"),
+            FrameError::BadLane(l) => write!(f, "unknown lane selector {l}"),
+            FrameError::BadErrorCode(c) => write!(f, "unknown error code {c}"),
+            FrameError::BadTaskName => write!(f, "task name is not utf-8"),
+            FrameError::Oversize { declared, max } => {
+                write!(f, "declared length {declared} exceeds cap {max}")
+            }
+            FrameError::Truncated { need, got } => {
+                write!(f, "truncated: need {need} bytes, got {got}")
+            }
+            FrameError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after declared contents")
+            }
+        }
+    }
+}
+
+/// Serialize a frame: header + body, ready for one `write_all`.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::with_capacity(64);
+    match frame {
+        Frame::Request { id, lane, task, tokens } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            body.push(lane.to_wire());
+            // An oversized task name is rejected by `Client::send_request`;
+            // if one reaches here anyway, cut at a char boundary so the
+            // emitted frame stays valid utf-8 (a mid-codepoint cut would
+            // make the receiver drop the whole connection as corrupt).
+            let mut cut = task.len().min(u8::MAX as usize);
+            while !task.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            body.push(cut as u8);
+            body.extend_from_slice(&task.as_bytes()[..cut]);
+            body.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+            for t in tokens {
+                body.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        Frame::ReplyOk { id, server_latency, logits } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            let us = server_latency.as_micros().min(u64::MAX as u128) as u64;
+            body.extend_from_slice(&us.to_le_bytes());
+            body.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+            for l in logits {
+                body.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+        Frame::ReplyErr { id, err } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            body.push(err.code());
+            if let WireError::InvalidLength { len, max_seq } = err {
+                body.extend_from_slice(&len.to_le_bytes());
+                body.extend_from_slice(&max_seq.to_le_bytes());
+            }
+        }
+        Frame::Shutdown { id } => {
+            body.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame.kind());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Validated header: frame kind + declared body length.
+fn decode_header(h: &[u8]) -> Result<(u8, usize), FrameError> {
+    debug_assert!(h.len() >= HEADER_LEN);
+    let magic = [h[0], h[1], h[2], h[3]];
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    if h[4] != VERSION {
+        return Err(FrameError::BadVersion(h[4]));
+    }
+    let kind = h[5];
+    if kind > 3 {
+        return Err(FrameError::BadKind(kind));
+    }
+    let reserved = u16::from_le_bytes([h[6], h[7]]);
+    if reserved != 0 {
+        return Err(FrameError::BadReserved(reserved));
+    }
+    let body_len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]) as usize;
+    if body_len > MAX_BODY {
+        return Err(FrameError::Oversize { declared: body_len, max: MAX_BODY });
+    }
+    Ok((kind, body_len))
+}
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        // `n` is bounded by the per-field caps (MAX_TOKENS·2, MAX_LOGITS·4,
+        // u8 task length) and `pos` by MAX_BODY, so this cannot overflow.
+        let end = self.pos + n;
+        if end > self.buf.len() {
+            return Err(FrameError::Truncated { need: end, got: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(FrameError::TrailingBytes { extra: self.buf.len() - self.pos });
+        }
+        Ok(())
+    }
+}
+
+/// Decode a frame body of known kind (the header already validated).
+fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
+    let mut c = Cursor { buf: body, pos: 0 };
+    let frame = match kind {
+        0 => {
+            let id = c.u64()?;
+            let lane = LaneSelector::from_wire(c.u8()?)?;
+            let task_len = c.u8()? as usize;
+            let task = std::str::from_utf8(c.take(task_len)?)
+                .map_err(|_| FrameError::BadTaskName)?
+                .to_string();
+            let n = c.u32()? as usize;
+            if n > MAX_TOKENS {
+                return Err(FrameError::Oversize { declared: n, max: MAX_TOKENS });
+            }
+            let raw = c.take(n * 2)?;
+            let tokens = raw.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+            Frame::Request { id, lane, task, tokens }
+        }
+        1 => {
+            let id = c.u64()?;
+            let us = c.u64()?;
+            let n = c.u32()? as usize;
+            if n > MAX_LOGITS {
+                return Err(FrameError::Oversize { declared: n, max: MAX_LOGITS });
+            }
+            let raw = c.take(n * 4)?;
+            let logits = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Frame::ReplyOk { id, server_latency: Duration::from_micros(us), logits }
+        }
+        2 => {
+            let id = c.u64()?;
+            let err = match c.u8()? {
+                1 => WireError::UnknownTask,
+                2 => WireError::InvalidLength { len: c.u32()?, max_seq: c.u32()? },
+                3 => WireError::Busy,
+                4 => WireError::NoReplica,
+                5 => WireError::ShuttingDown,
+                other => return Err(FrameError::BadErrorCode(other)),
+            };
+            Frame::ReplyErr { id, err }
+        }
+        3 => Frame::Shutdown { id: c.u64()? },
+        other => return Err(FrameError::BadKind(other)),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Decode exactly one frame from the front of `buf`; returns the frame and
+/// the number of bytes consumed.  A buffer that does not hold a complete
+/// frame is an error here (tests and one-shot decoding); streaming callers
+/// use [`FrameBuffer`], which distinguishes "incomplete" from "corrupt".
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated { need: HEADER_LEN, got: buf.len() });
+    }
+    let (kind, body_len) = decode_header(&buf[..HEADER_LEN])?;
+    let total = HEADER_LEN + body_len;
+    if buf.len() < total {
+        return Err(FrameError::Truncated { need: total, got: buf.len() });
+    }
+    let frame = decode_body(kind, &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+/// Accumulates raw socket bytes and pops complete frames: partial reads,
+/// short headers and pipelined back-to-back frames are all handled; only
+/// genuine corruption (bad magic/version/fields, absurd declared lengths)
+/// surfaces as an error, at which point the connection is unrecoverable.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    /// Append freshly read socket bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` when more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, FrameError> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let (kind, body_len) = decode_header(&self.buf[..HEADER_LEN])?;
+        let total = HEADER_LEN + body_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let frame = decode_body(kind, &self.buf[HEADER_LEN..total])?;
+        self.buf.drain(..total);
+        Ok(Some(frame))
+    }
+
+    /// Bytes currently buffered (diagnostics).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> Frame {
+        Frame::Request {
+            id: 42,
+            lane: LaneSelector::Cheap,
+            task: "sst2".into(),
+            tokens: vec![1, 2, 3, 65535],
+        }
+    }
+
+    #[test]
+    fn round_trip_every_frame_kind() {
+        let frames = vec![
+            sample_request(),
+            Frame::Request { id: 0, lane: LaneSelector::Any, task: String::new(), tokens: vec![] },
+            Frame::ReplyOk {
+                id: 7,
+                server_latency: Duration::from_micros(1234),
+                logits: vec![1.5, -2.25, 0.0],
+            },
+            Frame::ReplyErr { id: 8, err: WireError::UnknownTask },
+            Frame::ReplyErr { id: 9, err: WireError::InvalidLength { len: 99, max_seq: 8 } },
+            Frame::ReplyErr { id: 10, err: WireError::Busy },
+            Frame::ReplyErr { id: 11, err: WireError::NoReplica },
+            Frame::ReplyErr { id: 12, err: WireError::ShuttingDown },
+            Frame::Shutdown { id: 13 },
+        ];
+        for f in frames {
+            let bytes = encode(&f);
+            let (back, used) = decode(&bytes).expect("round trip");
+            assert_eq!(back, f);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn frame_buffer_handles_partial_and_pipelined_bytes() {
+        let a = encode(&sample_request());
+        let b = encode(&Frame::Shutdown { id: 1 });
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&a);
+        stream.extend_from_slice(&b);
+        let mut fb = FrameBuffer::default();
+        // Feed one byte at a time: frames pop exactly when complete.
+        let mut popped = Vec::new();
+        for &byte in &stream {
+            fb.push(&[byte]);
+            while let Some(f) = fb.next_frame().expect("valid stream") {
+                popped.push(f);
+            }
+        }
+        assert_eq!(popped.len(), 2);
+        assert_eq!(popped[0], sample_request());
+        assert_eq!(popped[1], Frame::Shutdown { id: 1 });
+        assert_eq!(fb.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn corruption_is_an_error_never_a_panic() {
+        let good = encode(&sample_request());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
+        // bad kind
+        let mut bad = good.clone();
+        bad[5] = 250;
+        assert_eq!(decode(&bad), Err(FrameError::BadKind(250)));
+        // reserved bytes must be zero
+        let mut bad = good.clone();
+        bad[6] = 1;
+        assert!(matches!(decode(&bad), Err(FrameError::BadReserved(_))));
+        // absurd declared body length
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
+        // absurd declared token count inside a plausible body
+        let f = Frame::Request { id: 1, lane: LaneSelector::Any, task: "t".into(), tokens: vec![] };
+        let mut bad = encode(&f);
+        let n_off = HEADER_LEN + 8 + 1 + 1 + 1; // id + lane + task_len + task
+        bad[n_off..n_off + 4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
+        // bad lane selector
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 8] = 77;
+        assert_eq!(decode(&bad), Err(FrameError::BadLane(77)));
+        // truncation at every boundary
+        for cut in 0..good.len() {
+            match decode(&good[..cut]) {
+                Err(FrameError::Truncated { .. }) => {}
+                other => panic!("cut {cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frame_buffer_surfaces_corruption() {
+        let mut fb = FrameBuffer::default();
+        fb.push(b"GARBAGEGARBAGE");
+        assert!(fb.next_frame().is_err());
+    }
+
+    #[test]
+    fn lane_selector_round_trips() {
+        for lane in [LaneSelector::Any, LaneSelector::Cheap, LaneSelector::Accurate] {
+            assert_eq!(LaneSelector::from_wire(lane.to_wire()), Ok(lane));
+        }
+        assert!(LaneSelector::from_wire(3).is_err());
+        assert_eq!(LaneSelector::parse("cheap"), Some(LaneSelector::Cheap));
+        assert_eq!(LaneSelector::parse("bogus"), None);
+    }
+}

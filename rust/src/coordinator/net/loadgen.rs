@@ -1,0 +1,246 @@
+//! Closed-loop, multi-connection load generator for the TCP frontend.
+//!
+//! Each connection keeps a window of `pipeline` requests in flight
+//! (pipelined on one socket), samples requests from a caller-provided
+//! `(task, tokens)` pool, measures **per-request end-to-end latency**
+//! client-side, and retries `Busy` backpressure replies with a bounded
+//! backoff — so every generated request is eventually *completed* or
+//! *explicitly rejected*, and the run fails loudly if any reply is lost
+//! or unmatched.  Latency summaries go through the shared
+//! [`crate::bench_harness`] order statistics (interpolated median/p95),
+//! and [`report`] packages a run as a schema-valid `BENCH_serving.json` +
+//! `BENCH_trajectory.jsonl` line via [`crate::bench_harness::json`].
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::bench_harness::json::BenchReport;
+use crate::bench_harness::{summarize_samples, BenchResult};
+use crate::prng::Prng;
+
+use super::client::Client;
+use super::frame::{LaneSelector, WireError};
+
+/// Load-generator knobs (see `amfma loadgen`).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7070`.
+    pub addr: String,
+    /// Concurrent TCP connections.
+    pub connections: usize,
+    /// Total fresh requests across all connections.
+    pub requests: usize,
+    /// In-flight window per connection (pipelining depth).
+    pub pipeline: usize,
+    /// Lane selector stamped on every request.
+    pub lane: LaneSelector,
+    /// Truncate each sampled sequence to a random live length.
+    pub varlen: bool,
+    /// PRNG seed (per-connection streams derive from it).
+    pub seed: u64,
+    /// Per-reply receive deadline: a reply the server forfeited (e.g. a
+    /// pipeline deeper than the server's in-flight cap) fails the run
+    /// loudly as a lost reply instead of hanging the generator forever.
+    pub recv_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            connections: 4,
+            requests: 256,
+            pipeline: 4,
+            lane: LaneSelector::Any,
+            varlen: false,
+            seed: 42,
+            recv_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Aggregated result of one load-generation run.
+#[derive(Debug)]
+pub struct LoadgenOutcome {
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Requests answered with a typed rejection (unknown task, invalid
+    /// length, no replica) — answered, just not served.
+    pub rejected: u64,
+    /// `Busy` backpressure replies observed (each was retried).
+    pub busy_retries: u64,
+    /// Wall-clock of the whole run.
+    pub wall: Duration,
+    /// Per-request end-to-end latency order statistics.
+    pub latency: BenchResult,
+}
+
+impl LoadgenOutcome {
+    /// Completed requests per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.completed as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+struct ConnStats {
+    completed: u64,
+    rejected: u64,
+    busy_retries: u64,
+    latencies: Vec<Duration>,
+}
+
+/// Drive `cfg.requests` requests sampled from `pool` through
+/// `cfg.connections` pipelined connections.  Errors (transport failures,
+/// lost or unmatched replies) abort the run with a message naming the
+/// connection.
+pub fn run(pool: &[(String, Vec<u16>)], cfg: &LoadgenConfig) -> Result<LoadgenOutcome, String> {
+    if pool.is_empty() {
+        return Err("loadgen: empty request pool".to_string());
+    }
+    let connections = cfg.connections.max(1);
+    let per_conn = cfg.requests / connections;
+    let remainder = cfg.requests % connections;
+    let t0 = Instant::now();
+    let mut stats: Vec<ConnStats> = Vec::with_capacity(connections);
+    let results: Vec<Result<ConnStats, String>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..connections {
+            let target = per_conn + usize::from(c < remainder);
+            handles.push(s.spawn(move || run_connection(pool, cfg, c as u64, target)));
+        }
+        handles.into_iter().map(|h| h.join().expect("loadgen thread panicked")).collect()
+    });
+    for (c, r) in results.into_iter().enumerate() {
+        stats.push(r.map_err(|e| format!("connection {c}: {e}"))?);
+    }
+    let wall = t0.elapsed();
+    let mut latencies = Vec::new();
+    let (mut completed, mut rejected, mut busy) = (0u64, 0u64, 0u64);
+    for s in stats {
+        completed += s.completed;
+        rejected += s.rejected;
+        busy += s.busy_retries;
+        latencies.extend(s.latencies);
+    }
+    let latency = if latencies.is_empty() {
+        // All requests rejected: an empty sample set has no percentiles.
+        summarize_samples("serving/e2e_latency", vec![Duration::ZERO])
+    } else {
+        summarize_samples("serving/e2e_latency", latencies)
+    };
+    Ok(LoadgenOutcome { completed, rejected, busy_retries: busy, wall, latency })
+}
+
+fn run_connection(
+    pool: &[(String, Vec<u16>)],
+    cfg: &LoadgenConfig,
+    conn: u64,
+    target: usize,
+) -> Result<ConnStats, String> {
+    let mut client =
+        Client::connect(cfg.addr.as_str()).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    client
+        .set_read_timeout(Some(cfg.recv_timeout))
+        .map_err(|e| format!("set read timeout: {e}"))?;
+    let mut rng = Prng::new(cfg.seed.wrapping_mul(1000).wrapping_add(conn));
+    let mut stats =
+        ConnStats { completed: 0, rejected: 0, busy_retries: 0, latencies: Vec::new() };
+    // Latency is measured from the *first* send of a request: a Busy
+    // retry keeps its original timestamp, so backoff and requeue time
+    // count toward the reported end-to-end latency (that is exactly the
+    // time a backpressured client experiences).
+    let mut pending: HashMap<u64, (Instant, String, Vec<u16>)> = HashMap::new();
+    let mut retry: VecDeque<(Instant, String, Vec<u16>)> = VecDeque::new();
+    let mut issued = 0usize;
+    let mut answered = 0usize;
+    let mut backoff = Duration::from_micros(200);
+    while answered < target {
+        // Keep the pipeline window full: retries first, then fresh ones.
+        while pending.len() < cfg.pipeline.max(1) && (issued < target || !retry.is_empty()) {
+            let (born, task, tokens) = match retry.pop_front() {
+                Some(r) => r,
+                None => {
+                    issued += 1;
+                    let (task, tokens) = sample_request(pool, cfg.varlen, &mut rng);
+                    (Instant::now(), task, tokens)
+                }
+            };
+            let id = client
+                .send_request(&task, cfg.lane, &tokens)
+                .map_err(|e| format!("send: {e}"))?;
+            if pending.insert(id, (born, task, tokens)).is_some() {
+                return Err(format!("duplicate request id {id}"));
+            }
+        }
+        let reply = client.recv_reply().map_err(|e| {
+            format!("recv with {} replies outstanding (lost): {e}", pending.len())
+        })?;
+        let Some((born, task, tokens)) = pending.remove(&reply.id) else {
+            return Err(format!("unmatched reply id {}", reply.id));
+        };
+        match reply.outcome {
+            Ok(_logits) => {
+                stats.latencies.push(born.elapsed());
+                stats.completed += 1;
+                answered += 1;
+                backoff = Duration::from_micros(200);
+            }
+            Err(WireError::Busy) => {
+                // Backpressure: retry after a bounded backoff, keeping the
+                // original timestamp so the latency sample stays honest.
+                stats.busy_retries += 1;
+                retry.push_back((born, task, tokens));
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(20));
+            }
+            Err(_typed) => {
+                stats.rejected += 1;
+                answered += 1;
+            }
+        }
+    }
+    if !pending.is_empty() {
+        return Err(format!("{} replies never arrived", pending.len()));
+    }
+    Ok(stats)
+}
+
+/// Sample one `(task, tokens)` request from the pool, optionally
+/// truncating to a random live length (the varlen serving path).
+fn sample_request(
+    pool: &[(String, Vec<u16>)],
+    varlen: bool,
+    rng: &mut Prng,
+) -> (String, Vec<u16>) {
+    let (task, tokens) = &pool[rng.below(pool.len() as u64) as usize];
+    let mut tokens = tokens.clone();
+    if varlen && tokens.len() > 1 {
+        let len = 1 + rng.below(tokens.len() as u64) as usize;
+        tokens.truncate(len);
+    }
+    (task.clone(), tokens)
+}
+
+/// Package a run as the `serving` bench target (schema `amfma-bench-v1`):
+/// the latency order statistics as a result with seq/s throughput, plus
+/// the traffic counters as metrics — ready for
+/// [`BenchReport::write`] to persist `BENCH_serving.json` and append the
+/// trajectory line the CI perf gate consumes.
+pub fn report(outcome: &LoadgenOutcome, cfg: &LoadgenConfig) -> BenchReport {
+    let mut rep = BenchReport::new("serving");
+    let r = outcome.latency.clone().with_ops(1.0, "seq/s");
+    rep.push(&r);
+    rep.push_metric("throughput", outcome.throughput(), "seq/s");
+    rep.push_metric("completed", outcome.completed as f64, "requests");
+    rep.push_metric("rejected", outcome.rejected as f64, "requests");
+    rep.push_metric("busy_retries", outcome.busy_retries as f64, "replies");
+    rep.push_metric("connections", cfg.connections as f64, "conns");
+    rep.push_metric("pipeline", cfg.pipeline as f64, "depth");
+    rep.push_metric("wall", outcome.wall.as_secs_f64(), "s");
+    rep
+}

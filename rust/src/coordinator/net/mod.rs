@@ -1,0 +1,338 @@
+//! TCP serving frontend: the approximate-normalization engine on the wire.
+//!
+//! A [`NetServer`] binds a `std::net` listener and runs one **acceptor**
+//! thread plus two threads per connection: a *reader* that accumulates
+//! socket bytes in a [`frame::FrameBuffer`], decodes `AMFN` request frames
+//! and feeds the existing batcher through the same
+//! [`super::server::Request`] channel as in-process clients (via
+//! [`super::Router::route_lane_sink`] with a per-connection
+//! [`super::server::ReplySink::Tagged`] channel), and a *writer* that
+//! drains that channel and serializes reply frames back to the socket.
+//! Requests are **pipelined**: a client may keep many frames in flight on
+//! one connection; replies carry the client-chosen request id and may
+//! arrive out of order (batches flush independently).
+//!
+//! Backpressure is surfaced, not hidden: when every candidate replica's
+//! ingress queue is full the connection immediately answers
+//! [`frame::WireError::Busy`] instead of buffering unboundedly, and a
+//! closed-loop client retries after a backoff.  Shutdown is a **graceful
+//! drain**: the acceptor stops, readers stop decoding, writers flush every
+//! in-flight reply, then each socket is shut down so clients observe EOF
+//! only after their last reply.  A client can request the drain remotely
+//! with a [`frame::Frame::Shutdown`] frame (used by `amfma loadgen
+//! --shutdown` and the CI soak job).
+//!
+//! Zero dependencies: `std::net` + the hand-rolled frame codec in
+//! [`frame`].  [`client::Client`] is the blocking counterpart and
+//! [`loadgen`] the closed-loop multi-connection load generator.
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+
+use std::io::{Read, Write};
+use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::server::{ReplyResult, ReplySink};
+use super::Router;
+
+use frame::{Frame, FrameBuffer, WireError};
+
+pub use client::{Client, NetError, NetReply};
+pub use frame::{FrameError, LaneSelector};
+
+/// Tuning knobs of the TCP frontend.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Depth of the per-connection tagged reply channel — the cap on
+    /// replies buffered between engine workers and the connection writer,
+    /// i.e. the server-side pipelining limit.  Engine workers `try_send`
+    /// into it: a client that pipelines past this without reading replies
+    /// forfeits the overflow (counted as dropped replies) — it can never
+    /// block a shared batch worker.
+    pub inflight: usize,
+    /// Socket read poll interval: how often a blocked reader rechecks the
+    /// stop flag.  Purely a drain-latency/wakeup trade-off.
+    pub poll: Duration,
+    /// Socket write timeout: bounds how long the writer (and the reader's
+    /// inline error replies, which share the write mutex) can be stalled
+    /// by a client that stops reading.  On expiry the connection is
+    /// dropped; undeliverable replies count as dropped, and server
+    /// shutdown can no longer be wedged by a dead peer.
+    pub write_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            inflight: 256,
+            poll: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Joinable per-connection worker threads, shared with the acceptor.
+type ConnHandles = Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>;
+
+/// A running TCP frontend; [`NetServer::shutdown`] drains and joins
+/// everything.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    drain_requested: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    conns: ConnHandles,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting connections routed through `router`.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        router: Arc<Router>,
+        cfg: NetServerConfig,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let drain_requested = Arc::new(AtomicBool::new(false));
+        let conns: ConnHandles = Arc::default();
+        let acceptor = {
+            let stop = stop.clone();
+            let drain = drain_requested.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, router, cfg, stop, drain, conns);
+            })
+        };
+        Ok(NetServer { addr: local, stop, drain_requested, acceptor: Some(acceptor), conns })
+    }
+
+    /// The bound address (with the real port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client has sent a [`Frame::Shutdown`] frame; the owner
+    /// polls this and calls [`NetServer::shutdown`] to perform the drain.
+    pub fn shutdown_requested(&self) -> bool {
+        self.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: stop accepting, stop reading new frames, deliver
+    /// every in-flight reply, shut each socket down, join all threads.
+    /// The backing `InferenceServer` must still be running when this is
+    /// called — in-flight batches finish during the drain.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let mut conns = self.conns.lock().unwrap();
+        for c in conns.drain(..) {
+            let _ = c.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    cfg: NetServerConfig,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    conns: ConnHandles,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let router = router.clone();
+                let cfg = cfg.clone();
+                let stop = stop.clone();
+                let drain = drain.clone();
+                let handle = std::thread::spawn(move || {
+                    // A broken connection must never take the server down;
+                    // connection_loop reports, the frontend carries on.
+                    if let Err(e) = connection_loop(stream, &router, &cfg, &stop, &drain) {
+                        eprintln!("[net] connection ended with error: {e}");
+                    }
+                });
+                // Reap finished connections so a long-running listener's
+                // handle list tracks live connections, not total accepts.
+                let mut guard = conns.lock().unwrap();
+                guard.retain(|h| !h.is_finished());
+                guard.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.poll.min(Duration::from_millis(10)));
+            }
+            Err(e) => {
+                eprintln!("[net] accept error: {e}");
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+}
+
+/// One connection: decode request frames, route them, answer routing
+/// failures inline; the writer thread serializes engine replies.
+fn connection_loop(
+    stream: TcpStream,
+    router: &Router,
+    cfg: &NetServerConfig,
+    stop: &AtomicBool,
+    drain: &AtomicBool,
+) -> Result<(), String> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(cfg.poll)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(cfg.write_timeout)).map_err(|e| e.to_string())?;
+    // All frames leave through this mutex so reply frames from the writer
+    // thread and inline error frames from the reader never interleave.
+    let write_half = Arc::new(Mutex::new(stream.try_clone().map_err(|e| e.to_string())?));
+    let (reply_tx, reply_rx) = sync_channel::<(u64, ReplyResult)>(cfg.inflight.max(1));
+    // The writer can only exit before the reader on a write error (the
+    // reader holds a sender, so channel-closure exits come after it): the
+    // flag lets the reader notice a dead peer and stop routing requests
+    // whose replies could never be delivered.
+    let writer_dead = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let write_half = write_half.clone();
+        let writer_dead = writer_dead.clone();
+        std::thread::spawn(move || {
+            writer_loop(reply_rx, write_half);
+            writer_dead.store(true, Ordering::SeqCst);
+        })
+    };
+
+    let result = reader_loop(stream, router, stop, drain, &reply_tx, &write_half, &writer_dead);
+
+    // Drop our sender: once every in-flight request's tagged sink is gone
+    // too, the writer drains the channel and exits — the drain barrier.
+    drop(reply_tx);
+    let _ = writer.join();
+    // EOF for the client only after its last reply was flushed.
+    if let Ok(s) = write_half.lock() {
+        let _ = s.shutdown(SockShutdown::Both);
+    }
+    result
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    router: &Router,
+    stop: &AtomicBool,
+    drain: &AtomicBool,
+    reply_tx: &SyncSender<(u64, ReplyResult)>,
+    write_half: &Mutex<TcpStream>,
+    writer_dead: &AtomicBool,
+) -> Result<(), String> {
+    let mut fb = FrameBuffer::default();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        if writer_dead.load(Ordering::SeqCst) {
+            // Replies can no longer reach this peer; routing more of its
+            // requests would just burn engine cycles into dropped sends.
+            return Err("connection writer died (peer stopped reading?)".to_string());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // client closed its write half
+            Ok(n) => fb.push(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => return Ok(()),
+            Err(e) => return Err(format!("read: {e}")),
+        }
+        loop {
+            let frame = match fb.next_frame() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                // Corrupt stream: unrecoverable for this connection.
+                Err(e) => return Err(format!("frame: {e}")),
+            };
+            match frame {
+                Frame::Request { id, lane, task, tokens } => {
+                    let sink = ReplySink::Tagged { id, tx: reply_tx.clone() };
+                    let verdict = if drain.load(Ordering::SeqCst) {
+                        Err(WireError::ShuttingDown)
+                    } else {
+                        route_request(router, &task, tokens, lane, sink)
+                    };
+                    if let Err(err) = verdict {
+                        send_frame(write_half, &Frame::ReplyErr { id, err })
+                            .map_err(|e| format!("write: {e}"))?;
+                    }
+                }
+                Frame::Shutdown { id } => {
+                    drain.store(true, Ordering::SeqCst);
+                    let ack = Frame::ReplyOk {
+                        id,
+                        server_latency: Duration::ZERO,
+                        logits: Vec::new(),
+                    };
+                    send_frame(write_half, &ack).map_err(|e| format!("write: {e}"))?;
+                }
+                // Clients must not send reply frames; treat as corruption.
+                Frame::ReplyOk { .. } | Frame::ReplyErr { .. } => {
+                    return Err("unexpected reply frame from client".to_string());
+                }
+            }
+        }
+    }
+}
+
+/// Route one decoded request; failures map to typed wire errors the
+/// reader answers inline.
+fn route_request(
+    router: &Router,
+    task: &str,
+    tokens: Vec<u16>,
+    lane: LaneSelector,
+    sink: ReplySink,
+) -> Result<(), WireError> {
+    use super::RouteError;
+    router.route_lane_sink(task, tokens, lane.to_lane(), sink).map_err(|e| match e {
+        RouteError::NoReplicaForMode => WireError::NoReplica,
+        RouteError::AllBusy => WireError::Busy,
+        RouteError::Closed => WireError::ShuttingDown,
+        // route_lane_sink never constructs Rejected; map it defensively.
+        RouteError::Rejected(err) => WireError::from(err),
+    })
+}
+
+/// Drain the tagged reply channel onto the socket.  Exits when every
+/// sender (reader clone + in-flight request sinks) is gone, i.e. after
+/// the last reply of the connection — or early on a write error, which
+/// drops the receiver so engine workers see dropped-reply sends instead
+/// of blocking forever.
+fn writer_loop(reply_rx: Receiver<(u64, ReplyResult)>, write_half: Arc<Mutex<TcpStream>>) {
+    for (id, result) in reply_rx {
+        let frame = match result {
+            Ok(r) => Frame::ReplyOk { id, server_latency: r.latency, logits: r.logits },
+            Err(e) => Frame::ReplyErr { id, err: WireError::from(e) },
+        };
+        if send_frame(&write_half, &frame).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serialize one frame under the connection's write mutex.
+fn send_frame(write_half: &Mutex<TcpStream>, frame: &Frame) -> std::io::Result<()> {
+    let bytes = frame::encode(frame);
+    let mut s = write_half.lock().unwrap();
+    s.write_all(&bytes)?;
+    s.flush()
+}

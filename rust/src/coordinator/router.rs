@@ -27,7 +27,8 @@ use std::sync::Arc;
 use crate::systolic::EngineMode;
 
 use super::server::{
-    BACKOFF_CAP, BACKOFF_START, Reply, ReplyResult, RequestError, ServerHandle, SubmitError,
+    BACKOFF_CAP, BACKOFF_START, Reply, ReplyResult, ReplySink, RequestError, ServerHandle,
+    SubmitError,
 };
 
 /// Serving lane of a replica: the cost/fidelity tier clients route by.
@@ -153,11 +154,40 @@ impl Router {
         tokens: Vec<u16>,
         keep: impl Fn(&Replica) -> bool,
     ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
+        self.route_where_with(tokens.len(), keep, |r| r.handle.submit(task, tokens.clone()))
+    }
+
+    /// Route by lane with a caller-provided reply sink — the variant the
+    /// TCP frame workers use: pipelined remote requests share one tagged
+    /// per-connection channel instead of a one-shot channel each.  On
+    /// success the chosen replica owns a clone of the sink.
+    pub fn route_lane_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        lane: Option<Lane>,
+        sink: ReplySink,
+    ) -> Result<(), RouteError> {
+        self.route_where_with(
+            tokens.len(),
+            |r| lane.map(|l| r.lane == l).unwrap_or(true),
+            |r| r.handle.submit_sink(task, tokens.clone(), sink.clone()),
+        )
+    }
+
+    /// Candidate selection + tiered round-robin failover, generic over how
+    /// a request is handed to a replica (one-shot channel vs tagged sink).
+    fn route_where_with<T>(
+        &self,
+        len: usize,
+        keep: impl Fn(&Replica) -> bool,
+        mut try_submit: impl FnMut(&Replica) -> Result<T, SubmitError>,
+    ) -> Result<T, RouteError> {
         let mut cands: Vec<&Replica> = self
             .replicas
             .iter()
             .filter(|r| keep(r))
-            .filter(|r| r.max_len.map(|ml| tokens.len() <= ml).unwrap_or(true))
+            .filter(|r| r.max_len.map(|ml| len <= ml).unwrap_or(true))
             .collect();
         if cands.is_empty() {
             return Err(RouteError::NoReplicaForMode);
@@ -175,8 +205,8 @@ impl Router {
             let tier = j - i;
             for g in 0..tier {
                 let r = cands[i + (start + g) % tier];
-                match r.handle.submit(task, tokens.clone()) {
-                    Ok(rx) => return Ok(rx),
+                match try_submit(r) {
+                    Ok(out) => return Ok(out),
                     Err(SubmitError::Busy) => continue,
                     // submit() never returns Rejected (explicit rejections
                     // arrive on the reply channel); if it ever did, trying
@@ -464,6 +494,33 @@ mod tests {
             solo.route_lane("sst2", vec![1], Some(Lane::Cheap)),
             Err(RouteError::NoReplicaForMode)
         ));
+    }
+
+    #[test]
+    fn route_lane_sink_multiplexes_over_one_channel() {
+        let mode = EngineMode::Fp32;
+        let (s1, h1) = mk_server(mode);
+        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let (tx, rx) = sync_channel(4);
+        for id in [3u64, 9] {
+            let sink = ReplySink::Tagged { id, tx: tx.clone() };
+            router
+                .route_lane_sink("sst2", vec![1, 2, 3], Some(Lane::Accurate), sink)
+                .unwrap();
+        }
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            let (id, r) = rx.recv().unwrap();
+            r.expect("served");
+            ids.push(id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![3, 9]);
+        // Lane filtering applies to the sink path too.
+        let sink = ReplySink::Tagged { id: 1, tx: tx.clone() };
+        let err = router.route_lane_sink("sst2", vec![1], Some(Lane::Cheap), sink);
+        assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
+        s1.shutdown();
     }
 
     #[test]

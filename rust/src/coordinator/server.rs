@@ -31,11 +31,45 @@ use crate::systolic::{EngineMode, MatrixEngine};
 
 use super::metrics::Metrics;
 
+/// Where a reply goes.  In-process clients get a dedicated one-shot
+/// channel; network connections multiplex every in-flight request of the
+/// connection over one shared channel, tagging each reply with the
+/// client-chosen request id so pipelined replies can be matched up (the
+/// frame workers in [`super::net`] build these).  Either way the engine
+/// workers stay oblivious: they call [`ReplySink::send`] exactly once per
+/// request, and a failed send means the client is gone or hopelessly far
+/// behind — never a panic, never a blocked worker.
+#[derive(Clone)]
+pub enum ReplySink {
+    /// Dedicated one-shot reply channel (in-process clients).
+    Oneshot(SyncSender<ReplyResult>),
+    /// Shared per-connection channel; replies are tagged with the wire
+    /// request id.
+    Tagged { id: u64, tx: SyncSender<(u64, ReplyResult)> },
+}
+
+impl ReplySink {
+    /// Deliver the reply; `true` when it was accepted.  `false` means the
+    /// receiving side is gone (client disconnected / connection writer
+    /// exited) or, for tagged sinks, that the connection's reply channel
+    /// is full — a client that pipelines past the server's in-flight cap
+    /// without reading replies forfeits them.  Either way the caller
+    /// records a dropped reply instead of panicking, and — critically —
+    /// an engine worker **never blocks** on a slow or dead client.
+    pub fn send(&self, r: ReplyResult) -> bool {
+        match self {
+            // Capacity 1 and exactly one send per request: never blocks.
+            ReplySink::Oneshot(tx) => tx.send(r).is_ok(),
+            ReplySink::Tagged { id, tx } => tx.try_send((*id, r)).is_ok(),
+        }
+    }
+}
+
 /// One classification/regression request.
 pub struct Request {
     pub task: String,
     pub tokens: Vec<u16>,
-    pub reply: SyncSender<ReplyResult>,
+    pub reply: ReplySink,
     pub submitted_at: Instant,
 }
 
@@ -136,22 +170,35 @@ impl ServerHandle {
         tokens: Vec<u16>,
     ) -> Result<Receiver<ReplyResult>, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
+        self.submit_sink(task, tokens, ReplySink::Oneshot(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Non-blocking submit with a caller-provided reply sink — the entry
+    /// point the TCP frame workers use so remote requests ride the exact
+    /// same `Request` channel (and accounting) as in-process clients.
+    pub fn submit_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
         let req = Request {
             task: task.to_string(),
             tokens,
-            reply: rtx,
+            reply,
             submitted_at: Instant::now(),
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(req) {
-            Ok(()) => Ok(rrx),
+            Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
             Err(TrySendError::Disconnected(_)) => {
-                // Count the shed so `submitted == completed + rejected`
-                // holds even for submits that race a shutdown.
+                // Count the shed so the counter balance holds even for
+                // submits that race a shutdown.
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Closed)
             }
@@ -351,13 +398,23 @@ fn run_batch(
     batch: Vec<Request>,
     metrics: &Metrics,
 ) {
+    // Deliver-then-count: a reply that cannot be delivered (the client
+    // disconnected and its sink is gone) is recorded as a dropped reply —
+    // `errored`, never `completed` — so the counter balance survives
+    // clients that vanish mid-flight, and the send itself never panics.
+    let send_error = |req: &Request, e: RequestError| {
+        if req.reply.send(Err(e)) {
+            metrics.record_error_reply();
+        } else {
+            metrics.record_dropped_reply();
+        }
+    };
     let task_name = batch[0].task.clone();
     let Some(weights) = models.get(&batch[0].task) else {
         // Unknown task: answer every request explicitly instead of
         // dropping the reply senders.
         for req in batch {
-            metrics.record_error_reply();
-            let _ = req.reply.send(Err(RequestError::UnknownTask));
+            send_error(&req, RequestError::UnknownTask);
         }
         return;
     };
@@ -366,8 +423,7 @@ fn run_batch(
     for req in batch {
         let len = req.tokens.len();
         if len == 0 || len > max_seq {
-            metrics.record_error_reply();
-            let _ = req.reply.send(Err(RequestError::InvalidLength { len, max_seq }));
+            send_error(&req, RequestError::InvalidLength { len, max_seq });
         } else {
             valid.push(req);
         }
@@ -403,8 +459,11 @@ fn run_batch(
     let now = Instant::now();
     for (i, req) in valid.into_iter().enumerate() {
         let latency = now.duration_since(req.submitted_at);
-        metrics.record_latency(latency);
-        let _ = req.reply.send(Ok(Reply { logits: logits.row(i).to_vec(), latency }));
+        if req.reply.send(Ok(Reply { logits: logits.row(i).to_vec(), latency })) {
+            metrics.record_latency(latency);
+        } else {
+            metrics.record_dropped_reply();
+        }
     }
 }
 
@@ -467,7 +526,7 @@ mod tests {
         assert_eq!(got.unwrap_err(), RequestError::UnknownTask);
         let m = srv.shutdown().snapshot();
         assert_eq!(m.errored, 1);
-        assert_eq!(m.submitted, m.completed + m.rejected);
+        assert!(m.balanced(), "counters must balance: {m:?}");
     }
 
     #[test]
@@ -491,7 +550,58 @@ mod tests {
         }
         let m = srv.shutdown().snapshot();
         assert_eq!(m.errored, 3);
-        assert_eq!(m.submitted, m.completed + m.rejected);
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+
+    /// The reply send must not panic or skew the counters when the client
+    /// disconnects before its reply is delivered: the request counts as
+    /// `errored` (with `dropped_replies` breaking the sub-case out), never
+    /// as `completed`.
+    #[test]
+    fn disconnected_client_counts_as_errored() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        // A valid request whose receiver is dropped before the reply...
+        let rx = h.submit("sst2", vec![1, 2, 3]).unwrap();
+        drop(rx);
+        // ...and an invalid one whose error reply is also undeliverable.
+        let rx = h.submit("sst2", vec![0; 99]).unwrap();
+        drop(rx);
+        // A still-connected client interleaved with the ghosts is served.
+        let reply = h.classify("sst2", vec![4, 5]).unwrap();
+        assert_eq!(reply.logits.len(), 2);
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.submitted, 3);
+        assert_eq!(m.completed, 1, "only the live client completes");
+        assert_eq!(m.errored, 2);
+        assert_eq!(m.dropped_replies, 2);
+        assert_eq!(m.rejected, 0);
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+
+    /// Tagged sinks multiplex several in-flight requests over one shared
+    /// channel, matching replies up by the caller-chosen id — the shape
+    /// the TCP connection workers use.
+    #[test]
+    fn tagged_sink_round_trips_ids() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let (tx, rx) = sync_channel::<(u64, ReplyResult)>(8);
+        for id in [7u64, 11, 13] {
+            h.submit_sink("sst2", vec![1, 2], ReplySink::Tagged { id, tx: tx.clone() })
+                .unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let (id, r) = rx.recv().unwrap();
+            r.expect("served");
+            seen.push(id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![7, 11, 13]);
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 3);
+        assert!(m.balanced());
     }
 
     #[test]

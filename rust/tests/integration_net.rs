@@ -1,0 +1,305 @@
+//! End-to-end tests of the `AMFN` TCP frontend: bit-exactness of wire
+//! replies against the in-process path for every engine mode, pipelined
+//! multi-connection traffic with the answered-or-rejected contract and
+//! counter balance, lane selection over the wire, graceful drain via the
+//! shutdown frame, and the load generator driving a live listener.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amfma::coordinator::net::loadgen::{self, LoadgenConfig};
+use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
+use amfma::coordinator::{InferenceServer, Replica, Router, ServerConfig};
+use amfma::model::{Encoder, ModelConfig, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+const MAX_SEQ: usize = 8;
+const VOCAB: usize = 32;
+
+fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        vocab: VOCAB,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_layers: 1,
+        max_seq: MAX_SEQ,
+        n_classes: 2,
+    }
+}
+
+fn tiny_models() -> HashMap<String, Arc<Weights>> {
+    let mut m = HashMap::new();
+    m.insert("sst2".to_string(), Arc::new(Weights::random(tiny_config(), 301)));
+    m.insert("rte".to_string(), Arc::new(Weights::random(tiny_config(), 302)));
+    m
+}
+
+/// One server + one TCP frontend over it, on an ephemeral port.
+fn boot(mode: EngineMode, cfg: ServerConfig) -> (InferenceServer, NetServer) {
+    let srv = InferenceServer::start(tiny_models(), ServerConfig { mode, ..cfg });
+    let router = Arc::new(Router::new(vec![Replica::new(mode, srv.handle())]));
+    let net = NetServer::bind("127.0.0.1:0", router, NetServerConfig::default())
+        .expect("bind ephemeral port");
+    (srv, net)
+}
+
+/// Acceptance criterion: for every engine mode, logits served over TCP are
+/// bit-identical to the in-process offline encoder on the same weights.
+#[test]
+fn wire_replies_are_bit_exact_for_all_modes() {
+    let models = tiny_models();
+    let weights = models.get("sst2").unwrap().clone();
+    for mode in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let mode = EngineMode::parse(mode).unwrap();
+        let (srv, net) = boot(mode, ServerConfig::default());
+        let mut client = Client::connect(net.local_addr()).expect("connect");
+        let enc = Encoder::new(&weights, MatrixEngine::new(mode));
+        let mut rng = Prng::new(41);
+        for len in [1usize, 3, MAX_SEQ] {
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            let reply = client.call("sst2", LaneSelector::Any, &toks).expect("tcp call");
+            let (logits, _lat) = reply.outcome.expect("served");
+            let want = enc.forward_padded(&toks, &[len], len);
+            assert_eq!(logits, want.row(0).to_vec(), "mode {} len {len}", mode.label());
+        }
+        net.shutdown();
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 3);
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+}
+
+/// ≥4 concurrent connections, each pipelining a mixed batch of valid and
+/// invalid requests: every frame gets exactly one reply (matched by id),
+/// nothing is lost, and the server-side counters balance after the drain.
+#[test]
+fn pipelined_connections_all_answered_or_rejected() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let addr = net.local_addr();
+    let n_conns = 5usize;
+    let per_conn = 12usize;
+    let mut served = 0u64;
+    let mut rejected = 0u64;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..n_conns {
+            handles.push(s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Prng::new(700 + c as u64);
+                // Pipeline everything up front; replies may interleave.
+                let mut expect = HashMap::new();
+                for _ in 0..per_conn {
+                    let (task, len): (&str, usize) = match rng.below(5) {
+                        0 => ("no-such-task", 4),
+                        1 => ("sst2", MAX_SEQ + 3), // invalid length
+                        2 => ("rte", 1 + rng.below(MAX_SEQ as u64) as usize),
+                        _ => ("sst2", 1 + rng.below(MAX_SEQ as u64) as usize),
+                    };
+                    let toks: Vec<u16> =
+                        (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+                    let id = client
+                        .send_request(task, LaneSelector::Any, &toks)
+                        .expect("pipelined send");
+                    expect.insert(id, (task.to_string(), len));
+                }
+                let (mut ok, mut rej) = (0u64, 0u64);
+                for _ in 0..per_conn {
+                    let reply = client.recv_reply().expect("no reply may be lost");
+                    let (task, len) =
+                        expect.remove(&reply.id).expect("reply id must match a request");
+                    match reply.outcome {
+                        Ok((logits, _)) => {
+                            assert_eq!(logits.len(), 2);
+                            assert!(task != "no-such-task" && len <= MAX_SEQ);
+                            ok += 1;
+                        }
+                        Err(e) => {
+                            assert!(
+                                task == "no-such-task" || len > MAX_SEQ,
+                                "unexpected rejection {e:?} for {task}/{len}"
+                            );
+                            rej += 1;
+                        }
+                    }
+                }
+                assert!(expect.is_empty(), "zero lost replies");
+                (ok, rej)
+            }));
+        }
+        for h in handles {
+            let (ok, rej) = h.join().unwrap();
+            served += ok;
+            rejected += rej;
+        }
+    });
+    assert_eq!(served + rejected, (n_conns * per_conn) as u64);
+    assert!(served > 0 && rejected > 0, "mix: {served} served, {rejected} rejected");
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, served);
+    assert_eq!(m.errored, rejected);
+    assert!(m.balanced(), "counters must balance: {m:?}");
+}
+
+/// Lane selection crosses the wire: an accurate-only deployment serves
+/// `Accurate` and `Any` but answers `Cheap` with a typed NoReplica error.
+#[test]
+fn lane_selector_is_honored_over_the_wire() {
+    use amfma::coordinator::net::frame::WireError;
+    let mode = EngineMode::Fp32; // accurate lane
+    let (srv, net) = boot(mode, ServerConfig::default());
+    let mut client = Client::connect(net.local_addr()).expect("connect");
+    let toks: Vec<u16> = vec![1, 2, 3];
+    let r = client.call("sst2", LaneSelector::Accurate, &toks).unwrap();
+    assert!(r.outcome.is_ok(), "accurate lane must serve: {r:?}");
+    let r = client.call("sst2", LaneSelector::Any, &toks).unwrap();
+    assert!(r.outcome.is_ok(), "any lane must serve: {r:?}");
+    let r = client.call("sst2", LaneSelector::Cheap, &toks).unwrap();
+    assert_eq!(r.outcome.unwrap_err(), WireError::NoReplica);
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// The shutdown frame triggers a graceful drain: pipelined requests sent
+/// before it are all answered, the ack arrives, requests after the drain
+/// flag get `ShuttingDown`, and the socket EOFs only after the last reply.
+#[test]
+fn shutdown_frame_drains_gracefully() {
+    use amfma::coordinator::net::frame::WireError;
+    let mode = EngineMode::parse("bf16").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    let mut client = Client::connect(net.local_addr()).expect("connect");
+    let mut ids = Vec::new();
+    for i in 0..6u16 {
+        let id = client
+            .send_request("sst2", LaneSelector::Any, &[i % VOCAB as u16, 1, 2])
+            .unwrap();
+        ids.push(id);
+    }
+    let shutdown_id = client.send_shutdown().unwrap();
+    // A request pipelined after the shutdown frame is refused, not lost.
+    let late_id = client.send_request("sst2", LaneSelector::Any, &[1]).unwrap();
+    let mut answered = HashMap::new();
+    for _ in 0..8 {
+        let r = client.recv_reply().expect("drain must deliver every reply");
+        answered.insert(r.id, r.outcome);
+    }
+    for id in ids {
+        assert!(
+            answered.get(&id).expect("pre-drain request answered").is_ok(),
+            "request {id} must be served"
+        );
+    }
+    let ack = answered.get(&shutdown_id).expect("shutdown acked");
+    assert_eq!(ack.as_ref().unwrap().0.len(), 0, "empty ack logits");
+    assert_eq!(
+        answered.get(&late_id).expect("late request answered").as_ref().unwrap_err(),
+        &WireError::ShuttingDown
+    );
+    assert!(net.shutdown_requested(), "drain flag must be set");
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, 6);
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// The closed-loop load generator against a live listener: all requests
+/// complete across ≥4 pipelined connections, zero lost replies, and the
+/// serving bench report validates structurally.
+#[test]
+fn loadgen_completes_against_live_listener() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let mut rng = Prng::new(9);
+    let mut pool = Vec::new();
+    for task in ["sst2", "rte"] {
+        for _ in 0..8 {
+            let len = 1 + rng.below(MAX_SEQ as u64) as usize;
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            pool.push((task.to_string(), toks));
+        }
+    }
+    let cfg = LoadgenConfig {
+        addr: net.local_addr().to_string(),
+        connections: 4,
+        requests: 48,
+        pipeline: 4,
+        lane: LaneSelector::Any,
+        varlen: true,
+        seed: 7,
+        ..Default::default()
+    };
+    let outcome = loadgen::run(&pool, &cfg).expect("loadgen run");
+    assert_eq!(outcome.completed, 48, "all requests complete: {outcome:?}");
+    assert_eq!(outcome.rejected, 0);
+    assert!(outcome.latency.median <= outcome.latency.p95);
+    let rep = loadgen::report(&outcome, &cfg);
+    let json = rep.to_json();
+    assert!(json.contains("\"target\":\"serving\""), "{json}");
+    assert!(json.contains("serving/e2e_latency"), "{json}");
+    assert!(json.contains("\"name\":\"throughput\""), "{json}");
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, 48);
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// A client that connects, pipelines requests and vanishes must not wedge
+/// or panic the server: undeliverable replies count as errored (dropped),
+/// and the counters still balance after the drain.
+#[test]
+fn disconnecting_client_keeps_server_balanced() {
+    let mode = EngineMode::parse("bf16").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        },
+    );
+    {
+        let mut client = Client::connect(net.local_addr()).expect("connect");
+        for _ in 0..4 {
+            client.send_request("sst2", LaneSelector::Any, &[1, 2, 3]).unwrap();
+        }
+        // Drop without reading a single reply: the connection writer hits
+        // a closed socket (or drains into it harmlessly); the server must
+        // survive and stay balanced.
+    }
+    // A fresh client still gets served afterwards.
+    std::thread::sleep(Duration::from_millis(100));
+    let mut client = Client::connect(net.local_addr()).expect("reconnect");
+    let r = client.call("sst2", LaneSelector::Any, &[4, 5]).expect("post-ghost call");
+    assert!(r.outcome.is_ok());
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert!(m.balanced(), "counters must balance after a ghost client: {m:?}");
+    assert!(m.completed >= 1, "the live client was served");
+}
