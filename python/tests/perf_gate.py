@@ -1,17 +1,21 @@
 """Perf-trajectory regression gate over ``BENCH_trajectory.jsonl``.
 
 CI restores the previous runs' trajectory from the actions cache, appends
-this run's ``BENCH_hotpath.json`` and ``BENCH_serving.json`` snapshot
-lines (each snapshot *is* a trajectory line), then runs this gate: for
-every quick-mode result series ``(target, result name)`` it compares the
-newest interpolated median against the previous run's and **fails when
-median throughput regresses beyond a generous tolerance** (default: fail
-only when throughput drops below 40% of the previous run — CI runners are
-noisy; this catches step-function regressions, not jitter).
+this run's ``BENCH_*.json`` snapshot lines (each snapshot *is* a
+trajectory line), then runs this gate: for every quick-mode result series
+``(target, result name, statistic)`` — both ``median_ns`` and the tail
+``p99_ns`` are tracked — it compares the newest value against the
+previous run's and **fails when throughput regresses beyond a generous
+tolerance** (default: fail only when throughput drops below 40% of the
+previous run — CI runners are noisy; this catches step-function
+regressions, not jitter).
 
 A series seen for the first time (seeding the empty trajectory) passes
-trivially.  Non-quick entries are recorded but never gated: full local
-runs and reduced-iteration CI runs are not comparable.
+trivially; trajectory lines that predate a statistic (old snapshots have
+no ``p99_ns``) simply don't contribute to that series, so p99 gating arms
+itself once two consecutive runs carry it.  Non-quick entries are
+recorded but never gated: full local runs and reduced-iteration CI runs
+are not comparable.
 
 Runs two ways:
 
@@ -42,32 +46,42 @@ def load_trajectory(path):
     return docs
 
 
+GATED_STATS = ("median_ns", "p99_ns")
+
+
 def quick_series(docs):
-    """(target, result-name) -> ordered list of median_ns, quick runs only."""
+    """(target, result-name, stat) -> ordered list of ns values, quick only.
+
+    A result that lacks one of the gated stats (old trajectory lines were
+    written before ``p99_ns`` existed) is skipped for that stat only, so
+    its series stays shorter rather than misaligned.
+    """
     series = {}
     for doc in docs:
         if not isinstance(doc, dict) or not doc.get("quick"):
             continue
         for r in doc.get("results", []):
-            median = r.get("median_ns")
-            if isinstance(median, int) and median > 0:
-                series.setdefault((doc.get("target"), r.get("name")), []).append(median)
+            for stat in GATED_STATS:
+                value = r.get(stat)
+                if isinstance(value, int) and value > 0:
+                    key = (doc.get("target"), r.get("name"), stat)
+                    series.setdefault(key, []).append(value)
     return series
 
 
 def gate(docs, tolerance):
-    """Compare each quick series' newest median vs the previous run's.
+    """Compare each quick series' newest value vs the previous run's.
 
     Returns (checked, failures): ``checked`` lists every comparison as
     ``(key, prev_ns, new_ns, throughput_ratio)``; ``failures`` is the
-    subset whose throughput ratio (prev_median / new_median, i.e. >1 is a
-    speedup) fell below ``tolerance``.
+    subset whose throughput ratio (prev / new, i.e. >1 is a speedup)
+    fell below ``tolerance``.
     """
     checked, failures = [], []
-    for key, medians in sorted(quick_series(docs).items()):
-        if len(medians) < 2:
+    for key, values in sorted(quick_series(docs).items()):
+        if len(values) < 2:
             continue  # first sighting: seeds the trajectory
-        prev, new = medians[-2], medians[-1]
+        prev, new = values[-2], values[-1]
         ratio = prev / new
         entry = (key, prev, new, ratio)
         checked.append(entry)
@@ -79,24 +93,26 @@ def gate(docs, tolerance):
 # --- synthetic self-tests (pytest) ---------------------------------------
 
 
-def _doc(target, name, median_ns, quick=True):
+def _doc(target, name, median_ns, quick=True, p99_ns=None):
+    """One trajectory line; ``p99_ns=None`` models a pre-p99 snapshot."""
+    result = {
+        "name": name,
+        "iters": 3,
+        "mean_ns": median_ns,
+        "median_ns": median_ns,
+        "p95_ns": median_ns + 1,
+        "min_ns": median_ns - 1,
+        "throughput": None,
+    }
+    if p99_ns is not None:
+        result["p99_ns"] = p99_ns
     return {
         "schema": "amfma-bench-v1",
         "target": target,
         "git_rev": "deadbeef0000",
         "unix_time": 1_700_000_000,
         "quick": quick,
-        "results": [
-            {
-                "name": name,
-                "iters": 3,
-                "mean_ns": median_ns,
-                "median_ns": median_ns,
-                "p95_ns": median_ns + 1,
-                "min_ns": median_ns - 1,
-                "throughput": None,
-            }
-        ],
+        "results": [result],
         "metrics": [],
         "comparisons": [],
     }
@@ -118,8 +134,27 @@ def test_step_regression_fails():
     _, failures = gate(docs, 0.4)  # 4x slower = 0.25 ratio: gated
     assert len(failures) == 1
     (key, prev, new, ratio) = failures[0]
-    assert key == ("serving", "e2e") and prev == 100 and new == 400
+    assert key == ("serving", "e2e", "median_ns") and prev == 100 and new == 400
     assert abs(ratio - 0.25) < 1e-12
+
+
+def test_p99_tail_regression_fails_even_with_a_stable_median():
+    docs = [
+        _doc("serving_front", "e2e", 100, p99_ns=120),
+        _doc("serving_front", "e2e", 100, p99_ns=600),  # 5x tail blowup
+    ]
+    checked, failures = gate(docs, 0.4)
+    assert len(checked) == 2  # median and p99 series both compared
+    assert [f[0] for f in failures] == [("serving_front", "e2e", "p99_ns")]
+
+
+def test_missing_p99_in_old_lines_seeds_without_gating():
+    # The restored trajectory predates p99: the median series still gates,
+    # while the one-entry p99 series just seeds.
+    docs = [_doc("serving", "e2e", 100), _doc("serving", "e2e", 400, p99_ns=500)]
+    checked, failures = gate(docs, 0.4)
+    assert [c[0] for c in checked] == [("serving", "e2e", "median_ns")]
+    assert [f[0] for f in failures] == [("serving", "e2e", "median_ns")]
 
 
 def test_speedups_and_recovery_pass():
@@ -146,7 +181,7 @@ def test_series_are_independent():
         _doc("serving", "b", 1000),
     ]
     _, failures = gate(docs, 0.4)
-    assert [f[0] for f in failures] == [("serving", "b")]
+    assert [f[0] for f in failures] == [("serving", "b", "median_ns")]
 
 
 def main(argv):
@@ -159,10 +194,10 @@ def main(argv):
     docs = load_trajectory(path)
     checked, failures = gate(docs, tolerance)
     print(f"perf gate over {path}: {len(docs)} runs, {len(checked)} series compared")
-    for (target, name), prev, new, ratio in checked:
+    for (target, name, stat), prev, new, ratio in checked:
         verdict = "FAIL" if ratio < tolerance else "ok"
         print(
-            f"  [{verdict}] {target}/{name}: median {prev}ns -> {new}ns "
+            f"  [{verdict}] {target}/{name} {stat}: {prev}ns -> {new}ns "
             f"(throughput x{ratio:.2f}, tolerance x{tolerance:.2f})"
         )
     if failures:

@@ -37,6 +37,7 @@ _RESULT_FIELDS = (
     ("mean_ns", int),
     ("median_ns", int),
     ("p95_ns", int),
+    ("p99_ns", int),
     ("min_ns", int),
 )
 
@@ -56,7 +57,7 @@ def validate_report(doc):
             assert key in r, f"result missing {key!r}"
             assert isinstance(r[key], typ), f"result {key!r} must be {typ.__name__}"
         assert r["iters"] > 0, "iters must be positive"
-        assert r["min_ns"] <= r["median_ns"] <= r["p95_ns"], (
+        assert r["min_ns"] <= r["median_ns"] <= r["p95_ns"] <= r["p99_ns"], (
             f"order statistics out of order in {r['name']!r}"
         )
         tp = r.get("throughput")
@@ -89,6 +90,7 @@ SAMPLE = {
             "mean_ns": 120_000_000,
             "median_ns": 118_000_000,
             "p95_ns": 131_000_000,
+            "p99_ns": 133_000_000,
             "min_ns": 110_000_000,
             "throughput": {"value": 1.4e8, "unit": "FMA/s"},
         },
@@ -98,6 +100,7 @@ SAMPLE = {
             "mean_ns": 9_000_000,
             "median_ns": 9_000_000,
             "p95_ns": 9_500_000,
+            "p99_ns": 9_900_000,
             "min_ns": 8_000_000,
             "throughput": None,
         },
@@ -135,6 +138,14 @@ def test_validator_rejects_broken_documents():
 
     bad = json.loads(json.dumps(SAMPLE))
     bad["results"][0]["p95_ns"] = 1  # below the median: stats out of order
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["results"][0]["p99_ns"] = bad["results"][0]["p95_ns"] - 1  # tail below p95
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["results"][0].pop("p99_ns")  # pre-p99 snapshots are no longer valid
     _must_fail(bad)
 
     bad = json.loads(json.dumps(SAMPLE))

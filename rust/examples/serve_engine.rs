@@ -26,7 +26,7 @@ use std::time::Instant;
 use amfma::autotune::{PrecisionPolicy, Site};
 use amfma::config::Args;
 use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
-use amfma::coordinator::{InferenceServer, Lane, Replica, Router, ServerConfig};
+use amfma::coordinator::{InferenceServer, Lane, ReplicaSpec, Router, ServerConfig};
 use amfma::data::tasks::GLUE_TASKS;
 use amfma::model::{eval::weights_path, ModelConfig, Weights};
 use amfma::prng::Prng;
@@ -102,9 +102,9 @@ fn main() {
         ServerConfig { mode: mode_ref, ..Default::default() },
     );
     let router = Arc::new(Router::new(vec![
-        Replica::with_max_len(mode_eff, short_cap, srv_short.handle()),
-        Replica::new(mode_eff, srv_eff.handle()),
-        Replica::new(mode_ref, srv_ref.handle()),
+        ReplicaSpec::new(mode_eff).max_len(short_cap).local(srv_short.handle()),
+        ReplicaSpec::new(mode_eff).local(srv_eff.handle()),
+        ReplicaSpec::new(mode_ref).local(srv_ref.handle()),
     ]));
     println!("lanes: {:?}", router.lanes().iter().map(|l| l.label()).collect::<Vec<_>>());
 

@@ -98,12 +98,13 @@ impl BenchReport {
             };
             s.push_str(&format!(
                 "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\
-                 \"p95_ns\":{},\"min_ns\":{},\"throughput\":{}}}",
+                 \"p95_ns\":{},\"p99_ns\":{},\"min_ns\":{},\"throughput\":{}}}",
                 esc(&r.name),
                 r.iters,
                 r.mean.as_nanos(),
                 r.median.as_nanos(),
                 r.p95.as_nanos(),
+                r.p99.as_nanos(),
                 r.min.as_nanos(),
                 tp
             ));
@@ -243,6 +244,7 @@ mod tests {
         assert!(j.contains("sample \\\"quoted\\\""), "{j}");
         assert!(j.contains("\"ratio\":2"));
         assert!(j.contains("\"unit\":\"FMA/s\""));
+        assert!(j.contains("\"p99_ns\":"), "{j}");
         assert!(j.contains("\"git_rev\":\""));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());

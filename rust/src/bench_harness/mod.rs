@@ -22,6 +22,9 @@ pub struct BenchResult {
     pub mean: Duration,
     pub median: Duration,
     pub p95: Duration,
+    /// Tail latency: the serving gates watch p99 as well as the median,
+    /// because a shard ejection or retry storm shows up in the tail first.
+    pub p99: Duration,
     pub min: Duration,
     /// Optional throughput annotation: (value, unit), e.g. (1.2e9, "FMA/s").
     pub throughput: Option<(f64, &'static str)>,
@@ -34,8 +37,8 @@ impl BenchResult {
             .map(|(v, u)| format!("  {:>10.3e} {u}", v))
             .unwrap_or_default();
         format!(
-            "{:<44} {:>10.3?} (median {:>10.3?}, p95 {:>10.3?}, n={}){tp}",
-            self.name, self.mean, self.median, self.p95, self.iters
+            "{:<44} {:>10.3?} (median {:>10.3?}, p95 {:>10.3?}, p99 {:>10.3?}, n={}){tp}",
+            self.name, self.mean, self.median, self.p95, self.p99, self.iters
         )
     }
 }
@@ -122,6 +125,7 @@ fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
         mean: total / n as u32,
         median: quantile(&samples, 0.5),
         p95: quantile(&samples, 0.95),
+        p99: quantile(&samples, 0.99),
         min: samples[0],
         throughput: None,
     }
@@ -157,7 +161,7 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(r.iters >= 5);
-        assert!(r.min <= r.median && r.median <= r.p95);
+        assert!(r.min <= r.median && r.median <= r.p95 && r.p95 <= r.p99);
     }
 
     #[test]
@@ -183,6 +187,8 @@ mod tests {
         assert_eq!(r.median, d(30));
         // p95 rank = 0.95·4 = 3.8 → 40 + 0.8·(50−40) = 48.
         assert_eq!(r.p95, d(48));
+        // p99 rank = 0.99·4 = 3.96 → 40 + 0.96·10 = 49.6 → 50 (rounded).
+        assert_eq!(r.p99, d(50));
     }
 
     #[test]
@@ -209,7 +215,8 @@ mod tests {
             let samples: Vec<Duration> = (1..=n).map(|i| d(i * 10)).collect();
             let r = summarize("range", samples);
             assert!(r.median <= r.p95, "n={n}");
-            assert!(r.p95 <= d(n * 10), "n={n}: p95 {:?} above max", r.p95);
+            assert!(r.p95 <= r.p99, "n={n}");
+            assert!(r.p99 <= d(n * 10), "n={n}: p99 {:?} above max", r.p99);
             assert!(r.p95 >= r.min, "n={n}");
         }
     }

@@ -8,6 +8,7 @@
 //! amfma tune  [--task NAME] [--budget P] [--out FILE]    calibrate a policy
 //! amfma serve [--mode M] [--policy FILE] [--varlen]      serving demo
 //! amfma serve --listen ADDR [--port-file F]              TCP frontend (AMFN)
+//! amfma front --shard ADDR [--shard ADDR ...]            shard-tier front
 //! amfma loadgen --addr HOST:PORT [--quick] [--json]      TCP load generator
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
 //! amfma info                                             artifact status
@@ -31,6 +32,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("front") => cmd_front(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("cycles") => cmd_cycles(&args),
         Some("info") => cmd_info(),
@@ -56,10 +58,18 @@ USAGE:
               [--concurrency C] [--varlen] [--length-bucket W]  batching server
   amfma serve --listen 127.0.0.1:0 [--port-file F] ...          TCP frontend:
               serves AMFN frames until a client sends a shutdown frame
+  amfma front --shard HOST:PORT [--shard HOST:PORT ...]
+              [--listen 127.0.0.1:0] [--port-file F] [--mode M] [--lane L]
+              [--pool 2] [--max-inflight 256] [--timeout-ms 5000]
+              [--connect-timeout-ms 1000] [--health-interval-ms 500]
+              [--max-conns 1024]                                shard-tier
+              front: routes AMFN clients across remote engine shards with
+              load-aware selection, health ejection and graceful drain
   amfma loadgen --addr HOST:PORT [--connections 4] [--requests N]
               [--pipeline 4] [--lane any|cheap|accurate] [--varlen]
+              [--connect-timeout-ms 5000] [--bench-target serving]
               [--quick] [--json] [--shutdown]                   closed-loop TCP
-              load generator; --json writes BENCH_serving.json + trajectory
+              load generator; --json writes BENCH_<target>.json + trajectory
   amfma cycles --m M --k K --n N [--grid 16]
   amfma info";
 
@@ -446,7 +456,7 @@ fn serve_listen(
     length_bucket: usize,
 ) -> Result<()> {
     use crate::coordinator::net::{NetServer, NetServerConfig};
-    use crate::coordinator::{InferenceServer, Lane, Replica, Router, ServerConfig};
+    use crate::coordinator::{InferenceServer, Lane, ReplicaSpec, Router, ServerConfig};
 
     let n_tasks = models.len();
     let has_policy = !policies.is_empty();
@@ -454,13 +464,13 @@ fn serve_listen(
         models,
         ServerConfig { mode, max_batch, length_bucket, policies, ..Default::default() },
     );
-    let mut replica = Replica::new(mode, srv.handle());
+    let mut spec = ReplicaSpec::new(mode);
     if has_policy {
         // A policy deployment is a cheap-lane offering even when its
-        // default mode is accurate (mirrors `Replica::with_lane` docs).
-        replica = replica.with_lane(Lane::Cheap);
+        // default mode is accurate (mirrors `ReplicaSpec::lane` docs).
+        spec = spec.lane(Lane::Cheap);
     }
-    let router = std::sync::Arc::new(Router::new(vec![replica]));
+    let router = std::sync::Arc::new(Router::new(vec![spec.local(srv.handle())]));
     let net = NetServer::bind(listen, router, NetServerConfig::default())
         .with_context(|| format!("bind {listen}"))?;
     let addr = net.local_addr();
@@ -483,6 +493,105 @@ fn serve_listen(
         "metrics balanced: submitted={} == completed={} + rejected={} + errored={}",
         m.submitted, m.completed, m.rejected, m.errored
     );
+    Ok(())
+}
+
+/// `amfma front`: the shard-tier front process.  Builds a router whose
+/// replicas are *remote* backends — one pooled `AMFN` connection set per
+/// `amfma serve --listen` engine shard — and exposes the same TCP
+/// frontend clients already speak.  Routing is load-aware (in-flight
+/// counts + smoothed latency), shards are ejected while their health
+/// probes fail and re-admitted when they recover, per-request deadlines
+/// turn a hung shard into typed `Timeout` rejections, and a client
+/// shutdown frame drains every shard connection gracefully before the
+/// front verifies the per-shard
+/// `submitted == completed + rejected + errored` balance and exits.
+fn cmd_front(args: &Args) -> Result<()> {
+    use crate::coordinator::net::{NetServer, NetServerConfig};
+    use crate::coordinator::{Lane, RemoteBackendConfig, ReplicaSpec, Router};
+    use std::time::Duration;
+
+    let shards = args.get_all("shard");
+    if shards.is_empty() {
+        bail!("front needs at least one --shard HOST:PORT (an `amfma serve --listen` address)");
+    }
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
+    let mode = EngineMode::parse(args.get("mode").unwrap_or("bf16an-1-2"))
+        .context("bad --mode")?;
+    let lane = match args.get("lane") {
+        None => None,
+        Some("cheap") => Some(Lane::Cheap),
+        Some("accurate") => Some(Lane::Accurate),
+        Some(other) => bail!("bad --lane {other} (cheap|accurate)"),
+    };
+    let ms = |key: &str, default: usize| Duration::from_millis(args.get_usize(key, default) as u64);
+    let backend_cfg = RemoteBackendConfig {
+        pool: args.get_usize("pool", 2),
+        max_inflight: args.get_usize("max-inflight", 256),
+        connect_timeout: ms("connect-timeout-ms", 1000),
+        request_timeout: ms("timeout-ms", 5000),
+        health_interval: ms("health-interval-ms", 500),
+        ..Default::default()
+    };
+    let replicas = shards
+        .iter()
+        .map(|addr| {
+            let mut spec = ReplicaSpec::new(mode);
+            if let Some(l) = lane {
+                spec = spec.lane(l);
+            }
+            spec.remote(addr.clone(), backend_cfg.clone())
+        })
+        .collect();
+    let router = std::sync::Arc::new(Router::new(replicas));
+    let net_cfg = NetServerConfig {
+        max_conns: args.get_usize("max-conns", 1024),
+        ..Default::default()
+    };
+    let net = NetServer::bind(&listen, router.clone(), net_cfg)
+        .with_context(|| format!("bind {listen}"))?;
+    let addr = net.local_addr();
+    println!(
+        "front listening on {addr} — {} shard(s), mode {}, pool {}, inflight cap {}/shard",
+        shards.len(),
+        mode.label(),
+        backend_cfg.pool,
+        backend_cfg.max_inflight
+    );
+    for r in router.replicas() {
+        println!("  shard: {}", r.backend.describe());
+    }
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, format!("{addr}\n")).with_context(|| format!("write {pf}"))?;
+    }
+    while !net.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("shutdown frame received — draining {} shard(s)", shards.len());
+    // Drain the shard connections first (every in-flight reply is
+    // delivered or expired into its sink), then flush the client-facing
+    // frontend so those replies reach their sockets.
+    router.drain_all();
+    let rejected_conns = net.rejected_conns();
+    net.shutdown();
+    let mut ok = true;
+    for (label, m) in router.metrics() {
+        println!("--- {label} ---");
+        print!("{}", m.render());
+        if m.balanced() {
+            println!(
+                "metrics balanced: submitted={} == completed={} + rejected={} + errored={}",
+                m.submitted, m.completed, m.rejected, m.errored
+            );
+        } else {
+            ok = false;
+            eprintln!("metrics IMBALANCED: {m:?}");
+        }
+    }
+    println!("admission-rejected connections: {rejected_conns}");
+    if !ok {
+        bail!("per-shard metrics imbalanced after drain");
+    }
     Ok(())
 }
 
@@ -514,6 +623,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .context("bad --lane (any|cheap|accurate)")?,
         varlen: args.has_flag("varlen"),
         seed: args.get_usize("seed", 42) as u64,
+        connect_timeout: std::time::Duration::from_millis(
+            args.get_usize("connect-timeout-ms", 5000) as u64,
+        ),
+        bench_target: args.get("bench-target").unwrap_or("serving").to_string(),
         ..Default::default()
     };
     let pool = load_request_pool(args.get_usize("pool", 32))?;
@@ -549,7 +662,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         println!("wrote {}", p.display());
     }
     if args.has_flag("shutdown") {
-        let mut c = Client::connect(addr).context("connect for shutdown")?;
+        let mut c = Client::connect_timeout(addr, cfg.connect_timeout)
+            .context("connect for shutdown")?;
         c.send_shutdown().context("send shutdown frame")?;
         let ack = c.recv_reply().map_err(crate::error::Error::msg)?;
         match ack.outcome {

@@ -4,10 +4,12 @@
 use std::collections::HashMap;
 
 /// Parsed command line: positional args + `--key value` / `--flag` options.
+/// Options may repeat (`--shard A --shard B`); [`Args::get`] returns the
+/// last occurrence, [`Args::get_all`] every one in order.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
-    pub options: HashMap<String, String>,
+    pub options: HashMap<String, Vec<String>>,
     pub flags: Vec<String>,
 }
 
@@ -19,9 +21,9 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 // `--key=value`, `--key value`, or bare `--flag`
                 if let Some((k, v)) = key.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
+                    out.options.entry(k.to_string()).or_default().push(v.to_string());
                 } else if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.options.insert(key.to_string(), argv.next().unwrap());
+                    out.options.entry(key.to_string()).or_default().push(argv.next().unwrap());
                 } else {
                     out.flags.push(key.to_string());
                 }
@@ -36,8 +38,15 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Last occurrence of `--key` (the conventional "later wins").
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.options.get(key).map(|s| s.as_str())
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of `--key`, in command-line order — for options
+    /// that accumulate, like `amfma front --shard A --shard B`.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
@@ -77,5 +86,14 @@ mod tests {
         let a = parse("cost --fig7");
         assert!(a.has_flag("fig7"));
         assert!(a.get("fig7").is_none());
+    }
+
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let a = parse("front --shard 127.0.0.1:1 --shard=127.0.0.1:2 --mode a --mode b");
+        assert_eq!(a.get_all("shard"), ["127.0.0.1:1", "127.0.0.1:2"]);
+        // get() keeps the conventional later-wins reading.
+        assert_eq!(a.get("mode"), Some("b"));
+        assert!(a.get_all("missing").is_empty());
     }
 }

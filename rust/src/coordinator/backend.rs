@@ -1,0 +1,645 @@
+//! Transport-agnostic serving backends: the [`Backend`] trait unifies the
+//! in-process [`ServerHandle`] and the TCP [`RemoteBackend`], so the
+//! [`super::Router`] routes over "something that answers requests" rather
+//! than over a concrete server type.  This is what turns the single-process
+//! server into a shard tier: an `amfma front` process builds its router out
+//! of `RemoteBackend`s pointing at `amfma serve --listen` shards, while
+//! `amfma serve` keeps building it out of local handles — same router,
+//! same lane logic, same metrics, different transport.
+//!
+//! [`RemoteBackend`] is a small connection pool over the `AMFN` wire
+//! protocol ([`super::net::frame`]): submits are written non-blockingly
+//! round-robin across pooled connections, per-connection reader threads
+//! match replies back to their [`ReplySink`]s by request id, a sweeper
+//! expires requests whose deadline passed (typed
+//! [`RequestError::Timeout`], counted in metrics), and a health thread
+//! probes the shard with [`Frame::Health`] echoes — flipping
+//! [`Backend::is_healthy`] for router-level ejection and re-admission.
+//! Draining sends [`Frame::Drain`] and waits for the shard's
+//! echo-after-flush barrier, then closes the connections *from this side*
+//! so the shard's port stays free of TIME_WAIT for a rolling restart.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown as SockShutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::net::frame::{self, Frame, FrameBuffer, LaneSelector, WireError};
+use super::net::Client;
+use super::server::{Reply, ReplySink, RequestError, ServerHandle, SubmitError};
+
+/// What the router needs from a replica's compute, local or remote.
+///
+/// Contract mirrored from [`ServerHandle`]: `submit_sink` is non-blocking
+/// and every accepted request is eventually answered through its sink
+/// (success, typed error, or — for remote backends — a deadline expiry);
+/// rejected submits are counted in `metrics` so
+/// `submitted == completed + rejected + errored` holds per backend once
+/// traffic drains.
+pub trait Backend: Send + Sync {
+    /// Non-blocking submit; `Err(Busy)` / `Err(Closed)` let the router
+    /// fail over to another replica.
+    fn submit_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError>;
+
+    /// This backend's counters — also the router's load signals
+    /// ([`Metrics::inflight`] / [`Metrics::ewma_us`]).
+    fn metrics(&self) -> &Arc<Metrics>;
+
+    /// False while the backend is known-unreachable; the router skips it
+    /// (ejection) and resumes routing when probes succeed (re-admission).
+    /// Local backends are always healthy — their failure mode is `Closed`.
+    fn is_healthy(&self) -> bool;
+
+    /// Graceful flush: stop taking work, deliver every in-flight reply
+    /// (or expire it), release transport resources.  Idempotent.  The
+    /// router additionally stops routing to a replica being drained; see
+    /// `Router::drain_replica`.
+    fn drain(&self);
+
+    /// Human-readable transport description for logs and labels.
+    fn describe(&self) -> String;
+}
+
+impl Backend for ServerHandle {
+    fn submit_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        ServerHandle::submit_sink(self, task, tokens, reply)
+    }
+
+    fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    fn is_healthy(&self) -> bool {
+        true
+    }
+
+    fn drain(&self) {
+        // The in-process server drains when its owner shuts it down; the
+        // handle itself holds no transport state to flush.
+    }
+
+    fn describe(&self) -> String {
+        "local".to_string()
+    }
+}
+
+/// Tuning knobs of a [`RemoteBackend`].
+#[derive(Debug, Clone)]
+pub struct RemoteBackendConfig {
+    /// Pooled connections to the shard (submits round-robin over them).
+    pub pool: usize,
+    /// Client-side admission cap: submits beyond this many unanswered
+    /// requests are rejected `Busy` (counted) instead of queued.
+    pub max_inflight: usize,
+    /// TCP connect deadline (lazy connects and health probes).
+    pub connect_timeout: Duration,
+    /// Per-request reply deadline; expiry answers the sink with the typed
+    /// [`RequestError::Timeout`] and counts it in metrics.
+    pub request_timeout: Duration,
+    /// Health-probe period: a fresh connection + [`Frame::Health`] echo
+    /// per probe, driving ejection / re-admission.
+    pub health_interval: Duration,
+    /// Reader poll interval — also the timeout-sweep cadence.
+    pub poll: Duration,
+}
+
+impl Default for RemoteBackendConfig {
+    fn default() -> Self {
+        RemoteBackendConfig {
+            pool: 2,
+            max_inflight: 256,
+            connect_timeout: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(5),
+            health_interval: Duration::from_millis(500),
+            poll: Duration::from_millis(25),
+        }
+    }
+}
+
+/// One in-flight request awaiting its reply frame.
+struct Pending {
+    sink: ReplySink,
+    born: Instant,
+    deadline: Instant,
+    /// Unique id of the pooled connection that carried the request, so a
+    /// dying connection fails exactly its own in-flight work.
+    conn: u64,
+}
+
+/// One pooled connection's write half, tagged with its unique id.
+struct Slot {
+    id: u64,
+    stream: TcpStream,
+}
+
+struct Shared {
+    addr: String,
+    cfg: RemoteBackendConfig,
+    metrics: Arc<Metrics>,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    conn_seq: AtomicU64,
+    rr: AtomicUsize,
+    pending: Mutex<HashMap<u64, Pending>>,
+    slots: Vec<Mutex<Option<Slot>>>,
+}
+
+/// A pooled TCP backend speaking `AMFN` to one `amfma serve --listen`
+/// shard.  Construction never blocks on the network: connections are
+/// opened lazily on first submit, and the shard may even come up later —
+/// the health thread re-admits it when probes start succeeding.
+pub struct RemoteBackend {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl RemoteBackend {
+    /// Create a backend for the shard at `addr` (e.g. `"127.0.0.1:7433"`).
+    pub fn connect(addr: impl Into<String>, cfg: RemoteBackendConfig) -> Arc<RemoteBackend> {
+        let shared = Arc::new(Shared {
+            addr: addr.into(),
+            slots: (0..cfg.pool.max(1)).map(|_| Mutex::new(None)).collect(),
+            cfg,
+            metrics: Arc::new(Metrics::default()),
+            // Optimistic until the first probe says otherwise: a front
+            // must route immediately when its shards are already up.
+            healthy: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            conn_seq: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            pending: Mutex::new(HashMap::new()),
+        });
+        let backend = Arc::new(RemoteBackend { shared: shared.clone(), threads: Mutex::new(Vec::new()) });
+        let health = std::thread::spawn(move || health_loop(shared));
+        backend.threads.lock().unwrap().push(health);
+        backend
+    }
+
+    /// The shard address this backend fronts.
+    pub fn addr(&self) -> &str {
+        &self.shared.addr
+    }
+
+    /// Stop everything: close connections, answer leftover in-flight
+    /// requests `Unavailable`, join the health and reader threads.  Runs
+    /// on drop; callable earlier for deterministic teardown.
+    pub fn shutdown(&self) {
+        let sh = &self.shared;
+        if sh.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for slot in &sh.slots {
+            if let Some(s) = slot.lock().unwrap().take() {
+                let _ = s.stream.shutdown(SockShutdown::Both);
+            }
+        }
+        let leftovers: Vec<Pending> = {
+            let mut pending = sh.pending.lock().unwrap();
+            pending.drain().map(|(_, p)| p).collect()
+        };
+        for p in leftovers {
+            deliver(sh, p.sink, Err(RequestError::Unavailable), None);
+        }
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn submit_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        let sh = &self.shared;
+        sh.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if sh.stop.load(Ordering::SeqCst) || sh.draining.load(Ordering::SeqCst) {
+            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
+        if sh.pending.lock().unwrap().len() >= sh.cfg.max_inflight.max(1) {
+            // Client-side admission: don't pile unbounded work onto a
+            // shard that has stopped keeping up.
+            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy);
+        }
+        let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
+        // The shard routes by its own replica set; lane placement already
+        // happened in the front's router when it picked this backend.
+        let bytes = frame::encode(&Frame::Request {
+            id,
+            lane: LaneSelector::Any,
+            task: task.to_string(),
+            tokens,
+        });
+        let born = Instant::now();
+        let slot_idx = sh.rr.fetch_add(1, Ordering::Relaxed) % sh.slots.len();
+        let mut slot = sh.slots[slot_idx].lock().unwrap();
+        if slot.is_none() {
+            match open_conn(sh) {
+                Ok((new_slot, handle)) => {
+                    *slot = Some(new_slot);
+                    self.threads.lock().unwrap().push(handle);
+                }
+                Err(_) => {
+                    drop(slot);
+                    sh.healthy.store(false, Ordering::SeqCst);
+                    sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    // Busy (not Closed): the router fails over and may come
+                    // back once the shard is re-admitted.
+                    return Err(SubmitError::Busy);
+                }
+            }
+        }
+        let conn_id = slot.as_ref().unwrap().id;
+        sh.pending.lock().unwrap().insert(
+            id,
+            Pending { sink: reply, born, deadline: born + sh.cfg.request_timeout, conn: conn_id },
+        );
+        let stream = &mut slot.as_mut().unwrap().stream;
+        match stream.write_all(&bytes).and_then(|_| stream.flush()) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                if let Some(s) = slot.take() {
+                    let _ = s.stream.shutdown(SockShutdown::Both);
+                }
+                drop(slot);
+                // Never written, so the reply can't arrive: withdraw the
+                // pending entry and shed instead.
+                sh.pending.lock().unwrap().remove(&id);
+                sh.healthy.store(false, Ordering::SeqCst);
+                sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+        }
+    }
+
+    fn metrics(&self) -> &Arc<Metrics> {
+        &self.shared.metrics
+    }
+
+    fn is_healthy(&self) -> bool {
+        self.shared.healthy.load(Ordering::SeqCst)
+    }
+
+    /// Flush-and-disconnect: stop taking submits, send [`Frame::Drain`] on
+    /// every pooled connection, wait for the shard's echo-after-flush to
+    /// deliver the in-flight replies (expiring stragglers as timeouts),
+    /// then close from this side — the shard's port stays rebindable.
+    /// Afterwards the backend reads unhealthy until a probe succeeds, and
+    /// submits resume lazily — which is exactly the rolling-restart cycle.
+    fn drain(&self) {
+        let sh = &self.shared;
+        sh.draining.store(true, Ordering::SeqCst);
+        for slot in &sh.slots {
+            let mut guard = slot.lock().unwrap();
+            if let Some(s) = guard.as_mut() {
+                let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
+                let _ = s
+                    .stream
+                    .write_all(&frame::encode(&Frame::Drain { id }))
+                    .and_then(|_| s.stream.flush());
+            }
+        }
+        let deadline = Instant::now() + sh.cfg.request_timeout + sh.cfg.poll;
+        while Instant::now() < deadline {
+            if sh.pending.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(sh.cfg.poll.min(Duration::from_millis(10)));
+        }
+        // Anything the shard never answered is expired as a timeout so the
+        // per-backend balance still holds.
+        sweep(sh, None);
+        for slot in &sh.slots {
+            if let Some(s) = slot.lock().unwrap().take() {
+                let _ = s.stream.shutdown(SockShutdown::Both);
+            }
+        }
+        sh.healthy.store(false, Ordering::SeqCst);
+        sh.draining.store(false, Ordering::SeqCst);
+    }
+
+    fn describe(&self) -> String {
+        format!("remote({})", self.shared.addr)
+    }
+}
+
+/// Deliver a reply through its sink, keeping the metric buckets disjoint:
+/// `Ok` counts completed (with latency when known), typed errors count
+/// errored/timeouts, and an undeliverable reply counts dropped.
+fn deliver(sh: &Shared, sink: ReplySink, result: Result<Reply, RequestError>, born: Option<Instant>) {
+    let is_timeout = matches!(result, Err(RequestError::Timeout));
+    let ok = result.is_ok();
+    if sink.send(result) {
+        if ok {
+            sh.metrics.record_latency(born.map(|b| b.elapsed()).unwrap_or_default());
+        } else if is_timeout {
+            sh.metrics.record_timeout();
+        } else {
+            sh.metrics.record_error_reply();
+        }
+    } else {
+        sh.metrics.record_dropped_reply();
+    }
+}
+
+/// Expire pending requests: those past their deadline, or — when `now` is
+/// `None` — every one of them (drain teardown).
+fn sweep(sh: &Shared, now: Option<Instant>) {
+    let expired: Vec<Pending> = {
+        let mut pending = sh.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| now.is_none_or(|t| t >= p.deadline))
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter().filter_map(|id| pending.remove(&id)).collect()
+    };
+    for p in expired {
+        deliver(sh, p.sink, Err(RequestError::Timeout), None);
+    }
+}
+
+/// Kill the pooled connection `conn_id`: close its socket, clear its slot,
+/// answer its in-flight requests `Unavailable`, mark the shard unhealthy
+/// until a probe says otherwise.
+fn fail_conn(sh: &Shared, conn_id: u64) {
+    for slot in &sh.slots {
+        let mut guard = slot.lock().unwrap();
+        if guard.as_ref().is_some_and(|s| s.id == conn_id) {
+            if let Some(s) = guard.take() {
+                let _ = s.stream.shutdown(SockShutdown::Both);
+            }
+        }
+    }
+    let dead: Vec<Pending> = {
+        let mut pending = sh.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.conn == conn_id)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter().filter_map(|id| pending.remove(&id)).collect()
+    };
+    if !dead.is_empty() {
+        sh.healthy.store(false, Ordering::SeqCst);
+    }
+    for p in dead {
+        deliver(sh, p.sink, Err(RequestError::Unavailable), None);
+    }
+}
+
+/// Open one pooled connection and spawn its reader thread.
+fn open_conn(
+    sh: &Arc<Shared>,
+) -> std::io::Result<(Slot, std::thread::JoinHandle<()>)> {
+    let mut last: Option<std::io::Error> = None;
+    for addr in sh.addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&addr, sh.cfg.connect_timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                let conn_id = sh.conn_seq.fetch_add(1, Ordering::Relaxed);
+                let rstream = stream.try_clone()?;
+                rstream.set_read_timeout(Some(sh.cfg.poll))?;
+                let shc = sh.clone();
+                let handle = std::thread::spawn(move || reader_loop(shc, rstream, conn_id));
+                return Ok((Slot { id: conn_id, stream }, handle));
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::AddrNotAvailable, "address resolved to nothing")
+    }))
+}
+
+/// Map a shard's wire-level rejection onto the local request-error type a
+/// sink expects (the inverse of `WireError::from(RequestError)`).
+fn request_error_of(err: WireError) -> RequestError {
+    match err {
+        WireError::UnknownTask => RequestError::UnknownTask,
+        WireError::InvalidLength { len, max_seq } => {
+            RequestError::InvalidLength { len: len as usize, max_seq: max_seq as usize }
+        }
+        WireError::Busy => RequestError::Busy,
+        WireError::Timeout => RequestError::Timeout,
+        WireError::NoReplica | WireError::ShuttingDown => RequestError::Unavailable,
+    }
+}
+
+/// Per-connection reader: match reply frames back to pending sinks,
+/// sweep deadlines while idle, fail the connection's in-flight work when
+/// the socket dies.
+fn reader_loop(sh: Arc<Shared>, stream: TcpStream, conn_id: u64) {
+    let mut fb = FrameBuffer::default();
+    let mut chunk = [0u8; 4096];
+    let mut reader = &stream;
+    loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match std::io::Read::read(&mut reader, &mut chunk) {
+            Ok(0) => {
+                fail_conn(&sh, conn_id);
+                return;
+            }
+            Ok(n) => fb.push(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                sweep(&sh, Some(Instant::now()));
+                continue;
+            }
+            Err(_) => {
+                if !sh.stop.load(Ordering::SeqCst) {
+                    fail_conn(&sh, conn_id);
+                }
+                return;
+            }
+        }
+        loop {
+            let frame = match fb.next_frame() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(_) => {
+                    fail_conn(&sh, conn_id);
+                    return;
+                }
+            };
+            match frame {
+                Frame::ReplyOk { id, logits, .. } => {
+                    if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+                        // End-to-end latency as this tier saw it (the
+                        // frame's server_latency excludes the wire).
+                        let latency = p.born.elapsed();
+                        deliver(&sh, p.sink, Ok(Reply { logits, latency }), Some(p.born));
+                    }
+                    // Unmatched id: a straggler past its deadline — the
+                    // sweeper already answered it.
+                }
+                Frame::ReplyErr { id, err } => {
+                    if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
+                        deliver(&sh, p.sink, Err(request_error_of(err)), None);
+                    }
+                }
+                // Drain echo: the shard flushed everything for this
+                // connection; `drain()` observes the emptied pending map.
+                Frame::Drain { .. } => {}
+                // Stray health echo on a pooled connection: ignore.
+                Frame::Health { .. } => {}
+                Frame::Request { .. } | Frame::Shutdown { .. } => {
+                    // Protocol violation from the server side.
+                    fail_conn(&sh, conn_id);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Probe the shard with a fresh short-lived connection and a health echo.
+/// The probe connection closes client-side, so probes never park TIME_WAIT
+/// state on the shard's port.
+fn probe(sh: &Shared) -> bool {
+    let mut c = match Client::connect_timeout(sh.addr.as_str(), sh.cfg.connect_timeout) {
+        Ok(c) => c,
+        Err(_) => return false,
+    };
+    if c.set_read_timeout(Some(sh.cfg.connect_timeout.max(sh.cfg.poll))).is_err() {
+        return false;
+    }
+    c.ping().is_ok()
+}
+
+/// Health thread: periodic probes flip `healthy` (ejection/re-admission);
+/// an ejection also fails the pooled connections so their in-flight work
+/// gets answered instead of waiting out the full deadline.  Doubles as a
+/// timeout-sweep backstop when no reader thread is alive.
+fn health_loop(sh: Arc<Shared>) {
+    let step = sh.cfg.poll.clamp(Duration::from_millis(5), Duration::from_millis(50));
+    let mut next_probe = Instant::now();
+    while !sh.stop.load(Ordering::SeqCst) {
+        sweep(&sh, Some(Instant::now()));
+        if Instant::now() >= next_probe {
+            next_probe = Instant::now() + sh.cfg.health_interval;
+            let ok = probe(&sh);
+            let was = sh.healthy.swap(ok, Ordering::SeqCst);
+            if was && !ok {
+                eprintln!("[backend] shard {} ejected (probe failed)", sh.addr);
+                let live: Vec<u64> = sh
+                    .slots
+                    .iter()
+                    .filter_map(|s| s.lock().unwrap().as_ref().map(|s| s.id))
+                    .collect();
+                for conn_id in live {
+                    fail_conn(&sh, conn_id);
+                }
+            } else if !was && ok && !sh.draining.load(Ordering::SeqCst) {
+                eprintln!("[backend] shard {} re-admitted", sh.addr);
+            }
+        }
+        std::thread::sleep(step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn fast_cfg() -> RemoteBackendConfig {
+        RemoteBackendConfig {
+            pool: 1,
+            max_inflight: 8,
+            connect_timeout: Duration::from_millis(250),
+            request_timeout: Duration::from_millis(200),
+            health_interval: Duration::from_millis(50),
+            poll: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn local_backend_is_always_healthy_and_delegates() {
+        let (tx, rx) = sync_channel(4);
+        let h = ServerHandle::over_channel(tx);
+        let b: &dyn Backend = &h;
+        assert!(b.is_healthy());
+        assert_eq!(b.describe(), "local");
+        b.drain(); // no-op, must not panic
+        let (rtx, _rrx) = sync_channel(1);
+        b.submit_sink("sst2", vec![1, 2], ReplySink::Oneshot(rtx)).unwrap();
+        assert_eq!(rx.recv().unwrap().tokens, vec![1, 2]);
+        assert_eq!(b.metrics().submitted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unreachable_shard_sheds_and_goes_unhealthy() {
+        // Port 1 on localhost: connect is refused immediately.
+        let b = RemoteBackend::connect("127.0.0.1:1", fast_cfg());
+        let (rtx, _rrx) = sync_channel(1);
+        match b.submit_sink("sst2", vec![1], ReplySink::Oneshot(rtx)) {
+            Err(SubmitError::Busy) => {}
+            other => panic!("expected Busy shed, got {other:?}"),
+        }
+        let m = b.metrics().snapshot();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.rejected, 1);
+        assert!(m.balanced(), "{m:?}");
+        // The health thread observes the refused probe and ejects.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.is_healthy() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(!b.is_healthy(), "refused probes must eject the shard");
+        b.shutdown();
+    }
+
+    #[test]
+    fn silent_shard_times_out_with_typed_error() {
+        // A listener that accepts and never replies: the request must
+        // expire as a typed Timeout, not hang.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let keeper = std::thread::spawn(move || listener.accept());
+        let b = RemoteBackend::connect(addr.to_string(), fast_cfg());
+        let (rtx, rrx) = sync_channel(1);
+        b.submit_sink("sst2", vec![1, 2, 3], ReplySink::Oneshot(rtx)).unwrap();
+        let got = rrx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("expired request must still be answered");
+        assert_eq!(got.unwrap_err(), RequestError::Timeout);
+        let m = b.metrics().snapshot();
+        assert_eq!(m.timeouts, 1);
+        assert!(m.balanced(), "{m:?}");
+        b.shutdown();
+        let _ = keeper.join();
+    }
+}

@@ -34,6 +34,9 @@ pub struct Metrics {
     /// it.  A disconnecting client must never panic a worker or skew the
     /// counter balance.
     pub dropped_replies: AtomicU64,
+    /// Subset of `errored`: the request was forwarded to a remote shard
+    /// that did not answer within the configured deadline.
+    pub timeouts: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     /// Padded-shape accounting for variable-length batches: tokens the
@@ -46,6 +49,10 @@ pub struct Metrics {
     mode_tokens: Mutex<BTreeMap<String, u64>>,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
+    /// Exponentially-weighted moving average of completion latency in
+    /// microseconds (α = 1/8) — the load-aware routing signal: unlike the
+    /// reservoir it tracks *recent* behaviour and costs one atomic read.
+    ewma_us: AtomicU64,
 }
 
 pub const RESERVOIR: usize = 100_000;
@@ -53,10 +60,35 @@ pub const RESERVOIR: usize = 100_000;
 impl Metrics {
     pub fn record_latency(&self, d: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        // EWMA with α = 1/8; the nudge keeps small samples converging
+        // where integer division would otherwise stall the average.
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let step = (us as i64 - old as i64) / 8;
+        let step = if step == 0 { (us as i64 - old as i64).signum() } else { step };
+        self.ewma_us.store((old as i64 + step).max(0) as u64, Ordering::Relaxed);
         let mut v = self.latencies_us.lock().unwrap();
         if v.len() < RESERVOIR {
-            v.push(d.as_micros() as u64);
+            v.push(us);
         }
+    }
+
+    /// Recent completion latency in microseconds (EWMA, 0 before any
+    /// completion) — one of the two load-aware routing signals.
+    pub fn ewma_us(&self) -> u64 {
+        self.ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Requests submitted but not yet answered (completed, rejected or
+    /// errored) — the other load-aware routing signal.  Saturating: the
+    /// counters are updated independently, so a transient underflow while
+    /// another thread is mid-update reads as 0, never wraps.
+    pub fn inflight(&self) -> u64 {
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let answered = self.completed.load(Ordering::Relaxed)
+            + self.rejected.load(Ordering::Relaxed)
+            + self.errored.load(Ordering::Relaxed);
+        submitted.saturating_sub(answered)
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -67,6 +99,14 @@ impl Metrics {
     /// Record one explicit error reply (unknown task / invalid length).
     pub fn record_error_reply(&self) {
         self.errored.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request that expired waiting for a remote shard's reply.
+    /// Counts as `errored` (the client got a typed `Timeout` answer) so
+    /// the balance invariant still holds.
+    pub fn record_timeout(&self) {
+        self.errored.fetch_add(1, Ordering::Relaxed);
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a reply that could not be delivered: the client disconnected
@@ -127,6 +167,7 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             errored: self.errored.load(Ordering::Relaxed),
             dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
             padding_efficiency: self.padding_efficiency(),
@@ -152,6 +193,7 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub errored: u64,
     pub dropped_replies: u64,
+    pub timeouts: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub padding_efficiency: f64,
@@ -172,7 +214,8 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "requests: submitted={} completed={} rejected={} errored={} (dropped_replies={})\n\
+            "requests: submitted={} completed={} rejected={} errored={} (dropped_replies={}) \
+             timeouts={}\n\
              batching: {} batches, mean size {:.2}, padding efficiency {:.1}%\n\
              latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.submitted,
@@ -180,6 +223,7 @@ impl MetricsSnapshot {
             self.rejected,
             self.errored,
             self.dropped_replies,
+            self.timeouts,
             self.batches,
             self.mean_batch,
             100.0 * self.padding_efficiency,
@@ -294,6 +338,56 @@ mod tests {
         assert_eq!(s.submitted, s.completed + s.rejected + s.errored);
         let r = s.render();
         assert!(r.contains("errored=2 (dropped_replies=1)"), "{r}");
+    }
+
+    #[test]
+    fn timeouts_are_errored_and_balance() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(1));
+        m.record_timeout();
+        m.record_error_reply();
+        let s = m.snapshot();
+        assert_eq!(s.errored, 2, "timeouts count inside errored");
+        assert_eq!(s.timeouts, 1);
+        assert!(s.balanced(), "{s:?}");
+        assert!(s.render().contains("timeouts=1"), "{}", s.render());
+    }
+
+    #[test]
+    fn inflight_tracks_unanswered_submissions() {
+        let m = Metrics::default();
+        assert_eq!(m.inflight(), 0);
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(m.inflight(), 5);
+        m.record_latency(Duration::from_millis(1)); // completed
+        m.rejected.fetch_add(1, Ordering::Relaxed);
+        m.record_timeout(); // errored
+        assert_eq!(m.inflight(), 2);
+        // Saturating: never wraps even if counters race past submitted.
+        m.rejected.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(m.inflight(), 0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_recent_latency() {
+        let m = Metrics::default();
+        assert_eq!(m.ewma_us(), 0);
+        m.record_latency(Duration::from_micros(8000));
+        let first = m.ewma_us();
+        assert!(first > 0, "first sample moves the average off zero");
+        for _ in 0..64 {
+            m.record_latency(Duration::from_micros(8000));
+        }
+        let settled = m.ewma_us();
+        assert!(
+            (7000..=8000).contains(&settled),
+            "settles near the steady latency: {settled}"
+        );
+        for _ in 0..64 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        assert!(m.ewma_us() < settled / 2, "tracks a downward shift");
     }
 
     #[test]

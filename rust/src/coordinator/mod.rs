@@ -2,14 +2,24 @@
 //!
 //! remote client → [`net::NetServer`] (TCP acceptor + per-connection
 //! `AMFN` framing workers) *or* in-process client → [`router::Router`]
-//! (mode/lane + length preference) → [`server::InferenceServer`] (bounded
-//! ingress queue + dynamic batcher bucketing by task and padded length) →
-//! engine workers running the masked variable-length encoder on the
-//! shared pool-backed engine.  Both entry points feed the **same**
+//! (mode/lane + length preference, load-aware replica choice) →
+//! [`backend::Backend`] → [`server::InferenceServer`] (bounded ingress
+//! queue + dynamic batcher bucketing by task and padded length) → engine
+//! workers running the masked variable-length encoder on the shared
+//! pool-backed engine.  Both entry points feed the **same**
 //! [`server::Request`] channel — a network request differs from an
 //! in-process one only in its [`server::ReplySink`] — so every serving
 //! scenario (varlen batching, lanes, per-site precision policies,
 //! per-mode token counters) is reachable from a remote socket.
+//!
+//! The [`backend::Backend`] trait is the transport seam that turns this
+//! one-process stack into a shard tier: `amfma serve` builds its router
+//! from in-process [`server::ServerHandle`]s, while `amfma front` builds
+//! the *same* router from pooled TCP [`backend::RemoteBackend`]s — one
+//! per `amfma serve --listen` engine shard — adding health-probe driven
+//! ejection/re-admission, per-request deadlines, and `Drain`-frame
+//! graceful flushes for rolling shard restarts.  The router's routing,
+//! lane and failover logic is identical in both topologies.
 //!
 //! Replicas sit in cheap/accurate [`router::Lane`]s and tasks may carry
 //! calibrated precision policies ([`crate::autotune`], wired through
@@ -17,16 +27,20 @@
 //! latency/batching/padding/per-mode-token observability used by the
 //! serving benchmarks, with the disjoint
 //! `submitted == completed + rejected + errored` counter balance that the
-//! network path preserves even for clients that disconnect mid-flight.
+//! network path preserves even for clients that disconnect mid-flight —
+//! and that each `RemoteBackend` preserves per shard, with timeouts and
+//! unavailability counted rather than lost.
 
+pub mod backend;
 pub mod metrics;
 pub mod net;
 pub mod router;
 pub mod server;
 
+pub use backend::{Backend, RemoteBackend, RemoteBackendConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use net::{NetServer, NetServerConfig};
-pub use router::{Lane, Replica, RouteError, Router};
+pub use router::{Lane, Replica, ReplicaSpec, RouteError, Router};
 pub use server::{
     InferenceServer, Reply, ReplyResult, ReplySink, Request, RequestError, ServerConfig,
     ServerHandle, SubmitError,

@@ -8,7 +8,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::frame::{self, Frame, FrameBuffer, FrameError, LaneSelector, WireError};
 
@@ -30,6 +30,10 @@ pub enum NetError {
     Disconnected,
     /// The server sent a frame kind only clients may send.
     UnexpectedFrame,
+    /// The configured read deadline expired with no reply — a hung server
+    /// surfaces as a typed error, never an indefinite stall (set via
+    /// [`Client::set_read_timeout`]).
+    Timeout,
 }
 
 impl std::fmt::Display for NetError {
@@ -39,6 +43,7 @@ impl std::fmt::Display for NetError {
             NetError::Frame(e) => write!(f, "frame: {e}"),
             NetError::Disconnected => write!(f, "server disconnected"),
             NetError::UnexpectedFrame => write!(f, "unexpected frame from server"),
+            NetError::Timeout => write!(f, "read deadline expired"),
         }
     }
 }
@@ -67,6 +72,28 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         Ok(Client { stream, fb: FrameBuffer::default(), next_id: 0 })
+    }
+
+    /// Like [`Client::connect`], but bound by a connect deadline per
+    /// resolved address — a black-holed shard address fails fast instead
+    /// of hanging in the kernel's (minutes-long) SYN retry schedule.
+    pub fn connect_timeout(
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+    ) -> std::io::Result<Client> {
+        let mut last: Option<std::io::Error> = None;
+        for sockaddr in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sockaddr, timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(Client { stream, fb: FrameBuffer::default(), next_id: 0 });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::AddrNotAvailable, "address resolved to nothing")
+        }))
     }
 
     /// Bound how long [`Client::recv_reply`] may block (`None` = forever,
@@ -111,9 +138,29 @@ impl Client {
         Ok(id)
     }
 
-    /// Block until the next reply frame arrives.
-    pub fn recv_reply(&mut self) -> Result<NetReply, NetError> {
+    /// Read one chunk of socket bytes into the frame buffer.  A read
+    /// deadline expiring surfaces as the typed [`NetError::Timeout`].
+    fn fill(&mut self) -> Result<(), NetError> {
         let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => Err(NetError::Disconnected),
+            Ok(n) => {
+                self.fb.push(&chunk[..n]);
+                Ok(())
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Err(NetError::Timeout)
+            }
+            Err(e) => Err(NetError::Io(e)),
+        }
+    }
+
+    /// Block until the next reply frame arrives (or the read deadline
+    /// expires — see [`Client::set_read_timeout`]).
+    pub fn recv_reply(&mut self) -> Result<NetReply, NetError> {
         loop {
             if let Some(frame) = self.fb.next_frame()? {
                 return match frame {
@@ -121,16 +168,64 @@ impl Client {
                         Ok(NetReply { id, outcome: Ok((logits, server_latency)) })
                     }
                     Frame::ReplyErr { id, err } => Ok(NetReply { id, outcome: Err(err) }),
-                    Frame::Request { .. } | Frame::Shutdown { .. } => {
-                        Err(NetError::UnexpectedFrame)
-                    }
+                    Frame::Request { .. }
+                    | Frame::Shutdown { .. }
+                    | Frame::Health { .. }
+                    | Frame::Drain { .. } => Err(NetError::UnexpectedFrame),
                 };
             }
-            let n = self.stream.read(&mut chunk)?;
-            if n == 0 {
-                return Err(NetError::Disconnected);
+            self.fill()?;
+        }
+    }
+
+    /// Liveness probe: send a health frame and block for its echo,
+    /// returning the round-trip time.  Only valid when no requests are in
+    /// flight on this connection.
+    pub fn ping(&mut self) -> Result<Duration, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let t0 = Instant::now();
+        self.stream.write_all(&frame::encode(&Frame::Health { id }))?;
+        self.stream.flush()?;
+        loop {
+            if let Some(frame) = self.fb.next_frame()? {
+                return match frame {
+                    Frame::Health { id: rid } if rid == id => Ok(t0.elapsed()),
+                    _ => Err(NetError::UnexpectedFrame),
+                };
             }
-            self.fb.push(&chunk[..n]);
+            self.fill()?;
+        }
+    }
+
+    /// Connection-level drain barrier: ask the server to stop reading
+    /// requests on this connection and flush every in-flight reply, then
+    /// collect those replies until the drain echo arrives.  The echo is
+    /// the server's proof that nothing was lost; the caller should close
+    /// the connection afterwards (the server deliberately waits for the
+    /// client's close so restarted shards can rebind their port — see
+    /// `coordinator::net`).
+    pub fn drain_conn(&mut self) -> Result<Vec<NetReply>, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&frame::encode(&Frame::Drain { id }))?;
+        self.stream.flush()?;
+        let mut flushed = Vec::new();
+        loop {
+            if let Some(frame) = self.fb.next_frame()? {
+                match frame {
+                    Frame::ReplyOk { id, server_latency, logits } => {
+                        flushed.push(NetReply { id, outcome: Ok((logits, server_latency)) });
+                    }
+                    Frame::ReplyErr { id, err } => {
+                        flushed.push(NetReply { id, outcome: Err(err) });
+                    }
+                    Frame::Drain { id: rid } if rid == id => return Ok(flushed),
+                    _ => return Err(NetError::UnexpectedFrame),
+                }
+                continue;
+            }
+            self.fill()?;
         }
     }
 

@@ -6,8 +6,8 @@
 //! | offset | size | field                                     |
 //! |--------|------|-------------------------------------------|
 //! | 0      | 4    | magic `b"AMFN"`                           |
-//! | 4      | 1    | version (1)                               |
-//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown) |
+//! | 4      | 1    | version (2)                               |
+//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain) |
 //! | 6      | 2    | reserved (must be 0)                      |
 //! | 8      | 4    | body length in bytes                      |
 //!
@@ -16,8 +16,13 @@
 //! `n_tokens` × `u16` token ids.  Reply-ok body: `id u64`,
 //! `server_latency_us u64`, `n_logits u32`, then `n_logits` × `f32`.
 //! Reply-err body: `id u64`, `code u8`, plus `len u32` + `max_seq u32`
-//! for `InvalidLength`.  Shutdown body: `id u64` (acked with an empty
-//! reply-ok before the server drains).
+//! for `InvalidLength`.  Shutdown, health and drain bodies: `id u64`.
+//! Shutdown asks the whole process to drain and exit (acked with an empty
+//! reply-ok).  Health is a liveness probe the server echoes back verbatim
+//! — how a front tier decides shard ejection / re-admission.  Drain asks
+//! the server to stop reading requests on *this connection*, flush every
+//! in-flight reply, and only then echo the drain frame back: the echo is
+//! an end-to-end barrier proving no reply was lost (version 2 additions).
 //!
 //! The decoder is hardened like the `AMFP` policy parser: truncation,
 //! absurd declared lengths, bad magic/version/kind/lane/error codes and
@@ -33,8 +38,9 @@ use crate::coordinator::server::RequestError;
 
 /// Format tag opening every frame.
 pub const MAGIC: [u8; 4] = *b"AMFN";
-/// Current protocol version.
-pub const VERSION: u8 = 1;
+/// Current protocol version (2: adds the health and drain frame kinds
+/// and the `Timeout` wire error).
+pub const VERSION: u8 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a frame body: anything larger is a corrupt or hostile
@@ -108,6 +114,8 @@ pub enum WireError {
     NoReplica,
     /// The server is draining and no longer accepts work (code 5).
     ShuttingDown,
+    /// An upstream shard did not answer within the deadline (code 6).
+    Timeout,
 }
 
 impl WireError {
@@ -118,6 +126,7 @@ impl WireError {
             WireError::Busy => 3,
             WireError::NoReplica => 4,
             WireError::ShuttingDown => 5,
+            WireError::Timeout => 6,
         }
     }
 }
@@ -130,6 +139,9 @@ impl From<RequestError> for WireError {
                 len: len.min(u32::MAX as usize) as u32,
                 max_seq: max_seq.min(u32::MAX as usize) as u32,
             },
+            RequestError::Busy => WireError::Busy,
+            RequestError::Timeout => WireError::Timeout,
+            RequestError::Unavailable => WireError::NoReplica,
         }
     }
 }
@@ -144,6 +156,7 @@ impl fmt::Display for WireError {
             WireError::Busy => write!(f, "busy"),
             WireError::NoReplica => write!(f, "no replica for lane/length"),
             WireError::ShuttingDown => write!(f, "server shutting down"),
+            WireError::Timeout => write!(f, "shard deadline exceeded"),
         }
     }
 }
@@ -157,8 +170,15 @@ pub enum Frame {
     ReplyOk { id: u64, server_latency: Duration, logits: Vec<f32> },
     /// Server → client: a typed rejection of request `id`.
     ReplyErr { id: u64, err: WireError },
-    /// Client → server: drain and exit (acked with an empty `ReplyOk`).
+    /// Client → server: drain the whole process and exit (acked with an
+    /// empty `ReplyOk`).
     Shutdown { id: u64 },
+    /// Liveness probe: a client sends it, the server echoes it verbatim.
+    Health { id: u64 },
+    /// Connection-level drain barrier: the server stops reading requests
+    /// on this connection, flushes every in-flight reply, then echoes the
+    /// drain frame back — proof that no reply was lost.
+    Drain { id: u64 },
 }
 
 impl Frame {
@@ -168,6 +188,8 @@ impl Frame {
             Frame::ReplyOk { .. } => 1,
             Frame::ReplyErr { .. } => 2,
             Frame::Shutdown { .. } => 3,
+            Frame::Health { .. } => 4,
+            Frame::Drain { .. } => 5,
         }
     }
 }
@@ -255,7 +277,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 body.extend_from_slice(&max_seq.to_le_bytes());
             }
         }
-        Frame::Shutdown { id } => {
+        Frame::Shutdown { id } | Frame::Health { id } | Frame::Drain { id } => {
             body.extend_from_slice(&id.to_le_bytes());
         }
     }
@@ -280,7 +302,7 @@ fn decode_header(h: &[u8]) -> Result<(u8, usize), FrameError> {
         return Err(FrameError::BadVersion(h[4]));
     }
     let kind = h[5];
-    if kind > 3 {
+    if kind > 5 {
         return Err(FrameError::BadKind(kind));
     }
     let reserved = u16::from_le_bytes([h[6], h[7]]);
@@ -376,11 +398,14 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
                 3 => WireError::Busy,
                 4 => WireError::NoReplica,
                 5 => WireError::ShuttingDown,
+                6 => WireError::Timeout,
                 other => return Err(FrameError::BadErrorCode(other)),
             };
             Frame::ReplyErr { id, err }
         }
         3 => Frame::Shutdown { id: c.u64()? },
+        4 => Frame::Health { id: c.u64()? },
+        5 => Frame::Drain { id: c.u64()? },
         other => return Err(FrameError::BadKind(other)),
     };
     c.done()?;
@@ -468,7 +493,10 @@ mod tests {
             Frame::ReplyErr { id: 10, err: WireError::Busy },
             Frame::ReplyErr { id: 11, err: WireError::NoReplica },
             Frame::ReplyErr { id: 12, err: WireError::ShuttingDown },
+            Frame::ReplyErr { id: 14, err: WireError::Timeout },
             Frame::Shutdown { id: 13 },
+            Frame::Health { id: 15 },
+            Frame::Drain { id: 16 },
         ];
         for f in frames {
             let bytes = encode(&f);
@@ -507,14 +535,21 @@ mod tests {
         let mut bad = good.clone();
         bad[0] = b'X';
         assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
-        // bad version
+        // bad version — including the retired v1: a server must not
+        // half-parse frames from an older client.
         let mut bad = good.clone();
         bad[4] = 9;
         assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
-        // bad kind
+        let mut bad = good.clone();
+        bad[4] = 1;
+        assert_eq!(decode(&bad), Err(FrameError::BadVersion(1)));
+        // bad kind — 6 is the first unassigned kind after health/drain
         let mut bad = good.clone();
         bad[5] = 250;
         assert_eq!(decode(&bad), Err(FrameError::BadKind(250)));
+        let mut bad = good.clone();
+        bad[5] = 6;
+        assert_eq!(decode(&bad), Err(FrameError::BadKind(6)));
         // reserved bytes must be zero
         let mut bad = good.clone();
         bad[6] = 1;

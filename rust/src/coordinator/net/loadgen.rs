@@ -42,6 +42,14 @@ pub struct LoadgenConfig {
     /// pipeline deeper than the server's in-flight cap) fails the run
     /// loudly as a lost reply instead of hanging the generator forever.
     pub recv_timeout: Duration,
+    /// TCP connect deadline per connection (a down server fails the run
+    /// fast instead of waiting out the kernel's SYN retries).
+    pub connect_timeout: Duration,
+    /// Bench target name stamped on [`report`]'s output (`serving` for
+    /// direct-to-shard runs; `amfma loadgen --bench-target serving_front`
+    /// keeps front-tier latency in its own perf-trajectory series, since a
+    /// two-hop topology is not comparable to a one-hop one).
+    pub bench_target: String,
 }
 
 impl Default for LoadgenConfig {
@@ -55,6 +63,8 @@ impl Default for LoadgenConfig {
             varlen: false,
             seed: 42,
             recv_timeout: Duration::from_secs(30),
+            connect_timeout: Duration::from_secs(5),
+            bench_target: "serving".to_string(),
         }
     }
 }
@@ -142,8 +152,8 @@ fn run_connection(
     conn: u64,
     target: usize,
 ) -> Result<ConnStats, String> {
-    let mut client =
-        Client::connect(cfg.addr.as_str()).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    let mut client = Client::connect_timeout(cfg.addr.as_str(), cfg.connect_timeout)
+        .map_err(|e| format!("connect {}: {e}", cfg.addr))?;
     client
         .set_read_timeout(Some(cfg.recv_timeout))
         .map_err(|e| format!("set read timeout: {e}"))?;
@@ -226,13 +236,13 @@ fn sample_request(
     (task.clone(), tokens)
 }
 
-/// Package a run as the `serving` bench target (schema `amfma-bench-v1`):
-/// the latency order statistics as a result with seq/s throughput, plus
-/// the traffic counters as metrics — ready for
-/// [`BenchReport::write`] to persist `BENCH_serving.json` and append the
-/// trajectory line the CI perf gate consumes.
+/// Package a run as a bench document (schema `amfma-bench-v1`) under
+/// [`LoadgenConfig::bench_target`]: the latency order statistics as a
+/// result with seq/s throughput, plus the traffic counters as metrics —
+/// ready for [`BenchReport::write`] to persist `BENCH_<target>.json` and
+/// append the trajectory line the CI perf gate consumes.
 pub fn report(outcome: &LoadgenOutcome, cfg: &LoadgenConfig) -> BenchReport {
-    let mut rep = BenchReport::new("serving");
+    let mut rep = BenchReport::new(&cfg.bench_target);
     let r = outcome.latency.clone().with_ops(1.0, "seq/s");
     rep.push(&r);
     rep.push_metric("throughput", outcome.throughput(), "seq/s");

@@ -15,16 +15,29 @@
 //! Backpressure is surfaced, not hidden: when every candidate replica's
 //! ingress queue is full the connection immediately answers
 //! [`frame::WireError::Busy`] instead of buffering unboundedly, and a
-//! closed-loop client retries after a backoff.  Shutdown is a **graceful
-//! drain**: the acceptor stops, readers stop decoding, writers flush every
-//! in-flight reply, then each socket is shut down so clients observe EOF
-//! only after their last reply.  A client can request the drain remotely
-//! with a [`frame::Frame::Shutdown`] frame (used by `amfma loadgen
-//! --shutdown` and the CI soak job).
+//! closed-loop client retries after a backoff.  Connection-level
+//! **admission control** caps concurrent connections
+//! ([`NetServerConfig::max_conns`]): excess accepts are closed on the spot
+//! (and counted) instead of spawning unbounded worker threads.  Shutdown
+//! is a **graceful drain**: the acceptor stops, readers stop decoding,
+//! writers flush every in-flight reply, then each socket is shut down so
+//! clients observe EOF only after their last reply.  A client can request
+//! the drain remotely with a [`frame::Frame::Shutdown`] frame (used by
+//! `amfma loadgen --shutdown` and the CI soak job); a single connection
+//! can be drained with a [`frame::Frame::Drain`] frame, whose echo-after-
+//! flush is the rolling-restart barrier the front tier leans on.
+//!
+//! One deliberate TCP detail: on a drain the server **waits for the
+//! client to close first** (bounded by [`NetServerConfig::drain_linger`]).
+//! The side that sends the first FIN owns the TIME_WAIT state, and
+//! `std::net` offers no `SO_REUSEADDR`; staying the passive closer keeps
+//! the listening port free of TIME_WAIT so a restarted shard can rebind
+//! it immediately — which the rolling-restart story depends on.
 //!
 //! Zero dependencies: `std::net` + the hand-rolled frame codec in
 //! [`frame`].  [`client::Client`] is the blocking counterpart and
-//! [`loadgen`] the closed-loop multi-connection load generator.
+//! [`loadgen`] the closed-loop multi-connection load generator; the
+//! front tier's remote shard backend lives in [`super::backend`].
 
 pub mod client;
 pub mod frame;
@@ -32,10 +45,10 @@ pub mod loadgen;
 
 use std::io::{Read, Write};
 use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::server::{ReplyResult, ReplySink};
 use super::Router;
@@ -64,6 +77,16 @@ pub struct NetServerConfig {
     /// dropped; undeliverable replies count as dropped, and server
     /// shutdown can no longer be wedged by a dead peer.
     pub write_timeout: Duration,
+    /// Admission control: concurrent connection cap.  Accepts beyond it
+    /// are closed immediately (the peer sees EOF before any reply) and
+    /// counted in [`NetServer::rejected_conns`] — bounding worker threads
+    /// the same way `queue_depth` bounds queued requests.
+    pub max_conns: usize,
+    /// How long a draining connection waits for the client's FIN before
+    /// closing anyway.  Being the passive closer keeps TIME_WAIT on the
+    /// client side, so a restarted shard can rebind its port (see the
+    /// module docs); the bound stops a vanished client wedging shutdown.
+    pub drain_linger: Duration,
 }
 
 impl Default for NetServerConfig {
@@ -72,6 +95,8 @@ impl Default for NetServerConfig {
             inflight: 256,
             poll: Duration::from_millis(50),
             write_timeout: Duration::from_secs(5),
+            max_conns: 1024,
+            drain_linger: Duration::from_secs(2),
         }
     }
 }
@@ -85,6 +110,7 @@ pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     drain_requested: Arc<AtomicBool>,
+    rejected_conns: Arc<AtomicU64>,
     acceptor: Option<std::thread::JoinHandle<()>>,
     conns: ConnHandles,
 }
@@ -102,16 +128,25 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let drain_requested = Arc::new(AtomicBool::new(false));
+        let rejected_conns = Arc::new(AtomicU64::new(0));
         let conns: ConnHandles = Arc::default();
         let acceptor = {
             let stop = stop.clone();
             let drain = drain_requested.clone();
+            let rejected = rejected_conns.clone();
             let conns = conns.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, router, cfg, stop, drain, conns);
+                accept_loop(listener, router, cfg, stop, drain, rejected, conns);
             })
         };
-        Ok(NetServer { addr: local, stop, drain_requested, acceptor: Some(acceptor), conns })
+        Ok(NetServer {
+            addr: local,
+            stop,
+            drain_requested,
+            rejected_conns,
+            acceptor: Some(acceptor),
+            conns,
+        })
     }
 
     /// The bound address (with the real port when bound to `:0`).
@@ -123,6 +158,12 @@ impl NetServer {
     /// polls this and calls [`NetServer::shutdown`] to perform the drain.
     pub fn shutdown_requested(&self) -> bool {
         self.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// Connections closed at accept time by the admission cap
+    /// ([`NetServerConfig::max_conns`]).
+    pub fn rejected_conns(&self) -> u64 {
+        self.rejected_conns.load(Ordering::Relaxed)
     }
 
     /// Graceful drain: stop accepting, stop reading new frames, deliver
@@ -147,11 +188,23 @@ fn accept_loop(
     cfg: NetServerConfig,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
+    rejected: Arc<AtomicU64>,
     conns: ConnHandles,
 ) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // Reap finished connections so a long-running listener's
+                // handle list tracks live connections, not total accepts —
+                // it is also the admission-control census.
+                let mut guard = conns.lock().unwrap();
+                guard.retain(|h| !h.is_finished());
+                if guard.len() >= cfg.max_conns.max(1) {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.shutdown(SockShutdown::Both);
+                    drop(guard);
+                    continue;
+                }
                 let router = router.clone();
                 let cfg = cfg.clone();
                 let stop = stop.clone();
@@ -163,10 +216,6 @@ fn accept_loop(
                         eprintln!("[net] connection ended with error: {e}");
                     }
                 });
-                // Reap finished connections so a long-running listener's
-                // handle list tracks live connections, not total accepts.
-                let mut guard = conns.lock().unwrap();
-                guard.retain(|h| !h.is_finished());
                 guard.push(handle);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -210,41 +259,80 @@ fn connection_loop(
         })
     };
 
-    let result = reader_loop(stream, router, stop, drain, &reply_tx, &write_half, &writer_dead);
+    let result = reader_loop(&stream, router, stop, drain, &reply_tx, &write_half, &writer_dead);
 
     // Drop our sender: once every in-flight request's tagged sink is gone
     // too, the writer drains the channel and exits — the drain barrier.
     drop(reply_tx);
     let _ = writer.join();
+    // Past the barrier every reply is flushed; a connection-level drain is
+    // acked only now, so the echo proves nothing was lost.
+    let mut passive_close = drain.load(Ordering::SeqCst);
+    if let Ok(Some(drain_id)) = &result {
+        let _ = send_frame(&write_half, &Frame::Drain { id: *drain_id });
+        passive_close = true;
+    }
+    if passive_close {
+        // Draining (per-connection or whole-process): wait for the client
+        // to close first so TIME_WAIT lands on its side, not on our port —
+        // a restarted shard must be able to rebind immediately (see the
+        // module docs).  Bounded: a vanished client cannot wedge shutdown.
+        linger_for_client_close(&stream, cfg.drain_linger);
+    }
     // EOF for the client only after its last reply was flushed.
     if let Ok(s) = write_half.lock() {
         let _ = s.shutdown(SockShutdown::Both);
     }
-    result
+    result.map(|_| ())
 }
 
+/// Discard bytes until the peer closes (EOF), an error, or the linger
+/// deadline.  The stream's read timeout (poll) keeps each wait bounded.
+fn linger_for_client_close(stream: &TcpStream, linger: Duration) {
+    let deadline = Instant::now() + linger;
+    let mut reader = stream;
+    let mut buf = [0u8; 1024];
+    while Instant::now() < deadline {
+        match reader.read(&mut buf) {
+            Ok(0) => return, // client's FIN: we stay the passive closer
+            Ok(_) => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Decode and dispatch frames until the connection ends.  `Ok(Some(id))`
+/// means the client sent a connection-level [`Frame::Drain`]: the caller
+/// flushes every in-flight reply and only then echoes `Drain { id }`.
 fn reader_loop(
-    mut stream: TcpStream,
+    stream: &TcpStream,
     router: &Router,
     stop: &AtomicBool,
     drain: &AtomicBool,
     reply_tx: &SyncSender<(u64, ReplyResult)>,
     write_half: &Mutex<TcpStream>,
     writer_dead: &AtomicBool,
-) -> Result<(), String> {
+) -> Result<Option<u64>, String> {
     let mut fb = FrameBuffer::default();
     let mut chunk = [0u8; 4096];
+    let mut reader = stream;
     loop {
         if stop.load(Ordering::SeqCst) {
-            return Ok(());
+            return Ok(None);
         }
         if writer_dead.load(Ordering::SeqCst) {
             // Replies can no longer reach this peer; routing more of its
             // requests would just burn engine cycles into dropped sends.
             return Err("connection writer died (peer stopped reading?)".to_string());
         }
-        match stream.read(&mut chunk) {
-            Ok(0) => return Ok(()), // client closed its write half
+        match reader.read(&mut chunk) {
+            Ok(0) => return Ok(None), // client closed its write half
             Ok(n) => fb.push(&chunk[..n]),
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -252,7 +340,7 @@ fn reader_loop(
             {
                 continue;
             }
-            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => return Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => return Ok(None),
             Err(e) => return Err(format!("read: {e}")),
         }
         loop {
@@ -284,6 +372,15 @@ fn reader_loop(
                     };
                     send_frame(write_half, &ack).map_err(|e| format!("write: {e}"))?;
                 }
+                // Liveness probe: echo inline, ahead of queued replies —
+                // health must answer even when the engine is saturated.
+                Frame::Health { id } => {
+                    send_frame(write_half, &Frame::Health { id })
+                        .map_err(|e| format!("write: {e}"))?;
+                }
+                // Connection-level drain: stop reading this connection's
+                // requests; the caller acks after the reply flush.
+                Frame::Drain { id } => return Ok(Some(id)),
                 // Clients must not send reply frames; treat as corruption.
                 Frame::ReplyOk { .. } | Frame::ReplyErr { .. } => {
                     return Err("unexpected reply frame from client".to_string());

@@ -1,7 +1,22 @@
 //! Request router: fronts a set of engine replicas (possibly with
 //! different numeric modes, serving lanes and sequence-length envelopes)
 //! and routes each request by mode or lane + length preference, with
-//! round-robin inside a preference tier and busy-failover across tiers.
+//! load-aware selection inside a preference tier and busy-failover across
+//! tiers.
+//!
+//! Replicas are transport-agnostic: each wraps a [`Backend`] — the
+//! in-process [`ServerHandle`] when the engines live in this process
+//! (`amfma serve`), or a [`super::backend::RemoteBackend`] speaking `AMFN`
+//! over TCP to an engine shard (`amfma front`).  The router never sees the
+//! difference: it filters out draining and unhealthy replicas (ejection /
+//! re-admission ride the backend's health probes), then picks by load.
+//!
+//! Load-aware selection: inside a tier of equivalent replicas, candidates
+//! are ordered by in-flight request count, then smoothed reply latency
+//! ([`super::metrics::Metrics::ewma_us`]), then round-robin rotation — so
+//! idle equal replicas still alternate, a slow or backed-up shard sheds
+//! traffic to its peers, and a freshly re-admitted shard (zero in-flight)
+//! is pulled back into rotation immediately.
 //!
 //! Length preference: a replica may advertise `max_len` — the longest
 //! sequence it accepts (e.g. a dedicated short-sequence deployment whose
@@ -18,14 +33,16 @@
 //! (k, λ) mode, and the per-mode served-token counters in
 //! [`super::metrics`] make the split observable.
 //!
-//! This is the top of the serving stack: client → Router → InferenceServer
-//! (dynamic batcher) → engine workers.
+//! This is the top of the serving stack: client → Router → Backend
+//! (in-process batcher or remote shard) → engine workers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
 use crate::systolic::EngineMode;
 
+use super::backend::{Backend, RemoteBackend, RemoteBackendConfig};
 use super::server::{
     BACKOFF_CAP, BACKOFF_START, Reply, ReplyResult, ReplySink, RequestError, ServerHandle,
     SubmitError,
@@ -59,32 +76,82 @@ impl Lane {
     }
 }
 
+/// Builder for a [`Replica`]: routing attributes first, transport last.
+///
+/// ```ignore
+/// ReplicaSpec::new(mode).local(handle)                     // in-process
+/// ReplicaSpec::new(mode).max_len(64).local(handle)         // short-seq tier
+/// ReplicaSpec::new(mode).lane(Lane::Cheap).local(handle)   // lane override
+/// ReplicaSpec::new(mode).remote(addr, cfg)                 // TCP shard
+/// ```
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    mode: EngineMode,
+    lane: Lane,
+    max_len: Option<usize>,
+}
+
+impl ReplicaSpec {
+    /// Start a spec for a replica serving `mode` (lane defaults to
+    /// [`Lane::of_mode`], length envelope to unlimited).
+    pub fn new(mode: EngineMode) -> ReplicaSpec {
+        ReplicaSpec { mode, lane: Lane::of_mode(mode), max_len: None }
+    }
+
+    /// Override the serving lane, e.g. a mixed-policy deployment whose
+    /// *default* mode is accurate but whose policy is cheap.
+    pub fn lane(mut self, lane: Lane) -> ReplicaSpec {
+        self.lane = lane;
+        self
+    }
+
+    /// Dedicate the replica to sequences of at most `max_len` tokens.
+    pub fn max_len(mut self, max_len: usize) -> ReplicaSpec {
+        self.max_len = Some(max_len);
+        self
+    }
+
+    /// Finish with an in-process backend (`amfma serve`).
+    pub fn local(self, handle: ServerHandle) -> Replica {
+        self.backend(Arc::new(handle))
+    }
+
+    /// Finish with a pooled TCP backend fronting the shard at `addr`
+    /// (`amfma front`).  Never blocks: the shard may come up later and be
+    /// admitted by health probes.
+    pub fn remote(self, addr: impl Into<String>, cfg: RemoteBackendConfig) -> Replica {
+        self.backend(RemoteBackend::connect(addr, cfg))
+    }
+
+    /// Finish with any [`Backend`] implementation.
+    pub fn backend(self, backend: Arc<dyn Backend>) -> Replica {
+        Replica {
+            mode: self.mode,
+            lane: self.lane,
+            max_len: self.max_len,
+            backend,
+            draining: AtomicBool::new(false),
+        }
+    }
+}
+
 pub struct Replica {
     pub mode: EngineMode,
-    /// Serving lane (defaults to [`Lane::of_mode`]; override with
-    /// [`Replica::with_lane`], e.g. a mixed-policy deployment whose
-    /// *default* mode is accurate but whose policy is cheap).
+    /// Serving lane (see [`ReplicaSpec::lane`]).
     pub lane: Lane,
     /// Longest sequence this replica accepts; `None` = unlimited.
     pub max_len: Option<usize>,
-    pub handle: ServerHandle,
+    /// The compute behind this replica — in-process handle or TCP shard.
+    pub backend: Arc<dyn Backend>,
+    /// Router-level drain latch: a draining replica receives no new
+    /// routes while its backend flushes (see [`Router::drain_replica`]).
+    draining: AtomicBool,
 }
 
 impl Replica {
-    /// A replica that serves any length.
-    pub fn new(mode: EngineMode, handle: ServerHandle) -> Replica {
-        Replica { mode, lane: Lane::of_mode(mode), max_len: None, handle }
-    }
-
-    /// A replica dedicated to sequences of at most `max_len` tokens.
-    pub fn with_max_len(mode: EngineMode, max_len: usize, handle: ServerHandle) -> Replica {
-        Replica { mode, lane: Lane::of_mode(mode), max_len: Some(max_len), handle }
-    }
-
-    /// Override the serving lane (builder style).
-    pub fn with_lane(mut self, lane: Lane) -> Replica {
-        self.lane = lane;
-        self
+    /// True while the router is draining this replica.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 
     /// Display label: mode plus the length envelope, if any.
@@ -92,6 +159,14 @@ impl Replica {
         match self.max_len {
             Some(l) => format!("{}≤{l}", self.mode.label()),
             None => self.mode.label(),
+        }
+    }
+
+    /// Label plus transport, for per-shard metric lines.
+    pub fn describe(&self) -> String {
+        match self.backend.describe().as_str() {
+            "local" => self.label(),
+            transport => format!("{} @ {}", self.label(), transport),
         }
     }
 }
@@ -120,10 +195,16 @@ impl Router {
         self.replicas.len()
     }
 
+    /// The replica set (read-only; drain state changes via
+    /// [`Router::drain_replica`] / [`Router::undrain_replica`]).
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
     /// Route one request. `mode = None` means "any replica".  Candidates
     /// matching the mode and length are grouped by length envelope
-    /// (tightest first); within a tier the start replica rotates
-    /// round-robin, and every candidate is tried once before reporting
+    /// (tightest first); within a tier replicas are tried least-loaded
+    /// first, and every healthy candidate is tried once before reporting
     /// `AllBusy`.
     pub fn route(
         &self,
@@ -147,14 +228,20 @@ impl Router {
     }
 
     /// The shared candidate-selection / tiered-failover core behind
-    /// [`Router::route`] and [`Router::route_lane`].
+    /// [`Router::route`] and [`Router::route_lane`]: a one-shot reply
+    /// channel per request, regardless of transport.
     fn route_where(
         &self,
         task: &str,
         tokens: Vec<u16>,
         keep: impl Fn(&Replica) -> bool,
     ) -> Result<std::sync::mpsc::Receiver<ReplyResult>, RouteError> {
-        self.route_where_with(tokens.len(), keep, |r| r.handle.submit(task, tokens.clone()))
+        self.route_where_with(tokens.len(), keep, |r| {
+            let (rtx, rrx) = sync_channel(1);
+            r.backend
+                .submit_sink(task, tokens.clone(), ReplySink::Oneshot(rtx))
+                .map(|_| rrx)
+        })
     }
 
     /// Route by lane with a caller-provided reply sink — the variant the
@@ -171,11 +258,11 @@ impl Router {
         self.route_where_with(
             tokens.len(),
             |r| lane.map(|l| r.lane == l).unwrap_or(true),
-            |r| r.handle.submit_sink(task, tokens.clone(), sink.clone()),
+            |r| r.backend.submit_sink(task, tokens.clone(), sink.clone()),
         )
     }
 
-    /// Candidate selection + tiered round-robin failover, generic over how
+    /// Candidate selection + tiered load-aware failover, generic over how
     /// a request is handed to a replica (one-shot channel vs tagged sink).
     fn route_where_with<T>(
         &self,
@@ -192,9 +279,17 @@ impl Router {
         if cands.is_empty() {
             return Err(RouteError::NoReplicaForMode);
         }
+        // Ejected (health probe failing) and draining replicas are
+        // *skipped*, not "no replica": the request class is servable, the
+        // capacity just isn't available right now — callers retry or shed.
+        cands.retain(|r| !r.is_draining() && r.backend.is_healthy());
+        if cands.is_empty() {
+            return Err(RouteError::AllBusy);
+        }
         cands.sort_by_key(|r| r.max_len.unwrap_or(usize::MAX));
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut closed = 0;
+        let mut tried = 0;
         let mut i = 0;
         while i < cands.len() {
             // tier [i, j): replicas sharing the same length envelope
@@ -203,8 +298,17 @@ impl Router {
                 j += 1;
             }
             let tier = j - i;
-            for g in 0..tier {
-                let r = cands[i + (start + g) % tier];
+            // Load-aware order inside the tier: fewest in-flight requests
+            // first, then lowest smoothed latency, then distance from the
+            // round-robin rotation point (so idle equals still alternate).
+            let mut order: Vec<usize> = (0..tier).collect();
+            order.sort_by_key(|&g| {
+                let m = cands[i + g].backend.metrics();
+                (m.inflight(), m.ewma_us(), (tier + g - start % tier) % tier)
+            });
+            for g in order {
+                let r = cands[i + g];
+                tried += 1;
                 match try_submit(r) {
                     Ok(out) => return Ok(out),
                     Err(SubmitError::Busy) => continue,
@@ -217,7 +321,7 @@ impl Router {
             }
             i = j;
         }
-        if closed == cands.len() {
+        if tried > 0 && closed == tried {
             Err(RouteError::Closed)
         } else {
             Err(RouteError::AllBusy)
@@ -246,6 +350,41 @@ impl Router {
         blocking_retry(|| self.route_lane(task, tokens.clone(), lane))
     }
 
+    /// Gracefully drain replica `idx` for a rolling restart: stop routing
+    /// to it *first*, then flush its backend (for a remote shard, the
+    /// `Drain`-frame barrier that delivers every in-flight reply before
+    /// disconnecting).  Returns false for an out-of-range index.
+    pub fn drain_replica(&self, idx: usize) -> bool {
+        match self.replicas.get(idx) {
+            Some(r) => {
+                r.draining.store(true, Ordering::SeqCst);
+                r.backend.drain();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Re-open routing to a drained replica.  A remote backend stays
+    /// ejected until its health probes see the (restarted) shard answer —
+    /// undrain flips the router latch, the probe flips admission.
+    pub fn undrain_replica(&self, idx: usize) -> bool {
+        match self.replicas.get(idx) {
+            Some(r) => {
+                r.draining.store(false, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain every replica (front-process shutdown path).
+    pub fn drain_all(&self) {
+        for i in 0..self.replicas.len() {
+            self.drain_replica(i);
+        }
+    }
+
     /// Lanes with at least one replica (diagnostics / examples).
     pub fn lanes(&self) -> Vec<Lane> {
         let mut out: Vec<Lane> = Vec::new();
@@ -257,15 +396,16 @@ impl Router {
         out
     }
 
-    /// Aggregate snapshot across distinct underlying servers.
+    /// Aggregate snapshot across distinct underlying backends.
     pub fn metrics(&self) -> Vec<(String, super::metrics::MetricsSnapshot)> {
         let mut seen: Vec<*const super::metrics::Metrics> = Vec::new();
         let mut out = Vec::new();
         for r in &self.replicas {
-            let ptr = Arc::as_ptr(&r.handle.metrics);
+            let m = r.backend.metrics();
+            let ptr = Arc::as_ptr(m);
             if !seen.contains(&ptr) {
                 seen.push(ptr);
-                out.push((r.label(), r.handle.metrics.snapshot()));
+                out.push((r.describe(), m.snapshot()));
             }
         }
         out
@@ -299,6 +439,7 @@ fn blocking_retry(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::metrics::Metrics;
     use crate::coordinator::server::{InferenceServer, Request, ServerConfig};
     use crate::model::{ModelConfig, Weights};
     use crate::prng::Prng;
@@ -326,13 +467,17 @@ mod tests {
         (ServerHandle::over_channel(tx), rx)
     }
 
+    fn local(mode: EngineMode, h: ServerHandle) -> Replica {
+        ReplicaSpec::new(mode).local(h)
+    }
+
     #[test]
     fn routes_by_mode() {
         let m1 = EngineMode::Bf16(NormMode::Accurate);
         let m2 = EngineMode::Fp32;
         let (s1, h1) = mk_server(m1);
         let (s2, h2) = mk_server(m2);
-        let router = Router::new(vec![Replica::new(m1, h1), Replica::new(m2, h2)]);
+        let router = Router::new(vec![local(m1, h1), local(m2, h2)]);
         let mut rng = Prng::new(9);
         let toks: Vec<u16> = (0..8).map(|_| rng.below(32) as u16).collect();
         let r = router.route_blocking("sst2", toks.clone(), Some(m2)).unwrap();
@@ -348,7 +493,7 @@ mod tests {
     fn unknown_mode_errors() {
         let m1 = EngineMode::Fp32;
         let (s1, h1) = mk_server(m1);
-        let router = Router::new(vec![Replica::new(m1, h1)]);
+        let router = Router::new(vec![local(m1, h1)]);
         let err = router.route("sst2", vec![0; 8], Some(EngineMode::Bf16(NormMode::Accurate)));
         assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
         s1.shutdown();
@@ -359,7 +504,7 @@ mod tests {
         let mode = EngineMode::Fp32;
         let (s1, h1) = mk_server(mode);
         let (s2, h2) = mk_server(mode);
-        let router = Router::new(vec![Replica::new(mode, h1), Replica::new(mode, h2)]);
+        let router = Router::new(vec![local(mode, h1), local(mode, h2)]);
         let mut rng = Prng::new(10);
         let mut rxs = Vec::new();
         for _ in 0..20 {
@@ -378,16 +523,122 @@ mod tests {
     }
 
     #[test]
+    fn load_aware_routing_prefers_the_less_loaded_replica() {
+        let mode = EngineMode::Fp32;
+        let (h_loaded, _rx_loaded) = raw_handle(8);
+        let (h_idle, rx_idle) = raw_handle(8);
+        // Park unanswered work on one replica: its in-flight count rises.
+        for _ in 0..5 {
+            h_loaded.submit("sst2", vec![1]).unwrap();
+        }
+        let router = Router::new(vec![local(mode, h_loaded), local(mode, h_idle)]);
+        for _ in 0..3 {
+            router.route("sst2", vec![2, 3], None).unwrap();
+        }
+        // Every routed request must dodge the backlog.
+        for _ in 0..3 {
+            assert_eq!(rx_idle.try_recv().expect("idle replica takes it").tokens.len(), 2);
+        }
+        assert!(rx_idle.try_recv().is_err());
+    }
+
+    #[test]
+    fn draining_replica_is_skipped_until_undrained() {
+        let mode = EngineMode::Fp32;
+        let (h1, rx1) = raw_handle(8);
+        let (h2, rx2) = raw_handle(8);
+        let router = Router::new(vec![local(mode, h1), local(mode, h2)]);
+        assert!(router.drain_replica(0));
+        assert!(router.replicas()[0].is_draining());
+        for _ in 0..4 {
+            router.route("sst2", vec![1], None).unwrap();
+        }
+        assert!(rx1.try_recv().is_err(), "draining replica must get nothing");
+        for _ in 0..4 {
+            rx2.try_recv().expect("peer takes the traffic");
+        }
+        // Both draining: servable-but-unavailable, i.e. AllBusy not
+        // NoReplicaForMode.
+        assert!(router.drain_replica(1));
+        assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
+        // Undrain re-opens routing.
+        assert!(router.undrain_replica(0));
+        router.route("sst2", vec![5, 6], None).unwrap();
+        assert_eq!(rx1.try_recv().expect("undrained replica serves again").tokens.len(), 2);
+        assert!(!router.drain_replica(7), "out-of-range drain");
+        assert!(!router.undrain_replica(7));
+    }
+
+    /// A backend whose health is a test-controlled flag, for exercising
+    /// ejection/re-admission routing without sockets.
+    struct FlaggedBackend {
+        inner: ServerHandle,
+        healthy: AtomicBool,
+    }
+
+    impl Backend for FlaggedBackend {
+        fn submit_sink(
+            &self,
+            task: &str,
+            tokens: Vec<u16>,
+            reply: ReplySink,
+        ) -> Result<(), SubmitError> {
+            self.inner.submit_sink(task, tokens, reply)
+        }
+        fn metrics(&self) -> &std::sync::Arc<Metrics> {
+            &self.inner.metrics
+        }
+        fn is_healthy(&self) -> bool {
+            self.healthy.load(Ordering::SeqCst)
+        }
+        fn drain(&self) {}
+        fn describe(&self) -> String {
+            "flagged".to_string()
+        }
+    }
+
+    #[test]
+    fn unhealthy_backend_is_ejected_and_readmitted() {
+        let mode = EngineMode::Fp32;
+        let (h_flagged, rx_flagged) = raw_handle(8);
+        let (h_ok, rx_ok) = raw_handle(8);
+        let flagged = std::sync::Arc::new(FlaggedBackend {
+            inner: h_flagged,
+            healthy: AtomicBool::new(false),
+        });
+        let router = Router::new(vec![
+            ReplicaSpec::new(mode).backend(flagged.clone()),
+            local(mode, h_ok),
+        ]);
+        for _ in 0..4 {
+            router.route("sst2", vec![1], None).unwrap();
+        }
+        assert!(rx_flagged.try_recv().is_err(), "ejected replica must get nothing");
+        for _ in 0..4 {
+            rx_ok.try_recv().expect("healthy peer serves");
+        }
+        // Probe recovery: the backend reads healthy again and the replica
+        // rejoins the rotation (it is idle, so load-aware picks it).
+        flagged.healthy.store(true, Ordering::SeqCst);
+        router.route("sst2", vec![1, 2], None).unwrap();
+        assert_eq!(rx_flagged.try_recv().expect("re-admitted").tokens.len(), 2);
+        // All ejected => AllBusy.
+        flagged.healthy.store(false, Ordering::SeqCst);
+        let solo = Router::new(vec![ReplicaSpec::new(mode).backend(flagged.clone())]);
+        assert!(matches!(solo.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
+    }
+
+    #[test]
     fn length_preference_prefers_tightest_replica() {
         let mode = EngineMode::Fp32;
         let (h_short, rx_short) = raw_handle(8);
         let (h_long, rx_long) = raw_handle(8);
         let router = Router::new(vec![
-            Replica::new(mode, h_long),
-            Replica::with_max_len(mode, 4, h_short),
+            local(mode, h_long),
+            ReplicaSpec::new(mode).max_len(4).local(h_short),
         ]);
         // A short request goes to the short-envelope replica regardless of
-        // declaration order or round-robin state...
+        // declaration order or rotation state...
         for _ in 0..4 {
             router.route("sst2", vec![1, 2, 3], None).unwrap();
         }
@@ -406,7 +657,7 @@ mod tests {
     fn over_length_requests_have_no_candidate() {
         let mode = EngineMode::Fp32;
         let (h_short, _rx) = raw_handle(8);
-        let router = Router::new(vec![Replica::with_max_len(mode, 4, h_short)]);
+        let router = Router::new(vec![ReplicaSpec::new(mode).max_len(4).local(h_short)]);
         let err = router.route("sst2", vec![0; 5], None);
         assert!(matches!(err, Err(RouteError::NoReplicaForMode)));
     }
@@ -420,8 +671,8 @@ mod tests {
         let (h_ok, rx_ok) = raw_handle(8);
         // The busy replica sits in the preferred (tighter) tier.
         let router = Router::new(vec![
-            Replica::with_max_len(mode, 8, h_busy),
-            Replica::new(mode, h_ok),
+            ReplicaSpec::new(mode).max_len(8).local(h_busy),
+            local(mode, h_ok),
         ]);
         router.route("sst2", vec![1, 2], None).expect("must fail over");
         assert_eq!(rx_ok.try_recv().expect("failover target").tokens.len(), 2);
@@ -432,21 +683,21 @@ mod tests {
         let mode = EngineMode::Fp32;
         let (h1, _rx1) = raw_handle(0);
         let (h2, _rx2) = raw_handle(0);
-        let router = Router::new(vec![Replica::new(mode, h1), Replica::new(mode, h2)]);
+        let router = Router::new(vec![local(mode, h1), local(mode, h2)]);
         assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
 
         let (h3, rx3) = raw_handle(4);
         let (h4, rx4) = raw_handle(4);
         drop(rx3);
         drop(rx4);
-        let router = Router::new(vec![Replica::new(mode, h3), Replica::new(mode, h4)]);
+        let router = Router::new(vec![local(mode, h3), local(mode, h4)]);
         assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::Closed)));
 
         // Mixed busy + closed reports AllBusy (a retry may still succeed).
         let (h5, _rx5) = raw_handle(0);
         let (h6, rx6) = raw_handle(4);
         drop(rx6);
-        let router = Router::new(vec![Replica::new(mode, h5), Replica::new(mode, h6)]);
+        let router = Router::new(vec![local(mode, h5), local(mode, h6)]);
         assert!(matches!(router.route("sst2", vec![1], None), Err(RouteError::AllBusy)));
     }
 
@@ -454,7 +705,7 @@ mod tests {
     fn route_blocking_surfaces_explicit_rejections() {
         let mode = EngineMode::Fp32;
         let (s1, h1) = mk_server(mode);
-        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let router = Router::new(vec![local(mode, h1)]);
         let err = router.route_blocking("no-such-task", vec![1, 2], None);
         assert!(matches!(err, Err(RouteError::Rejected(RequestError::UnknownTask))), "{err:?}");
         s1.shutdown();
@@ -475,8 +726,8 @@ mod tests {
         let (h_cheap, rx_cheap) = raw_handle(8);
         let (h_acc, rx_acc) = raw_handle(8);
         let router = Router::new(vec![
-            Replica::new(cheap_mode, h_cheap),
-            Replica::new(EngineMode::Fp32, h_acc),
+            local(cheap_mode, h_cheap),
+            local(EngineMode::Fp32, h_acc),
         ]);
         assert_eq!(router.lanes(), vec![Lane::Cheap, Lane::Accurate]);
         router.route_lane("sst2", vec![1, 2], Some(Lane::Cheap)).unwrap();
@@ -489,7 +740,7 @@ mod tests {
         router.route_lane("sst2", vec![1], None).unwrap();
         // No replica in a lane => NoReplicaForMode.
         let (h_only, _rx) = raw_handle(8);
-        let solo = Router::new(vec![Replica::new(EngineMode::Fp32, h_only)]);
+        let solo = Router::new(vec![local(EngineMode::Fp32, h_only)]);
         assert!(matches!(
             solo.route_lane("sst2", vec![1], Some(Lane::Cheap)),
             Err(RouteError::NoReplicaForMode)
@@ -500,7 +751,7 @@ mod tests {
     fn route_lane_sink_multiplexes_over_one_channel() {
         let mode = EngineMode::Fp32;
         let (s1, h1) = mk_server(mode);
-        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let router = Router::new(vec![local(mode, h1)]);
         let (tx, rx) = sync_channel(4);
         for id in [3u64, 9] {
             let sink = ReplySink::Tagged { id, tx: tx.clone() };
@@ -524,11 +775,13 @@ mod tests {
     }
 
     #[test]
-    fn with_lane_overrides_the_mode_default() {
+    fn lane_override_beats_the_mode_default() {
         // A policy deployment whose *default* mode is accurate bf16 can be
         // advertised in the cheap lane.
         let (h, rx) = raw_handle(8);
-        let r = Replica::new(EngineMode::parse("bf16").unwrap(), h).with_lane(Lane::Cheap);
+        let r = ReplicaSpec::new(EngineMode::parse("bf16").unwrap())
+            .lane(Lane::Cheap)
+            .local(h);
         assert_eq!(r.lane, Lane::Cheap);
         let router = Router::new(vec![r]);
         router.route_lane("sst2", vec![9], Some(Lane::Cheap)).unwrap();
@@ -539,7 +792,7 @@ mod tests {
     fn route_lane_blocking_round_trips() {
         let mode = EngineMode::Fp32;
         let (s1, h1) = mk_server(mode);
-        let router = Router::new(vec![Replica::new(mode, h1)]);
+        let router = Router::new(vec![local(mode, h1)]);
         let r = router
             .route_lane_blocking("sst2", vec![1, 2, 3, 4], Some(Lane::Accurate))
             .unwrap();
@@ -550,10 +803,14 @@ mod tests {
     }
 
     #[test]
-    fn replica_labels_show_length_envelope() {
+    fn replica_labels_show_length_envelope_and_transport() {
         let mode = EngineMode::Fp32;
         let (h1, _rx) = raw_handle(1);
-        assert_eq!(Replica::new(mode, h1.clone()).label(), "fp32");
-        assert_eq!(Replica::with_max_len(mode, 16, h1).label(), "fp32≤16");
+        assert_eq!(ReplicaSpec::new(mode).local(h1.clone()).label(), "fp32");
+        let short = ReplicaSpec::new(mode).max_len(16).local(h1.clone());
+        assert_eq!(short.label(), "fp32≤16");
+        assert_eq!(short.describe(), "fp32≤16");
+        let remote = ReplicaSpec::new(mode).remote("127.0.0.1:1", RemoteBackendConfig::default());
+        assert_eq!(remote.describe(), "fp32 @ remote(127.0.0.1:1)");
     }
 }

@@ -88,6 +88,16 @@ pub enum RequestError {
     UnknownTask,
     /// Sequence length outside `1..=max_seq` for the task's model.
     InvalidLength { len: usize, max_seq: usize },
+    /// An upstream shard answered with `Busy` backpressure, forwarded
+    /// through a front tier (the front's own ingress shed stays
+    /// [`SubmitError::Busy`]; this is the remote shard's answer).
+    Busy,
+    /// An upstream shard did not answer within the configured deadline
+    /// (see `coordinator::backend::RemoteBackendConfig::request_timeout`).
+    Timeout,
+    /// The connection to the upstream shard failed mid-flight, or the
+    /// shard itself was draining.
+    Unavailable,
 }
 
 /// What comes back on the reply channel: logits, or an explicit rejection.

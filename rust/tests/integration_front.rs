@@ -1,0 +1,344 @@
+//! End-to-end tests of the sharded serving topology: a front-tier router
+//! built from [`RemoteBackend`]s over two `AMFN` engine shards, itself
+//! exposed over TCP — the `amfma front` process in miniature.  Covers
+//! bit-exactness of two-hop replies for every engine mode, shard-kill
+//! ejection with the answered-or-rejected contract intact, re-admission
+//! of a restarted shard on the same port, and a rolling drain under
+//! concurrent load with zero lost replies.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amfma::coordinator::net::loadgen::{self, LoadgenConfig};
+use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
+use amfma::coordinator::{
+    InferenceServer, RemoteBackendConfig, ReplicaSpec, Router, ServerConfig,
+};
+use amfma::model::{Encoder, ModelConfig, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+const MAX_SEQ: usize = 8;
+const VOCAB: usize = 32;
+
+fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        vocab: VOCAB,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_layers: 1,
+        max_seq: MAX_SEQ,
+        n_classes: 2,
+    }
+}
+
+fn tiny_models() -> HashMap<String, Arc<Weights>> {
+    let mut m = HashMap::new();
+    m.insert("sst2".to_string(), Arc::new(Weights::random(tiny_config(), 301)));
+    m.insert("rte".to_string(), Arc::new(Weights::random(tiny_config(), 302)));
+    m
+}
+
+/// One engine shard: inference server + its own TCP frontend.
+struct Shard {
+    srv: InferenceServer,
+    net: NetServer,
+    addr: String,
+}
+
+fn try_boot_shard_at(mode: EngineMode, bind: &str) -> std::io::Result<Shard> {
+    let srv = InferenceServer::start(
+        tiny_models(),
+        ServerConfig {
+            mode,
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let router = Arc::new(Router::new(vec![ReplicaSpec::new(mode).local(srv.handle())]));
+    match NetServer::bind(bind, router, NetServerConfig::default()) {
+        Ok(net) => {
+            let addr = net.local_addr().to_string();
+            Ok(Shard { srv, net, addr })
+        }
+        Err(e) => {
+            srv.shutdown();
+            Err(e)
+        }
+    }
+}
+
+fn boot_shard(mode: EngineMode) -> Shard {
+    try_boot_shard_at(mode, "127.0.0.1:0").expect("bind shard")
+}
+
+/// Remote-backend knobs tightened for test pacing: fast probes, a short
+/// request deadline, quick sweeps.
+fn fast_remote_cfg() -> RemoteBackendConfig {
+    RemoteBackendConfig {
+        pool: 1,
+        max_inflight: 64,
+        connect_timeout: Duration::from_millis(500),
+        request_timeout: Duration::from_secs(2),
+        health_interval: Duration::from_millis(100),
+        poll: Duration::from_millis(10),
+    }
+}
+
+/// The front tier: one router whose replicas are the shards, plus its own
+/// client-facing TCP listener — what `amfma front` assembles.
+fn boot_front(mode: EngineMode, shard_addrs: &[&str]) -> (Arc<Router>, NetServer) {
+    let router = Arc::new(Router::new(
+        shard_addrs
+            .iter()
+            .map(|a| ReplicaSpec::new(mode).remote(a.to_string(), fast_remote_cfg()))
+            .collect(),
+    ));
+    let net = NetServer::bind("127.0.0.1:0", router.clone(), NetServerConfig::default())
+        .expect("bind front");
+    (router, net)
+}
+
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t1 = Instant::now() + deadline;
+    while Instant::now() < t1 {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Drain the front's backends, assert every per-shard counter balances,
+/// then flush the client-facing listener.
+fn teardown_front(router: Arc<Router>, net: NetServer) {
+    router.drain_all();
+    for (label, m) in router.metrics() {
+        assert!(m.balanced(), "front backend [{label}] must balance: {m:?}");
+    }
+    net.shutdown();
+}
+
+/// Acceptance criterion: for every engine mode, logits served through the
+/// front tier (client → front → shard → engine) are bit-identical to the
+/// in-process offline encoder on the same weights.
+#[test]
+fn front_replies_are_bit_exact_for_all_modes() {
+    let models = tiny_models();
+    let weights = models.get("sst2").unwrap().clone();
+    for mode in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-2"] {
+        let mode = EngineMode::parse(mode).unwrap();
+        let (s1, s2) = (boot_shard(mode), boot_shard(mode));
+        let (router, front) = boot_front(mode, &[&s1.addr, &s2.addr]);
+        let mut client = Client::connect(front.local_addr()).expect("connect front");
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let enc = Encoder::new(&weights, MatrixEngine::new(mode));
+        let mut rng = Prng::new(41);
+        for len in [1usize, 3, MAX_SEQ] {
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            let reply = client.call("sst2", LaneSelector::Any, &toks).expect("front call");
+            let (logits, _lat) = reply.outcome.expect("served through the front");
+            let want = enc.forward_padded(&toks, &[len], len);
+            assert_eq!(
+                logits,
+                want.row(0).to_vec(),
+                "mode {} len {len}: two-hop reply must be bit-identical",
+                mode.label()
+            );
+        }
+        drop(client);
+        teardown_front(router, front);
+        for shard in [s1, s2] {
+            shard.net.shutdown();
+            let m = shard.srv.shutdown().snapshot();
+            assert!(m.balanced(), "shard counters must balance: {m:?}");
+        }
+    }
+}
+
+/// Killing one shard mid-run ejects it (health probes flip the backend
+/// unhealthy) while the front keeps answering every request — served by
+/// the survivor or rejected with a typed error, never lost — and every
+/// per-backend counter still balances.
+#[test]
+fn shard_kill_ejects_and_keeps_the_front_answering() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let s1 = boot_shard(mode);
+    let s2 = boot_shard(mode);
+    let (router, front) = boot_front(mode, &[&s1.addr, &s2.addr]);
+    let mut client = Client::connect(front.local_addr()).expect("connect front");
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Warm both backends.
+    for i in 0..6u16 {
+        let r = client.call("sst2", LaneSelector::Any, &[i % VOCAB as u16, 1]).unwrap();
+        assert!(r.outcome.is_ok(), "pre-kill traffic must serve: {r:?}");
+    }
+
+    // Abrupt kill: no drain, no goodbye.
+    s2.net.shutdown();
+    s2.srv.shutdown();
+    assert!(
+        wait_until(Duration::from_secs(5), || !router.replicas()[1].backend.is_healthy()),
+        "failed probes must eject the killed shard"
+    );
+
+    // Every post-kill request is answered (the survivor serves; a typed
+    // rejection is also acceptable) — none may hang or vanish.
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for i in 0..12u16 {
+        let r = client
+            .call("sst2", LaneSelector::Any, &[i % VOCAB as u16, 2, 3])
+            .expect("answered-or-rejected, never lost");
+        match r.outcome {
+            Ok(_) => ok += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    assert_eq!(ok + rejected, 12);
+    assert!(ok > 0, "the surviving shard must carry the traffic");
+
+    drop(client);
+    teardown_front(router, front);
+    s1.net.shutdown();
+    let m = s1.srv.shutdown().snapshot();
+    assert!(m.balanced(), "survivor counters must balance: {m:?}");
+}
+
+/// The rolling-restart cycle: drain a shard through the router (no new
+/// routes, backend flushes and disconnects client-side), stop it, rebind
+/// the *same* port — possible precisely because the front closed first —
+/// then undrain and watch health probes re-admit it into rotation.
+#[test]
+fn drained_shard_restarts_on_its_port_and_is_readmitted() {
+    let mode = EngineMode::parse("bf16").unwrap();
+    let s1 = boot_shard(mode);
+    let s2 = boot_shard(mode);
+    let s2_addr = s2.addr.clone();
+    let (router, front) = boot_front(mode, &[&s1.addr, &s2_addr]);
+    let mut client = Client::connect(front.local_addr()).expect("connect front");
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..4u16 {
+        assert!(client.call("sst2", LaneSelector::Any, &[i, 1]).unwrap().outcome.is_ok());
+    }
+
+    // Roll shard 2: drain via the router, then stop the old process.
+    assert!(router.drain_replica(1));
+    s2.net.shutdown();
+    let m = s2.srv.shutdown().snapshot();
+    assert!(m.balanced(), "drained shard must balance: {m:?}");
+
+    // Its port must be immediately rebindable (the front was the active
+    // closer, so TIME_WAIT parked on the front's side, not the shard's).
+    // A short retry loop absorbs scheduler noise.
+    let t1 = Instant::now() + Duration::from_secs(5);
+    let restarted = loop {
+        match try_boot_shard_at(mode, &s2_addr) {
+            Ok(shard) => break shard,
+            Err(_) if Instant::now() < t1 => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => panic!("shard port {s2_addr} must be rebindable after the drain: {e}"),
+        }
+    };
+    assert_eq!(restarted.addr, s2_addr, "restart must land on the recorded port");
+
+    // Undrain reopens routing; the next probe re-admits the backend.
+    assert!(router.undrain_replica(1));
+    assert!(
+        wait_until(Duration::from_secs(5), || router.replicas()[1].backend.is_healthy()),
+        "probes against the restarted shard must re-admit it"
+    );
+
+    // Both shards serve again: the restarted one is idle, so load-aware
+    // routing pulls it straight back into rotation.
+    for i in 0..8u16 {
+        let r = client.call("rte", LaneSelector::Any, &[i % VOCAB as u16, 4]).unwrap();
+        assert!(r.outcome.is_ok(), "post-restart traffic must serve: {r:?}");
+    }
+    assert!(
+        wait_until(Duration::from_secs(2), || {
+            restarted.srv.handle().metrics.snapshot().completed > 0
+        }),
+        "the restarted shard must carry part of the traffic"
+    );
+
+    drop(client);
+    teardown_front(router, front);
+    for shard in [s1, restarted] {
+        shard.net.shutdown();
+        let m = shard.srv.shutdown().snapshot();
+        assert!(m.balanced(), "{m:?}");
+    }
+}
+
+/// A rolling drain across both shards while the load generator hammers the
+/// front: every request is answered or typed-rejected — zero lost replies —
+/// and both the front's backends and the shards balance afterwards.
+#[test]
+fn rolling_drain_under_load_loses_no_replies() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let s1 = boot_shard(mode);
+    let s2 = boot_shard(mode);
+    let (router, front) = boot_front(mode, &[&s1.addr, &s2.addr]);
+    let front_addr = front.local_addr().to_string();
+
+    let mut rng = Prng::new(9);
+    let mut pool = Vec::new();
+    for task in ["sst2", "rte"] {
+        for _ in 0..8 {
+            let len = 1 + rng.below(MAX_SEQ as u64) as usize;
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            pool.push((task.to_string(), toks));
+        }
+    }
+    let requests = 200usize;
+    let cfg = LoadgenConfig {
+        addr: front_addr,
+        connections: 4,
+        requests,
+        pipeline: 4,
+        lane: LaneSelector::Any,
+        varlen: true,
+        seed: 7,
+        bench_target: "serving_front".to_string(),
+        ..Default::default()
+    };
+    let outcome = std::thread::scope(|s| {
+        let gen = s.spawn(|| loadgen::run(&pool, &cfg).expect("loadgen against the front"));
+        // Roll each shard once while traffic flows.
+        for idx in 0..2 {
+            std::thread::sleep(Duration::from_millis(30));
+            assert!(router.drain_replica(idx));
+            assert!(router.undrain_replica(idx));
+            // Wait for re-admission so the next roll never leaves the
+            // front with zero healthy shards.
+            assert!(
+                wait_until(Duration::from_secs(5), || {
+                    router.replicas()[idx].backend.is_healthy()
+                }),
+                "rolled shard {idx} must be re-admitted"
+            );
+        }
+        gen.join().expect("loadgen thread")
+    });
+    assert_eq!(
+        outcome.completed + outcome.rejected,
+        requests as u64,
+        "zero lost replies through the roll: {outcome:?}"
+    );
+    assert!(outcome.completed > 0, "traffic must flow during the roll");
+    // The per-target report keeps the front tier's latency series separate
+    // from direct-serve numbers.
+    let json = loadgen::report(&outcome, &cfg).to_json();
+    assert!(json.contains("\"target\":\"serving_front\""), "{json}");
+
+    teardown_front(router, front);
+    for shard in [s1, s2] {
+        shard.net.shutdown();
+        let m = shard.srv.shutdown().snapshot();
+        assert!(m.balanced(), "shard counters must balance after the roll: {m:?}");
+    }
+}

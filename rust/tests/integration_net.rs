@@ -2,7 +2,9 @@
 //! replies against the in-process path for every engine mode, pipelined
 //! multi-connection traffic with the answered-or-rejected contract and
 //! counter balance, lane selection over the wire, graceful drain via the
-//! shutdown frame, and the load generator driving a live listener.
+//! shutdown frame, the v2 control frames (health probe, connection drain
+//! barrier), connection admission control, client read deadlines, and the
+//! load generator driving a live listener.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -10,7 +12,7 @@ use std::time::Duration;
 
 use amfma::coordinator::net::loadgen::{self, LoadgenConfig};
 use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
-use amfma::coordinator::{InferenceServer, Replica, Router, ServerConfig};
+use amfma::coordinator::{InferenceServer, ReplicaSpec, Router, ServerConfig};
 use amfma::model::{Encoder, ModelConfig, Weights};
 use amfma::prng::Prng;
 use amfma::systolic::{EngineMode, MatrixEngine};
@@ -39,10 +41,18 @@ fn tiny_models() -> HashMap<String, Arc<Weights>> {
 
 /// One server + one TCP frontend over it, on an ephemeral port.
 fn boot(mode: EngineMode, cfg: ServerConfig) -> (InferenceServer, NetServer) {
+    boot_net(mode, cfg, NetServerConfig::default())
+}
+
+/// As [`boot`], with an explicit frontend configuration.
+fn boot_net(
+    mode: EngineMode,
+    cfg: ServerConfig,
+    net_cfg: NetServerConfig,
+) -> (InferenceServer, NetServer) {
     let srv = InferenceServer::start(tiny_models(), ServerConfig { mode, ..cfg });
-    let router = Arc::new(Router::new(vec![Replica::new(mode, srv.handle())]));
-    let net = NetServer::bind("127.0.0.1:0", router, NetServerConfig::default())
-        .expect("bind ephemeral port");
+    let router = Arc::new(Router::new(vec![ReplicaSpec::new(mode).local(srv.handle())]));
+    let net = NetServer::bind("127.0.0.1:0", router, net_cfg).expect("bind ephemeral port");
     (srv, net)
 }
 
@@ -302,4 +312,130 @@ fn disconnecting_client_keeps_server_balanced() {
     let m = srv.shutdown().snapshot();
     assert!(m.balanced(), "counters must balance after a ghost client: {m:?}");
     assert!(m.completed >= 1, "the live client was served");
+}
+
+/// The health frame is echoed inline by the connection reader — ahead of
+/// any queued work — so a liveness probe answers promptly even while the
+/// engine is busy, and it never touches the request counters.
+#[test]
+fn health_ping_echoes_over_the_wire() {
+    let mode = EngineMode::parse("bf16").unwrap();
+    let (srv, net) = boot(mode, ServerConfig::default());
+    let mut client = Client::connect(net.local_addr()).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    for _ in 0..3 {
+        let rtt = client.ping().expect("health echo");
+        assert!(rtt < Duration::from_secs(5));
+    }
+    // Probes are control traffic: the serving counters stay untouched.
+    drop(client);
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.submitted, 0, "pings must not count as requests: {m:?}");
+}
+
+/// The drain frame is a connection-level barrier: every request pipelined
+/// before it is answered first, then the drain echo arrives — the server's
+/// proof that nothing was lost — and the counters balance.
+#[test]
+fn drain_frame_flushes_inflight_replies_then_echoes() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
+    );
+    let mut client = Client::connect(net.local_addr()).expect("connect");
+    let mut ids = Vec::new();
+    for i in 0..7u16 {
+        ids.push(
+            client
+                .send_request("sst2", LaneSelector::Any, &[i % VOCAB as u16, 2, 3])
+                .unwrap(),
+        );
+    }
+    let flushed = client.drain_conn().expect("drain barrier");
+    assert_eq!(flushed.len(), ids.len(), "every in-flight reply flushed before the echo");
+    let mut answered: Vec<u64> = flushed
+        .iter()
+        .map(|r| {
+            assert!(r.outcome.is_ok(), "pre-drain request served: {r:?}");
+            r.id
+        })
+        .collect();
+    answered.sort_unstable();
+    assert_eq!(answered, ids, "the echo covers exactly the pipelined ids");
+    // Close client-side first: the drained server waits for our FIN so a
+    // restarted shard can rebind its port without TIME_WAIT.
+    drop(client);
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, 7);
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// Connection admission control: with `max_conns = 1` a second concurrent
+/// connection is refused at accept time (closed before any frame is read)
+/// and counted, while the admitted connection keeps serving.
+#[test]
+fn admission_cap_rejects_excess_connections() {
+    let mode = EngineMode::parse("bf16").unwrap();
+    let (srv, net) = boot_net(
+        mode,
+        ServerConfig::default(),
+        NetServerConfig { max_conns: 1, ..Default::default() },
+    );
+    let mut first = Client::connect(net.local_addr()).expect("connect");
+    // The echo proves the first connection is registered before we probe
+    // the cap with a second one.
+    first.ping().expect("admitted connection answers");
+    let mut second = Client::connect(net.local_addr()).expect("tcp connect still succeeds");
+    second.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(
+        second.ping().is_err(),
+        "the over-cap connection must be closed at accept"
+    );
+    assert!(net.rejected_conns() >= 1, "rejected connections are counted");
+    // The admitted connection is unaffected.
+    let r = first.call("sst2", LaneSelector::Any, &[1, 2]).expect("still served");
+    assert!(r.outcome.is_ok());
+    drop(first);
+    drop(second);
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// A read deadline on the client turns a silent server into a typed
+/// [`NetError::Timeout`] instead of an indefinite stall — the failure mode
+/// the front tier's remote backends rely on for shard ejection.
+#[test]
+fn client_read_deadline_surfaces_typed_timeout() {
+    use amfma::coordinator::net::NetError;
+    // A raw listener that accepts, swallows bytes and never replies.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind black hole");
+    let addr = listener.local_addr().unwrap();
+    let hole = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut sink = [0u8; 1024];
+            while let Ok(n) = std::io::Read::read(&mut s, &mut sink) {
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+    });
+    let mut client =
+        Client::connect_timeout(addr, Duration::from_secs(2)).expect("connect with deadline");
+    client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    client.send_request("sst2", LaneSelector::Any, &[1, 2, 3]).unwrap();
+    match client.recv_reply() {
+        Err(NetError::Timeout) => {}
+        other => panic!("expected the typed timeout, got {other:?}"),
+    }
+    drop(client); // EOF releases the black-hole thread
+    hole.join().unwrap();
 }

@@ -20,7 +20,7 @@ fn random_lane(rng: &mut Prng) -> LaneSelector {
 }
 
 fn random_frame(rng: &mut Prng) -> Frame {
-    match rng.below(4) {
+    match rng.below(6) {
         0 => {
             let task_len = rng.below(12) as usize;
             let task: String = (0..task_len)
@@ -40,7 +40,7 @@ fn random_frame(rng: &mut Prng) -> Frame {
             }
         }
         2 => {
-            let err = match rng.below(5) {
+            let err = match rng.below(6) {
                 0 => WireError::UnknownTask,
                 1 => WireError::InvalidLength {
                     len: rng.below(1 << 20) as u32,
@@ -48,10 +48,13 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 },
                 2 => WireError::Busy,
                 3 => WireError::NoReplica,
+                4 => WireError::Timeout,
                 _ => WireError::ShuttingDown,
             };
             Frame::ReplyErr { id: rng.next_u64(), err }
         }
+        3 => Frame::Health { id: rng.next_u64() },
+        4 => Frame::Drain { id: rng.next_u64() },
         _ => Frame::Shutdown { id: rng.next_u64() },
     }
 }
@@ -131,6 +134,24 @@ fn bad_header_fields_are_rejected() {
         let mut bad = good.clone();
         bad[off] = bad[off].wrapping_add(100);
         assert!(decode(&bad).is_err(), "corrupt {desc} byte must fail");
+    }
+}
+
+/// The retired v1 protocol (no health/drain kinds) is rejected outright —
+/// there is no version negotiation — and so are kinds beyond the v2 table.
+#[test]
+fn retired_version_and_unknown_kinds_are_rejected() {
+    let mut bytes = encode(&Frame::Health { id: 3 });
+    bytes[4] = 1;
+    assert!(decode(&bytes).is_err(), "v1 header must be rejected");
+    let mut bytes = encode(&Frame::Drain { id: 4 });
+    bytes[5] = 6;
+    assert!(decode(&bytes).is_err(), "kind 6 is out of the v2 table");
+    // The v2 control frames themselves round-trip.
+    for f in [Frame::Health { id: u64::MAX }, Frame::Drain { id: 0 }] {
+        let (back, used) = decode(&encode(&f)).expect("control frame round trip");
+        assert_eq!(back, f);
+        assert_eq!(used, encode(&f).len());
     }
 }
 
