@@ -25,6 +25,13 @@ Runs two ways:
 
 * under pytest, where the synthetic self-tests below keep the gate logic
   honest.
+
+``--expect-snapshots FILE [FILE ...]`` additionally verifies that the
+trajectory actually *accumulated* this run's snapshots: every quick
+series contributed by the listed ``BENCH_*.json`` files must appear in
+the trajectory, or the gate fails loudly.  This guards the failure mode
+where the cache save/restore keying silently re-seeds an empty trajectory
+every run and the gate "passes" forever without comparing anything.
 """
 
 import json
@@ -88,6 +95,42 @@ def gate(docs, tolerance):
         if ratio < tolerance:
             failures.append(entry)
     return checked, failures
+
+
+def missing_snapshot_series(docs, snapshot_docs):
+    """Quick series present in the snapshots but absent from the trajectory.
+
+    ``snapshot_docs`` are the run documents of the ``BENCH_*.json`` files
+    the CI job just appended.  After a correct append, every quick series
+    they contribute is a subset of the trajectory's; anything missing means
+    the append (or the cache restore that should have preserved history)
+    silently dropped data.
+    """
+    have = set(quick_series(docs))
+    return sorted(k for k in quick_series(snapshot_docs) if k not in have)
+
+
+def check_snapshots_accumulated(docs, snapshot_paths):
+    """Load each snapshot file and fail loudly if its series are missing.
+
+    Snapshot files are one JSON document each (a ``BENCH_*.json``), not
+    jsonl; a missing file is itself a hard failure — the job that was
+    supposed to produce it did not.
+    """
+    snaps = []
+    for p in snapshot_paths:
+        path = Path(p)
+        if not path.is_file():
+            raise AssertionError(f"expected snapshot {p} does not exist")
+        snaps.append(json.loads(path.read_text()))
+    missing = missing_snapshot_series(docs, snaps)
+    if missing:
+        lines = "\n".join(f"  {t}/{n} {s}" for (t, n, s) in missing)
+        raise AssertionError(
+            f"trajectory is missing {len(missing)} series that this run's "
+            f"snapshots produced — the append/cache step is broken:\n{lines}"
+        )
+    return len(snaps)
 
 
 # --- synthetic self-tests (pytest) ---------------------------------------
@@ -184,14 +227,64 @@ def test_series_are_independent():
     assert [f[0] for f in failures] == [("serving", "b", "median_ns")]
 
 
+def test_snapshot_series_present_in_trajectory_passes():
+    snap = _doc("hotpath", "gemm", 100)
+    docs = [_doc("hotpath", "gemm", 90), snap]
+    assert missing_snapshot_series(docs, [snap]) == []
+
+
+def test_snapshot_series_missing_from_trajectory_is_reported():
+    # The re-seeding bug: the trajectory holds only stale/unrelated lines
+    # because the cache restore clobbered the accumulated file.
+    snap = _doc("hotpath", "gemm", 100)
+    docs = [_doc("serving", "e2e", 50)]
+    missing = missing_snapshot_series(docs, [snap])
+    assert ("hotpath", "gemm", "median_ns") in missing
+    assert ("hotpath", "gemm", "p99_ns") not in missing  # snapshot had no p99
+
+
+def test_non_quick_snapshots_are_not_expected():
+    # Full (non-quick) snapshot runs never gate, so they are never required
+    # to appear in the quick trajectory either.
+    snap = _doc("hotpath", "gemm", 100, quick=False)
+    assert missing_snapshot_series([], [snap]) == []
+
+
+def test_check_snapshots_accumulated_end_to_end(tmp_path):
+    import pytest
+
+    snap = _doc("hotpath", "gemm", 100)
+    p = tmp_path / "BENCH_hotpath.json"
+    p.write_text(json.dumps(snap))
+    assert check_snapshots_accumulated([snap], [str(p)]) == 1
+    with pytest.raises(AssertionError, match="append/cache step is broken"):
+        check_snapshots_accumulated([_doc("serving", "e2e", 50)], [str(p)])
+    with pytest.raises(AssertionError, match="does not exist"):
+        check_snapshots_accumulated([snap], [str(tmp_path / "nope.json")])
+
+
 def main(argv):
     if len(argv) < 2:
-        sys.exit("usage: perf_gate.py <BENCH_trajectory.jsonl> [--tolerance 0.4]")
+        sys.exit(
+            "usage: perf_gate.py <BENCH_trajectory.jsonl> [--tolerance 0.4] "
+            "[--expect-snapshots BENCH_x.json ...]"
+        )
     path = argv[1]
     tolerance = 0.4
     if "--tolerance" in argv:
         tolerance = float(argv[argv.index("--tolerance") + 1])
+    snapshot_paths = []
+    if "--expect-snapshots" in argv:
+        for a in argv[argv.index("--expect-snapshots") + 1 :]:
+            if a.startswith("--"):
+                break
+            snapshot_paths.append(a)
+        if not snapshot_paths:
+            sys.exit("perf gate: --expect-snapshots needs at least one file")
     docs = load_trajectory(path)
+    if snapshot_paths:
+        n = check_snapshots_accumulated(docs, snapshot_paths)
+        print(f"perf gate: {n} snapshot file(s) accumulated into the trajectory")
     checked, failures = gate(docs, tolerance)
     print(f"perf gate over {path}: {len(docs)} runs, {len(checked)} series compared")
     for (target, name, stat), prev, new, ratio in checked:

@@ -1,10 +1,11 @@
-//! §Perf hot-path benchmarks: scalar FMA throughput, the lane-parallel
-//! wide kernel vs the scalar seed kernel (chain- and GEMM-level), the
-//! pooled-tiled-vs-seed before/after, the cycle-accurate simulator, and
-//! the end-to-end serving pipeline.
+//! §Perf hot-path benchmarks: scalar FMA throughput, the kernel tiers
+//! (scalar seed, lane-parallel wide, native SIMD, fast-math) at chain- and
+//! GEMM-level, the pooled-tiled-vs-seed before/after, the cycle-accurate
+//! simulator, and the end-to-end serving pipeline.
 //!
-//! Every timed GEMM section first asserts the wide-vs-scalar bit-exactness
-//! contract on the full problem; the run is serialized to
+//! Every timed GEMM section first asserts its correctness contract on the
+//! full problem — bit-exactness for the scalar/wide/SIMD tiers, the
+//! documented distributional tolerance for fast-math; the run is serialized to
 //! `bench-results/BENCH_hotpath.json` (+ a `BENCH_trajectory.jsonl` line)
 //! so the repo accumulates a perf trajectory.  `AMFMA_BENCH_QUICK=1` runs
 //! the reduced-iteration mode CI's perf smoke uses.
@@ -71,8 +72,8 @@ fn main() {
         }
     }
 
-    print!("{}", section("wide vs scalar kernel, full GEMM 256x256x256 (bit-exact, then timed)"));
-    wide_vs_scalar_bench(&mut report);
+    print!("{}", section("kernel tiers, full GEMM 256x256x256 (correctness gates, then timed)"));
+    kernel_tier_bench(&mut report);
 
     print!("{}", section("tiled pool + resident weights vs seed per-call path (256x256x256)"));
     tiled_vs_seed_bench(&mut report);
@@ -153,11 +154,16 @@ fn column_chain_bench(report: &mut BenchReport, rng: &mut Prng) {
     report.push_comparison("wide_vs_scalar_chains_k256", speedup);
 }
 
-/// The tentpole's acceptance benchmark: the same pooled tile scheduler
-/// running the scalar seed kernel vs the lane-parallel wide kernel on a
-/// full 256³ GEMM.  Bit-identity is asserted on the complete output for
-/// each mode before any timing.
-fn wide_vs_scalar_bench(report: &mut BenchReport) {
+/// The kernel-tier acceptance benchmark: the same pooled tile scheduler
+/// running the scalar seed kernel, the lane-parallel wide kernel, the
+/// native SIMD datapath and the fast-math tier on a full 256³ GEMM.
+/// Correctness gates run before any timing: scalar/wide/SIMD outputs are
+/// asserted bit-identical for each mode, and the fast-math output must
+/// land inside its documented distributional tolerance (bit-equality is
+/// explicitly not its contract).
+fn kernel_tier_bench(report: &mut BenchReport) {
+    use amfma::arith::fastmath::{compare_bf16, mean_rel_tolerance};
+
     let (m, k, n) = (256usize, 256usize, 256usize);
     let mut rng = Prng::new(41);
     let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
@@ -165,11 +171,14 @@ fn wide_vs_scalar_bench(report: &mut BenchReport) {
     let wt = transpose_to_bf16(&w, k, n);
     let fmas = (m * k * n) as f64;
     let pool = amfma::runtime::pool::global();
+    let isa = amfma::arith::simd::active_isa();
 
     for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_1_2)] {
         let label = mode.label();
         let scalar = TileScheduler::with_kernel(GemmKernel::Scalar);
         let wide_s = TileScheduler::with_kernel(GemmKernel::Wide);
+        let simd_s = TileScheduler::with_kernel(GemmKernel::Simd);
+        let fast_s = TileScheduler::with_kernel(GemmKernel::FastMath);
 
         let y_scalar = scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode);
         let y_wide = wide_s.gemm_bf16(pool, &x, &wt, m, k, n, mode);
@@ -178,38 +187,60 @@ fn wide_vs_scalar_bench(report: &mut BenchReport) {
             "HARD CONTRACT VIOLATED: wide kernel diverged from scalar on {m}x{k}x{n} ({label})"
         );
         println!("bit-exact: wide == scalar on {m}x{k}x{n} {label} ({} outputs)", y_wide.len());
+        let y_simd = simd_s.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+        assert_eq!(
+            y_scalar, y_simd,
+            "HARD CONTRACT VIOLATED: SIMD kernel ({isa}) diverged from scalar on \
+             {m}x{k}x{n} ({label})"
+        );
+        println!("bit-exact: simd == scalar on {m}x{k}x{n} {label} (isa {isa})");
+        let y_fast = fast_s.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+        let st = compare_bf16(&y_fast, &y_wide);
+        let tol = mean_rel_tolerance(mode);
+        assert!(
+            st.mean_rel < tol,
+            "fastmath tier drifted outside tolerance on {m}x{k}x{n} ({label}): \
+             mean rel err {:.3e} >= {tol:.3e}",
+            st.mean_rel
+        );
+        println!(
+            "fastmath distribution ok on {m}x{k}x{n} {label}: mean rel err {:.3e} < {tol:.3e}",
+            st.mean_rel
+        );
 
-        let rs = bench(
-            &format!("gemm256/{label}/scalar-kernel"),
-            1,
-            3,
-            Duration::from_millis(800),
-            || {
-                std::hint::black_box(scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode));
-            },
-        )
-        .with_ops(fmas, "FMA/s");
-        println!("{}", rs.render());
-        report.push(&rs);
-
-        let rw = bench(
-            &format!("gemm256/{label}/wide-kernel"),
-            1,
-            3,
-            Duration::from_millis(800),
-            || {
-                std::hint::black_box(wide_s.gemm_bf16(pool, &x, &wt, m, k, n, mode));
-            },
-        )
-        .with_ops(fmas, "FMA/s");
-        println!("{}", rw.render());
-        report.push(&rw);
+        let mut time_kernel = |sched: &TileScheduler, tier: &str| {
+            let r = bench(
+                &format!("gemm256/{label}/{tier}-kernel"),
+                1,
+                3,
+                Duration::from_millis(800),
+                || {
+                    std::hint::black_box(sched.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+                },
+            )
+            .with_ops(fmas, "FMA/s");
+            println!("{}", r.render());
+            report.push(&r);
+            r
+        };
+        let rs = time_kernel(&scalar, "scalar");
+        let rw = time_kernel(&wide_s, "wide");
+        let ri = time_kernel(&simd_s, "simd");
+        let rf = time_kernel(&fast_s, "fastmath");
+        drop(time_kernel);
 
         let speedup = rs.mean.as_secs_f64() / rw.mean.as_secs_f64();
         println!("speedup (wide vs scalar kernel, {label}): {speedup:.2}x");
         // Same comparison-key family as `amfma bench` (cli::cmd_bench), so
         // trajectory consumers see one series regardless of the runner.
         report.push_comparison(&format!("wide_vs_scalar_gemm_{label}"), speedup);
+        let simd_speedup = rw.mean.as_secs_f64() / ri.mean.as_secs_f64();
+        println!("speedup (simd vs wide kernel, {label}, isa {isa}): {simd_speedup:.2}x");
+        report.push_comparison(&format!("simd_vs_wide_gemm_{label}"), simd_speedup);
+        let fast_speedup = rw.mean.as_secs_f64() / rf.mean.as_secs_f64();
+        println!("speedup (fastmath vs wide kernel, {label}): {fast_speedup:.2}x");
+        report.push_comparison(&format!("fastmath_vs_wide_gemm_{label}"), fast_speedup);
+        report.push_metric(&format!("fastmath_mean_rel_err_{label}"), st.mean_rel, "rel");
     }
 }
 

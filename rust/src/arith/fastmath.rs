@@ -1,0 +1,228 @@
+//! Fast-math bf16an tier: native `f32` multiply-add that *models* the
+//! approximate-normalization datapath instead of emulating it bit-exactly.
+//!
+//! The emulated datapaths ([`crate::arith::fma`], [`crate::arith::wide`],
+//! [`crate::arith::simd`]) spend tens of integer ops per FMA to reproduce
+//! every bit of the paper's Fig. 3 pipeline.  Serving traffic that
+//! tolerates *statistical* rather than bit-level fidelity can instead run
+//! on the host FPU: multiply two bf16 operands in `f32` (exact — two 8-bit
+//! significands always fit a 24-bit product), accumulate, and after every
+//! step truncate the partial sum's significand to the precision the
+//! approximate accumulator actually retains.
+//!
+//! **Precision model.**  The Q1.15 accumulator keeps a 16-bit significand.
+//! Approximate normalization with parameters `(k, λ)` leaves the result
+//! unnormalized by up to `k + λ − 2` positions in the worst case (the
+//! coarse shift restores at least 2 of the `k + λ` inspected positions
+//! when any of them is set), so the effective significand is
+//! `16 − (k + λ − 2)` bits.  [`modeled_sig_bits`] encodes exactly that;
+//! Accurate mode keeps all 16.  Truncation (round-toward-zero) rather than
+//! RNE mirrors the datapath, which drops alignment bits without rounding
+//! until the single south-edge RNE — which this tier applies identically
+//! via [`crate::arith::f32_to_bf16`].
+//!
+//! **This tier is NOT bit-exact and never claims to be.**  It rounds in a
+//! different order than the emulated pipeline (binary64-free f32
+//! accumulation with per-step truncation vs Q4.16 alignment truncation),
+//! so individual outputs differ in the last units.  Its contract is
+//! distributional: `rust/tests/fastmath_distribution.rs` pins relative-
+//! error tolerances against the exact emulator across the `(k, λ)` grid,
+//! and asserts that bit-equality does *not* hold — so nobody mistakes this
+//! tier for a fourth bit-exact kernel.  Use it for the router's cheap
+//! lane; keep bit-exact tiers for golden-path and replay traffic.
+
+use super::fma::NormMode;
+use super::softfloat::{bf16_to_f32, f32_to_bf16};
+
+/// Significand bits the modeled accumulator retains under `mode` (see the
+/// module docs for the derivation).  Accurate keeps the full 16; the
+/// paper's configurations lose `k + λ − 2`.
+pub fn modeled_sig_bits(mode: NormMode) -> u32 {
+    match mode {
+        NormMode::Accurate => 16,
+        NormMode::Approx(cfg) => 16 - (cfg.k + cfg.lambda - 2).min(8),
+    }
+}
+
+/// Native-f32 fast-math kernel for one [`NormMode`].
+#[derive(Debug, Clone, Copy)]
+pub struct FastMathKernel {
+    mode: NormMode,
+    /// f32-bit mask zeroing the mantissa bits below the modeled precision.
+    keep_mask: u32,
+}
+
+impl FastMathKernel {
+    pub fn new(mode: NormMode) -> FastMathKernel {
+        let drop = 24 - modeled_sig_bits(mode);
+        FastMathKernel { mode, keep_mask: !((1u32 << drop) - 1) }
+    }
+
+    /// The normalization mode this kernel models.
+    pub fn mode(&self) -> NormMode {
+        self.mode
+    }
+
+    /// Truncate a partial sum to the modeled significand width.  Inf/NaN
+    /// pass through untouched (masking a NaN payload could turn it into
+    /// Inf; the datapath freezes specials instead).
+    #[inline]
+    pub fn truncate(&self, s: f32) -> f32 {
+        if !s.is_finite() {
+            return s;
+        }
+        f32::from_bits(s.to_bits() & self.keep_mask)
+    }
+
+    /// One fused step of the modeled chain: `trunc(a × b + acc)`.  The
+    /// product of two bf16 values is exact in f32 (8-bit significands →
+    /// ≤ 16-bit product), so `a * b + acc` rounds exactly once — the same
+    /// result a hardware FMA would produce, without requiring the `fma`
+    /// target feature.
+    #[inline]
+    pub fn step(&self, a: f32, b: f32, acc: f32) -> f32 {
+        self.truncate(a * b + acc)
+    }
+
+    /// One column reduction `Σ_i x[i]·w[i]` on the fast-math tier,
+    /// rounded to bf16 once at the south edge like the exact datapath.
+    pub fn column_dot(&self, x: &[u16], w: &[u16]) -> u16 {
+        let mut acc = 0f32;
+        for (&a, &b) in x.iter().zip(w) {
+            acc = self.step(bf16_to_f32(a), bf16_to_f32(b), acc);
+        }
+        f32_to_bf16(acc)
+    }
+}
+
+/// Relative-error summary of a fast-math output against an exact-emulator
+/// reference — the unit of account for the tier's distributional contract.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ErrorStats {
+    /// Elements compared.
+    pub n: usize,
+    /// Elements whose bf16 bit patterns differ.
+    pub mismatches: usize,
+    /// Mean relative error vs the reference (zero-reference elements
+    /// compare absolutely against the smallest normal bf16).
+    pub mean_rel: f64,
+    /// Largest single relative error.
+    pub max_rel: f64,
+}
+
+impl ErrorStats {
+    /// Fraction of elements whose bit patterns differ.
+    pub fn mismatch_frac(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mismatches as f64 / self.n as f64
+        }
+    }
+}
+
+/// Compare a fast-math bf16 output against the exact-emulator reference.
+pub fn compare_bf16(got: &[u16], reference: &[u16]) -> ErrorStats {
+    assert_eq!(got.len(), reference.len(), "shape mismatch");
+    let mut st = ErrorStats { n: got.len(), ..Default::default() };
+    let mut sum = 0f64;
+    for (&g, &r) in got.iter().zip(reference) {
+        if g != r {
+            st.mismatches += 1;
+        }
+        let gv = bf16_to_f32(g) as f64;
+        let rv = bf16_to_f32(r) as f64;
+        // Smallest normal bf16 as the floor keeps zero/FTZ references
+        // from blowing up the relative error.
+        let denom = rv.abs().max(f32::MIN_POSITIVE as f64);
+        let rel = if gv.is_finite() && rv.is_finite() {
+            (gv - rv).abs() / denom
+        } else if g == r {
+            0.0
+        } else {
+            1.0
+        };
+        sum += rel;
+        st.max_rel = st.max_rel.max(rel);
+    }
+    if st.n > 0 {
+        st.mean_rel = sum / st.n as f64;
+    }
+    st
+}
+
+/// Documented *mean* relative-error tolerance for `mode`: the
+/// distribution tests and the bench's correctness-before-timing gate both
+/// use this single source of truth.  The bf16 output quantizes at ~2^−8,
+/// so the floor is one output ULP of headroom; every significand bit the
+/// approximate accumulator drops (see [`modeled_sig_bits`]) widens the
+/// band, since truncation error then accumulates across the K dimension.
+/// Only the mean is gated — individual elements can see large relative
+/// error under catastrophic cancellation, in both tiers.
+pub fn mean_rel_tolerance(mode: NormMode) -> f64 {
+    let dropped = 16 - modeled_sig_bits(mode);
+    (1.0 + dropped as f64) / 128.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{column_dot, ApproxNorm};
+    use crate::prng::Prng;
+
+    #[test]
+    fn modeled_bits_track_the_paper_grid() {
+        assert_eq!(modeled_sig_bits(NormMode::Accurate), 16);
+        assert_eq!(modeled_sig_bits(NormMode::Approx(ApproxNorm::AN_1_1)), 16);
+        assert_eq!(modeled_sig_bits(NormMode::Approx(ApproxNorm::AN_1_2)), 15);
+        assert_eq!(modeled_sig_bits(NormMode::Approx(ApproxNorm::AN_2_2)), 14);
+    }
+
+    #[test]
+    fn truncate_preserves_specials_and_sign() {
+        let kern = FastMathKernel::new(NormMode::Approx(ApproxNorm::AN_2_2));
+        assert!(kern.truncate(f32::NAN).is_nan());
+        assert_eq!(kern.truncate(f32::INFINITY), f32::INFINITY);
+        assert_eq!(kern.truncate(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(kern.truncate(-1.5), -1.5);
+        assert_eq!(kern.truncate(0.0).to_bits(), 0);
+        assert_eq!(kern.truncate(-0.0).to_bits(), 0x8000_0000);
+        // Truncation is toward zero and idempotent.
+        let v = 1.000_123_4_f32;
+        let t = kern.truncate(v);
+        assert!(t <= v && t > 0.0);
+        assert_eq!(kern.truncate(t), t);
+    }
+
+    #[test]
+    fn accurate_mode_tracks_emulator_closely() {
+        let mut rng = Prng::new(801);
+        let kern = FastMathKernel::new(NormMode::Accurate);
+        let k = 64;
+        let trials = 64;
+        let mut got = Vec::with_capacity(trials);
+        let mut exact = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let x: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+            let w: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+            got.push(kern.column_dot(&x, &w));
+            exact.push(column_dot(&x, &w, NormMode::Accurate));
+        }
+        let st = compare_bf16(&got, &exact);
+        let tol = mean_rel_tolerance(NormMode::Accurate);
+        assert!(st.mean_rel < tol, "mean rel {} ≥ {tol}", st.mean_rel);
+    }
+
+    #[test]
+    fn error_stats_basics() {
+        let a = [crate::arith::f32_to_bf16(1.0), crate::arith::f32_to_bf16(2.0)];
+        let same = compare_bf16(&a, &a);
+        assert_eq!(same.mismatches, 0);
+        assert_eq!(same.mean_rel, 0.0);
+        let b = [crate::arith::f32_to_bf16(1.0), crate::arith::f32_to_bf16(2.015)];
+        let diff = compare_bf16(&b, &a);
+        assert_eq!(diff.mismatches, 1);
+        assert!(diff.mean_rel > 0.0 && diff.max_rel < 0.02);
+        assert!((diff.mismatch_frac() - 0.5).abs() < 1e-12);
+    }
+}

@@ -7,18 +7,26 @@
 //! paper's approximate normalization ([`approx_norm`]), the fused
 //! multiply-add PE datapath itself ([`fma`]) and its lane-parallel batched
 //! form ([`wide`]) — the same arithmetic advanced over independent column
-//! chains in struct-of-arrays form, bit-exact with the scalar chain.
+//! chains in struct-of-arrays form, bit-exact with the scalar chain — plus
+//! two execution tiers layered on top: the native x86-64 SIMD datapath
+//! ([`simd`], bit-exact with [`wide`]) and the fast-math tier ([`fastmath`],
+//! hardware-f32 FMA that *models* bf16an truncation statistically rather
+//! than bit-exactly).
 
 pub mod approx_norm;
 pub mod ext;
+pub mod fastmath;
 pub mod fma;
 pub mod format;
 pub mod lza;
+pub mod simd;
 pub mod softfloat;
 pub mod wide;
 
 pub use approx_norm::ApproxNorm;
 pub use ext::{ExtFloat, Kind};
+pub use fastmath::FastMathKernel;
 pub use fma::{column_dot, fma, fma_traced, FmaTrace, NormMode, ADD_FRAME_BITS, NORM_POS};
+pub use simd::SimdKernel;
 pub use softfloat::{bf16_to_f32, f32_to_bf16};
 pub use wide::{WideAcc, WideKernel};

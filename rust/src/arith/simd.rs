@@ -1,0 +1,565 @@
+//! Native SIMD wide-kernel datapath: the 8-lane align/add/normalize step
+//! of [`crate::arith::wide`] executed with `core::arch` x86-64 vector
+//! intrinsics instead of one `u32` op at a time.
+//!
+//! Two code paths, selected once per kernel by runtime feature detection
+//! (`is_x86_feature_detected!`):
+//!
+//! * **AVX2** — all [`LANES`] lanes in one 256-bit vector.  Variable
+//!   per-lane shifts map directly onto `vpsrlvd`/`vpsllvd`, min/max onto
+//!   `vpminsd`/`vpmaxsd`.
+//! * **SSE2** — the portable x86-64 baseline: two 128-bit half-vectors.
+//!   SSE2 has no variable-shift, no 32-bit min/max and no packed leading-
+//!   zero count, so those are emulated (see the module internals) with
+//!   sequences chosen to be *bit-identical* to the scalar kernel, not
+//!   merely close.
+//!
+//! **Bit-exactness contract.** Identical to [`crate::arith::wide`]: for
+//! every input and every [`NormMode`], lane `j` after `t` steps holds
+//! exactly the `ExtFloat` the scalar `fma` chain would hold.  The three
+//! non-obvious emulation tricks this relies on:
+//!
+//! 1. *8×8 multiply via `pmullw`.*  Significands `sa, sb ≤ 0xFF`, so the
+//!    product `< 2¹⁶` fits entirely in the low 16-bit half of each 32-bit
+//!    lane; the high half is zero on both inputs, so a 16-bit lane-wise
+//!    multiply of 32-bit lanes is exact.
+//! 2. *MSB position via `cvtdq2ps`.*  `raw | 1` is at most ~2¹⁹ — far
+//!    below the 2²⁴ threshold where int→f32 conversion starts rounding —
+//!    so `(float_bits >> 23) − 127` recovers `31 − lzcnt(raw|1)` exactly.
+//! 3. *Unsigned compare via sign-bias.*  `(x as u32) < N` is evaluated as
+//!    a signed compare after XORing both sides with `0x8000_0000`.
+//!
+//! The contract is enforced by `rust/tests/property_wide.rs` (which sweeps
+//! scalar / wide / SIMD through the same differential chains), by the
+//! ragged-remainder differential test in `rust/tests/ragged_gemm.rs`, and
+//! by the GEMM-level assertions in `benches/bench_hotpath.rs`.
+//!
+//! Inf/NaN operands take the same cold scalar fallback as the wide kernel;
+//! frozen special lanes are preserved by the same mask-select store.  On
+//! non-x86-64 targets [`SimdKernel::new`] returns `None` and callers fall
+//! back to [`WideKernel`].
+
+use super::fma::NormMode;
+use super::wide::{WideAcc, WideKernel, LANES};
+
+/// Whether this build target has a SIMD datapath at all (compile-time).
+pub fn supported() -> bool {
+    cfg!(target_arch = "x86_64")
+}
+
+/// The instruction set the SIMD kernel would use on this CPU: `"avx2"`,
+/// `"sse2"`, or `"none"` when [`supported`] is false.
+pub fn active_isa() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            "avx2"
+        } else {
+            "sse2"
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        "none"
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Isa {
+    Sse2,
+    Avx2,
+}
+
+/// Vectorized drop-in for [`WideKernel`]: same parameters, same state
+/// layout, same bit-exact semantics, one `step` per K-step.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdKernel {
+    /// Shared normalization parameters + the special-operand fallback.
+    wide: WideKernel,
+    #[cfg(target_arch = "x86_64")]
+    isa: Isa,
+}
+
+impl SimdKernel {
+    /// Build a SIMD kernel for `mode`, or `None` when the target has no
+    /// vector datapath (callers must fall back to [`WideKernel`]).
+    #[cfg(target_arch = "x86_64")]
+    pub fn new(mode: NormMode) -> Option<SimdKernel> {
+        let isa = if is_x86_feature_detected!("avx2") { Isa::Avx2 } else { Isa::Sse2 };
+        Some(SimdKernel { wide: WideKernel::new(mode), isa })
+    }
+
+    /// Build a SIMD kernel for `mode`, or `None` when the target has no
+    /// vector datapath (callers must fall back to [`WideKernel`]).
+    #[cfg(not(target_arch = "x86_64"))]
+    pub fn new(_mode: NormMode) -> Option<SimdKernel> {
+        None
+    }
+
+    /// The normalization mode this kernel was built for.
+    pub fn mode(&self) -> NormMode {
+        self.wide.mode()
+    }
+
+    /// The instruction set this kernel dispatches to.
+    pub fn isa(&self) -> &'static str {
+        #[cfg(target_arch = "x86_64")]
+        {
+            match self.isa {
+                Isa::Avx2 => "avx2",
+                Isa::Sse2 => "sse2",
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            "none"
+        }
+    }
+
+    /// Advance every lane one K-step: `acc[j] = a × b[j] + acc[j]`,
+    /// bit-exact with the scalar [`crate::arith::fma`] chain per lane.
+    #[inline]
+    pub fn step(&self, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        // Inf/NaN operands (exponent field saturated) take the scalar
+        // path, exactly like the wide kernel.
+        let mut b_special = false;
+        for &v in b {
+            b_special |= (v & 0x7F80) == 0x7F80;
+        }
+        if (a & 0x7F80) == 0x7F80 || b_special {
+            self.wide.step(acc, a, b);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` is only constructed after
+        // `is_x86_feature_detected!("avx2")`; SSE2 is part of the x86-64
+        // baseline.  All loads/stores go through unaligned intrinsics.
+        unsafe {
+            match self.isa {
+                Isa::Avx2 => x86::step_avx2(&self.wide, acc, a, b),
+                Isa::Sse2 => x86::step_sse2(&self.wide, acc, a, b),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        self.wide.step(acc, a, b);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::fma::NORM_POS;
+    use super::super::wide::{WideAcc, WideKernel, INF_BITS, LANES, ZERO_EXP};
+    use core::arch::x86_64::*;
+
+    // The step functions below are line-for-line translations of
+    // `WideKernel::step`'s lane loop; every vector temporary is named
+    // after the scalar local it mirrors.  Boolean lane conditions are
+    // carried as all-ones/all-zeros masks, one-bit sign values as 0/1
+    // integer lanes — the same convention the scalar code uses with
+    // `wrapping_neg()` masks.
+    //
+    // These are `unsafe fn`s on edition 2021, so their bodies are
+    // implicit unsafe blocks and the intrinsic calls need no inner
+    // `unsafe {}` (which would trip `unused_unsafe` on toolchains where
+    // target-feature-covered intrinsics are safe to call).
+
+    // ---- AVX2: all 8 lanes in one 256-bit vector ------------------------
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn not256(x: __m256i) -> __m256i {
+        _mm256_xor_si256(x, _mm256_set1_epi32(-1))
+    }
+
+    /// `(a & m) | (b & !m)` — the vector form of `sel_u32`/`sel_i32`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn sel256(m: __m256i, a: __m256i, b: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_and_si256(m, a), _mm256_andnot_si256(m, b))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_avx2(kp: &WideKernel, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        let zero = _mm256_setzero_si256();
+
+        // ---- stage 1, shared across lanes: decode the activation --------
+        let ea = (a as u32 >> 7) & 0xFF;
+        let sa = ((a as u32) & 0x7F) | 0x80;
+        let asign = (a as u32) >> 15;
+        let a_nz = -((ea != 0) as i32); // lane mask value (0 or −1)
+
+        // ---- stage 1, per lane: 8×8 multiply + exponent add -------------
+        let bj = _mm256_cvtepu16_epi32(_mm_loadu_si128(b.as_ptr() as *const __m128i));
+        let eb = _mm256_and_si256(_mm256_srli_epi32(bj, 7), _mm256_set1_epi32(0xFF));
+        let pm = _mm256_and_si256(not256(_mm256_cmpeq_epi32(eb, zero)), _mm256_set1_epi32(a_nz));
+        let sb = _mm256_or_si256(_mm256_and_si256(bj, _mm256_set1_epi32(0x7F)), _mm256_set1_epi32(0x80));
+        // sa, sb ≤ 0xFF: the 16-bit lane product is exact (trick 1).
+        let prod = _mm256_mullo_epi16(sb, _mm256_set1_epi32(sa as i32));
+        let fp = _mm256_and_si256(_mm256_slli_epi32(prod, 2), pm);
+        let ep = sel256(
+            pm,
+            _mm256_add_epi32(eb, _mm256_set1_epi32(ea as i32 - 127)),
+            _mm256_set1_epi32(ZERO_EXP),
+        );
+        let psign = _mm256_xor_si256(_mm256_srli_epi32(bj, 15), _mm256_set1_epi32(asign as i32));
+
+        let csign = _mm256_loadu_si256(acc.sign.as_ptr() as *const __m256i);
+        let ec = _mm256_loadu_si256(acc.exp.as_ptr() as *const __m256i);
+        let mag = _mm256_loadu_si256(acc.mag.as_ptr() as *const __m256i);
+        let fc = _mm256_slli_epi32(mag, 1);
+        let c_nz = not256(_mm256_cmpeq_epi32(mag, zero));
+
+        // ---- stage 2: align (plain truncation) + effective add ----------
+        // Frame values are < 2²⁰, so `vpsrlvd`'s zero-result for counts
+        // ≥ 32 coincides with the scalar clamp-to-31 result.
+        let d = _mm256_sub_epi32(ep, ec);
+        let dm = _mm256_srai_epi32(d, 31);
+        let ap = _mm256_srlv_epi32(fp, _mm256_max_epi32(_mm256_sub_epi32(zero, d), zero));
+        let ac = _mm256_srlv_epi32(fc, _mm256_max_epi32(d, zero));
+        let base = sel256(dm, ec, ep);
+        let ps = _mm256_sub_epi32(zero, psign);
+        let cs = _mm256_sub_epi32(zero, csign);
+        let v = _mm256_add_epi32(
+            _mm256_sub_epi32(_mm256_xor_si256(ap, ps), ps),
+            _mm256_sub_epi32(_mm256_xor_si256(ac, cs), cs),
+        );
+        let sgn = _mm256_srai_epi32(v, 31);
+        let raw = _mm256_sub_epi32(_mm256_xor_si256(v, sgn), sgn);
+        let rsign = _mm256_and_si256(sgn, _mm256_set1_epi32(1));
+
+        // ---- normalize ---------------------------------------------------
+        // MSB position via exact int→f32 conversion (trick 2).
+        let r1 = _mm256_or_si256(raw, _mm256_set1_epi32(1));
+        let msb = _mm256_sub_epi32(
+            _mm256_srli_epi32(_mm256_castps_si256(_mm256_cvtepi32_ps(r1)), 23),
+            _mm256_set1_epi32(127),
+        );
+        let npos = _mm256_set1_epi32(NORM_POS as i32);
+        let rsh = _mm256_max_epi32(_mm256_sub_epi32(msb, npos), zero);
+        let not_over = _mm256_cmpgt_epi32(_mm256_set1_epi32(NORM_POS as i32 + 1), msb);
+        let s_acc = _mm256_sub_epi32(npos, _mm256_min_epi32(msb, npos));
+        let h1 = not256(_mm256_cmpeq_epi32(_mm256_and_si256(raw, _mm256_set1_epi32(kp.g1 as i32)), zero));
+        let h2 = not256(_mm256_cmpeq_epi32(_mm256_and_si256(raw, _mm256_set1_epi32(kp.g2 as i32)), zero));
+        let s_apx = _mm256_andnot_si256(
+            h1,
+            sel256(h2, _mm256_set1_epi32(kp.k as i32), _mm256_set1_epi32(kp.klam as i32)),
+        );
+        let s_left = _mm256_and_si256(sel256(_mm256_set1_epi32(kp.acc_mask as i32), s_acc, s_apx), not_over);
+        let frame = _mm256_sllv_epi32(_mm256_srlv_epi32(raw, rsh), s_left);
+        let e_out = _mm256_sub_epi32(_mm256_add_epi32(base, rsh), s_left);
+        let mag16 = _mm256_srli_epi32(frame, 1);
+
+        // ---- classify + select the new lane state -----------------------
+        let raw_nz = not256(_mm256_cmpeq_epi32(raw, zero));
+        let m_nz = not256(_mm256_cmpeq_epi32(mag16, zero));
+        // Unsigned `(e_out − 1) < 254` via sign-bias (trick 3).
+        let bias = _mm256_set1_epi32(i32::MIN);
+        let e_ok = _mm256_cmpgt_epi32(
+            _mm256_xor_si256(_mm256_set1_epi32(254), bias),
+            _mm256_xor_si256(_mm256_sub_epi32(e_out, _mm256_set1_epi32(1)), bias),
+        );
+        let fin = _mm256_and_si256(_mm256_and_si256(m_nz, e_ok), raw_nz);
+        let inf = _mm256_and_si256(
+            _mm256_and_si256(raw_nz, m_nz),
+            _mm256_cmpgt_epi32(e_out, _mm256_set1_epi32(254)),
+        );
+        let sign0 = _mm256_andnot_si256(pm, _mm256_andnot_si256(c_nz, _mm256_and_si256(psign, csign)));
+        let s_new = sel256(raw_nz, rsign, sign0);
+        let spec_new = _mm256_and_si256(
+            inf,
+            _mm256_or_si256(_mm256_set1_epi32(INF_BITS as i32), _mm256_slli_epi32(rsign, 15)),
+        );
+
+        // Frozen (Inf/NaN) lanes are absorbing: keep their state.
+        let spec_old = _mm256_loadu_si256(acc.spec.as_ptr() as *const __m256i);
+        let live = _mm256_cmpeq_epi32(spec_old, zero);
+        let exp_new = sel256(fin, e_out, _mm256_set1_epi32(ZERO_EXP));
+        _mm256_storeu_si256(
+            acc.mag.as_mut_ptr() as *mut __m256i,
+            sel256(live, _mm256_and_si256(mag16, fin), mag),
+        );
+        _mm256_storeu_si256(acc.exp.as_mut_ptr() as *mut __m256i, sel256(live, exp_new, ec));
+        _mm256_storeu_si256(acc.sign.as_mut_ptr() as *mut __m256i, sel256(live, s_new, csign));
+        _mm256_storeu_si256(acc.spec.as_mut_ptr() as *mut __m256i, sel256(live, spec_new, spec_old));
+    }
+
+    // ---- SSE2: two 128-bit half-vectors ---------------------------------
+
+    #[inline]
+    unsafe fn not128(x: __m128i) -> __m128i {
+        _mm_xor_si128(x, _mm_set1_epi32(-1))
+    }
+
+    /// `(a & m) | (b & !m)`.
+    #[inline]
+    unsafe fn sel128(m: __m128i, a: __m128i, b: __m128i) -> __m128i {
+        _mm_or_si128(_mm_and_si128(m, a), _mm_andnot_si128(m, b))
+    }
+
+    /// `max(x, 0)` lane-wise without SSE4.1 `pmaxsd`.
+    #[inline]
+    unsafe fn max0_epi32(x: __m128i) -> __m128i {
+        _mm_andnot_si128(_mm_srai_epi32(x, 31), x)
+    }
+
+    /// `min(a, b)` lane-wise without SSE4.1 `pminsd`.
+    #[inline]
+    unsafe fn min_epi32(a: __m128i, b: __m128i) -> __m128i {
+        sel128(_mm_cmpgt_epi32(a, b), b, a)
+    }
+
+    /// Variable per-lane logical right shift, `c ≥ 0`.  SSE2 has no
+    /// `vpsrlvd`; decompose the count (clamped to 31, matching the scalar
+    /// kernel's clamp — lane values are < 2²⁰ so `>> 31` is already 0)
+    /// into its bits and apply the five constant-shift stages a lane
+    /// either takes or skips by mask-select.
+    #[inline]
+    unsafe fn srlv128(v: __m128i, c: __m128i) -> __m128i {
+        let c = sel128(_mm_cmpgt_epi32(c, _mm_set1_epi32(31)), _mm_set1_epi32(31), c);
+        let zero = _mm_setzero_si128();
+        let mut v = v;
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(16)), zero));
+        v = sel128(m, _mm_srli_epi32(v, 16), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(8)), zero));
+        v = sel128(m, _mm_srli_epi32(v, 8), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(4)), zero));
+        v = sel128(m, _mm_srli_epi32(v, 4), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(2)), zero));
+        v = sel128(m, _mm_srli_epi32(v, 2), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(1)), zero));
+        sel128(m, _mm_srli_epi32(v, 1), v)
+    }
+
+    /// Variable per-lane left shift, `c ∈ [0, 16]` (the normalize left
+    /// shift is bounded by `NORM_POS`).
+    #[inline]
+    unsafe fn sllv128(v: __m128i, c: __m128i) -> __m128i {
+        let zero = _mm_setzero_si128();
+        let mut v = v;
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(16)), zero));
+        v = sel128(m, _mm_slli_epi32(v, 16), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(8)), zero));
+        v = sel128(m, _mm_slli_epi32(v, 8), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(4)), zero));
+        v = sel128(m, _mm_slli_epi32(v, 4), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(2)), zero));
+        v = sel128(m, _mm_slli_epi32(v, 2), v);
+        let m = not128(_mm_cmpeq_epi32(_mm_and_si128(c, _mm_set1_epi32(1)), zero));
+        sel128(m, _mm_slli_epi32(v, 1), v)
+    }
+
+    pub(super) unsafe fn step_sse2(kp: &WideKernel, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        let vb = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+        let zero = _mm_setzero_si128();
+        let lo = _mm_unpacklo_epi16(vb, zero);
+        let hi = _mm_unpackhi_epi16(vb, zero);
+        step_sse2_half(kp, acc, a, lo, 0);
+        step_sse2_half(kp, acc, a, hi, 4);
+    }
+
+    unsafe fn step_sse2_half(kp: &WideKernel, acc: &mut WideAcc, a: u16, bj: __m128i, o: usize) {
+        let zero = _mm_setzero_si128();
+
+        let ea = (a as u32 >> 7) & 0xFF;
+        let sa = ((a as u32) & 0x7F) | 0x80;
+        let asign = (a as u32) >> 15;
+        let a_nz = -((ea != 0) as i32);
+
+        let eb = _mm_and_si128(_mm_srli_epi32(bj, 7), _mm_set1_epi32(0xFF));
+        let pm = _mm_and_si128(not128(_mm_cmpeq_epi32(eb, zero)), _mm_set1_epi32(a_nz));
+        let sb = _mm_or_si128(_mm_and_si128(bj, _mm_set1_epi32(0x7F)), _mm_set1_epi32(0x80));
+        let prod = _mm_mullo_epi16(sb, _mm_set1_epi32(sa as i32));
+        let fp = _mm_and_si128(_mm_slli_epi32(prod, 2), pm);
+        let ep = sel128(
+            pm,
+            _mm_add_epi32(eb, _mm_set1_epi32(ea as i32 - 127)),
+            _mm_set1_epi32(ZERO_EXP),
+        );
+        let psign = _mm_xor_si128(_mm_srli_epi32(bj, 15), _mm_set1_epi32(asign as i32));
+
+        let csign = _mm_loadu_si128(acc.sign.as_ptr().add(o) as *const __m128i);
+        let ec = _mm_loadu_si128(acc.exp.as_ptr().add(o) as *const __m128i);
+        let mag = _mm_loadu_si128(acc.mag.as_ptr().add(o) as *const __m128i);
+        let fc = _mm_slli_epi32(mag, 1);
+        let c_nz = not128(_mm_cmpeq_epi32(mag, zero));
+
+        let d = _mm_sub_epi32(ep, ec);
+        let dm = _mm_srai_epi32(d, 31);
+        let ap = srlv128(fp, max0_epi32(_mm_sub_epi32(zero, d)));
+        let ac = srlv128(fc, max0_epi32(d));
+        let base = sel128(dm, ec, ep);
+        let ps = _mm_sub_epi32(zero, psign);
+        let cs = _mm_sub_epi32(zero, csign);
+        let v = _mm_add_epi32(
+            _mm_sub_epi32(_mm_xor_si128(ap, ps), ps),
+            _mm_sub_epi32(_mm_xor_si128(ac, cs), cs),
+        );
+        let sgn = _mm_srai_epi32(v, 31);
+        let raw = _mm_sub_epi32(_mm_xor_si128(v, sgn), sgn);
+        let rsign = _mm_and_si128(sgn, _mm_set1_epi32(1));
+
+        let r1 = _mm_or_si128(raw, _mm_set1_epi32(1));
+        let msb = _mm_sub_epi32(
+            _mm_srli_epi32(_mm_castps_si128(_mm_cvtepi32_ps(r1)), 23),
+            _mm_set1_epi32(127),
+        );
+        let npos = _mm_set1_epi32(NORM_POS as i32);
+        let rsh = max0_epi32(_mm_sub_epi32(msb, npos));
+        let not_over = _mm_cmpgt_epi32(_mm_set1_epi32(NORM_POS as i32 + 1), msb);
+        let s_acc = _mm_sub_epi32(npos, min_epi32(msb, npos));
+        let h1 = not128(_mm_cmpeq_epi32(_mm_and_si128(raw, _mm_set1_epi32(kp.g1 as i32)), zero));
+        let h2 = not128(_mm_cmpeq_epi32(_mm_and_si128(raw, _mm_set1_epi32(kp.g2 as i32)), zero));
+        let s_apx = _mm_andnot_si128(
+            h1,
+            sel128(h2, _mm_set1_epi32(kp.k as i32), _mm_set1_epi32(kp.klam as i32)),
+        );
+        let s_left = _mm_and_si128(sel128(_mm_set1_epi32(kp.acc_mask as i32), s_acc, s_apx), not_over);
+        let frame = sllv128(srlv128(raw, rsh), s_left);
+        let e_out = _mm_sub_epi32(_mm_add_epi32(base, rsh), s_left);
+        let mag16 = _mm_srli_epi32(frame, 1);
+
+        let raw_nz = not128(_mm_cmpeq_epi32(raw, zero));
+        let m_nz = not128(_mm_cmpeq_epi32(mag16, zero));
+        let bias = _mm_set1_epi32(i32::MIN);
+        let e_ok = _mm_cmpgt_epi32(
+            _mm_xor_si128(_mm_set1_epi32(254), bias),
+            _mm_xor_si128(_mm_sub_epi32(e_out, _mm_set1_epi32(1)), bias),
+        );
+        let fin = _mm_and_si128(_mm_and_si128(m_nz, e_ok), raw_nz);
+        let inf = _mm_and_si128(
+            _mm_and_si128(raw_nz, m_nz),
+            _mm_cmpgt_epi32(e_out, _mm_set1_epi32(254)),
+        );
+        let sign0 = _mm_andnot_si128(pm, _mm_andnot_si128(c_nz, _mm_and_si128(psign, csign)));
+        let s_new = sel128(raw_nz, rsign, sign0);
+        let spec_new = _mm_and_si128(
+            inf,
+            _mm_or_si128(_mm_set1_epi32(INF_BITS as i32), _mm_slli_epi32(rsign, 15)),
+        );
+
+        let spec_old = _mm_loadu_si128(acc.spec.as_ptr().add(o) as *const __m128i);
+        let live = _mm_cmpeq_epi32(spec_old, zero);
+        let exp_new = sel128(fin, e_out, _mm_set1_epi32(ZERO_EXP));
+        _mm_storeu_si128(
+            acc.mag.as_mut_ptr().add(o) as *mut __m128i,
+            sel128(live, _mm_and_si128(mag16, fin), mag),
+        );
+        _mm_storeu_si128(acc.exp.as_mut_ptr().add(o) as *mut __m128i, sel128(live, exp_new, ec));
+        _mm_storeu_si128(acc.sign.as_mut_ptr().add(o) as *mut __m128i, sel128(live, s_new, csign));
+        _mm_storeu_si128(acc.spec.as_mut_ptr().add(o) as *mut __m128i, sel128(live, spec_new, spec_old));
+    }
+}
+
+/// [`crate::arith::wide::dot_lanes`] on the SIMD datapath: [`LANES`]
+/// column reductions in one pass, rounded once at the south edge.
+pub fn dot_lanes_simd(x: &[u16], packed: &[u16], mode: NormMode) -> Option<[u16; LANES]> {
+    let kern = SimdKernel::new(mode)?;
+    debug_assert_eq!(packed.len(), x.len() * LANES, "packed shape");
+    let mut acc = WideAcc::new();
+    for (&xi, bch) in x.iter().zip(packed.chunks_exact(LANES)) {
+        let b: &[u16; LANES] = bch.try_into().expect("chunk is LANES wide");
+        kern.step(&mut acc, xi, b);
+    }
+    Some(acc.round_to_bf16())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ext::ExtFloat;
+    use crate::arith::fma::fma;
+    use crate::arith::ApproxNorm;
+    use crate::prng::Prng;
+
+    const MODES: [NormMode; 4] = [
+        NormMode::Accurate,
+        NormMode::Approx(ApproxNorm::AN_1_1),
+        NormMode::Approx(ApproxNorm::AN_1_2),
+        NormMode::Approx(ApproxNorm::AN_2_2),
+    ];
+
+    #[test]
+    fn supported_matches_target() {
+        assert_eq!(supported(), cfg!(target_arch = "x86_64"));
+        if supported() {
+            let isa = active_isa();
+            assert!(isa == "avx2" || isa == "sse2", "unexpected isa {isa}");
+        } else {
+            assert_eq!(active_isa(), "none");
+        }
+    }
+
+    /// Per-step differential vs the scalar oracle, including specials and
+    /// signed zeros.  Skipped (vacuously true) on non-x86-64 targets.
+    #[test]
+    fn step_matches_scalar_oracle() {
+        let mut rng = Prng::new(701);
+        for mode in MODES {
+            let Some(kern) = SimdKernel::new(mode) else { return };
+            let mut acc = WideAcc::new();
+            let mut scalar = [ExtFloat::ZERO; LANES];
+            for i in 0..512 {
+                let a = match i % 13 {
+                    0 => 0,                        // +0 activation
+                    1 => 0x8000,                   // −0
+                    2 => 0x7F80,                   // +inf → scalar fallback
+                    _ => rng.bf16_activation(),
+                };
+                let b: [u16; LANES] = std::array::from_fn(|l| match (i + l) % 17 {
+                    0 => 0,
+                    1 => 0x8000,
+                    2 => 0x7FC0, // NaN weight
+                    _ => rng.bf16_activation(),
+                });
+                kern.step(&mut acc, a, &b);
+                for (l, s) in scalar.iter_mut().enumerate() {
+                    *s = fma(a, b[l], *s, mode);
+                    assert_eq!(
+                        acc.lane(l),
+                        *s,
+                        "step {i} lane {l} mode {mode:?} isa {} a={a:04x} b={:04x}",
+                        kern.isa(),
+                        b[l]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_and_cancellation_match_scalar() {
+        let big = crate::arith::f32_to_bf16(3e38);
+        let nbig = big | 0x8000;
+        for mode in MODES {
+            let Some(kern) = SimdKernel::new(mode) else { return };
+            let mut acc = WideAcc::new();
+            let mut scalar = [ExtFloat::ZERO; LANES];
+            // Saturate upward, then cancel back down.
+            for &a in &[big, big, big, nbig, nbig] {
+                let b = [big; LANES];
+                kern.step(&mut acc, a, &b);
+                for (l, s) in scalar.iter_mut().enumerate() {
+                    *s = fma(a, b[l], *s, mode);
+                    assert_eq!(acc.lane(l), *s, "lane {l} mode {mode:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_lanes_simd_matches_wide() {
+        use crate::arith::wide::{dot_lanes, pack_lanes};
+        let mut rng = Prng::new(702);
+        for mode in MODES {
+            let k = 128;
+            let x: Vec<u16> = (0..k).map(|_| rng.bf16_activation()).collect();
+            let cols: [Vec<u16>; LANES] =
+                std::array::from_fn(|_| (0..k).map(|_| rng.bf16_activation()).collect());
+            let refs: [&[u16]; LANES] = std::array::from_fn(|l| cols[l].as_slice());
+            let packed = pack_lanes(&refs);
+            let Some(y) = dot_lanes_simd(&x, &packed, mode) else { return };
+            assert_eq!(y, dot_lanes(&x, &packed, mode), "mode {mode:?}");
+        }
+    }
+}

@@ -49,11 +49,14 @@ pub const LANES: usize = 8;
 /// exponent (≥ 1 − 254 bias headroom) that `d = ep − ec` saturates the
 /// 31-position alignment clamp in either direction, which is exactly what
 /// makes the zero-operand cases fall out of the common datapath.
-const ZERO_EXP: i32 = -0x200;
+/// Shared with the vectorized datapath ([`crate::arith::simd`]).
+pub(crate) const ZERO_EXP: i32 = -0x200;
 
-/// bf16 bit patterns latched for frozen special lanes.
-const INF_BITS: u16 = 0x7F80;
-const NAN_BITS: u16 = 0x7FC0;
+/// bf16 bit patterns latched for frozen special lanes (kept in 32-bit
+/// lanes so the accumulator state is four flat 8×32-bit rows — the layout
+/// both this kernel and the SIMD datapath load and store directly).
+pub(crate) const INF_BITS: u32 = 0x7F80;
+const NAN_BITS: u32 = 0x7FC0;
 
 #[inline(always)]
 fn sel_u32(mask: u32, a: u32, b: u32) -> u32 {
@@ -72,10 +75,10 @@ fn sel_i32(mask: i32, a: i32, b: i32) -> i32 {
 /// carry their final bf16 pattern instead.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WideAcc {
-    sign: [u32; LANES],
-    exp: [i32; LANES],
-    mag: [u32; LANES],
-    spec: [u16; LANES],
+    pub(crate) sign: [u32; LANES],
+    pub(crate) exp: [i32; LANES],
+    pub(crate) mag: [u32; LANES],
+    pub(crate) spec: [u32; LANES],
 }
 
 impl Default for WideAcc {
@@ -170,11 +173,11 @@ impl WideAcc {
 pub struct WideKernel {
     mode: NormMode,
     /// All-ones when normalizing exactly (the BF16 baseline).
-    acc_mask: u32,
-    k: u32,
-    klam: u32,
-    g1: u32,
-    g2: u32,
+    pub(crate) acc_mask: u32,
+    pub(crate) k: u32,
+    pub(crate) klam: u32,
+    pub(crate) g1: u32,
+    pub(crate) g2: u32,
 }
 
 impl WideKernel {
@@ -270,7 +273,7 @@ impl WideKernel {
             // (−0 only when both contributions are negative).
             let sign0 = (1 ^ p_nz) & (1 ^ c_nz) & psign & csign;
             let s_new = sel_u32(raw_nz.wrapping_neg(), rsign, sign0);
-            let spec_new = inf & (INF_BITS as u32 | (rsign << 15));
+            let spec_new = inf & (INF_BITS | (rsign << 15));
 
             // Frozen (Inf/NaN) lanes are absorbing: keep their state.
             let live = ((acc.spec[j] == 0) as u32).wrapping_neg();
@@ -278,7 +281,7 @@ impl WideKernel {
             acc.mag[j] = sel_u32(live, mag16 & fin, acc.mag[j]);
             acc.exp[j] = sel_i32(live as i32, exp_new, acc.exp[j]);
             acc.sign[j] = sel_u32(live, s_new, acc.sign[j]);
-            acc.spec[j] = sel_u32(live, spec_new, acc.spec[j] as u32) as u16;
+            acc.spec[j] = sel_u32(live, spec_new, acc.spec[j]);
         }
     }
 

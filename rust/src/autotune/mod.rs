@@ -30,4 +30,7 @@ pub mod search;
 pub use calibrate::{calibrate, CalibrationConfig, CalibrationOutcome, SiteDecision};
 pub use policy::{model_sites, PrecisionPolicy, Site, SiteKind};
 pub use report::rel_err;
-pub use search::{mode_pe_area, pareto_frontier, policy_area_saving, site_macs, ParetoPoint};
+pub use search::{
+    kernel_tier_accurate_lane_admissible, kernel_tier_pe_area, mode_pe_area, pareto_frontier,
+    policy_area_saving, site_macs, ParetoPoint,
+};

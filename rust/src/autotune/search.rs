@@ -7,7 +7,7 @@
 use crate::cost::{pe_area_saving, PeArea};
 use crate::model::ModelConfig;
 use crate::prng::Prng;
-use crate::systolic::{EngineMode, MatrixEngine};
+use crate::systolic::{EngineMode, GemmKernel, MatrixEngine};
 use crate::{ApproxNorm, NormMode};
 
 use super::policy::{PrecisionPolicy, Site, SiteKind};
@@ -22,6 +22,32 @@ pub fn mode_pe_area(mode: EngineMode) -> f64 {
         EngineMode::Bf16(NormMode::Accurate) => PeArea::accurate().total(),
         EngineMode::Bf16(NormMode::Approx(cfg)) => PeArea::approximate(cfg).total(),
     }
+}
+
+/// Modeled PE area of one *kernel tier* serving `mode`.  The scalar, wide
+/// and SIMD tiers are bit-exact implementations of the same PE, so they
+/// all price at [`mode_pe_area`] — a tier choice buys host-side speed,
+/// never a different silicon budget.  The fast-math tier models the
+/// *precision* of a bf16 PE with native f32 FMA hardware, so it prices at
+/// the PE it models; under an FP32 engine mode (which it never emulates)
+/// it falls back to the accurate bf16 PE, the closest hardware it could
+/// stand in for.
+pub fn kernel_tier_pe_area(kernel: GemmKernel, mode: EngineMode) -> f64 {
+    match kernel {
+        GemmKernel::Scalar | GemmKernel::Wide | GemmKernel::Simd => mode_pe_area(mode),
+        GemmKernel::FastMath => match mode {
+            EngineMode::Fp32 => PeArea::accurate().total(),
+            m => mode_pe_area(m),
+        },
+    }
+}
+
+/// Whether a kernel tier may serve the router's *accurate* lane.  The
+/// bit-exact tiers all qualify; fast-math is distributionally faithful
+/// only, so it is admissible solely as a cheap-lane offering (the serve
+/// path enforces this by forcing `Lane::Cheap` on fast-math replicas).
+pub fn kernel_tier_accurate_lane_admissible(kernel: GemmKernel) -> bool {
+    kernel != GemmKernel::FastMath
 }
 
 /// MAC volume of one GEMM site for a single sequence of `seq` live tokens
@@ -177,6 +203,35 @@ mod tests {
         // And the approx saving matches the PE-level model exactly.
         let s = (bf16 - an12) / bf16;
         assert!((s - pe_area_saving(ApproxNorm::AN_1_2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_tiers_price_on_the_mode_they_model() {
+        let an12 = EngineMode::parse("bf16an-1-2").unwrap();
+        let bf16 = EngineMode::Bf16(NormMode::Accurate);
+        // Bit-exact tiers are interchangeable in the cost model.
+        for k in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
+            assert_eq!(kernel_tier_pe_area(k, an12), mode_pe_area(an12), "{k:?}");
+            assert_eq!(kernel_tier_pe_area(k, EngineMode::Fp32), mode_pe_area(EngineMode::Fp32));
+        }
+        // Fast-math prices at the bf16an PE it models, never the FP32 PE.
+        assert_eq!(kernel_tier_pe_area(GemmKernel::FastMath, an12), mode_pe_area(an12));
+        assert_eq!(
+            kernel_tier_pe_area(GemmKernel::FastMath, EngineMode::Fp32),
+            mode_pe_area(bf16)
+        );
+        assert!(
+            kernel_tier_pe_area(GemmKernel::FastMath, EngineMode::Fp32)
+                < mode_pe_area(EngineMode::Fp32)
+        );
+        // And it is the only tier barred from the accurate lane.
+        for k in GemmKernel::ALL {
+            assert_eq!(
+                kernel_tier_accurate_lane_admissible(k),
+                k != GemmKernel::FastMath,
+                "{k:?}"
+            );
+        }
     }
 
     #[test]

@@ -25,6 +25,17 @@ use crate::systolic::{EngineMode, MatrixEngine};
 use crate::ApproxNorm;
 
 pub fn run(args: Args) -> Result<()> {
+    // Validate the kernel selection before any subcommand runs: a typo in
+    // AMFMA_KERNEL must be a clean startup error, never a silent fallback
+    // to a kernel the operator did not ask for.  An unsupported `simd`
+    // request is downgraded with a logged warning (see
+    // `GemmKernel::resolve_supported`).
+    if let Some(requested) = crate::systolic::GemmKernel::from_env()? {
+        let (_, warning) = requested.resolve_supported(crate::arith::simd::supported());
+        if let Some(w) = warning {
+            eprintln!("amfma: {w}");
+        }
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("eval") => cmd_eval(&args),
         Some("hist") => cmd_hist(&args),
@@ -49,13 +60,17 @@ USAGE:
   amfma hist  [--task sst2] [--examples N]                      reproduce Fig 6
   amfma cost  [--fig4] [--fig7] [--k K --lambda L]              reproduce Fig 4/7
   amfma bench [--json] [--m M --k K --n N] [--mode bf16an-1-2]  hot-path bench:
-              wide-vs-scalar kernel bit-exactness contract, then timing;
-              --json persists BENCH_hotpath.json + trajectory line
+              scalar/wide/simd bit-exactness + fastmath distribution
+              contracts, then per-kernel-tier timing; --json persists
+              BENCH_hotpath.json + trajectory line
   amfma tune  [--task sst2] [--budget 1.0] [--limit N] [--batch N]
               [--candidates m1,m2] [--tune-head] [--out FILE]   calibrate a
               per-site precision policy within an accuracy budget
   amfma serve [--mode bf16an-1-2] [--policy FILE] [--requests N]
-              [--concurrency C] [--varlen] [--length-bucket W]  batching server
+              [--concurrency C] [--varlen] [--length-bucket W]
+              [--fastmath]                                      batching server
+              (--fastmath serves the native fast-math tier, cheap lane only;
+              AMFMA_KERNEL=scalar|wide|simd|fastmath picks the default kernel)
   amfma serve --listen 127.0.0.1:0 [--port-file F] ...          TCP frontend:
               serves AMFN frames until a client sends a shutdown frame
   amfma front --shard HOST:PORT [--shard HOST:PORT ...]
@@ -197,11 +212,12 @@ pub fn measured_activities(cfg: ApproxNorm) -> Option<(Activities, Activities)> 
     Some((Activities::from_stats(&sa), Activities::from_stats(&sx)))
 }
 
-/// `amfma bench`: the in-process hot-path benchmark.  Checks the hard
-/// wide-vs-scalar bit-exactness contract on a full GEMM first (a mismatch
-/// is a non-zero exit, which is what CI's perf smoke keys on), then times
-/// both kernels and reports the speedup.  `--json` persists the run via
-/// [`crate::bench_harness::json`] — the same `BENCH_hotpath.json` +
+/// `amfma bench`: the in-process hot-path benchmark over every GEMM
+/// kernel tier.  Correctness gates run before any timing: the
+/// scalar/wide/SIMD bit-exactness contract on a full GEMM (a mismatch is
+/// a non-zero exit, which is what CI's perf smoke keys on), and the
+/// fast-math tier's distributional tolerance.  `--json` persists the run
+/// via [`crate::bench_harness::json`] — the same `BENCH_hotpath.json` +
 /// trajectory files the `cargo bench` target writes.
 fn cmd_bench(args: &Args) -> Result<()> {
     use crate::bench_harness::json::BenchReport;
@@ -227,6 +243,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let scalar = TileScheduler::with_kernel(GemmKernel::Scalar);
     let wide = TileScheduler::with_kernel(GemmKernel::Wide);
+    let simd = TileScheduler::with_kernel(GemmKernel::Simd);
+    let fast = TileScheduler::with_kernel(GemmKernel::FastMath);
     let y_scalar = scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode);
     let y_wide = wide.gemm_bf16(pool, &x, &wt, m, k, n, mode);
     if y_scalar != y_wide {
@@ -241,37 +259,81 @@ fn cmd_bench(args: &Args) -> Result<()> {
         engine_mode.label(),
         y_scalar.len()
     );
+    let y_simd = simd.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    if y_scalar != y_simd {
+        bail!(
+            "SIMD kernel ({}) diverged from the scalar path on a {m}x{k}x{n} {} GEMM — \
+             the bit-exactness contract is broken",
+            crate::arith::simd::active_isa(),
+            engine_mode.label()
+        );
+    }
+    println!(
+        "bit-exact: simd == scalar on {m}x{k}x{n} {} (isa {})",
+        engine_mode.label(),
+        crate::arith::simd::active_isa()
+    );
+    // Fast-math is gated on its documented *distributional* tolerance —
+    // bit-equality is explicitly not its contract.
+    let y_fast = fast.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    let st = crate::arith::fastmath::compare_bf16(&y_fast, &y_wide);
+    let tol = crate::arith::fastmath::mean_rel_tolerance(mode);
+    if st.mean_rel >= tol {
+        bail!(
+            "fastmath tier drifted outside tolerance on a {m}x{k}x{n} {} GEMM: \
+             mean rel err {:.3e} ≥ {tol:.3e}",
+            engine_mode.label(),
+            st.mean_rel
+        );
+    }
+    println!(
+        "fastmath distribution ok on {m}x{k}x{n} {}: mean rel err {:.3e} < {tol:.3e} \
+         ({:.1}% of outputs differ bitwise — bit-exactness is not claimed)",
+        engine_mode.label(),
+        st.mean_rel,
+        100.0 * st.mismatch_frac()
+    );
 
     let mut report = BenchReport::new("hotpath");
-    print!("{}", section("wide vs scalar kernel (pooled tiles)"));
+    print!("{}", section("kernel tiers (pooled tiles)"));
     let fmas = (m * k * n) as f64;
-    let rs = bench(
-        &format!("gemm/{}/scalar-kernel", engine_mode.label()),
-        1,
-        3,
-        Duration::from_millis(300),
-        || {
-            std::hint::black_box(scalar.gemm_bf16(pool, &x, &wt, m, k, n, mode));
-        },
-    )
-    .with_ops(fmas, "FMA/s");
-    println!("{}", rs.render());
-    report.push(&rs);
-    let rw = bench(
-        &format!("gemm/{}/wide-kernel", engine_mode.label()),
-        1,
-        3,
-        Duration::from_millis(300),
-        || {
-            std::hint::black_box(wide.gemm_bf16(pool, &x, &wt, m, k, n, mode));
-        },
-    )
-    .with_ops(fmas, "FMA/s");
-    println!("{}", rw.render());
-    report.push(&rw);
+    let mut time_kernel = |sched: &TileScheduler, label: &str| {
+        let r = bench(
+            &format!("gemm/{}/{label}-kernel", engine_mode.label()),
+            1,
+            3,
+            Duration::from_millis(300),
+            || {
+                std::hint::black_box(sched.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+            },
+        )
+        .with_ops(fmas, "FMA/s");
+        println!("{}", r.render());
+        report.push(&r);
+        r
+    };
+    let rs = time_kernel(&scalar, "scalar");
+    let rw = time_kernel(&wide, "wide");
+    let ri = time_kernel(&simd, "simd");
+    let rf = time_kernel(&fast, "fastmath");
+    drop(time_kernel);
     let speedup = rs.mean.as_secs_f64() / rw.mean.as_secs_f64();
     println!("speedup (wide vs scalar kernel): {speedup:.2}x");
     report.push_comparison(&format!("wide_vs_scalar_gemm_{}", engine_mode.label()), speedup);
+    let simd_speedup = rw.mean.as_secs_f64() / ri.mean.as_secs_f64();
+    println!(
+        "speedup (simd vs wide kernel, isa {}): {simd_speedup:.2}x",
+        crate::arith::simd::active_isa()
+    );
+    report.push_comparison(&format!("simd_vs_wide_gemm_{}", engine_mode.label()), simd_speedup);
+    let fast_speedup = rw.mean.as_secs_f64() / rf.mean.as_secs_f64();
+    println!("speedup (fastmath vs wide kernel): {fast_speedup:.2}x");
+    report.push_comparison(&format!("fastmath_vs_wide_gemm_{}", engine_mode.label()), fast_speedup);
+    report.push_metric(
+        &format!("fastmath_mean_rel_err_{}", engine_mode.label()),
+        st.mean_rel,
+        "rel",
+    );
 
     if args.has_flag("json") {
         let p = report.write().context("write bench JSON")?;
@@ -352,6 +414,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --varlen: truncate each example to a random live length, exercising
     // the masked/padded batching path.
     let varlen = args.has_flag("varlen");
+    // --fastmath: serve on the native fast-math tier.  Its results are
+    // distributionally, not bitwise, faithful to the emulated PE, so the
+    // listen path below only ever advertises it in the cheap lane.
+    let kernel = if args.has_flag("fastmath") {
+        println!(
+            "fastmath tier requested — native f32 kernel, cheap-lane admissible only \
+             (bit-exactness is not claimed; see README \"Performance\")"
+        );
+        crate::systolic::GemmKernel::FastMath
+    } else {
+        crate::systolic::GemmKernel::default_from_env()
+    };
 
     let mut models = HashMap::new();
     let mut tasks = Vec::new();
@@ -395,7 +469,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // of them sends a shutdown frame (`amfma loadgen --shutdown`).
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
-        return serve_listen(args, &listen, mode, models, policies, max_batch, length_bucket);
+        return serve_listen(args, &listen, mode, models, policies, max_batch, length_bucket, kernel);
     }
     println!(
         "serving {} tasks with mode {} ({} requests, concurrency {})",
@@ -406,7 +480,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, length_bucket, policies, ..Default::default() },
+        ServerConfig { mode, max_batch, length_bucket, policies, kernel, ..Default::default() },
     );
     let handle = srv.handle();
     let t0 = std::time::Instant::now();
@@ -454,20 +528,26 @@ fn serve_listen(
     policies: std::collections::HashMap<String, std::sync::Arc<PrecisionPolicy>>,
     max_batch: usize,
     length_bucket: usize,
+    kernel: crate::systolic::GemmKernel,
 ) -> Result<()> {
     use crate::coordinator::net::{NetServer, NetServerConfig};
     use crate::coordinator::{InferenceServer, Lane, ReplicaSpec, Router, ServerConfig};
+    use crate::systolic::GemmKernel;
 
     let n_tasks = models.len();
     let has_policy = !policies.is_empty();
+    let fastmath = kernel == GemmKernel::FastMath;
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, length_bucket, policies, ..Default::default() },
+        ServerConfig { mode, max_batch, length_bucket, policies, kernel, ..Default::default() },
     );
     let mut spec = ReplicaSpec::new(mode);
-    if has_policy {
+    if has_policy || fastmath {
         // A policy deployment is a cheap-lane offering even when its
         // default mode is accurate (mirrors `ReplicaSpec::lane` docs).
+        // The fast-math tier is forced into the cheap lane for a different
+        // reason: it is not bit-exact, so it must never serve accurate-lane
+        // traffic.
         spec = spec.lane(Lane::Cheap);
     }
     let router = std::sync::Arc::new(Router::new(vec![spec.local(srv.handle())]));
@@ -715,6 +795,17 @@ fn cmd_cycles(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
+    println!(
+        "kernel: {} (default; {}={})",
+        crate::systolic::GemmKernel::default_from_env().label(),
+        crate::config::ENV_KERNEL,
+        std::env::var(crate::config::ENV_KERNEL).unwrap_or_else(|_| "unset".into()),
+    );
+    println!(
+        "simd: supported={} isa={}",
+        crate::arith::simd::supported(),
+        crate::arith::simd::active_isa()
+    );
     let dir = artifacts_dir();
     println!("artifacts dir: {}", dir.display());
     for name in GLUE_TASKS {

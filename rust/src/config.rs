@@ -3,6 +3,14 @@
 
 use std::collections::HashMap;
 
+/// Environment variable selecting the process-default GEMM kernel
+/// (`scalar|wide|simd|fastmath` — see
+/// [`crate::systolic::scheduler::GemmKernel`]).  Unrecognized values are a
+/// hard error: the CLI validates this variable at startup, and library
+/// users hit the same typed message from
+/// [`crate::systolic::scheduler::GemmKernel::from_env`].
+pub const ENV_KERNEL: &str = "AMFMA_KERNEL";
+
 /// Parsed command line: positional args + `--key value` / `--flag` options.
 /// Options may repeat (`--shard A --shard B`); [`Args::get`] returns the
 /// last occurrence, [`Args::get_all`] every one in order.

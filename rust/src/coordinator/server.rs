@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::autotune::PrecisionPolicy;
 use crate::model::{Encoder, Weights};
-use crate::systolic::{EngineMode, MatrixEngine};
+use crate::systolic::{EngineMode, GemmKernel, MatrixEngine};
 
 use super::metrics::Metrics;
 
@@ -126,6 +126,11 @@ pub struct ServerConfig {
     /// mode.  Per-mode served-token counters make the split observable in
     /// [`super::metrics::MetricsSnapshot::mode_tokens`].
     pub policies: HashMap<String, Arc<PrecisionPolicy>>,
+    /// GEMM execution tier of this server's engine.  `Scalar`/`Wide`/
+    /// `Simd` are bit-identical; [`GemmKernel::FastMath`] serves with
+    /// native-f32 statistical fidelity and is only admissible for traffic
+    /// routed through the cheap lane (see the README's serving guidance).
+    pub kernel: GemmKernel,
 }
 
 impl Default for ServerConfig {
@@ -138,6 +143,7 @@ impl Default for ServerConfig {
             workers: 2,
             length_bucket: 8,
             policies: HashMap::new(),
+            kernel: GemmKernel::default_from_env(),
         }
     }
 }
@@ -271,7 +277,7 @@ impl InferenceServer {
         // process-global worker pool its tile scheduler dispatches to, so
         // per-batch parallelism comes from persistent pool workers rather
         // than per-call thread spawns.
-        let engine = MatrixEngine::new(cfg.mode);
+        let engine = MatrixEngine::new(cfg.mode).with_kernel(cfg.kernel);
         let brx = Arc::new(std::sync::Mutex::new(brx));
         for _w in 0..cfg.workers {
             let brx = brx.clone();

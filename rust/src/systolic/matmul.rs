@@ -83,10 +83,11 @@ pub struct MatrixEngine {
     /// runs tiles inline on the calling thread; anything larger dispatches
     /// tiles to the shared worker pool.
     pub threads: usize,
-    /// The bf16 inner kernel (does not affect results — the wide and
-    /// scalar kernels are bit-identical by contract; see
-    /// [`crate::systolic::scheduler::GemmKernel`]).  Defaults to the
-    /// process-wide `AMFMA_KERNEL` selection.
+    /// The bf16 inner kernel.  The scalar, wide and SIMD kernels are
+    /// bit-identical by contract, so for them this does not affect
+    /// results; [`GemmKernel::FastMath`] trades bit-exactness for native
+    /// f32 speed (see [`crate::systolic::scheduler::GemmKernel`]).
+    /// Defaults to the process-wide `AMFMA_KERNEL` selection.
     pub kernel: GemmKernel,
 }
 
@@ -106,8 +107,9 @@ impl MatrixEngine {
     }
 
     /// A copy of this engine running a different bf16 inner kernel —
-    /// runtime selection between the scalar seed path and the wide
-    /// lane-parallel path (results are bit-identical either way).
+    /// runtime selection among the scalar seed path, the wide
+    /// lane-parallel path and the SIMD path (bit-identical), or the
+    /// fast-math tier (statistical fidelity only).
     pub fn with_kernel(&self, kernel: GemmKernel) -> MatrixEngine {
         MatrixEngine { kernel, ..self.clone() }
     }
@@ -455,8 +457,9 @@ mod tests {
     #[test]
     fn kernel_choice_does_not_change_results() {
         // Engine-level runtime kernel selection: the wide lane-parallel
-        // path and the scalar seed path are bit-identical, per-call and
-        // resident, for every mode family.
+        // path, the SIMD path and the scalar seed path are bit-identical,
+        // per-call and resident, for every mode family.  (FastMath is
+        // intentionally absent: it is not a bit-exact kernel.)
         let mut rng = Prng::new(27);
         let (m, k, n) = (12, 40, 21); // ragged lane groups included
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
@@ -465,17 +468,19 @@ mod tests {
         for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_2_2)] {
             let eng = MatrixEngine::new(EngineMode::Bf16(mode));
             let scalar = eng.with_kernel(GemmKernel::Scalar);
-            let wide = eng.with_kernel(GemmKernel::Wide);
-            assert_eq!(
-                scalar.matmul(&x, &w, m, k, n),
-                wide.matmul(&x, &w, m, k, n),
-                "mode {mode:?}"
-            );
-            assert_eq!(
-                scalar.matmul_resident(&x, &wt, m, k, n),
-                wide.matmul_resident(&x, &wt, m, k, n),
-                "resident, mode {mode:?}"
-            );
+            for kernel in [GemmKernel::Wide, GemmKernel::Simd] {
+                let other = eng.with_kernel(kernel);
+                assert_eq!(
+                    scalar.matmul(&x, &w, m, k, n),
+                    other.matmul(&x, &w, m, k, n),
+                    "mode {mode:?} kernel {kernel:?}"
+                );
+                assert_eq!(
+                    scalar.matmul_resident(&x, &wt, m, k, n),
+                    other.matmul_resident(&x, &wt, m, k, n),
+                    "resident, mode {mode:?} kernel {kernel:?}"
+                );
+            }
         }
     }
 

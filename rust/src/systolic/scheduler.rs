@@ -11,8 +11,8 @@
 //! Because every output element is an independent chain, the result is
 //! bit-identical for any tiling and any worker count.
 //!
-//! Two bf16 tile kernels implement the same contract, selected at runtime
-//! by [`GemmKernel`]:
+//! Four bf16 tile kernels implement the engine contract, selected at
+//! runtime by [`GemmKernel`]:
 //!
 //! * [`GemmKernel::Scalar`] — the seed path: four output columns
 //!   register-blocked per K-sweep, each an independent scalar
@@ -22,17 +22,28 @@
 //!   K-step in struct-of-arrays form with branch-free per-lane
 //!   align/add/normalize, weight columns repacked lane-interleaved once
 //!   per column group.
+//! * [`GemmKernel::Simd`] — the same 8-lane step executed with native
+//!   x86-64 vector intrinsics ([`crate::arith::simd`]; SSE2 baseline,
+//!   AVX2 when the CPU has it).
+//! * [`GemmKernel::FastMath`] — native-f32 hardware multiply-add that
+//!   *models* the (k, λ) truncation ([`crate::arith::fastmath`]).
 //!
-//! Both are **bit-identical** by the hard contract tested in
-//! `rust/tests/property_wide.rs` and asserted on full GEMMs before every
-//! timed section of `benches/bench_hotpath.rs`; the per-element operation
-//! order within each chain is untouched either way.  The process default
-//! is `Wide`, overridable with `AMFMA_KERNEL=scalar|wide`.
+//! Scalar, Wide and Simd are **bit-identical** by the hard contract tested
+//! in `rust/tests/property_wide.rs` / `rust/tests/ragged_gemm.rs` and
+//! asserted on full GEMMs before every timed section of
+//! `benches/bench_hotpath.rs`.  FastMath is deliberately *not* bit-exact:
+//! its contract is distributional (`rust/tests/fastmath_distribution.rs`)
+//! and it must only be selected for traffic that tolerates that (the
+//! router's cheap lane).  The process default is `Wide`, overridable with
+//! `AMFMA_KERNEL=scalar|wide|simd|fastmath`; unrecognized values are a
+//! hard error (never a silent fallback), and `simd` on a target without a
+//! vector datapath downgrades to `wide` with a logged warning.
 
 use std::sync::OnceLock;
 
 use crate::arith::wide::{self, WideAcc, WideKernel, LANES};
-use crate::arith::{fma, ExtFloat, NormMode};
+use crate::arith::{fma, ExtFloat, FastMathKernel, NormMode, SimdKernel};
+use crate::error::{Error, Result};
 use crate::runtime::pool::WorkerPool;
 
 /// Default output-tile height (rows of X per task).
@@ -72,41 +83,111 @@ pub fn tiles(m: usize, n: usize, tile_m: usize, tile_n: usize) -> Vec<Tile> {
     out
 }
 
-/// Which bf16 inner kernel a scheduler runs.  Both satisfy the same
-/// bit-exact column-chain contract; the choice only affects speed.
+/// Which bf16 inner kernel a scheduler runs.  Scalar, Wide and Simd
+/// satisfy the same bit-exact column-chain contract, so for them the
+/// choice only affects speed; FastMath trades bit-exactness for native
+/// f32 throughput (distributional contract — see
+/// [`crate::arith::fastmath`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GemmKernel {
     /// Seed path: 4-column register-blocked scalar `fma` chains.
     Scalar,
     /// Lane-parallel SoA kernel ([`crate::arith::wide`]).
     Wide,
+    /// Native x86-64 vectorization of the wide step
+    /// ([`crate::arith::simd`]); bit-identical to `Scalar`/`Wide`.
+    Simd,
+    /// Native-f32 fast-math tier ([`crate::arith::fastmath`]); **not**
+    /// bit-exact — statistical fidelity only.
+    FastMath,
 }
 
 impl GemmKernel {
+    /// Every selectable kernel, in documentation order.
+    pub const ALL: [GemmKernel; 4] =
+        [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd, GemmKernel::FastMath];
+
+    /// The values [`GemmKernel::parse`] accepts, for error messages/docs.
+    pub const VALID_VALUES: &'static str = "scalar, wide, simd, fastmath";
+
     pub fn label(self) -> &'static str {
         match self {
             GemmKernel::Scalar => "scalar",
             GemmKernel::Wide => "wide",
+            GemmKernel::Simd => "simd",
+            GemmKernel::FastMath => "fastmath",
         }
     }
 
-    pub fn parse(s: &str) -> Option<GemmKernel> {
+    /// Parse a kernel name.  Unrecognized values are a typed hard error
+    /// listing the valid values — a typo like `AMFMA_KERNEL=avx2` must
+    /// never silently select the default kernel.
+    pub fn parse(s: &str) -> Result<GemmKernel> {
         match s {
-            "scalar" => Some(GemmKernel::Scalar),
-            "wide" => Some(GemmKernel::Wide),
-            _ => None,
+            "scalar" => Ok(GemmKernel::Scalar),
+            "wide" => Ok(GemmKernel::Wide),
+            "simd" => Ok(GemmKernel::Simd),
+            "fastmath" => Ok(GemmKernel::FastMath),
+            other => Err(Error::msg(format!(
+                "unrecognized kernel '{other}' (valid values: {})",
+                GemmKernel::VALID_VALUES
+            ))),
         }
     }
 
-    /// Process-wide default kernel: `AMFMA_KERNEL=scalar|wide` if set (read
-    /// once), otherwise [`GemmKernel::Wide`].
+    /// Read `AMFMA_KERNEL`: `Ok(None)` when unset, `Ok(Some(_))` on a
+    /// valid value, and a hard error on anything else.  The CLI calls
+    /// this at startup so typos fail before any work runs.
+    pub fn from_env() -> Result<Option<GemmKernel>> {
+        match std::env::var(crate::config::ENV_KERNEL) {
+            Ok(v) => GemmKernel::parse(&v)
+                .map(Some)
+                .map_err(|e| e.wrap(format!("invalid {}", crate::config::ENV_KERNEL))),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Downgrade a requested kernel that this build/CPU cannot run.  The
+    /// only such case today is `Simd` on a target without a vector
+    /// datapath, which falls back to `Wide` (bit-identical).  Returns the
+    /// kernel to use plus a warning to log — the downgrade is never
+    /// silent.  `simd_supported` is a parameter so the fallback is unit
+    /// testable on hosts where SIMD *is* available.
+    pub fn resolve_supported(self, simd_supported: bool) -> (GemmKernel, Option<String>) {
+        if self == GemmKernel::Simd && !simd_supported {
+            (
+                GemmKernel::Wide,
+                Some(
+                    "kernel 'simd' requested but this target has no SIMD datapath; \
+                     falling back to 'wide' (bit-identical)"
+                        .to_string(),
+                ),
+            )
+        } else {
+            (self, None)
+        }
+    }
+
+    /// Process-wide default kernel: `AMFMA_KERNEL` if set (read once),
+    /// otherwise [`GemmKernel::Wide`].  Unrecognized values abort rather
+    /// than silently selecting a kernel the operator did not ask for;
+    /// an unsupported `simd` request logs its downgrade to stderr.
     pub fn default_from_env() -> GemmKernel {
         static DEFAULT: OnceLock<GemmKernel> = OnceLock::new();
         *DEFAULT.get_or_init(|| {
-            std::env::var("AMFMA_KERNEL")
-                .ok()
-                .and_then(|v| GemmKernel::parse(&v))
-                .unwrap_or(GemmKernel::Wide)
+            let requested = match GemmKernel::from_env() {
+                Ok(Some(k)) => k,
+                Ok(None) => GemmKernel::Wide,
+                // Library context — no Result to thread an error through,
+                // and computing with an unintended kernel is worse than
+                // dying.  The CLI validates first and exits cleanly.
+                Err(e) => panic!("{e:#}"),
+            };
+            let (kernel, warning) = requested.resolve_supported(crate::arith::simd::supported());
+            if let Some(w) = warning {
+                eprintln!("amfma: {w}");
+            }
+            kernel
         })
     }
 }
@@ -261,15 +342,21 @@ fn bf16_tile_kernel(
     match kernel {
         GemmKernel::Scalar => bf16_tile_kernel_scalar(x, wt, k, n, t, mode, out),
         GemmKernel::Wide => bf16_tile_kernel_wide(x, wt, k, n, t, mode, out),
+        GemmKernel::Simd => bf16_tile_kernel_simd(x, wt, k, n, t, mode, out),
+        GemmKernel::FastMath => bf16_tile_kernel_fastmath(x, wt, k, n, t, mode, out),
     }
 }
 
-/// Wide-kernel tile: columns are processed [`LANES`] at a time through the
-/// struct-of-arrays batched PE datapath.  The column group's weights are
-/// repacked lane-interleaved once and reused across every row of the tile;
-/// remainder columns (< LANES) are delegated to the scalar kernel on the
-/// leftover sub-tile (bit-identical by the kernel contract).
-fn bf16_tile_kernel_wide(
+/// Shared tile loop of the lane-structured kernels: columns are processed
+/// [`LANES`] at a time through `step` (the wide or SIMD 8-lane
+/// align/add/normalize), the column group's weights repacked
+/// lane-interleaved once and reused across every row of the tile.
+/// Remainder columns (< LANES) are delegated to the scalar kernel on the
+/// leftover sub-tile (bit-identical by the kernel contract; the explicit
+/// ragged-N differential sweep lives in `rust/tests/ragged_gemm.rs`).
+#[allow(clippy::too_many_arguments)]
+fn bf16_tile_kernel_lanes(
+    step: impl Fn(&mut WideAcc, u16, &[u16; LANES]),
     x: &[u16],
     wt: &[u16],
     k: usize,
@@ -278,7 +365,6 @@ fn bf16_tile_kernel_wide(
     mode: NormMode,
     out: *mut u16,
 ) {
-    let kern = WideKernel::new(mode);
     let mut j = t.c0;
     while j + LANES <= t.c1 {
         let cols: [&[u16]; LANES] = std::array::from_fn(|l| &wt[(j + l) * k..(j + l + 1) * k]);
@@ -288,7 +374,7 @@ fn bf16_tile_kernel_wide(
             let mut acc = WideAcc::new();
             for (&xi, bch) in xrow.iter().zip(packed.chunks_exact(LANES)) {
                 let b: &[u16; LANES] = bch.try_into().expect("chunk is LANES wide");
-                kern.step(&mut acc, xi, b);
+                step(&mut acc, xi, b);
             }
             let ys = acc.round_to_bf16();
             for (l, &y) in ys.iter().enumerate() {
@@ -303,6 +389,66 @@ fn bf16_tile_kernel_wide(
     if j < t.c1 {
         let rest = Tile { r0: t.r0, r1: t.r1, c0: j, c1: t.c1 };
         bf16_tile_kernel_scalar(x, wt, k, n, rest, mode, out);
+    }
+}
+
+/// Wide-kernel tile: the portable struct-of-arrays batched PE datapath.
+fn bf16_tile_kernel_wide(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    let kern = WideKernel::new(mode);
+    bf16_tile_kernel_lanes(|acc, a, b| kern.step(acc, a, b), x, wt, k, n, t, mode, out);
+}
+
+/// SIMD tile: the same 8-lane step on native vector instructions.  On
+/// targets without a SIMD datapath this degrades to the wide kernel —
+/// callers that care about the downgrade go through
+/// [`GemmKernel::resolve_supported`], which logs it.
+fn bf16_tile_kernel_simd(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    match SimdKernel::new(mode) {
+        Some(kern) => {
+            bf16_tile_kernel_lanes(|acc, a, b| kern.step(acc, a, b), x, wt, k, n, t, mode, out)
+        }
+        None => bf16_tile_kernel_wide(x, wt, k, n, t, mode, out),
+    }
+}
+
+/// Fast-math tile: native-f32 multiply-add chains with per-step (k, λ)
+/// truncation, rounded to bf16 once at the south edge.  NOT bit-exact
+/// with the other kernels — see [`crate::arith::fastmath`].
+fn bf16_tile_kernel_fastmath(
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    let kern = FastMathKernel::new(mode);
+    for r in t.r0..t.r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        for j in t.c0..t.c1 {
+            let wcol = &wt[j * k..(j + 1) * k];
+            // SAFETY: (r, j) lies inside this task's disjoint tile.
+            unsafe {
+                *out.add(r * n + j) = kern.column_dot(xrow, wcol);
+            }
+        }
     }
 }
 
@@ -406,7 +552,7 @@ mod tests {
     #[test]
     fn bf16_matches_column_dot_all_modes_shapes_and_kernels() {
         let mut rng = Prng::new(51);
-        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
             let sched = TileScheduler { tile_m: 4, tile_n: 3, inline_only: false, kernel };
             for (m, k, n) in [(1usize, 1usize, 1usize), (5, 33, 7), (13, 16, 13), (3, 64, 9)] {
                 let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
@@ -435,10 +581,10 @@ mod tests {
     }
 
     #[test]
-    fn wide_and_scalar_kernels_bit_identical_on_full_gemms() {
-        // The hard contract behind the runtime kernel selection: both
-        // kernels produce the same bits on whole GEMMs, for every mode,
-        // with lane groups both full and ragged (n % LANES != 0).
+    fn bit_exact_kernels_identical_on_full_gemms() {
+        // The hard contract behind the runtime kernel selection: scalar,
+        // wide and SIMD produce the same bits on whole GEMMs, for every
+        // mode, with lane groups both full and ragged (n % LANES != 0).
         let mut rng = Prng::new(56);
         for (m, k, n) in [(7usize, 40usize, 16usize), (9, 33, 11), (4, 96, 29), (16, 24, 8)] {
             let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
@@ -452,21 +598,74 @@ mod tests {
             ] {
                 let ys = TileScheduler { kernel: GemmKernel::Scalar, ..Default::default() }
                     .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-                let yw = TileScheduler { kernel: GemmKernel::Wide, ..Default::default() }
-                    .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
-                assert_eq!(ys, yw, "({m},{k},{n}) mode {mode:?}");
+                for kernel in [GemmKernel::Wide, GemmKernel::Simd] {
+                    let y = TileScheduler { kernel, ..Default::default() }
+                        .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+                    assert_eq!(ys, y, "({m},{k},{n}) mode {mode:?} kernel {kernel:?}");
+                }
             }
         }
     }
 
     #[test]
-    fn kernel_labels_round_trip_and_env_default_is_stable() {
-        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
-            assert_eq!(GemmKernel::parse(kernel.label()), Some(kernel));
+    fn fastmath_kernel_is_close_but_not_claimed_bit_exact() {
+        // The fast-math tier's scheduler-level sanity check: outputs stay
+        // within the documented mean-relative-error tolerance of the
+        // exact emulator.  Bit-equality is deliberately NOT asserted —
+        // the full distributional contract (including the proof that
+        // bit-equality does not hold) lives in
+        // rust/tests/fastmath_distribution.rs.
+        let mut rng = Prng::new(57);
+        let (m, k, n) = (9, 48, 13);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        for mode in [NormMode::Accurate, NormMode::Approx(ApproxNorm::AN_1_2)] {
+            let exact = TileScheduler { kernel: GemmKernel::Wide, ..Default::default() }
+                .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            let fast = TileScheduler { kernel: GemmKernel::FastMath, ..Default::default() }
+                .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            let st = crate::arith::fastmath::compare_bf16(&fast, &exact);
+            let tol = crate::arith::fastmath::mean_rel_tolerance(mode);
+            assert!(st.mean_rel < tol, "mode {mode:?}: mean rel {} ≥ {tol}", st.mean_rel);
         }
-        assert_eq!(GemmKernel::parse("simd"), None);
+    }
+
+    #[test]
+    fn kernel_labels_round_trip_and_env_default_is_stable() {
+        for kernel in GemmKernel::ALL {
+            assert_eq!(GemmKernel::parse(kernel.label()).unwrap(), kernel);
+            assert!(GemmKernel::VALID_VALUES.contains(kernel.label()));
+        }
         // Read twice: the OnceLock must hand back the same choice.
         assert_eq!(GemmKernel::default_from_env(), GemmKernel::default_from_env());
+    }
+
+    #[test]
+    fn unrecognized_kernel_is_a_hard_typed_error() {
+        // The old behavior silently fell back to the default kernel; a
+        // typo must instead fail with a message naming the valid values.
+        for bad in ["avx2", "Simd", "SCALAR", "", "wide,simd"] {
+            let e = GemmKernel::parse(bad).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains("unrecognized kernel"), "{bad}: {msg}");
+            assert!(msg.contains(GemmKernel::VALID_VALUES), "{bad}: {msg}");
+        }
+    }
+
+    #[test]
+    fn unsupported_simd_request_downgrades_loudly_not_silently() {
+        // Requested-but-unsupported must return both the fallback kernel
+        // and a warning for the caller to log.
+        let (k, warn) = GemmKernel::Simd.resolve_supported(false);
+        assert_eq!(k, GemmKernel::Wide);
+        let warn = warn.expect("downgrade must produce a warning");
+        assert!(warn.contains("simd") && warn.contains("wide"), "{warn}");
+        // Supported SIMD and every other kernel resolve silently.
+        assert_eq!(GemmKernel::Simd.resolve_supported(true), (GemmKernel::Simd, None));
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::FastMath] {
+            assert_eq!(kernel.resolve_supported(false), (kernel, None));
+        }
     }
 
     #[test]
@@ -477,7 +676,7 @@ mod tests {
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
         let wt = transpose_to_bf16(&w, k, n);
         let mode = NormMode::Approx(ApproxNorm::AN_1_2);
-        for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
             let par = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false, kernel }
                 .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
             let inl = TileScheduler { inline_only: true, kernel, ..Default::default() }
@@ -496,7 +695,7 @@ mod tests {
         let mode = NormMode::Accurate;
         let mut last: Option<Vec<u16>> = None;
         for (tm, tn) in [(1, 1), (3, 5), (7, 4), (64, 64)] {
-            for kernel in [GemmKernel::Scalar, GemmKernel::Wide] {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
                 let sched = TileScheduler { tile_m: tm, tile_n: tn, inline_only: false, kernel };
                 let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
                 if let Some(prev) = &last {

@@ -1,18 +1,21 @@
 //! Differential property harness: the lane-parallel batched PE kernel
-//! (`arith::wide`) against the scalar `arith::fma` chain, lane by lane and
-//! step by step.
+//! (`arith::wide`) AND the native SIMD datapath (`arith::simd`) against
+//! the scalar `arith::fma` chain, lane by lane and step by step.
 //!
-//! The wide kernel's *only* correctness claim is bit-identity with the
-//! scalar datapath, so every test here drives both sides with the same
-//! operands and requires equal `ExtFloat` accumulator state after every
-//! K-step and equal bf16 bits after the south-edge rounding.  Covered, per
-//! the engine-mode families of Table I (`fp32` is skipped — FP32 engines
-//! bypass the PE datapath entirely): `bf16` (accurate normalization),
-//! `bf16an-1-1`, `bf16an-1-2` and `bf16an-2-2`, plus the full (k, λ)
-//! Pareto grid of the design-space sweep for single steps.
+//! The wide and SIMD kernels' *only* correctness claim is bit-identity
+//! with the scalar datapath, so every test here drives all sides with the
+//! same operands and requires equal `ExtFloat` accumulator state after
+//! every K-step and equal bf16 bits after the south-edge rounding.  On
+//! x86-64 hosts every chain runs through the active SIMD ISA (AVX2 or the
+//! SSE2 baseline) as well; elsewhere `SimdKernel::new` returns `None` and
+//! the sweep is wide-only.  Covered, per the engine-mode families of
+//! Table I (`fp32` is skipped — FP32 engines bypass the PE datapath
+//! entirely): `bf16` (accurate normalization), `bf16an-1-1`, `bf16an-1-2`
+//! and `bf16an-2-2`, plus the full (k, λ) Pareto grid of the design-space
+//! sweep for single steps.
 
 use amfma::arith::wide::{WideAcc, WideKernel, LANES};
-use amfma::arith::{column_dot, fma, ApproxNorm, ExtFloat, Kind, NormMode};
+use amfma::arith::{column_dot, fma, ApproxNorm, ExtFloat, Kind, NormMode, SimdKernel};
 use amfma::prng::Prng;
 
 const MODES: [NormMode; 4] = [
@@ -22,29 +25,43 @@ const MODES: [NormMode; 4] = [
     NormMode::Approx(ApproxNorm::AN_2_2),
 ];
 
-/// Drive one chain through both datapaths, asserting lane equality after
-/// every step and rounded equality at the end.
+/// Drive one chain through every batched datapath (wide always, SIMD
+/// wherever the host supports it), asserting lane equality with the scalar
+/// oracle after every step and rounded equality at the end.
 fn check_chain(x: &[u16], cols: &[Vec<u16>; LANES], mode: NormMode) {
-    let kern = WideKernel::new(mode);
+    let wide = WideKernel::new(mode);
+    check_chain_stepper(x, cols, mode, "wide", |acc, a, b| wide.step(acc, a, b));
+    if let Some(simd) = SimdKernel::new(mode) {
+        check_chain_stepper(x, cols, mode, simd.isa(), |acc, a, b| simd.step(acc, a, b));
+    }
+}
+
+fn check_chain_stepper(
+    x: &[u16],
+    cols: &[Vec<u16>; LANES],
+    mode: NormMode,
+    kernel: &str,
+    step: impl Fn(&mut WideAcc, u16, &[u16; LANES]),
+) {
     let mut acc = WideAcc::new();
     let mut scalar = [ExtFloat::ZERO; LANES];
     for (i, &xi) in x.iter().enumerate() {
         let b: [u16; LANES] = std::array::from_fn(|l| cols[l][i]);
-        kern.step(&mut acc, xi, &b);
+        step(&mut acc, xi, &b);
         for (l, s) in scalar.iter_mut().enumerate() {
             *s = fma(xi, b[l], *s, mode);
             assert_eq!(
                 acc.lane(l),
                 *s,
-                "step {i} lane {l} mode {mode:?} a={xi:04x} b={:04x}",
+                "[{kernel}] step {i} lane {l} mode {mode:?} a={xi:04x} b={:04x}",
                 b[l]
             );
         }
     }
     let rounded = acc.round_to_bf16();
     for (l, s) in scalar.iter().enumerate() {
-        assert_eq!(rounded[l], s.round_to_bf16(), "rounded lane {l} mode {mode:?}");
-        assert_eq!(rounded[l], column_dot(x, &cols[l], mode), "column_dot lane {l}");
+        assert_eq!(rounded[l], s.round_to_bf16(), "[{kernel}] rounded lane {l} mode {mode:?}");
+        assert_eq!(rounded[l], column_dot(x, &cols[l], mode), "[{kernel}] column_dot lane {l}");
     }
 }
 
@@ -250,18 +267,32 @@ fn exhaustive_small_exponent_single_step_across_pareto_grid() {
     }
     for mode in modes {
         let kern = WideKernel::new(mode);
+        let simd = SimdKernel::new(mode);
         for &a in &abs {
             for &b in &abs {
                 for group in cs.chunks_exact(LANES) {
                     let lanes: &[ExtFloat; LANES] = group.try_into().unwrap();
                     let mut acc = WideAcc::from_lanes(lanes);
                     kern.step(&mut acc, a, &[b; LANES]);
+                    let acc_simd = simd.as_ref().map(|s| {
+                        let mut v = WideAcc::from_lanes(lanes);
+                        s.step(&mut v, a, &[b; LANES]);
+                        v
+                    });
                     for (l, &c) in group.iter().enumerate() {
+                        let want = fma(a, b, c, mode);
                         assert_eq!(
                             acc.lane(l),
-                            fma(a, b, c, mode),
-                            "a={a:04x} b={b:04x} c={c:?} mode={mode:?}"
+                            want,
+                            "[wide] a={a:04x} b={b:04x} c={c:?} mode={mode:?}"
                         );
+                        if let Some(v) = acc_simd.as_ref() {
+                            assert_eq!(
+                                v.lane(l),
+                                want,
+                                "[simd] a={a:04x} b={b:04x} c={c:?} mode={mode:?}"
+                            );
+                        }
                     }
                 }
             }

@@ -1,0 +1,105 @@
+//! Ragged-remainder audit: the batched kernels process output columns in
+//! groups of `LANES`; any N that is not a multiple of the lane width
+//! leaves a remainder sub-tile that takes the scalar fallback path.  This
+//! sweep drives every kernel tier through N ∈ 1..=17 output columns —
+//! straddling 0, 1 and 2 full lane groups plus every possible remainder —
+//! for every norm mode, and checks each output element against its
+//! per-column reference:
+//!
+//! * scalar / wide / simd: bit-identical to the scalar `column_dot` chain
+//!   (the hard contract);
+//! * fastmath: bit-identical to `FastMathKernel::column_dot`, its own
+//!   definitional reference (the tier is *not* bit-exact vs the emulated
+//!   PE — see `tests/fastmath_distribution.rs` for that contract).
+
+use amfma::arith::wide::LANES;
+use amfma::arith::{column_dot, f32_to_bf16, ApproxNorm, FastMathKernel, NormMode};
+use amfma::prng::Prng;
+use amfma::systolic::matmul::transpose_to_bf16;
+use amfma::systolic::{GemmKernel, TileScheduler};
+
+const MODES: [NormMode; 4] = [
+    NormMode::Accurate,
+    NormMode::Approx(ApproxNorm::AN_1_1),
+    NormMode::Approx(ApproxNorm::AN_1_2),
+    NormMode::Approx(ApproxNorm::AN_2_2),
+];
+
+#[test]
+fn every_ragged_column_count_matches_the_column_reference() {
+    // 1..=17 covers: all-remainder (N < LANES), exactly one lane group
+    // (N = 8), group + every remainder width, and two full groups + 1.
+    const _: () = assert!(17 > 2 * LANES, "sweep must straddle two full lane groups");
+    let (m, k) = (3usize, 40usize);
+    let mut rng = Prng::new(90);
+    for n in 1..=17usize {
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        for mode in MODES {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
+                let sched = TileScheduler::with_kernel(kernel);
+                let y = sched.gemm_bf16(amfma::runtime::pool::global(), &x, &wt, m, k, n, mode);
+                check_vs(&y, m, k, n, &x, &w, |a, b| column_dot(a, b, mode), kernel, mode);
+            }
+            let fast = TileScheduler::with_kernel(GemmKernel::FastMath);
+            let y = fast.gemm_bf16(amfma::runtime::pool::global(), &x, &wt, m, k, n, mode);
+            let kern = FastMathKernel::new(mode);
+            check_vs(
+                &y,
+                m,
+                k,
+                n,
+                &x,
+                &w,
+                |a, b| kern.column_dot(a, b),
+                GemmKernel::FastMath,
+                mode,
+            );
+        }
+    }
+}
+
+/// Non-multiple-of-tile M values too: the ragged edge exists on both axes.
+#[test]
+fn ragged_rows_and_columns_together() {
+    let mut rng = Prng::new(91);
+    for (m, k, n) in [(1usize, 7usize, 9usize), (7, 19, 11), (5, 1, 15)] {
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        for mode in MODES {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
+                let sched = TileScheduler::with_kernel(kernel);
+                let y = sched.gemm_bf16(amfma::runtime::pool::global(), &x, &wt, m, k, n, mode);
+                check_vs(&y, m, k, n, &x, &w, |a, b| column_dot(a, b, mode), kernel, mode);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_vs(
+    y: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[u16],
+    w: &[f32],
+    reference: impl Fn(&[u16], &[u16]) -> u16,
+    kernel: GemmKernel,
+    mode: NormMode,
+) {
+    assert_eq!(y.len(), m * n);
+    for r in 0..m {
+        let a: Vec<u16> = (0..k).map(|i| x[r * k + i]).collect();
+        for j in 0..n {
+            let b: Vec<u16> = (0..k).map(|i| f32_to_bf16(w[i * n + j])).collect();
+            assert_eq!(
+                y[r * n + j],
+                reference(&a, &b),
+                "({m},{k},{n}) r={r} j={j} kernel={kernel:?} mode={mode:?}"
+            );
+        }
+    }
+}
