@@ -1,0 +1,245 @@
+"""Schema guard for the observability snapshot JSON (``amfma-stats-v1``).
+
+``rust/src/obs/mod.rs`` hand-writes the JSON that ``amfma stat`` emits (no
+serde is vendored), so this is the independent parser that keeps the format
+honest.  It runs three ways:
+
+* under pytest in the Python CI job (validator self-tests always run; the
+  file-based test skips when no stats JSON is present);
+* under pytest with ``AMFMA_STATS_JSON`` pointing at a scraped file, in
+  which case that file MUST exist and validate;
+* standalone, with no pytest dependency, as CI's soak job does after
+  scraping a live front::
+
+      python python/tests/test_stats_schema.py rust/stats-front.json
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+# Stage order mirrors rust/src/obs/mod.rs `Stage::ALL`.
+STAGES = ("enqueue_wait", "batch_form", "gemm", "reply_flush")
+HIST_BUCKETS = 32
+SHIFT_BINS = 17
+
+_STAGE_FIELDS = (
+    ("count", int),
+    ("sum_us", int),
+    ("max_us", int),
+    ("mean_us", (int, float)),
+    ("p50_us", (int, float)),
+    ("p95_us", (int, float)),
+    ("p99_us", (int, float)),
+    ("buckets", list),
+)
+
+_FIDELITY_FIELDS = (
+    ("site", str),
+    ("mode", str),
+    ("tiles", int),
+    ("sampled_steps", int),
+    ("saturated", int),
+    ("truncated", int),
+    ("frozen", int),
+    ("fm_samples", int),
+    ("fm_mean_rel", (int, float)),
+    ("shift_hist", list),
+)
+
+
+def validate_stats(doc):
+    """Raise AssertionError when ``doc`` is not a valid amfma-stats-v1 snapshot."""
+    assert isinstance(doc, dict), "snapshot must be a JSON object"
+    assert doc.get("schema") == "amfma-stats-v1", f"unknown schema {doc.get('schema')!r}"
+    stages = doc.get("stages")
+    assert isinstance(stages, dict), "stages must be an object"
+    assert set(stages) == set(STAGES), f"stage keys must be exactly {STAGES}, got {sorted(stages)}"
+    for name in STAGES:
+        h = stages[name]
+        assert isinstance(h, dict), f"stage {name!r} must be an object"
+        for key, typ in _STAGE_FIELDS:
+            assert key in h, f"stage {name!r} missing {key!r}"
+            assert isinstance(h[key], typ), f"stage {name!r} field {key!r} has wrong type"
+        assert len(h["buckets"]) == HIST_BUCKETS, (
+            f"stage {name!r} must carry {HIST_BUCKETS} log2 buckets"
+        )
+        assert all(isinstance(b, int) and b >= 0 for b in h["buckets"]), (
+            f"stage {name!r} buckets must be non-negative integers"
+        )
+        # count and buckets are separate atomics: a snapshot taken while a
+        # request is mid-record may skew by a few in-flight samples, but a
+        # large drift means the histogram is corrupt.
+        assert abs(h["count"] - sum(h["buckets"])) <= 16, (
+            f"stage {name!r}: count {h['count']} far from bucketed total {sum(h['buckets'])}"
+        )
+        assert h["p50_us"] <= h["p95_us"] <= h["p99_us"], (
+            f"stage {name!r} quantiles out of order"
+        )
+        if h["count"] == 0:
+            assert h["sum_us"] == 0 and h["max_us"] == 0, f"empty stage {name!r} must be zeroed"
+    fidelity = doc.get("fidelity")
+    assert isinstance(fidelity, list), "fidelity must be a list"
+    for f in fidelity:
+        assert isinstance(f, dict), "fidelity entries must be objects"
+        for key, typ in _FIDELITY_FIELDS:
+            assert key in f, f"fidelity entry missing {key!r}"
+            assert isinstance(f[key], typ), f"fidelity field {key!r} has wrong type"
+        assert f["site"], "fidelity site must be non-empty"
+        assert len(f["shift_hist"]) == SHIFT_BINS, (
+            f"fidelity entry must carry {SHIFT_BINS} shift bins"
+        )
+        assert all(isinstance(b, int) and b >= 0 for b in f["shift_hist"]), (
+            "shift_hist bins must be non-negative integers"
+        )
+        assert f["fm_mean_rel"] >= 0, "fm_mean_rel is a magnitude"
+
+
+def _stage(count=3, us=(100, 200, 400)):
+    buckets = [0] * HIST_BUCKETS
+    for v in us[:count]:
+        buckets[max(0, v.bit_length() - 1)] += 1
+    return {
+        "count": count,
+        "sum_us": sum(us[:count]),
+        "max_us": max(us[:count]) if count else 0,
+        "mean_us": (sum(us[:count]) / count) if count else 0.0,
+        "p50_us": 190.0,
+        "p95_us": 390.0,
+        "p99_us": 400.0,
+        "buckets": buckets,
+    }
+
+
+SAMPLE = {
+    "schema": "amfma-stats-v1",
+    "stages": {name: _stage() for name in STAGES},
+    "fidelity": [
+        {
+            "site": "layer0.attn.q",
+            "mode": "bf16an-1-2",
+            "tiles": 4096,
+            "sampled_steps": 2048,
+            "saturated": 3,
+            "truncated": 17,
+            "frozen": 1,
+            "fm_samples": 64,
+            "fm_mean_rel": 0.000912,
+            "shift_hist": [0] * SHIFT_BINS,
+        }
+    ],
+}
+
+
+def _must_fail(doc):
+    try:
+        validate_stats(doc)
+    except AssertionError:
+        return
+    raise RuntimeError("validator accepted an invalid document")
+
+
+def test_validator_accepts_sample():
+    # Round-trip through a JSON string, as a real scrape would be read.
+    validate_stats(json.loads(json.dumps(SAMPLE)))
+
+
+def test_validator_accepts_empty_snapshot():
+    empty = {
+        "schema": "amfma-stats-v1",
+        "stages": {name: _stage(count=0, us=()) for name in STAGES},
+        "fidelity": [],
+    }
+    for h in empty["stages"].values():
+        h.update(sum_us=0, max_us=0, mean_us=0.0, p50_us=0.0, p95_us=0.0, p99_us=0.0)
+        h["buckets"] = [0] * HIST_BUCKETS
+    validate_stats(json.loads(json.dumps(empty)))
+
+
+def test_validator_rejects_broken_documents():
+    for key in ("schema", "stages", "fidelity"):
+        bad = dict(SAMPLE)
+        bad.pop(key)
+        _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["schema"] = "amfma-stats-v0"
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["stages"].pop("gemm")  # a stage vanished
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["stages"]["extra"] = bad["stages"]["gemm"]  # an unknown stage appeared
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["stages"]["gemm"]["buckets"] = [0] * (HIST_BUCKETS - 1)  # truncated histogram
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["stages"]["gemm"]["count"] += 1000  # count drifted far off the buckets
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["stages"]["gemm"]["p95_us"] = bad["stages"]["gemm"]["p50_us"] - 1  # out of order
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["fidelity"][0].pop("shift_hist")
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["fidelity"][0]["shift_hist"] = [0] * (SHIFT_BINS + 1)
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["fidelity"][0]["fm_mean_rel"] = -0.5
+    _must_fail(bad)
+
+    _must_fail([])  # not an object
+
+
+def _stats_json_paths():
+    """(paths, required): explicit env wiring makes the file mandatory."""
+    env = os.environ.get("AMFMA_STATS_JSON")
+    if env:
+        return [Path(env)], True
+    candidates = [REPO / "rust" / "stats-front.json", REPO / "rust" / "stats.json"]
+    return [p for p in candidates if p.exists()], False
+
+
+def _validate_file(path):
+    doc = json.loads(path.read_text())
+    validate_stats(doc)
+    return doc
+
+
+def test_scraped_stats_json_parses():
+    import pytest
+
+    paths, required = _stats_json_paths()
+    if required:
+        assert paths[0].exists(), f"AMFMA_STATS_JSON points at missing file {paths[0]}"
+    if not paths:
+        pytest.skip("no stats JSON present (scrape one with `amfma stat --addr ...`)")
+    for p in paths:
+        doc = _validate_file(p)
+        assert doc["schema"] == "amfma-stats-v1", p
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else os.environ.get("AMFMA_STATS_JSON", "")
+    if not target:
+        sys.exit("usage: test_stats_schema.py <stats.json>  (or set AMFMA_STATS_JSON)")
+    doc = _validate_file(Path(target))
+    gemm = doc["stages"]["gemm"]
+    print(
+        f"ok: {target} is valid amfma-stats-v1 "
+        f"(gemm count={gemm['count']} p99_us={gemm['p99_us']}, "
+        f"{len(doc['fidelity'])} fidelity sites)"
+    )

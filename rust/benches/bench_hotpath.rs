@@ -97,6 +97,9 @@ fn main() {
     print!("{}", section("serving pipeline (batched encoder, tiny model)"));
     serving_bench(&mut report);
 
+    print!("{}", section("observability overhead: obs-on vs obs-off (256x256x256, wide kernel)"));
+    obs_overhead_bench(&mut report);
+
     match report.write() {
         Ok(p) => println!("\nbench trajectory: wrote {}", p.display()),
         Err(e) => eprintln!("\nbench trajectory: write FAILED: {e}"),
@@ -378,6 +381,87 @@ fn tiled_vs_seed_bench(report: &mut BenchReport) {
         eng.kernel.label()
     );
     report.push_comparison("pooled_resident_vs_seed_percall", speedup);
+}
+
+/// §Perf guard for the observability layer: the identical 256³ wide-kernel
+/// GEMM with fidelity sampling armed (cell attached, obs enabled) against
+/// the obs-off baseline.  The telemetry contract is "free when off, cheap
+/// when on": sampling must never change output bits (asserted first) and
+/// the enabled median must stay within 3% of the disabled one.  The
+/// `obs overhead gate:` line is what CI's perf smoke greps for.
+fn obs_overhead_bench(report: &mut BenchReport) {
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mut rng = Prng::new(43);
+    let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let wt = transpose_to_bf16(&w, k, n);
+    let mode = NormMode::Approx(ApproxNorm::AN_1_2);
+    let pool = amfma::runtime::pool::global();
+    let fmas = (m * k * n) as f64;
+
+    let plain = TileScheduler::with_kernel(GemmKernel::Wide);
+    let cell = amfma::obs::fidelity_cell("bench/gemm256", &mode.label());
+    let sampled = TileScheduler::with_kernel(GemmKernel::Wide).with_fidelity(cell);
+
+    // Hard contract first: the sampling path may count, never perturb.
+    let was_on = amfma::obs::enabled();
+    amfma::obs::set_enabled(true);
+    let y_on = sampled.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    amfma::obs::set_enabled(false);
+    let y_off = plain.gemm_bf16(pool, &x, &wt, m, k, n, mode);
+    assert_eq!(
+        y_on, y_off,
+        "HARD CONTRACT VIOLATED: fidelity sampling changed output bits on {m}x{k}x{n}"
+    );
+    println!("bit-exact: obs-on == obs-off on {m}x{k}x{n} {}", mode.label());
+
+    let mut time_pair = || {
+        amfma::obs::set_enabled(false);
+        let off = bench("gemm256/obs-off", 1, 5, Duration::from_millis(600), || {
+            std::hint::black_box(plain.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+        })
+        .with_ops(fmas, "FMA/s");
+        amfma::obs::set_enabled(true);
+        let on = bench(
+            "gemm256/obs-on (fidelity sampling armed)",
+            1,
+            5,
+            Duration::from_millis(600),
+            || {
+                std::hint::black_box(sampled.gemm_bf16(pool, &x, &wt, m, k, n, mode));
+            },
+        )
+        .with_ops(fmas, "FMA/s");
+        amfma::obs::set_enabled(false);
+        (off, on)
+    };
+
+    let (r_off, r_on) = time_pair();
+    println!("{}", r_off.render());
+    report.push(&r_off);
+    println!("{}", r_on.render());
+    report.push(&r_on);
+
+    // The claim under gate is the overhead *floor*, not the scheduler-noise
+    // ceiling: a failing first reading gets up to two re-measures, keeping
+    // the best (lowest) on/off ratio, before the hard assert.
+    let mut ratio = r_on.median.as_secs_f64() / r_off.median.as_secs_f64();
+    for _ in 0..2 {
+        if ratio < 1.03 {
+            break;
+        }
+        let (off2, on2) = time_pair();
+        ratio = ratio.min(on2.median.as_secs_f64() / off2.median.as_secs_f64());
+    }
+    amfma::obs::set_enabled(was_on);
+    report.push_comparison("obs_on_vs_off_gemm256", ratio);
+    assert!(
+        ratio < 1.03,
+        "OBS OVERHEAD GATE FAILED: obs-on median is {:.2}% slower than obs-off \
+         on {m}x{k}x{n} (budget 3%)",
+        (ratio - 1.0) * 100.0
+    );
+    println!("obs overhead gate: PASS on/off median ratio {ratio:.4} < 1.03 ({m}x{k}x{n} wide)");
 }
 
 fn serving_bench(report: &mut BenchReport) {

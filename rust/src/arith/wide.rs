@@ -41,6 +41,7 @@
 
 use super::ext::{ExtFloat, Kind};
 use super::fma::{fma, NormMode, NORM_POS};
+use crate::obs::StepTally;
 
 /// Output-column chains advanced per K-step (the register-blocking width).
 pub const LANES: usize = 8;
@@ -203,14 +204,55 @@ impl WideKernel {
     /// [`crate::arith::fma`] chain per lane.
     #[inline]
     pub fn step(&self, acc: &mut WideAcc, a: u16, b: &[u16; LANES]) {
+        let mut tally = StepTally::default();
+        self.step_impl::<false>(acc, a, b, &mut tally);
+    }
+
+    /// Counting twin of [`WideKernel::step`]: the identical datapath (the
+    /// two share one monomorphized body, and a unit test pins them
+    /// bit-exact) plus per-lane fidelity classification into `tally` —
+    /// normalization-shift histogram, shift saturation, λ-truncation and
+    /// freeze events.  The tally is plain integers; the caller folds it
+    /// into an [`crate::obs::FidelityCell`] once per tile.
+    #[inline]
+    pub fn step_counting(
+        &self,
+        acc: &mut WideAcc,
+        a: u16,
+        b: &[u16; LANES],
+        tally: &mut StepTally,
+    ) {
+        self.step_impl::<true>(acc, a, b, tally);
+    }
+
+    #[inline(always)]
+    fn step_impl<const COUNT: bool>(
+        &self,
+        acc: &mut WideAcc,
+        a: u16,
+        b: &[u16; LANES],
+        tally: &mut StepTally,
+    ) {
         // Inf/NaN operands (exponent field saturated) take the scalar path.
         let mut b_special = false;
         for &v in b {
             b_special |= (v & 0x7F80) == 0x7F80;
         }
         if (a & 0x7F80) == 0x7F80 || b_special {
-            self.step_scalar(acc, a, b);
+            if COUNT {
+                tally.steps += 1;
+                let spec_before = acc.spec;
+                self.step_scalar(acc, a, b);
+                for j in 0..LANES {
+                    tally.frozen += (spec_before[j] == 0 && acc.spec[j] != 0) as u64;
+                }
+            } else {
+                self.step_scalar(acc, a, b);
+            }
             return;
+        }
+        if COUNT {
+            tally.steps += 1;
         }
 
         // ---- stage 1, shared across lanes: decode the activation --------
@@ -282,6 +324,21 @@ impl WideKernel {
             acc.exp[j] = sel_i32(live as i32, exp_new, acc.exp[j]);
             acc.sign[j] = sel_u32(live, s_new, acc.sign[j]);
             acc.spec[j] = sel_u32(live, spec_new, acc.spec[j]);
+
+            if COUNT {
+                // Fidelity classification from the quantities the datapath
+                // already computed — dead code (zero cost) when !COUNT.
+                if live != 0 && raw_nz != 0 {
+                    tally.shift[s_left as usize] += 1;
+                    tally.saturated += (rsh > 0) as u64;
+                    // The λ-truncated shift estimate fell short of the
+                    // accurate normalization: residual unnormalization
+                    // stays on the accumulator (impossible in Accurate
+                    // mode, where s_left == s_acc whenever rsh == 0).
+                    tally.truncated += (rsh == 0 && s_left < s_acc) as u64;
+                }
+                tally.frozen += (live != 0 && spec_new != 0) as u64;
+            }
         }
     }
 
@@ -379,6 +436,38 @@ mod tests {
             let y = dot_lanes(&x, &packed, mode);
             for l in 0..LANES {
                 assert_eq!(y[l], column_dot(&x, &cols[l], mode), "lane {l} mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn counting_step_is_bit_exact_with_step() {
+        // The telemetry twin must never perturb results: identical lane
+        // state after every step, across all modes, including the cold
+        // special-operand fallback.
+        let mut rng = Prng::new(605);
+        for mode in MODES {
+            let kern = WideKernel::new(mode);
+            let mut plain = WideAcc::new();
+            let mut counted = WideAcc::new();
+            let mut tally = StepTally::default();
+            const STEPS: usize = 512;
+            for i in 0..STEPS {
+                let a = rng.bf16_activation();
+                let mut b: [u16; LANES] = std::array::from_fn(|_| rng.bf16_activation());
+                if i % 97 == 0 {
+                    b[i % LANES] = 0x7F80; // exercise the scalar fallback too
+                }
+                kern.step(&mut plain, a, &b);
+                kern.step_counting(&mut counted, a, &b, &mut tally);
+                assert_eq!(counted, plain, "step {i} mode {mode:?}");
+            }
+            assert_eq!(tally.steps, STEPS as u64);
+            let shifted: u64 = tally.shift.iter().sum();
+            assert!(shifted <= tally.steps * LANES as u64, "at most one shift bin per lane-step");
+            assert!(shifted > 0, "random chains normalize");
+            if matches!(mode, NormMode::Accurate) {
+                assert_eq!(tally.truncated, 0, "accurate normalization never truncates");
             }
         }
     }

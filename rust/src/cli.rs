@@ -10,6 +10,8 @@
 //! amfma serve --listen ADDR [--port-file F]              TCP frontend (AMFN)
 //! amfma front --shard ADDR [--shard ADDR ...]            shard-tier front
 //! amfma loadgen --addr HOST:PORT [--quick] [--json]      TCP load generator
+//! amfma stat --addr HOST:PORT [--prom]                   observability scrape
+//! amfma top --addr HOST:PORT [--interval-ms N]           live stats view
 //! amfma cycles --m M --k K --n N [--grid G]              array timing model
 //! amfma info                                             artifact status
 //! ```
@@ -45,6 +47,8 @@ pub fn run(args: Args) -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("front") => cmd_front(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("stat") => cmd_stat(&args),
+        Some("top") => cmd_top(&args),
         Some("cycles") => cmd_cycles(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -85,6 +89,12 @@ USAGE:
               [--connect-timeout-ms 5000] [--bench-target serving]
               [--quick] [--json] [--shutdown]                   closed-loop TCP
               load generator; --json writes BENCH_<target>.json + trajectory
+  amfma stat  --addr HOST:PORT [--prom]                         one observability
+              scrape of a live serve/front: stage-latency histograms +
+              numeric-fidelity counters, fleet-merged, as JSON
+              (schema amfma-stats-v1) or Prometheus text (--prom)
+  amfma top   --addr HOST:PORT [--interval-ms 1000] [--count N]  live terminal
+              view of the same scrape (count 0 = until interrupted)
   amfma cycles --m M --k K --n N [--grid 16]
   amfma info";
 
@@ -774,6 +784,105 @@ fn load_request_pool(per_task: usize) -> Result<Vec<(String, Vec<u16>)>> {
     Ok(pool)
 }
 
+/// Scrape one observability snapshot from a live `amfma serve --listen`
+/// or `amfma front` process (see [`crate::obs`]).
+fn scrape_stats(addr: &str, timeout_ms: usize) -> Result<crate::obs::ObsSnapshot> {
+    use crate::coordinator::net::Client;
+    let timeout = std::time::Duration::from_millis(timeout_ms as u64);
+    let mut c = Client::connect_timeout(addr, timeout)
+        .with_context(|| format!("connect {addr}"))?;
+    c.set_read_timeout(Some(timeout)).context("set read timeout")?;
+    c.stats().map_err(|e| crate::error::Error::msg(format!("stats scrape: {e}")))
+}
+
+/// `amfma stat`: one observability scrape, printed as JSON (schema
+/// `amfma-stats-v1`) or Prometheus exposition text (`--prom`).  The
+/// answering process merges its own collector with every healthy shard
+/// behind it, so pointing this at a front covers the whole fleet.
+fn cmd_stat(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        bail!("stat needs --addr HOST:PORT (a live `amfma serve --listen` or `amfma front`)");
+    };
+    let snap = scrape_stats(addr, args.get_usize("connect-timeout-ms", 5000))?;
+    if args.has_flag("prom") {
+        print!("{}", snap.render_prometheus());
+    } else {
+        println!("{}", snap.render_json());
+    }
+    Ok(())
+}
+
+/// Render one `amfma top` tick: per-stage latency rows and per-(site,
+/// mode) fidelity rows, compact enough to re-print every interval.
+fn render_top(snap: &crate::obs::ObsSnapshot) -> String {
+    let mut s = String::with_capacity(2048);
+    s.push_str(&format!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
+        "stage", "count", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"
+    ));
+    for stage in crate::obs::Stage::ALL {
+        let h = &snap.stages[stage.index()];
+        s.push_str(&format!(
+            "{:<14} {:>10} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10}\n",
+            stage.label(),
+            h.count,
+            h.mean(),
+            h.quantile(0.50),
+            h.quantile(0.95),
+            h.quantile(0.99),
+            h.max
+        ));
+    }
+    if !snap.fidelity.is_empty() {
+        s.push_str(&format!(
+            "\n{:<22} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12}\n",
+            "site/mode", "tiles", "steps", "saturated", "truncated", "frozen", "fm_rel_err"
+        ));
+        for f in &snap.fidelity {
+            s.push_str(&format!(
+                "{:<22} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12.3e}\n",
+                format!("{}/{}", f.site, f.mode),
+                f.tiles,
+                f.sampled_steps,
+                f.saturated,
+                f.truncated,
+                f.frozen,
+                f.fm_mean_rel()
+            ));
+        }
+    }
+    s
+}
+
+/// `amfma top`: periodic scrape of the same snapshot `amfma stat` reads,
+/// rendered as a live terminal table.  `--count 0` (the default) runs
+/// until interrupted; CI uses a finite `--count`.
+fn cmd_top(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        bail!("top needs --addr HOST:PORT (a live `amfma serve --listen` or `amfma front`)");
+    };
+    let interval =
+        std::time::Duration::from_millis(args.get_usize("interval-ms", 1000).max(50) as u64);
+    let count = args.get_usize("count", 0);
+    let timeout_ms = args.get_usize("connect-timeout-ms", 5000);
+    let mut tick = 0usize;
+    loop {
+        let snap = scrape_stats(addr, timeout_ms)?;
+        // Cursor-home + clear-to-end keeps the table in place without
+        // erasing scrollback (plain escape codes, no TTY dependency).
+        print!("\x1b[H\x1b[J");
+        println!("amfma top — {addr} (tick {tick}, every {}ms)\n", interval.as_millis());
+        print!("{}", render_top(&snap));
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        tick += 1;
+        if count != 0 && tick >= count {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
 fn cmd_cycles(args: &Args) -> Result<()> {
     let m = args.get_usize("m", 128);
     let k = args.get_usize("k", 64);
@@ -805,6 +914,18 @@ fn cmd_info() -> Result<()> {
         "simd: supported={} isa={}",
         crate::arith::simd::supported(),
         crate::arith::simd::active_isa()
+    );
+    // Observability build configuration (greppable by CI).
+    println!(
+        "obs: stage histogram buckets={} (log2-us, top bucket >= 2^{} us)",
+        crate::obs::HIST_BUCKETS,
+        crate::obs::HIST_BUCKETS - 1
+    );
+    println!("obs: journal capacity={} events", crate::obs::JOURNAL_CAP);
+    println!(
+        "obs: fidelity sample rate=1/{} tiles, shift bins={}",
+        crate::obs::SAMPLE_EVERY,
+        crate::obs::SHIFT_BINS
     );
     let dir = artifacts_dir();
     println!("artifacts dir: {}", dir.display());

@@ -26,6 +26,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{ObsSnapshot, StageTimings};
+
 use super::metrics::Metrics;
 use super::net::frame::{self, Frame, FrameBuffer, LaneSelector, WireError};
 use super::net::Client;
@@ -48,6 +50,32 @@ pub trait Backend: Send + Sync {
         tokens: Vec<u16>,
         reply: ReplySink,
     ) -> Result<(), SubmitError>;
+
+    /// [`Backend::submit_sink`] carrying an observability trace id so one
+    /// request keeps one id across tiers (front journal and shard journal
+    /// agree).  The default drops the trace — backends that don't thread
+    /// tracing still serve correctly, the shard just mints a fresh id.
+    fn submit_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        let _ = trace;
+        self.submit_sink(task, tokens, reply)
+    }
+
+    /// This backend's observability snapshot (stage histograms + fidelity
+    /// counters), if it has one of its own to contribute: remote backends
+    /// scrape their shard over the wire; local handles return `None`
+    /// because every local replica shares the process-global collector the
+    /// router already reads once (returning it per-handle would
+    /// double-count).  Failures surface as `None` — a stats scrape must
+    /// never take the serving path down.
+    fn fetch_stats(&self) -> Option<ObsSnapshot> {
+        None
+    }
 
     /// This backend's counters — also the router's load signals
     /// ([`Metrics::inflight`] / [`Metrics::ewma_us`]).
@@ -76,6 +104,16 @@ impl Backend for ServerHandle {
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
         ServerHandle::submit_sink(self, task, tokens, reply)
+    }
+
+    fn submit_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        ServerHandle::submit_sink_traced(self, task, tokens, trace, reply)
     }
 
     fn metrics(&self) -> &Arc<Metrics> {
@@ -197,44 +235,15 @@ impl RemoteBackend {
         &self.shared.addr
     }
 
-    /// Stop everything: close connections, answer leftover in-flight
-    /// requests `Unavailable`, join the health and reader threads.  Runs
-    /// on drop; callable earlier for deterministic teardown.
-    pub fn shutdown(&self) {
-        let sh = &self.shared;
-        if sh.stop.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        for slot in &sh.slots {
-            if let Some(s) = slot.lock().unwrap().take() {
-                let _ = s.stream.shutdown(SockShutdown::Both);
-            }
-        }
-        let leftovers: Vec<Pending> = {
-            let mut pending = sh.pending.lock().unwrap();
-            pending.drain().map(|(_, p)| p).collect()
-        };
-        for p in leftovers {
-            deliver(sh, p.sink, Err(RequestError::Unavailable), None);
-        }
-        let mut threads = self.threads.lock().unwrap();
-        for t in threads.drain(..) {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for RemoteBackend {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-impl Backend for RemoteBackend {
-    fn submit_sink(
+    /// The shared submit path: encode one request frame (carrying the
+    /// caller's trace id, or 0 for "shard mints one") and write it
+    /// round-robin onto a pooled connection.  Both trait submit entry
+    /// points funnel here.
+    fn submit_traced(
         &self,
         task: &str,
         tokens: Vec<u16>,
+        trace: u64,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
         let sh = &self.shared;
@@ -254,6 +263,7 @@ impl Backend for RemoteBackend {
         // happened in the front's router when it picked this backend.
         let bytes = frame::encode(&Frame::Request {
             id,
+            trace,
             lane: LaneSelector::Any,
             task: task.to_string(),
             tokens,
@@ -298,6 +308,70 @@ impl Backend for RemoteBackend {
                 Err(SubmitError::Busy)
             }
         }
+    }
+
+    /// Stop everything: close connections, answer leftover in-flight
+    /// requests `Unavailable`, join the health and reader threads.  Runs
+    /// on drop; callable earlier for deterministic teardown.
+    pub fn shutdown(&self) {
+        let sh = &self.shared;
+        if sh.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for slot in &sh.slots {
+            if let Some(s) = slot.lock().unwrap().take() {
+                let _ = s.stream.shutdown(SockShutdown::Both);
+            }
+        }
+        let leftovers: Vec<Pending> = {
+            let mut pending = sh.pending.lock().unwrap();
+            pending.drain().map(|(_, p)| p).collect()
+        };
+        for p in leftovers {
+            deliver(sh, p.sink, Err(RequestError::Unavailable), None);
+        }
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn submit_sink(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        self.submit_traced(task, tokens, 0, reply)
+    }
+
+    fn submit_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        self.submit_traced(task, tokens, trace, reply)
+    }
+
+    /// Scrape the shard's observability snapshot over a fresh short-lived
+    /// connection (same client-closes discipline as [`probe`], so scrapes
+    /// never park TIME_WAIT on the shard's port).  Any failure — connect,
+    /// timeout, decode — yields `None`: stats are best-effort.
+    fn fetch_stats(&self) -> Option<ObsSnapshot> {
+        let sh = &self.shared;
+        let mut c = Client::connect_timeout(sh.addr.as_str(), sh.cfg.connect_timeout).ok()?;
+        c.set_read_timeout(Some(sh.cfg.connect_timeout.max(sh.cfg.poll))).ok()?;
+        c.stats().ok()
     }
 
     fn metrics(&self) -> &Arc<Metrics> {
@@ -495,12 +569,19 @@ fn reader_loop(sh: Arc<Shared>, stream: TcpStream, conn_id: u64) {
                 }
             };
             match frame {
-                Frame::ReplyOk { id, logits, .. } => {
+                Frame::ReplyOk { id, stages, logits, .. } => {
                     if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
                         // End-to-end latency as this tier saw it (the
-                        // frame's server_latency excludes the wire).
+                        // frame's server_latency excludes the wire); the
+                        // shard's stage breakdown rides through untouched
+                        // so the front's clients still see server time.
                         let latency = p.born.elapsed();
-                        deliver(&sh, p.sink, Ok(Reply { logits, latency }), Some(p.born));
+                        let reply = Reply {
+                            logits,
+                            latency,
+                            stages: StageTimings::from_array(stages),
+                        };
+                        deliver(&sh, p.sink, Ok(reply), Some(p.born));
                     }
                     // Unmatched id: a straggler past its deadline — the
                     // sweeper already answered it.
@@ -515,6 +596,8 @@ fn reader_loop(sh: Arc<Shared>, stream: TcpStream, conn_id: u64) {
                 Frame::Drain { .. } => {}
                 // Stray health echo on a pooled connection: ignore.
                 Frame::Health { .. } => {}
+                // Stray stats reply (scrapes use their own connection).
+                Frame::Stats { .. } => {}
                 Frame::Request { .. } | Frame::Shutdown { .. } => {
                     // Protocol violation from the server side.
                     fail_conn(&sh, conn_id);

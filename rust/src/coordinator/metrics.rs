@@ -391,6 +391,49 @@ mod tests {
     }
 
     #[test]
+    fn render_has_field_parity_with_snapshot() {
+        // Every snapshot field carries a distinct prime-derived value; the
+        // rendered text must contain each one.  Adding a snapshot field
+        // without teaching `render` about it fails here, not in a dashboard.
+        let s = MetricsSnapshot {
+            submitted: 101,
+            completed: 103,
+            rejected: 107,
+            errored: 109,
+            dropped_replies: 113,
+            timeouts: 127,
+            batches: 131,
+            mean_batch: 137.25,
+            padding_efficiency: 0.139,
+            mode_tokens: vec![("bf16an-1-2".to_string(), 149), ("fp32".to_string(), 151)],
+            p50_ms: 157.5,
+            p95_ms: 163.5,
+            p99_ms: 167.5,
+            max_ms: 173.5,
+        };
+        let r = s.render();
+        for needle in [
+            "submitted=101",
+            "completed=103",
+            "rejected=107",
+            "errored=109",
+            "(dropped_replies=113)",
+            "timeouts=127",
+            "131 batches",
+            "mean size 137.25",
+            "padding efficiency 13.9%",
+            "bf16an-1-2=149",
+            "fp32=151",
+            "p50=157.50ms",
+            "p95=163.50ms",
+            "p99=167.50ms",
+            "max=173.50ms",
+        ] {
+            assert!(r.contains(needle), "render lost field {needle:?}:\n{r}");
+        }
+    }
+
+    #[test]
     fn empty_snapshot_is_zero() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p99_ms, 0.0);

@@ -10,6 +10,8 @@ use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
+use crate::obs::ObsSnapshot;
+
 use super::frame::{self, Frame, FrameBuffer, FrameError, LaneSelector, WireError};
 
 /// One decoded reply, matched to its request by `id`.
@@ -18,6 +20,10 @@ pub struct NetReply {
     pub id: u64,
     /// Logits + server-side latency, or the typed rejection.
     pub outcome: Result<(Vec<f32>, Duration), WireError>,
+    /// Server-side per-stage breakdown (microseconds, in
+    /// [`crate::obs::Stage::ALL`] order: enqueue-wait, batch-form, GEMM,
+    /// reply-flush).  All-zero for error replies and shutdown acks.
+    pub stages: [u32; 4],
 }
 
 /// Client-side failures (transport or protocol — typed *server*
@@ -123,7 +129,13 @@ impl Client {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let f = Frame::Request { id, lane, task: task.to_string(), tokens: tokens.to_vec() };
+        let f = Frame::Request {
+            id,
+            trace: 0, // server mints a trace id at admission
+            lane,
+            task: task.to_string(),
+            tokens: tokens.to_vec(),
+        };
         self.stream.write_all(&frame::encode(&f))?;
         self.stream.flush()?;
         Ok(id)
@@ -164,14 +176,17 @@ impl Client {
         loop {
             if let Some(frame) = self.fb.next_frame()? {
                 return match frame {
-                    Frame::ReplyOk { id, server_latency, logits } => {
-                        Ok(NetReply { id, outcome: Ok((logits, server_latency)) })
+                    Frame::ReplyOk { id, server_latency, stages, logits } => {
+                        Ok(NetReply { id, outcome: Ok((logits, server_latency)), stages })
                     }
-                    Frame::ReplyErr { id, err } => Ok(NetReply { id, outcome: Err(err) }),
+                    Frame::ReplyErr { id, err } => {
+                        Ok(NetReply { id, outcome: Err(err), stages: [0; 4] })
+                    }
                     Frame::Request { .. }
                     | Frame::Shutdown { .. }
                     | Frame::Health { .. }
-                    | Frame::Drain { .. } => Err(NetError::UnexpectedFrame),
+                    | Frame::Drain { .. }
+                    | Frame::Stats { .. } => Err(NetError::UnexpectedFrame),
                 };
             }
             self.fill()?;
@@ -198,6 +213,29 @@ impl Client {
         }
     }
 
+    /// Observability scrape: request the server's merged stats snapshot
+    /// (stage-latency histograms + numeric-fidelity counters, aggregated
+    /// across the answering process and every healthy shard behind it)
+    /// and block for the reply.  Only valid when no requests are in
+    /// flight on this connection — the wire behind `amfma stat` / `top`.
+    pub fn stats(&mut self) -> Result<ObsSnapshot, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&frame::encode(&Frame::Stats { id, body: Vec::new() }))?;
+        self.stream.flush()?;
+        loop {
+            if let Some(frame) = self.fb.next_frame()? {
+                return match frame {
+                    Frame::Stats { id: rid, body } if rid == id => {
+                        ObsSnapshot::decode(&body).map_err(|_| NetError::UnexpectedFrame)
+                    }
+                    _ => Err(NetError::UnexpectedFrame),
+                };
+            }
+            self.fill()?;
+        }
+    }
+
     /// Connection-level drain barrier: ask the server to stop reading
     /// requests on this connection and flush every in-flight reply, then
     /// collect those replies until the drain echo arrives.  The echo is
@@ -214,11 +252,15 @@ impl Client {
         loop {
             if let Some(frame) = self.fb.next_frame()? {
                 match frame {
-                    Frame::ReplyOk { id, server_latency, logits } => {
-                        flushed.push(NetReply { id, outcome: Ok((logits, server_latency)) });
+                    Frame::ReplyOk { id, server_latency, stages, logits } => {
+                        flushed.push(NetReply {
+                            id,
+                            outcome: Ok((logits, server_latency)),
+                            stages,
+                        });
                     }
                     Frame::ReplyErr { id, err } => {
-                        flushed.push(NetReply { id, outcome: Err(err) });
+                        flushed.push(NetReply { id, outcome: Err(err), stages: [0; 4] });
                     }
                     Frame::Drain { id: rid } if rid == id => return Ok(flushed),
                     _ => return Err(NetError::UnexpectedFrame),

@@ -6,15 +6,17 @@
 //! | offset | size | field                                     |
 //! |--------|------|-------------------------------------------|
 //! | 0      | 4    | magic `b"AMFN"`                           |
-//! | 4      | 1    | version (2)                               |
-//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain) |
+//! | 4      | 1    | version (3)                               |
+//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain 6=stats) |
 //! | 6      | 2    | reserved (must be 0)                      |
 //! | 8      | 4    | body length in bytes                      |
 //!
-//! Request body: `id u64`, `lane u8` (0=any 1=cheap 2=accurate),
-//! `task_len u8` + task-name bytes (utf-8), `n_tokens u32`, then
-//! `n_tokens` × `u16` token ids.  Reply-ok body: `id u64`,
-//! `server_latency_us u64`, `n_logits u32`, then `n_logits` × `f32`.
+//! Request body: `id u64`, `trace u64` (0 = unset: the server mints one at
+//! admission), `lane u8` (0=any 1=cheap 2=accurate), `task_len u8` +
+//! task-name bytes (utf-8), `n_tokens u32`, then `n_tokens` × `u16` token
+//! ids.  Reply-ok body: `id u64`, `server_latency_us u64`, 4 × `u32` stage
+//! micros (enqueue-wait, batch-form, gemm, reply-flush — see
+//! [`crate::obs::StageTimings`]), `n_logits u32`, then `n_logits` × `f32`.
 //! Reply-err body: `id u64`, `code u8`, plus `len u32` + `max_seq u32`
 //! for `InvalidLength`.  Shutdown, health and drain bodies: `id u64`.
 //! Shutdown asks the whole process to drain and exit (acked with an empty
@@ -23,6 +25,10 @@
 //! the server to stop reading requests on *this connection*, flush every
 //! in-flight reply, and only then echo the drain frame back: the echo is
 //! an end-to-end barrier proving no reply was lost (version 2 additions).
+//! Stats body: `id u64` + opaque snapshot bytes — empty in a client's
+//! request, an encoded [`crate::obs::ObsSnapshot`] in the server's answer
+//! (aggregated across healthy shards when the answering process is a
+//! front); version 3 adds the trace/stage fields and this kind.
 //!
 //! The decoder is hardened like the `AMFP` policy parser: truncation,
 //! absurd declared lengths, bad magic/version/kind/lane/error codes and
@@ -38,9 +44,10 @@ use crate::coordinator::server::RequestError;
 
 /// Format tag opening every frame.
 pub const MAGIC: [u8; 4] = *b"AMFN";
-/// Current protocol version (2: adds the health and drain frame kinds
-/// and the `Timeout` wire error).
-pub const VERSION: u8 = 2;
+/// Current protocol version (3: adds the request trace id, per-stage
+/// reply timings and the stats frame kind; 2 added health/drain and the
+/// `Timeout` wire error).
+pub const VERSION: u8 = 3;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a frame body: anything larger is a corrupt or hostile
@@ -165,9 +172,12 @@ impl fmt::Display for WireError {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Client → server: classify `tokens` under `task`, route by `lane`.
-    Request { id: u64, lane: LaneSelector, task: String, tokens: Vec<u16> },
-    /// Server → client: the logits for request `id`.
-    ReplyOk { id: u64, server_latency: Duration, logits: Vec<f32> },
+    /// `trace` is the end-to-end trace id (0 = unset: the server mints
+    /// one at admission and the id stays process-local).
+    Request { id: u64, trace: u64, lane: LaneSelector, task: String, tokens: Vec<u16> },
+    /// Server → client: the logits for request `id`, with the server-side
+    /// stage split (`[enqueue_wait, batch_form, gemm, reply_flush]` µs).
+    ReplyOk { id: u64, server_latency: Duration, stages: [u32; 4], logits: Vec<f32> },
     /// Server → client: a typed rejection of request `id`.
     ReplyErr { id: u64, err: WireError },
     /// Client → server: drain the whole process and exit (acked with an
@@ -179,6 +189,11 @@ pub enum Frame {
     /// on this connection, flushes every in-flight reply, then echoes the
     /// drain frame back — proof that no reply was lost.
     Drain { id: u64 },
+    /// Observability snapshot exchange: a client sends it with an empty
+    /// `body`, the server answers with the same `id` and an encoded
+    /// [`crate::obs::ObsSnapshot`] (aggregated across healthy shards when
+    /// answered by a front).  The body stays opaque at the frame layer.
+    Stats { id: u64, body: Vec<u8> },
 }
 
 impl Frame {
@@ -190,6 +205,7 @@ impl Frame {
             Frame::Shutdown { .. } => 3,
             Frame::Health { .. } => 4,
             Frame::Drain { .. } => 5,
+            Frame::Stats { .. } => 6,
         }
     }
 }
@@ -242,8 +258,9 @@ impl fmt::Display for FrameError {
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut body = Vec::with_capacity(64);
     match frame {
-        Frame::Request { id, lane, task, tokens } => {
+        Frame::Request { id, trace, lane, task, tokens } => {
             body.extend_from_slice(&id.to_le_bytes());
+            body.extend_from_slice(&trace.to_le_bytes());
             body.push(lane.to_wire());
             // An oversized task name is rejected by `Client::send_request`;
             // if one reaches here anyway, cut at a char boundary so the
@@ -260,10 +277,13 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 body.extend_from_slice(&t.to_le_bytes());
             }
         }
-        Frame::ReplyOk { id, server_latency, logits } => {
+        Frame::ReplyOk { id, server_latency, stages, logits } => {
             body.extend_from_slice(&id.to_le_bytes());
             let us = server_latency.as_micros().min(u64::MAX as u128) as u64;
             body.extend_from_slice(&us.to_le_bytes());
+            for s in stages {
+                body.extend_from_slice(&s.to_le_bytes());
+            }
             body.extend_from_slice(&(logits.len() as u32).to_le_bytes());
             for l in logits {
                 body.extend_from_slice(&l.to_le_bytes());
@@ -279,6 +299,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         }
         Frame::Shutdown { id } | Frame::Health { id } | Frame::Drain { id } => {
             body.extend_from_slice(&id.to_le_bytes());
+        }
+        Frame::Stats { id, body: stats } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            body.extend_from_slice(stats);
         }
     }
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
@@ -302,7 +326,7 @@ fn decode_header(h: &[u8]) -> Result<(u8, usize), FrameError> {
         return Err(FrameError::BadVersion(h[4]));
     }
     let kind = h[5];
-    if kind > 5 {
+    if kind > 6 {
         return Err(FrameError::BadKind(kind));
     }
     let reserved = u16::from_le_bytes([h[6], h[7]]);
@@ -363,6 +387,7 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
     let frame = match kind {
         0 => {
             let id = c.u64()?;
+            let trace = c.u64()?;
             let lane = LaneSelector::from_wire(c.u8()?)?;
             let task_len = c.u8()? as usize;
             let task = std::str::from_utf8(c.take(task_len)?)
@@ -374,11 +399,15 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
             }
             let raw = c.take(n * 2)?;
             let tokens = raw.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
-            Frame::Request { id, lane, task, tokens }
+            Frame::Request { id, trace, lane, task, tokens }
         }
         1 => {
             let id = c.u64()?;
             let us = c.u64()?;
+            let mut stages = [0u32; 4];
+            for s in stages.iter_mut() {
+                *s = c.u32()?;
+            }
             let n = c.u32()? as usize;
             if n > MAX_LOGITS {
                 return Err(FrameError::Oversize { declared: n, max: MAX_LOGITS });
@@ -388,7 +417,7 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
                 .chunks_exact(4)
                 .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
-            Frame::ReplyOk { id, server_latency: Duration::from_micros(us), logits }
+            Frame::ReplyOk { id, server_latency: Duration::from_micros(us), stages, logits }
         }
         2 => {
             let id = c.u64()?;
@@ -406,6 +435,14 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
         3 => Frame::Shutdown { id: c.u64()? },
         4 => Frame::Health { id: c.u64()? },
         5 => Frame::Drain { id: c.u64()? },
+        6 => {
+            let id = c.u64()?;
+            // The snapshot bytes stay opaque here (bounded by MAX_BODY;
+            // `ObsSnapshot::decode` validates them at the obs layer).
+            let rest = c.buf.len() - c.pos;
+            let body = c.take(rest)?.to_vec();
+            Frame::Stats { id, body }
+        }
         other => return Err(FrameError::BadKind(other)),
     };
     c.done()?;
@@ -472,6 +509,7 @@ mod tests {
     fn sample_request() -> Frame {
         Frame::Request {
             id: 42,
+            trace: 777,
             lane: LaneSelector::Cheap,
             task: "sst2".into(),
             tokens: vec![1, 2, 3, 65535],
@@ -482,10 +520,17 @@ mod tests {
     fn round_trip_every_frame_kind() {
         let frames = vec![
             sample_request(),
-            Frame::Request { id: 0, lane: LaneSelector::Any, task: String::new(), tokens: vec![] },
+            Frame::Request {
+                id: 0,
+                trace: 0,
+                lane: LaneSelector::Any,
+                task: String::new(),
+                tokens: vec![],
+            },
             Frame::ReplyOk {
                 id: 7,
                 server_latency: Duration::from_micros(1234),
+                stages: [10, 20, 900, 4],
                 logits: vec![1.5, -2.25, 0.0],
             },
             Frame::ReplyErr { id: 8, err: WireError::UnknownTask },
@@ -497,6 +542,8 @@ mod tests {
             Frame::Shutdown { id: 13 },
             Frame::Health { id: 15 },
             Frame::Drain { id: 16 },
+            Frame::Stats { id: 17, body: vec![] },
+            Frame::Stats { id: 18, body: crate::obs::ObsSnapshot::empty().encode() },
         ];
         for f in frames {
             let bytes = encode(&f);
@@ -535,21 +582,25 @@ mod tests {
         let mut bad = good.clone();
         bad[0] = b'X';
         assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
-        // bad version — including the retired v1: a server must not
-        // half-parse frames from an older client.
+        // bad version — including the retired v1 and v2: a server must
+        // not half-parse frames from an older client (v3 moved the
+        // request field offsets, so a lenient parse would mis-read them).
         let mut bad = good.clone();
         bad[4] = 9;
         assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
         let mut bad = good.clone();
         bad[4] = 1;
         assert_eq!(decode(&bad), Err(FrameError::BadVersion(1)));
-        // bad kind — 6 is the first unassigned kind after health/drain
+        let mut bad = good.clone();
+        bad[4] = 2;
+        assert_eq!(decode(&bad), Err(FrameError::BadVersion(2)));
+        // bad kind — 7 is the first unassigned kind after stats
         let mut bad = good.clone();
         bad[5] = 250;
         assert_eq!(decode(&bad), Err(FrameError::BadKind(250)));
         let mut bad = good.clone();
-        bad[5] = 6;
-        assert_eq!(decode(&bad), Err(FrameError::BadKind(6)));
+        bad[5] = 7;
+        assert_eq!(decode(&bad), Err(FrameError::BadKind(7)));
         // reserved bytes must be zero
         let mut bad = good.clone();
         bad[6] = 1;
@@ -559,14 +610,20 @@ mod tests {
         bad[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
         // absurd declared token count inside a plausible body
-        let f = Frame::Request { id: 1, lane: LaneSelector::Any, task: "t".into(), tokens: vec![] };
+        let f = Frame::Request {
+            id: 1,
+            trace: 2,
+            lane: LaneSelector::Any,
+            task: "t".into(),
+            tokens: vec![],
+        };
         let mut bad = encode(&f);
-        let n_off = HEADER_LEN + 8 + 1 + 1 + 1; // id + lane + task_len + task
+        let n_off = HEADER_LEN + 8 + 8 + 1 + 1 + 1; // id + trace + lane + task_len + task
         bad[n_off..n_off + 4].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
         // bad lane selector
         let mut bad = good.clone();
-        bad[HEADER_LEN + 8] = 77;
+        bad[HEADER_LEN + 16] = 77; // after id + trace
         assert_eq!(decode(&bad), Err(FrameError::BadLane(77)));
         // truncation at every boundary
         for cut in 0..good.len() {

@@ -83,6 +83,11 @@ pub struct LoadgenOutcome {
     pub wall: Duration,
     /// Per-request end-to-end latency order statistics.
     pub latency: BenchResult,
+    /// Server-side stage breakdowns scraped off every completed reply's
+    /// metadata (microseconds, in [`crate::obs::Stage::ALL`] order) —
+    /// lets the client-side report say where server time went without a
+    /// separate stats scrape.  Empty when nothing completed.
+    pub stages: Vec<BenchResult>,
 }
 
 impl LoadgenOutcome {
@@ -102,6 +107,8 @@ struct ConnStats {
     rejected: u64,
     busy_retries: u64,
     latencies: Vec<Duration>,
+    /// One sample vector per serving stage (see [`crate::obs::Stage`]).
+    stage_us: [Vec<u32>; 4],
 }
 
 /// Drive `cfg.requests` requests sampled from `pool` through
@@ -130,12 +137,16 @@ pub fn run(pool: &[(String, Vec<u16>)], cfg: &LoadgenConfig) -> Result<LoadgenOu
     }
     let wall = t0.elapsed();
     let mut latencies = Vec::new();
+    let mut stage_us: [Vec<u32>; 4] = Default::default();
     let (mut completed, mut rejected, mut busy) = (0u64, 0u64, 0u64);
     for s in stats {
         completed += s.completed;
         rejected += s.rejected;
         busy += s.busy_retries;
         latencies.extend(s.latencies);
+        for (agg, conn) in stage_us.iter_mut().zip(s.stage_us) {
+            agg.extend(conn);
+        }
     }
     let latency = if latencies.is_empty() {
         // All requests rejected: an empty sample set has no percentiles.
@@ -143,7 +154,16 @@ pub fn run(pool: &[(String, Vec<u16>)], cfg: &LoadgenConfig) -> Result<LoadgenOu
     } else {
         summarize_samples("serving/e2e_latency", latencies)
     };
-    Ok(LoadgenOutcome { completed, rejected, busy_retries: busy, wall, latency })
+    let stages = crate::obs::Stage::ALL
+        .iter()
+        .zip(stage_us)
+        .filter(|(_, samples)| !samples.is_empty())
+        .map(|(stage, samples)| {
+            let ds = samples.into_iter().map(|us| Duration::from_micros(us as u64)).collect();
+            summarize_samples(&format!("serving/stage_{}", stage.label()), ds)
+        })
+        .collect();
+    Ok(LoadgenOutcome { completed, rejected, busy_retries: busy, wall, latency, stages })
 }
 
 fn run_connection(
@@ -158,8 +178,13 @@ fn run_connection(
         .set_read_timeout(Some(cfg.recv_timeout))
         .map_err(|e| format!("set read timeout: {e}"))?;
     let mut rng = Prng::new(cfg.seed.wrapping_mul(1000).wrapping_add(conn));
-    let mut stats =
-        ConnStats { completed: 0, rejected: 0, busy_retries: 0, latencies: Vec::new() };
+    let mut stats = ConnStats {
+        completed: 0,
+        rejected: 0,
+        busy_retries: 0,
+        latencies: Vec::new(),
+        stage_us: Default::default(),
+    };
     // Latency is measured from the *first* send of a request: a Busy
     // retry keeps its original timestamp, so backoff and requeue time
     // count toward the reported end-to-end latency (that is exactly the
@@ -196,6 +221,9 @@ fn run_connection(
         match reply.outcome {
             Ok(_logits) => {
                 stats.latencies.push(born.elapsed());
+                for (samples, &us) in stats.stage_us.iter_mut().zip(reply.stages.iter()) {
+                    samples.push(us);
+                }
                 stats.completed += 1;
                 answered += 1;
                 backoff = Duration::from_micros(200);
@@ -245,6 +273,15 @@ pub fn report(outcome: &LoadgenOutcome, cfg: &LoadgenConfig) -> BenchReport {
     let mut rep = BenchReport::new(&cfg.bench_target);
     let r = outcome.latency.clone().with_ops(1.0, "seq/s");
     rep.push(&r);
+    // Server-side stage breakdown (from reply metadata): median + p99 per
+    // stage, so the trajectory separates queueing regressions from GEMM
+    // regressions without a server-side scrape.
+    for stage in &outcome.stages {
+        rep.push(stage);
+        let short = stage.name.trim_start_matches("serving/stage_").to_string();
+        rep.push_metric(&format!("stage/{short}_median_us"), stage.median.as_micros() as f64, "us");
+        rep.push_metric(&format!("stage/{short}_p99_us"), stage.p99.as_micros() as f64, "us");
+    }
     rep.push_metric("throughput", outcome.throughput(), "seq/s");
     rep.push_metric("completed", outcome.completed as f64, "requests");
     rep.push_metric("rejected", outcome.rejected as f64, "requests");

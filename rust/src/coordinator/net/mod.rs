@@ -25,7 +25,10 @@
 //! the drain remotely with a [`frame::Frame::Shutdown`] frame (used by
 //! `amfma loadgen --shutdown` and the CI soak job); a single connection
 //! can be drained with a [`frame::Frame::Drain`] frame, whose echo-after-
-//! flush is the rolling-restart barrier the front tier leans on.
+//! flush is the rolling-restart barrier the front tier leans on.  A
+//! [`frame::Frame::Stats`] frame is answered inline (like `Health`) with
+//! the fleet-merged observability snapshot ([`super::Router::obs_stats`])
+//! — the wire behind `amfma stat` / `amfma top`.
 //!
 //! One deliberate TCP detail: on a drain the server **waits for the
 //! client to close first** (bounded by [`NetServerConfig::drain_linger`]).
@@ -351,12 +354,12 @@ fn reader_loop(
                 Err(e) => return Err(format!("frame: {e}")),
             };
             match frame {
-                Frame::Request { id, lane, task, tokens } => {
+                Frame::Request { id, trace, lane, task, tokens } => {
                     let sink = ReplySink::Tagged { id, tx: reply_tx.clone() };
                     let verdict = if drain.load(Ordering::SeqCst) {
                         Err(WireError::ShuttingDown)
                     } else {
-                        route_request(router, &task, tokens, lane, sink)
+                        route_request(router, &task, tokens, trace, lane, sink)
                     };
                     if let Err(err) = verdict {
                         send_frame(write_half, &Frame::ReplyErr { id, err })
@@ -368,9 +371,19 @@ fn reader_loop(
                     let ack = Frame::ReplyOk {
                         id,
                         server_latency: Duration::ZERO,
+                        stages: [0; 4],
                         logits: Vec::new(),
                     };
                     send_frame(write_half, &ack).map_err(|e| format!("write: {e}"))?;
+                }
+                // Observability scrape: answered inline like Health (stats
+                // must be readable even when the engine is saturated),
+                // aggregated across this process and every healthy remote
+                // shard.  Never touches the request counters.
+                Frame::Stats { id, .. } => {
+                    let body = router.obs_stats().encode();
+                    send_frame(write_half, &Frame::Stats { id, body })
+                        .map_err(|e| format!("write: {e}"))?;
                 }
                 // Liveness probe: echo inline, ahead of queued replies —
                 // health must answer even when the engine is saturated.
@@ -396,11 +409,12 @@ fn route_request(
     router: &Router,
     task: &str,
     tokens: Vec<u16>,
+    trace: u64,
     lane: LaneSelector,
     sink: ReplySink,
 ) -> Result<(), WireError> {
     use super::RouteError;
-    router.route_lane_sink(task, tokens, lane.to_lane(), sink).map_err(|e| match e {
+    router.route_lane_sink_traced(task, tokens, lane.to_lane(), trace, sink).map_err(|e| match e {
         RouteError::NoReplicaForMode => WireError::NoReplica,
         RouteError::AllBusy => WireError::Busy,
         RouteError::Closed => WireError::ShuttingDown,
@@ -417,7 +431,12 @@ fn route_request(
 fn writer_loop(reply_rx: Receiver<(u64, ReplyResult)>, write_half: Arc<Mutex<TcpStream>>) {
     for (id, result) in reply_rx {
         let frame = match result {
-            Ok(r) => Frame::ReplyOk { id, server_latency: r.latency, logits: r.logits },
+            Ok(r) => Frame::ReplyOk {
+                id,
+                server_latency: r.latency,
+                stages: r.stages.as_array(),
+                logits: r.logits,
+            },
             Err(e) => Frame::ReplyErr { id, err: WireError::from(e) },
         };
         if send_frame(&write_half, &frame).is_err() {

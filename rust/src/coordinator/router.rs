@@ -255,10 +255,25 @@ impl Router {
         lane: Option<Lane>,
         sink: ReplySink,
     ) -> Result<(), RouteError> {
+        self.route_lane_sink_traced(task, tokens, lane, 0, sink)
+    }
+
+    /// [`Router::route_lane_sink`] carrying an observability trace id
+    /// (`0` = unset; the serving shard mints one at admission).  The TCP
+    /// frame workers pass the wire frame's trace through here so a request
+    /// keeps one id from the front's journal to the shard's.
+    pub fn route_lane_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        lane: Option<Lane>,
+        trace: u64,
+        sink: ReplySink,
+    ) -> Result<(), RouteError> {
         self.route_where_with(
             tokens.len(),
             |r| lane.map(|l| r.lane == l).unwrap_or(true),
-            |r| r.backend.submit_sink(task, tokens.clone(), sink.clone()),
+            |r| r.backend.submit_sink_traced(task, tokens.clone(), trace, sink.clone()),
         )
     }
 
@@ -409,6 +424,31 @@ impl Router {
             }
         }
         out
+    }
+
+    /// Fleet-merged observability snapshot: this process's collector
+    /// (stage histograms + fidelity counters of every local replica, read
+    /// once — local handles share it) merged with the scraped snapshot of
+    /// each distinct healthy, non-draining remote backend.  Unreachable
+    /// shards contribute nothing rather than failing the scrape; the
+    /// answer therefore covers exactly the capacity currently serving.
+    pub fn obs_stats(&self) -> crate::obs::ObsSnapshot {
+        let mut merged = crate::obs::snapshot();
+        let mut seen: Vec<*const super::metrics::Metrics> = Vec::new();
+        for r in &self.replicas {
+            let ptr = Arc::as_ptr(r.backend.metrics());
+            if seen.contains(&ptr) {
+                continue;
+            }
+            seen.push(ptr);
+            if r.is_draining() || !r.backend.is_healthy() {
+                continue;
+            }
+            if let Some(remote) = r.backend.fetch_stats() {
+                merged.merge(&remote);
+            }
+        }
+        merged
     }
 }
 
@@ -800,6 +840,80 @@ mod tests {
         let err = router.route_lane_blocking("nope", vec![1], Some(Lane::Accurate));
         assert!(matches!(err, Err(RouteError::Rejected(RequestError::UnknownTask))));
         s1.shutdown();
+    }
+
+    /// A backend with a canned stats snapshot, standing in for a remote
+    /// shard scrape — health-gated like the real one.
+    struct StatsBackend {
+        inner: ServerHandle,
+        healthy: AtomicBool,
+        gemm_count: u64,
+    }
+
+    impl Backend for StatsBackend {
+        fn submit_sink(
+            &self,
+            task: &str,
+            tokens: Vec<u16>,
+            reply: ReplySink,
+        ) -> Result<(), SubmitError> {
+            self.inner.submit_sink(task, tokens, reply)
+        }
+        fn fetch_stats(&self) -> Option<crate::obs::ObsSnapshot> {
+            let mut s = crate::obs::ObsSnapshot::empty();
+            let g = crate::obs::Stage::Gemm.index();
+            s.stages[g].buckets[3] = self.gemm_count;
+            s.stages[g].count = self.gemm_count;
+            s.stages[g].sum = self.gemm_count * 5;
+            s.stages[g].max = 5;
+            Some(s)
+        }
+        fn metrics(&self) -> &std::sync::Arc<Metrics> {
+            &self.inner.metrics
+        }
+        fn is_healthy(&self) -> bool {
+            self.healthy.load(Ordering::SeqCst)
+        }
+        fn drain(&self) {}
+        fn describe(&self) -> String {
+            "canned-stats".to_string()
+        }
+    }
+
+    #[test]
+    fn obs_stats_merges_healthy_backends_and_skips_ejected_ones() {
+        let mode = EngineMode::Fp32;
+        let (h1, _rx1) = raw_handle(8);
+        let (h2, _rx2) = raw_handle(8);
+        let up = std::sync::Arc::new(StatsBackend {
+            inner: h1,
+            healthy: AtomicBool::new(true),
+            gemm_count: 7,
+        });
+        let down = std::sync::Arc::new(StatsBackend {
+            inner: h2,
+            healthy: AtomicBool::new(false),
+            gemm_count: 1000,
+        });
+        let router = Router::new(vec![
+            ReplicaSpec::new(mode).backend(up.clone()),
+            ReplicaSpec::new(mode).backend(down.clone()),
+        ]);
+        let base = crate::obs::snapshot().stages[crate::obs::Stage::Gemm.index()].count;
+        let merged = router.obs_stats();
+        let gemm = &merged.stages[crate::obs::Stage::Gemm.index()];
+        // The healthy backend's 7 samples are in; the ejected one's 1000
+        // are not.  `base` absorbs whatever other tests already recorded
+        // into the shared process-global collector.
+        assert!(
+            gemm.count >= base + 7 && gemm.count < base + 1000,
+            "merged gemm count {} (local base {base})",
+            gemm.count
+        );
+        // Re-admission pulls the second shard's stats in.
+        down.healthy.store(true, Ordering::SeqCst);
+        let merged = router.obs_stats();
+        assert!(merged.stages[crate::obs::Stage::Gemm.index()].count >= base + 1007);
     }
 
     #[test]

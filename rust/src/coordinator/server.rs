@@ -27,9 +27,17 @@ use std::time::{Duration, Instant};
 
 use crate::autotune::PrecisionPolicy;
 use crate::model::{Encoder, Weights};
+use crate::obs::{self, StageTimings};
 use crate::systolic::{EngineMode, GemmKernel, MatrixEngine};
 
 use super::metrics::Metrics;
+
+/// Saturating `Duration` → whole microseconds in `u32` (the width the
+/// stage-timing wire fields use; ~71 minutes saturates, far beyond any
+/// plausible stage latency).
+fn stage_us(d: Duration) -> u32 {
+    d.as_micros().min(u32::MAX as u128) as u32
+}
 
 /// Where a reply goes.  In-process clients get a dedicated one-shot
 /// channel; network connections multiplex every in-flight request of the
@@ -71,6 +79,11 @@ pub struct Request {
     pub tokens: Vec<u16>,
     pub reply: ReplySink,
     pub submitted_at: Instant,
+    /// Observability trace id (see [`crate::obs`]): minted at admission
+    /// for in-process submits, or inherited from the wire frame so a
+    /// front tier and its shards stamp the same id.  Never zero once a
+    /// request is accepted.
+    pub trace: u64,
 }
 
 /// Server reply: logits (or the regression score) for one sequence.
@@ -78,6 +91,11 @@ pub struct Request {
 pub struct Reply {
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// Per-stage latency breakdown of this request's trip through the
+    /// serving pipeline (see [`crate::obs::StageTimings`]); rides the
+    /// wire inside `ReplyOk` so remote clients and the load generator
+    /// see server-side stage timings without a second round trip.
+    pub stages: StageTimings,
 }
 
 /// Why a request was explicitly rejected by the serving stack (as opposed
@@ -199,11 +217,28 @@ impl ServerHandle {
         tokens: Vec<u16>,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
+        self.submit_sink_traced(task, tokens, 0, reply)
+    }
+
+    /// [`Self::submit_sink`] with an explicit observability trace id.
+    /// `trace == 0` means "unset" and a fresh id is minted at admission;
+    /// a nonzero id (a front tier forwarding the client's id, or a test
+    /// pinning one) is stamped through unchanged so the same id shows up
+    /// in every tier's journal.
+    pub fn submit_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        let trace = if trace == 0 { obs::next_trace_id() } else { trace };
         let req = Request {
             task: task.to_string(),
             tokens,
             reply,
             submitted_at: Instant::now(),
+            trace,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(req) {
@@ -258,7 +293,10 @@ impl InferenceServer {
     pub fn start(models: HashMap<String, Arc<Weights>>, cfg: ServerConfig) -> InferenceServer {
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers.max(1) * 2);
+        // Batches travel with the instant they were formed so the engine
+        // worker can split queueing time into enqueue-wait (admission →
+        // batch flush) and batch-form (flush → GEMM start) stages.
+        let (btx, brx) = sync_channel::<(Vec<Request>, Instant)>(cfg.workers.max(1) * 2);
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
@@ -290,11 +328,11 @@ impl InferenceServer {
                     let guard = brx.lock().unwrap();
                     guard.recv()
                 };
-                let Ok(batch) = batch else { break };
+                let Ok((batch, formed_at)) = batch else { break };
                 // A panicking batch (which drops its reply senders — the
                 // clients observe `Closed`) must not kill the worker.
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_batch(&models, &engine, &policies, batch, &metrics);
+                    run_batch(&models, &engine, &policies, batch, formed_at, &metrics);
                 }));
             }));
         }
@@ -330,7 +368,7 @@ fn bucket_of(len: usize, width: usize) -> usize {
 
 fn batcher_loop(
     rx: Receiver<Request>,
-    btx: SyncSender<Vec<Request>>,
+    btx: SyncSender<(Vec<Request>, Instant)>,
     metrics: Arc<Metrics>,
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
@@ -343,7 +381,7 @@ fn batcher_loop(
         for (_, batch) in pending.drain() {
             if !batch.is_empty() {
                 metrics.record_batch(batch.len());
-                if btx.send(batch).is_err() {
+                if btx.send((batch, Instant::now())).is_err() {
                     return;
                 }
             }
@@ -359,7 +397,7 @@ fn batcher_loop(
                 if bucket.len() >= cfg.max_batch {
                     let batch = pending.remove(&key).unwrap();
                     metrics.record_batch(batch.len());
-                    if btx.send(batch).is_err() {
+                    if btx.send((batch, Instant::now())).is_err() {
                         return;
                     }
                 }
@@ -400,7 +438,7 @@ fn batcher_loop(
         for k in expired {
             let batch = pending.remove(&k).unwrap();
             metrics.record_batch(batch.len());
-            if btx.send(batch).is_err() {
+            if btx.send((batch, Instant::now())).is_err() {
                 return;
             }
         }
@@ -412,6 +450,7 @@ fn run_batch(
     engine: &MatrixEngine,
     policies: &HashMap<String, Arc<PrecisionPolicy>>,
     batch: Vec<Request>,
+    formed_at: Instant,
     metrics: &Metrics,
 ) {
     // Deliver-then-count: a reply that cannot be delivered (the client
@@ -468,15 +507,33 @@ fn run_batch(
         ),
         None => (Encoder::new(weights, engine.clone()), engine.mode.label()),
     };
+    // Stage stamps: batch-form covers encoder construction + padding
+    // (flush → GEMM start), gemm the padded forward itself, reply-flush
+    // the per-request logits copy + sink send after the GEMM finished.
+    // Measuring is unconditional — a pair of `Instant` reads per batch is
+    // noise next to a forward pass — only the *aggregation* into the
+    // process-wide histograms is gated on `obs::enabled()`.
+    let gemm_start = Instant::now();
     let logits = enc.forward_padded(&tokens, &lens, seq);
+    let gemm_end = Instant::now();
+    let batch_form_us = stage_us(gemm_start.duration_since(formed_at));
+    let gemm_us = stage_us(gemm_end.duration_since(gemm_start));
     // Counted only after the forward succeeds: a panicking batch reaches
     // no client, and "live tokens served" must not include it.
     metrics.record_mode_tokens(&mode_label, useful as u64);
-    let now = Instant::now();
     for (i, req) in valid.into_iter().enumerate() {
+        let now = Instant::now();
         let latency = now.duration_since(req.submitted_at);
-        if req.reply.send(Ok(Reply { logits: logits.row(i).to_vec(), latency })) {
+        let stages = StageTimings {
+            enqueue_wait_us: stage_us(formed_at.duration_since(req.submitted_at)),
+            batch_form_us,
+            gemm_us,
+            reply_flush_us: stage_us(now.duration_since(gemm_end)),
+        };
+        let reply = Reply { logits: logits.row(i).to_vec(), latency, stages };
+        if req.reply.send(Ok(reply)) {
             metrics.record_latency(latency);
+            obs::record_timings(req.trace, &stages);
         } else {
             metrics.record_dropped_reply();
         }
@@ -736,6 +793,39 @@ mod tests {
         for rx in rxs {
             let _ = rx.recv();
         }
+        srv.shutdown();
+    }
+
+    /// Every served reply carries a stage breakdown whose parts never
+    /// exceed the end-to-end latency, and a traced submit shows up in the
+    /// process-wide observability journal under the caller's trace id.
+    #[test]
+    fn replies_carry_stage_timings_and_traced_submits_hit_the_journal() {
+        let _guard = crate::obs::test_enabled_lock();
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        let reply = h.classify("sst2", vec![1, 2, 3, 4]).unwrap();
+        let total_us = reply.latency.as_micros() as u64;
+        let parts: u64 = reply.stages.as_array().iter().map(|&s| s as u64).sum();
+        // Each stage is a sub-interval of the request's lifetime; allow a
+        // little slack for the `Instant` reads between stamps.
+        assert!(
+            parts <= total_us + 1_000,
+            "stage parts {parts}us exceed total {total_us}us: {:?}",
+            reply.stages
+        );
+
+        // A pinned trace id is stamped through to the journal.
+        let trace = 0xFACE_FEED_u64;
+        let (tx, rx) = sync_channel(1);
+        h.submit_sink_traced("sst2", vec![5, 6], trace, ReplySink::Oneshot(tx))
+            .unwrap();
+        rx.recv().unwrap().expect("served");
+        let journal = crate::obs::journal_jsonl();
+        assert!(
+            journal.contains(&format!("\"trace\":{trace}")),
+            "journal should contain the pinned trace id"
+        );
         srv.shutdown();
     }
 

@@ -13,6 +13,7 @@ pub mod cost;
 pub mod data;
 pub mod error;
 pub mod model;
+pub mod obs;
 pub mod pe;
 pub mod prng;
 pub mod runtime;

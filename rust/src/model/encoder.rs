@@ -76,9 +76,20 @@ impl<'w> Encoder<'w> {
         }
     }
 
-    /// The engine a GEMM site runs on (same grid/threads, site's mode).
+    /// The engine a GEMM site runs on (same grid/threads, site's mode),
+    /// wired to the process-wide `(site, mode)` fidelity telemetry cell
+    /// ([`crate::obs`]).  Sampled tiles report normalization counters per
+    /// site without perturbing output bits (the counting datapath is
+    /// bit-identical — the bit-exactness tests below this layer cover the
+    /// telemetered path too).
     fn site_engine(&self, site: Site) -> MatrixEngine {
-        self.engine.with_mode(self.site_mode(site))
+        let mode = self.site_mode(site);
+        let engine = self.engine.with_mode(mode);
+        if mode.is_bf16() && crate::obs::enabled() {
+            engine.with_fidelity(crate::obs::fidelity_cell(&site.label(), &mode.label()))
+        } else {
+            engine
+        }
     }
 
     /// Engine-backed projection `x · W[wname] + b[bname]` at the given

@@ -1,0 +1,1226 @@
+//! Zero-dependency observability: request tracing, stage-latency
+//! histograms, numeric-fidelity telemetry, and snapshot exposition.
+//!
+//! Three concerns live here, all designed to be cheap enough to leave on
+//! in production (the `bench_hotpath` obs gate asserts < 3% overhead on a
+//! 256³ GEMM):
+//!
+//! 1. **Tracing** — every request carries a [`TraceId`](next_trace_id)
+//!    minted at admission (in-process submit or the AMFN wire; a wire
+//!    trace of `0` means "unset", and the server mints one).  The serving
+//!    pipeline stamps monotonic timestamps at enqueue → batch-form →
+//!    GEMM-start → GEMM-end → reply-flush and folds the four resulting
+//!    stage durations ([`StageTimings`]) into lock-cheap log₂-bucketed
+//!    [`LatencyHistogram`]s (fixed atomic arrays, snapshot-on-read like
+//!    `MetricsSnapshot`).  A bounded ring-buffer [`journal`](journal_jsonl)
+//!    keeps the most recent per-stage events for slow-request forensics,
+//!    dumpable as JSONL.
+//!
+//! 2. **Numeric-fidelity telemetry** — the bf16 kernel tiers export cheap
+//!    counters per `(site, mode)` [`FidelityCell`]: the normalization-shift
+//!    histogram, λ-truncation events (the approximate path left residual
+//!    unnormalization on the accumulator), shift-saturation events (the
+//!    addend was right-shifted into the sticky region), accumulator freeze
+//!    events (a special operand latched Inf/NaN), and a per-sample
+//!    mean-relative-error probe for the fastmath tier.  Sampling is 1 tile
+//!    in [`SAMPLE_EVERY`]; a sampled tile on the scalar/wide/simd tiers
+//!    runs the wide *counting* datapath, which is bit-exact with the
+//!    normal one (asserted in `arith::wide` tests), so telemetry never
+//!    perturbs results.
+//!
+//! 3. **Exposition** — [`snapshot`] collects everything into an
+//!    [`ObsSnapshot`] with a compact binary [`encode`](ObsSnapshot::encode)
+//!    (carried by the AMFN `Stats` frame, kind 6), a JSON renderer
+//!    (schema `amfma-stats-v1`, validated by
+//!    `python/tests/test_stats_schema.py`), and a Prometheus-style text
+//!    renderer.  Snapshots from shards [`merge`](ObsSnapshot::merge) at
+//!    the front, so `amfma stat --addr FRONT` sees the whole fleet.
+//!
+//! The global switch [`set_enabled`] gates every hook: with observability
+//! off the kernels touch **zero** atomics (the tile tick checks the flag
+//! first) and the server skips histogram/journal writes.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Build configuration (printed by `amfma info`, pinned by CI greps)
+// ---------------------------------------------------------------------------
+
+/// Number of log₂-microsecond latency buckets per stage histogram.
+/// Bucket 0 holds exact zeros; bucket `i` holds `[2^(i-1), 2^i)` µs; the
+/// top bucket is open-ended.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Capacity of the ring-buffer event journal (events, not requests — each
+/// completed request contributes one event per stage).
+pub const JOURNAL_CAP: usize = 1024;
+
+/// Fidelity sampling rate: one tile in this many runs the counting
+/// datapath (or the fastmath reference probe).
+pub const SAMPLE_EVERY: u64 = 32;
+
+/// Bins of the normalization-shift histogram: shifts `0..=16` (the wide
+/// kernel's `NORM_POS` is 16, so a left-shift never exceeds it).
+pub const SHIFT_BINS: usize = 17;
+
+// ---------------------------------------------------------------------------
+// Stages and per-request timings
+// ---------------------------------------------------------------------------
+
+/// The four measured segments of a request's life inside the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission (`submitted_at`) → the batcher flushed the batch.
+    EnqueueWait,
+    /// Batch flush → the engine worker reached GEMM start (pickup,
+    /// validation, padding).
+    BatchForm,
+    /// The padded forward pass (every engine GEMM of the request).
+    Gemm,
+    /// GEMM end → the reply was handed to the sink.
+    ReplyFlush,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] =
+        [Stage::EnqueueWait, Stage::BatchForm, Stage::Gemm, Stage::ReplyFlush];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::EnqueueWait => "enqueue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Gemm => "gemm",
+            Stage::ReplyFlush => "reply_flush",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-request stage durations in microseconds, carried on the in-process
+/// `Reply` and (as `4×u32`) on the wire `ReplyOk` frame so clients and the
+/// front's loadgen can attribute server time without scraping.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimings {
+    pub enqueue_wait_us: u32,
+    pub batch_form_us: u32,
+    pub gemm_us: u32,
+    pub reply_flush_us: u32,
+}
+
+impl StageTimings {
+    /// Wire order — matches [`Stage::ALL`].
+    pub fn as_array(self) -> [u32; 4] {
+        [self.enqueue_wait_us, self.batch_form_us, self.gemm_us, self.reply_flush_us]
+    }
+
+    pub fn from_array(a: [u32; 4]) -> Self {
+        StageTimings {
+            enqueue_wait_us: a[0],
+            batch_form_us: a[1],
+            gemm_us: a[2],
+            reply_flush_us: a[3],
+        }
+    }
+
+    pub fn get(self, stage: Stage) -> u32 {
+        self.as_array()[stage.index()]
+    }
+}
+
+/// Mint a fresh nonzero trace id.  `0` is reserved as "unset" on the wire.
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed latency histogram
+// ---------------------------------------------------------------------------
+
+fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        ((64 - us.leading_zeros() as u64) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// `[lower, upper)` bounds of bucket `i` in microseconds (the top bucket's
+/// upper bound is nominal — quantiles clamp to the observed max).
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i == 0 {
+        (0, 1)
+    } else {
+        (1u64 << (i - 1), 1u64 << i)
+    }
+}
+
+/// Lock-free log₂-µs histogram: 32 atomic buckets plus count/sum/max.
+/// Recording is a handful of relaxed RMWs; reading takes a coherent-enough
+/// [`HistSnapshot`] (buckets may lag count by in-flight records, never by
+/// torn values).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(us, Ordering::Relaxed);
+        self.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "LatencyHistogram({:?})", self.snapshot())
+    }
+}
+
+/// Immutable copy of a [`LatencyHistogram`]; mergeable across shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        HistSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Interpolated quantile in µs (linear within the covering bucket,
+    /// clamped to the observed max).  `0.0` with no samples.  Always
+    /// computed on *merged* buckets — never quantile-of-quantiles.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil()).max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let hi = hi.max(lo + 1).min(self.max.max(lo + 1));
+                let frac = (target - seen) as f64 / c as f64;
+                let est = lo as f64 + frac * hi.saturating_sub(lo) as f64;
+                return est.min(self.max as f64);
+            }
+            seen += c;
+        }
+        self.max as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring-buffer event journal
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct JournalEvent {
+    pub trace: u64,
+    pub stage: &'static str,
+    /// Duration of the stage in microseconds.
+    pub us: u64,
+    /// Microseconds since process start when the event was recorded.
+    pub at_us: u64,
+}
+
+struct Journal {
+    events: Mutex<VecDeque<JournalEvent>>,
+}
+
+impl Journal {
+    fn new() -> Self {
+        Journal { events: Mutex::new(VecDeque::with_capacity(JOURNAL_CAP)) }
+    }
+
+    fn record(&self, ev: JournalEvent) {
+        let mut q = self.events.lock().unwrap();
+        if q.len() == JOURNAL_CAP {
+            q.pop_front();
+        }
+        q.push_back(ev);
+    }
+
+    fn dump_jsonl(&self) -> String {
+        let q = self.events.lock().unwrap();
+        let mut out = String::with_capacity(q.len() * 64);
+        for ev in q.iter() {
+            out.push_str(&format!(
+                "{{\"trace\":{},\"stage\":\"{}\",\"us\":{},\"at_us\":{}}}\n",
+                ev.trace, ev.stage, ev.us, ev.at_us
+            ));
+        }
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+// ---------------------------------------------------------------------------
+// Numeric-fidelity telemetry
+// ---------------------------------------------------------------------------
+
+/// Per-tile classification tallies accumulated *locally* (plain integers)
+/// by the wide counting datapath, then folded into a [`FidelityCell`]'s
+/// atomics once per tile — the hot loop never touches shared state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTally {
+    /// Counting MAC steps executed (each step covers one lane group).
+    pub steps: u64,
+    /// Left-normalization shift distribution, one bin per shift `0..=16`.
+    pub shift: [u64; SHIFT_BINS],
+    /// Lanes whose addend overflowed above the normalization point and
+    /// was right-shifted (saturating toward the sticky region).
+    pub saturated: u64,
+    /// Lanes where the approximate shift fell short of the accurate one —
+    /// the λ-truncated LZA left residual unnormalization on the
+    /// accumulator (the loss the paper's `bf16an-k-λ` modes trade away).
+    pub truncated: u64,
+    /// Lanes that newly latched a special (Inf/NaN) and froze.
+    pub frozen: u64,
+}
+
+impl StepTally {
+    pub fn is_empty(&self) -> bool {
+        self.steps == 0
+    }
+}
+
+/// Shared `(site, mode)` fidelity counters.  Cells are allocated once per
+/// key by [`fidelity_cell`] and live for the process (`Box::leak`), so the
+/// scheduler can hold a `&'static` reference and stay `Copy`.
+pub struct FidelityCell {
+    site: String,
+    mode: String,
+    tiles: AtomicU64,
+    sampled_steps: AtomicU64,
+    shift_hist: [AtomicU64; SHIFT_BINS],
+    saturated: AtomicU64,
+    truncated: AtomicU64,
+    frozen: AtomicU64,
+    fm_samples: AtomicU64,
+    /// Sum of fastmath mean-relative-error samples, in micro-units
+    /// (`mean_rel × 1e6`), so the mean stays integral and mergeable.
+    fm_rel_micro: AtomicU64,
+}
+
+impl FidelityCell {
+    fn new(site: &str, mode: &str) -> Self {
+        FidelityCell {
+            site: site.to_string(),
+            mode: mode.to_string(),
+            tiles: AtomicU64::new(0),
+            sampled_steps: AtomicU64::new(0),
+            shift_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            saturated: AtomicU64::new(0),
+            truncated: AtomicU64::new(0),
+            frozen: AtomicU64::new(0),
+            fm_samples: AtomicU64::new(0),
+            fm_rel_micro: AtomicU64::new(0),
+        }
+    }
+
+    /// One relaxed RMW per tile; returns whether this tile is sampled.
+    /// With observability disabled this is a single atomic *load* and
+    /// always `false` — the kernels run exactly the untelemetered path.
+    pub fn tick_tile(&self) -> bool {
+        if !enabled() {
+            return false;
+        }
+        let n = self.tiles.fetch_add(1, Ordering::Relaxed);
+        n % SAMPLE_EVERY == 0
+    }
+
+    /// Fold a tile's local tally into the shared counters (once per
+    /// sampled tile).
+    pub fn apply(&self, t: &StepTally) {
+        if t.is_empty() {
+            return;
+        }
+        self.sampled_steps.fetch_add(t.steps, Ordering::Relaxed);
+        for (a, &v) in self.shift_hist.iter().zip(t.shift.iter()) {
+            if v != 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.saturated.fetch_add(t.saturated, Ordering::Relaxed);
+        self.truncated.fetch_add(t.truncated, Ordering::Relaxed);
+        self.frozen.fetch_add(t.frozen, Ordering::Relaxed);
+    }
+
+    /// Record one fastmath mean-relative-error sample (a sampled tile
+    /// compared against the bit-exact wide reference).
+    pub fn record_fastmath(&self, mean_rel: f64) {
+        self.fm_samples.fetch_add(1, Ordering::Relaxed);
+        let micro = (mean_rel.max(0.0) * 1e6).round() as u64;
+        self.fm_rel_micro.fetch_add(micro, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FidelitySnapshot {
+        FidelitySnapshot {
+            site: self.site.clone(),
+            mode: self.mode.clone(),
+            tiles: self.tiles.load(Ordering::Relaxed),
+            sampled_steps: self.sampled_steps.load(Ordering::Relaxed),
+            shift_hist: std::array::from_fn(|i| self.shift_hist[i].load(Ordering::Relaxed)),
+            saturated: self.saturated.load(Ordering::Relaxed),
+            truncated: self.truncated.load(Ordering::Relaxed),
+            frozen: self.frozen.load(Ordering::Relaxed),
+            fm_samples: self.fm_samples.load(Ordering::Relaxed),
+            fm_rel_micro: self.fm_rel_micro.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl fmt::Debug for FidelityCell {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FidelityCell({}/{})", self.site, self.mode)
+    }
+}
+
+type FidelityKey = (String, String);
+
+fn fidelity_registry() -> &'static Mutex<BTreeMap<FidelityKey, &'static FidelityCell>> {
+    static REG: OnceLock<Mutex<BTreeMap<FidelityKey, &'static FidelityCell>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// The process-wide fidelity cell for `(site, mode)` — e.g.
+/// `("layer0.ffn1", "bf16an-1-2")`.  Cardinality is bounded by
+/// sites × modes, so leaking cells is by design (they must outlive every
+/// `Copy` scheduler holding a reference).
+pub fn fidelity_cell(site: &str, mode: &str) -> &'static FidelityCell {
+    let key = (site.to_string(), mode.to_string());
+    let mut reg = fidelity_registry().lock().unwrap();
+    if let Some(cell) = reg.get(&key) {
+        return cell;
+    }
+    let cell: &'static FidelityCell = Box::leak(Box::new(FidelityCell::new(site, mode)));
+    reg.insert(key, cell);
+    cell
+}
+
+/// Immutable per-`(site, mode)` counters; mergeable across shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FidelitySnapshot {
+    pub site: String,
+    pub mode: String,
+    pub tiles: u64,
+    pub sampled_steps: u64,
+    pub shift_hist: [u64; SHIFT_BINS],
+    pub saturated: u64,
+    pub truncated: u64,
+    pub frozen: u64,
+    pub fm_samples: u64,
+    pub fm_rel_micro: u64,
+}
+
+impl FidelitySnapshot {
+    /// Mean fastmath relative error across samples (0.0 when unsampled).
+    pub fn fm_mean_rel(&self) -> f64 {
+        if self.fm_samples == 0 {
+            0.0
+        } else {
+            self.fm_rel_micro as f64 / self.fm_samples as f64 / 1e6
+        }
+    }
+
+    fn merge(&mut self, other: &FidelitySnapshot) {
+        self.tiles += other.tiles;
+        self.sampled_steps += other.sampled_steps;
+        for (a, &b) in self.shift_hist.iter_mut().zip(other.shift_hist.iter()) {
+            *a += b;
+        }
+        self.saturated += other.saturated;
+        self.truncated += other.truncated;
+        self.frozen += other.frozen;
+        self.fm_samples += other.fm_samples;
+        self.fm_rel_micro += other.fm_rel_micro;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global singleton
+// ---------------------------------------------------------------------------
+
+struct Obs {
+    enabled: AtomicBool,
+    stages: [LatencyHistogram; 4],
+    journal: Journal,
+}
+
+fn obs() -> &'static Obs {
+    static OBS: OnceLock<Obs> = OnceLock::new();
+    OBS.get_or_init(|| Obs {
+        enabled: AtomicBool::new(true),
+        stages: std::array::from_fn(|_| LatencyHistogram::new()),
+        journal: Journal::new(),
+    })
+}
+
+/// Whether observability hooks are live (default `true`).
+pub fn enabled() -> bool {
+    obs().enabled.load(Ordering::Relaxed)
+}
+
+/// Flip the global observability switch (used by the `bench_hotpath`
+/// obs-on/obs-off overhead gate; leave on in production — that's the
+/// point of the gate).
+pub fn set_enabled(on: bool) {
+    obs().enabled.store(on, Ordering::Relaxed);
+}
+
+/// Record one stage duration into the global histograms.
+pub fn record_stage(stage: Stage, us: u64) {
+    if !enabled() {
+        return;
+    }
+    obs().stages[stage.index()].record(us);
+}
+
+/// Record a completed request: all four stage durations plus one journal
+/// event per stage.
+pub fn record_timings(trace: u64, t: &StageTimings) {
+    if !enabled() {
+        return;
+    }
+    let o = obs();
+    let at_us = epoch().elapsed().as_micros() as u64;
+    for stage in Stage::ALL {
+        let us = t.get(stage) as u64;
+        o.stages[stage.index()].record(us);
+        o.journal.record(JournalEvent { trace, stage: stage.label(), us, at_us });
+    }
+}
+
+/// Most-recent journal events as JSONL (one `{"trace":..,"stage":..}` per
+/// line), oldest first.
+pub fn journal_jsonl() -> String {
+    obs().journal.dump_jsonl()
+}
+
+#[cfg(test)]
+fn journal_len() -> usize {
+    obs().journal.len()
+}
+
+/// Test-only: serialize tests that flip or depend on the global `enabled`
+/// flag (lib tests share one process), so a momentary test-local disable
+/// never races a test asserting counters advance.
+#[cfg(test)]
+pub(crate) fn test_enabled_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Snapshot the whole process: stage histograms + every fidelity cell.
+pub fn snapshot() -> ObsSnapshot {
+    let o = obs();
+    let fidelity = fidelity_registry()
+        .lock()
+        .unwrap()
+        .values()
+        .map(|c| c.snapshot())
+        .collect::<Vec<_>>();
+    ObsSnapshot {
+        stages: std::array::from_fn(|i| o.stages[i].snapshot()),
+        fidelity,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot: merge, wire codec, renderers
+// ---------------------------------------------------------------------------
+
+/// Everything the process knows: one histogram per [`Stage`] plus the
+/// per-`(site, mode)` fidelity counters.  This is the payload of the AMFN
+/// `Stats` frame (kind 6) and of `amfma stat`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsSnapshot {
+    pub stages: [HistSnapshot; 4],
+    pub fidelity: Vec<FidelitySnapshot>,
+}
+
+impl Default for ObsSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+const SNAPSHOT_CODEC_VERSION: u8 = 1;
+
+impl ObsSnapshot {
+    pub fn empty() -> Self {
+        ObsSnapshot { stages: std::array::from_fn(|_| HistSnapshot::empty()), fidelity: Vec::new() }
+    }
+
+    /// Fold another process's snapshot into this one: histograms add
+    /// bucket-wise (quantiles are then computed on the merged buckets —
+    /// never averaged across shards), fidelity entries join on
+    /// `(site, mode)`.
+    pub fn merge(&mut self, other: &ObsSnapshot) {
+        for (s, o) in self.stages.iter_mut().zip(other.stages.iter()) {
+            s.merge(o);
+        }
+        let mut by_key: BTreeMap<FidelityKey, FidelitySnapshot> = self
+            .fidelity
+            .drain(..)
+            .map(|f| ((f.site.clone(), f.mode.clone()), f))
+            .collect();
+        for f in &other.fidelity {
+            let key = (f.site.clone(), f.mode.clone());
+            match by_key.get_mut(&key) {
+                Some(mine) => mine.merge(f),
+                None => {
+                    by_key.insert(key, f.clone());
+                }
+            }
+        }
+        self.fidelity = by_key.into_values().collect();
+    }
+
+    /// Compact little-endian binary form (the AMFN `Stats` body).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            1 + 4 * (3 + HIST_BUCKETS) * 8 + self.fidelity.len() * (64 + (7 + SHIFT_BINS) * 8),
+        );
+        out.push(SNAPSHOT_CODEC_VERSION);
+        for h in &self.stages {
+            out.extend_from_slice(&h.count.to_le_bytes());
+            out.extend_from_slice(&h.sum.to_le_bytes());
+            out.extend_from_slice(&h.max.to_le_bytes());
+            for b in &h.buckets {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.fidelity.len() as u32).to_le_bytes());
+        for f in &self.fidelity {
+            enc_str(&mut out, &f.site);
+            enc_str(&mut out, &f.mode);
+            for v in [f.tiles, f.sampled_steps] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for b in &f.shift_hist {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+            for v in [f.saturated, f.truncated, f.frozen, f.fm_samples, f.fm_rel_micro] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ObsSnapshot, String> {
+        let mut cur = Dec { bytes, off: 0 };
+        let version = cur.u8()?;
+        if version != SNAPSHOT_CODEC_VERSION {
+            return Err(format!("unknown stats codec version {version}"));
+        }
+        let mut stages: [HistSnapshot; 4] = std::array::from_fn(|_| HistSnapshot::empty());
+        for h in stages.iter_mut() {
+            h.count = cur.u64()?;
+            h.sum = cur.u64()?;
+            h.max = cur.u64()?;
+            for b in h.buckets.iter_mut() {
+                *b = cur.u64()?;
+            }
+        }
+        let n = cur.u32()? as usize;
+        // 17 shift bins + 7 scalar u64s + two length-prefixed strings:
+        // reject declared counts the remaining bytes cannot possibly hold.
+        if n > cur.bytes.len() / ((7 + SHIFT_BINS) * 8) + 1 {
+            return Err(format!("absurd fidelity entry count {n}"));
+        }
+        let mut fidelity = Vec::with_capacity(n);
+        for _ in 0..n {
+            let site = cur.str()?;
+            let mode = cur.str()?;
+            let tiles = cur.u64()?;
+            let sampled_steps = cur.u64()?;
+            let mut shift_hist = [0u64; SHIFT_BINS];
+            for b in shift_hist.iter_mut() {
+                *b = cur.u64()?;
+            }
+            fidelity.push(FidelitySnapshot {
+                site,
+                mode,
+                tiles,
+                sampled_steps,
+                shift_hist,
+                saturated: cur.u64()?,
+                truncated: cur.u64()?,
+                frozen: cur.u64()?,
+                fm_samples: cur.u64()?,
+                fm_rel_micro: cur.u64()?,
+            });
+        }
+        if cur.off != bytes.len() {
+            return Err(format!("{} trailing bytes after stats snapshot", bytes.len() - cur.off));
+        }
+        Ok(ObsSnapshot { stages, fidelity })
+    }
+
+    /// JSON document, schema `amfma-stats-v1` (validated by
+    /// `python/tests/test_stats_schema.py`).
+    pub fn render_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\"schema\":\"amfma-stats-v1\",\"stages\":{");
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let h = &self.stages[stage.index()];
+            s.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum_us\":{},\"max_us\":{},\"mean_us\":{:.1},\
+                 \"p50_us\":{:.1},\"p95_us\":{:.1},\"p99_us\":{:.1},\"buckets\":[",
+                stage.label(),
+                h.count,
+                h.sum,
+                h.max,
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+            ));
+            for (j, b) in h.buckets.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&b.to_string());
+            }
+            s.push_str("]}");
+        }
+        s.push_str("},\"fidelity\":[");
+        for (i, f) in self.fidelity.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"site\":\"{}\",\"mode\":\"{}\",\"tiles\":{},\"sampled_steps\":{},\
+                 \"saturated\":{},\"truncated\":{},\"frozen\":{},\"fm_samples\":{},\
+                 \"fm_mean_rel\":{:.6},\"shift_hist\":[",
+                json_escape(&f.site),
+                json_escape(&f.mode),
+                f.tiles,
+                f.sampled_steps,
+                f.saturated,
+                f.truncated,
+                f.frozen,
+                f.fm_samples,
+                f.fm_mean_rel(),
+            ));
+            for (j, b) in f.shift_hist.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&b.to_string());
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Prometheus-style text exposition (one metric family per counter,
+    /// `stage=`/`site=`/`mode=` labels).
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("# HELP amfma_stage_latency_us per-stage request latency (microseconds)\n");
+        s.push_str("# TYPE amfma_stage_latency_us summary\n");
+        for stage in Stage::ALL {
+            let h = &self.stages[stage.index()];
+            let l = stage.label();
+            for (q, v) in
+                [("0.5", h.quantile(0.50)), ("0.95", h.quantile(0.95)), ("0.99", h.quantile(0.99))]
+            {
+                s.push_str(&format!(
+                    "amfma_stage_latency_us{{stage=\"{l}\",quantile=\"{q}\"}} {v:.1}\n"
+                ));
+            }
+            s.push_str(&format!("amfma_stage_latency_us_sum{{stage=\"{l}\"}} {}\n", h.sum));
+            s.push_str(&format!("amfma_stage_latency_us_count{{stage=\"{l}\"}} {}\n", h.count));
+            s.push_str(&format!("amfma_stage_latency_us_max{{stage=\"{l}\"}} {}\n", h.max));
+        }
+        s.push_str("# HELP amfma_fidelity per-(site,mode) numeric fidelity counters\n");
+        for f in &self.fidelity {
+            let labels = format!("site=\"{}\",mode=\"{}\"", f.site, f.mode);
+            s.push_str(&format!("amfma_fidelity_tiles{{{labels}}} {}\n", f.tiles));
+            s.push_str(&format!(
+                "amfma_fidelity_sampled_steps{{{labels}}} {}\n",
+                f.sampled_steps
+            ));
+            s.push_str(&format!("amfma_fidelity_saturated{{{labels}}} {}\n", f.saturated));
+            s.push_str(&format!("amfma_fidelity_truncated{{{labels}}} {}\n", f.truncated));
+            s.push_str(&format!("amfma_fidelity_frozen{{{labels}}} {}\n", f.frozen));
+            s.push_str(&format!("amfma_fidelity_fm_samples{{{labels}}} {}\n", f.fm_samples));
+            s.push_str(&format!(
+                "amfma_fidelity_fm_mean_rel{{{labels}}} {:.6}\n",
+                f.fm_mean_rel()
+            ));
+            for (shift, b) in f.shift_hist.iter().enumerate() {
+                if *b != 0 {
+                    s.push_str(&format!(
+                        "amfma_fidelity_shift_bucket{{{labels},shift=\"{shift}\"}} {b}\n"
+                    ));
+                }
+            }
+        }
+        s
+    }
+}
+
+fn enc_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..n]);
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+struct Dec<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl Dec<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], String> {
+        if self.off + n > self.bytes.len() {
+            return Err("truncated stats snapshot".to_string());
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "non-utf8 string in snapshot".to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use super::test_enabled_lock as enabled_lock;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for i in 1..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(bucket_index(lo), i, "lower bound of bucket {i}");
+            if i < HIST_BUCKETS - 1 {
+                assert_eq!(bucket_index(hi - 1), i, "upper bound of bucket {i}");
+            }
+        }
+        // Beyond every finite bucket: clamped into the top one.
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_zero_samples() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.sum, 0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.quantile(0.99), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let h = LatencyHistogram::new();
+        h.record(100);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.sum, 100);
+        assert_eq!(s.max, 100);
+        // 100µs lands in bucket [64, 128); the interpolated quantile must
+        // stay inside the bucket and never exceed the observed max.
+        let p50 = s.quantile(0.5);
+        assert!((64.0..=100.0).contains(&p50), "p50={p50}");
+        assert!(s.quantile(0.99) <= 100.0);
+    }
+
+    #[test]
+    fn histogram_beyond_top_bucket() {
+        let h = LatencyHistogram::new();
+        let huge = u64::MAX / 2;
+        h.record(huge);
+        h.record(1);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.buckets[HIST_BUCKETS - 1], 1);
+        assert_eq!(s.max, huge);
+        let p99 = s.quantile(0.99);
+        assert!(p99.is_finite());
+        assert!(p99 <= huge as f64);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered_and_bounded() {
+        let h = LatencyHistogram::new();
+        for us in [3u64, 17, 90, 250, 1000, 5000, 5000, 12000] {
+            h.record(us);
+        }
+        let s = h.snapshot();
+        let (p50, p95, p99) = (s.quantile(0.5), s.quantile(0.95), s.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(p99 <= s.max as f64);
+        assert!(p50 >= 1.0);
+    }
+
+    #[test]
+    fn histogram_snapshot_while_recording_race() {
+        let h = Arc::new(LatencyHistogram::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        const PER_THREAD: u64 = 10_000;
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        h.record(t * 1000 + i % 997);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let h = Arc::clone(&h);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last_count = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let s = h.snapshot();
+                    // Counts are monotone and never torn; quantiles stay
+                    // finite mid-flight.
+                    assert!(s.count >= last_count);
+                    assert!(s.quantile(0.99).is_finite());
+                    last_count = s.count;
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        reader.join().unwrap();
+        let s = h.snapshot();
+        assert_eq!(s.count, 4 * PER_THREAD);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 4 * PER_THREAD);
+    }
+
+    #[test]
+    fn merge_of_shard_snapshots() {
+        let h1 = LatencyHistogram::new();
+        let h2 = LatencyHistogram::new();
+        for us in [10u64, 20, 30] {
+            h1.record(us);
+        }
+        for us in [1000u64, 2000] {
+            h2.record(us);
+        }
+        let mut merged = h1.snapshot();
+        merged.merge(&h2.snapshot());
+        assert_eq!(merged.count, 5);
+        assert_eq!(merged.sum, 3060);
+        assert_eq!(merged.max, 2000);
+        // Reference: a single histogram fed every sample.
+        let all = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 1000, 2000] {
+            all.record(us);
+        }
+        assert_eq!(merged, all.snapshot());
+    }
+
+    fn sample_snapshot(site: &str, n: u64) -> ObsSnapshot {
+        let mut s = ObsSnapshot::empty();
+        for (i, h) in s.stages.iter_mut().enumerate() {
+            h.count = n + i as u64;
+            h.sum = 100 * (n + i as u64);
+            h.max = 99;
+            h.buckets[7] = n + i as u64;
+        }
+        let mut shift_hist = [0u64; SHIFT_BINS];
+        shift_hist[3] = 5 * n;
+        s.fidelity.push(FidelitySnapshot {
+            site: site.to_string(),
+            mode: "bf16an-1-2".to_string(),
+            tiles: 10 * n,
+            sampled_steps: 3 * n,
+            shift_hist,
+            saturated: n,
+            truncated: 2 * n,
+            frozen: 0,
+            fm_samples: n,
+            fm_rel_micro: 40 * n,
+        });
+        s
+    }
+
+    #[test]
+    fn snapshot_merge_joins_fidelity_on_site_mode() {
+        let mut a = sample_snapshot("head", 2);
+        let b = sample_snapshot("head", 3);
+        let c = sample_snapshot("embed", 1);
+        a.merge(&b);
+        a.merge(&c);
+        assert_eq!(a.stages[0].count, 2 + 3 + 1);
+        assert_eq!(a.fidelity.len(), 2, "same (site,mode) joins; new site appends");
+        let head = a.fidelity.iter().find(|f| f.site == "head").unwrap();
+        assert_eq!(head.tiles, 50);
+        assert_eq!(head.truncated, 10);
+        assert_eq!(head.shift_hist[3], 25);
+        assert_eq!(head.fm_samples, 5);
+        // Mean rel error merges as a weighted mean, not a mean of means.
+        assert!((head.fm_mean_rel() - 40e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_codec_round_trips() {
+        let mut s = sample_snapshot("layer0.ffn1", 7);
+        s.merge(&sample_snapshot("head", 2));
+        let bytes = s.encode();
+        let back = ObsSnapshot::decode(&bytes).unwrap();
+        assert_eq!(back, s);
+        // Truncation at every cut is an error, never a panic.
+        for cut in 0..bytes.len() {
+            assert!(ObsSnapshot::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Bad codec version.
+        let mut bad = bytes.clone();
+        bad[0] = 200;
+        assert!(ObsSnapshot::decode(&bad).is_err());
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(ObsSnapshot::decode(&long).is_err());
+    }
+
+    #[test]
+    fn render_json_has_schema_and_all_stages() {
+        let s = sample_snapshot("head", 4);
+        let json = s.render_json();
+        assert!(json.starts_with("{\"schema\":\"amfma-stats-v1\""));
+        for stage in Stage::ALL {
+            assert!(json.contains(&format!("\"{}\":{{\"count\":", stage.label())), "{stage:?}");
+        }
+        for key in
+            ["\"p99_us\":", "\"buckets\":[", "\"site\":\"head\"", "\"shift_hist\":[", "\"fm_mean_rel\":"]
+        {
+            assert!(json.contains(key), "missing {key}");
+        }
+        // Structurally sane: balanced braces/brackets, no trailing comma.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",}") && !json.contains(",]"));
+    }
+
+    #[test]
+    fn render_prometheus_exposes_counters() {
+        let s = sample_snapshot("head", 4);
+        let text = s.render_prometheus();
+        assert!(text.contains("amfma_stage_latency_us_count{stage=\"gemm\"}"));
+        assert!(text.contains("quantile=\"0.99\""));
+        assert!(text.contains("amfma_fidelity_truncated{site=\"head\",mode=\"bf16an-1-2\"} 8"));
+        assert!(text.contains("shift=\"3\""));
+    }
+
+    #[test]
+    fn fidelity_cell_is_interned_per_site_mode() {
+        let a = fidelity_cell("obs-test-site", "bf16an-1-2");
+        let b = fidelity_cell("obs-test-site", "bf16an-1-2");
+        let c = fidelity_cell("obs-test-site", "bf16an-2-2");
+        assert!(std::ptr::eq(a, b));
+        assert!(!std::ptr::eq(a, c));
+    }
+
+    #[test]
+    fn tick_tile_samples_and_respects_disable() {
+        let _g = enabled_lock();
+        let cell = fidelity_cell("obs-test-tick", "bf16");
+        let sampled: usize = (0..(2 * SAMPLE_EVERY as usize))
+            .map(|_| cell.tick_tile() as usize)
+            .sum();
+        assert_eq!(sampled, 2, "one sampled tile per SAMPLE_EVERY window");
+        let before = cell.snapshot().tiles;
+        set_enabled(false);
+        assert!(!cell.tick_tile());
+        assert_eq!(cell.snapshot().tiles, before, "disabled tick touches no counters");
+        set_enabled(true);
+    }
+
+    #[test]
+    fn tally_applies_into_cell() {
+        let cell = fidelity_cell("obs-test-tally", "bf16an-2-2");
+        let mut shift = [0u64; SHIFT_BINS];
+        shift[0] = 3;
+        shift[16] = 1;
+        let t = StepTally { steps: 8, shift, saturated: 2, truncated: 4, frozen: 0 };
+        cell.apply(&t);
+        cell.apply(&StepTally::default()); // empty tally is a no-op
+        cell.record_fastmath(12.5e-6);
+        let s = cell.snapshot();
+        assert_eq!(s.sampled_steps, 8);
+        assert_eq!(s.shift_hist[0], 3);
+        assert_eq!(s.shift_hist[16], 1);
+        assert_eq!(s.saturated, 2);
+        assert_eq!(s.truncated, 4);
+        assert_eq!(s.fm_samples, 1);
+        assert!((s.fm_mean_rel() - 12.5e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_timings_round_trip_and_labels() {
+        let t = StageTimings {
+            enqueue_wait_us: 1,
+            batch_form_us: 2,
+            gemm_us: 3,
+            reply_flush_us: 4,
+        };
+        assert_eq!(StageTimings::from_array(t.as_array()), t);
+        assert_eq!(t.get(Stage::Gemm), 3);
+        let labels: Vec<_> = Stage::ALL.iter().map(|s| s.label()).collect();
+        assert_eq!(labels, ["enqueue_wait", "batch_form", "gemm", "reply_flush"]);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_unique() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn journal_is_bounded_and_dumps_jsonl() {
+        let _g = enabled_lock();
+        // The journal is process-global; record enough to guarantee the
+        // ring is full regardless of other tests, then check the bound.
+        for i in 0..(JOURNAL_CAP as u64 + 50) {
+            record_timings(
+                1_000_000 + i,
+                &StageTimings { enqueue_wait_us: 1, batch_form_us: 1, gemm_us: 1, reply_flush_us: 1 },
+            );
+        }
+        assert_eq!(journal_len(), JOURNAL_CAP);
+        let dump = journal_jsonl();
+        let lines: Vec<_> = dump.lines().collect();
+        assert_eq!(lines.len(), JOURNAL_CAP);
+        for line in &lines {
+            assert!(line.starts_with("{\"trace\":"), "bad journal line {line}");
+            assert!(line.contains("\"stage\":\"") && line.ends_with('}'));
+        }
+    }
+
+    #[test]
+    fn global_snapshot_sees_recorded_stages() {
+        let _g = enabled_lock();
+        record_stage(Stage::Gemm, 777);
+        let s = snapshot();
+        assert!(s.stages[Stage::Gemm.index()].count >= 1);
+        assert!(s.stages[Stage::Gemm.index()].max >= 777);
+    }
+}

@@ -89,6 +89,10 @@ pub struct MatrixEngine {
     /// f32 speed (see [`crate::systolic::scheduler::GemmKernel`]).
     /// Defaults to the process-wide `AMFMA_KERNEL` selection.
     pub kernel: GemmKernel,
+    /// Optional `(site, mode)` fidelity telemetry cell ([`crate::obs`]):
+    /// when attached, the tile scheduler samples tiles into it.  `None`
+    /// (the default) adds zero work to the GEMM path.
+    pub fidelity: Option<&'static crate::obs::FidelityCell>,
 }
 
 impl MatrixEngine {
@@ -99,6 +103,7 @@ impl MatrixEngine {
             pe_cols: 16,
             threads: default_threads(),
             kernel: GemmKernel::default_from_env(),
+            fidelity: None,
         }
     }
 
@@ -114,6 +119,12 @@ impl MatrixEngine {
         MatrixEngine { kernel, ..self.clone() }
     }
 
+    /// A copy of this engine reporting numeric-fidelity telemetry into the
+    /// given [`crate::obs`] cell (sampled tiles; bit-identical outputs).
+    pub fn with_fidelity(&self, cell: &'static crate::obs::FidelityCell) -> MatrixEngine {
+        MatrixEngine { fidelity: Some(cell), ..self.clone() }
+    }
+
     /// A copy of this engine running a different numeric mode (same grid,
     /// same host parallelism) — the per-call mode-override hook the
     /// precision-policy layer ([`crate::autotune`]) uses to run individual
@@ -127,7 +138,12 @@ impl MatrixEngine {
     /// The tile scheduler matching this engine's parallelism and kernel
     /// settings.
     fn scheduler(&self) -> TileScheduler {
-        TileScheduler { inline_only: self.threads <= 1, kernel: self.kernel, ..Default::default() }
+        TileScheduler {
+            inline_only: self.threads <= 1,
+            kernel: self.kernel,
+            fidelity: self.fidelity,
+            ..Default::default()
+        }
     }
 
     /// `Y = X · W` on f32 tensors (row-major).  Bf16 modes convert inputs

@@ -44,6 +44,7 @@ use std::sync::OnceLock;
 use crate::arith::wide::{self, WideAcc, WideKernel, LANES};
 use crate::arith::{fma, ExtFloat, FastMathKernel, NormMode, SimdKernel};
 use crate::error::{Error, Result};
+use crate::obs::{FidelityCell, StepTally};
 use crate::runtime::pool::WorkerPool;
 
 /// Default output-tile height (rows of X per task).
@@ -208,6 +209,13 @@ pub struct TileScheduler {
     pub inline_only: bool,
     /// The bf16 inner kernel (scalar seed path or the wide SoA kernel).
     pub kernel: GemmKernel,
+    /// Optional `(site, mode)` fidelity counters ([`crate::obs`]).  When
+    /// attached, one tile in [`crate::obs::SAMPLE_EVERY`] runs the wide
+    /// counting datapath (bit-identical for the exact tiers) or, on the
+    /// fastmath tier, a bounded mean-relative-error probe.  `&'static`
+    /// (cells are interned by [`crate::obs::fidelity_cell`]) so the
+    /// scheduler stays `Copy`.
+    pub fidelity: Option<&'static FidelityCell>,
 }
 
 impl Default for TileScheduler {
@@ -217,6 +225,7 @@ impl Default for TileScheduler {
             tile_n: TILE_N,
             inline_only: false,
             kernel: GemmKernel::default_from_env(),
+            fidelity: None,
         }
     }
 }
@@ -228,6 +237,12 @@ impl TileScheduler {
 
     pub fn with_kernel(kernel: GemmKernel) -> Self {
         TileScheduler { kernel, ..Default::default() }
+    }
+
+    /// Attach a fidelity cell: sampled tiles report normalization-shift /
+    /// truncation / saturation counters (or fastmath error probes) to it.
+    pub fn with_fidelity(self, cell: &'static FidelityCell) -> Self {
+        TileScheduler { fidelity: Some(cell), ..self }
     }
 
     fn should_inline(&self, m: usize, k: usize, n: usize, n_tiles: usize) -> bool {
@@ -264,9 +279,10 @@ impl TileScheduler {
         }
         let tile_list = tiles(m, n, self.tile_m, self.tile_n);
         let kernel = self.kernel;
+        let fidelity = self.fidelity;
         if self.should_inline(m, k, n, tile_list.len()) {
             for t in &tile_list {
-                bf16_tile_kernel(x, wt, k, n, *t, mode, kernel, y.as_mut_ptr());
+                bf16_tile_kernel(x, wt, k, n, *t, mode, kernel, fidelity, y.as_mut_ptr());
             }
             return y;
         }
@@ -279,7 +295,7 @@ impl TileScheduler {
                     // whole `SendPtr` (Send), not the raw-pointer field
                     // (2021-edition closures capture disjoint fields).
                     let SendPtr(ptr) = out;
-                    bf16_tile_kernel(x, wt, k, n, t, mode, kernel, ptr);
+                    bf16_tile_kernel(x, wt, k, n, t, mode, kernel, fidelity, ptr);
                 }
             })
             .collect();
@@ -327,7 +343,12 @@ impl TileScheduler {
     }
 }
 
-/// Compute one bf16 output tile with the selected inner kernel.
+/// Compute one bf16 output tile with the selected inner kernel.  With a
+/// fidelity cell attached, one tile in [`crate::obs::SAMPLE_EVERY`] is
+/// *sampled*: the exact tiers run the wide counting datapath (bit-identical
+/// to all three by the kernel contract, so telemetry never changes output
+/// bits), and the fastmath tier runs normally plus a bounded
+/// mean-relative-error probe against the exact reference.
 #[allow(clippy::too_many_arguments)]
 fn bf16_tile_kernel(
     x: &[u16],
@@ -337,8 +358,21 @@ fn bf16_tile_kernel(
     t: Tile,
     mode: NormMode,
     kernel: GemmKernel,
+    fidelity: Option<&'static FidelityCell>,
     out: *mut u16,
 ) {
+    if let Some(cell) = fidelity {
+        if cell.tick_tile() {
+            match kernel {
+                GemmKernel::FastMath => {
+                    bf16_tile_kernel_fastmath(x, wt, k, n, t, mode, out);
+                    sample_fastmath_tile(cell, x, wt, k, n, t, mode, out);
+                }
+                _ => bf16_tile_kernel_wide_counting(cell, x, wt, k, n, t, mode, out),
+            }
+            return;
+        }
+    }
     match kernel {
         GemmKernel::Scalar => bf16_tile_kernel_scalar(x, wt, k, n, t, mode, out),
         GemmKernel::Wide => bf16_tile_kernel_wide(x, wt, k, n, t, mode, out),
@@ -390,6 +424,72 @@ fn bf16_tile_kernel_lanes(
         let rest = Tile { r0: t.r0, r1: t.r1, c0: j, c1: t.c1 };
         bf16_tile_kernel_scalar(x, wt, k, n, rest, mode, out);
     }
+}
+
+/// Sampled-tile telemetry for the exact tiers: the wide *counting* step
+/// classifies every lane (shift histogram, saturation, λ-truncation,
+/// freezes) into a tile-local tally, folded into the cell's atomics once
+/// at the end.  Bit-identical to [`bf16_tile_kernel_wide`] (asserted in
+/// `arith::wide` tests) — remainder columns (< [`LANES`]) take the scalar
+/// kernel and go uncounted, which only thins the sample, never skews it.
+#[allow(clippy::too_many_arguments)]
+fn bf16_tile_kernel_wide_counting(
+    cell: &'static FidelityCell,
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    let kern = WideKernel::new(mode);
+    let tally = std::cell::RefCell::new(StepTally::default());
+    bf16_tile_kernel_lanes(
+        |acc, a, b| kern.step_counting(acc, a, b, &mut tally.borrow_mut()),
+        x,
+        wt,
+        k,
+        n,
+        t,
+        mode,
+        out,
+    );
+    cell.apply(&tally.into_inner());
+}
+
+/// Sampled-tile telemetry for the fastmath tier: re-derive a small probe
+/// region of the already-computed tile through the exact column-chain
+/// reference and record the mean relative error.  Bounded to a few
+/// chains so a sampled tile stays cheap.
+#[allow(clippy::too_many_arguments)]
+fn sample_fastmath_tile(
+    cell: &'static FidelityCell,
+    x: &[u16],
+    wt: &[u16],
+    k: usize,
+    n: usize,
+    t: Tile,
+    mode: NormMode,
+    out: *mut u16,
+) {
+    let r1 = t.r1.min(t.r0 + 2);
+    let c1 = t.c1.min(t.c0 + LANES);
+    let probe = (r1 - t.r0) * (c1 - t.c0);
+    let mut got = Vec::with_capacity(probe);
+    let mut reference = Vec::with_capacity(probe);
+    for r in t.r0..r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        for j in t.c0..c1 {
+            let wcol = &wt[j * k..(j + 1) * k];
+            reference.push(crate::arith::column_dot(xrow, wcol, mode));
+            // SAFETY: (r, j) lies inside this task's disjoint tile, and the
+            // fastmath kernel has already written it.
+            got.push(unsafe { *out.add(r * n + j) });
+        }
+    }
+    let st = crate::arith::fastmath::compare_bf16(&got, &reference);
+    cell.record_fastmath(st.mean_rel);
 }
 
 /// Wide-kernel tile: the portable struct-of-arrays batched PE datapath.
@@ -553,7 +653,8 @@ mod tests {
     fn bf16_matches_column_dot_all_modes_shapes_and_kernels() {
         let mut rng = Prng::new(51);
         for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
-            let sched = TileScheduler { tile_m: 4, tile_n: 3, inline_only: false, kernel };
+            let sched =
+                TileScheduler { tile_m: 4, tile_n: 3, inline_only: false, kernel, fidelity: None };
             for (m, k, n) in [(1usize, 1usize, 1usize), (5, 33, 7), (13, 16, 13), (3, 64, 9)] {
                 let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
                 let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
@@ -677,8 +778,9 @@ mod tests {
         let wt = transpose_to_bf16(&w, k, n);
         let mode = NormMode::Approx(ApproxNorm::AN_1_2);
         for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
-            let par = TileScheduler { tile_m: 8, tile_n: 8, inline_only: false, kernel }
-                .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            let par =
+                TileScheduler { tile_m: 8, tile_n: 8, inline_only: false, kernel, fidelity: None }
+                    .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
             let inl = TileScheduler { inline_only: true, kernel, ..Default::default() }
                 .gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
             assert_eq!(par, inl, "kernel {kernel:?}");
@@ -696,7 +798,13 @@ mod tests {
         let mut last: Option<Vec<u16>> = None;
         for (tm, tn) in [(1, 1), (3, 5), (7, 4), (64, 64)] {
             for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
-                let sched = TileScheduler { tile_m: tm, tile_n: tn, inline_only: false, kernel };
+                let sched = TileScheduler {
+                    tile_m: tm,
+                    tile_n: tn,
+                    inline_only: false,
+                    kernel,
+                    fidelity: None,
+                };
                 let y = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
                 if let Some(prev) = &last {
                     assert_eq!(prev, &y, "tiling {tm}x{tn} kernel {kernel:?} changed bits");
@@ -748,6 +856,48 @@ mod tests {
         for y in results {
             assert_eq!(y, want);
         }
+    }
+
+    #[test]
+    fn fidelity_sampling_never_changes_bits_and_moves_counters() {
+        // A scheduler with a fidelity cell attached must produce the same
+        // output bits as one without (sampled tiles run the wide counting
+        // datapath, bit-identical by contract), while the cell's counters
+        // advance.  Enough tiles to guarantee at least one sample even if
+        // another test shares the interned cell's tick phase.
+        let _g = crate::obs::test_enabled_lock();
+        let mut rng = Prng::new(58);
+        let (m, k, n) = (48, 32, 48);
+        let x: Vec<u16> = (0..m * k).map(|_| rng.bf16_activation()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let wt = transpose_to_bf16(&w, k, n);
+        let mode = NormMode::Approx(ApproxNorm::AN_1_2);
+        for kernel in [GemmKernel::Scalar, GemmKernel::Wide, GemmKernel::Simd] {
+            let plain = TileScheduler { kernel, tile_m: 4, tile_n: 8, ..Default::default() };
+            let cell = crate::obs::fidelity_cell("sched-test", kernel.label());
+            let counted = plain.with_fidelity(cell);
+            let want = plain.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            let before = cell.snapshot();
+            // 12×6 = 72 tiles per GEMM > SAMPLE_EVERY: at least one sample.
+            let got = counted.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+            assert_eq!(got, want, "kernel {kernel:?}: telemetry changed output bits");
+            let after = cell.snapshot();
+            assert!(after.tiles >= before.tiles + 72, "every tile ticks");
+            assert!(after.sampled_steps > before.sampled_steps, "a sampled tile counted steps");
+        }
+        // Fastmath: sampled tiles record an error probe instead.
+        let cell = crate::obs::fidelity_cell("sched-test", "fastmath");
+        let sched = TileScheduler {
+            kernel: GemmKernel::FastMath,
+            tile_m: 4,
+            tile_n: 8,
+            ..Default::default()
+        }
+        .with_fidelity(cell);
+        let before = cell.snapshot();
+        let _ = sched.gemm_bf16(pool::global(), &x, &wt, m, k, n, mode);
+        let after = cell.snapshot();
+        assert!(after.fm_samples > before.fm_samples, "fastmath tile recorded an error sample");
     }
 
     #[test]

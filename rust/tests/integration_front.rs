@@ -274,6 +274,67 @@ fn drained_shard_restarts_on_its_port_and_is_readmitted() {
     }
 }
 
+/// A stats scrape against the front returns the merged observability
+/// snapshot: the front's own process counters plus every healthy shard's
+/// scraped snapshot.  (Shards and front share one test process — and thus
+/// one global collector — so each served request surfaces once locally and
+/// once per shard scrape; the assertion uses that multiplicity as proof
+/// the remote merge actually happened.)  Scrapes are control traffic: the
+/// front's per-backend counters must still balance with no extra submits.
+#[test]
+fn front_stats_scrape_merges_shard_snapshots() {
+    use amfma::obs::Stage;
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let s1 = boot_shard(mode);
+    let s2 = boot_shard(mode);
+    let (router, front) = boot_front(mode, &[&s1.addr, &s2.addr]);
+    let mut client = Client::connect(front.local_addr()).expect("connect front");
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Both shards must be admitted before the baseline, or the merge
+    // multiplicity changes between the two scrapes.
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            router.replicas().iter().all(|r| r.backend.is_healthy())
+        }),
+        "both shards must be probed healthy"
+    );
+    let base = client.stats().expect("baseline scrape").stages[Stage::Gemm.index()].count;
+
+    let n = 6u64;
+    for i in 0..n {
+        let toks = vec![(i as u16) % VOCAB as u16, 1, 2];
+        let r = client.call("sst2", LaneSelector::Any, &toks).expect("front call");
+        assert!(r.outcome.is_ok(), "{r:?}");
+    }
+
+    // Each request lands once in the shared collector, so the merged
+    // front view (local + 2 shard scrapes) must grow by at least 2n —
+    // strictly more than the n a merge-free front could report.  A retry
+    // loop absorbs a transiently failing shard scrape.
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            client
+                .stats()
+                .map(|s| s.stages[Stage::Gemm.index()].count >= base + 2 * n)
+                .unwrap_or(false)
+        }),
+        "front scrape must merge shard snapshots (want >= {} gemm samples)",
+        base + 2 * n
+    );
+
+    drop(client);
+    teardown_front(router, front);
+    let mut submitted = 0u64;
+    for shard in [s1, s2] {
+        shard.net.shutdown();
+        let m = shard.srv.shutdown().snapshot();
+        submitted += m.submitted;
+        assert!(m.balanced(), "{m:?}");
+    }
+    assert_eq!(submitted, n, "stats scrapes must not count as shard requests");
+}
+
 /// A rolling drain across both shards while the load generator hammers the
 /// front: every request is answered or typed-rejected — zero lost replies —
 /// and both the front's backends and the shards balance afterwards.

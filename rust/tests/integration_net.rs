@@ -2,9 +2,9 @@
 //! replies against the in-process path for every engine mode, pipelined
 //! multi-connection traffic with the answered-or-rejected contract and
 //! counter balance, lane selection over the wire, graceful drain via the
-//! shutdown frame, the v2 control frames (health probe, connection drain
-//! barrier), connection admission control, client read deadlines, and the
-//! load generator driving a live listener.
+//! shutdown frame, the control frames (health probe, connection drain
+//! barrier, observability stats scrape), connection admission control,
+//! client read deadlines, and the load generator driving a live listener.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -332,6 +332,51 @@ fn health_ping_echoes_over_the_wire() {
     net.shutdown();
     let m = srv.shutdown().snapshot();
     assert_eq!(m.submitted, 0, "pings must not count as requests: {m:?}");
+}
+
+/// The stats frame is answered inline by the connection reader with the
+/// process's merged observability snapshot: after N served requests the
+/// GEMM-stage histogram holds at least N more samples, the snapshot
+/// round-trips the wire codec, fidelity counters are present for the bf16
+/// site — and, like health pings, scrapes never touch request counters.
+#[test]
+fn stats_frame_serves_snapshot_without_touching_counters() {
+    use amfma::obs::Stage;
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let (srv, net) = boot(mode, ServerConfig::default());
+    let mut client = Client::connect(net.local_addr()).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // The obs collector is process-global: lib/integration tests share it,
+    // so all assertions are deltas against this baseline scrape.
+    let base = client.stats().expect("baseline scrape").stages[Stage::Gemm.index()].count;
+    let n = 5u64;
+    for i in 0..n {
+        let toks = vec![(i as u16) % VOCAB as u16, 1, 2];
+        let r = client.call("sst2", LaneSelector::Any, &toks).expect("served call");
+        assert!(r.outcome.is_ok(), "{r:?}");
+        assert!(
+            r.stages.iter().all(|&us| us < 60_000_000),
+            "sane per-stage micros on the reply: {:?}",
+            r.stages
+        );
+    }
+    let snap = client.stats().expect("post-traffic scrape");
+    let gemm = &snap.stages[Stage::Gemm.index()];
+    assert!(
+        gemm.count >= base + n,
+        "gemm stage histogram must hold the served requests: {} < {base}+{n}",
+        gemm.count
+    );
+    assert!(gemm.buckets.iter().sum::<u64>() > 0, "bucketed samples present");
+    assert!(
+        !snap.fidelity.is_empty(),
+        "bf16 traffic with obs enabled must surface fidelity counters"
+    );
+    drop(client);
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.submitted, n, "stats scrapes must not count as requests: {m:?}");
+    assert!(m.balanced(), "{m:?}");
 }
 
 /// The drain frame is a connection-level barrier: every request pipelined

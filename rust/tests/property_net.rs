@@ -20,7 +20,7 @@ fn random_lane(rng: &mut Prng) -> LaneSelector {
 }
 
 fn random_frame(rng: &mut Prng) -> Frame {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => {
             let task_len = rng.below(12) as usize;
             let task: String = (0..task_len)
@@ -28,7 +28,13 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 .collect();
             let n = rng.below(64) as usize;
             let tokens: Vec<u16> = (0..n).map(|_| rng.below(1 << 16) as u16).collect();
-            Frame::Request { id: rng.next_u64(), lane: random_lane(rng), task, tokens }
+            Frame::Request {
+                id: rng.next_u64(),
+                trace: rng.next_u64(),
+                lane: random_lane(rng),
+                task,
+                tokens,
+            }
         }
         1 => {
             let n = rng.below(16) as usize;
@@ -36,8 +42,14 @@ fn random_frame(rng: &mut Prng) -> Frame {
             Frame::ReplyOk {
                 id: rng.next_u64(),
                 server_latency: Duration::from_micros(rng.below(1 << 30)),
+                stages: std::array::from_fn(|_| rng.below(1 << 20) as u32),
                 logits,
             }
+        }
+        6 => {
+            let n = rng.below(48) as usize;
+            let body: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            Frame::Stats { id: rng.next_u64(), body }
         }
         2 => {
             let err = match rng.below(6) {
@@ -97,6 +109,7 @@ fn truncation_never_panics() {
 fn absurd_declared_lengths_are_rejected() {
     let f = Frame::Request {
         id: 5,
+        trace: 6,
         lane: LaneSelector::Any,
         task: "sst2".into(),
         tokens: vec![1, 2, 3],
@@ -109,7 +122,7 @@ fn absurd_declared_lengths_are_rejected() {
         assert!(decode(&bad).is_err(), "declared body {declared} must fail");
     }
     // Declared token count no longer matching the actual body bytes.
-    let n_off = HEADER_LEN + 8 + 1 + 1 + 4; // id + lane + task_len + "sst2"
+    let n_off = HEADER_LEN + 8 + 8 + 1 + 1 + 4; // id + trace + lane + task_len + "sst2"
     for declared in [0u32, 1, 4, 1000, 1 << 20, u32::MAX] {
         let mut bad = good.clone();
         bad[n_off..n_off + 4].copy_from_slice(&declared.to_le_bytes());
@@ -137,18 +150,26 @@ fn bad_header_fields_are_rejected() {
     }
 }
 
-/// The retired v1 protocol (no health/drain kinds) is rejected outright —
-/// there is no version negotiation — and so are kinds beyond the v2 table.
+/// The retired v1/v2 protocols (no trace/stage/stats extensions) are
+/// rejected outright — there is no version negotiation — and so are kinds
+/// beyond the v3 table.
 #[test]
 fn retired_version_and_unknown_kinds_are_rejected() {
     let mut bytes = encode(&Frame::Health { id: 3 });
     bytes[4] = 1;
     assert!(decode(&bytes).is_err(), "v1 header must be rejected");
+    let mut bytes = encode(&Frame::Health { id: 3 });
+    bytes[4] = 2;
+    assert!(decode(&bytes).is_err(), "v2 header must be rejected");
     let mut bytes = encode(&Frame::Drain { id: 4 });
-    bytes[5] = 6;
-    assert!(decode(&bytes).is_err(), "kind 6 is out of the v2 table");
-    // The v2 control frames themselves round-trip.
-    for f in [Frame::Health { id: u64::MAX }, Frame::Drain { id: 0 }] {
+    bytes[5] = 7;
+    assert!(decode(&bytes).is_err(), "kind 7 is out of the v3 table");
+    // The v3 control frames themselves round-trip.
+    for f in [
+        Frame::Health { id: u64::MAX },
+        Frame::Drain { id: 0 },
+        Frame::Stats { id: 1, body: vec![0xAB; 5] },
+    ] {
         let (back, used) = decode(&encode(&f)).expect("control frame round trip");
         assert_eq!(back, f);
         assert_eq!(used, encode(&f).len());
@@ -205,6 +226,7 @@ fn garbage_payload_with_valid_structure_parses() {
         let tokens: Vec<u16> = (0..8).map(|_| rng.next_u32() as u16).collect();
         let f = Frame::Request {
             id: rng.next_u64(),
+            trace: rng.next_u64(),
             lane: LaneSelector::Cheap,
             task: "x".into(),
             tokens: tokens.clone(),
@@ -219,6 +241,7 @@ fn garbage_payload_with_valid_structure_parses() {
         let rf = Frame::ReplyOk {
             id: 1,
             server_latency: Duration::ZERO,
+            stages: [1, 2, 3, 4],
             logits: weird.clone(),
         };
         let (back, _) = decode(&encode(&rf)).expect("weird floats are structurally fine");
