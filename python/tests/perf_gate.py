@@ -210,6 +210,23 @@ def test_speedups_and_recovery_pass():
     assert failures == []
 
 
+def test_decode_series_gate_median_and_tail():
+    # The decode bench reports time-per-generated-token results (tokens/s
+    # is the reciprocal throughput): a step-function regression in either
+    # the median or the p99 tail of a `decode/<mode>/generate` series
+    # fails the gate like any other quick series.
+    docs = [
+        _doc("decode", "decode/bf16an-1-2/generate", 100, p99_ns=130),
+        _doc("decode", "decode/bf16an-1-2/generate", 400, p99_ns=800),
+    ]
+    checked, failures = gate(docs, 0.4)
+    assert len(checked) == 2
+    assert sorted(f[0] for f in failures) == [
+        ("decode", "decode/bf16an-1-2/generate", "median_ns"),
+        ("decode", "decode/bf16an-1-2/generate", "p99_ns"),
+    ]
+
+
 def test_non_quick_entries_are_not_gated():
     docs = [_doc("hotpath", "gemm", 100, quick=False), _doc("hotpath", "gemm", 900, quick=False)]
     checked, failures = gate(docs, 0.4)

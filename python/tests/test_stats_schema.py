@@ -23,6 +23,8 @@ REPO = Path(__file__).resolve().parents[2]
 
 # Stage order mirrors rust/src/obs/mod.rs `Stage::ALL`.
 STAGES = ("enqueue_wait", "batch_form", "gemm", "reply_flush")
+# Decode-step stage order mirrors `DecodeStage::ALL`.
+DECODE_STAGES = ("join_wait", "step_gemm", "token_flush")
 HIST_BUCKETS = 32
 SHIFT_BINS = 17
 
@@ -35,6 +37,26 @@ _STAGE_FIELDS = (
     ("p95_us", (int, float)),
     ("p99_us", (int, float)),
     ("buckets", list),
+)
+
+# Decode stage histograms carry the same summary stats but no bucket
+# array in the JSON rendering (the buckets stay wire-internal).
+_DECODE_STAGE_FIELDS = (
+    ("count", int),
+    ("sum_us", int),
+    ("max_us", int),
+    ("mean_us", (int, float)),
+    ("p50_us", (int, float)),
+    ("p95_us", (int, float)),
+    ("p99_us", (int, float)),
+)
+
+_DIVERGENCE_FIELDS = (
+    ("mode", str),
+    ("depth_bin", int),
+    ("depth_lo", int),
+    ("samples", int),
+    ("mean_abs", (int, float)),
 )
 
 _FIDELITY_FIELDS = (
@@ -81,6 +103,40 @@ def validate_stats(doc):
         )
         if h["count"] == 0:
             assert h["sum_us"] == 0 and h["max_us"] == 0, f"empty stage {name!r} must be zeroed"
+    decode = doc.get("decode")
+    assert isinstance(decode, dict), "decode must be an object"
+    dstages = decode.get("stages")
+    assert isinstance(dstages, dict), "decode.stages must be an object"
+    assert set(dstages) == set(DECODE_STAGES), (
+        f"decode stage keys must be exactly {DECODE_STAGES}, got {sorted(dstages)}"
+    )
+    for name in DECODE_STAGES:
+        h = dstages[name]
+        assert isinstance(h, dict), f"decode stage {name!r} must be an object"
+        for key, typ in _DECODE_STAGE_FIELDS:
+            assert key in h, f"decode stage {name!r} missing {key!r}"
+            assert isinstance(h[key], typ), f"decode stage {name!r} field {key!r} has wrong type"
+        assert h["p50_us"] <= h["p95_us"] <= h["p99_us"], (
+            f"decode stage {name!r} quantiles out of order"
+        )
+        if h["count"] == 0:
+            assert h["sum_us"] == 0 and h["max_us"] == 0, (
+                f"empty decode stage {name!r} must be zeroed"
+            )
+    divergence = decode.get("divergence")
+    assert isinstance(divergence, list), "decode.divergence must be a list"
+    for d in divergence:
+        assert isinstance(d, dict), "divergence cells must be objects"
+        for key, typ in _DIVERGENCE_FIELDS:
+            assert key in d, f"divergence cell missing {key!r}"
+            assert isinstance(d[key], typ), f"divergence field {key!r} has wrong type"
+        assert d["mode"], "divergence mode must be non-empty"
+        assert 0 <= d["depth_bin"] < 32, "depth_bin is a log2 bucket index"
+        assert d["depth_lo"] == 2 ** d["depth_bin"], (
+            "depth_lo must be the bin's shallowest depth (2^depth_bin)"
+        )
+        assert d["samples"] > 0, "an emitted divergence cell has samples"
+        assert d["mean_abs"] >= 0, "mean_abs is a magnitude"
     fidelity = doc.get("fidelity")
     assert isinstance(fidelity, list), "fidelity must be a list"
     for f in fidelity:
@@ -114,9 +170,33 @@ def _stage(count=3, us=(100, 200, 400)):
     }
 
 
+def _decode_stage(count=2, us=(50, 150)):
+    return {
+        "count": count,
+        "sum_us": sum(us[:count]),
+        "max_us": max(us[:count]) if count else 0,
+        "mean_us": (sum(us[:count]) / count) if count else 0.0,
+        "p50_us": 60.0 if count else 0.0,
+        "p95_us": 140.0 if count else 0.0,
+        "p99_us": 150.0 if count else 0.0,
+    }
+
+
 SAMPLE = {
     "schema": "amfma-stats-v1",
     "stages": {name: _stage() for name in STAGES},
+    "decode": {
+        "stages": {name: _decode_stage() for name in DECODE_STAGES},
+        "divergence": [
+            {
+                "mode": "bf16an-1-2",
+                "depth_bin": 3,
+                "depth_lo": 8,
+                "samples": 4,
+                "mean_abs": 0.000125,
+            }
+        ],
+    },
     "fidelity": [
         {
             "site": "layer0.attn.q",
@@ -151,6 +231,10 @@ def test_validator_accepts_empty_snapshot():
     empty = {
         "schema": "amfma-stats-v1",
         "stages": {name: _stage(count=0, us=()) for name in STAGES},
+        "decode": {
+            "stages": {name: _decode_stage(count=0, us=()) for name in DECODE_STAGES},
+            "divergence": [],
+        },
         "fidelity": [],
     }
     for h in empty["stages"].values():
@@ -160,10 +244,26 @@ def test_validator_accepts_empty_snapshot():
 
 
 def test_validator_rejects_broken_documents():
-    for key in ("schema", "stages", "fidelity"):
+    for key in ("schema", "stages", "decode", "fidelity"):
         bad = dict(SAMPLE)
         bad.pop(key)
         _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["decode"]["stages"].pop("step_gemm")  # a decode stage vanished
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["decode"]["divergence"][0]["depth_lo"] = 9  # not 2^depth_bin
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["decode"]["divergence"][0]["samples"] = 0  # empty cells are elided
+    _must_fail(bad)
+
+    bad = json.loads(json.dumps(SAMPLE))
+    bad["decode"]["divergence"][0]["mean_abs"] = -1.0
+    _must_fail(bad)
 
     bad = json.loads(json.dumps(SAMPLE))
     bad["schema"] = "amfma-stats-v0"
@@ -238,8 +338,12 @@ if __name__ == "__main__":
         sys.exit("usage: test_stats_schema.py <stats.json>  (or set AMFMA_STATS_JSON)")
     doc = _validate_file(Path(target))
     gemm = doc["stages"]["gemm"]
+    step = doc["decode"]["stages"]["step_gemm"]
+    div = doc["decode"]["divergence"]
     print(
         f"ok: {target} is valid amfma-stats-v1 "
         f"(gemm count={gemm['count']} p99_us={gemm['p99_us']}, "
-        f"{len(doc['fidelity'])} fidelity sites)"
+        f"{len(doc['fidelity'])} fidelity sites, "
+        f"decode step_gemm count={step['count']}, "
+        f"divergence cells={len(div)} samples={sum(d['samples'] for d in div)})"
     )

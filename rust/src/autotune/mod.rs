@@ -28,9 +28,9 @@ pub mod report;
 pub mod search;
 
 pub use calibrate::{calibrate, CalibrationConfig, CalibrationOutcome, SiteDecision};
-pub use policy::{model_sites, PrecisionPolicy, Site, SiteKind};
+pub use policy::{decode_sites, model_sites, Phase, PrecisionPolicy, Site, SiteKind};
 pub use report::rel_err;
 pub use search::{
-    kernel_tier_accurate_lane_admissible, kernel_tier_pe_area, mode_pe_area, pareto_frontier,
-    policy_area_saving, site_macs, ParetoPoint,
+    decode_policy_weighted_area, kernel_tier_accurate_lane_admissible, kernel_tier_pe_area,
+    mode_pe_area, pareto_frontier, policy_area_saving, site_macs, ParetoPoint,
 };

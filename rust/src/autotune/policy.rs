@@ -15,16 +15,26 @@
 //! lets the calibrated mixed-mode path replace the global-mode path without
 //! a numeric cliff.
 //!
-//! Format `AMFP` v1, little-endian (mirroring the `AMFT` task format):
+//! Sites carry a [`Phase`]: the same GEMM kind prices and tunes
+//! differently in batched *prefill* (activations are `seq × d` panels)
+//! versus per-token autoregressive *decode* (single-row GEMMs against the
+//! KV cache), so a policy can, say, run prefill FFNs on `bf16an-2-2`
+//! while holding decode — where truncation error compounds over steps —
+//! on accurate bf16.  A decode site without an explicit assignment falls
+//! back to its prefill site's assignment, then to the default, so every
+//! pre-decode policy keeps its exact meaning.
+//!
+//! Format `AMFP` v2, little-endian (mirroring the `AMFT` task format):
 //! ```text
 //! magic  b"AMFP"
-//! u32    version (=1)
+//! u32    version (=2; v1 files — no decode phase — still load)
 //! u16    task_len,  task name (utf-8; empty = applies to any task)
 //! u16    mode_len,  default mode label (utf-8, e.g. "bf16an-1-2")
 //! u32    n_sites
 //! repeat n_sites:
 //!   u8   site kind (0=embed 1=qkv 2=attn.scores 3=attn.context
-//!                   4=attn.out 5=ffn1 6=ffn2 7=head)
+//!                   4=attn.out 5=ffn1 6=ffn2 7=head;
+//!                   bit 7 set = decode-phase site, v2 only)
 //!   u32  layer (0 for embed/head)
 //!   u16  mode_len,  mode label (utf-8)
 //! ```
@@ -89,43 +99,71 @@ impl SiteKind {
     }
 }
 
-/// One GEMM site: kind + encoder layer (0 for the layer-less kinds).
+/// Which serving phase a site belongs to.  Prefill sites see batched
+/// `seq × d` activation panels; decode sites run the same weight against a
+/// single query row and the KV cache, once per generated token — different
+/// MAC volumes, different error-compounding behavior, so they price and
+/// tune independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// Bit 7 of the on-disk site-kind byte marks a decode-phase site (v2+).
+const PHASE_DECODE_BIT: u8 = 0x80;
+
+/// One GEMM site: kind + encoder layer (0 for the layer-less kinds) +
+/// serving phase.  The constructors build prefill sites; chain
+/// [`Site::decode`] for the decode-phase variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Site {
     pub kind: SiteKind,
     pub layer: u32,
+    pub phase: Phase,
 }
 
 impl Site {
     pub const fn embed() -> Site {
-        Site { kind: SiteKind::Embed, layer: 0 }
+        Site { kind: SiteKind::Embed, layer: 0, phase: Phase::Prefill }
     }
     pub const fn qkv(layer: u32) -> Site {
-        Site { kind: SiteKind::Qkv, layer }
+        Site { kind: SiteKind::Qkv, layer, phase: Phase::Prefill }
     }
     pub const fn attn_scores(layer: u32) -> Site {
-        Site { kind: SiteKind::AttnScores, layer }
+        Site { kind: SiteKind::AttnScores, layer, phase: Phase::Prefill }
     }
     pub const fn attn_context(layer: u32) -> Site {
-        Site { kind: SiteKind::AttnContext, layer }
+        Site { kind: SiteKind::AttnContext, layer, phase: Phase::Prefill }
     }
     pub const fn attn_out(layer: u32) -> Site {
-        Site { kind: SiteKind::AttnOut, layer }
+        Site { kind: SiteKind::AttnOut, layer, phase: Phase::Prefill }
     }
     pub const fn ffn1(layer: u32) -> Site {
-        Site { kind: SiteKind::Ffn1, layer }
+        Site { kind: SiteKind::Ffn1, layer, phase: Phase::Prefill }
     }
     pub const fn ffn2(layer: u32) -> Site {
-        Site { kind: SiteKind::Ffn2, layer }
+        Site { kind: SiteKind::Ffn2, layer, phase: Phase::Prefill }
     }
     pub const fn head() -> Site {
-        Site { kind: SiteKind::Head, layer: 0 }
+        Site { kind: SiteKind::Head, layer: 0, phase: Phase::Prefill }
     }
 
-    /// Human-readable name, e.g. `layer0.attn.scores`, `head`.
+    /// The same site in the autoregressive decode phase.
+    pub const fn decode(self) -> Site {
+        Site { kind: self.kind, layer: self.layer, phase: Phase::Decode }
+    }
+
+    /// The prefill-phase counterpart (identity for prefill sites).
+    pub const fn prefill(self) -> Site {
+        Site { kind: self.kind, layer: self.layer, phase: Phase::Prefill }
+    }
+
+    /// Human-readable name, e.g. `layer0.attn.scores`, `head`,
+    /// `decode.layer0.qkv`.
     pub fn label(&self) -> String {
         let l = self.layer;
-        match self.kind {
+        let base = match self.kind {
             SiteKind::Embed => "embed".to_string(),
             SiteKind::Qkv => format!("layer{l}.qkv"),
             SiteKind::AttnScores => format!("layer{l}.attn.scores"),
@@ -134,6 +172,10 @@ impl Site {
             SiteKind::Ffn1 => format!("layer{l}.ffn1"),
             SiteKind::Ffn2 => format!("layer{l}.ffn2"),
             SiteKind::Head => "head".to_string(),
+        };
+        match self.phase {
+            Phase::Prefill => base,
+            Phase::Decode => format!("decode.{base}"),
         }
     }
 }
@@ -154,6 +196,13 @@ pub fn model_sites(n_layers: usize) -> Vec<Site> {
     out
 }
 
+/// Every tunable engine site of the autoregressive decode path, in
+/// forward order: the decode-phase twin of [`model_sites`] (the decode
+/// head is the weight-tied vocabulary projection, still one engine GEMM).
+pub fn decode_sites(n_layers: usize) -> Vec<Site> {
+    model_sites(n_layers).into_iter().map(Site::decode).collect()
+}
+
 /// A per-site engine-mode assignment with a default for unlisted sites.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrecisionPolicy {
@@ -165,7 +214,7 @@ pub struct PrecisionPolicy {
 }
 
 pub const POLICY_MAGIC: [u8; 4] = *b"AMFP";
-pub const POLICY_VERSION: u32 = 1;
+pub const POLICY_VERSION: u32 = 2;
 
 impl PrecisionPolicy {
     /// A uniform policy: every site runs `mode`.
@@ -178,9 +227,21 @@ impl PrecisionPolicy {
         self.overrides.insert(site, mode);
     }
 
-    /// Mode a site runs under this policy.
+    /// Mode a site runs under this policy.  A decode-phase site without
+    /// an explicit assignment inherits its prefill twin's assignment
+    /// before falling back to the default — so policies calibrated before
+    /// the decode path existed keep their exact meaning, and a decode
+    /// override is always a deliberate, phase-specific decision.
     pub fn mode_for(&self, site: Site) -> EngineMode {
-        self.overrides.get(&site).copied().unwrap_or(self.default_mode)
+        if let Some(m) = self.overrides.get(&site) {
+            return *m;
+        }
+        if site.phase == Phase::Decode {
+            if let Some(m) = self.overrides.get(&site.prefill()) {
+                return *m;
+            }
+        }
+        self.default_mode
     }
 
     /// True when every site (listed or not) runs the default mode — the
@@ -210,7 +271,7 @@ impl PrecisionPolicy {
         }
     }
 
-    /// Serialize in the `AMFP` v1 format.
+    /// Serialize in the `AMFP` v2 format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut b = Vec::new();
         b.extend_from_slice(&POLICY_MAGIC);
@@ -222,7 +283,11 @@ impl PrecisionPolicy {
         b.extend_from_slice(dm.as_bytes());
         b.extend_from_slice(&(self.overrides.len() as u32).to_le_bytes());
         for (site, mode) in &self.overrides {
-            b.push(site.kind.code());
+            let phase_bit = match site.phase {
+                Phase::Prefill => 0,
+                Phase::Decode => PHASE_DECODE_BIT,
+            };
+            b.push(site.kind.code() | phase_bit);
             b.extend_from_slice(&site.layer.to_le_bytes());
             let ml = mode.label();
             b.extend_from_slice(&(ml.len() as u16).to_le_bytes());
@@ -231,9 +296,10 @@ impl PrecisionPolicy {
         b
     }
 
-    /// Parse the `AMFP` v1 format.  Every malformed input — bad magic,
-    /// unknown version, truncation anywhere, undecodable labels, unknown
-    /// site kinds, duplicate sites — is an `Err`, never a panic.
+    /// Parse the `AMFP` format, v2 or the pre-decode v1 (whose sites are
+    /// all prefill-phase).  Every malformed input — bad magic, unknown
+    /// version, truncation anywhere, undecodable labels, unknown site
+    /// kinds, duplicate sites — is an `Err`, never a panic.
     pub fn from_bytes(b: &[u8]) -> Result<PrecisionPolicy> {
         let mut off = 0usize;
         let magic = take(b, &mut off, 4).context("policy magic")?;
@@ -241,7 +307,7 @@ impl PrecisionPolicy {
             bail!("bad policy magic {magic:?}");
         }
         let version = read_u32(b, &mut off).context("policy version")?;
-        if version != POLICY_VERSION {
+        if !(1..=POLICY_VERSION).contains(&version) {
             bail!("unsupported AMFP version {version}");
         }
         let task = read_str(b, &mut off).context("policy task name")?;
@@ -256,15 +322,23 @@ impl PrecisionPolicy {
         }
         let mut overrides = BTreeMap::new();
         for i in 0..n_sites {
-            let kind_code = take(b, &mut off, 1).with_context(|| format!("site {i} kind"))?[0];
+            let code = take(b, &mut off, 1).with_context(|| format!("site {i} kind"))?[0];
+            // v1 files predate the phase bit: every site is prefill, and a
+            // set high bit is an unknown kind, exactly as it always was.
+            let (kind_code, phase) = if version >= 2 && code & PHASE_DECODE_BIT != 0 {
+                (code & !PHASE_DECODE_BIT, Phase::Decode)
+            } else {
+                (code, Phase::Prefill)
+            };
             let kind = SiteKind::from_code(kind_code)
-                .with_context(|| format!("site {i}: unknown kind {kind_code}"))?;
+                .with_context(|| format!("site {i}: unknown kind {code}"))?;
             let layer = read_u32(b, &mut off).with_context(|| format!("site {i} layer"))?;
             let ml = read_str(b, &mut off).with_context(|| format!("site {i} mode"))?;
             let mode =
                 EngineMode::parse(&ml).with_context(|| format!("site {i}: bad mode {ml:?}"))?;
-            if overrides.insert(Site { kind, layer }, mode).is_some() {
-                bail!("duplicate site entry {}", Site { kind, layer }.label());
+            let site = Site { kind, layer, phase };
+            if overrides.insert(site, mode).is_some() {
+                bail!("duplicate site entry {}", site.label());
             }
         }
         if off != b.len() {
@@ -388,6 +462,67 @@ mod tests {
         let cnt_pos = huge.len() - 4;
         huge[cnt_pos..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(PrecisionPolicy::from_bytes(&huge).is_err());
+    }
+
+    #[test]
+    fn decode_sites_fall_back_to_prefill_then_default() {
+        let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16").unwrap());
+        p.set(Site::ffn1(0), EngineMode::parse("bf16an-2-2").unwrap());
+        // An unassigned decode site inherits its prefill twin...
+        assert_eq!(p.mode_for(Site::ffn1(0).decode()).label(), "bf16an-2-2");
+        // ...an unrelated decode site gets the default...
+        assert_eq!(p.mode_for(Site::qkv(1).decode()).label(), "bf16");
+        // ...and an explicit decode assignment wins over the twin without
+        // disturbing the prefill side.
+        p.set(Site::ffn1(0).decode(), EngineMode::Fp32);
+        assert_eq!(p.mode_for(Site::ffn1(0).decode()), EngineMode::Fp32);
+        assert_eq!(p.mode_for(Site::ffn1(0)).label(), "bf16an-2-2");
+    }
+
+    #[test]
+    fn decode_overrides_roundtrip_and_label() {
+        let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16").unwrap());
+        p.set(Site::qkv(0).decode(), EngineMode::parse("bf16an-1-1").unwrap());
+        p.set(Site::head().decode(), EngineMode::Fp32);
+        let q = PrecisionPolicy::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(Site::qkv(0).decode().label(), "decode.layer0.qkv");
+        assert_eq!(Site::head().decode().label(), "decode.head");
+        assert_eq!(Site::qkv(0).decode().prefill(), Site::qkv(0));
+        let s = decode_sites(2);
+        assert_eq!(s.len(), 13);
+        assert!(s.iter().all(|x| x.phase == Phase::Decode));
+        // Decode and prefill labels never collide.
+        let labels: std::collections::HashSet<String> =
+            model_sites(2).iter().chain(s.iter()).map(|x| x.label()).collect();
+        assert_eq!(labels.len(), 26);
+    }
+
+    #[test]
+    fn v1_policy_files_still_load_as_prefill_sites() {
+        // Hand-build the v1 encoding of {qkv(0): bf16an-2-2}, default bf16.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"AMFP");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u16.to_le_bytes()); // empty task name
+        let dm = b"bf16";
+        bytes.extend_from_slice(&(dm.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(dm);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(1); // qkv
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let ml = b"bf16an-2-2";
+        bytes.extend_from_slice(&(ml.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(ml);
+        let p = PrecisionPolicy::from_bytes(&bytes).unwrap();
+        assert_eq!(p.mode_for(Site::qkv(0)).label(), "bf16an-2-2");
+        assert_eq!(p.override_count(), 1);
+        assert!(p.assignments().all(|(s, _)| s.phase == Phase::Prefill));
+        // In a v1 file the (then-future) phase bit is an unknown kind.
+        let mut bad = bytes.clone();
+        let kind_pos = bad.len() - (1 + 4 + 2 + ml.len());
+        bad[kind_pos] |= 0x80;
+        assert!(PrecisionPolicy::from_bytes(&bad).is_err());
     }
 
     #[test]

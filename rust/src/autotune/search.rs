@@ -10,7 +10,7 @@ use crate::prng::Prng;
 use crate::systolic::{EngineMode, GemmKernel, MatrixEngine};
 use crate::{ApproxNorm, NormMode};
 
-use super::policy::{PrecisionPolicy, Site, SiteKind};
+use super::policy::{Phase, PrecisionPolicy, Site, SiteKind};
 use super::report::rel_err;
 
 /// Modeled PE area (gate equivalents) of one engine mode: the paper's
@@ -50,22 +50,41 @@ pub fn kernel_tier_accurate_lane_admissible(kernel: GemmKernel) -> bool {
     kernel != GemmKernel::FastMath
 }
 
-/// MAC volume of one GEMM site for a single sequence of `seq` live tokens
-/// — the weight a site's mode carries in the policy-level cost model.
+/// MAC volume of one GEMM site — the weight a site's mode carries in the
+/// policy-level cost model.  For a prefill-phase site, `seq` is the
+/// number of live tokens and the volume covers the whole sequence; for a
+/// decode-phase site, `seq` is the KV-cache depth the step attends over
+/// and the volume is **per generated token** (single-row GEMMs): the two
+/// phases price on entirely different curves — decode projections lose
+/// the `seq×` panel factor while attention stays linear in context depth,
+/// which is exactly why they tune independently.
 pub fn site_macs(cfg: &ModelConfig, seq: usize, site: Site) -> u64 {
     let d = cfg.d_model as u64;
     let ff = cfg.d_ff as u64;
     let s = seq as u64;
-    match site.kind {
-        SiteKind::Embed => 0, // FP32 table lookup, never on the engine
-        SiteKind::Qkv => 3 * s * d * d,
-        // heads × (seq × head_dim × seq) = seq² × d_model, for both the
-        // score and the context product.
-        SiteKind::AttnScores | SiteKind::AttnContext => s * s * d,
-        SiteKind::AttnOut => s * d * d,
-        SiteKind::Ffn1 => s * d * ff,
-        SiteKind::Ffn2 => s * ff * d,
-        SiteKind::Head => d * cfg.n_classes as u64,
+    match site.phase {
+        Phase::Prefill => match site.kind {
+            SiteKind::Embed => 0, // FP32 table lookup, never on the engine
+            SiteKind::Qkv => 3 * s * d * d,
+            // heads × (seq × head_dim × seq) = seq² × d_model, for both
+            // the score and the context product.
+            SiteKind::AttnScores | SiteKind::AttnContext => s * s * d,
+            SiteKind::AttnOut => s * d * d,
+            SiteKind::Ffn1 => s * d * ff,
+            SiteKind::Ffn2 => s * ff * d,
+            SiteKind::Head => d * cfg.n_classes as u64,
+        },
+        Phase::Decode => match site.kind {
+            SiteKind::Embed => 0,
+            SiteKind::Qkv => 3 * d * d,
+            // one query row against s cached keys/values: s × d_model.
+            SiteKind::AttnScores | SiteKind::AttnContext => s * d,
+            SiteKind::AttnOut => d * d,
+            SiteKind::Ffn1 => d * ff,
+            SiteKind::Ffn2 => ff * d,
+            // the decode head is the weight-tied vocabulary projection.
+            SiteKind::Head => d * cfg.vocab as u64,
+        },
     }
 }
 
@@ -76,6 +95,24 @@ pub fn policy_weighted_area(policy: &PrecisionPolicy, cfg: &ModelConfig, seq: us
     super::policy::model_sites(cfg.n_layers)
         .into_iter()
         .map(|site| site_macs(cfg, seq, site) as f64 * mode_pe_area(policy.mode_for(site)))
+        .sum()
+}
+
+/// MAC-weighted PE area of one **generated token** under a policy's
+/// decode-phase assignments, at KV-cache depth `context_len` — the
+/// decode-side counterpart of [`policy_weighted_area`], which prices the
+/// batched prefill.  `amfma tune` reports both so the two phases' savings
+/// can be traded off independently.
+pub fn decode_policy_weighted_area(
+    policy: &PrecisionPolicy,
+    cfg: &ModelConfig,
+    context_len: usize,
+) -> f64 {
+    super::policy::decode_sites(cfg.n_layers)
+        .into_iter()
+        .map(|site| {
+            site_macs(cfg, context_len, site) as f64 * mode_pe_area(policy.mode_for(site))
+        })
         .sum()
 }
 
@@ -246,6 +283,31 @@ mod tests {
         assert_eq!(site_macs(&cfg, seq, Site::ffn1(0)), 8 * 16 * 32);
         assert_eq!(site_macs(&cfg, seq, Site::head()), 16 * 2);
         assert_eq!(site_macs(&cfg, seq, Site::embed()), 0);
+    }
+
+    #[test]
+    fn decode_site_macs_price_per_token() {
+        let cfg = tiny_cfg();
+        let depth = 6; // KV-cache depth the step attends over
+        // Projections lose the seq× panel factor...
+        assert_eq!(site_macs(&cfg, depth, Site::qkv(0).decode()), 3 * 16 * 16);
+        assert_eq!(site_macs(&cfg, depth, Site::attn_out(0).decode()), 16 * 16);
+        assert_eq!(site_macs(&cfg, depth, Site::ffn1(0).decode()), 16 * 32);
+        // ...attention stays linear in context depth...
+        assert_eq!(site_macs(&cfg, depth, Site::attn_scores(0).decode()), 6 * 16);
+        assert_eq!(site_macs(&cfg, depth, Site::attn_context(0).decode()), 6 * 16);
+        // ...and the decode head is the weight-tied vocab projection.
+        assert_eq!(site_macs(&cfg, depth, Site::head().decode()), 16 * 32);
+        assert_eq!(site_macs(&cfg, depth, Site::embed().decode()), 0);
+
+        // Per-token decode area responds to decode-phase assignments only.
+        let bf16 = EngineMode::Bf16(NormMode::Accurate);
+        let base = decode_policy_weighted_area(&PrecisionPolicy::uniform(bf16), &cfg, depth);
+        assert!(base > 0.0);
+        let mut p = PrecisionPolicy::uniform(bf16);
+        p.set(Site::ffn1(0).decode(), EngineMode::parse("bf16an-1-2").unwrap());
+        assert!(decode_policy_weighted_area(&p, &cfg, depth) < base);
+        assert_eq!(policy_weighted_area(&p, &cfg, 8), policy_weighted_area(&PrecisionPolicy::uniform(bf16), &cfg, 8));
     }
 
     #[test]

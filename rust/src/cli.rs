@@ -67,13 +67,20 @@ USAGE:
               scalar/wide/simd bit-exactness + fastmath distribution
               contracts, then per-kernel-tier timing; --json persists
               BENCH_hotpath.json + trajectory line
+  amfma bench --decode [--steps N] [--json]                     decode bench:
+              sweeps the (k,lambda) grid measuring logit divergence vs
+              an FP32 teacher as a function of decode depth, plus
+              KV-cached tokens/s per mode; --json persists
+              BENCH_decode.json + trajectory line
   amfma tune  [--task sst2] [--budget 1.0] [--limit N] [--batch N]
               [--candidates m1,m2] [--tune-head] [--out FILE]   calibrate a
               per-site precision policy within an accuracy budget
   amfma serve [--mode bf16an-1-2] [--policy FILE] [--requests N]
               [--concurrency C] [--varlen] [--length-bucket W]
-              [--fastmath]                                      batching server
+              [--fastmath] [--decode-shadow]                    batching server
               (--fastmath serves the native fast-math tier, cheap lane only;
+              --decode-shadow runs an FP32 shadow decode per generation and
+              feeds the divergence-vs-depth counters in `amfma stat`;
               AMFMA_KERNEL=scalar|wide|simd|fastmath picks the default kernel)
   amfma serve --listen 127.0.0.1:0 [--port-file F] ...          TCP frontend:
               serves AMFN frames until a client sends a shutdown frame
@@ -86,9 +93,11 @@ USAGE:
               load-aware selection, health ejection and graceful drain
   amfma loadgen --addr HOST:PORT [--connections 4] [--requests N]
               [--pipeline 4] [--lane any|cheap|accurate] [--varlen]
-              [--connect-timeout-ms 5000] [--bench-target serving]
-              [--quick] [--json] [--shutdown]                   closed-loop TCP
-              load generator; --json writes BENCH_<target>.json + trajectory
+              [--decode-steps N] [--connect-timeout-ms 5000]
+              [--bench-target serving] [--quick] [--json] [--shutdown]
+              closed-loop TCP load generator; --decode-steps N streams
+              N-token decode requests and verifies every stream;
+              --json writes BENCH_<target>.json + trajectory
   amfma stat  --addr HOST:PORT [--prom]                         one observability
               scrape of a live serve/front: stage-latency histograms +
               numeric-fidelity counters, fleet-merged, as JSON
@@ -236,6 +245,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use crate::systolic::{GemmKernel, TileScheduler};
     use std::time::Duration;
 
+    if args.has_flag("decode") {
+        return cmd_bench_decode(args);
+    }
     let m = args.get_usize("m", 128);
     let k = args.get_usize("k", 256);
     let n = args.get_usize("n", 128);
@@ -352,6 +364,158 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `amfma bench --decode`: the autoregressive decode benchmark the source
+/// paper doesn't have.  An FP32 teacher generates a greedy stream with the
+/// KV-cached incremental path, then every approximate mode on the
+/// (k, lambda) grid replays the *same* stream teacher-forced, recording
+/// the mean absolute logit divergence at power-of-two decode depths — the
+/// "does approximate normalization survive generation?" curve.  Each mode
+/// is then timed generating the stream end to end (prefill + incremental
+/// steps), reported as tokens/s.  `--json` persists `BENCH_decode.json`
+/// plus the trajectory line the CI perf gate consumes.
+fn cmd_bench_decode(args: &Args) -> Result<()> {
+    use crate::bench_harness::json::BenchReport;
+    use crate::bench_harness::{bench, section};
+    use crate::model::{greedy_argmax, Encoder, KvCache, ModelConfig, TiedHead};
+    use std::time::Duration;
+
+    // Real sst2 artifacts when present (trained weights make the
+    // divergence curve meaningful); a deterministic random model
+    // otherwise, so the bench — and the CI gate keyed on it — run before
+    // `make artifacts`.
+    let (weights, mut prompt) = match (
+        crate::data::tasks::load_task("sst2"),
+        Weights::load(&model::eval::weights_path("sst2")),
+    ) {
+        (Ok(t), Ok(w)) => {
+            let prompt = t.dev_example(0).to_vec();
+            println!("decode bench on trained sst2 weights");
+            (w, prompt)
+        }
+        _ => {
+            let cfg = ModelConfig {
+                vocab: 64,
+                d_model: 32,
+                n_heads: 4,
+                d_ff: 64,
+                n_layers: 2,
+                max_seq: 96,
+                n_classes: 2,
+            };
+            let mut rng = crate::prng::Prng::new(1234);
+            let prompt = (0..8).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+            println!("decode bench on a deterministic random model (no artifacts found)");
+            (Weights::random(cfg, 1234), prompt)
+        }
+    };
+    let max_seq = weights.config.max_seq;
+    // A short prompt leaves the sequence budget to the generated suffix —
+    // the regime where cache-depth effects show.
+    prompt.truncate(8.min(max_seq.saturating_sub(1)).max(1));
+    let room = max_seq - prompt.len() + 1;
+    let steps = args.get_usize("steps", 32.min(room)).min(room).max(1);
+    println!(
+        "prompt {} tokens, {} decode steps (max_seq {}), modes: fp32 teacher + (k,lambda) grid\n",
+        prompt.len(),
+        steps,
+        max_seq
+    );
+
+    let head = TiedHead::new(&weights);
+    // FP32 teacher: greedy stream + per-step logits, via the same
+    // KV-cached incremental path the students use.
+    let fp32 = Encoder::new(&weights, MatrixEngine::new(EngineMode::Fp32));
+    let mut teacher_logits: Vec<Vec<f32>> = Vec::with_capacity(steps);
+    let mut stream: Vec<u16> = Vec::with_capacity(steps);
+    {
+        let mut cache = KvCache::new(&weights.config);
+        let mut h = fp32.prefill(&prompt, &mut cache);
+        for i in 0..steps {
+            let logits = fp32.decode_logits(&head, &h);
+            let tok = greedy_argmax(&logits);
+            teacher_logits.push(logits);
+            stream.push(tok);
+            // The last token needs no successor position (the cache holds
+            // exactly `prompt + steps - 1` rows, the occupancy the server
+            // admits against).
+            if i + 1 < steps {
+                h = fp32.forward_step(tok, &mut cache);
+            }
+        }
+    }
+
+    let mut report = BenchReport::new("decode");
+    report.push_metric("steps", steps as f64, "tokens");
+    report.push_metric("prompt_len", prompt.len() as f64, "tokens");
+    print!("{}", section("logit divergence vs FP32 (teacher-forced)"));
+    let grid = ["bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-1", "bf16an-2-2"];
+    for label in grid {
+        let engine_mode = EngineMode::parse(label).context("grid mode")?;
+        let enc = Encoder::new(&weights, MatrixEngine::new(engine_mode));
+        let mut cache = KvCache::new(&weights.config);
+        let mut h = enc.prefill(&prompt, &mut cache);
+        let mut line = format!("{label:<12}");
+        for (i, teacher) in teacher_logits.iter().enumerate() {
+            let logits = enc.decode_logits(&head, &h);
+            let n = logits.len().min(teacher.len()).max(1);
+            let mean = logits
+                .iter()
+                .zip(teacher.iter())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / n as f64;
+            let depth = i + 1;
+            // Power-of-two depths plus the final step: the decode-depth
+            // axis of the divergence curve.
+            if depth.is_power_of_two() || depth == steps {
+                report.push_metric(
+                    &format!("divergence/{label}/depth_{depth}"),
+                    mean,
+                    "mean_abs_logit",
+                );
+                line.push_str(&format!("  d{depth}={mean:.3e}"));
+            }
+            // Teacher-forced: feed the FP32 stream, not our own argmax.
+            if i + 1 < steps {
+                h = enc.forward_step(stream[i], &mut cache);
+            }
+        }
+        println!("{line}");
+    }
+
+    print!("{}", section("KV-cached greedy generation (self-fed)"));
+    for label in ["fp32", "bf16", "bf16an-1-1", "bf16an-1-2", "bf16an-2-1", "bf16an-2-2"] {
+        let engine_mode = EngineMode::parse(label).context("grid mode")?;
+        let enc = Encoder::new(&weights, MatrixEngine::new(engine_mode));
+        let r = bench(
+            &format!("decode/{label}/generate"),
+            1,
+            3,
+            Duration::from_millis(300),
+            || {
+                let mut cache = KvCache::new(&weights.config);
+                let mut h = enc.prefill(&prompt, &mut cache);
+                for i in 0..steps {
+                    let logits = enc.decode_logits(&head, &h);
+                    let tok = std::hint::black_box(greedy_argmax(&logits));
+                    if i + 1 < steps {
+                        h = enc.forward_step(tok, &mut cache);
+                    }
+                }
+            },
+        )
+        .with_ops(steps as f64, "tok/s");
+        println!("{}", r.render());
+        report.push(&r);
+    }
+
+    if args.has_flag("json") {
+        let p = report.write().context("write bench JSON")?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
 /// `amfma tune`: calibrate a per-site precision policy for one task within
 /// an accuracy budget and write it as an `AMFP` file (see
 /// [`crate::autotune`]).  Exits non-zero when even the accurate fallback
@@ -381,6 +545,25 @@ fn cmd_tune(args: &Args) -> Result<()> {
     );
     let outcome = autotune::calibrate(&task, &weights, &cfg)?;
     println!("{}", autotune::report::render_calibration(&outcome));
+    // Decode sites are priced separately from prefill sites (a decode
+    // step is a seq=1 GEMM against a growing cached context), so a policy
+    // calibrated on classification also quotes what one generation step
+    // would cost under it.
+    let mcfg = &weights.config;
+    let ctx = task.seq_len.min(mcfg.max_seq).max(1);
+    let dec = autotune::decode_policy_weighted_area(&outcome.policy, mcfg, ctx);
+    let base = autotune::decode_policy_weighted_area(
+        &PrecisionPolicy::uniform(EngineMode::Bf16(crate::NormMode::Accurate)),
+        mcfg,
+        ctx,
+    );
+    if base > 0.0 {
+        println!(
+            "decode-step weighted PE area at context {ctx}: {dec:.3e} vs accurate bf16 \
+             {base:.3e} ({:.1}% saving)",
+            100.0 * (1.0 - dec / base)
+        );
+    }
 
     let path = match args.get("out") {
         Some(p) => std::path::PathBuf::from(p),
@@ -424,6 +607,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --varlen: truncate each example to a random live length, exercising
     // the masked/padded batching path.
     let varlen = args.has_flag("varlen");
+    // --decode-shadow: run an FP32 shadow decode alongside every served
+    // generation, teacher-forced on the served tokens, feeding the
+    // divergence-vs-depth counters `amfma stat` exposes.
+    let decode_shadow = args.has_flag("decode-shadow");
     // --fastmath: serve on the native fast-math tier.  Its results are
     // distributionally, not bitwise, faithful to the emulated PE, so the
     // listen path below only ever advertises it in the cheap lane.
@@ -479,7 +666,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // of them sends a shutdown frame (`amfma loadgen --shutdown`).
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
-        return serve_listen(args, &listen, mode, models, policies, max_batch, length_bucket, kernel);
+        return serve_listen(
+            args, &listen, mode, models, policies, max_batch, length_bucket, kernel, decode_shadow,
+        );
     }
     println!(
         "serving {} tasks with mode {} ({} requests, concurrency {})",
@@ -490,7 +679,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, length_bucket, policies, kernel, ..Default::default() },
+        ServerConfig {
+            mode,
+            max_batch,
+            length_bucket,
+            policies,
+            kernel,
+            decode_shadow,
+            ..Default::default()
+        },
     );
     let handle = srv.handle();
     let t0 = std::time::Instant::now();
@@ -539,6 +736,7 @@ fn serve_listen(
     max_batch: usize,
     length_bucket: usize,
     kernel: crate::systolic::GemmKernel,
+    decode_shadow: bool,
 ) -> Result<()> {
     use crate::coordinator::net::{NetServer, NetServerConfig};
     use crate::coordinator::{InferenceServer, Lane, ReplicaSpec, Router, ServerConfig};
@@ -549,7 +747,15 @@ fn serve_listen(
     let fastmath = kernel == GemmKernel::FastMath;
     let srv = InferenceServer::start(
         models,
-        ServerConfig { mode, max_batch, length_bucket, policies, kernel, ..Default::default() },
+        ServerConfig {
+            mode,
+            max_batch,
+            length_bucket,
+            policies,
+            kernel,
+            decode_shadow,
+            ..Default::default()
+        },
     );
     let mut spec = ReplicaSpec::new(mode);
     if has_policy || fastmath {
@@ -717,6 +923,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             args.get_usize("connect-timeout-ms", 5000) as u64,
         ),
         bench_target: args.get("bench-target").unwrap_or("serving").to_string(),
+        decode_steps: args.get_usize("decode-steps", 0),
         ..Default::default()
     };
     let pool = load_request_pool(args.get_usize("pool", 32))?;
@@ -738,6 +945,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         outcome.rejected,
         outcome.busy_retries
     );
+    if cfg.decode_steps > 0 {
+        println!(
+            "decode: {} streamed tokens ({:.1} tok/s), every stream in order and complete",
+            outcome.decode_tokens,
+            outcome.decode_tokens as f64 / outcome.wall.as_secs_f64().max(1e-9)
+        );
+    }
     if outcome.completed + outcome.rejected != cfg.requests as u64 {
         bail!(
             "lost replies: answered {} of {} requests",

@@ -31,7 +31,7 @@ use crate::obs::{ObsSnapshot, StageTimings};
 use super::metrics::Metrics;
 use super::net::frame::{self, Frame, FrameBuffer, LaneSelector, WireError};
 use super::net::Client;
-use super::server::{Reply, ReplySink, RequestError, ServerHandle, SubmitError};
+use super::server::{Reply, ReplyEvent, ReplySink, RequestError, ServerHandle, SubmitError};
 
 /// What the router needs from a replica's compute, local or remote.
 ///
@@ -64,6 +64,23 @@ pub trait Backend: Send + Sync {
     ) -> Result<(), SubmitError> {
         let _ = trace;
         self.submit_sink(task, tokens, reply)
+    }
+
+    /// Submit a streaming decode request: `steps >= 1` generated tokens
+    /// stream through the sink as [`super::server::ReplyEvent::Token`]s
+    /// ahead of the terminal reply.  The default refuses with `Closed` —
+    /// a backend that predates decode fails over cleanly at the router
+    /// instead of silently serving the prompt as a classify request.
+    fn submit_decode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        let _ = (task, tokens, steps, trace, reply);
+        Err(SubmitError::Closed)
     }
 
     /// This backend's observability snapshot (stage histograms + fidelity
@@ -114,6 +131,17 @@ impl Backend for ServerHandle {
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
         ServerHandle::submit_sink_traced(self, task, tokens, trace, reply)
+    }
+
+    fn submit_decode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        ServerHandle::submit_decode_sink_traced(self, task, tokens, steps, trace, reply)
     }
 
     fn metrics(&self) -> &Arc<Metrics> {
@@ -243,6 +271,7 @@ impl RemoteBackend {
         &self,
         task: &str,
         tokens: Vec<u16>,
+        steps: u32,
         trace: u64,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
@@ -267,6 +296,7 @@ impl RemoteBackend {
             lane: LaneSelector::Any,
             task: task.to_string(),
             tokens,
+            steps,
         });
         let born = Instant::now();
         let slot_idx = sh.rr.fetch_add(1, Ordering::Relaxed) % sh.slots.len();
@@ -350,7 +380,7 @@ impl Backend for RemoteBackend {
         tokens: Vec<u16>,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
-        self.submit_traced(task, tokens, 0, reply)
+        self.submit_traced(task, tokens, 0, 0, reply)
     }
 
     fn submit_sink_traced(
@@ -360,7 +390,23 @@ impl Backend for RemoteBackend {
         trace: u64,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
-        self.submit_traced(task, tokens, trace, reply)
+        self.submit_traced(task, tokens, 0, trace, reply)
+    }
+
+    /// Forward a streaming decode to the shard: the request frame carries
+    /// the step count, and the shard's [`Frame::Stream`] frames are
+    /// relayed through the sink by this backend's reader threads (each
+    /// token also refreshes the request's deadline, so a long generation
+    /// that is visibly making progress never times out between tokens).
+    fn submit_decode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        self.submit_traced(task, tokens, steps.max(1), trace, reply)
     }
 
     /// Scrape the shard's observability snapshot over a fresh short-lived
@@ -589,6 +635,20 @@ fn reader_loop(sh: Arc<Shared>, stream: TcpStream, conn_id: u64) {
                 Frame::ReplyErr { id, err } => {
                     if let Some(p) = sh.pending.lock().unwrap().remove(&id) {
                         deliver(&sh, p.sink, Err(request_error_of(err)), None);
+                    }
+                }
+                // Streamed decode token: relay to the sink *without*
+                // resolving the pending entry — the terminal reply does
+                // that.  Each token refreshes the deadline: a generation
+                // visibly making progress must not expire mid-stream.
+                Frame::Stream { id, step, token, last } => {
+                    let mut pending = sh.pending.lock().unwrap();
+                    if let Some(p) = pending.get_mut(&id) {
+                        p.deadline = Instant::now() + sh.cfg.request_timeout;
+                        // A failed relay means the front's client is gone;
+                        // the terminal reply's failed send does the
+                        // dropped-reply accounting.
+                        let _ = p.sink.send_event(ReplyEvent::Token { step, token, last });
                     }
                 }
                 // Drain echo: the shard flushed everything for this

@@ -37,6 +37,14 @@ pub struct Metrics {
     /// Subset of `errored`: the request was forwarded to a remote shard
     /// that did not answer within the configured deadline.
     pub timeouts: AtomicU64,
+    /// Times a worker recovered a poisoned batch-queue mutex (a sibling
+    /// worker panicked mid-batch).  The channel state itself is always
+    /// consistent — the lock only guards `recv` — so recovery is safe;
+    /// the counter makes the underlying panic visible.
+    pub lock_recoveries: AtomicU64,
+    /// Tokens *generated* by the decode path (distinct from the prefill
+    /// token volume tracked via `record_shape`/`mode_tokens`).
+    pub decode_tokens: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     /// Padded-shape accounting for variable-length batches: tokens the
@@ -117,6 +125,16 @@ impl Metrics {
         self.dropped_replies.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one poisoned-mutex recovery on the batch queue.
+    pub fn record_lock_recovery(&self) {
+        self.lock_recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` tokens generated by the autoregressive decode path.
+    pub fn record_decode_tokens(&self, n: u64) {
+        self.decode_tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Record the shape of one padded batch: `seqs` sequences padded to
     /// `padded_len` tokens each, of which `useful` tokens were live.
     pub fn record_shape(&self, seqs: usize, padded_len: usize, useful: usize) {
@@ -168,6 +186,8 @@ impl Metrics {
             errored: self.errored.load(Ordering::Relaxed),
             dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
             timeouts: self.timeouts.load(Ordering::Relaxed),
+            lock_recoveries: self.lock_recoveries.load(Ordering::Relaxed),
+            decode_tokens: self.decode_tokens.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
             padding_efficiency: self.padding_efficiency(),
@@ -194,6 +214,8 @@ pub struct MetricsSnapshot {
     pub errored: u64,
     pub dropped_replies: u64,
     pub timeouts: u64,
+    pub lock_recoveries: u64,
+    pub decode_tokens: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub padding_efficiency: f64,
@@ -215,8 +237,9 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests: submitted={} completed={} rejected={} errored={} (dropped_replies={}) \
-             timeouts={}\n\
+             timeouts={} lock_recoveries={}\n\
              batching: {} batches, mean size {:.2}, padding efficiency {:.1}%\n\
+             decode:   {} generated tokens\n\
              latency:  p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.submitted,
             self.completed,
@@ -224,9 +247,11 @@ impl MetricsSnapshot {
             self.errored,
             self.dropped_replies,
             self.timeouts,
+            self.lock_recoveries,
             self.batches,
             self.mean_batch,
             100.0 * self.padding_efficiency,
+            self.decode_tokens,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
@@ -322,6 +347,22 @@ mod tests {
     }
 
     #[test]
+    fn lock_recovery_and_decode_token_accounting() {
+        let m = Metrics::default();
+        m.record_lock_recovery();
+        m.record_decode_tokens(37);
+        m.record_decode_tokens(5);
+        let s = m.snapshot();
+        assert_eq!(s.lock_recoveries, 1);
+        assert_eq!(s.decode_tokens, 42);
+        let r = s.render();
+        assert!(r.contains("lock_recoveries=1"), "{r}");
+        assert!(r.contains("42 generated tokens"), "{r}");
+        // Neither counter participates in the balance invariant.
+        assert!(s.balanced());
+    }
+
+    #[test]
     fn disjoint_buckets_balance() {
         let m = Metrics::default();
         m.submitted.fetch_add(4, Ordering::Relaxed);
@@ -402,6 +443,8 @@ mod tests {
             errored: 109,
             dropped_replies: 113,
             timeouts: 127,
+            lock_recoveries: 179,
+            decode_tokens: 181,
             batches: 131,
             mean_batch: 137.25,
             padding_efficiency: 0.139,
@@ -419,6 +462,8 @@ mod tests {
             "errored=109",
             "(dropped_replies=113)",
             "timeouts=127",
+            "lock_recoveries=179",
+            "181 generated tokens",
             "131 batches",
             "mean size 137.25",
             "padding efficiency 13.9%",

@@ -42,6 +42,6 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use net::{NetServer, NetServerConfig};
 pub use router::{Lane, Replica, ReplicaSpec, RouteError, Router};
 pub use server::{
-    InferenceServer, Reply, ReplyResult, ReplySink, Request, RequestError, ServerConfig,
-    ServerHandle, SubmitError,
+    InferenceServer, Reply, ReplyEvent, ReplyResult, ReplySink, Request, RequestError,
+    ServerConfig, ServerHandle, SubmitError,
 };

@@ -26,6 +26,18 @@ pub struct NetReply {
     pub stages: [u32; 4],
 }
 
+/// One event off a connection carrying decode traffic: a streamed token
+/// of some in-flight generation, or a terminal reply.  Streams of
+/// pipelined requests interleave freely — match events up by `id`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetEvent {
+    /// One generated token of the decode request `id`; `step` counts from
+    /// 0 and `last` marks the final token before the terminal reply.
+    Token { id: u64, step: u32, token: u16, last: bool },
+    /// The terminal reply (for decode requests: after the last token).
+    Reply(NetReply),
+}
+
 /// Client-side failures (transport or protocol — typed *server*
 /// rejections arrive inside [`NetReply::outcome`] instead).
 #[derive(Debug)]
@@ -112,19 +124,63 @@ impl Client {
 
     /// Send one request frame without waiting for the reply (pipelining).
     /// Returns the request id the eventual reply will carry.  Task names
-    /// longer than the wire format's u8 length field are rejected here —
-    /// silently truncating could split a UTF-8 character and make the
-    /// server drop the connection as corrupt.
+    /// longer than the wire format's u8 length field and token sequences
+    /// past the frame cap are rejected here with typed errors — the
+    /// encoder would otherwise silently clamp them, and a silently
+    /// truncated request would be served (and answered!) as a different,
+    /// shorter sequence than the caller submitted.
     pub fn send_request(
         &mut self,
         task: &str,
         lane: LaneSelector,
         tokens: &[u16],
     ) -> std::io::Result<u64> {
+        self.send_with_steps(task, lane, tokens, 0)
+    }
+
+    /// Send one streaming decode request (pipelining): the server prefills
+    /// `tokens` and generates `steps` tokens, each arriving as a
+    /// [`NetEvent::Token`] before the closing reply.  Validation mirrors
+    /// [`Client::send_request`], plus the step count must be `1..=65536`
+    /// (the wire cap) — the encoder clamps silently, and a clamped step
+    /// count would stream a shorter generation than the caller asked for.
+    pub fn send_decode(
+        &mut self,
+        task: &str,
+        lane: LaneSelector,
+        tokens: &[u16],
+        steps: u32,
+    ) -> std::io::Result<u64> {
+        if steps == 0 || steps as usize > frame::MAX_TOKENS {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("decode step count {steps} outside the wire range 1..={}", frame::MAX_TOKENS),
+            ));
+        }
+        self.send_with_steps(task, lane, tokens, steps)
+    }
+
+    fn send_with_steps(
+        &mut self,
+        task: &str,
+        lane: LaneSelector,
+        tokens: &[u16],
+        steps: u32,
+    ) -> std::io::Result<u64> {
         if task.len() > u8::MAX as usize {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidInput,
                 format!("task name {} bytes long exceeds the wire cap of 255", task.len()),
+            ));
+        }
+        if tokens.len() > frame::MAX_TOKENS {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(
+                    "{} tokens exceed the wire cap of {} per request",
+                    tokens.len(),
+                    frame::MAX_TOKENS
+                ),
             ));
         }
         let id = self.next_id;
@@ -135,6 +191,7 @@ impl Client {
             lane,
             task: task.to_string(),
             tokens: tokens.to_vec(),
+            steps,
         };
         self.stream.write_all(&frame::encode(&f))?;
         self.stream.flush()?;
@@ -171,16 +228,32 @@ impl Client {
     }
 
     /// Block until the next reply frame arrives (or the read deadline
-    /// expires — see [`Client::set_read_timeout`]).
+    /// expires — see [`Client::set_read_timeout`]).  Only for connections
+    /// carrying classify traffic: a streamed token here means the caller
+    /// mixed decode requests in and should be using
+    /// [`Client::recv_event`], so it surfaces as a protocol error.
     pub fn recv_reply(&mut self) -> Result<NetReply, NetError> {
+        match self.recv_event()? {
+            NetEvent::Reply(r) => Ok(r),
+            NetEvent::Token { .. } => Err(NetError::UnexpectedFrame),
+        }
+    }
+
+    /// Block until the next event — a streamed decode token or a terminal
+    /// reply — arrives on this connection.  Pipelined decode callers match
+    /// tokens and replies up by `id`.
+    pub fn recv_event(&mut self) -> Result<NetEvent, NetError> {
         loop {
             if let Some(frame) = self.fb.next_frame()? {
                 return match frame {
-                    Frame::ReplyOk { id, server_latency, stages, logits } => {
-                        Ok(NetReply { id, outcome: Ok((logits, server_latency)), stages })
-                    }
+                    Frame::ReplyOk { id, server_latency, stages, logits } => Ok(NetEvent::Reply(
+                        NetReply { id, outcome: Ok((logits, server_latency)), stages },
+                    )),
                     Frame::ReplyErr { id, err } => {
-                        Ok(NetReply { id, outcome: Err(err), stages: [0; 4] })
+                        Ok(NetEvent::Reply(NetReply { id, outcome: Err(err), stages: [0; 4] }))
+                    }
+                    Frame::Stream { id, step, token, last } => {
+                        Ok(NetEvent::Token { id, step, token, last })
                     }
                     Frame::Request { .. }
                     | Frame::Shutdown { .. }
@@ -190,6 +263,35 @@ impl Client {
                 };
             }
             self.fill()?;
+        }
+    }
+
+    /// Simple streaming decode: send one request and collect its streamed
+    /// tokens until the terminal reply arrives.  Only valid when no other
+    /// requests are in flight on this connection.
+    pub fn decode(
+        &mut self,
+        task: &str,
+        lane: LaneSelector,
+        tokens: &[u16],
+        steps: u32,
+    ) -> Result<(Vec<u16>, NetReply), NetError> {
+        let id = self.send_decode(task, lane, tokens, steps)?;
+        let mut generated = Vec::new();
+        loop {
+            match self.recv_event()? {
+                NetEvent::Token { id: tid, token, .. } => {
+                    debug_assert_eq!(tid, id, "decode() must not be used with requests in flight");
+                    generated.push(token);
+                }
+                NetEvent::Reply(reply) => {
+                    debug_assert_eq!(
+                        reply.id, id,
+                        "decode() must not be used with requests in flight"
+                    );
+                    return Ok((generated, reply));
+                }
+            }
         }
     }
 
@@ -262,6 +364,9 @@ impl Client {
                     Frame::ReplyErr { id, err } => {
                         flushed.push(NetReply { id, outcome: Err(err), stages: [0; 4] });
                     }
+                    // Tokens of decode requests still flushing out: the
+                    // drain barrier only promises the terminal replies.
+                    Frame::Stream { .. } => {}
                     Frame::Drain { id: rid } if rid == id => return Ok(flushed),
                     _ => return Err(NetError::UnexpectedFrame),
                 }

@@ -6,15 +6,17 @@
 //! | offset | size | field                                     |
 //! |--------|------|-------------------------------------------|
 //! | 0      | 4    | magic `b"AMFN"`                           |
-//! | 4      | 1    | version (3)                               |
-//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain 6=stats) |
+//! | 4      | 1    | version (4)                               |
+//! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain 6=stats 7=stream) |
 //! | 6      | 2    | reserved (must be 0)                      |
 //! | 8      | 4    | body length in bytes                      |
 //!
 //! Request body: `id u64`, `trace u64` (0 = unset: the server mints one at
 //! admission), `lane u8` (0=any 1=cheap 2=accurate), `task_len u8` +
-//! task-name bytes (utf-8), `n_tokens u32`, then `n_tokens` × `u16` token
-//! ids.  Reply-ok body: `id u64`, `server_latency_us u64`, 4 × `u32` stage
+//! task-name bytes (utf-8), `n_tokens u32`, `n_tokens` × `u16` token
+//! ids, then `steps u32` (0 = classify; N ≥ 1 = autoregressively decode N
+//! tokens, streamed back as `Stream` frames).  Reply-ok body: `id u64`,
+//! `server_latency_us u64`, 4 × `u32` stage
 //! micros (enqueue-wait, batch-form, gemm, reply-flush — see
 //! [`crate::obs::StageTimings`]), `n_logits u32`, then `n_logits` × `f32`.
 //! Reply-err body: `id u64`, `code u8`, plus `len u32` + `max_seq u32`
@@ -29,6 +31,9 @@
 //! request, an encoded [`crate::obs::ObsSnapshot`] in the server's answer
 //! (aggregated across healthy shards when the answering process is a
 //! front); version 3 adds the trace/stage fields and this kind.
+//! Stream body (version 4): `id u64`, `step u32`, `token u16`, `flags u8`
+//! (bit 0 = last; other bits reserved, must be 0) — one generated token of
+//! an in-flight decode request; the final `ReplyOk` still closes it out.
 //!
 //! The decoder is hardened like the `AMFP` policy parser: truncation,
 //! absurd declared lengths, bad magic/version/kind/lane/error codes and
@@ -44,10 +49,11 @@ use crate::coordinator::server::RequestError;
 
 /// Format tag opening every frame.
 pub const MAGIC: [u8; 4] = *b"AMFN";
-/// Current protocol version (3: adds the request trace id, per-stage
-/// reply timings and the stats frame kind; 2 added health/drain and the
-/// `Timeout` wire error).
-pub const VERSION: u8 = 3;
+/// Current protocol version (4: adds the request `steps` field and the
+/// streaming-reply frame kind for autoregressive decode; 3 added the
+/// request trace id, per-stage reply timings and the stats frame kind;
+/// 2 added health/drain and the `Timeout` wire error).
+pub const VERSION: u8 = 4;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a frame body: anything larger is a corrupt or hostile
@@ -171,10 +177,12 @@ impl fmt::Display for WireError {
 /// One decoded `AMFN` frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Client → server: classify `tokens` under `task`, route by `lane`.
-    /// `trace` is the end-to-end trace id (0 = unset: the server mints
-    /// one at admission and the id stays process-local).
-    Request { id: u64, trace: u64, lane: LaneSelector, task: String, tokens: Vec<u16> },
+    /// Client → server: classify `tokens` under `task` (`steps == 0`), or
+    /// autoregressively decode `steps` tokens from that prompt
+    /// (`steps ≥ 1`, each generated token streamed back as a [`Frame::Stream`]),
+    /// routed by `lane`.  `trace` is the end-to-end trace id (0 = unset:
+    /// the server mints one at admission and the id stays process-local).
+    Request { id: u64, trace: u64, lane: LaneSelector, task: String, tokens: Vec<u16>, steps: u32 },
     /// Server → client: the logits for request `id`, with the server-side
     /// stage split (`[enqueue_wait, batch_form, gemm, reply_flush]` µs).
     ReplyOk { id: u64, server_latency: Duration, stages: [u32; 4], logits: Vec<f32> },
@@ -194,6 +202,10 @@ pub enum Frame {
     /// [`crate::obs::ObsSnapshot`] (aggregated across healthy shards when
     /// answered by a front).  The body stays opaque at the frame layer.
     Stats { id: u64, body: Vec<u8> },
+    /// Server → client: one generated token of decode request `id` —
+    /// `step` counts from 0, `last` marks the final token (the closing
+    /// `ReplyOk`/`ReplyErr` for `id` still follows).
+    Stream { id: u64, step: u32, token: u16, last: bool },
 }
 
 impl Frame {
@@ -206,6 +218,7 @@ impl Frame {
             Frame::Health { .. } => 4,
             Frame::Drain { .. } => 5,
             Frame::Stats { .. } => 6,
+            Frame::Stream { .. } => 7,
         }
     }
 }
@@ -258,7 +271,7 @@ impl fmt::Display for FrameError {
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut body = Vec::with_capacity(64);
     match frame {
-        Frame::Request { id, trace, lane, task, tokens } => {
+        Frame::Request { id, trace, lane, task, tokens, steps } => {
             body.extend_from_slice(&id.to_le_bytes());
             body.extend_from_slice(&trace.to_le_bytes());
             body.push(lane.to_wire());
@@ -272,10 +285,16 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             }
             body.push(cut as u8);
             body.extend_from_slice(&task.as_bytes()[..cut]);
-            body.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
-            for t in tokens {
+            // Likewise an over-cap token list or step count is rejected by
+            // `Client::send_request`/`send_decode` with a typed error; the
+            // cuts here only keep a frame that slipped past decodable
+            // instead of poisoning the connection with an over-cap count.
+            let toks = &tokens[..tokens.len().min(MAX_TOKENS)];
+            body.extend_from_slice(&(toks.len() as u32).to_le_bytes());
+            for t in toks {
                 body.extend_from_slice(&t.to_le_bytes());
             }
+            body.extend_from_slice(&steps.min(MAX_TOKENS as u32).to_le_bytes());
         }
         Frame::ReplyOk { id, server_latency, stages, logits } => {
             body.extend_from_slice(&id.to_le_bytes());
@@ -304,6 +323,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             body.extend_from_slice(&id.to_le_bytes());
             body.extend_from_slice(stats);
         }
+        Frame::Stream { id, step, token, last } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            body.extend_from_slice(&step.to_le_bytes());
+            body.extend_from_slice(&token.to_le_bytes());
+            body.push(u8::from(*last));
+        }
     }
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
     out.extend_from_slice(&MAGIC);
@@ -326,7 +351,7 @@ fn decode_header(h: &[u8]) -> Result<(u8, usize), FrameError> {
         return Err(FrameError::BadVersion(h[4]));
     }
     let kind = h[5];
-    if kind > 6 {
+    if kind > 7 {
         return Err(FrameError::BadKind(kind));
     }
     let reserved = u16::from_le_bytes([h[6], h[7]]);
@@ -399,7 +424,11 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
             }
             let raw = c.take(n * 2)?;
             let tokens = raw.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
-            Frame::Request { id, trace, lane, task, tokens }
+            let steps = c.u32()?;
+            if steps as usize > MAX_TOKENS {
+                return Err(FrameError::Oversize { declared: steps as usize, max: MAX_TOKENS });
+            }
+            Frame::Request { id, trace, lane, task, tokens, steps }
         }
         1 => {
             let id = c.u64()?;
@@ -442,6 +471,17 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
             let rest = c.buf.len() - c.pos;
             let body = c.take(rest)?.to_vec();
             Frame::Stats { id, body }
+        }
+        7 => {
+            let id = c.u64()?;
+            let step = c.u32()?;
+            let raw = c.take(2)?;
+            let token = u16::from_le_bytes([raw[0], raw[1]]);
+            let flags = c.u8()?;
+            if flags > 1 {
+                return Err(FrameError::BadReserved(flags as u16));
+            }
+            Frame::Stream { id, step, token, last: flags == 1 }
         }
         other => return Err(FrameError::BadKind(other)),
     };
@@ -513,6 +553,7 @@ mod tests {
             lane: LaneSelector::Cheap,
             task: "sst2".into(),
             tokens: vec![1, 2, 3, 65535],
+            steps: 0,
         }
     }
 
@@ -526,7 +567,18 @@ mod tests {
                 lane: LaneSelector::Any,
                 task: String::new(),
                 tokens: vec![],
+                steps: 0,
             },
+            Frame::Request {
+                id: 21,
+                trace: 9,
+                lane: LaneSelector::Cheap,
+                task: "sst2".into(),
+                tokens: vec![5, 6],
+                steps: 4,
+            },
+            Frame::Stream { id: 21, step: 0, token: 31, last: false },
+            Frame::Stream { id: 21, step: 3, token: 0, last: true },
             Frame::ReplyOk {
                 id: 7,
                 server_latency: Duration::from_micros(1234),
@@ -582,25 +634,25 @@ mod tests {
         let mut bad = good.clone();
         bad[0] = b'X';
         assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
-        // bad version — including the retired v1 and v2: a server must
+        // bad version — including the retired v1..v3: a server must
         // not half-parse frames from an older client (v3 moved the
-        // request field offsets, so a lenient parse would mis-read them).
+        // request field offsets and v4 appended the steps field, so a
+        // lenient parse would mis-read them).
         let mut bad = good.clone();
         bad[4] = 9;
         assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
-        let mut bad = good.clone();
-        bad[4] = 1;
-        assert_eq!(decode(&bad), Err(FrameError::BadVersion(1)));
-        let mut bad = good.clone();
-        bad[4] = 2;
-        assert_eq!(decode(&bad), Err(FrameError::BadVersion(2)));
-        // bad kind — 7 is the first unassigned kind after stats
+        for v in 1u8..=3 {
+            let mut bad = good.clone();
+            bad[4] = v;
+            assert_eq!(decode(&bad), Err(FrameError::BadVersion(v)));
+        }
+        // bad kind — 8 is the first unassigned kind after stream
         let mut bad = good.clone();
         bad[5] = 250;
         assert_eq!(decode(&bad), Err(FrameError::BadKind(250)));
         let mut bad = good.clone();
-        bad[5] = 7;
-        assert_eq!(decode(&bad), Err(FrameError::BadKind(7)));
+        bad[5] = 8;
+        assert_eq!(decode(&bad), Err(FrameError::BadKind(8)));
         // reserved bytes must be zero
         let mut bad = good.clone();
         bad[6] = 1;
@@ -616,11 +668,23 @@ mod tests {
             lane: LaneSelector::Any,
             task: "t".into(),
             tokens: vec![],
+            steps: 0,
         };
         let mut bad = encode(&f);
         let n_off = HEADER_LEN + 8 + 8 + 1 + 1 + 1; // id + trace + lane + task_len + task
         bad[n_off..n_off + 4].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
+        // absurd declared decode step count (steps trail the body)
+        let mut bad = encode(&f);
+        let s_off = bad.len() - 4;
+        bad[s_off..].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
+        // reserved stream flag bits must be zero (flags byte trails)
+        let s = encode(&Frame::Stream { id: 3, step: 1, token: 9, last: true });
+        let mut bad = s.clone();
+        let f_off = bad.len() - 1;
+        bad[f_off] = 2;
+        assert_eq!(decode(&bad), Err(FrameError::BadReserved(2)));
         // bad lane selector
         let mut bad = good.clone();
         bad[HEADER_LEN + 16] = 77; // after id + trace

@@ -18,7 +18,7 @@ use crate::bench_harness::json::BenchReport;
 use crate::bench_harness::{summarize_samples, BenchResult};
 use crate::prng::Prng;
 
-use super::client::Client;
+use super::client::{Client, NetEvent};
 use super::frame::{LaneSelector, WireError};
 
 /// Load-generator knobs (see `amfma loadgen`).
@@ -50,6 +50,11 @@ pub struct LoadgenConfig {
     /// keeps front-tier latency in its own perf-trajectory series, since a
     /// two-hop topology is not comparable to a one-hop one).
     pub bench_target: String,
+    /// Generated tokens per request: `0` sends classic classify requests;
+    /// `N >= 1` sends streaming decode requests and counts every streamed
+    /// token, verifying each stream arrives in order and completes with
+    /// exactly `N` tokens before its terminal reply.
+    pub decode_steps: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -65,6 +70,7 @@ impl Default for LoadgenConfig {
             recv_timeout: Duration::from_secs(30),
             connect_timeout: Duration::from_secs(5),
             bench_target: "serving".to_string(),
+            decode_steps: 0,
         }
     }
 }
@@ -88,6 +94,8 @@ pub struct LoadgenOutcome {
     /// lets the client-side report say where server time went without a
     /// separate stats scrape.  Empty when nothing completed.
     pub stages: Vec<BenchResult>,
+    /// Streamed decode tokens received (0 for classify-only runs).
+    pub decode_tokens: u64,
 }
 
 impl LoadgenOutcome {
@@ -106,6 +114,7 @@ struct ConnStats {
     completed: u64,
     rejected: u64,
     busy_retries: u64,
+    decode_tokens: u64,
     latencies: Vec<Duration>,
     /// One sample vector per serving stage (see [`crate::obs::Stage`]).
     stage_us: [Vec<u32>; 4],
@@ -138,11 +147,12 @@ pub fn run(pool: &[(String, Vec<u16>)], cfg: &LoadgenConfig) -> Result<LoadgenOu
     let wall = t0.elapsed();
     let mut latencies = Vec::new();
     let mut stage_us: [Vec<u32>; 4] = Default::default();
-    let (mut completed, mut rejected, mut busy) = (0u64, 0u64, 0u64);
+    let (mut completed, mut rejected, mut busy, mut decode_tokens) = (0u64, 0u64, 0u64, 0u64);
     for s in stats {
         completed += s.completed;
         rejected += s.rejected;
         busy += s.busy_retries;
+        decode_tokens += s.decode_tokens;
         latencies.extend(s.latencies);
         for (agg, conn) in stage_us.iter_mut().zip(s.stage_us) {
             agg.extend(conn);
@@ -163,7 +173,7 @@ pub fn run(pool: &[(String, Vec<u16>)], cfg: &LoadgenConfig) -> Result<LoadgenOu
             summarize_samples(&format!("serving/stage_{}", stage.label()), ds)
         })
         .collect();
-    Ok(LoadgenOutcome { completed, rejected, busy_retries: busy, wall, latency, stages })
+    Ok(LoadgenOutcome { completed, rejected, busy_retries: busy, wall, latency, stages, decode_tokens })
 }
 
 fn run_connection(
@@ -182,14 +192,20 @@ fn run_connection(
         completed: 0,
         rejected: 0,
         busy_retries: 0,
+        decode_tokens: 0,
         latencies: Vec::new(),
         stage_us: Default::default(),
     };
+    let steps = cfg.decode_steps as u32;
     // Latency is measured from the *first* send of a request: a Busy
     // retry keeps its original timestamp, so backoff and requeue time
     // count toward the reported end-to-end latency (that is exactly the
     // time a backpressured client experiences).
     let mut pending: HashMap<u64, (Instant, String, Vec<u16>)> = HashMap::new();
+    // Per-request next-expected-step counters: pipelined decode streams
+    // interleave on the socket, and an out-of-order or short stream is a
+    // protocol failure the run must surface.
+    let mut streams: HashMap<u64, u32> = HashMap::new();
     let mut retry: VecDeque<(Instant, String, Vec<u16>)> = VecDeque::new();
     let mut issued = 0usize;
     let mut answered = 0usize;
@@ -201,25 +217,56 @@ fn run_connection(
                 Some(r) => r,
                 None => {
                     issued += 1;
-                    let (task, tokens) = sample_request(pool, cfg.varlen, &mut rng);
+                    let (task, tokens) =
+                        sample_request(pool, cfg.varlen, cfg.decode_steps, &mut rng);
                     (Instant::now(), task, tokens)
                 }
             };
-            let id = client
-                .send_request(&task, cfg.lane, &tokens)
-                .map_err(|e| format!("send: {e}"))?;
+            let id = if steps == 0 {
+                client.send_request(&task, cfg.lane, &tokens)
+            } else {
+                client.send_decode(&task, cfg.lane, &tokens, steps)
+            }
+            .map_err(|e| format!("send: {e}"))?;
             if pending.insert(id, (born, task, tokens)).is_some() {
                 return Err(format!("duplicate request id {id}"));
             }
         }
-        let reply = client.recv_reply().map_err(|e| {
-            format!("recv with {} replies outstanding (lost): {e}", pending.len())
-        })?;
+        // Drain events until a terminal reply: streamed tokens of *any*
+        // in-flight decode advance their stream counters along the way.
+        let reply = loop {
+            let event = client.recv_event().map_err(|e| {
+                format!("recv with {} replies outstanding (lost): {e}", pending.len())
+            })?;
+            match event {
+                NetEvent::Token { id, step, .. } => {
+                    if !pending.contains_key(&id) {
+                        return Err(format!("streamed token for unknown request id {id}"));
+                    }
+                    let next = streams.entry(id).or_insert(0);
+                    if step != *next {
+                        return Err(format!(
+                            "request {id}: stream step {step} arrived, expected {next}"
+                        ));
+                    }
+                    *next += 1;
+                    stats.decode_tokens += 1;
+                }
+                NetEvent::Reply(r) => break r,
+            }
+        };
         let Some((born, task, tokens)) = pending.remove(&reply.id) else {
             return Err(format!("unmatched reply id {}", reply.id));
         };
+        let streamed = streams.remove(&reply.id).unwrap_or(0);
         match reply.outcome {
             Ok(_logits) => {
+                if streamed != steps {
+                    return Err(format!(
+                        "request {}: {streamed} streamed tokens, expected {steps}",
+                        reply.id
+                    ));
+                }
                 stats.latencies.push(born.elapsed());
                 for (samples, &us) in stats.stage_us.iter_mut().zip(reply.stages.iter()) {
                     samples.push(us);
@@ -249,10 +296,14 @@ fn run_connection(
 }
 
 /// Sample one `(task, tokens)` request from the pool, optionally
-/// truncating to a random live length (the varlen serving path).
+/// truncating to a random live length (the varlen serving path).  Decode
+/// requests are additionally truncated so the prompt plus the generated
+/// suffix (`len + steps - 1`) fits every shard's sequence budget — the
+/// loadgen measures throughput, not admission-control rejections.
 fn sample_request(
     pool: &[(String, Vec<u16>)],
     varlen: bool,
+    decode_steps: usize,
     rng: &mut Prng,
 ) -> (String, Vec<u16>) {
     let (task, tokens) = &pool[rng.below(pool.len() as u64) as usize];
@@ -260,6 +311,10 @@ fn sample_request(
     if varlen && tokens.len() > 1 {
         let len = 1 + rng.below(tokens.len() as u64) as usize;
         tokens.truncate(len);
+    }
+    if decode_steps > 1 {
+        let cap = tokens.len().saturating_sub(decode_steps - 1).max(1);
+        tokens.truncate(cap);
     }
     (task.clone(), tokens)
 }
@@ -283,6 +338,12 @@ pub fn report(outcome: &LoadgenOutcome, cfg: &LoadgenConfig) -> BenchReport {
         rep.push_metric(&format!("stage/{short}_p99_us"), stage.p99.as_micros() as f64, "us");
     }
     rep.push_metric("throughput", outcome.throughput(), "seq/s");
+    if cfg.decode_steps > 0 {
+        rep.push_metric("decode_steps", cfg.decode_steps as f64, "steps");
+        rep.push_metric("decode_tokens", outcome.decode_tokens as f64, "tokens");
+        let secs = outcome.wall.as_secs_f64().max(1e-9);
+        rep.push_metric("decode_throughput", outcome.decode_tokens as f64 / secs, "tok/s");
+    }
     rep.push_metric("completed", outcome.completed as f64, "requests");
     rep.push_metric("rejected", outcome.rejected as f64, "requests");
     rep.push_metric("busy_retries", outcome.busy_retries as f64, "replies");

@@ -53,12 +53,12 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::server::{ReplyResult, ReplySink};
+use super::server::{ReplyEvent, ReplySink};
 use super::Router;
 
 use frame::{Frame, FrameBuffer, WireError};
 
-pub use client::{Client, NetError, NetReply};
+pub use client::{Client, NetError, NetEvent, NetReply};
 pub use frame::{FrameError, LaneSelector};
 
 /// Tuning knobs of the TCP frontend.
@@ -247,7 +247,7 @@ fn connection_loop(
     // All frames leave through this mutex so reply frames from the writer
     // thread and inline error frames from the reader never interleave.
     let write_half = Arc::new(Mutex::new(stream.try_clone().map_err(|e| e.to_string())?));
-    let (reply_tx, reply_rx) = sync_channel::<(u64, ReplyResult)>(cfg.inflight.max(1));
+    let (reply_tx, reply_rx) = sync_channel::<(u64, ReplyEvent)>(cfg.inflight.max(1));
     // The writer can only exit before the reader on a write error (the
     // reader holds a sender, so channel-closure exits come after it): the
     // flag lets the reader notice a dead peer and stop routing requests
@@ -318,7 +318,7 @@ fn reader_loop(
     router: &Router,
     stop: &AtomicBool,
     drain: &AtomicBool,
-    reply_tx: &SyncSender<(u64, ReplyResult)>,
+    reply_tx: &SyncSender<(u64, ReplyEvent)>,
     write_half: &Mutex<TcpStream>,
     writer_dead: &AtomicBool,
 ) -> Result<Option<u64>, String> {
@@ -354,12 +354,12 @@ fn reader_loop(
                 Err(e) => return Err(format!("frame: {e}")),
             };
             match frame {
-                Frame::Request { id, trace, lane, task, tokens } => {
+                Frame::Request { id, trace, lane, task, tokens, steps } => {
                     let sink = ReplySink::Tagged { id, tx: reply_tx.clone() };
                     let verdict = if drain.load(Ordering::SeqCst) {
                         Err(WireError::ShuttingDown)
                     } else {
-                        route_request(router, &task, tokens, trace, lane, sink)
+                        route_request(router, &task, tokens, steps, trace, lane, sink)
                     };
                     if let Err(err) = verdict {
                         send_frame(write_half, &Frame::ReplyErr { id, err })
@@ -394,8 +394,9 @@ fn reader_loop(
                 // Connection-level drain: stop reading this connection's
                 // requests; the caller acks after the reply flush.
                 Frame::Drain { id } => return Ok(Some(id)),
-                // Clients must not send reply frames; treat as corruption.
-                Frame::ReplyOk { .. } | Frame::ReplyErr { .. } => {
+                // Clients must not send reply or stream frames; treat as
+                // corruption.
+                Frame::ReplyOk { .. } | Frame::ReplyErr { .. } | Frame::Stream { .. } => {
                     return Err("unexpected reply frame from client".to_string());
                 }
             }
@@ -403,18 +404,25 @@ fn reader_loop(
     }
 }
 
-/// Route one decoded request; failures map to typed wire errors the
-/// reader answers inline.
+/// Route one decoded request — `steps == 0` is a classify request for the
+/// batcher, `steps >= 1` a streaming decode for the continuous batch;
+/// failures map to typed wire errors the reader answers inline.
 fn route_request(
     router: &Router,
     task: &str,
     tokens: Vec<u16>,
+    steps: u32,
     trace: u64,
     lane: LaneSelector,
     sink: ReplySink,
 ) -> Result<(), WireError> {
     use super::RouteError;
-    router.route_lane_sink_traced(task, tokens, lane.to_lane(), trace, sink).map_err(|e| match e {
+    let verdict = if steps == 0 {
+        router.route_lane_sink_traced(task, tokens, lane.to_lane(), trace, sink)
+    } else {
+        router.route_decode_sink_traced(task, tokens, steps, lane.to_lane(), trace, sink)
+    };
+    verdict.map_err(|e| match e {
         RouteError::NoReplicaForMode => WireError::NoReplica,
         RouteError::AllBusy => WireError::Busy,
         RouteError::Closed => WireError::ShuttingDown,
@@ -423,21 +431,23 @@ fn route_request(
     })
 }
 
-/// Drain the tagged reply channel onto the socket.  Exits when every
-/// sender (reader clone + in-flight request sinks) is gone, i.e. after
-/// the last reply of the connection — or early on a write error, which
-/// drops the receiver so engine workers see dropped-reply sends instead
-/// of blocking forever.
-fn writer_loop(reply_rx: Receiver<(u64, ReplyResult)>, write_half: Arc<Mutex<TcpStream>>) {
-    for (id, result) in reply_rx {
-        let frame = match result {
-            Ok(r) => Frame::ReplyOk {
+/// Drain the tagged reply channel onto the socket.  Streamed decode
+/// tokens become [`Frame::Stream`] frames, terminal replies the classic
+/// reply frames.  Exits when every sender (reader clone + in-flight
+/// request sinks) is gone, i.e. after the last reply of the connection —
+/// or early on a write error, which drops the receiver so engine workers
+/// see dropped-reply sends instead of blocking forever.
+fn writer_loop(reply_rx: Receiver<(u64, ReplyEvent)>, write_half: Arc<Mutex<TcpStream>>) {
+    for (id, event) in reply_rx {
+        let frame = match event {
+            ReplyEvent::Token { step, token, last } => Frame::Stream { id, step, token, last },
+            ReplyEvent::Done(Ok(r)) => Frame::ReplyOk {
                 id,
                 server_latency: r.latency,
                 stages: r.stages.as_array(),
                 logits: r.logits,
             },
-            Err(e) => Frame::ReplyErr { id, err: WireError::from(e) },
+            ReplyEvent::Done(Err(e)) => Frame::ReplyErr { id, err: WireError::from(e) },
         };
         if send_frame(&write_half, &frame).is_err() {
             return;

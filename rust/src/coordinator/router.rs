@@ -277,6 +277,31 @@ impl Router {
         )
     }
 
+    /// Route a streaming decode request (`steps >= 1` generated tokens) to
+    /// a replica whose continuous batch will stream tokens into `sink`.
+    /// Candidate selection counts the *occupied* length — prompt plus
+    /// generation — against each replica's length envelope, so a decode
+    /// never lands on a shard that would reject it at admission.
+    pub fn route_decode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        lane: Option<Lane>,
+        trace: u64,
+        sink: ReplySink,
+    ) -> Result<(), RouteError> {
+        let occupied = tokens.len() + (steps as usize).saturating_sub(1);
+        self.route_where_with(
+            occupied,
+            |r| lane.map(|l| r.lane == l).unwrap_or(true),
+            |r| {
+                r.backend
+                    .submit_decode_sink_traced(task, tokens.clone(), steps, trace, sink.clone())
+            },
+        )
+    }
+
     /// Candidate selection + tiered load-aware failover, generic over how
     /// a request is handed to a replica (one-shot channel vs tagged sink).
     fn route_where_with<T>(

@@ -21,13 +21,15 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::autotune::PrecisionPolicy;
-use crate::model::{Encoder, Weights};
-use crate::obs::{self, StageTimings};
+use crate::model::{greedy_argmax, Encoder, KvCache, TiedHead, Weights};
+use crate::obs::{self, DecodeStage, StageTimings};
 use crate::systolic::{EngineMode, GemmKernel, MatrixEngine};
 
 use super::metrics::Metrics;
@@ -53,27 +55,61 @@ pub enum ReplySink {
     Oneshot(SyncSender<ReplyResult>),
     /// Shared per-connection channel; replies are tagged with the wire
     /// request id.
-    Tagged { id: u64, tx: SyncSender<(u64, ReplyResult)> },
+    Tagged { id: u64, tx: SyncSender<(u64, ReplyEvent)> },
+    /// Dedicated per-request streaming channel (in-process decode
+    /// clients): every generated token plus the closing `Done`.  Sends
+    /// block, so the receiver must keep reading until `Done` (the
+    /// [`ServerHandle::submit_decode`] channel is sized to hold a whole
+    /// generation, so in practice nothing blocks).
+    Stream(SyncSender<ReplyEvent>),
+}
+
+/// What flows back to a client: zero or more streamed decode tokens,
+/// closed out by exactly one `Done` carrying the classic [`ReplyResult`].
+/// Classify requests skip straight to `Done`.
+#[derive(Debug, Clone)]
+pub enum ReplyEvent {
+    /// One generated token of a decode request: `step` counts from 0,
+    /// `last` marks the final token of the generation.
+    Token { step: u32, token: u16, last: bool },
+    /// The terminal reply (same payload classify requests get; for decode
+    /// it carries the final step's vocabulary logits).
+    Done(ReplyResult),
 }
 
 impl ReplySink {
-    /// Deliver the reply; `true` when it was accepted.  `false` means the
-    /// receiving side is gone (client disconnected / connection writer
-    /// exited) or, for tagged sinks, that the connection's reply channel
-    /// is full — a client that pipelines past the server's in-flight cap
-    /// without reading replies forfeits them.  Either way the caller
-    /// records a dropped reply instead of panicking, and — critically —
-    /// an engine worker **never blocks** on a slow or dead client.
+    /// Deliver the terminal reply; `true` when it was accepted.  `false`
+    /// means the receiving side is gone (client disconnected / connection
+    /// writer exited) or, for tagged sinks, that the connection's reply
+    /// channel is full — a client that pipelines past the server's
+    /// in-flight cap without reading replies forfeits them.  Either way
+    /// the caller records a dropped reply instead of panicking, and —
+    /// critically — an engine worker **never blocks** on a slow or dead
+    /// client.
     pub fn send(&self, r: ReplyResult) -> bool {
+        self.send_event(ReplyEvent::Done(r))
+    }
+
+    /// Deliver one reply event (streamed token or terminal `Done`); same
+    /// `true`/`false` contract as [`ReplySink::send`].
+    pub fn send_event(&self, ev: ReplyEvent) -> bool {
         match self {
-            // Capacity 1 and exactly one send per request: never blocks.
-            ReplySink::Oneshot(tx) => tx.send(r).is_ok(),
-            ReplySink::Tagged { id, tx } => tx.try_send((*id, r)).is_ok(),
+            ReplySink::Oneshot(tx) => match ev {
+                // One-shot clients only want the final result; dropping
+                // intermediate tokens (still "delivered") lets a
+                // classify-style caller drive a decode request too.
+                ReplyEvent::Token { .. } => true,
+                // Capacity 1 and exactly one Done per request: never blocks.
+                ReplyEvent::Done(r) => tx.send(r).is_ok(),
+            },
+            ReplySink::Tagged { id, tx } => tx.try_send((*id, ev)).is_ok(),
+            ReplySink::Stream(tx) => tx.send(ev).is_ok(),
         }
     }
 }
 
-/// One classification/regression request.
+/// One classification request (`decode_steps == 0`) or autoregressive
+/// decode request (`decode_steps ≥ 1`).
 pub struct Request {
     pub task: String,
     pub tokens: Vec<u16>,
@@ -84,6 +120,10 @@ pub struct Request {
     /// front tier and its shards stamp the same id.  Never zero once a
     /// request is accepted.
     pub trace: u64,
+    /// Tokens to generate: 0 = classify (the padded-batch path), N ≥ 1 =
+    /// greedy-decode N tokens through the continuous batcher, streaming
+    /// each one as a [`ReplyEvent::Token`].
+    pub decode_steps: u32,
 }
 
 /// Server reply: logits (or the regression score) for one sequence.
@@ -149,6 +189,12 @@ pub struct ServerConfig {
     /// native-f32 statistical fidelity and is only admissible for traffic
     /// routed through the cheap lane (see the README's serving guidance).
     pub kernel: GemmKernel,
+    /// Run an FP32 shadow decode next to every served generation,
+    /// teacher-forced on the served tokens, and feed the per-step logit
+    /// divergence into [`crate::obs::record_decode_divergence`].  Costs a
+    /// second forward per step — a fidelity-measurement mode, off by
+    /// default.
+    pub decode_shadow: bool,
 }
 
 impl Default for ServerConfig {
@@ -162,6 +208,7 @@ impl Default for ServerConfig {
             length_bucket: 8,
             policies: HashMap::new(),
             kernel: GemmKernel::default_from_env(),
+            decode_shadow: false,
         }
     }
 }
@@ -232,6 +279,46 @@ impl ServerHandle {
         trace: u64,
         reply: ReplySink,
     ) -> Result<(), SubmitError> {
+        self.enqueue(task, tokens, 0, trace, reply)
+    }
+
+    /// Non-blocking decode submit: greedy-generate `steps` tokens from
+    /// the prompt, streaming each one back over the returned channel as a
+    /// [`ReplyEvent::Token`] and closing with [`ReplyEvent::Done`].  The
+    /// channel is sized to hold the whole generation, so the decode
+    /// scheduler never blocks on this client.
+    pub fn submit_decode(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+    ) -> Result<Receiver<ReplyEvent>, SubmitError> {
+        let (tx, rx) = sync_channel(steps.max(1) as usize + 1);
+        self.submit_decode_sink_traced(task, tokens, steps, 0, ReplySink::Stream(tx))?;
+        Ok(rx)
+    }
+
+    /// [`Self::submit_decode`] with a caller-provided sink and trace id —
+    /// the entry point the TCP frame workers use for decode requests.
+    pub fn submit_decode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        self.enqueue(task, tokens, steps.max(1), trace, reply)
+    }
+
+    fn enqueue(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        decode_steps: u32,
+        trace: u64,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
         let trace = if trace == 0 { obs::next_trace_id() } else { trace };
         let req = Request {
             task: task.to_string(),
@@ -239,6 +326,7 @@ impl ServerHandle {
             reply,
             submitted_at: Instant::now(),
             trace,
+            decode_steps,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(req) {
@@ -297,8 +385,16 @@ impl InferenceServer {
         // worker can split queueing time into enqueue-wait (admission →
         // batch flush) and batch-form (flush → GEMM start) stages.
         let (btx, brx) = sync_channel::<(Vec<Request>, Instant)>(cfg.workers.max(1) * 2);
+        // Decode requests bypass the length-bucketed batcher entirely and
+        // feed the continuous-batching decode scheduler.
+        let (dtx, drx) = sync_channel::<Request>(cfg.queue_depth.max(1));
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
+        // One engine configuration, built once; the shared resource is the
+        // process-global worker pool its tile scheduler dispatches to, so
+        // per-batch parallelism comes from persistent pool workers rather
+        // than per-call thread spawns.
+        let engine = MatrixEngine::new(cfg.mode).with_kernel(cfg.kernel);
 
         // --- batcher thread -------------------------------------------------
         {
@@ -306,16 +402,25 @@ impl InferenceServer {
             let stop = stop.clone();
             let cfg2 = cfg.clone();
             threads.push(std::thread::spawn(move || {
-                batcher_loop(rx, btx, metrics, cfg2, stop);
+                batcher_loop(rx, btx, dtx, metrics, cfg2, stop);
+            }));
+        }
+
+        // --- decode scheduler ------------------------------------------------
+        // One thread running the continuous batcher: sequences join and
+        // leave the running batch between steps (see `decode_loop`).
+        {
+            let metrics = metrics.clone();
+            let models = models.clone();
+            let engine = engine.clone();
+            let policies = cfg.policies.clone();
+            let shadow = cfg.decode_shadow;
+            threads.push(std::thread::spawn(move || {
+                decode_loop(drx, models, engine, policies, metrics, shadow);
             }));
         }
 
         // --- engine workers --------------------------------------------------
-        // One engine configuration, built once; the shared resource is the
-        // process-global worker pool its tile scheduler dispatches to, so
-        // per-batch parallelism comes from persistent pool workers rather
-        // than per-call thread spawns.
-        let engine = MatrixEngine::new(cfg.mode).with_kernel(cfg.kernel);
         let brx = Arc::new(std::sync::Mutex::new(brx));
         for _w in 0..cfg.workers {
             let brx = brx.clone();
@@ -325,7 +430,14 @@ impl InferenceServer {
             let policies = cfg.policies.clone();
             threads.push(std::thread::spawn(move || loop {
                 let batch = {
-                    let guard = brx.lock().unwrap();
+                    // A sibling worker that panicked while holding this
+                    // lock poisons it; the guarded state (the receiver) is
+                    // still consistent — recover instead of cascading the
+                    // panic across the whole engine pool, and count it.
+                    let guard = brx.lock().unwrap_or_else(|e| {
+                        metrics.record_lock_recovery();
+                        e.into_inner()
+                    });
                     guard.recv()
                 };
                 let Ok((batch, formed_at)) = batch else { break };
@@ -369,6 +481,7 @@ fn bucket_of(len: usize, width: usize) -> usize {
 fn batcher_loop(
     rx: Receiver<Request>,
     btx: SyncSender<(Vec<Request>, Instant)>,
+    dtx: SyncSender<Request>,
     metrics: Arc<Metrics>,
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
@@ -387,9 +500,24 @@ fn batcher_loop(
             }
         }
     };
+    // Decode requests skip the buckets and join the continuous decode
+    // batch.  Blocking send keeps the ingress queue the one backpressure
+    // boundary; a dead decode scheduler (it only exits after this thread
+    // drops `dtx`, so this means it panicked) gets an explicit answer
+    // instead of a dropped sender.
+    let route_decode = |req: Request| {
+        if let Err(std::sync::mpsc::SendError(req)) = dtx.send(req) {
+            if req.reply.send(Err(RequestError::Unavailable)) {
+                metrics.record_error_reply();
+            } else {
+                metrics.record_dropped_reply();
+            }
+        }
+    };
     loop {
         let timeout = cfg.max_wait / 2;
         match rx.recv_timeout(timeout) {
+            Ok(req) if req.decode_steps > 0 => route_decode(req),
             Ok(req) => {
                 let key = (req.task.clone(), bucket_of(req.tokens.len(), cfg.length_bucket));
                 let bucket = pending.entry(key.clone()).or_default();
@@ -420,6 +548,10 @@ fn batcher_loop(
             // draining until `Disconnected` instead would let any live
             // handle clone stall shutdown forever.
             while let Ok(req) = rx.try_recv() {
+                if req.decode_steps > 0 {
+                    route_decode(req);
+                    continue;
+                }
                 let key = (req.task.clone(), bucket_of(req.tokens.len(), cfg.length_bucket));
                 pending.entry(key).or_default().push(req);
             }
@@ -538,6 +670,204 @@ fn run_batch(
             metrics.record_dropped_reply();
         }
     }
+}
+
+/// One live generation inside the continuous decode batch.  The KV cache
+/// *is* the per-sequence state: leaving the batch (completion, client
+/// disconnect) drops it — eviction needs no further bookkeeping.
+struct DecodeSeq {
+    req: Request,
+    cache: KvCache,
+    /// FP32 shadow cache, teacher-forced on the served tokens (the
+    /// `decode_shadow` fidelity mode).
+    shadow: Option<KvCache>,
+    last_token: u16,
+    emitted: u32,
+    gemm_us: u64,
+    enqueue_wait_us: u32,
+}
+
+/// The continuous decode batcher: sequences join the running batch
+/// between steps (blocking only when the batch is idle), every live
+/// sequence advances one token per round, and finished or disconnected
+/// sequences leave immediately — no sequence waits for a stranger's
+/// generation to end.  Exits when the batcher thread drops its sender
+/// and every live sequence has drained.
+fn decode_loop(
+    drx: Receiver<Request>,
+    models: HashMap<String, Arc<Weights>>,
+    engine: MatrixEngine,
+    policies: HashMap<String, Arc<PrecisionPolicy>>,
+    metrics: Arc<Metrics>,
+    shadow: bool,
+) {
+    // Weight-tied vocabulary heads, built once per task: engine-format
+    // planes resident for the whole server lifetime, like weight planes.
+    let heads: HashMap<String, TiedHead> =
+        models.iter().map(|(t, w)| (t.clone(), TiedHead::new(w))).collect();
+    let fp32 = MatrixEngine::new(EngineMode::Fp32);
+    let mut active: Vec<DecodeSeq> = Vec::new();
+    loop {
+        if active.is_empty() {
+            match drx.recv() {
+                Ok(req) => {
+                    if let Some(seq) = admit_decode(req, &models, &metrics, shadow) {
+                        active.push(seq);
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        // Mid-stream joins: admit everything already queued, then step.
+        loop {
+            match drx.try_recv() {
+                Ok(req) => {
+                    if let Some(seq) = admit_decode(req, &models, &metrics, shadow) {
+                        active.push(seq);
+                    }
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        active.retain_mut(|seq| {
+            step_decode(seq, &models, &heads, &engine, &fp32, &policies, &metrics)
+        });
+    }
+}
+
+/// Validate a decode request and build its (empty) caches.  Invalid
+/// requests are answered explicitly, exactly like the classify path.
+fn admit_decode(
+    req: Request,
+    models: &HashMap<String, Arc<Weights>>,
+    metrics: &Metrics,
+    shadow: bool,
+) -> Option<DecodeSeq> {
+    let send_error = |req: &Request, e: RequestError| {
+        if req.reply.send(Err(e)) {
+            metrics.record_error_reply();
+        } else {
+            metrics.record_dropped_reply();
+        }
+    };
+    let Some(weights) = models.get(&req.task) else {
+        send_error(&req, RequestError::UnknownTask);
+        return None;
+    };
+    let max_seq = weights.config.max_seq;
+    let len = req.tokens.len();
+    if len == 0 {
+        send_error(&req, RequestError::InvalidLength { len: 0, max_seq });
+        return None;
+    }
+    // The generation occupies `len + steps - 1` positions: the prompt,
+    // then each generated token fed back except the last.
+    let total = len + req.decode_steps as usize - 1;
+    if total > max_seq {
+        send_error(&req, RequestError::InvalidLength { len: total, max_seq });
+        return None;
+    }
+    let cache = KvCache::new(&weights.config);
+    let shadow = shadow.then(|| KvCache::new(&weights.config));
+    Some(DecodeSeq { req, cache, shadow, last_token: 0, emitted: 0, gemm_us: 0, enqueue_wait_us: 0 })
+}
+
+/// Advance one sequence by one token (the first step is the causal
+/// prefill).  Returns `true` while the sequence stays in the batch.
+fn step_decode(
+    seq: &mut DecodeSeq,
+    models: &HashMap<String, Arc<Weights>>,
+    heads: &HashMap<String, TiedHead>,
+    engine: &MatrixEngine,
+    fp32: &MatrixEngine,
+    policies: &HashMap<String, Arc<PrecisionPolicy>>,
+    metrics: &Metrics,
+) -> bool {
+    // Admission validated the task; a miss here is unreachable.
+    let Some(weights) = models.get(&seq.req.task) else { return false };
+    let Some(head) = heads.get(&seq.req.task) else { return false };
+    // Rebuilding the (borrowing, plane-free) encoder per step is a few
+    // pointer copies; the heavy state — weight planes, KV cache, head —
+    // is resident.
+    let (enc, mode_label) = match policies.get(&seq.req.task) {
+        Some(p) => (
+            Encoder::with_policy(weights, engine.with_mode(p.default_mode), p.clone()),
+            p.label(),
+        ),
+        None => (Encoder::new(weights, engine.clone()), engine.mode.label()),
+    };
+    if seq.cache.is_empty() {
+        seq.enqueue_wait_us = stage_us(seq.req.submitted_at.elapsed());
+        obs::record_decode_stage(DecodeStage::JoinWait, seq.enqueue_wait_us as u64);
+    }
+    let step_start = Instant::now();
+    let h = if seq.cache.is_empty() {
+        enc.prefill(&seq.req.tokens, &mut seq.cache)
+    } else {
+        enc.forward_step(seq.last_token, &mut seq.cache)
+    };
+    let logits = enc.decode_logits(head, &h);
+    let gemm = stage_us(step_start.elapsed()) as u64;
+    seq.gemm_us += gemm;
+    obs::record_decode_stage(DecodeStage::StepGemm, gemm);
+    let token = greedy_argmax(&logits);
+
+    // FP32 shadow decode, teacher-forced on the *served* tokens: measures
+    // how far the approximate datapath's logits drift as generation
+    // deepens (the divergence-vs-steps fidelity counter).
+    if let Some(sc) = seq.shadow.as_mut() {
+        let senc = Encoder::new(weights, fp32.clone());
+        let sh = if sc.is_empty() {
+            senc.prefill(&seq.req.tokens, sc)
+        } else {
+            senc.forward_step(seq.last_token, sc)
+        };
+        let slog = senc.decode_logits(head, &sh);
+        let n = logits.len().min(slog.len()).max(1);
+        let mean = logits
+            .iter()
+            .zip(slog.iter())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / n as f64;
+        obs::record_decode_divergence(&mode_label, seq.emitted as usize + 1, mean);
+    }
+
+    seq.last_token = token;
+    let step_idx = seq.emitted;
+    seq.emitted += 1;
+    let last = seq.emitted == seq.req.decode_steps;
+    let flush_start = Instant::now();
+    if !seq.req.reply.send_event(ReplyEvent::Token { step: step_idx, token, last }) {
+        // Client gone (or hopelessly behind) mid-stream: leaving the
+        // batch drops the KV cache — that's the eviction — and the
+        // request is accounted like any other undeliverable reply.
+        metrics.record_dropped_reply();
+        return false;
+    }
+    obs::record_decode_stage(DecodeStage::TokenFlush, stage_us(flush_start.elapsed()) as u64);
+    if !last {
+        return true;
+    }
+    // Generation complete: close out with the classic reply carrying the
+    // final step's vocabulary logits, then leave the batch.
+    let latency = seq.req.submitted_at.elapsed();
+    let stages = StageTimings {
+        enqueue_wait_us: seq.enqueue_wait_us,
+        batch_form_us: 0,
+        gemm_us: seq.gemm_us.min(u32::MAX as u64) as u32,
+        reply_flush_us: stage_us(flush_start.elapsed()),
+    };
+    let generated = seq.emitted as u64;
+    if seq.req.reply.send_event(ReplyEvent::Done(Ok(Reply { logits, latency, stages }))) {
+        metrics.record_latency(latency);
+        obs::record_timings(seq.req.trace, &stages);
+    } else {
+        metrics.record_dropped_reply();
+    }
+    metrics.record_decode_tokens(generated);
+    metrics.record_mode_tokens(&mode_label, generated);
+    false
 }
 
 #[cfg(test)]
@@ -659,15 +989,20 @@ mod tests {
     fn tagged_sink_round_trips_ids() {
         let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
         let h = srv.handle();
-        let (tx, rx) = sync_channel::<(u64, ReplyResult)>(8);
+        let (tx, rx) = sync_channel::<(u64, ReplyEvent)>(8);
         for id in [7u64, 11, 13] {
             h.submit_sink("sst2", vec![1, 2], ReplySink::Tagged { id, tx: tx.clone() })
                 .unwrap();
         }
         let mut seen = Vec::new();
         for _ in 0..3 {
-            let (id, r) = rx.recv().unwrap();
-            r.expect("served");
+            let (id, ev) = rx.recv().unwrap();
+            match ev {
+                ReplyEvent::Done(r) => {
+                    r.expect("served");
+                }
+                ReplyEvent::Token { .. } => panic!("classify requests must not stream"),
+            }
             seen.push(id);
         }
         seen.sort_unstable();
@@ -842,5 +1177,180 @@ mod tests {
         let r = h.classify("sst2", toks).unwrap();
         assert!(r.latency < Duration::from_millis(500));
         srv.shutdown();
+    }
+
+    /// Offline greedy decode on a fresh encoder + KV cache — the
+    /// reference every served stream must reproduce bit for bit.
+    fn offline_greedy(
+        w: &Weights,
+        engine: MatrixEngine,
+        prompt: &[u16],
+        steps: u32,
+    ) -> (Vec<u16>, Vec<f32>) {
+        let enc = Encoder::new(w, engine);
+        let head = TiedHead::new(w);
+        let mut cache = KvCache::new(&w.config);
+        let h = enc.prefill(prompt, &mut cache);
+        let mut logits = enc.decode_logits(&head, &h);
+        let mut toks = vec![greedy_argmax(&logits)];
+        for _ in 1..steps {
+            let h = enc.forward_step(*toks.last().unwrap(), &mut cache);
+            logits = enc.decode_logits(&head, &h);
+            toks.push(greedy_argmax(&logits));
+        }
+        (toks, logits)
+    }
+
+    /// Drain one decode stream: tokens in step order, `last` flagged on
+    /// exactly the final token, closed by exactly one `Done`.
+    fn collect_decode(rx: &Receiver<ReplyEvent>) -> (Vec<u16>, ReplyResult) {
+        let mut toks = Vec::new();
+        let mut saw_last = false;
+        loop {
+            match rx.recv().expect("stream must close with Done") {
+                ReplyEvent::Token { step, token, last } => {
+                    assert!(!saw_last, "no token may follow the one flagged last");
+                    assert_eq!(step as usize, toks.len(), "steps must arrive in order");
+                    toks.push(token);
+                    saw_last = last;
+                }
+                ReplyEvent::Done(r) => {
+                    if r.is_ok() {
+                        assert!(saw_last, "final token must carry the last flag");
+                    }
+                    return (toks, r);
+                }
+            }
+        }
+    }
+
+    /// A streamed decode reproduces, bit for bit, an offline greedy loop
+    /// on a fresh encoder + KV cache — in the approximate-normalization
+    /// mode, which is the point: generation survives `bf16an`.
+    #[test]
+    fn decode_streams_the_offline_greedy_token_sequence() {
+        let mode = EngineMode::parse("bf16an-2-2").unwrap();
+        let cfg = ServerConfig { mode, ..Default::default() };
+        let kernel = cfg.kernel;
+        let models = tiny_models();
+        let srv = InferenceServer::start(models.clone(), cfg);
+        let h = srv.handle();
+        let prompt = vec![3u16, 9, 27];
+        let steps = 4u32;
+        let rx = h.submit_decode("sst2", prompt.clone(), steps).unwrap();
+        let (toks, done) = collect_decode(&rx);
+        let reply = done.expect("decode served");
+        let w = models.get("sst2").unwrap();
+        let (want_toks, want_logits) =
+            offline_greedy(w, MatrixEngine::new(mode).with_kernel(kernel), &prompt, steps);
+        assert_eq!(toks, want_toks, "served stream must match offline greedy decode");
+        assert_eq!(reply.logits, want_logits, "final logits must be bit-identical");
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.decode_tokens, steps as u64);
+        assert!(
+            m.mode_tokens.iter().any(|(l, n)| l == "bf16an-2-2" && *n == steps as u64),
+            "decode tokens must be attributed to their mode: {:?}",
+            m.mode_tokens
+        );
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+
+    /// Invalid decode admissions are answered with explicit errors — the
+    /// occupancy check covers prompt *plus* generation.
+    #[test]
+    fn decode_rejects_bad_admissions_with_explicit_errors() {
+        let srv = InferenceServer::start(tiny_models(), ServerConfig::default());
+        let h = srv.handle();
+        // Prompt + generation would occupy 5 + 8 - 1 = 12 > max_seq = 8.
+        let rx = h.submit_decode("sst2", vec![1; 5], 8).unwrap();
+        let (toks, done) = collect_decode(&rx);
+        assert!(toks.is_empty(), "rejected requests must not stream tokens");
+        assert_eq!(done.unwrap_err(), RequestError::InvalidLength { len: 12, max_seq: 8 });
+        let rx = h.submit_decode("sst2", Vec::new(), 3).unwrap();
+        assert_eq!(
+            collect_decode(&rx).1.unwrap_err(),
+            RequestError::InvalidLength { len: 0, max_seq: 8 }
+        );
+        let rx = h.submit_decode("no-such-task", vec![1], 1).unwrap();
+        assert_eq!(collect_decode(&rx).1.unwrap_err(), RequestError::UnknownTask);
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.errored, 3);
+        assert_eq!(m.decode_tokens, 0);
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+
+    /// Sequences of different depths join and leave the continuous batch
+    /// mid-flight while classify traffic flows through the ordinary
+    /// batcher — and every stream still reproduces its solo offline
+    /// reference exactly (the bit-identity invariant makes interleaving
+    /// unobservable).
+    #[test]
+    fn continuous_batch_joins_and_leaves_keep_streams_bit_identical() {
+        let cfg = ServerConfig::default();
+        let mode = cfg.mode;
+        let kernel = cfg.kernel;
+        let models = tiny_models();
+        let srv = InferenceServer::start(models.clone(), cfg);
+        let h = srv.handle();
+        // Staggered depths: short generations leave while deep ones still
+        // run; later submissions join a batch already in flight.
+        let plan: Vec<(&str, Vec<u16>, u32)> = vec![
+            ("sst2", vec![1, 2, 3], 6),
+            ("rte", vec![4], 2),
+            ("sst2", vec![5, 6], 1),
+            ("rte", vec![7, 8, 9, 10], 5),
+        ];
+        let mut decodes = Vec::new();
+        let mut classifies = Vec::new();
+        for (task, prompt, steps) in &plan {
+            decodes.push(h.submit_decode(task, prompt.clone(), *steps).unwrap());
+            classifies.push(h.submit(task, prompt.clone()).unwrap());
+        }
+        let mut total_tokens = 0u64;
+        for (rx, (task, prompt, steps)) in decodes.iter().zip(&plan) {
+            let (toks, done) = collect_decode(rx);
+            let reply = done.expect("decode served");
+            let w = models.get(*task).unwrap();
+            let (want_toks, want_logits) =
+                offline_greedy(w, MatrixEngine::new(mode).with_kernel(kernel), prompt, *steps);
+            assert_eq!(toks, want_toks, "{task} stream diverged from solo decode");
+            assert_eq!(reply.logits, want_logits, "{task} final logits diverged");
+            total_tokens += *steps as u64;
+        }
+        for rx in classifies {
+            rx.recv().unwrap().expect("classify served");
+        }
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.decode_tokens, total_tokens);
+        assert!(m.balanced(), "counters must balance: {m:?}");
+    }
+
+    /// `decode_shadow` runs an FP32 teacher next to the served stream and
+    /// feeds per-depth logit divergence into the process-wide registry.
+    #[test]
+    fn decode_shadow_populates_divergence_counters() {
+        let _guard = crate::obs::test_enabled_lock();
+        let mode = EngineMode::parse("bf16an-1-1").unwrap();
+        let cfg = ServerConfig { mode, decode_shadow: true, ..Default::default() };
+        let srv = InferenceServer::start(tiny_models(), cfg);
+        let h = srv.handle();
+        let rx = h.submit_decode("sst2", vec![2, 4, 6], 4).unwrap();
+        let (toks, done) = collect_decode(&rx);
+        assert_eq!(toks.len(), 4);
+        done.expect("decode served");
+        srv.shutdown();
+        let snap = crate::obs::snapshot();
+        // Depths 1..=4 land in bins 0 (depth 1), 1 (2..3) and 2 (4..7).
+        let bins: Vec<u8> = snap
+            .divergence
+            .iter()
+            .filter(|d| d.mode == "bf16an-1-1")
+            .map(|d| d.depth_bin)
+            .collect();
+        for b in [0u8, 1, 2] {
+            assert!(bins.contains(&b), "expected divergence bin {b}, got {bins:?}");
+        }
     }
 }

@@ -31,7 +31,11 @@ use crate::pe::PeStats;
 use crate::runtime::pool;
 use crate::systolic::{EngineMode, MatrixEngine};
 
-use super::layers::{gelu_inplace, layernorm, linear_resident, softmax_rows, softmax_rows_masked};
+use super::kv_cache::{KvCache, LayerKv, TiedHead};
+use super::layers::{
+    gelu_inplace, layernorm, linear_resident, softmax_rows, softmax_rows_causal,
+    softmax_rows_masked,
+};
 use super::tensor::Tensor2;
 use super::weights::Weights;
 
@@ -183,19 +187,14 @@ impl<'w> Encoder<'w> {
     }
 
     fn ffn(&self, x: &Tensor2, layer: usize) -> Tensor2 {
-        let mut hmid = self.proj(
-            x,
-            &format!("layer{layer}.ff1.w"),
-            &format!("layer{layer}.ff1.b"),
-            Site::ffn1(layer as u32),
-        );
+        self.ffn_sites(x, layer, Site::ffn1(layer as u32), Site::ffn2(layer as u32))
+    }
+
+    fn ffn_sites(&self, x: &Tensor2, layer: usize, s1: Site, s2: Site) -> Tensor2 {
+        let mut hmid =
+            self.proj(x, &format!("layer{layer}.ff1.w"), &format!("layer{layer}.ff1.b"), s1);
         gelu_inplace(&mut hmid);
-        self.proj(
-            &hmid,
-            &format!("layer{layer}.ff2.w"),
-            &format!("layer{layer}.ff2.b"),
-            Site::ffn2(layer as u32),
-        )
+        self.proj(&hmid, &format!("layer{layer}.ff2.w"), &format!("layer{layer}.ff2.b"), s2)
     }
 
     /// Full forward pass over a **padded** batch: `tokens` is `[B, S]`
@@ -262,6 +261,111 @@ impl<'w> Encoder<'w> {
     /// kept bit-identical to the seed behavior.
     pub fn forward(&self, tokens: &[u16], batch: usize) -> Tensor2 {
         self.forward_seq(tokens, batch, self.weights.config.max_seq)
+    }
+
+    /// Causal prefill for autoregressive decode: run the whole prompt
+    /// through the causal-attention datapath, populate the (empty) KV
+    /// cache, and return the final hidden state of the **last** position.
+    ///
+    /// This is the batched reference the incremental path is measured
+    /// against: [`Encoder::forward_step`] over the same tokens, one at a
+    /// time, produces bit-identical hidden states and cache contents in
+    /// every [`EngineMode`].  The identity rests on three properties this
+    /// codebase asserts elsewhere: every GEMM output element is an
+    /// independent K-chain (row r of a batched product equals the 1-row
+    /// product of that row), causal masking means position r never reads
+    /// anything later than itself, and RNE quantization at cache-append
+    /// time equals the engine's per-call conversion.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        assert!(cache.is_empty(), "prefill requires an empty KV cache");
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        self.forward_causal(tokens, cache)
+    }
+
+    /// One incremental decode step: append `token` at the next position
+    /// using the cached K/V of everything before it, extend the cache,
+    /// and return the new position's final hidden state — bit-identical
+    /// to a full re-prefill over the extended prefix.
+    pub fn forward_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+        assert!(!cache.is_empty(), "forward_step needs a prefilled cache");
+        self.forward_causal(&[token], cache)
+    }
+
+    /// Next-token vocabulary logits of a decode hidden state through the
+    /// weight-tied head, at the decode-phase head policy site.
+    pub fn decode_logits(&self, head: &TiedHead, h: &[f32]) -> Vec<f32> {
+        head.logits(&self.site_engine(Site::head().decode()), h)
+    }
+
+    /// The shared causal datapath: append `tokens` after the cache's
+    /// current positions.  Prefill is the `cache.len() == 0`, many-token
+    /// case; a decode step is the one-token case.  Every GEMM runs at the
+    /// **decode-phase** policy site of its kind, so both halves of a
+    /// generation resolve the same modes (a split prefill/decode policy
+    /// would otherwise break the step-equals-reprefill invariant).
+    fn forward_causal(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.weights.config;
+        let n = tokens.len();
+        let base = cache.len();
+        assert!(
+            base + n <= cfg.max_seq,
+            "causal forward: {base} cached + {n} new positions exceed max_seq {}",
+            cfg.max_seq
+        );
+        let tok = self.weights.get("emb.tok").expect("emb.tok");
+        let pos = self.weights.get("emb.pos").expect("emb.pos");
+        let mut x = Tensor2::zeros(n, cfg.d_model);
+        for (s, &t) in tokens.iter().enumerate() {
+            let id = t as usize % cfg.vocab;
+            let row = x.row_mut(s);
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = tok.get(id, i) + pos.get(base + s, i);
+            }
+        }
+        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (dh as f32).sqrt();
+        for l in 0..cfg.n_layers {
+            let lw = l as u32;
+            let qkv_site = Site::qkv(lw).decode();
+            let q =
+                self.proj(&x, &format!("layer{l}.q.w"), &format!("layer{l}.q.b"), qkv_site);
+            let k =
+                self.proj(&x, &format!("layer{l}.k.w"), &format!("layer{l}.k.b"), qkv_site);
+            let v =
+                self.proj(&x, &format!("layer{l}.v.w"), &format!("layer{l}.v.b"), qkv_site);
+            for s in 0..n {
+                cache.layer_mut(l).push(k.row(s), v.row(s));
+            }
+            let mut score_engine = self.site_engine(Site::attn_scores(lw).decode());
+            score_engine.threads = 1;
+            let mut ctx_engine = self.site_engine(Site::attn_context(lw).decode());
+            ctx_engine.threads = 1;
+            let ctx =
+                causal_attention(&score_engine, &ctx_engine, &q, cache.layer(l), base, h, dh, scale);
+            let att = self.proj(
+                &ctx,
+                &format!("layer{l}.o.w"),
+                &format!("layer{l}.o.b"),
+                Site::attn_out(lw).decode(),
+            );
+            x.add_assign(&att);
+            layernorm(
+                &mut x,
+                self.weights.vec(&format!("layer{l}.ln1.g")).unwrap(),
+                self.weights.vec(&format!("layer{l}.ln1.b")).unwrap(),
+                1e-5,
+            );
+            let ff = self.ffn_sites(&x, l, Site::ffn1(lw).decode(), Site::ffn2(lw).decode());
+            x.add_assign(&ff);
+            layernorm(
+                &mut x,
+                self.weights.vec(&format!("layer{l}.ln2.g")).unwrap(),
+                self.weights.vec(&format!("layer{l}.ln2.b")).unwrap(),
+                1e-5,
+            );
+        }
+        cache.advance(n);
+        x.row(n - 1).to_vec()
     }
 
     /// Forward pass with per-layer PE instrumentation (sequential, slow —
@@ -363,6 +467,90 @@ impl<'w> Encoder<'w> {
 /// they are distinct precision-policy sites — and both engines handed in
 /// are single-threaded: their GEMMs run inline on this task's thread,
 /// never nesting pool dispatch.
+/// Causal multi-head attention of `n` fresh query rows over a KV cache
+/// holding `base + n` positions (the last `n` just appended): row `r`
+/// attends positions `0..=base+r`.  Shared verbatim by batched prefill
+/// (`n` = prompt length) and the incremental step (`n = 1`), which is
+/// what makes the two bit-identical: the score product's row `r` is an
+/// independent K-chain per element, the causal softmax runs the same
+/// live-width operation sequence either way, and the context product is
+/// computed **per row over exactly the live keys** — never as a padded
+/// GEMM whose masked zero weights could still perturb an approximate
+/// accumulation.  Bf16 engines consume the cache's resident bf16 rows
+/// directly (gathered into engine-format planes, no re-quantization);
+/// FP32 engines read the FP32 rows.
+#[allow(clippy::too_many_arguments)]
+fn causal_attention(
+    score_engine: &MatrixEngine,
+    ctx_engine: &MatrixEngine,
+    q: &Tensor2,
+    kv: &LayerKv,
+    base: usize,
+    heads: usize,
+    dh: usize,
+    scale: f32,
+) -> Tensor2 {
+    let n = q.rows;
+    let d = heads * dh;
+    let total = base + n;
+    assert_eq!(kv.rows(), total, "KV cache rows must cover every query position");
+    let mut out = Tensor2::zeros(n, d);
+    for hh in 0..heads {
+        let c0 = hh * dh;
+        let qb = q.block(0, n, c0, dh);
+        // scores = (Q · Kᵀ) * scale over the whole cache — [n, total];
+        // future columns are discarded by the causal mask below (each
+        // score element is an independent product, so computing-then-
+        // masking cannot disturb the live ones).
+        let mut scores = if score_engine.mode.is_bf16() {
+            let mut wt: Vec<u16> = Vec::with_capacity(total * dh);
+            for j in 0..total {
+                wt.extend_from_slice(&kv.k16_row(j)[c0..c0 + dh]);
+            }
+            Tensor2::from_vec(
+                n,
+                total,
+                score_engine.matmul_resident(&qb.data, &wt, n, dh, total),
+            )
+        } else {
+            let mut kb = Tensor2::zeros(total, dh);
+            for j in 0..total {
+                kb.row_mut(j).copy_from_slice(&kv.k_row(j)[c0..c0 + dh]);
+            }
+            let kt = kb.transpose();
+            Tensor2::from_vec(n, total, score_engine.matmul(&qb.data, &kt.data, n, dh, total))
+        };
+        for val in scores.data.iter_mut() {
+            *val *= scale;
+        }
+        softmax_rows_causal(&mut scores, base);
+        // ctx row r = P[r, ..live] · V[..live] — one engine GEMM per row
+        // at its exact causal width.
+        for r in 0..n {
+            let w = base + r + 1;
+            let live = &scores.row(r)[..w];
+            let cb = if ctx_engine.mode.is_bf16() {
+                let mut wtv = vec![0u16; dh * w];
+                for i in 0..w {
+                    let vr = &kv.v16_row(i)[c0..c0 + dh];
+                    for (j, &b) in vr.iter().enumerate() {
+                        wtv[j * w + i] = b;
+                    }
+                }
+                ctx_engine.matmul_resident(live, &wtv, 1, w, dh)
+            } else {
+                let mut vb = Tensor2::zeros(w, dh);
+                for i in 0..w {
+                    vb.row_mut(i).copy_from_slice(&kv.v_row(i)[c0..c0 + dh]);
+                }
+                ctx_engine.matmul(live, &vb.data, 1, w, dh)
+            };
+            out.row_mut(r)[c0..c0 + dh].copy_from_slice(&cb);
+        }
+    }
+    out
+}
+
 #[allow(clippy::too_many_arguments)]
 fn attention_sequence(
     score_engine: &MatrixEngine,
@@ -569,6 +757,91 @@ mod tests {
         let same = Encoder::with_policy(&w, MatrixEngine::new(bf16), std::sync::Arc::new(q))
             .forward(&t, 2);
         assert_eq!(base.data, same.data);
+    }
+
+    #[test]
+    fn incremental_decode_is_bit_identical_to_prefill_in_every_mode() {
+        use crate::model::kv_cache::KvCache;
+        let w = Weights::random(cfg(), 41);
+        let toks: Vec<u16> = {
+            let mut rng = Prng::new(42);
+            (0..6).map(|_| rng.below(32) as u16).collect()
+        };
+        for mode in ["fp32", "bf16", "bf16an-1-1", "bf16an-2-2"] {
+            let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::parse(mode).unwrap()));
+            // Reference: one batched causal prefill over the whole prefix.
+            let mut full = KvCache::new(&w.config);
+            let h_full = enc.prefill(&toks, &mut full);
+            // Incremental: prefill the first token, then step the rest.
+            let mut inc = KvCache::new(&w.config);
+            let mut h = enc.prefill(&toks[..1], &mut inc);
+            for &t in &toks[1..] {
+                h = enc.forward_step(t, &mut inc);
+            }
+            assert_eq!(h, h_full, "mode {mode}: final hidden state");
+            assert_eq!(inc.len(), full.len());
+            // The caches agree bit for bit in both storage formats.
+            for l in 0..w.config.n_layers {
+                for r in 0..full.len() {
+                    assert_eq!(inc.layer(l).k_row(r), full.layer(l).k_row(r), "{mode} K l{l} r{r}");
+                    assert_eq!(inc.layer(l).v16_row(r), full.layer(l).v16_row(r), "{mode} V16 l{l} r{r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_logits_are_finite_and_greedy_generation_is_deterministic() {
+        use crate::model::kv_cache::{greedy_argmax, KvCache, TiedHead};
+        let w = Weights::random(cfg(), 43);
+        let head = TiedHead::new(&w);
+        let enc = Encoder::new(&w, MatrixEngine::new(EngineMode::parse("bf16an-1-2").unwrap()));
+        let gen = |prompt: &[u16]| -> Vec<u16> {
+            let mut cache = KvCache::new(&w.config);
+            let mut h = enc.prefill(prompt, &mut cache);
+            let mut out = Vec::new();
+            for _ in 0..cache.remaining() {
+                let logits = enc.decode_logits(&head, &h);
+                assert_eq!(logits.len(), 32);
+                assert!(logits.iter().all(|v| v.is_finite()));
+                let t = greedy_argmax(&logits);
+                out.push(t);
+                if cache.remaining() == 0 {
+                    break;
+                }
+                h = enc.forward_step(t, &mut cache);
+            }
+            out
+        };
+        let a = gen(&[3, 1, 4]);
+        let b = gen(&[3, 1, 4]);
+        assert_eq!(a, b, "greedy decode must be a pure function of the prompt");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn split_prefill_policy_still_keeps_step_equals_reprefill() {
+        // A policy that prices decode differently from prefill must not
+        // break the incremental-vs-reprefill invariant: both causal paths
+        // resolve the same decode-phase sites.
+        use crate::autotune::PrecisionPolicy;
+        use crate::model::kv_cache::KvCache;
+        let w = Weights::random(cfg(), 45);
+        let bf16 = EngineMode::parse("bf16").unwrap();
+        let mut p = PrecisionPolicy::uniform(bf16);
+        p.set(Site::ffn1(0).decode(), EngineMode::parse("bf16an-2-2").unwrap());
+        p.set(Site::attn_scores(1).decode(), EngineMode::Fp32);
+        let enc =
+            Encoder::with_policy(&w, MatrixEngine::new(bf16), std::sync::Arc::new(p));
+        let toks = [7u16, 2, 9, 30];
+        let mut full = KvCache::new(&w.config);
+        let h_full = enc.prefill(&toks, &mut full);
+        let mut inc = KvCache::new(&w.config);
+        let mut h = enc.prefill(&toks[..2], &mut inc);
+        for &t in &toks[2..] {
+            h = enc.forward_step(t, &mut inc);
+        }
+        assert_eq!(h, h_full);
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Per-sequence KV cache for autoregressive decode, resident in engine
+//! format like the weight planes, plus the weight-tied vocabulary head.
+//!
+//! Every appended K/V row is stored twice: the FP32 row the host math
+//! produced, and its RNE bf16 quantization (the engine's storage format).
+//! Quantizing **once at append time** is bit-identical to the per-call
+//! conversion the engine would do — RNE is deterministic and element-wise,
+//! the same encoder behind [`crate::systolic::matmul::transpose_to_bf16`]
+//! and [`crate::model::tensor::Bf16Plane`] — so a decode step consuming
+//! the quantized rows reproduces a full re-prefill forward bit for bit
+//! (the invariant `rust/tests/integration_decode.rs` hangs off).
+//!
+//! The cache grows strictly append-only while a sequence is live and is
+//! evicted wholesale when the sequence completes (the continuous batcher
+//! drops the owning entry); there is no partial invalidation to get wrong.
+
+use crate::arith::f32_to_bf16;
+use crate::systolic::MatrixEngine;
+
+use super::weights::{ModelConfig, Weights};
+
+/// One layer's cached keys and values: `rows × d_model`, FP32 and bf16.
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    k16: Vec<u16>,
+    v16: Vec<u16>,
+}
+
+impl LayerKv {
+    fn new(d: usize, capacity: usize) -> LayerKv {
+        LayerKv {
+            d,
+            k: Vec::with_capacity(capacity * d),
+            v: Vec::with_capacity(capacity * d),
+            k16: Vec::with_capacity(capacity * d),
+            v16: Vec::with_capacity(capacity * d),
+        }
+    }
+
+    /// Cached positions in this layer.
+    pub fn rows(&self) -> usize {
+        self.k.len() / self.d
+    }
+
+    /// Append one position's K and V rows, quantizing to the engine
+    /// format exactly once.
+    pub(crate) fn push(&mut self, krow: &[f32], vrow: &[f32]) {
+        assert_eq!(krow.len(), self.d, "K row width");
+        assert_eq!(vrow.len(), self.d, "V row width");
+        self.k.extend_from_slice(krow);
+        self.v.extend_from_slice(vrow);
+        self.k16.extend(krow.iter().map(|&x| f32_to_bf16(x)));
+        self.v16.extend(vrow.iter().map(|&x| f32_to_bf16(x)));
+    }
+
+    #[inline]
+    pub fn k_row(&self, r: usize) -> &[f32] {
+        &self.k[r * self.d..(r + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn v_row(&self, r: usize) -> &[f32] {
+        &self.v[r * self.d..(r + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn k16_row(&self, r: usize) -> &[u16] {
+        &self.k16[r * self.d..(r + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn v16_row(&self, r: usize) -> &[u16] {
+        &self.v16[r * self.d..(r + 1) * self.d]
+    }
+
+    /// Resident bytes of this layer (both precisions).
+    pub fn bytes(&self) -> usize {
+        self.k.len() * 4 + self.v.len() * 4 + self.k16.len() * 2 + self.v16.len() * 2
+    }
+}
+
+/// The per-sequence cache: one [`LayerKv`] per encoder layer, bounded by
+/// the model's `max_seq` positions.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    max_seq: usize,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            layers: (0..cfg.n_layers).map(|_| LayerKv::new(cfg.d_model, cfg.max_seq)).collect(),
+            max_seq: cfg.max_seq,
+            len: 0,
+        }
+    }
+
+    /// Completed (fully appended across every layer) positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache (and the model) can hold.
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Positions still appendable.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    pub fn layer(&self, l: usize) -> &LayerKv {
+        &self.layers[l]
+    }
+
+    pub(crate) fn layer_mut(&mut self, l: usize) -> &mut LayerKv {
+        &mut self.layers[l]
+    }
+
+    /// Total resident bytes across layers (observability).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+
+    /// Mark `n` freshly appended positions complete.  Callers append the
+    /// rows layer by layer (a batched prefill fills layer 0 for every
+    /// position before touching layer 1), so completion is a separate,
+    /// checked step.
+    pub(crate) fn advance(&mut self, n: usize) {
+        assert!(self.len + n <= self.max_seq, "KV cache over capacity");
+        for (l, layer) in self.layers.iter().enumerate() {
+            assert_eq!(layer.rows(), self.len + n, "layer {l} row count out of step");
+        }
+        self.len += n;
+    }
+}
+
+/// The weight-tied vocabulary head for decode: next-token logits are
+/// `h · emb.tokᵀ`, run on the engine like every other projection.  Both
+/// storage formats are built once — the transposed FP32 matrix for FP32
+/// engines, and the engine-format plane (the RNE bf16 quantization of
+/// `emb.tok`, which *is* the column-major plane of its transpose) for
+/// bf16 engines, exactly as resident as the weight planes.
+#[derive(Debug, Clone)]
+pub struct TiedHead {
+    pub vocab: usize,
+    d: usize,
+    /// `emb.tokᵀ` as a row-major `[d, vocab]` FP32 matrix.
+    w_t: Vec<f32>,
+    /// Engine-format plane: `plane[j*d + i] = bf16(tok[j][i])`.
+    plane: Vec<u16>,
+}
+
+impl TiedHead {
+    pub fn new(w: &Weights) -> TiedHead {
+        let tok = w.get("emb.tok").expect("emb.tok");
+        let (vocab, d) = (tok.rows, tok.cols);
+        let mut w_t = vec![0.0f32; d * vocab];
+        for j in 0..vocab {
+            for i in 0..d {
+                w_t[i * vocab + j] = tok.get(j, i);
+            }
+        }
+        let plane: Vec<u16> = tok.data.iter().map(|&x| f32_to_bf16(x)).collect();
+        TiedHead { vocab, d, w_t, plane }
+    }
+
+    /// Vocabulary logits of one hidden row.  Bf16 engines consume the
+    /// resident plane (no per-call RNE of the embedding matrix); FP32
+    /// engines take the transposed FP32 matrix.  Bit-exact across the two
+    /// arms for any given mode — the plane is the same RNE encoding the
+    /// per-call path would produce.
+    pub fn logits(&self, engine: &MatrixEngine, h: &[f32]) -> Vec<f32> {
+        assert_eq!(h.len(), self.d, "hidden width");
+        if engine.mode.is_bf16() {
+            engine.matmul_resident(h, &self.plane, 1, self.d, self.vocab)
+        } else {
+            engine.matmul(h, &self.w_t, 1, self.d, self.vocab)
+        }
+    }
+}
+
+/// Deterministic greedy sampling: the highest logit, lowest index on
+/// ties — so a decode path's token stream is a pure function of its
+/// logits, which is what lets bit-identical logits prove bit-identical
+/// generations.
+pub fn greedy_argmax(logits: &[f32]) -> u16 {
+    assert!(!logits.is_empty(), "empty logits");
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::EngineMode;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 16, n_heads: 2, d_ff: 32, n_layers: 2, max_seq: 8, n_classes: 2 }
+    }
+
+    #[test]
+    fn append_and_advance_track_positions() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), 8);
+        let row: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        for l in 0..2 {
+            cache.layer_mut(l).push(&row, &row);
+            cache.layer_mut(l).push(&row, &row);
+        }
+        cache.advance(2);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.remaining(), 6);
+        assert_eq!(cache.layer(0).rows(), 2);
+        assert_eq!(cache.layer(1).k_row(1), &row[..]);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn appended_rows_quantize_like_the_engine() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        let krow: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.33).collect();
+        let vrow: Vec<f32> = (0..16).map(|i| (i as f32) * -0.11).collect();
+        cache.layer_mut(0).push(&krow, &vrow);
+        let want_k: Vec<u16> = krow.iter().map(|&x| f32_to_bf16(x)).collect();
+        let want_v: Vec<u16> = vrow.iter().map(|&x| f32_to_bf16(x)).collect();
+        assert_eq!(cache.layer(0).k16_row(0), &want_k[..]);
+        assert_eq!(cache.layer(0).v16_row(0), &want_v[..]);
+        // And the FP32 rows survive untouched.
+        assert_eq!(cache.layer(0).v_row(0), &vrow[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn advancing_past_capacity_panics() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        let row = vec![0.0f32; 16];
+        for _ in 0..9 {
+            for l in 0..2 {
+                cache.layer_mut(l).push(&row, &row);
+            }
+        }
+        cache.advance(9);
+    }
+
+    #[test]
+    fn tied_head_resident_plane_matches_per_call_quantization() {
+        let w = Weights::random(cfg(), 31);
+        let head = TiedHead::new(&w);
+        let h: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) * 0.2).collect();
+        for mode in ["bf16", "bf16an-1-1", "bf16an-2-2"] {
+            let engine = MatrixEngine::new(EngineMode::parse(mode).unwrap());
+            let resident = head.logits(&engine, &h);
+            // Per-call path: hand the engine the transposed FP32 matrix.
+            let per_call = engine.matmul(&h, &head.w_t, 1, 16, head.vocab);
+            assert_eq!(resident, per_call, "mode {mode}");
+        }
+        // FP32 path: a plain dot product against emb.tok rows.
+        let engine = MatrixEngine::new(EngineMode::Fp32);
+        let y = head.logits(&engine, &h);
+        assert_eq!(y.len(), 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn greedy_argmax_is_deterministic_lowest_tie() {
+        assert_eq!(greedy_argmax(&[0.0, 3.0, -1.0]), 1);
+        assert_eq!(greedy_argmax(&[2.0, 2.0, 2.0]), 0);
+        assert_eq!(greedy_argmax(&[-1.0]), 0);
+    }
+}

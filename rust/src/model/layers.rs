@@ -88,17 +88,62 @@ pub fn softmax_rows_masked(x: &mut Tensor2, valid: usize) {
     }
     for r in 0..x.rows {
         let (live, pad) = x.row_mut(r).split_at_mut(valid);
-        let m = live.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for v in live.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        for v in live.iter_mut() {
-            *v *= inv;
-        }
+        softmax_live(live);
         pad.fill(0.0);
+    }
+}
+
+/// Causal masked softmax: row `r` normalizes over its first `base + r + 1`
+/// columns (its own position plus everything before it) and zeroes the
+/// rest.  `base` is the number of already-cached context positions ahead
+/// of row 0 — a full causal prefill uses `base = 0`; a single decode step
+/// over a `t`-deep KV cache is the degenerate one-row case with
+/// `base = t - 1`.  Each row's live prefix runs the exact operation
+/// sequence of [`softmax_rows_masked`] at that width, so a row here is
+/// bit-identical to masking a standalone `[1, w]` score row — the
+/// invariant that makes incremental decode reproduce prefill bit for bit.
+pub fn softmax_rows_causal(x: &mut Tensor2, base: usize) {
+    assert!(
+        base + x.rows <= x.cols,
+        "causal widths {}..={} exceed {} columns",
+        base + 1,
+        base + x.rows,
+        x.cols
+    );
+    for r in 0..x.rows {
+        let (live, pad) = x.row_mut(r).split_at_mut(base + r + 1);
+        softmax_live(live);
+        pad.fill(0.0);
+    }
+}
+
+/// Numerically stable softmax over one live (non-empty) score prefix.
+/// When every live score is `-inf` (a fully saturated row — aggressive
+/// bf16an configs can produce one), the row max is `-inf` too, so the
+/// shifted scores are `-inf - -inf = NaN` and the whole row turns NaN;
+/// and a row whose exponentials all underflow sums to zero, turning
+/// `inv` into `inf`.  Both degenerate rows become an explicit empty
+/// distribution (all zeros), like the `valid == 0` mask, instead of
+/// poisoning everything downstream.  Finite well-formed rows take the
+/// exact operation sequence the unguarded code always took.
+fn softmax_live(live: &mut [f32]) {
+    let m = live.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        live.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for v in live.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum == 0.0 {
+        live.fill(0.0);
+        return;
+    }
+    let inv = 1.0 / sum;
+    for v in live.iter_mut() {
+        *v *= inv;
     }
 }
 
@@ -209,6 +254,50 @@ mod tests {
         let mut x = Tensor2::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
         softmax_rows_masked(&mut x, 0);
         assert_eq!(x.data, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn masked_softmax_all_neg_inf_row_is_all_zero_not_nan() {
+        // Regression: a fully saturated score row (every live entry -inf)
+        // used to come out NaN (the shifted scores are -inf - -inf); it
+        // must degrade to an explicit empty distribution instead.
+        let ninf = f32::NEG_INFINITY;
+        let mut x = Tensor2::from_vec(2, 3, vec![ninf, ninf, 99.0, 0.0, 1.0, 2.0]);
+        softmax_rows_masked(&mut x, 2);
+        assert_eq!(&x.row(0)[..], &[0.0, 0.0, 0.0], "saturated row must be all-zero");
+        let live: f32 = x.row(1)[..2].iter().sum();
+        assert!((live - 1.0).abs() < 1e-6, "healthy rows are untouched by the guard");
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causal_softmax_rows_match_masked_rows_bitwise() {
+        use crate::prng::Prng;
+        let mut rng = Prng::new(73);
+        for base in [0usize, 2] {
+            let rows = 4;
+            let cols = base + rows + 1; // one extra column stays padding everywhere
+            let data: Vec<f32> =
+                (0..rows * cols).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let mut c = Tensor2::from_vec(rows, cols, data.clone());
+            softmax_rows_causal(&mut c, base);
+            for r in 0..rows {
+                let mut one =
+                    Tensor2::from_vec(1, cols, data[r * cols..(r + 1) * cols].to_vec());
+                softmax_rows_masked(&mut one, base + r + 1);
+                assert_eq!(c.row(r), one.row(0), "base {base} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_softmax_single_row_is_masked_softmax_at_depth() {
+        // The decode-step shape: one query row over a t-deep cache.
+        let mut a = Tensor2::from_vec(1, 5, vec![0.3, -1.0, 2.0, 0.5, 9e9]);
+        let mut b = a.clone();
+        softmax_rows_causal(&mut a, 3); // width 3 + 0 + 1 = 4
+        softmax_rows_masked(&mut b, 4);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 pub mod encoder;
 pub mod eval;
+pub mod kv_cache;
 pub mod layers;
 pub mod tensor;
 pub mod weights;
@@ -16,5 +17,6 @@ pub use encoder::Encoder;
 pub use eval::{
     evaluate_task, evaluate_task_policy, paper_modes, render_table1, run_table1, EvalResult,
 };
+pub use kv_cache::{greedy_argmax, KvCache, TiedHead};
 pub use tensor::{Bf16Plane, Tensor2};
 pub use weights::{ModelConfig, Weights};

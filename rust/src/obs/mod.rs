@@ -134,6 +134,39 @@ impl StageTimings {
     }
 }
 
+/// The measured segments of one token's trip through the continuous
+/// decode batcher — the per-step analogue of [`Stage`].  `JoinWait` is
+/// recorded once per sequence (admission → prefill start); the other two
+/// are recorded on every generated token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeStage {
+    /// Submission → the decode scheduler admitted the sequence into the
+    /// running batch (the continuous-batching join latency).
+    JoinWait,
+    /// One incremental forward step (`forward_step` + vocab head) for one
+    /// sequence.
+    StepGemm,
+    /// Step end → the token event was handed to the reply sink.
+    TokenFlush,
+}
+
+impl DecodeStage {
+    pub const ALL: [DecodeStage; 3] =
+        [DecodeStage::JoinWait, DecodeStage::StepGemm, DecodeStage::TokenFlush];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DecodeStage::JoinWait => "join_wait",
+            DecodeStage::StepGemm => "step_gemm",
+            DecodeStage::TokenFlush => "token_flush",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// Mint a fresh nonzero trace id.  `0` is reserved as "unset" on the wire.
 pub fn next_trace_id() -> u64 {
     static NEXT: AtomicU64 = AtomicU64::new(1);
@@ -511,6 +544,40 @@ impl FidelitySnapshot {
     }
 }
 
+/// Per-`(mode, depth bin)` logit divergence of decode against the FP32
+/// reference: how far the approximate datapath has wandered after N
+/// generated tokens.  Depth bins are powers of two (`depth_bin = b` covers
+/// decode depths `[2^b, 2^(b+1))`), matching the bench sweep's depths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DivergenceSnapshot {
+    pub mode: String,
+    pub depth_bin: u8,
+    pub samples: u64,
+    /// Σ mean|Δlogit| × 1e6, summed over samples.
+    pub sum_micro: u64,
+}
+
+impl DivergenceSnapshot {
+    /// Shallowest decode depth this bin covers.
+    pub fn depth_lo(&self) -> u64 {
+        1u64 << self.depth_bin.min(63)
+    }
+
+    /// Mean of the per-step mean-|Δlogit| samples (0.0 when unsampled).
+    pub fn mean_abs(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.sum_micro as f64 / self.samples as f64 / 1e6
+        }
+    }
+
+    fn merge(&mut self, other: &DivergenceSnapshot) {
+        self.samples += other.samples;
+        self.sum_micro += other.sum_micro;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Global singleton
 // ---------------------------------------------------------------------------
@@ -518,6 +585,8 @@ impl FidelitySnapshot {
 struct Obs {
     enabled: AtomicBool,
     stages: [LatencyHistogram; 4],
+    decode_stages: [LatencyHistogram; 3],
+    divergence: Mutex<BTreeMap<(String, u8), (u64, u64)>>,
     journal: Journal,
 }
 
@@ -526,6 +595,8 @@ fn obs() -> &'static Obs {
     OBS.get_or_init(|| Obs {
         enabled: AtomicBool::new(true),
         stages: std::array::from_fn(|_| LatencyHistogram::new()),
+        decode_stages: std::array::from_fn(|_| LatencyHistogram::new()),
+        divergence: Mutex::new(BTreeMap::new()),
         journal: Journal::new(),
     })
 }
@@ -565,6 +636,30 @@ pub fn record_timings(trace: u64, t: &StageTimings) {
     }
 }
 
+/// Record one decode-step stage duration into the global histograms.
+pub fn record_decode_stage(stage: DecodeStage, us: u64) {
+    if !enabled() {
+        return;
+    }
+    obs().decode_stages[stage.index()].record(us);
+}
+
+/// Record one divergence sample: at decode depth `depth` (≥ 1 generated
+/// tokens), mode `mode`'s logits sit `mean_abs` away from the FP32
+/// reference on average.  Fed by `serve --decode-shadow` and the
+/// `bench --decode` sweep.
+pub fn record_decode_divergence(mode: &str, depth: usize, mean_abs: f64) {
+    if !enabled() || depth == 0 || !mean_abs.is_finite() || mean_abs < 0.0 {
+        return;
+    }
+    let bin = (usize::BITS - 1 - depth.leading_zeros()).min(31) as u8;
+    let micro = (mean_abs * 1e6).round().min(u64::MAX as f64) as u64;
+    let mut map = obs().divergence.lock().unwrap_or_else(|e| e.into_inner());
+    let cell = map.entry((mode.to_string(), bin)).or_insert((0, 0));
+    cell.0 += 1;
+    cell.1 = cell.1.saturating_add(micro);
+}
+
 /// Most-recent journal events as JSONL (one `{"trace":..,"stage":..}` per
 /// line), oldest first.
 pub fn journal_jsonl() -> String {
@@ -594,9 +689,23 @@ pub fn snapshot() -> ObsSnapshot {
         .values()
         .map(|c| c.snapshot())
         .collect::<Vec<_>>();
+    let divergence = o
+        .divergence
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|((mode, bin), &(samples, sum_micro))| DivergenceSnapshot {
+            mode: mode.clone(),
+            depth_bin: *bin,
+            samples,
+            sum_micro,
+        })
+        .collect();
     ObsSnapshot {
         stages: std::array::from_fn(|i| o.stages[i].snapshot()),
+        decode_stages: std::array::from_fn(|i| o.decode_stages[i].snapshot()),
         fidelity,
+        divergence,
     }
 }
 
@@ -604,13 +713,16 @@ pub fn snapshot() -> ObsSnapshot {
 // Snapshot: merge, wire codec, renderers
 // ---------------------------------------------------------------------------
 
-/// Everything the process knows: one histogram per [`Stage`] plus the
-/// per-`(site, mode)` fidelity counters.  This is the payload of the AMFN
-/// `Stats` frame (kind 6) and of `amfma stat`.
+/// Everything the process knows: one histogram per [`Stage`], the
+/// decode-step histograms per [`DecodeStage`], the per-`(site, mode)`
+/// fidelity counters and the decode divergence cells.  This is the
+/// payload of the AMFN `Stats` frame (kind 6) and of `amfma stat`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObsSnapshot {
     pub stages: [HistSnapshot; 4],
+    pub decode_stages: [HistSnapshot; 3],
     pub fidelity: Vec<FidelitySnapshot>,
+    pub divergence: Vec<DivergenceSnapshot>,
 }
 
 impl Default for ObsSnapshot {
@@ -619,19 +731,29 @@ impl Default for ObsSnapshot {
     }
 }
 
-const SNAPSHOT_CODEC_VERSION: u8 = 1;
+/// v2 appended the decode section (step histograms + divergence cells);
+/// v1 payloads from older shards still decode, with that section empty.
+const SNAPSHOT_CODEC_VERSION: u8 = 2;
 
 impl ObsSnapshot {
     pub fn empty() -> Self {
-        ObsSnapshot { stages: std::array::from_fn(|_| HistSnapshot::empty()), fidelity: Vec::new() }
+        ObsSnapshot {
+            stages: std::array::from_fn(|_| HistSnapshot::empty()),
+            decode_stages: std::array::from_fn(|_| HistSnapshot::empty()),
+            fidelity: Vec::new(),
+            divergence: Vec::new(),
+        }
     }
 
     /// Fold another process's snapshot into this one: histograms add
     /// bucket-wise (quantiles are then computed on the merged buckets —
     /// never averaged across shards), fidelity entries join on
-    /// `(site, mode)`.
+    /// `(site, mode)`, divergence cells on `(mode, depth_bin)`.
     pub fn merge(&mut self, other: &ObsSnapshot) {
         for (s, o) in self.stages.iter_mut().zip(other.stages.iter()) {
+            s.merge(o);
+        }
+        for (s, o) in self.decode_stages.iter_mut().zip(other.decode_stages.iter()) {
             s.merge(o);
         }
         let mut by_key: BTreeMap<FidelityKey, FidelitySnapshot> = self
@@ -649,6 +771,21 @@ impl ObsSnapshot {
             }
         }
         self.fidelity = by_key.into_values().collect();
+        let mut by_cell: BTreeMap<(String, u8), DivergenceSnapshot> = self
+            .divergence
+            .drain(..)
+            .map(|d| ((d.mode.clone(), d.depth_bin), d))
+            .collect();
+        for d in &other.divergence {
+            let key = (d.mode.clone(), d.depth_bin);
+            match by_cell.get_mut(&key) {
+                Some(mine) => mine.merge(d),
+                None => {
+                    by_cell.insert(key, d.clone());
+                }
+            }
+        }
+        self.divergence = by_cell.into_values().collect();
     }
 
     /// Compact little-endian binary form (the AMFN `Stats` body).
@@ -679,13 +816,29 @@ impl ObsSnapshot {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        // v2 decode section: step histograms, then divergence cells.
+        for h in &self.decode_stages {
+            out.extend_from_slice(&h.count.to_le_bytes());
+            out.extend_from_slice(&h.sum.to_le_bytes());
+            out.extend_from_slice(&h.max.to_le_bytes());
+            for b in &h.buckets {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.divergence.len() as u32).to_le_bytes());
+        for d in &self.divergence {
+            enc_str(&mut out, &d.mode);
+            out.push(d.depth_bin);
+            out.extend_from_slice(&d.samples.to_le_bytes());
+            out.extend_from_slice(&d.sum_micro.to_le_bytes());
+        }
         out
     }
 
     pub fn decode(bytes: &[u8]) -> Result<ObsSnapshot, String> {
         let mut cur = Dec { bytes, off: 0 };
         let version = cur.u8()?;
-        if version != SNAPSHOT_CODEC_VERSION {
+        if version != 1 && version != SNAPSHOT_CODEC_VERSION {
             return Err(format!("unknown stats codec version {version}"));
         }
         let mut stages: [HistSnapshot; 4] = std::array::from_fn(|_| HistSnapshot::empty());
@@ -726,10 +879,38 @@ impl ObsSnapshot {
                 fm_rel_micro: cur.u64()?,
             });
         }
+        let mut decode_stages: [HistSnapshot; 3] = std::array::from_fn(|_| HistSnapshot::empty());
+        let mut divergence = Vec::new();
+        if version >= 2 {
+            for h in decode_stages.iter_mut() {
+                h.count = cur.u64()?;
+                h.sum = cur.u64()?;
+                h.max = cur.u64()?;
+                for b in h.buckets.iter_mut() {
+                    *b = cur.u64()?;
+                }
+            }
+            let nd = cur.u32()? as usize;
+            // mode string + bin byte + two u64s per cell.
+            if nd > cur.bytes.len() / 17 + 1 {
+                return Err(format!("absurd divergence entry count {nd}"));
+            }
+            divergence.reserve(nd);
+            for _ in 0..nd {
+                let mode = cur.str()?;
+                let depth_bin = cur.u8()?;
+                divergence.push(DivergenceSnapshot {
+                    mode,
+                    depth_bin,
+                    samples: cur.u64()?,
+                    sum_micro: cur.u64()?,
+                });
+            }
+        }
         if cur.off != bytes.len() {
             return Err(format!("{} trailing bytes after stats snapshot", bytes.len() - cur.off));
         }
-        Ok(ObsSnapshot { stages, fidelity })
+        Ok(ObsSnapshot { stages, decode_stages, fidelity, divergence })
     }
 
     /// JSON document, schema `amfma-stats-v1` (validated by
@@ -762,7 +943,41 @@ impl ObsSnapshot {
             }
             s.push_str("]}");
         }
-        s.push_str("},\"fidelity\":[");
+        s.push_str("},\"decode\":{\"stages\":{");
+        for (i, stage) in DecodeStage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let h = &self.decode_stages[stage.index()];
+            s.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum_us\":{},\"max_us\":{},\"mean_us\":{:.1},\
+                 \"p50_us\":{:.1},\"p95_us\":{:.1},\"p99_us\":{:.1}}}",
+                stage.label(),
+                h.count,
+                h.sum,
+                h.max,
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+            ));
+        }
+        s.push_str("},\"divergence\":[");
+        for (i, d) in self.divergence.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"mode\":\"{}\",\"depth_bin\":{},\"depth_lo\":{},\"samples\":{},\
+                 \"mean_abs\":{:.6}}}",
+                json_escape(&d.mode),
+                d.depth_bin,
+                d.depth_lo(),
+                d.samples,
+                d.mean_abs(),
+            ));
+        }
+        s.push_str("]},\"fidelity\":[");
         for (i, f) in self.fidelity.iter().enumerate() {
             if i > 0 {
                 s.push(',');
@@ -812,6 +1027,33 @@ impl ObsSnapshot {
             s.push_str(&format!("amfma_stage_latency_us_sum{{stage=\"{l}\"}} {}\n", h.sum));
             s.push_str(&format!("amfma_stage_latency_us_count{{stage=\"{l}\"}} {}\n", h.count));
             s.push_str(&format!("amfma_stage_latency_us_max{{stage=\"{l}\"}} {}\n", h.max));
+        }
+        s.push_str("# HELP amfma_decode_stage_latency_us per-token decode stage latency (microseconds)\n");
+        s.push_str("# TYPE amfma_decode_stage_latency_us summary\n");
+        for stage in DecodeStage::ALL {
+            let h = &self.decode_stages[stage.index()];
+            let l = stage.label();
+            for (q, v) in
+                [("0.5", h.quantile(0.50)), ("0.95", h.quantile(0.95)), ("0.99", h.quantile(0.99))]
+            {
+                s.push_str(&format!(
+                    "amfma_decode_stage_latency_us{{stage=\"{l}\",quantile=\"{q}\"}} {v:.1}\n"
+                ));
+            }
+            s.push_str(&format!("amfma_decode_stage_latency_us_sum{{stage=\"{l}\"}} {}\n", h.sum));
+            s.push_str(&format!(
+                "amfma_decode_stage_latency_us_count{{stage=\"{l}\"}} {}\n",
+                h.count
+            ));
+        }
+        s.push_str("# HELP amfma_decode_divergence mean |logit delta| vs FP32 by decode depth\n");
+        for d in &self.divergence {
+            let labels = format!("mode=\"{}\",depth_lo=\"{}\"", d.mode, d.depth_lo());
+            s.push_str(&format!("amfma_decode_divergence_samples{{{labels}}} {}\n", d.samples));
+            s.push_str(&format!(
+                "amfma_decode_divergence_mean_abs{{{labels}}} {:.6}\n",
+                d.mean_abs()
+            ));
         }
         s.push_str("# HELP amfma_fidelity per-(site,mode) numeric fidelity counters\n");
         for f in &self.fidelity {
@@ -1053,6 +1295,18 @@ mod tests {
             fm_samples: n,
             fm_rel_micro: 40 * n,
         });
+        for (i, h) in s.decode_stages.iter_mut().enumerate() {
+            h.count = 2 * n + i as u64;
+            h.sum = 50 * (2 * n + i as u64);
+            h.max = 77;
+            h.buckets[5] = 2 * n + i as u64;
+        }
+        s.divergence.push(DivergenceSnapshot {
+            mode: "bf16an-1-2".to_string(),
+            depth_bin: 3,
+            samples: n,
+            sum_micro: 250 * n,
+        });
         s
     }
 
@@ -1096,6 +1350,46 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_codec_accepts_legacy_v1_payloads() {
+        // Hand-assembled v1 body: version byte, 4 empty stage histograms,
+        // zero fidelity entries — the smallest payload an old shard emits.
+        let mut v1 = vec![1u8];
+        for _ in 0..4 {
+            for _ in 0..(3 + HIST_BUCKETS) {
+                v1.extend_from_slice(&0u64.to_le_bytes());
+            }
+        }
+        v1.extend_from_slice(&0u32.to_le_bytes());
+        let s = ObsSnapshot::decode(&v1).unwrap();
+        assert_eq!(s, ObsSnapshot::empty(), "v1 decodes with an empty decode section");
+        // And v1 with trailing garbage still errors.
+        v1.push(7);
+        assert!(ObsSnapshot::decode(&v1).is_err());
+    }
+
+    #[test]
+    fn snapshot_merge_joins_divergence_on_mode_and_bin() {
+        let mut a = sample_snapshot("head", 2);
+        a.merge(&sample_snapshot("head", 3));
+        assert_eq!(a.divergence.len(), 1, "same (mode, bin) joins");
+        let d = &a.divergence[0];
+        assert_eq!(d.samples, 5);
+        assert_eq!(d.sum_micro, 250 * 5);
+        assert_eq!(d.depth_lo(), 8);
+        assert!((d.mean_abs() - 250e-6).abs() < 1e-12);
+        let mut b = sample_snapshot("head", 1);
+        b.divergence.push(DivergenceSnapshot {
+            mode: "bf16".to_string(),
+            depth_bin: 0,
+            samples: 4,
+            sum_micro: 8,
+        });
+        a.merge(&b);
+        assert_eq!(a.divergence.len(), 2, "new (mode, bin) appends");
+        assert_eq!(a.decode_stages[0].count, 2 * (2 + 3 + 1));
+    }
+
+    #[test]
     fn render_json_has_schema_and_all_stages() {
         let s = sample_snapshot("head", 4);
         let json = s.render_json();
@@ -1106,6 +1400,13 @@ mod tests {
         for key in
             ["\"p99_us\":", "\"buckets\":[", "\"site\":\"head\"", "\"shift_hist\":[", "\"fm_mean_rel\":"]
         {
+            assert!(json.contains(key), "missing {key}");
+        }
+        assert!(json.contains("\"decode\":{\"stages\":{"));
+        for stage in DecodeStage::ALL {
+            assert!(json.contains(&format!("\"{}\":{{\"count\":", stage.label())), "{stage:?}");
+        }
+        for key in ["\"divergence\":[", "\"depth_bin\":3", "\"depth_lo\":8", "\"mean_abs\":"] {
             assert!(json.contains(key), "missing {key}");
         }
         // Structurally sane: balanced braces/brackets, no trailing comma.
@@ -1122,6 +1423,8 @@ mod tests {
         assert!(text.contains("quantile=\"0.99\""));
         assert!(text.contains("amfma_fidelity_truncated{site=\"head\",mode=\"bf16an-1-2\"} 8"));
         assert!(text.contains("shift=\"3\""));
+        assert!(text.contains("amfma_decode_stage_latency_us_count{stage=\"step_gemm\"}"));
+        assert!(text.contains("amfma_decode_divergence_samples{mode=\"bf16an-1-2\",depth_lo=\"8\"} 4"));
     }
 
     #[test]
@@ -1222,5 +1525,28 @@ mod tests {
         let s = snapshot();
         assert!(s.stages[Stage::Gemm.index()].count >= 1);
         assert!(s.stages[Stage::Gemm.index()].max >= 777);
+    }
+
+    #[test]
+    fn global_snapshot_sees_decode_stages_and_divergence() {
+        let _g = enabled_lock();
+        record_decode_stage(DecodeStage::StepGemm, 555);
+        record_decode_divergence("obs-test-mode", 6, 1.25e-3);
+        record_decode_divergence("obs-test-mode", 7, 0.75e-3);
+        // Out-of-domain samples are dropped, never binned.
+        record_decode_divergence("obs-test-mode", 0, 1.0);
+        record_decode_divergence("obs-test-mode", 4, f64::NAN);
+        let s = snapshot();
+        let g = &s.decode_stages[DecodeStage::StepGemm.index()];
+        assert!(g.count >= 1 && g.max >= 555);
+        // Depths 6 and 7 share bin 2 (depths [4, 8)).
+        let d = s
+            .divergence
+            .iter()
+            .find(|d| d.mode == "obs-test-mode" && d.depth_bin == 2)
+            .expect("divergence cell");
+        assert_eq!(d.samples, 2);
+        assert_eq!(d.sum_micro, 1250 + 750);
+        assert!(!s.divergence.iter().any(|d| d.mode == "obs-test-mode" && d.depth_bin != 2));
     }
 }

@@ -1,0 +1,298 @@
+//! End-to-end tests of the autoregressive decode path: the KV-cached
+//! incremental `forward_step` must be **bit-identical** to a full
+//! re-prefill of the same prefix in every engine mode (the invariant the
+//! whole decode feature hangs off), served decode streams must equal the
+//! offline greedy generation over the wire, the continuous batcher must
+//! keep streams bit-identical while sequences join and leave mid-flight,
+//! a vanished stream consumer must evict its sequence (and its KV cache)
+//! without unbalancing the counters, and the load generator must verify
+//! streamed generations against a live listener.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amfma::coordinator::net::loadgen::{self, LoadgenConfig};
+use amfma::coordinator::net::{Client, LaneSelector, NetServer, NetServerConfig};
+use amfma::coordinator::{
+    InferenceServer, ReplicaSpec, ReplyEvent, Router, ServerConfig,
+};
+use amfma::model::{greedy_argmax, Encoder, KvCache, ModelConfig, TiedHead, Weights};
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, MatrixEngine};
+
+const MAX_SEQ: usize = 8;
+const VOCAB: usize = 32;
+
+/// The four modes the bit-identity acceptance criterion names.
+const MODES: [&str; 4] = ["fp32", "bf16", "bf16an-1-1", "bf16an-2-2"];
+
+fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        vocab: VOCAB,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_layers: 1,
+        max_seq: MAX_SEQ,
+        n_classes: 2,
+    }
+}
+
+fn tiny_models() -> HashMap<String, Arc<Weights>> {
+    let mut m = HashMap::new();
+    m.insert("sst2".to_string(), Arc::new(Weights::random(tiny_config(), 301)));
+    m.insert("rte".to_string(), Arc::new(Weights::random(tiny_config(), 302)));
+    m
+}
+
+/// One server + one TCP frontend over it, on an ephemeral port.
+fn boot(mode: EngineMode, cfg: ServerConfig) -> (InferenceServer, NetServer) {
+    let srv = InferenceServer::start(tiny_models(), ServerConfig { mode, ..cfg });
+    let router = Arc::new(Router::new(vec![ReplicaSpec::new(mode).local(srv.handle())]));
+    let net = NetServer::bind("127.0.0.1:0", router, NetServerConfig::default())
+        .expect("bind ephemeral port");
+    (srv, net)
+}
+
+/// Offline greedy generation through the same KV-cached incremental path
+/// the server uses: returns the generated tokens and the final step's
+/// next-token logits.
+fn offline_greedy(
+    w: &Weights,
+    mode: EngineMode,
+    prompt: &[u16],
+    steps: u32,
+) -> (Vec<u16>, Vec<f32>) {
+    let enc = Encoder::new(w, MatrixEngine::new(mode));
+    let head = TiedHead::new(w);
+    let mut cache = KvCache::new(&w.config);
+    let mut h = enc.prefill(prompt, &mut cache);
+    let mut toks = Vec::new();
+    let mut logits = Vec::new();
+    for i in 0..steps {
+        logits = enc.decode_logits(&head, &h);
+        let t = greedy_argmax(&logits);
+        toks.push(t);
+        if i + 1 < steps {
+            h = enc.forward_step(t, &mut cache);
+        }
+    }
+    (toks, logits)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance criterion: N-step incremental decode is bit-identical to a
+/// full re-prefill of the same prefix at **every** step, in every mode —
+/// randomized prompts and generation lengths, self-fed greedy tokens.
+#[test]
+fn incremental_decode_is_bit_identical_to_full_prefill_in_every_mode() {
+    let weights = Weights::random(tiny_config(), 301);
+    let head = TiedHead::new(&weights);
+    let mut rng = Prng::new(2024);
+    for mode_label in MODES {
+        let mode = EngineMode::parse(mode_label).unwrap();
+        let enc = Encoder::new(&weights, MatrixEngine::new(mode));
+        for trial in 0..6 {
+            let len = 1 + rng.below(4) as usize;
+            let room = MAX_SEQ - len + 1;
+            let steps = 1 + rng.below(room as u64) as usize;
+            let prompt: Vec<u16> =
+                (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            let mut cache = KvCache::new(&weights.config);
+            let mut h = enc.prefill(&prompt, &mut cache);
+            let mut prefix = prompt.clone();
+            for step in 0..steps {
+                // The incremental hidden state must reproduce a from-scratch
+                // prefill of the full prefix, bit for bit.
+                let mut fresh = KvCache::new(&weights.config);
+                let h_full = enc.prefill(&prefix, &mut fresh);
+                assert_eq!(
+                    bits(&h),
+                    bits(&h_full),
+                    "{mode_label} trial {trial} step {step}: hidden state diverged \
+                     (prefix {prefix:?})"
+                );
+                let logits = enc.decode_logits(&head, &h);
+                let logits_full = enc.decode_logits(&head, &h_full);
+                assert_eq!(
+                    bits(&logits),
+                    bits(&logits_full),
+                    "{mode_label} trial {trial} step {step}: logits diverged"
+                );
+                let t = greedy_argmax(&logits);
+                prefix.push(t);
+                if step + 1 < steps {
+                    h = enc.forward_step(t, &mut cache);
+                }
+            }
+            assert_eq!(cache.len(), len + steps - 1, "cache holds the occupied prefix");
+        }
+    }
+}
+
+/// Served decode streams over TCP equal the offline greedy generation —
+/// token sequence and final logits, bit for bit — in every mode.
+#[test]
+fn served_decode_streams_match_offline_greedy_over_the_wire() {
+    let models = tiny_models();
+    let weights = models.get("sst2").unwrap().clone();
+    let prompt: Vec<u16> = vec![3, 9, 27];
+    let steps = 4u32;
+    for mode_label in MODES {
+        let mode = EngineMode::parse(mode_label).unwrap();
+        let (want_toks, want_logits) = offline_greedy(&weights, mode, &prompt, steps);
+        let (srv, net) = boot(mode, ServerConfig::default());
+        let mut client = Client::connect(net.local_addr()).expect("connect");
+        let (toks, reply) = client
+            .decode("sst2", LaneSelector::Any, &prompt, steps)
+            .expect("decode over the wire");
+        let (logits, _lat) = reply.outcome.expect("served");
+        assert_eq!(toks, want_toks, "mode {mode_label}: streamed tokens");
+        assert_eq!(bits(&logits), bits(&want_logits), "mode {mode_label}: final logits");
+        drop(client);
+        net.shutdown();
+        let m = srv.shutdown().snapshot();
+        assert_eq!(m.completed, 1, "{mode_label}: {m:?}");
+        assert_eq!(m.decode_tokens, steps as u64, "{mode_label}: {m:?}");
+        assert!(m.balanced(), "{mode_label}: {m:?}");
+    }
+}
+
+/// Continuous batching over the wire: sequences of different lengths and
+/// generation depths join and leave the running decode batch mid-flight
+/// (staggered client threads), and every stream still equals its solo
+/// offline generation bit for bit.
+#[test]
+fn continuous_batching_keeps_interleaved_streams_bit_identical() {
+    let mode = EngineMode::parse("bf16an-2-2").unwrap();
+    let models = tiny_models();
+    let (srv, net) = boot(mode, ServerConfig::default());
+    let addr = net.local_addr();
+    // (task, prompt, steps): every prompt+suffix fits max_seq = 8.
+    let plan: Vec<(&str, Vec<u16>, u32)> = vec![
+        ("sst2", vec![1, 2, 3], 4),
+        ("rte", vec![4], 6),
+        ("sst2", vec![5, 6], 2),
+        ("rte", vec![7, 8, 9, 10], 5),
+    ];
+    let total_tokens: u64 = plan.iter().map(|(_, _, s)| *s as u64).sum();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (c, (task, prompt, steps)) in plan.iter().enumerate() {
+            let models = &models;
+            handles.push(s.spawn(move || {
+                // Staggered joins: later sequences enter while earlier
+                // ones are mid-generation, and short ones leave first.
+                std::thread::sleep(Duration::from_millis(10 * c as u64));
+                let w = models.get(*task).unwrap();
+                let (want_toks, want_logits) = offline_greedy(w, mode, prompt, *steps);
+                let mut client = Client::connect(addr).expect("connect");
+                let (toks, reply) = client
+                    .decode(task, LaneSelector::Any, prompt, *steps)
+                    .expect("interleaved decode");
+                let (logits, _lat) = reply.outcome.expect("served");
+                assert_eq!(toks, want_toks, "conn {c} ({task}): streamed tokens");
+                assert_eq!(bits(&logits), bits(&want_logits), "conn {c} ({task}): logits");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, plan.len() as u64, "{m:?}");
+    assert_eq!(m.decode_tokens, total_tokens, "{m:?}");
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// A stream consumer that vanishes mid-generation evicts its sequence —
+/// leaving the running batch *is* dropping its KV cache — as a counted
+/// dropped reply, while later sequences decode normally and the counters
+/// still balance.
+#[test]
+fn dropped_stream_consumer_evicts_sequence_and_balances() {
+    let mode = EngineMode::parse("bf16an-1-1").unwrap();
+    let srv = InferenceServer::start(tiny_models(), ServerConfig { mode, ..Default::default() });
+    let handle = srv.handle();
+    // Drop the receiver before a single token can be delivered: the first
+    // flush fails, the scheduler evicts the sequence.
+    let rx = handle.submit_decode("sst2", vec![1, 2], 3).expect("submit");
+    drop(rx);
+    // A subsequent decode on the same scheduler completes in full.
+    let rx = handle.submit_decode("rte", vec![4, 5], 3).expect("submit");
+    let mut toks = Vec::new();
+    let mut done = None;
+    while let Ok(ev) = rx.recv() {
+        match ev {
+            ReplyEvent::Token { step, token, last } => {
+                assert_eq!(step as usize, toks.len(), "in-order steps");
+                toks.push(token);
+                assert_eq!(last, toks.len() == 3);
+            }
+            ReplyEvent::Done(r) => {
+                done = Some(r);
+                break;
+            }
+        }
+    }
+    assert!(done.expect("terminal reply").is_ok(), "survivor stream served");
+    assert_eq!(toks.len(), 3);
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, 1, "{m:?}");
+    assert_eq!(m.errored, 1, "the evicted sequence is a counted drop: {m:?}");
+    assert_eq!(m.decode_tokens, 3, "only delivered generations count: {m:?}");
+    assert!(m.balanced(), "{m:?}");
+}
+
+/// The load generator's decode mode against a live listener: every stream
+/// arrives in order and completes with exactly N tokens, and the bench
+/// report carries the decode throughput series.
+#[test]
+fn loadgen_decode_streams_verify_against_live_listener() {
+    let mode = EngineMode::parse("bf16an-1-2").unwrap();
+    let (srv, net) = boot(
+        mode,
+        ServerConfig { max_batch: 8, max_wait: Duration::from_millis(2), ..Default::default() },
+    );
+    let mut rng = Prng::new(9);
+    let mut pool = Vec::new();
+    for task in ["sst2", "rte"] {
+        for _ in 0..8 {
+            let len = 1 + rng.below(MAX_SEQ as u64) as usize;
+            let toks: Vec<u16> = (0..len).map(|_| rng.below(VOCAB as u64) as u16).collect();
+            pool.push((task.to_string(), toks));
+        }
+    }
+    let steps = 3usize;
+    let cfg = LoadgenConfig {
+        addr: net.local_addr().to_string(),
+        connections: 4,
+        requests: 24,
+        pipeline: 2,
+        lane: LaneSelector::Any,
+        varlen: true,
+        seed: 7,
+        decode_steps: steps,
+        bench_target: "serving_decode".to_string(),
+        ..Default::default()
+    };
+    let outcome = loadgen::run(&pool, &cfg).expect("decode loadgen run");
+    assert_eq!(outcome.completed, 24, "all decodes complete: {outcome:?}");
+    assert_eq!(outcome.rejected, 0, "{outcome:?}");
+    assert_eq!(outcome.decode_tokens, (24 * steps) as u64, "{outcome:?}");
+    let rep = loadgen::report(&outcome, &cfg);
+    let json = rep.to_json();
+    assert!(json.contains("\"target\":\"serving_decode\""), "{json}");
+    assert!(json.contains("\"name\":\"decode_tokens\""), "{json}");
+    assert!(json.contains("\"name\":\"decode_throughput\""), "{json}");
+    net.shutdown();
+    let m = srv.shutdown().snapshot();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.decode_tokens, (24 * steps) as u64);
+    assert!(m.balanced(), "{m:?}");
+}

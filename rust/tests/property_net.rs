@@ -20,7 +20,7 @@ fn random_lane(rng: &mut Prng) -> LaneSelector {
 }
 
 fn random_frame(rng: &mut Prng) -> Frame {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => {
             let task_len = rng.below(12) as usize;
             let task: String = (0..task_len)
@@ -34,8 +34,15 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 lane: random_lane(rng),
                 task,
                 tokens,
+                steps: rng.below(1 << 16) as u32,
             }
         }
+        7 => Frame::Stream {
+            id: rng.next_u64(),
+            step: rng.below(1 << 16) as u32,
+            token: rng.below(1 << 16) as u16,
+            last: rng.below(2) == 1,
+        },
         1 => {
             let n = rng.below(16) as usize;
             let logits: Vec<f32> = (0..n).map(|_| rng.f32_range(-8.0, 8.0)).collect();
@@ -113,6 +120,7 @@ fn absurd_declared_lengths_are_rejected() {
         lane: LaneSelector::Any,
         task: "sst2".into(),
         tokens: vec![1, 2, 3],
+        steps: 0,
     };
     let good = encode(&f);
     // Declared body length: everything from "one too few/many" to absurd.
@@ -150,25 +158,30 @@ fn bad_header_fields_are_rejected() {
     }
 }
 
-/// The retired v1/v2 protocols (no trace/stage/stats extensions) are
-/// rejected outright — there is no version negotiation — and so are kinds
-/// beyond the v3 table.
+/// The retired v1-v3 protocols (no trace/stage/stats/stream extensions)
+/// are rejected outright — there is no version negotiation — and so are
+/// kinds beyond the v4 table.
 #[test]
 fn retired_version_and_unknown_kinds_are_rejected() {
-    let mut bytes = encode(&Frame::Health { id: 3 });
-    bytes[4] = 1;
-    assert!(decode(&bytes).is_err(), "v1 header must be rejected");
-    let mut bytes = encode(&Frame::Health { id: 3 });
-    bytes[4] = 2;
-    assert!(decode(&bytes).is_err(), "v2 header must be rejected");
+    for v in 1u8..=3 {
+        let mut bytes = encode(&Frame::Health { id: 3 });
+        bytes[4] = v;
+        assert!(decode(&bytes).is_err(), "v{v} header must be rejected");
+    }
+    let mut bytes = encode(&Frame::Drain { id: 4 });
+    bytes[5] = 8;
+    assert!(decode(&bytes).is_err(), "kind 8 is out of the v4 table");
+    // A valid kind whose body doesn't fit it is rejected too: a Drain
+    // body (8 bytes) relabeled as a Stream (needs 15).
     let mut bytes = encode(&Frame::Drain { id: 4 });
     bytes[5] = 7;
-    assert!(decode(&bytes).is_err(), "kind 7 is out of the v3 table");
-    // The v3 control frames themselves round-trip.
+    assert!(decode(&bytes).is_err(), "drain body is not a stream body");
+    // The v4 control frames themselves round-trip.
     for f in [
         Frame::Health { id: u64::MAX },
         Frame::Drain { id: 0 },
         Frame::Stats { id: 1, body: vec![0xAB; 5] },
+        Frame::Stream { id: 2, step: 7, token: 31, last: true },
     ] {
         let (back, used) = decode(&encode(&f)).expect("control frame round trip");
         assert_eq!(back, f);
@@ -230,6 +243,7 @@ fn garbage_payload_with_valid_structure_parses() {
             lane: LaneSelector::Cheap,
             task: "x".into(),
             tokens: tokens.clone(),
+            steps: rng.below(1 << 16) as u32,
         };
         let (back, _) = decode(&encode(&f)).expect("garbage payload is still a valid frame");
         match back {
