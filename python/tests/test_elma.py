@@ -1,0 +1,193 @@
+"""Differential oracle for the ``elma-8-1`` arithmetic family.
+
+An independent numpy port of ``rust/src/arith/elma.rs`` — the log-domain
+multiply / Kulisch-accumulate datapath (Johnson, arXiv:1811.01721) that
+the registry exposes as the ``elma-8-1`` engine mode.  The port mirrors
+the Rust codec constant-for-constant:
+
+* element code: bit 7 sign, bits 6..0 magnitude ``m``; ``|v| =
+  2^((m - 64) / 8)``; ``0x00`` zero, ``0x80`` NaR;
+* encode rounds ``log2|v| * 8`` half-away-from-zero, flushes below −63,
+  saturates at +63;
+* accumulate: ``POW2_Q14[f] = round(2^(f/8) * 2^14)``, shifted into an
+  integer accumulator at scale ``2^40`` (Python ints stand in for the
+  Rust ``i128`` — both are exact).
+
+Because the accumulation is exact integer arithmetic, the port must agree
+with itself under any reduction order (asserted bitwise) and with the f32
+oracle within the documented statistical envelope.  Runs two ways:
+
+* under pytest in the Python CI job;
+* standalone with no pytest dependency::
+
+      python python/tests/test_elma.py
+"""
+
+import math
+
+import numpy as np
+
+NAR = 0x80
+ZERO = 0x00
+ACC_FRAC_BITS = 40
+POW2_FRAC_BITS = 14
+MAX_REL_STEP = 2.0 ** (1.0 / 16.0) - 1.0  # half a log step, ~4.43 %
+
+# POW2_Q14[f] = round(2^(f/8) * 2^14), f in 0..8 — mirrors pow2_q14().
+POW2_Q14 = [round(2.0 ** (f / 8.0) * (1 << POW2_FRAC_BITS)) for f in range(8)]
+
+
+def _round_half_away(x: float) -> int:
+    """Rust ``f64::round``: half-cases away from zero (not banker's)."""
+    return int(math.floor(x + 0.5)) if x >= 0.0 else -int(math.floor(-x + 0.5))
+
+
+def encode(v: float) -> int:
+    v = float(v)
+    if v == 0.0:
+        return ZERO
+    if not math.isfinite(v):
+        return NAR
+    sign = 0x80 if v < 0.0 else 0
+    l8 = _round_half_away(math.log2(abs(v)) * 8.0)
+    if l8 < -63:
+        return ZERO  # below the format: flush
+    l8 = min(l8, 63)  # above the format: saturate
+    return sign | (l8 + 64)
+
+
+def decode(code: int) -> float:
+    if code == NAR:
+        return float("nan")
+    m = code & 0x7F
+    if m == 0:
+        return 0.0
+    mag = np.float32(2.0 ** ((m - 64) / 8.0))
+    return float(-mag if code & 0x80 else mag)
+
+
+def dot(xs, ws) -> float:
+    """ELMA PE dot: log-domain multiply, exact integer accumulate."""
+    acc = 0  # Python int == arbitrary precision == the Rust i128
+    nar = False
+    for x, w in zip(xs, ws):
+        ca, cb = encode(x), encode(w)
+        if ca == NAR or cb == NAR:
+            nar = True
+            continue
+        ma, mb = ca & 0x7F, cb & 0x7F
+        if ma == 0 or mb == 0:
+            continue
+        l8 = ma + mb - 128  # product log2 in eighths, in [-126, 126]
+        int_part, frac = l8 // 8, l8 % 8  # floor div == div_euclid for these
+        sh = ACC_FRAC_BITS - POW2_FRAC_BITS + int_part  # in [10, 41]
+        mag = POW2_Q14[frac] << sh
+        acc -= mag if (ca ^ cb) & 0x80 else -mag
+    if nar:
+        return float("nan")
+    return float(np.float32(acc / float(1 << ACC_FRAC_BITS)))
+
+
+def gemm(x, w):
+    """Row-major ELMA GEMM on 2-D numpy arrays (reference loops)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    y = np.zeros((m, n), dtype=np.float32)
+    for i in range(m):
+        for j in range(n):
+            y[i, j] = dot(x[i, :], w[:, j])
+    return y
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------- the tests --
+
+
+def test_codec_roundtrip_within_half_step():
+    for i in range(1, 2000):
+        for sign in (1.0, -1.0):
+            v = sign * i * 0.01  # 0.01 .. 20.0, in range
+            back = decode(encode(v))
+            rel = abs((back - v) / v)
+            assert rel <= MAX_REL_STEP + 1e-9, f"v={v} back={back} rel={rel}"
+
+
+def test_codec_specials():
+    assert encode(0.0) == ZERO
+    assert encode(-0.0) == ZERO
+    assert encode(float("nan")) == NAR
+    assert encode(float("inf")) == NAR
+    assert encode(float("-inf")) == NAR
+    assert math.isnan(decode(NAR))
+    assert decode(ZERO) == 0.0
+    # Tiny values flush, huge values saturate to the top code.
+    assert encode(1e-10) == ZERO
+    assert encode(1e10) & 0x7F == 127
+    assert encode(-1e10) == 0x80 | 127
+    # decode(encode(x)) is idempotent at the top of the range.
+    assert encode(decode(encode(1e10))) == encode(1e10)
+
+
+def test_exact_powers_of_two_are_exact():
+    for e in range(-7, 8):
+        v = float(2.0**e)
+        assert decode(encode(v)) == v
+        assert decode(encode(-v)) == -v
+
+
+def test_dot_tracks_f64_oracle_within_envelope():
+    rng = _rng(7)
+    for _ in range(50):
+        xs = rng.uniform(-4.0, 4.0, 64).astype(np.float32)
+        ws = rng.uniform(-4.0, 4.0, 64).astype(np.float32)
+        got = dot(xs, ws)
+        oracle = float(np.dot(xs.astype(np.float64), ws.astype(np.float64)))
+        # Each product carries at most ~2 * 4.4 % relative error; the sum
+        # of |products| bounds the absolute error.
+        budget = float(np.sum(np.abs(xs.astype(np.float64) * ws.astype(np.float64)))) * 0.10
+        assert abs(got - oracle) <= budget, f"got={got} oracle={oracle} budget={budget}"
+
+
+def test_nar_poisons_dot():
+    assert math.isnan(dot([1.0, float("nan")], [1.0, 1.0]))
+    assert math.isnan(dot([1.0, 2.0], [float("inf"), 1.0]))
+    assert dot([0.0, 0.0], [1.0, 1.0]) == 0.0
+
+
+def test_reduction_order_invariance_is_bitwise():
+    # Integer adds commute exactly: reversing the reduction axis must give
+    # the identical float, not merely a close one.
+    rng = _rng(11)
+    xs = rng.uniform(-4.0, 4.0, 96).astype(np.float32)
+    ws = rng.uniform(-4.0, 4.0, 96).astype(np.float32)
+    fwd = dot(xs, ws)
+    rev = dot(xs[::-1], ws[::-1])
+    assert np.float32(fwd).tobytes() == np.float32(rev).tobytes()
+
+
+def test_gemm_rel_error_envelope_vs_oracle():
+    rng = _rng(5)
+    m, k, n = 12, 128, 12
+    x = rng.uniform(-4.0, 4.0, (m, k)).astype(np.float32)
+    w = rng.uniform(-4.0, 4.0, (k, n)).astype(np.float32)
+    y = gemm(x, w).astype(np.float64)
+    oracle = x.astype(np.float64) @ w.astype(np.float64)
+    rel = float(np.linalg.norm(y - oracle) / max(np.linalg.norm(oracle), 1e-30))
+    assert rel < 0.06, f"elma gemm rel err {rel} breaches envelope"
+    assert rel > 1e-6, "suspiciously exact — log quantization not applied?"
+
+
+def _main():
+    tests = [(k, v) for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for name, fn in tests:
+        fn()
+        print(f"{name}: PASS")
+    print(f"elma numpy differential: {len(tests)} tests PASS")
+
+
+if __name__ == "__main__":
+    _main()

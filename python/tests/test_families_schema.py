@@ -1,0 +1,150 @@
+"""Schema guard for the joint-family Pareto snapshot ``BENCH_families.json``.
+
+``amfma tune --families bf16an,elma,lut`` prices every registered family's
+tune candidates on one gate-area-vs-oracle-error Pareto frontier and
+persists the points as ``amfma-bench-v1`` metrics
+(``families/<label>/{area_ge,rel_err,on_frontier}``; see
+``families_frontier`` in ``rust/src/cli.rs``).  This is the independent
+validator CI runs against the generated file: the triplet must be present
+and finite for at least one candidate of each of the three families, the
+frontier flag must be a 0/1 indicator, and at least one point must lie on
+the frontier (an empty frontier means the sweep silently failed).
+
+Runs two ways:
+
+* under pytest (skips when no snapshot has been generated);
+* standalone, as CI's families step does::
+
+      python python/tests/test_families_schema.py rust/bench-results/BENCH_families.json
+"""
+
+import json
+import math
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+# One representative candidate per family; the CI step sweeps exactly
+# these three families, so each must contribute at least one point.
+REQUIRED_LABEL_PREFIXES = ("bf16an-", "elma-8-1", "lut-4-16")
+
+AXES = {"area_ge": "GE", "rel_err": "frac", "on_frontier": "bool"}
+
+
+def validate_families(doc):
+    assert doc.get("schema") == "amfma-bench-v1", f"schema={doc.get('schema')!r}"
+    assert doc.get("target") == "families", f"target={doc.get('target')!r}"
+    metrics = doc.get("metrics")
+    assert isinstance(metrics, list) and metrics, "families snapshot has no metrics"
+
+    points = {}
+    for m in metrics:
+        name = m.get("name", "")
+        parts = name.split("/")
+        assert len(parts) == 3 and parts[0] == "families", f"bad metric name {name!r}"
+        _, label, axis = parts
+        assert axis in AXES, f"unknown axis {axis!r} in {name!r}"
+        assert m.get("unit") == AXES[axis], (
+            f"{name!r}: unit {m.get('unit')!r}, want {AXES[axis]!r}"
+        )
+        v = m.get("value")
+        assert isinstance(v, (int, float)) and math.isfinite(v), (
+            f"{name!r}: non-finite value {v!r}"
+        )
+        points.setdefault(label, {})[axis] = float(v)
+
+    for label, axes in points.items():
+        assert set(axes) == set(AXES), f"{label}: incomplete triplet {sorted(axes)}"
+        assert axes["area_ge"] > 0.0, f"{label}: non-positive gate area"
+        assert axes["rel_err"] >= 0.0, f"{label}: negative rel err"
+        assert axes["on_frontier"] in (0.0, 1.0), (
+            f"{label}: on_frontier must be a 0/1 indicator"
+        )
+
+    for prefix in REQUIRED_LABEL_PREFIXES:
+        assert any(label.startswith(prefix) for label in points), (
+            f"no candidate matching {prefix!r} in the joint sweep"
+        )
+
+    assert any(axes["on_frontier"] == 1.0 for axes in points.values()), (
+        "no point on the frontier — the joint sweep degenerated"
+    )
+    return points
+
+
+# ------------------------------------------------- validator self-tests --
+
+SAMPLE = {
+    "schema": "amfma-bench-v1",
+    "target": "families",
+    "metrics": [
+        {"name": "families/bf16an-2-2/area_ge", "value": 1845.0, "unit": "GE"},
+        {"name": "families/bf16an-2-2/rel_err", "value": 0.004, "unit": "frac"},
+        {"name": "families/bf16an-2-2/on_frontier", "value": 1.0, "unit": "bool"},
+        {"name": "families/elma-8-1/area_ge", "value": 1492.0, "unit": "GE"},
+        {"name": "families/elma-8-1/rel_err", "value": 0.03, "unit": "frac"},
+        {"name": "families/elma-8-1/on_frontier", "value": 1.0, "unit": "bool"},
+        {"name": "families/lut-4-16/area_ge", "value": 937.0, "unit": "GE"},
+        {"name": "families/lut-4-16/rel_err", "value": 0.21, "unit": "frac"},
+        {"name": "families/lut-4-16/on_frontier", "value": 1.0, "unit": "bool"},
+    ],
+}
+
+
+def test_sample_snapshot_validates():
+    points = validate_families(SAMPLE)
+    assert len(points) == 3
+
+
+def test_incomplete_triplet_rejected():
+    bad = {
+        "schema": "amfma-bench-v1",
+        "target": "families",
+        "metrics": [m for m in SAMPLE["metrics"] if "lut" not in m["name"]][:-1],
+    }
+    try:
+        validate_families(bad)
+    except AssertionError:
+        return
+    raise AssertionError("incomplete triplet must be rejected")
+
+
+def test_empty_frontier_rejected():
+    bad = json.loads(json.dumps(SAMPLE))
+    for m in bad["metrics"]:
+        if m["name"].endswith("/on_frontier"):
+            m["value"] = 0.0
+    try:
+        validate_families(bad)
+    except AssertionError:
+        return
+    raise AssertionError("all-dominated sweep must be rejected")
+
+
+def test_generated_snapshot_if_present():
+    path = os.environ.get("AMFMA_FAMILIES_JSON")
+    p = Path(path) if path else REPO / "rust" / "bench-results" / "BENCH_families.json"
+    if not p.exists():
+        if path:
+            raise AssertionError(f"AMFMA_FAMILIES_JSON={path} does not exist")
+        return  # nothing generated in this checkout
+    validate_families(json.loads(p.read_text()))
+
+
+def _main(argv):
+    if len(argv) > 1:
+        p = Path(argv[1])
+        points = validate_families(json.loads(p.read_text()))
+        print(f"families schema OK: {p} ({len(points)} candidates)")
+        return 0
+    for name in ("test_sample_snapshot_validates", "test_incomplete_triplet_rejected",
+                 "test_empty_frontier_rejected", "test_generated_snapshot_if_present"):
+        globals()[name]()
+        print(f"{name}: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_main(sys.argv))

@@ -12,6 +12,8 @@
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use amfma::arith::wide::{self, LANES};
@@ -22,6 +24,33 @@ use amfma::prng::Prng;
 use amfma::systolic::matmul::{default_threads, matmul_bf16_percall_seed, transpose_to_bf16};
 use amfma::systolic::{CycleArray, EngineMode, GemmKernel, MatrixEngine, TileScheduler};
 use amfma::ApproxNorm;
+
+/// Allocation-counting shim over the system allocator: lets the obs gate
+/// assert that interned [`EngineMode::label`] reads are allocation-free
+/// in steady state (this is a bench binary — the counter never rides
+/// into the library or the shipped CLI).
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     let mut report = BenchReport::new("hotpath");
@@ -462,6 +491,40 @@ fn obs_overhead_bench(report: &mut BenchReport) {
         (ratio - 1.0) * 100.0
     );
     println!("obs overhead gate: PASS on/off median ratio {ratio:.4} < 1.03 ({m}x{k}x{n} wide)");
+
+    // Interned-label contract: `EngineMode::label()` returns a `&'static
+    // str` and must not allocate in steady state — it sits on the
+    // metrics/obs hot paths (per-batch served-token counters, fidelity
+    // cells).  Warm the intern table once per mode, then count
+    // allocations across a tight read loop; anything non-zero means a
+    // fresh `String` snuck back onto the hot path.
+    let label_modes = [
+        EngineMode::Fp32,
+        EngineMode::parse("bf16").unwrap(),
+        EngineMode::parse("bf16an-1-2").unwrap(),
+        EngineMode::parse("elma-8-1").unwrap(),
+        EngineMode::parse("lut-4-16").unwrap(),
+    ];
+    for md in label_modes {
+        std::hint::black_box(md.label());
+    }
+    let reads = 10_000usize;
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..reads {
+        for md in label_modes {
+            std::hint::black_box(md.label());
+        }
+    }
+    let allocs = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        allocs, 0,
+        "LABEL INTERN GATE FAILED: {allocs} allocations across {} label() reads",
+        reads * label_modes.len()
+    );
+    println!(
+        "label intern gate: PASS zero allocations across {} label() reads",
+        reads * label_modes.len()
+    );
 }
 
 fn serving_bench(report: &mut BenchReport) {

@@ -1,0 +1,361 @@
+//! ELMA: log-domain multiply with exact (Kulisch-style) linear accumulation.
+//!
+//! This is the `elma-8-1` arithmetic family — a reproduction of the
+//! exact-log-linear-multiply-add datapath from Johnson, *"Rethinking
+//! floating point for deep learning"* (arXiv:1811.01721), priced on the
+//! same serving stack as the paper's bf16an PE so the tuner can weigh the
+//! two approximate families against each other.
+//!
+//! # Element format (8, 1)
+//!
+//! One byte per element: bit 7 is the sign, bits 6..0 hold a magnitude
+//! code `m`.  `m == 0` with a clear sign bit is zero; `0x80` is NaR
+//! (not-a-real, the single exception value).  For `m` in `1..=127` the
+//! represented magnitude is a pure power of two in eighths:
+//!
+//! ```text
+//! |v| = 2^((m - 64) / 8)        log2|v| ∈ [-63/8, +63/8] = ±7.875
+//! ```
+//!
+//! The log step is 1/8, so the worst-case relative quantization error for
+//! an in-range value is `2^(1/16) - 1 ≈ 4.4 %` ([`MAX_REL_STEP`]).
+//!
+//! # PE semantics
+//!
+//! * **Multiply** is an integer add of the two log codes — exact, no
+//!   rounding, one 8-bit adder.
+//! * **Accumulate** is Kulisch-style: each product is converted to a
+//!   fixed-point integer at scale 2^[`ACC_FRAC_BITS`] through a tiny
+//!   8-entry pow2 table ([`POW2_Q14`]) plus a shift, then added into a
+//!   wide integer accumulator.  Integer adds commute and associate
+//!   *exactly*, so an ELMA GEMM is bit-identical for any summation order
+//!   and any thread count — a stronger reproducibility property than the
+//!   f32 oracle itself.
+//! * NaR in any operand poisons the accumulator; the output is NaN.
+//!   Zero operands contribute nothing.
+//!
+//! The family is classed `Fidelity::Statistical`: results are not
+//! bit-comparable to the bf16 golden contract, and are instead pinned by
+//! differential error envelopes against the f32 oracle (here and in the
+//! committed numpy port `python/tests/test_elma.py`).
+
+use std::sync::OnceLock;
+use std::thread;
+
+/// Parameters of an ELMA element format, named after the `(N, es)` pair in
+/// Johnson's paper.  Only the published `(8, 1)` point is implemented;
+/// [`crate::arith::family`] rejects every other combination at parse time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ElmaCfg {
+    /// Total element width in bits.
+    pub bits: u32,
+    /// Exponent-scale parameter from the (N, es) grammar.
+    pub es: u32,
+}
+
+impl ElmaCfg {
+    /// The one supported format: `elma-8-1`.
+    pub const E8_1: ElmaCfg = ElmaCfg { bits: 8, es: 1 };
+}
+
+/// NaR (not-a-real): the single exception code, decoding to NaN.
+pub const NAR: u8 = 0x80;
+/// The zero code.
+pub const ZERO: u8 = 0x00;
+
+/// Worst-case relative error of encoding an in-range nonzero value:
+/// half a log step, `2^(1/16) - 1`.
+pub const MAX_REL_STEP: f64 = 0.044_273_782_427_413_84;
+
+/// Fractional bits of the Kulisch accumulator fixed point (scale 2^40).
+pub const ACC_FRAC_BITS: u32 = 40;
+/// Fractional bits of the pow2 lookup table entries (Q14).
+const POW2_FRAC_BITS: u32 = 14;
+
+/// `POW2_Q14[f] = round(2^(f/8) * 2^14)` for `f` in `0..8` — the exact
+/// log-to-linear decode table.  Mirrored verbatim by the numpy port.
+fn pow2_q14() -> &'static [i64; 8] {
+    static T: OnceLock<[i64; 8]> = OnceLock::new();
+    T.get_or_init(|| {
+        std::array::from_fn(|f| {
+            ((f as f64 / 8.0).exp2() * (1u64 << POW2_FRAC_BITS) as f64).round() as i64
+        })
+    })
+}
+
+/// Encode an `f32` into the nearest `elma-8-1` code.
+///
+/// NaN and ±Inf map to [`NAR`]; zero maps to [`ZERO`]; magnitudes whose
+/// rounded log2-in-eighths falls below −63 flush to zero and above +63
+/// saturate to the largest code.
+pub fn encode(v: f32) -> u8 {
+    if v == 0.0 {
+        return ZERO;
+    }
+    if !v.is_finite() {
+        return NAR;
+    }
+    let sign = if v < 0.0 { 0x80u8 } else { 0 };
+    let l8 = ((v.abs() as f64).log2() * 8.0).round() as i64;
+    if l8 < -63 {
+        return ZERO; // below the format: flush
+    }
+    let l8 = l8.min(63); // above the format: saturate
+    sign | ((l8 + 64) as u8)
+}
+
+/// Decode an `elma-8-1` code back to `f32`.
+pub fn decode(code: u8) -> f32 {
+    if code == NAR {
+        return f32::NAN;
+    }
+    let m = (code & 0x7f) as i32;
+    if m == 0 {
+        return 0.0;
+    }
+    let mag = (((m - 64) as f64) / 8.0).exp2() as f32;
+    if code & 0x80 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Add the product of two codes into a Kulisch accumulator.
+///
+/// The product's log is the integer sum of the operand logs (exact); the
+/// linear contribution is `POW2_Q14[frac] << (ACC_FRAC_BITS - 14 + int)`,
+/// which is always a left shift because the minimum product log is
+/// −126/8 ⇒ `int ≥ −16`.
+#[inline]
+fn accumulate(acc: &mut i128, nar: &mut bool, ca: u8, cb: u8) {
+    if ca == NAR || cb == NAR {
+        *nar = true;
+        return;
+    }
+    let ma = (ca & 0x7f) as i32;
+    let mb = (cb & 0x7f) as i32;
+    if ma == 0 || mb == 0 {
+        return; // a zero operand: no contribution
+    }
+    let l8 = ma + mb - 128; // product log2 in eighths, in [-126, 126]
+    let int = l8.div_euclid(8);
+    let frac = l8.rem_euclid(8) as usize;
+    let sh = (ACC_FRAC_BITS as i32 - POW2_FRAC_BITS as i32 + int) as u32; // in [10, 41]
+    let mag = (pow2_q14()[frac] as i128) << sh;
+    if (ca ^ cb) & 0x80 != 0 {
+        *acc -= mag;
+    } else {
+        *acc += mag;
+    }
+}
+
+/// Final conversion of the Kulisch accumulator back to `f32`.
+#[inline]
+fn acc_to_f32(acc: i128, nar: bool) -> f32 {
+    if nar {
+        f32::NAN
+    } else {
+        (acc as f64 / (1u64 << ACC_FRAC_BITS) as f64) as f32
+    }
+}
+
+/// The ELMA PE dot product: encode both vectors, multiply in the log
+/// domain, accumulate exactly, convert once at the end.  This is the
+/// `PeKernel` semantics exposed through the family registry.
+pub fn dot(xs: &[f32], ws: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let mut acc = 0i128;
+    let mut nar = false;
+    for (&x, &w) in xs.iter().zip(ws) {
+        accumulate(&mut acc, &mut nar, encode(x), encode(w));
+    }
+    acc_to_f32(acc, nar)
+}
+
+/// ELMA GEMM: `y[m×n] = x[m×k] · w[k×n]`, row-major, parallelised over row
+/// chunks like the f32 path in [`crate::systolic::MatrixEngine`].
+///
+/// Because the accumulation is exact integer arithmetic, the result is
+/// bit-identical for every `threads` value.
+pub fn gemm(
+    cfg: ElmaCfg,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(cfg, ElmaCfg::E8_1, "only elma-8-1 is implemented");
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let xe: Vec<u8> = x.iter().map(|&v| encode(v)).collect();
+    // Column-major weight codes so the inner loop walks contiguously.
+    let mut wt = vec![ZERO; n * k];
+    for r in 0..k {
+        for c in 0..n {
+            wt[c * k + r] = encode(w[r * n + c]);
+        }
+    }
+    let mut y = vec![0.0f32; m * n];
+    let chunk = m.div_ceil(threads.max(1)).max(1);
+    thread::scope(|s| {
+        for (xi, yi) in xe.chunks(chunk * k).zip(y.chunks_mut(chunk * n)) {
+            let wt = &wt;
+            s.spawn(move || {
+                let rows = yi.len() / n;
+                for i in 0..rows {
+                    let xr = &xi[i * k..(i + 1) * k];
+                    for j in 0..n {
+                        let wc = &wt[j * k..(j + 1) * k];
+                        let mut acc = 0i128;
+                        let mut nar = false;
+                        for t in 0..k {
+                            accumulate(&mut acc, &mut nar, xr[t], wc[t]);
+                        }
+                        yi[i * n + j] = acc_to_f32(acc, nar);
+                    }
+                }
+            });
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng_next(state: &mut u64) -> f32 {
+        // SplitMix64 → uniform in [-4, 4).
+        *state = state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        (z >> 40) as f32 / (1u64 << 24) as f32 * 8.0 - 4.0
+    }
+
+    #[test]
+    fn codec_roundtrip_within_half_step() {
+        for i in 1..2000 {
+            for sign in [1.0f32, -1.0] {
+                let v = sign * (i as f32) * 0.01; // 0.01 .. 20.0, in range
+                let back = decode(encode(v));
+                let rel = ((back - v) / v).abs() as f64;
+                assert!(rel <= MAX_REL_STEP + 1e-9, "v={v} back={back} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_specials() {
+        assert_eq!(encode(0.0), ZERO);
+        assert_eq!(encode(-0.0), ZERO);
+        assert_eq!(encode(f32::NAN), NAR);
+        assert_eq!(encode(f32::INFINITY), NAR);
+        assert_eq!(encode(f32::NEG_INFINITY), NAR);
+        assert!(decode(NAR).is_nan());
+        assert_eq!(decode(ZERO), 0.0);
+        // Tiny values flush, huge values saturate to the top code.
+        assert_eq!(encode(1e-10), ZERO);
+        assert_eq!(encode(1e10) & 0x7f, 127);
+        assert_eq!(encode(-1e10), 0x80 | 127);
+        // decode(encode(x)) is idempotent at the top of the range.
+        let top = decode(encode(1e10));
+        assert_eq!(encode(top), encode(1e10));
+    }
+
+    #[test]
+    fn exact_powers_of_two_are_exact() {
+        for e in -7..=7 {
+            let v = (e as f32).exp2();
+            assert_eq!(decode(encode(v)), v);
+            assert_eq!(decode(encode(-v)), -v);
+        }
+    }
+
+    #[test]
+    fn dot_tracks_f32_oracle_within_envelope() {
+        let mut st = 7u64;
+        for _ in 0..50 {
+            let xs: Vec<f32> = (0..64).map(|_| rng_next(&mut st)).collect();
+            let ws: Vec<f32> = (0..64).map(|_| rng_next(&mut st)).collect();
+            let got = dot(&xs, &ws) as f64;
+            let oracle: f64 = xs.iter().zip(&ws).map(|(&a, &b)| a as f64 * b as f64).sum();
+            // Each product carries at most ~2·4.4 % relative error; the sum of
+            // |products| bounds the absolute error.
+            let budget: f64 =
+                xs.iter().zip(&ws).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum::<f64>() * 0.10;
+            assert!((got - oracle).abs() <= budget, "got={got} oracle={oracle} budget={budget}");
+        }
+    }
+
+    #[test]
+    fn nar_poisons_dot() {
+        assert!(dot(&[1.0, f32::NAN], &[1.0, 1.0]).is_nan());
+        assert!(dot(&[1.0, 2.0], &[f32::INFINITY, 1.0]).is_nan());
+        assert_eq!(dot(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn gemm_is_thread_count_invariant_bitwise() {
+        let mut st = 11u64;
+        let (m, k, n) = (9, 33, 7);
+        let x: Vec<f32> = (0..m * k).map(|_| rng_next(&mut st)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng_next(&mut st)).collect();
+        let y1 = gemm(ElmaCfg::E8_1, &x, &w, m, k, n, 1);
+        for threads in [2, 3, 8] {
+            let yt = gemm(ElmaCfg::E8_1, &x, &w, m, k, n, threads);
+            assert_eq!(y1, yt, "elma gemm must be bit-identical at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn gemm_order_invariant_vs_reversed_reduction() {
+        // Reversing the reduction axis permutes the integer adds — the
+        // accumulator must not care.
+        let mut st = 3u64;
+        let (m, k, n) = (4, 24, 5);
+        let x: Vec<f32> = (0..m * k).map(|_| rng_next(&mut st)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng_next(&mut st)).collect();
+        let xr: Vec<f32> = (0..m * k)
+            .map(|i| {
+                let (r, c) = (i / k, i % k);
+                x[r * k + (k - 1 - c)]
+            })
+            .collect();
+        let wr: Vec<f32> = (0..k * n)
+            .map(|i| {
+                let (r, c) = (i / n, i % n);
+                w[(k - 1 - r) * n + c]
+            })
+            .collect();
+        let y = gemm(ElmaCfg::E8_1, &x, &w, m, k, n, 2);
+        let yrev = gemm(ElmaCfg::E8_1, &xr, &wr, m, k, n, 2);
+        assert_eq!(y, yrev);
+    }
+
+    #[test]
+    fn gemm_rel_error_envelope_vs_oracle() {
+        let mut st = 5u64;
+        let (m, k, n) = (16, 256, 16);
+        let x: Vec<f32> = (0..m * k).map(|_| rng_next(&mut st)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng_next(&mut st)).collect();
+        let y = gemm(ElmaCfg::E8_1, &x, &w, m, k, n, 4);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let oracle: f64 =
+                    (0..k).map(|t| x[i * k + t] as f64 * w[t * n + j] as f64).sum();
+                num += (y[i * n + j] as f64 - oracle).powi(2);
+                den += oracle.powi(2);
+            }
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.06, "elma gemm rel err {rel} breaches envelope");
+        assert!(rel > 1e-6, "suspiciously exact — log quantization not applied?");
+    }
+}

@@ -1,0 +1,601 @@
+//! The arithmetic-family registry: the extension point for engine numerics.
+//!
+//! [`EngineMode`] used to be a closed `{Fp32, Bf16}` enum whose parsing,
+//! labeling and costing special cases were threaded through systolic,
+//! model, autotune, coordinator and CLI code.  This module redesigns that
+//! API: every numeric family registers a [`Family`] implementation — label
+//! grammar, element format, PE semantics ([`PeKernel`]), gate-level cost
+//! entry and fidelity class — and [`EngineMode`] becomes the opaque
+//! *(family, params)* handle those callsites pass around.  The enum
+//! representation is kept so the engine core can still match exhaustively,
+//! but everything label- or cost-shaped goes through [`registry`].
+//!
+//! Registered families:
+//!
+//! | family | labels                   | fidelity     | reference |
+//! |--------|--------------------------|--------------|-----------|
+//! | fp32   | `fp32`                   | bit-exact    | conventional FMA |
+//! | bf16   | `bf16`, `bf16an-k-λ`     | bit-exact    | the source paper |
+//! | elma   | `elma-8-1`               | statistical  | Johnson, arXiv:1811.01721 |
+//! | lut    | `lut-C-K`                | statistical  | MADDNESS / Stella Nera |
+//!
+//! Back-compat contract: every label the pre-registry parser accepted
+//! round-trips through the registry bit-identically, and every string it
+//! rejected is still rejected (`tests/family_registry.rs` pins both
+//! directions exhaustively).
+//!
+//! Labels are interned: [`EngineMode::label`] returns `&'static str` and
+//! never allocates on the steady-state metrics/obs hot paths.  The leak
+//! behind the interner is bounded — each family's parseable parameter
+//! space is finite (≤ 256 bf16an points, ≤ 512 LUT points, 1 ELMA point).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::approx_norm::ApproxNorm;
+use super::elma::{self, ElmaCfg};
+use super::fma::{column_dot, NormMode, NORM_POS};
+use super::lut::{self, LutCfg};
+use super::softfloat::{bf16_to_f32, f32_to_bf16};
+use crate::cost::PeArea;
+
+/// Numeric mode of the engine: a *(family, params)* handle.  Construct via
+/// [`EngineMode::parse`] or the variant literals; everything descriptive
+/// (grammar, labels, cost, PE semantics) lives on the owning [`Family`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineMode {
+    /// Full-precision f32 (the oracle / reference path).
+    Fp32,
+    /// BF16 with the paper's accurate or approximate normalization.
+    Bf16(NormMode),
+    /// Log-domain multiply + Kulisch accumulate ([`crate::arith::elma`]).
+    Elma(ElmaCfg),
+    /// Maddness prototype-hash LUT matmul ([`crate::arith::lut`]).
+    Lut(LutCfg),
+}
+
+/// Identity of a registered arithmetic family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FamilyId {
+    Fp32,
+    Bf16,
+    Elma,
+    Lut,
+}
+
+/// How a family's outputs are validated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    /// Deterministic bit contract: golden vectors (and the scalar/wide/
+    /// SIMD kernel-equivalence gates) pin every output bit.
+    BitExact,
+    /// Accuracy pinned by differential error envelopes against the f32
+    /// oracle rather than by bit identity.
+    Statistical,
+}
+
+/// The per-PE multiply-accumulate semantics of one mode, detached from the
+/// systolic machinery so tests (and docs) can exercise a family's scalar
+/// dot product directly.
+#[derive(Clone, Copy)]
+pub struct PeKernel {
+    mode: EngineMode,
+    dot: fn(EngineMode, &[f32], &[f32]) -> f32,
+}
+
+impl PeKernel {
+    /// The mode this kernel implements.
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    /// One PE column dot product under the family's arithmetic.
+    pub fn dot(&self, x: &[f32], w: &[f32]) -> f32 {
+        (self.dot)(self.mode, x, w)
+    }
+}
+
+/// One arithmetic family: label grammar, element format, PE semantics,
+/// gate-level cost and fidelity class.  Implementations are unit structs
+/// registered in [`registry`].
+pub trait Family: Sync {
+    /// Stable identity.
+    fn id(&self) -> FamilyId;
+
+    /// Registry name (also the `--families` token): `fp32`, `bf16`,
+    /// `elma`, `lut`.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable label grammar for docs and error messages.
+    fn grammar(&self) -> &'static str;
+
+    /// Validation class of the family's outputs.
+    fn fidelity(&self) -> Fidelity;
+
+    /// Whether `mode` is a member of this family.
+    fn owns(&self, mode: EngineMode) -> bool;
+
+    /// Parse a label of this family's grammar; `None` if it is not ours
+    /// or malformed.  Grammars are prefix-disjoint across families, so
+    /// registry-wide parsing is order-independent.
+    fn parse(&self, label: &str) -> Option<EngineMode>;
+
+    /// Canonical label of a member mode (uninterned; use
+    /// [`EngineMode::label`] on hot paths).
+    fn format_label(&self, mode: EngineMode) -> String;
+
+    /// Storage bits per element code (per-codebook code bits for LUT).
+    fn element_bits(&self, mode: EngineMode) -> u32;
+
+    /// Gate-level PE cost entry ([`crate::cost::pe_cost`]).
+    fn pe_area(&self, mode: EngineMode) -> PeArea;
+
+    /// The member mode's PE multiply-accumulate semantics.
+    fn pe_kernel(&self, mode: EngineMode) -> PeKernel;
+
+    /// The modes `amfma tune` should consider from this family when it
+    /// searches the joint per-site Pareto frontier.
+    fn tune_candidates(&self) -> Vec<EngineMode>;
+}
+
+// ---------------------------------------------------------------- fp32 --
+
+struct Fp32Family;
+
+fn fp32_dot(_: EngineMode, x: &[f32], w: &[f32]) -> f32 {
+    x.iter().zip(w).fold(0.0f32, |acc, (&a, &b)| acc + a * b)
+}
+
+impl Family for Fp32Family {
+    fn id(&self) -> FamilyId {
+        FamilyId::Fp32
+    }
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+    fn grammar(&self) -> &'static str {
+        "fp32"
+    }
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::BitExact
+    }
+    fn owns(&self, mode: EngineMode) -> bool {
+        matches!(mode, EngineMode::Fp32)
+    }
+    fn parse(&self, label: &str) -> Option<EngineMode> {
+        (label == "fp32").then_some(EngineMode::Fp32)
+    }
+    fn format_label(&self, _: EngineMode) -> String {
+        "fp32".into()
+    }
+    fn element_bits(&self, _: EngineMode) -> u32 {
+        32
+    }
+    fn pe_area(&self, _: EngineMode) -> PeArea {
+        PeArea::fp32_reference()
+    }
+    fn pe_kernel(&self, mode: EngineMode) -> PeKernel {
+        debug_assert!(self.owns(mode));
+        PeKernel { mode, dot: fp32_dot }
+    }
+    fn tune_candidates(&self) -> Vec<EngineMode> {
+        vec![EngineMode::Fp32]
+    }
+}
+
+// ---------------------------------------------------------------- bf16 --
+
+struct Bf16Family;
+
+fn bf16_dot(mode: EngineMode, x: &[f32], w: &[f32]) -> f32 {
+    let EngineMode::Bf16(nm) = mode else {
+        unreachable!("bf16 kernel bound to a non-bf16 mode")
+    };
+    let xq: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+    let wq: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+    bf16_to_f32(column_dot(&xq, &wq, nm))
+}
+
+impl Family for Bf16Family {
+    fn id(&self) -> FamilyId {
+        FamilyId::Bf16
+    }
+    fn name(&self) -> &'static str {
+        "bf16"
+    }
+    fn grammar(&self) -> &'static str {
+        "bf16 | bf16an-<k>-<lambda>  (k, lambda >= 1, k + lambda <= 16)"
+    }
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::BitExact
+    }
+    fn owns(&self, mode: EngineMode) -> bool {
+        matches!(mode, EngineMode::Bf16(_))
+    }
+    fn parse(&self, label: &str) -> Option<EngineMode> {
+        // Bit-for-bit the pre-registry grammar: `bf16`, or `bf16an-k-l`
+        // with both fields nonzero, individually <= NORM_POS (checked
+        // before the sum so absurd values cannot overflow it) and jointly
+        // covering at most the NORM_POS shift range.  No trailing fields.
+        if label == "bf16" {
+            return Some(EngineMode::Bf16(NormMode::Accurate));
+        }
+        let rest = label.strip_prefix("bf16an-")?;
+        let mut it = rest.split('-');
+        let k: u32 = it.next()?.parse().ok()?;
+        let l: u32 = it.next()?.parse().ok()?;
+        if it.next().is_some()
+            || k == 0
+            || l == 0
+            || k > NORM_POS
+            || l > NORM_POS
+            || k + l > NORM_POS
+        {
+            return None;
+        }
+        Some(EngineMode::Bf16(NormMode::Approx(ApproxNorm::new(k, l))))
+    }
+    fn format_label(&self, mode: EngineMode) -> String {
+        match mode {
+            EngineMode::Bf16(NormMode::Accurate) => "bf16".into(),
+            EngineMode::Bf16(NormMode::Approx(cfg)) => format!("bf16{}", cfg.label()),
+            _ => unreachable!("bf16 label for a non-bf16 mode"),
+        }
+    }
+    fn element_bits(&self, _: EngineMode) -> u32 {
+        16
+    }
+    fn pe_area(&self, mode: EngineMode) -> PeArea {
+        match mode {
+            EngineMode::Bf16(NormMode::Accurate) => PeArea::accurate(),
+            EngineMode::Bf16(NormMode::Approx(cfg)) => PeArea::approximate(cfg),
+            _ => unreachable!("bf16 cost for a non-bf16 mode"),
+        }
+    }
+    fn pe_kernel(&self, mode: EngineMode) -> PeKernel {
+        debug_assert!(self.owns(mode));
+        PeKernel { mode, dot: bf16_dot }
+    }
+    fn tune_candidates(&self) -> Vec<EngineMode> {
+        // The calibration defaults: coverage-ordered bf16an points.
+        ["bf16an-2-2", "bf16an-1-1", "bf16an-1-2"]
+            .iter()
+            .map(|s| EngineMode::parse(s).expect("static candidate"))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- elma --
+
+struct ElmaFamily;
+
+fn elma_dot(_: EngineMode, x: &[f32], w: &[f32]) -> f32 {
+    elma::dot(x, w)
+}
+
+impl Family for ElmaFamily {
+    fn id(&self) -> FamilyId {
+        FamilyId::Elma
+    }
+    fn name(&self) -> &'static str {
+        "elma"
+    }
+    fn grammar(&self) -> &'static str {
+        "elma-<N>-<es>  (only the published elma-8-1 point is implemented)"
+    }
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Statistical
+    }
+    fn owns(&self, mode: EngineMode) -> bool {
+        matches!(mode, EngineMode::Elma(_))
+    }
+    fn parse(&self, label: &str) -> Option<EngineMode> {
+        let rest = label.strip_prefix("elma-")?;
+        let mut it = rest.split('-');
+        let bits: u32 = it.next()?.parse().ok()?;
+        let es: u32 = it.next()?.parse().ok()?;
+        if it.next().is_some() || bits != 8 || es != 1 {
+            return None;
+        }
+        Some(EngineMode::Elma(ElmaCfg::E8_1))
+    }
+    fn format_label(&self, mode: EngineMode) -> String {
+        let EngineMode::Elma(cfg) = mode else {
+            unreachable!("elma label for a non-elma mode")
+        };
+        format!("elma-{}-{}", cfg.bits, cfg.es)
+    }
+    fn element_bits(&self, mode: EngineMode) -> u32 {
+        let EngineMode::Elma(cfg) = mode else {
+            unreachable!("elma element bits for a non-elma mode")
+        };
+        cfg.bits
+    }
+    fn pe_area(&self, _: EngineMode) -> PeArea {
+        PeArea::elma_8_1()
+    }
+    fn pe_kernel(&self, mode: EngineMode) -> PeKernel {
+        debug_assert!(self.owns(mode));
+        PeKernel { mode, dot: elma_dot }
+    }
+    fn tune_candidates(&self) -> Vec<EngineMode> {
+        vec![EngineMode::Elma(ElmaCfg::E8_1)]
+    }
+}
+
+// ----------------------------------------------------------------- lut --
+
+struct LutFamily;
+
+fn lut_pe_dot(mode: EngineMode, x: &[f32], w: &[f32]) -> f32 {
+    let EngineMode::Lut(cfg) = mode else {
+        unreachable!("lut kernel bound to a non-lut mode")
+    };
+    lut::pe_dot(cfg, x, w)
+}
+
+impl Family for LutFamily {
+    fn id(&self) -> FamilyId {
+        FamilyId::Lut
+    }
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+    fn grammar(&self) -> &'static str {
+        "lut-<C>-<K>  (C codebooks in 1..=64, K prototypes a power of two in 2..=256)"
+    }
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Statistical
+    }
+    fn owns(&self, mode: EngineMode) -> bool {
+        matches!(mode, EngineMode::Lut(_))
+    }
+    fn parse(&self, label: &str) -> Option<EngineMode> {
+        let rest = label.strip_prefix("lut-")?;
+        let mut it = rest.split('-');
+        let c: u32 = it.next()?.parse().ok()?;
+        let k: u32 = it.next()?.parse().ok()?;
+        if it.next().is_some() || c == 0 || c > 64 || k < 2 || k > 256 || !k.is_power_of_two() {
+            return None;
+        }
+        Some(EngineMode::Lut(LutCfg { c, k }))
+    }
+    fn format_label(&self, mode: EngineMode) -> String {
+        let EngineMode::Lut(cfg) = mode else {
+            unreachable!("lut label for a non-lut mode")
+        };
+        format!("lut-{}-{}", cfg.c, cfg.k)
+    }
+    fn element_bits(&self, mode: EngineMode) -> u32 {
+        // Bits of one prototype code (per codebook): log2 K.
+        let EngineMode::Lut(cfg) = mode else {
+            unreachable!("lut element bits for a non-lut mode")
+        };
+        cfg.depth()
+    }
+    fn pe_area(&self, mode: EngineMode) -> PeArea {
+        let EngineMode::Lut(cfg) = mode else {
+            unreachable!("lut cost for a non-lut mode")
+        };
+        PeArea::lut(cfg)
+    }
+    fn pe_kernel(&self, mode: EngineMode) -> PeKernel {
+        debug_assert!(self.owns(mode));
+        PeKernel { mode, dot: lut_pe_dot }
+    }
+    fn tune_candidates(&self) -> Vec<EngineMode> {
+        vec![EngineMode::Lut(LutCfg::DEFAULT)]
+    }
+}
+
+// ------------------------------------------------------------ registry --
+
+static FP32_FAMILY: Fp32Family = Fp32Family;
+static BF16_FAMILY: Bf16Family = Bf16Family;
+static ELMA_FAMILY: ElmaFamily = ElmaFamily;
+static LUT_FAMILY: LutFamily = LutFamily;
+
+/// Every registered arithmetic family, in presentation order.
+pub fn registry() -> &'static [&'static dyn Family] {
+    static REGISTRY: [&'static dyn Family; 4] =
+        [&FP32_FAMILY, &BF16_FAMILY, &ELMA_FAMILY, &LUT_FAMILY];
+    &REGISTRY
+}
+
+/// The family that owns `mode`.
+pub fn family_of(mode: EngineMode) -> &'static dyn Family {
+    registry()
+        .iter()
+        .copied()
+        .find(|f| f.owns(mode))
+        .expect("every EngineMode variant has a registered family")
+}
+
+/// Look up a family by its registry name (`fp32`, `bf16`, `elma`, `lut`);
+/// `bf16an` is accepted as an alias for the bf16 family, matching the
+/// `--families` CLI vocabulary.
+pub fn family_by_name(name: &str) -> Option<&'static dyn Family> {
+    let name = if name == "bf16an" { "bf16" } else { name };
+    registry().iter().copied().find(|f| f.name() == name)
+}
+
+fn intern_label(mode: EngineMode) -> &'static str {
+    // The two fixed labels never touch the cache.
+    match mode {
+        EngineMode::Fp32 => "fp32",
+        EngineMode::Bf16(NormMode::Accurate) => "bf16",
+        m => {
+            static CACHE: OnceLock<Mutex<HashMap<EngineMode, &'static str>>> = OnceLock::new();
+            let mut map = CACHE.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+            if let Some(&s) = map.get(&m) {
+                return s;
+            }
+            let s: &'static str = Box::leak(family_of(m).format_label(m).into_boxed_str());
+            map.insert(m, s);
+            s
+        }
+    }
+}
+
+impl EngineMode {
+    /// Parse any registered family's label.  The pre-registry grammar
+    /// (`fp32`, `bf16`, `bf16an-k-λ`) is accepted bit-identically.
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        registry().iter().find_map(|f| f.parse(s))
+    }
+
+    /// Canonical interned label.  Never allocates after the first call
+    /// per mode — safe on the metrics/obs hot paths (the obs-overhead
+    /// bench gate asserts zero steady-state allocation).
+    pub fn label(&self) -> &'static str {
+        intern_label(*self)
+    }
+
+    /// The owning arithmetic family.
+    pub fn family(&self) -> &'static dyn Family {
+        family_of(*self)
+    }
+
+    /// The owning family's identity.
+    pub fn family_id(&self) -> FamilyId {
+        self.family().id()
+    }
+
+    /// Validation class of this mode's outputs.
+    pub fn fidelity(&self) -> Fidelity {
+        self.family().fidelity()
+    }
+
+    /// This mode's per-PE multiply-accumulate semantics.
+    pub fn pe_kernel(&self) -> PeKernel {
+        self.family().pe_kernel(*self)
+    }
+
+    /// Whether this mode runs on the bf16 systolic datapath (resident
+    /// weight planes, golden bit contracts, kernel tiers).
+    pub fn is_bf16(&self) -> bool {
+        matches!(self, EngineMode::Bf16(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_cover_all_modes() {
+        let names: Vec<_> = registry().iter().map(|f| f.name()).collect();
+        assert_eq!(names, vec!["fp32", "bf16", "elma", "lut"]);
+        for mode in [
+            EngineMode::Fp32,
+            EngineMode::Bf16(NormMode::Accurate),
+            EngineMode::Elma(ElmaCfg::E8_1),
+            EngineMode::Lut(LutCfg::DEFAULT),
+        ] {
+            let fam = family_of(mode);
+            assert!(fam.owns(mode));
+            assert_eq!(registry().iter().filter(|f| f.owns(mode)).count(), 1);
+            assert_eq!(fam.id(), mode.family_id());
+        }
+    }
+
+    #[test]
+    fn family_by_name_resolves_and_aliases() {
+        assert_eq!(family_by_name("fp32").unwrap().id(), FamilyId::Fp32);
+        assert_eq!(family_by_name("bf16").unwrap().id(), FamilyId::Bf16);
+        assert_eq!(family_by_name("bf16an").unwrap().id(), FamilyId::Bf16);
+        assert_eq!(family_by_name("elma").unwrap().id(), FamilyId::Elma);
+        assert_eq!(family_by_name("lut").unwrap().id(), FamilyId::Lut);
+        assert!(family_by_name("posit").is_none());
+    }
+
+    #[test]
+    fn new_family_labels_round_trip() {
+        for s in ["elma-8-1", "lut-4-16", "lut-1-2", "lut-64-256"] {
+            let m = EngineMode::parse(s).unwrap_or_else(|| panic!("{s} must parse"));
+            assert_eq!(m.label(), s);
+        }
+        assert_eq!(EngineMode::parse("elma-8-1"), Some(EngineMode::Elma(ElmaCfg::E8_1)));
+        assert_eq!(
+            EngineMode::parse("lut-4-16"),
+            Some(EngineMode::Lut(LutCfg { c: 4, k: 16 }))
+        );
+    }
+
+    #[test]
+    fn new_family_grammar_rejections() {
+        for s in [
+            "elma", "elma-", "elma-8", "elma-8-", "elma-8-2", "elma-7-1", "elma-8-1-0",
+            "elma-8-1 ", "ELMA-8-1", "lut", "lut-", "lut-4", "lut-4-", "lut-0-16", "lut-65-16",
+            "lut-4-1", "lut-4-3", "lut-4-512", "lut-4-16-1", "lut-4-16 ",
+        ] {
+            assert_eq!(EngineMode::parse(s), None, "{s:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn labels_are_interned() {
+        let a = EngineMode::parse("bf16an-1-2").unwrap();
+        assert!(std::ptr::eq(a.label(), a.label()));
+        let e = EngineMode::parse("elma-8-1").unwrap();
+        assert!(std::ptr::eq(e.label(), e.label()));
+        // The fixed labels are compile-time constants.
+        assert_eq!(EngineMode::Fp32.label(), "fp32");
+        assert_eq!(EngineMode::Bf16(NormMode::Accurate).label(), "bf16");
+    }
+
+    #[test]
+    fn fidelity_classes() {
+        assert_eq!(EngineMode::Fp32.fidelity(), Fidelity::BitExact);
+        assert_eq!(EngineMode::parse("bf16an-1-2").unwrap().fidelity(), Fidelity::BitExact);
+        assert_eq!(EngineMode::parse("elma-8-1").unwrap().fidelity(), Fidelity::Statistical);
+        assert_eq!(EngineMode::parse("lut-4-16").unwrap().fidelity(), Fidelity::Statistical);
+    }
+
+    #[test]
+    fn element_bits_per_family() {
+        assert_eq!(family_of(EngineMode::Fp32).element_bits(EngineMode::Fp32), 32);
+        let b = EngineMode::parse("bf16").unwrap();
+        assert_eq!(family_of(b).element_bits(b), 16);
+        let e = EngineMode::parse("elma-8-1").unwrap();
+        assert_eq!(family_of(e).element_bits(e), 8);
+        let l = EngineMode::parse("lut-4-16").unwrap();
+        assert_eq!(family_of(l).element_bits(l), 4);
+    }
+
+    #[test]
+    fn pe_kernels_compute_their_familys_dot() {
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.13).sin()).collect();
+        let w: Vec<f32> = (0..32).map(|i| (i as f32 * 0.29).cos()).collect();
+        let oracle: f64 = x.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum();
+
+        let fp = EngineMode::Fp32.pe_kernel().dot(&x, &w) as f64;
+        assert!((fp - oracle).abs() < 1e-5);
+
+        // bf16 kernel == the exported column_dot contract.
+        let nm = NormMode::Approx(ApproxNorm::AN_1_2);
+        let got = EngineMode::Bf16(nm).pe_kernel().dot(&x, &w);
+        let xq: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+        let wq: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+        assert_eq!(got.to_bits(), bf16_to_f32(column_dot(&xq, &wq, nm)).to_bits());
+
+        let el = EngineMode::parse("elma-8-1").unwrap().pe_kernel().dot(&x, &w) as f64;
+        let budget: f64 = x.iter().zip(&w).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+        assert!((el - oracle).abs() < 0.10 * budget);
+
+        let lu = EngineMode::parse("lut-4-16").unwrap().pe_kernel().dot(&x, &w) as f64;
+        assert!((lu - oracle).abs() < 1e-4, "lut pe kernel is the degenerate near-exact corner");
+    }
+
+    #[test]
+    fn tune_candidates_belong_to_their_family() {
+        for fam in registry() {
+            let cands = fam.tune_candidates();
+            assert!(!cands.is_empty(), "{} has no tune candidates", fam.name());
+            for m in cands {
+                assert!(fam.owns(m));
+                assert_eq!(EngineMode::parse(m.label()), Some(m), "candidate label round-trip");
+            }
+        }
+    }
+}

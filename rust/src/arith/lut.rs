@@ -1,0 +1,356 @@
+//! Maddness-style LUT matmul: prototype hashing + table accumulation.
+//!
+//! This is the `lut-C-K` arithmetic family — a reproduction of the
+//! multiplier-free GEMM from Blalock & Guttag, *"Multiplying Matrices
+//! Without Multiplying"* (MADDNESS), the arithmetic behind the Stella Nera
+//! accelerator named in PAPERS.md.  The reduction dimension is split into
+//! `C` contiguous subspaces; each subspace learns `K` prototypes reachable
+//! through a balanced binary hash tree (one split dimension per level,
+//! per-node median thresholds).  A lookup table holds the precomputed dot
+//! product of every prototype with every weight column, so inference is
+//! `C` table reads and `C − 1` adds per output — no multipliers at all.
+//!
+//! # Label grammar
+//!
+//! `lut-C-K` with `C` codebooks in `1..=64` and `K` a power of two in
+//! `2..=256` (the tree depth is `log2 K`).  The default serving point is
+//! `lut-4-16`.
+//!
+//! # Training and residency
+//!
+//! [`LutEncoder::train`] learns the hash tree and prototypes offline from
+//! a calibration batch (for raw [`gemm`] calls, the activation batch
+//! itself — deterministic, no RNG anywhere).  [`LutPlane::build`] then
+//! folds a weight matrix into the resident table, playing the same role as
+//! the pre-quantized bf16 weight planes on the bf16 path.
+//!
+//! The family is classed `Fidelity::Statistical`: accuracy is pinned by
+//! differential error envelopes against the exact f32 GEMM, not by bit
+//! contracts.  The `PeKernel` view is degenerate by construction — a
+//! single-row "batch" trains prototypes that reproduce the row exactly, so
+//! the per-PE dot is near-exact; the interesting behaviour is batch-level.
+
+/// Parameters of a LUT family member: `c` codebooks × `k` prototypes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LutCfg {
+    /// Number of codebooks (contiguous subspaces of the reduction dim).
+    pub c: u32,
+    /// Prototypes per codebook; power of two, tree depth = `log2 k`.
+    pub k: u32,
+}
+
+impl LutCfg {
+    /// The default serving point: 4 codebooks × 16 prototypes.
+    pub const DEFAULT: LutCfg = LutCfg { c: 4, k: 16 };
+
+    /// Hash-tree depth: `log2 k`.
+    pub fn depth(&self) -> u32 {
+        self.k.trailing_zeros()
+    }
+}
+
+/// A trained Maddness encoder: subspace layout, hash trees, prototypes.
+#[derive(Debug, Clone)]
+pub struct LutEncoder {
+    cfg: LutCfg,
+    kdim: usize,
+    /// Subspace `c` covers input dims `starts[c]..starts[c + 1]`.
+    starts: Vec<usize>,
+    /// One split dim per tree level (relative to the subspace), per codebook.
+    split_dims: Vec<Vec<usize>>,
+    /// Per codebook, per level: thresholds for the `2^level` tree nodes.
+    thresholds: Vec<Vec<Vec<f32>>>,
+    /// Per codebook: `k × width` leaf centroids (empty leaves stay zero).
+    protos: Vec<Vec<f32>>,
+}
+
+impl LutEncoder {
+    /// Number of codebooks actually in use (`cfg.c` clamped to the
+    /// reduction dim so every subspace owns at least one input dim).
+    pub fn codebooks(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Learn the hash trees and prototypes from a calibration batch
+    /// `x[rows × kdim]`.  Fully deterministic: split dims maximize batch
+    /// variance (lowest dim wins ties), thresholds are per-node medians,
+    /// prototypes are leaf centroids.
+    pub fn train(cfg: LutCfg, x: &[f32], rows: usize, kdim: usize) -> LutEncoder {
+        assert!(kdim > 0, "lut encoder needs a nonzero reduction dim");
+        assert_eq!(x.len(), rows * kdim);
+        let cc = (cfg.c as usize).clamp(1, kdim);
+        let depth = cfg.depth() as usize;
+        let kproto = 1usize << depth;
+        let starts: Vec<usize> = (0..=cc).map(|i| i * kdim / cc).collect();
+        let mut split_dims = Vec::with_capacity(cc);
+        let mut thresholds = Vec::with_capacity(cc);
+        let mut protos = Vec::with_capacity(cc);
+        for c in 0..cc {
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let width = hi - lo;
+            let mut assign = vec![0usize; rows];
+            let mut dims = Vec::with_capacity(depth);
+            let mut levels = Vec::with_capacity(depth);
+            let mut used = vec![false; width];
+            for level in 0..depth {
+                if used.iter().all(|&u| u) {
+                    used.fill(false); // deeper than wide: cycle the dims
+                }
+                // Split on the highest-variance unused dim (ties → lowest).
+                let mut best_var = f64::NEG_INFINITY;
+                let mut dim = 0usize;
+                for d in 0..width {
+                    if used[d] {
+                        continue;
+                    }
+                    let (mut s, mut s2) = (0.0f64, 0.0f64);
+                    for r in 0..rows {
+                        let v = x[r * kdim + lo + d] as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                    let nr = rows as f64;
+                    let var = s2 / nr - (s / nr) * (s / nr);
+                    if var > best_var {
+                        best_var = var;
+                        dim = d;
+                    }
+                }
+                used[dim] = true;
+                // Per-node threshold = median of the split-dim values of the
+                // rows currently hashed to that node.
+                let nodes = 1usize << level;
+                let mut thr = vec![0.0f32; nodes];
+                for (node, t) in thr.iter_mut().enumerate() {
+                    let mut vals: Vec<f32> = (0..rows)
+                        .filter(|&r| assign[r] == node)
+                        .map(|r| x[r * kdim + lo + dim])
+                        .collect();
+                    if !vals.is_empty() {
+                        vals.sort_by(f32::total_cmp);
+                        let mid = vals.len() / 2;
+                        *t = if vals.len() % 2 == 0 {
+                            0.5 * (vals[mid - 1] + vals[mid])
+                        } else {
+                            vals[mid]
+                        };
+                    }
+                }
+                for (r, a) in assign.iter_mut().enumerate() {
+                    let right = x[r * kdim + lo + dim] > thr[*a];
+                    *a = 2 * *a + usize::from(right);
+                }
+                dims.push(dim);
+                levels.push(thr);
+            }
+            // Leaf centroids (f64 accumulation; empty leaves stay zero).
+            let mut sums = vec![0.0f64; kproto * width];
+            let mut counts = vec![0usize; kproto];
+            for (r, &a) in assign.iter().enumerate() {
+                counts[a] += 1;
+                for d in 0..width {
+                    sums[a * width + d] += x[r * kdim + lo + d] as f64;
+                }
+            }
+            let mut pc = vec![0.0f32; kproto * width];
+            for p in 0..kproto {
+                if counts[p] > 0 {
+                    for d in 0..width {
+                        pc[p * width + d] = (sums[p * width + d] / counts[p] as f64) as f32;
+                    }
+                }
+            }
+            split_dims.push(dims);
+            thresholds.push(levels);
+            protos.push(pc);
+        }
+        LutEncoder { cfg, kdim, starts, split_dims, thresholds, protos }
+    }
+
+    /// Hash one input row to a prototype index per codebook.
+    pub fn encode_row(&self, row: &[f32], codes: &mut [usize]) {
+        debug_assert_eq!(row.len(), self.kdim);
+        debug_assert_eq!(codes.len(), self.codebooks());
+        for (c, code) in codes.iter_mut().enumerate() {
+            let lo = self.starts[c];
+            let mut node = 0usize;
+            for (level, &dim) in self.split_dims[c].iter().enumerate() {
+                let right = row[lo + dim] > self.thresholds[c][level][node];
+                node = 2 * node + usize::from(right);
+            }
+            *code = node;
+        }
+    }
+}
+
+/// A weight matrix folded into engine-resident lookup tables:
+/// `table[c][p][j] = proto[c][p] · w[subspace(c)][:, j]`.
+#[derive(Debug, Clone)]
+pub struct LutPlane {
+    enc: LutEncoder,
+    n: usize,
+    kproto: usize,
+    table: Vec<f32>,
+}
+
+impl LutPlane {
+    /// Precompute the prototype × weight-column tables for `w[kdim × n]`.
+    pub fn build(enc: LutEncoder, w: &[f32], n: usize) -> LutPlane {
+        assert_eq!(w.len(), enc.kdim * n);
+        let cc = enc.codebooks();
+        let kproto = 1usize << enc.cfg.depth();
+        let mut table = vec![0.0f32; cc * kproto * n];
+        for c in 0..cc {
+            let (lo, hi) = (enc.starts[c], enc.starts[c + 1]);
+            let width = hi - lo;
+            for p in 0..kproto {
+                let proto = &enc.protos[c][p * width..(p + 1) * width];
+                let out = &mut table[(c * kproto + p) * n..(c * kproto + p + 1) * n];
+                for (d, &pv) in proto.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[(lo + d) * n..(lo + d + 1) * n];
+                    for (o, &wv) in out.iter_mut().zip(wrow) {
+                        *o += pv * wv;
+                    }
+                }
+            }
+        }
+        LutPlane { enc, n, kproto, table }
+    }
+
+    /// One output row: hash the input, then accumulate `C` table rows.
+    pub fn accumulate_row(&self, row: &[f32], out: &mut [f32], codes: &mut [usize]) {
+        debug_assert_eq!(out.len(), self.n);
+        self.enc.encode_row(row, codes);
+        out.fill(0.0);
+        for (c, &code) in codes.iter().enumerate() {
+            let start = (c * self.kproto + code) * self.n;
+            let trow = &self.table[start..start + self.n];
+            for (o, &t) in out.iter_mut().zip(trow) {
+                *o += t;
+            }
+        }
+    }
+}
+
+/// LUT GEMM: `y[m×n] = x[m×k] · w[k×n]`, self-calibrated on the activation
+/// batch `x` (train → fold → hash-and-accumulate).  Deterministic.
+pub fn gemm(cfg: LutCfg, x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    let enc = LutEncoder::train(cfg, x, m, k);
+    let plane = LutPlane::build(enc, w, n);
+    let mut codes = vec![0usize; plane.enc.codebooks()];
+    let mut y = vec![0.0f32; m * n];
+    for (xr, yr) in x.chunks(k).zip(y.chunks_mut(n)) {
+        plane.accumulate_row(xr, yr, &mut codes);
+    }
+    y
+}
+
+/// The per-PE dot semantics exposed through the family registry.  A
+/// single-row batch trains prototypes that reproduce the row exactly, so
+/// this is the degenerate (near-exact) corner of the family; see the
+/// module docs.
+pub fn pe_dot(cfg: LutCfg, xs: &[f32], ws: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), ws.len());
+    gemm(cfg, xs, ws, 1, xs.len(), 1)[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cluster-structured batch: every entry is drawn from 4 well-separated
+    /// levels plus a deterministic sub-1e-3 jitter.
+    fn clustered(rows: usize, kdim: usize) -> Vec<f32> {
+        const LEVELS: [f32; 4] = [-3.0, -1.0, 1.0, 3.0];
+        (0..rows * kdim)
+            .map(|i| {
+                let (r, d) = (i / kdim, i % kdim);
+                let jitter = ((r * 31 + d * 17) % 101) as f32 * 1e-5;
+                LEVELS[(r * 7 + d * 3) % 4] + jitter
+            })
+            .collect()
+    }
+
+    fn weights(kdim: usize, n: usize) -> Vec<f32> {
+        (0..kdim * n).map(|i| ((i * 13 + 5) % 23) as f32 / 11.0 - 1.0).collect()
+    }
+
+    fn oracle(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut y = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                y[i * n + j] = (0..k).map(|t| x[i * k + t] as f64 * w[t * n + j] as f64).sum();
+            }
+        }
+        y
+    }
+
+    fn rel_frobenius(got: &[f32], want: &[f64]) -> f64 {
+        let num: f64 = got.iter().zip(want).map(|(&g, &o)| (g as f64 - o).powi(2)).sum();
+        let den: f64 = want.iter().map(|o| o * o).sum();
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn clustered_batch_is_recovered_within_envelope() {
+        // One dim per codebook and 4 prototypes: median splits isolate the
+        // 4 levels exactly, so the LUT answer tracks the exact GEMM.
+        let (m, k, n) = (64, 8, 6);
+        let x = clustered(m, k);
+        let w = weights(k, n);
+        let y = gemm(LutCfg { c: 8, k: 4 }, &x, &w, m, k, n);
+        let rel = rel_frobenius(&y, &oracle(&x, &w, m, k, n));
+        assert!(rel < 0.02, "lut gemm rel err {rel} breaches envelope");
+    }
+
+    #[test]
+    fn default_point_bounded_on_clustered_batch() {
+        let (m, k, n) = (96, 32, 5);
+        let x = clustered(m, k);
+        let w = weights(k, n);
+        let y = gemm(LutCfg::DEFAULT, &x, &w, m, k, n);
+        let rel = rel_frobenius(&y, &oracle(&x, &w, m, k, n));
+        assert!(rel < 0.05, "lut-4-16 rel err {rel} breaches envelope");
+    }
+
+    #[test]
+    fn gemm_is_deterministic() {
+        let (m, k, n) = (20, 16, 4);
+        let x = clustered(m, k);
+        let w = weights(k, n);
+        let y1 = gemm(LutCfg::DEFAULT, &x, &w, m, k, n);
+        let y2 = gemm(LutCfg::DEFAULT, &x, &w, m, k, n);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn pe_dot_is_near_exact() {
+        let k = 24;
+        let xs: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let ws: Vec<f32> = (0..k).map(|i| (i as f32 * 0.21).cos()).collect();
+        let got = pe_dot(LutCfg::DEFAULT, &xs, &ws) as f64;
+        let want: f64 = xs.iter().zip(&ws).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((got - want).abs() < 1e-4, "pe dot {got} vs {want}");
+    }
+
+    #[test]
+    fn more_prototypes_than_rows_is_safe() {
+        // 3 rows, 16 prototypes: most leaves are empty (zero centroids).
+        let (m, k, n) = (3, 8, 4);
+        let x = clustered(m, k);
+        let w = weights(k, n);
+        let y = gemm(LutCfg { c: 2, k: 16 }, &x, &w, m, k, n);
+        assert_eq!(y.len(), m * n);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn codebooks_clamp_to_reduction_dim() {
+        let enc = LutEncoder::train(LutCfg { c: 64, k: 4 }, &clustered(10, 6), 10, 6);
+        assert_eq!(enc.codebooks(), 6);
+    }
+}

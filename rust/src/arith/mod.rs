@@ -1,32 +1,50 @@
-//! Bit-exact reduced-precision floating-point arithmetic substrate.
+//! Arithmetic substrate: the registered numeric families and their kernels.
 //!
-//! This is the foundation everything else builds on: the storage formats of
-//! the paper's Fig. 1 ([`format`]), decode/encode with round-to-nearest-even
-//! ([`softfloat`]), the extended 16-bit-significand partial-sum type
-//! ([`ext`]), exact leading-zero normalization control ([`lza`]), the
-//! paper's approximate normalization ([`approx_norm`]), the fused
-//! multiply-add PE datapath itself ([`fma`]) and its lane-parallel batched
-//! form ([`wide`]) — the same arithmetic advanced over independent column
-//! chains in struct-of-arrays form, bit-exact with the scalar chain — plus
-//! two execution tiers layered on top: the native x86-64 SIMD datapath
-//! ([`simd`], bit-exact with [`wide`]) and the fast-math tier ([`fastmath`],
-//! hardware-f32 FMA that *models* bf16an truncation statistically rather
-//! than bit-exactly).
+//! The original core is the bit-exact reduced-precision floating-point
+//! datapath of the source paper: the storage formats of Fig. 1
+//! ([`format`]), decode/encode with round-to-nearest-even ([`softfloat`]),
+//! the extended 16-bit-significand partial-sum type ([`ext`]), exact
+//! leading-zero normalization control ([`lza`]), the paper's approximate
+//! normalization ([`approx_norm`]), the fused multiply-add PE datapath
+//! itself ([`fma`]) and its lane-parallel batched form ([`wide`]) — the
+//! same arithmetic advanced over independent column chains in
+//! struct-of-arrays form, bit-exact with the scalar chain — plus two
+//! execution tiers layered on top: the native x86-64 SIMD datapath
+//! ([`simd`], bit-exact with [`wide`]) and the fast-math tier
+//! ([`fastmath`], hardware-f32 FMA that *models* bf16an truncation
+//! statistically rather than bit-exactly).
+//!
+//! On top of that sits the **arithmetic-family registry** ([`family`]):
+//! [`EngineMode`] is an opaque *(family, params)* handle, and each family
+//! — fp32, bf16/bf16an, plus the neighboring approximate designs
+//! [`elma`] (log-domain multiply, Kulisch accumulate) and [`lut`]
+//! (Maddness prototype-hash tables) — registers its label grammar, element
+//! format, PE semantics, gate-level cost entry and fidelity class behind
+//! one [`family::Family`] trait, so new numerics plug in without touching
+//! the systolic, model, coordinator or CLI layers again.
 
 pub mod approx_norm;
+pub mod elma;
 pub mod ext;
+pub mod family;
 pub mod fastmath;
 pub mod fma;
 pub mod format;
+pub mod lut;
 pub mod lza;
 pub mod simd;
 pub mod softfloat;
 pub mod wide;
 
 pub use approx_norm::ApproxNorm;
+pub use elma::ElmaCfg;
 pub use ext::{ExtFloat, Kind};
+pub use family::{
+    family_by_name, family_of, registry, EngineMode, Family, FamilyId, Fidelity, PeKernel,
+};
 pub use fastmath::FastMathKernel;
 pub use fma::{column_dot, fma, fma_traced, FmaTrace, NormMode, ADD_FRAME_BITS, NORM_POS};
+pub use lut::{LutCfg, LutEncoder, LutPlane};
 pub use simd::SimdKernel;
 pub use softfloat::{bf16_to_f32, f32_to_bf16};
 pub use wide::{WideAcc, WideKernel};

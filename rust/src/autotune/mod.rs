@@ -12,15 +12,28 @@
 //! * [`calibrate`] — greedy per-site calibration against the FP32
 //!   reference on a task's dev split, assigning each site the cheapest
 //!   mode that keeps end-to-end task-metric degradation within budget;
-//! * [`search`] — the PE-area cost hooks, MAC-volume site weighting and
-//!   the (k, λ) Pareto-frontier sweep;
+//! * [`search`] — the PE-area cost hooks (priced through the arithmetic-
+//!   family registry: [`search::mode_pe_area`] asks
+//!   [`crate::arith::Family::pe_area`], so every registered family —
+//!   bf16an, ELMA log-domain, Maddness LUT — shares one gate-level cost
+//!   model), MAC-volume site weighting and the Pareto-frontier sweep;
 //! * [`report`] — the text reports behind `amfma tune` and the
 //!   `design_space` example.
 //!
-//! Serving integration: `amfma tune` writes a policy file, `amfma serve
-//! --policy <file>` (and [`crate::coordinator::ServerConfig::policies`])
-//! runs it, and [`crate::coordinator::Router`] lanes route traffic between
-//! cheap (approximate) and accurate replicas.
+//! The candidate set is not limited to `(k, λ)` points: any registry
+//! family's [`crate::arith::Family::tune_candidates`] may compete per
+//! site — `amfma tune --families bf16an,elma,lut` prices the named
+//! families' candidates on one **joint** area-vs-error Pareto frontier
+//! (persisted as `BENCH_families.json`) and feeds the joint set into the
+//! greedy per-site search, so a site may land on whichever family
+//! dominates at its error budget.
+//!
+//! Serving integration: `amfma tune` writes a policy file (`AMFP` v3 —
+//! v1/v2 files load unchanged; v3 admits registry-family labels in site
+//! assignments), `amfma serve --policy <file>` (and
+//! [`crate::coordinator::ServerConfig::policies`]) runs it, and
+//! [`crate::coordinator::Router`] lanes route traffic between cheap
+//! (approximate) and accurate replicas.
 
 pub mod calibrate;
 pub mod policy;

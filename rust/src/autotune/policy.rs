@@ -24,23 +24,30 @@
 //! back to its prefill site's assignment, then to the default, so every
 //! pre-decode policy keeps its exact meaning.
 //!
-//! Format `AMFP` v2, little-endian (mirroring the `AMFT` task format):
+//! Format `AMFP` v3, little-endian (mirroring the `AMFT` task format):
 //! ```text
 //! magic  b"AMFP"
-//! u32    version (=2; v1 files — no decode phase — still load)
+//! u32    version (=3; v1 — no decode phase — and v2 files still load)
 //! u16    task_len,  task name (utf-8; empty = applies to any task)
 //! u16    mode_len,  default mode label (utf-8, e.g. "bf16an-1-2")
 //! u32    n_sites
 //! repeat n_sites:
 //!   u8   site kind (0=embed 1=qkv 2=attn.scores 3=attn.context
 //!                   4=attn.out 5=ffn1 6=ffn2 7=head;
-//!                   bit 7 set = decode-phase site, v2 only)
+//!                   bit 7 set = decode-phase site, v2+ only)
 //!   u32  layer (0 for embed/head)
 //!   u16  mode_len,  mode label (utf-8)
 //! ```
 //! Mode labels are stored as strings so the format never drifts from
 //! [`EngineMode::parse`]; corrupt or truncated files surface as
 //! [`crate::error::Error`], never panics.
+//!
+//! The v2 → v3 bump tracks the arithmetic-family registry
+//! ([`crate::arith::family`]): v3 writers may assign registry-family
+//! labels (`elma-8-1`, `lut-C-K`) to sites.  The byte layout is unchanged
+//! — the upgrade path for a v2 file is simply to load it (every v2 label
+//! parses bit-identically under the registry) and re-save, which rewrites
+//! the version field.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -214,7 +221,9 @@ pub struct PrecisionPolicy {
 }
 
 pub const POLICY_MAGIC: [u8; 4] = *b"AMFP";
-pub const POLICY_VERSION: u32 = 2;
+/// Current `AMFP` writer version.  v3 = registry-family labels allowed;
+/// v1/v2 files load unchanged (see the module docs for the upgrade path).
+pub const POLICY_VERSION: u32 = 3;
 
 impl PrecisionPolicy {
     /// A uniform policy: every site runs `mode`.
@@ -265,13 +274,13 @@ impl PrecisionPolicy {
     /// served-token key in [`crate::coordinator::Metrics`].
     pub fn label(&self) -> String {
         if self.is_uniform() {
-            self.default_mode.label()
+            self.default_mode.label().to_string()
         } else {
             format!("policy[{}+{}ovr]", self.default_mode.label(), self.override_count())
         }
     }
 
-    /// Serialize in the `AMFP` v2 format.
+    /// Serialize in the `AMFP` v3 format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut b = Vec::new();
         b.extend_from_slice(&POLICY_MAGIC);
@@ -296,8 +305,8 @@ impl PrecisionPolicy {
         b
     }
 
-    /// Parse the `AMFP` format, v2 or the pre-decode v1 (whose sites are
-    /// all prefill-phase).  Every malformed input — bad magic, unknown
+    /// Parse the `AMFP` format: v3, v2, or the pre-decode v1 (whose sites
+    /// are all prefill-phase).  Every malformed input — bad magic, unknown
     /// version, truncation anywhere, undecodable labels, unknown site
     /// kinds, duplicate sites — is an `Err`, never a panic.
     pub fn from_bytes(b: &[u8]) -> Result<PrecisionPolicy> {
@@ -523,6 +532,57 @@ mod tests {
         let kind_pos = bad.len() - (1 + 4 + 2 + ml.len());
         bad[kind_pos] |= 0x80;
         assert!(PrecisionPolicy::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn v2_policy_files_load_unchanged_under_v3() {
+        // Hand-build the v2 encoding of {qkv(0): bf16an-2-2, decode head:
+        // fp32}, default bf16 — a pre-registry file must load under
+        // POLICY_VERSION=3 with every label meaning exactly what it did.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"AMFP");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&4u16.to_le_bytes());
+        bytes.extend_from_slice(b"sst2");
+        let dm = b"bf16";
+        bytes.extend_from_slice(&(dm.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(dm);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.push(1); // qkv, prefill
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let ml = b"bf16an-2-2";
+        bytes.extend_from_slice(&(ml.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(ml);
+        bytes.push(7 | PHASE_DECODE_BIT); // head, decode phase
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let ml2 = b"fp32";
+        bytes.extend_from_slice(&(ml2.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(ml2);
+
+        let p = PrecisionPolicy::from_bytes(&bytes).unwrap();
+        assert_eq!(p.task, "sst2");
+        assert_eq!(p.default_mode.label(), "bf16");
+        assert_eq!(p.mode_for(Site::qkv(0)).label(), "bf16an-2-2");
+        assert_eq!(p.mode_for(Site::head().decode()), EngineMode::Fp32);
+        assert_eq!(p.override_count(), 2);
+        // The explicit upgrade path: re-saving writes the v3 version field
+        // with the byte layout (and meaning) otherwise identical.
+        let resaved = p.to_bytes();
+        assert_eq!(&resaved[4..8], &3u32.to_le_bytes());
+        assert_eq!(&resaved[..4], &bytes[..4]);
+        assert_eq!(&resaved[8..], &bytes[8..]);
+        assert_eq!(PrecisionPolicy::from_bytes(&resaved).unwrap(), p);
+    }
+
+    #[test]
+    fn v3_policies_carry_registry_family_labels() {
+        let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16").unwrap());
+        p.set(Site::ffn1(0), EngineMode::parse("elma-8-1").unwrap());
+        p.set(Site::ffn2(0).decode(), EngineMode::parse("lut-4-16").unwrap());
+        let q = PrecisionPolicy::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(q.mode_for(Site::ffn1(0)).label(), "elma-8-1");
+        assert_eq!(q.mode_for(Site::ffn2(0).decode()).label(), "lut-4-16");
     }
 
     #[test]

@@ -13,15 +13,13 @@ use crate::{ApproxNorm, NormMode};
 use super::policy::{Phase, PrecisionPolicy, Site, SiteKind};
 use super::report::rel_err;
 
-/// Modeled PE area (gate equivalents) of one engine mode: the paper's
-/// accurate/approximate bf16 PEs, or the conventional FP32 reference PE
-/// ([`PeArea::fp32_reference`]) for sites a policy keeps in full precision.
+/// Modeled PE area (gate equivalents) of one engine mode, priced by the
+/// owning arithmetic family's registry entry
+/// ([`crate::arith::family::Family::pe_area`]): the paper's accurate and
+/// approximate bf16 PEs, the conventional FP32 reference PE for sites a
+/// policy keeps in full precision, and the multiplier-free ELMA / LUT PEs.
 pub fn mode_pe_area(mode: EngineMode) -> f64 {
-    match mode {
-        EngineMode::Fp32 => PeArea::fp32_reference().total(),
-        EngineMode::Bf16(NormMode::Accurate) => PeArea::accurate().total(),
-        EngineMode::Bf16(NormMode::Approx(cfg)) => PeArea::approximate(cfg).total(),
-    }
+    mode.family().pe_area(mode).total()
 }
 
 /// Modeled PE area of one *kernel tier* serving `mode`.  The scalar, wide
@@ -240,6 +238,22 @@ mod tests {
         // And the approx saving matches the PE-level model exactly.
         let s = (bf16 - an12) / bf16;
         assert!((s - pe_area_saving(ApproxNorm::AN_1_2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_families_price_below_the_bf16_pes() {
+        // The joint three-family frontier only makes sense if the new
+        // families' registry cost entries slot under the bf16an PEs.
+        let an11 = mode_pe_area(EngineMode::parse("bf16an-1-1").unwrap());
+        let elma = mode_pe_area(EngineMode::parse("elma-8-1").unwrap());
+        let lut = mode_pe_area(EngineMode::parse("lut-4-16").unwrap());
+        assert!(lut < elma && elma < an11, "lut {lut} < elma {elma} < an11 {an11}");
+        // Registry dispatch agrees with the direct PeArea constructors.
+        assert_eq!(elma, PeArea::elma_8_1().total());
+        assert_eq!(
+            mode_pe_area(EngineMode::Bf16(NormMode::Accurate)),
+            PeArea::accurate().total()
+        );
     }
 
     #[test]

@@ -73,8 +73,13 @@ USAGE:
               KV-cached tokens/s per mode; --json persists
               BENCH_decode.json + trajectory line
   amfma tune  [--task sst2] [--budget 1.0] [--limit N] [--batch N]
-              [--candidates m1,m2] [--tune-head] [--out FILE]   calibrate a
-              per-site precision policy within an accuracy budget
+              [--candidates m1,m2] [--tune-head] [--out FILE]
+              [--families bf16an,elma,lut] [--frontier-only]    calibrate a
+              per-site precision policy within an accuracy budget;
+              --families prices the named arithmetic families' registry
+              candidates on one joint area-vs-error Pareto frontier
+              (persisted as BENCH_families.json) and feeds the joint set
+              into the per-site search; --frontier-only stops there
   amfma serve [--mode bf16an-1-2] [--policy FILE] [--requests N]
               [--concurrency C] [--varlen] [--length-bucket W]
               [--fastmath] [--decode-shadow]                    batching server
@@ -521,6 +526,23 @@ fn cmd_bench_decode(args: &Args) -> Result<()> {
 /// [`crate::autotune`]).  Exits non-zero when even the accurate fallback
 /// misses the budget, so CI catches accuracy regressions.
 fn cmd_tune(args: &Args) -> Result<()> {
+    // --families bf16an,elma,lut: price every registry candidate of the
+    // named arithmetic families on one joint area-vs-error Pareto
+    // frontier (persisted as BENCH_families.json) before calibrating;
+    // the joint candidate set then feeds the per-site search below so
+    // sites may land on whichever family dominates at their error
+    // budget.  --frontier-only stops after the frontier — the CI step
+    // runs it without task artifacts.
+    let family_candidates = match args.get("families") {
+        Some(spec) => {
+            let joint = families_frontier(spec)?;
+            if args.has_flag("frontier-only") {
+                return Ok(());
+            }
+            Some(joint)
+        }
+        None => None,
+    };
     let task_name = args.get("task").unwrap_or("sst2");
     let task = crate::data::tasks::load_task(task_name)?;
     let weights = Weights::load(&model::eval::weights_path(task_name))?;
@@ -536,6 +558,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
             .split(',')
             .map(|s| EngineMode::parse(s).with_context(|| format!("bad mode {s}")))
             .collect::<Result<_>>()?;
+    } else if let Some(joint) = family_candidates {
+        cfg.candidates = joint;
     }
     println!(
         "tuning '{task_name}' within {} points of fp32 ({} candidates, fallback {})",
@@ -591,6 +615,79 @@ fn cmd_tune(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Resolve a `--families` list through the arithmetic-family registry,
+/// price every tune candidate (gate-level PE area vs relative GEMM error
+/// against an f32 oracle on a deterministic random batch), print the
+/// joint Pareto frontier and persist it as `BENCH_families.json` (schema
+/// `amfma-bench-v1`; metrics `families/<label>/{area_ge,rel_err,
+/// on_frontier}`).  Returns every candidate mode so the caller can feed
+/// the joint set into per-site calibration.
+fn families_frontier(spec: &str) -> Result<Vec<EngineMode>> {
+    use crate::arith::family_by_name;
+    use crate::bench_harness::json::BenchReport;
+
+    let mut modes: Vec<EngineMode> = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let fam = family_by_name(name).with_context(|| {
+            format!("unknown family '{name}' (registered: fp32, bf16/bf16an, elma, lut)")
+        })?;
+        for m in fam.tune_candidates() {
+            if !modes.contains(&m) {
+                modes.push(m);
+            }
+        }
+    }
+    if modes.is_empty() {
+        bail!("--families named no registered family (try bf16an,elma,lut)");
+    }
+    // Deterministic oracle batch — small under AMFMA_BENCH_QUICK (the CI
+    // step), a fuller reduction otherwise.  One fixed seed: the frontier
+    // must be reproducible run to run.
+    let quick = std::env::var_os("AMFMA_BENCH_QUICK").is_some();
+    let (m, k, n) = if quick { (16, 128, 16) } else { (32, 512, 32) };
+    let mut rng = crate::prng::Prng::new(0xFA111E5);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let exact = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, k, n);
+
+    let points: Vec<autotune::ParetoPoint> = modes
+        .iter()
+        .map(|&mode| {
+            let y = MatrixEngine::new(mode).matmul(&x, &w, m, k, n);
+            autotune::ParetoPoint {
+                label: mode.label().to_string(),
+                cost: autotune::mode_pe_area(mode),
+                error: autotune::rel_err(&y, &exact),
+            }
+        })
+        .collect();
+    let front = autotune::pareto_frontier(&points);
+    println!(
+        "joint family frontier over {} candidates ({m}x{k}x{n} oracle batch):",
+        points.len()
+    );
+    for (p, on) in points.iter().zip(&front) {
+        println!(
+            "  {:<12} area {:>8.1} GE  rel-err {:>10.3e}  {}",
+            p.label,
+            p.cost,
+            p.error,
+            if *on { "frontier" } else { "dominated" }
+        );
+    }
+
+    let mut rep = BenchReport::new("families");
+    for (p, on) in points.iter().zip(&front) {
+        rep.push_metric(&format!("families/{}/area_ge", p.label), p.cost, "GE");
+        rep.push_metric(&format!("families/{}/rel_err", p.label), p.error, "frac");
+        let on_frontier = if *on { 1.0 } else { 0.0 };
+        rep.push_metric(&format!("families/{}/on_frontier", p.label), on_frontier, "bool");
+    }
+    let path = rep.write().context("write BENCH_families.json")?;
+    println!("wrote {}", path.display());
+    Ok(modes)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -288,8 +288,9 @@ impl RemoteBackend {
             return Err(SubmitError::Busy);
         }
         let id = sh.next_id.fetch_add(1, Ordering::Relaxed);
-        // The shard routes by its own replica set; lane placement already
-        // happened in the front's router when it picked this backend.
+        // The shard routes by its own replica set; lane (and any pinned
+        // mode) placement already happened in the front's router when it
+        // picked this backend, so the forwarded frame carries neither.
         let bytes = frame::encode(&Frame::Request {
             id,
             trace,
@@ -297,6 +298,7 @@ impl RemoteBackend {
             task: task.to_string(),
             tokens,
             steps,
+            mode: String::new(),
         });
         let born = Instant::now();
         let slot_idx = sh.rr.fetch_add(1, Ordering::Relaxed) % sh.slots.len();
@@ -571,6 +573,7 @@ fn request_error_of(err: WireError) -> RequestError {
         WireError::Busy => RequestError::Busy,
         WireError::Timeout => RequestError::Timeout,
         WireError::NoReplica | WireError::ShuttingDown => RequestError::Unavailable,
+        WireError::UnknownMode => RequestError::UnknownMode,
     }
 }
 

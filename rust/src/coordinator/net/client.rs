@@ -135,7 +135,22 @@ impl Client {
         lane: LaneSelector,
         tokens: &[u16],
     ) -> std::io::Result<u64> {
-        self.send_with_steps(task, lane, tokens, 0)
+        self.send_with_steps(task, lane, tokens, 0, "")
+    }
+
+    /// Like [`Client::send_request`], but pinned to replicas serving
+    /// exactly the arithmetic-family label `mode` (e.g. `bf16an-2-2`,
+    /// `elma-8-1`, `lut-4-16`) instead of routing by lane.  A label no
+    /// registered family recognises is answered with
+    /// [`WireError::UnknownMode`]; an over-long label is rejected here
+    /// like an over-long task name.
+    pub fn send_request_mode(
+        &mut self,
+        task: &str,
+        mode: &str,
+        tokens: &[u16],
+    ) -> std::io::Result<u64> {
+        self.send_with_steps(task, LaneSelector::Any, tokens, 0, mode)
     }
 
     /// Send one streaming decode request (pipelining): the server prefills
@@ -157,7 +172,7 @@ impl Client {
                 format!("decode step count {steps} outside the wire range 1..={}", frame::MAX_TOKENS),
             ));
         }
-        self.send_with_steps(task, lane, tokens, steps)
+        self.send_with_steps(task, lane, tokens, steps, "")
     }
 
     fn send_with_steps(
@@ -166,11 +181,18 @@ impl Client {
         lane: LaneSelector,
         tokens: &[u16],
         steps: u32,
+        mode: &str,
     ) -> std::io::Result<u64> {
         if task.len() > u8::MAX as usize {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidInput,
                 format!("task name {} bytes long exceeds the wire cap of 255", task.len()),
+            ));
+        }
+        if mode.len() > u8::MAX as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("mode label {} bytes long exceeds the wire cap of 255", mode.len()),
             ));
         }
         if tokens.len() > frame::MAX_TOKENS {
@@ -192,6 +214,7 @@ impl Client {
             task: task.to_string(),
             tokens: tokens.to_vec(),
             steps,
+            mode: mode.to_string(),
         };
         self.stream.write_all(&frame::encode(&f))?;
         self.stream.flush()?;

@@ -6,7 +6,7 @@
 //! | offset | size | field                                     |
 //! |--------|------|-------------------------------------------|
 //! | 0      | 4    | magic `b"AMFN"`                           |
-//! | 4      | 1    | version (4)                               |
+//! | 4      | 1    | version (5)                               |
 //! | 5      | 1    | kind (0=request 1=reply-ok 2=reply-err 3=shutdown 4=health 5=drain 6=stats 7=stream) |
 //! | 6      | 2    | reserved (must be 0)                      |
 //! | 8      | 4    | body length in bytes                      |
@@ -14,8 +14,12 @@
 //! Request body: `id u64`, `trace u64` (0 = unset: the server mints one at
 //! admission), `lane u8` (0=any 1=cheap 2=accurate), `task_len u8` +
 //! task-name bytes (utf-8), `n_tokens u32`, `n_tokens` × `u16` token
-//! ids, then `steps u32` (0 = classify; N ≥ 1 = autoregressively decode N
-//! tokens, streamed back as `Stream` frames).  Reply-ok body: `id u64`,
+//! ids, `steps u32` (0 = classify; N ≥ 1 = autoregressively decode N
+//! tokens, streamed back as `Stream` frames), then `mode_len u8` +
+//! mode-label bytes (utf-8; empty = route by `lane` as before, non-empty
+//! pins a registered arithmetic-family label such as `bf16an-2-2` or
+//! `elma-8-1` — an unrecognised label is answered with the `UnknownMode`
+//! wire error, version 5 additions).  Reply-ok body: `id u64`,
 //! `server_latency_us u64`, 4 × `u32` stage
 //! micros (enqueue-wait, batch-form, gemm, reply-flush — see
 //! [`crate::obs::StageTimings`]), `n_logits u32`, then `n_logits` × `f32`.
@@ -49,11 +53,13 @@ use crate::coordinator::server::RequestError;
 
 /// Format tag opening every frame.
 pub const MAGIC: [u8; 4] = *b"AMFN";
-/// Current protocol version (4: adds the request `steps` field and the
-/// streaming-reply frame kind for autoregressive decode; 3 added the
+/// Current protocol version (5: adds the request `mode` label — a pinned
+/// arithmetic-family label resolved through [`crate::arith::registry`] —
+/// and the `UnknownMode` wire error; 4 added the request `steps` field and
+/// the streaming-reply frame kind for autoregressive decode; 3 added the
 /// request trace id, per-stage reply timings and the stats frame kind;
 /// 2 added health/drain and the `Timeout` wire error).
-pub const VERSION: u8 = 4;
+pub const VERSION: u8 = 5;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a frame body: anything larger is a corrupt or hostile
@@ -129,6 +135,9 @@ pub enum WireError {
     ShuttingDown,
     /// An upstream shard did not answer within the deadline (code 6).
     Timeout,
+    /// The request pinned a `mode` label no registered arithmetic family
+    /// recognises (code 7; see [`crate::arith::registry`]).
+    UnknownMode,
 }
 
 impl WireError {
@@ -140,6 +149,7 @@ impl WireError {
             WireError::NoReplica => 4,
             WireError::ShuttingDown => 5,
             WireError::Timeout => 6,
+            WireError::UnknownMode => 7,
         }
     }
 }
@@ -155,6 +165,7 @@ impl From<RequestError> for WireError {
             RequestError::Busy => WireError::Busy,
             RequestError::Timeout => WireError::Timeout,
             RequestError::Unavailable => WireError::NoReplica,
+            RequestError::UnknownMode => WireError::UnknownMode,
         }
     }
 }
@@ -170,6 +181,7 @@ impl fmt::Display for WireError {
             WireError::NoReplica => write!(f, "no replica for lane/length"),
             WireError::ShuttingDown => write!(f, "server shutting down"),
             WireError::Timeout => write!(f, "shard deadline exceeded"),
+            WireError::UnknownMode => write!(f, "unknown mode"),
         }
     }
 }
@@ -182,7 +194,18 @@ pub enum Frame {
     /// (`steps ≥ 1`, each generated token streamed back as a [`Frame::Stream`]),
     /// routed by `lane`.  `trace` is the end-to-end trace id (0 = unset:
     /// the server mints one at admission and the id stays process-local).
-    Request { id: u64, trace: u64, lane: LaneSelector, task: String, tokens: Vec<u16>, steps: u32 },
+    /// `mode` pins the request to replicas serving that arithmetic-family
+    /// label (empty = no pin, route by `lane` alone); an unrecognised
+    /// label earns a [`WireError::UnknownMode`] rejection.
+    Request {
+        id: u64,
+        trace: u64,
+        lane: LaneSelector,
+        task: String,
+        tokens: Vec<u16>,
+        steps: u32,
+        mode: String,
+    },
     /// Server → client: the logits for request `id`, with the server-side
     /// stage split (`[enqueue_wait, batch_form, gemm, reply_flush]` µs).
     ReplyOk { id: u64, server_latency: Duration, stages: [u32; 4], logits: Vec<f32> },
@@ -235,6 +258,8 @@ pub enum FrameError {
     BadLane(u8),
     BadErrorCode(u8),
     BadTaskName,
+    /// The request's mode-label bytes are not utf-8.
+    BadModeLabel,
     /// Declared body length exceeds [`MAX_BODY`] (or a declared element
     /// count exceeds its cap) — an absurd length, rejected up front.
     Oversize { declared: usize, max: usize },
@@ -254,6 +279,7 @@ impl fmt::Display for FrameError {
             FrameError::BadLane(l) => write!(f, "unknown lane selector {l}"),
             FrameError::BadErrorCode(c) => write!(f, "unknown error code {c}"),
             FrameError::BadTaskName => write!(f, "task name is not utf-8"),
+            FrameError::BadModeLabel => write!(f, "mode label is not utf-8"),
             FrameError::Oversize { declared, max } => {
                 write!(f, "declared length {declared} exceeds cap {max}")
             }
@@ -271,7 +297,7 @@ impl fmt::Display for FrameError {
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut body = Vec::with_capacity(64);
     match frame {
-        Frame::Request { id, trace, lane, task, tokens, steps } => {
+        Frame::Request { id, trace, lane, task, tokens, steps, mode } => {
             body.extend_from_slice(&id.to_le_bytes());
             body.extend_from_slice(&trace.to_le_bytes());
             body.push(lane.to_wire());
@@ -295,6 +321,14 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 body.extend_from_slice(&t.to_le_bytes());
             }
             body.extend_from_slice(&steps.min(MAX_TOKENS as u32).to_le_bytes());
+            // Mode labels share the task-name treatment: length-prefixed
+            // utf-8, cut at a char boundary if somehow over u8::MAX.
+            let mut cut = mode.len().min(u8::MAX as usize);
+            while !mode.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            body.push(cut as u8);
+            body.extend_from_slice(&mode.as_bytes()[..cut]);
         }
         Frame::ReplyOk { id, server_latency, stages, logits } => {
             body.extend_from_slice(&id.to_le_bytes());
@@ -428,7 +462,11 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
             if steps as usize > MAX_TOKENS {
                 return Err(FrameError::Oversize { declared: steps as usize, max: MAX_TOKENS });
             }
-            Frame::Request { id, trace, lane, task, tokens, steps }
+            let mode_len = c.u8()? as usize;
+            let mode = std::str::from_utf8(c.take(mode_len)?)
+                .map_err(|_| FrameError::BadModeLabel)?
+                .to_string();
+            Frame::Request { id, trace, lane, task, tokens, steps, mode }
         }
         1 => {
             let id = c.u64()?;
@@ -457,6 +495,7 @@ fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
                 4 => WireError::NoReplica,
                 5 => WireError::ShuttingDown,
                 6 => WireError::Timeout,
+                7 => WireError::UnknownMode,
                 other => return Err(FrameError::BadErrorCode(other)),
             };
             Frame::ReplyErr { id, err }
@@ -554,6 +593,7 @@ mod tests {
             task: "sst2".into(),
             tokens: vec![1, 2, 3, 65535],
             steps: 0,
+            mode: String::new(),
         }
     }
 
@@ -568,6 +608,7 @@ mod tests {
                 task: String::new(),
                 tokens: vec![],
                 steps: 0,
+                mode: String::new(),
             },
             Frame::Request {
                 id: 21,
@@ -576,6 +617,25 @@ mod tests {
                 task: "sst2".into(),
                 tokens: vec![5, 6],
                 steps: 4,
+                mode: String::new(),
+            },
+            Frame::Request {
+                id: 22,
+                trace: 10,
+                lane: LaneSelector::Any,
+                task: "sst2".into(),
+                tokens: vec![7],
+                steps: 0,
+                mode: "bf16an-2-2".into(),
+            },
+            Frame::Request {
+                id: 23,
+                trace: 11,
+                lane: LaneSelector::Any,
+                task: "sst2".into(),
+                tokens: vec![8, 9],
+                steps: 2,
+                mode: "elma-8-1".into(),
             },
             Frame::Stream { id: 21, step: 0, token: 31, last: false },
             Frame::Stream { id: 21, step: 3, token: 0, last: true },
@@ -591,6 +651,7 @@ mod tests {
             Frame::ReplyErr { id: 11, err: WireError::NoReplica },
             Frame::ReplyErr { id: 12, err: WireError::ShuttingDown },
             Frame::ReplyErr { id: 14, err: WireError::Timeout },
+            Frame::ReplyErr { id: 19, err: WireError::UnknownMode },
             Frame::Shutdown { id: 13 },
             Frame::Health { id: 15 },
             Frame::Drain { id: 16 },
@@ -634,14 +695,14 @@ mod tests {
         let mut bad = good.clone();
         bad[0] = b'X';
         assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
-        // bad version — including the retired v1..v3: a server must
+        // bad version — including the retired v1..v4: a server must
         // not half-parse frames from an older client (v3 moved the
-        // request field offsets and v4 appended the steps field, so a
-        // lenient parse would mis-read them).
+        // request field offsets, v4 appended the steps field and v5 the
+        // mode label, so a lenient parse would mis-read them).
         let mut bad = good.clone();
         bad[4] = 9;
         assert_eq!(decode(&bad), Err(FrameError::BadVersion(9)));
-        for v in 1u8..=3 {
+        for v in 1u8..=4 {
             let mut bad = good.clone();
             bad[4] = v;
             assert_eq!(decode(&bad), Err(FrameError::BadVersion(v)));
@@ -669,16 +730,33 @@ mod tests {
             task: "t".into(),
             tokens: vec![],
             steps: 0,
+            mode: String::new(),
         };
         let mut bad = encode(&f);
         let n_off = HEADER_LEN + 8 + 8 + 1 + 1 + 1; // id + trace + lane + task_len + task
         bad[n_off..n_off + 4].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
-        // absurd declared decode step count (steps trail the body)
+        // absurd declared decode step count (steps sit before the trailing
+        // mode_len byte, empty label here)
         let mut bad = encode(&f);
-        let s_off = bad.len() - 4;
-        bad[s_off..].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let s_off = bad.len() - 5;
+        bad[s_off..s_off + 4].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode(&bad), Err(FrameError::Oversize { .. })));
+        // mode label must be utf-8
+        let with_mode = encode(&Frame::Request {
+            id: 1,
+            trace: 2,
+            lane: LaneSelector::Any,
+            task: "t".into(),
+            tokens: vec![],
+            steps: 0,
+            mode: "ab".into(),
+        });
+        let mut bad = with_mode.clone();
+        let m_off = bad.len() - 2; // the two mode bytes trail the body
+        bad[m_off] = 0xFF;
+        bad[m_off + 1] = 0xFE;
+        assert_eq!(decode(&bad), Err(FrameError::BadModeLabel));
         // reserved stream flag bits must be zero (flags byte trails)
         let s = encode(&Frame::Stream { id: 3, step: 1, token: 9, last: true });
         let mut bad = s.clone();

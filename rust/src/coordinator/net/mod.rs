@@ -55,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use super::server::{ReplyEvent, ReplySink};
 use super::Router;
+use crate::systolic::EngineMode;
 
 use frame::{Frame, FrameBuffer, WireError};
 
@@ -354,12 +355,12 @@ fn reader_loop(
                 Err(e) => return Err(format!("frame: {e}")),
             };
             match frame {
-                Frame::Request { id, trace, lane, task, tokens, steps } => {
+                Frame::Request { id, trace, lane, task, tokens, steps, mode } => {
                     let sink = ReplySink::Tagged { id, tx: reply_tx.clone() };
                     let verdict = if drain.load(Ordering::SeqCst) {
                         Err(WireError::ShuttingDown)
                     } else {
-                        route_request(router, &task, tokens, steps, trace, lane, sink)
+                        route_request(router, &task, tokens, steps, trace, lane, &mode, sink)
                     };
                     if let Err(err) = verdict {
                         send_frame(write_half, &Frame::ReplyErr { id, err })
@@ -406,7 +407,11 @@ fn reader_loop(
 
 /// Route one decoded request — `steps == 0` is a classify request for the
 /// batcher, `steps >= 1` a streaming decode for the continuous batch;
-/// failures map to typed wire errors the reader answers inline.
+/// failures map to typed wire errors the reader answers inline.  A
+/// non-empty `mode` pins the request to replicas serving exactly that
+/// arithmetic-family label; a label no registered family parses earns
+/// [`WireError::UnknownMode`] before any routing is attempted.
+#[allow(clippy::too_many_arguments)]
 fn route_request(
     router: &Router,
     task: &str,
@@ -414,10 +419,16 @@ fn route_request(
     steps: u32,
     trace: u64,
     lane: LaneSelector,
+    mode: &str,
     sink: ReplySink,
 ) -> Result<(), WireError> {
     use super::RouteError;
-    let verdict = if steps == 0 {
+    let verdict = if !mode.is_empty() {
+        let Some(pinned) = EngineMode::parse(mode) else {
+            return Err(WireError::UnknownMode);
+        };
+        router.route_mode_sink_traced(task, tokens, steps, pinned, trace, sink)
+    } else if steps == 0 {
         router.route_lane_sink_traced(task, tokens, lane.to_lane(), trace, sink)
     } else {
         router.route_decode_sink_traced(task, tokens, steps, lane.to_lane(), trace, sink)

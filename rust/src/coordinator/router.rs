@@ -60,10 +60,13 @@ pub enum Lane {
 
 impl Lane {
     /// The default lane of a global engine mode: approximate
-    /// normalization is the cheap tier, everything else the accurate one.
+    /// normalization and the statistical-fidelity registry families
+    /// (ELMA, LUT) are the cheap tier, fp32 and exact-norm bf16 the
+    /// accurate one.
     pub fn of_mode(mode: EngineMode) -> Lane {
         match mode {
             EngineMode::Bf16(crate::NormMode::Approx(_)) => Lane::Cheap,
+            EngineMode::Elma(_) | EngineMode::Lut(_) => Lane::Cheap,
             _ => Lane::Accurate,
         }
     }
@@ -158,7 +161,7 @@ impl Replica {
     pub fn label(&self) -> String {
         match self.max_len {
             Some(l) => format!("{}≤{l}", self.mode.label()),
-            None => self.mode.label(),
+            None => self.mode.label().to_string(),
         }
     }
 
@@ -298,6 +301,36 @@ impl Router {
             |r| {
                 r.backend
                     .submit_decode_sink_traced(task, tokens.clone(), steps, trace, sink.clone())
+            },
+        )
+    }
+
+    /// Route by a *concrete engine mode* with a caller-provided reply sink
+    /// — the wire path for mode-labeled AMFN requests (v5 frames carry an
+    /// optional family label).  `steps == 0` is a prefill/classify
+    /// request; `steps >= 1` streams a decode, with the occupied length
+    /// (prompt + generation) counted against the length envelope exactly
+    /// like [`Router::route_decode_sink_traced`].
+    pub fn route_mode_sink_traced(
+        &self,
+        task: &str,
+        tokens: Vec<u16>,
+        steps: u32,
+        mode: EngineMode,
+        trace: u64,
+        sink: ReplySink,
+    ) -> Result<(), RouteError> {
+        let occupied = tokens.len() + (steps as usize).saturating_sub(1);
+        self.route_where_with(
+            occupied,
+            |r| r.mode == mode,
+            |r| {
+                if steps == 0 {
+                    r.backend.submit_sink_traced(task, tokens.clone(), trace, sink.clone())
+                } else {
+                    r.backend
+                        .submit_decode_sink_traced(task, tokens.clone(), steps, trace, sink.clone())
+                }
             },
         )
     }
@@ -781,6 +814,10 @@ mod tests {
         assert_eq!(Lane::of_mode(EngineMode::Fp32), Lane::Accurate);
         assert_eq!(Lane::of_mode(EngineMode::parse("bf16").unwrap()), Lane::Accurate);
         assert_eq!(Lane::of_mode(EngineMode::parse("bf16an-1-2").unwrap()), Lane::Cheap);
+        // The statistical-fidelity registry families default to the cheap
+        // lane — the wildcard arm must never silently absorb them.
+        assert_eq!(Lane::of_mode(EngineMode::parse("elma-8-1").unwrap()), Lane::Cheap);
+        assert_eq!(Lane::of_mode(EngineMode::parse("lut-4-16").unwrap()), Lane::Cheap);
         assert_eq!(Lane::Cheap.label(), "cheap");
         assert_eq!(Lane::Accurate.label(), "accurate");
     }

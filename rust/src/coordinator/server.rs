@@ -19,6 +19,7 @@
 //! this environment); the architecture mirrors a vLLM-style router→batcher→
 //! engine pipeline scaled down to one process.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{
@@ -156,6 +157,9 @@ pub enum RequestError {
     /// The connection to the upstream shard failed mid-flight, or the
     /// shard itself was draining.
     Unavailable,
+    /// The request pinned a `mode` label that no registered arithmetic
+    /// family recognises (see [`crate::arith::family::registry`]).
+    UnknownMode,
 }
 
 /// What comes back on the reply channel: logits, or an explicit rejection.
@@ -635,9 +639,12 @@ fn run_batch(
     let (enc, mode_label) = match policies.get(&task_name) {
         Some(p) => (
             Encoder::with_policy(weights, engine.with_mode(p.default_mode), p.clone()),
-            p.label(),
+            Cow::Owned(p.label()),
         ),
-        None => (Encoder::new(weights, engine.clone()), engine.mode.label()),
+        None => (
+            Encoder::new(weights, engine.clone()),
+            Cow::Borrowed(engine.mode.label()),
+        ),
     };
     // Stage stamps: batch-form covers encoder construction + padding
     // (flush → GEMM start), gemm the padded forward itself, reply-flush
@@ -792,9 +799,12 @@ fn step_decode(
     let (enc, mode_label) = match policies.get(&seq.req.task) {
         Some(p) => (
             Encoder::with_policy(weights, engine.with_mode(p.default_mode), p.clone()),
-            p.label(),
+            Cow::Owned(p.label()),
         ),
-        None => (Encoder::new(weights, engine.clone()), engine.mode.label()),
+        None => (
+            Encoder::new(weights, engine.clone()),
+            Cow::Borrowed(engine.mode.label()),
+        ),
     };
     if seq.cache.is_empty() {
         seq.enqueue_wait_us = stage_us(seq.req.submitted_at.elapsed());

@@ -21,6 +21,7 @@
 use super::gates as g;
 use crate::arith::approx_norm::ApproxNorm;
 use crate::arith::fma::{ADD_FRAME_BITS, NORM_POS};
+use crate::arith::lut::LutCfg;
 
 /// Area relaxation applied to stage-2 combinational blocks when the LZA is
 /// removed from the critical path (see module docs).
@@ -206,6 +207,104 @@ impl PeArea {
         }
     }
 
+    /// The `elma-8-1` PE: log-domain multiply + Kulisch-style linear
+    /// accumulate (Johnson, arXiv:1811.01721).  No significand multiplier
+    /// and no per-step normalization at all — the multiply is an 8-bit
+    /// integer add of log codes, the accumulate decodes through a tiny
+    /// 8-entry pow2 table into a 42-bit fixed-point accumulator (14
+    /// fractional table bits shifted across the ±16 integer range of the
+    /// product log, plus accumulation headroom).  The software model in
+    /// [`crate::arith::elma`] runs the same datapath at wider precision to
+    /// stay exactly associative; the widths charged here are the hardware
+    /// ones.  "Normalization logic" is empty by construction — that is the
+    /// family's whole pitch.
+    pub fn elma_8_1() -> PeArea {
+        const KULISCH_BITS: u32 = 42;
+        // East-forward 8-bit code latch + stage interface (15-bit decoded
+        // magnitude, 6 shift-control bits, sign) + stationary weight code
+        // and its double buffer (2×8).
+        const ELMA_REG_BITS: u32 = 8 + (15 + 6 + 1) + 16;
+        PeArea {
+            label: "elma-8-1".into(),
+            components: vec![
+                Component {
+                    name: "log multiply (8-bit add)",
+                    area_ge: g::adder_ripple(8) + g::XOR2,
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "pow2 decode table (8x15)",
+                    area_ge: g::fixed_shift_mux_levels(15, 3),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "Kulisch align shifter",
+                    area_ge: g::barrel_shifter(KULISCH_BITS, 31),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "Kulisch accumulate adder",
+                    area_ge: g::adder_ripple(KULISCH_BITS),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "Kulisch accumulator FFs",
+                    area_ge: g::regs(KULISCH_BITS),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "pipeline FFs",
+                    area_ge: g::regs(ELMA_REG_BITS),
+                    is_norm_logic: false,
+                },
+            ],
+        }
+    }
+
+    /// A `lut-C-K` PE: the Maddness per-lookup datapath of Stella Nera.
+    /// One codebook stage per PE — `log2 K` threshold comparators walking
+    /// the hash tree, the threshold-select and table-read mux networks,
+    /// and a 24-bit accumulate adder; the `C` codebooks map onto the array
+    /// dimension, so per-PE area is independent of `C`.  Thresholds and
+    /// tables live in shared SRAM (charged to the array, not the PE), so
+    /// this is the cheapest PE of the four families — and, like ELMA, it
+    /// has no normalization logic at all.
+    pub fn lut(cfg: LutCfg) -> PeArea {
+        let depth = cfg.depth().max(1);
+        PeArea {
+            label: format!("lut-{}-{}", cfg.c, cfg.k),
+            components: vec![
+                Component {
+                    name: "hash comparators",
+                    area_ge: g::comparator(8) * depth as f64,
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "threshold-select muxes",
+                    area_ge: g::fixed_shift_mux_levels(8, depth),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "table-read muxes",
+                    area_ge: g::fixed_shift_mux_levels(16, depth),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "accumulate adder (24-bit)",
+                    area_ge: g::adder_ripple(24),
+                    is_norm_logic: false,
+                },
+                Component {
+                    name: "pipeline FFs",
+                    // 8-bit input latch + code + 16-bit table word + 24-bit
+                    // running sum.
+                    area_ge: g::regs(8 + depth + 16 + 24),
+                    is_norm_logic: false,
+                },
+            ],
+        }
+    }
+
     pub fn total(&self) -> f64 {
         self.components.iter().map(|c| c.area_ge).sum()
     }
@@ -310,6 +409,38 @@ mod tests {
         let s: f64 = pe.breakdown().iter().map(|(_, p)| p).sum();
         assert!((s - 100.0).abs() < 1e-9);
         assert!(pe.norm_fraction() > 0.1 && pe.norm_fraction() < 0.5);
+    }
+
+    #[test]
+    fn new_family_pes_are_cheaper_than_every_bf16_pe() {
+        // The point of pricing ELMA and LUT on the same gate model: both
+        // multiplier-free PEs undercut even the cheapest approximate-norm
+        // bf16 PE, and the LUT PE is the cheapest of all.
+        let fp32 = PeArea::fp32_reference().total();
+        let bf16 = PeArea::accurate().total();
+        let an = PeArea::approximate(ApproxNorm::AN_1_1).total();
+        let elma = PeArea::elma_8_1().total();
+        let lut = PeArea::lut(LutCfg::DEFAULT).total();
+        assert!(lut < elma, "lut {lut} must undercut elma {elma}");
+        assert!(elma < an, "elma {elma} must undercut bf16an {an}");
+        assert!(an < bf16 && bf16 < fp32);
+        // Sanity: neither is absurdly cheap relative to the bf16 PE.
+        assert!(elma > 0.3 * bf16, "elma {elma} vs bf16 {bf16}");
+        assert!(lut > 0.15 * bf16, "lut {lut} vs bf16 {bf16}");
+    }
+
+    #[test]
+    fn new_family_pes_have_no_normalization_logic() {
+        assert_eq!(PeArea::elma_8_1().norm_logic_total(), 0.0);
+        assert_eq!(PeArea::lut(LutCfg::DEFAULT).norm_logic_total(), 0.0);
+        // Structural invariants shared with the bf16 PEs.
+        for pe in [PeArea::elma_8_1(), PeArea::lut(LutCfg { c: 8, k: 64 })] {
+            let s: f64 = pe.breakdown().iter().map(|(_, p)| p).sum();
+            assert!((s - 100.0).abs() < 1e-9);
+        }
+        // Deeper hash trees cost more.
+        let deep = PeArea::lut(LutCfg { c: 4, k: 64 }).total();
+        assert!(deep > PeArea::lut(LutCfg { c: 4, k: 4 }).total());
     }
 
     #[test]

@@ -65,7 +65,7 @@ pub fn evaluate_task(
     limit: Option<usize>,
 ) -> EvalResult {
     let enc = Encoder::new(weights, MatrixEngine::new(mode));
-    run_eval(task, &enc, mode.label(), batch_size, limit)
+    run_eval(task, &enc, mode.label().to_string(), batch_size, limit)
 }
 
 /// As [`evaluate_task`], but running a per-site [`PrecisionPolicy`] instead

@@ -13,63 +13,19 @@
 //! the cycle count a `K×N`-PE weight-stationary array would need for the
 //! same GEMM, which the serving metrics and EXPERIMENTS.md use.
 
-use crate::arith::{bf16_to_f32, f32_to_bf16, fma, fma_traced, ExtFloat, NormMode, NORM_POS};
+use crate::arith::{bf16_to_f32, elma, f32_to_bf16, fma, fma_traced, lut, ExtFloat, NormMode};
 use crate::pe::PeStats;
 use crate::runtime::pool;
 
 use super::dataflow;
 use super::scheduler::{GemmKernel, TileScheduler};
 
-/// Numeric mode of an engine: the paper's three families.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum EngineMode {
-    /// Reference: every matmul in IEEE single precision.
-    Fp32,
-    /// Bfloat16 PEs with the given normalization mode (accurate = the BF16
-    /// baseline, approximate = BF16an-k-λ).
-    Bf16(NormMode),
-}
-
-impl EngineMode {
-    pub fn label(&self) -> String {
-        match self {
-            EngineMode::Fp32 => "fp32".into(),
-            EngineMode::Bf16(NormMode::Accurate) => "bf16".into(),
-            EngineMode::Bf16(NormMode::Approx(cfg)) => format!("bf16{}", cfg.label()),
-        }
-    }
-
-    /// Parse labels like `fp32`, `bf16`, `bf16an-1-2`.  Malformed or
-    /// out-of-range `bf16an-k-λ` strings (k or λ of zero, shift range wider
-    /// than the adder frame, trailing fields) are rejected with `None`
-    /// rather than panicking in [`crate::arith::ApproxNorm::new`].
-    pub fn parse(s: &str) -> Option<EngineMode> {
-        if s == "fp32" {
-            return Some(EngineMode::Fp32);
-        }
-        if s == "bf16" {
-            return Some(EngineMode::Bf16(NormMode::Accurate));
-        }
-        let rest = s.strip_prefix("bf16an-")?;
-        let mut it = rest.split('-');
-        let k: u32 = it.next()?.parse().ok()?;
-        let l: u32 = it.next()?.parse().ok()?;
-        if it.next().is_some() {
-            return None;
-        }
-        // Range-check each parameter before summing: `k + l` on unchecked
-        // u32 would overflow (debug panic / release wrap) on huge inputs.
-        if k == 0 || l == 0 || k > NORM_POS || l > NORM_POS || k + l > NORM_POS {
-            return None;
-        }
-        Some(EngineMode::Bf16(NormMode::Approx(crate::arith::ApproxNorm::new(k, l))))
-    }
-
-    /// True for the reduced-precision (bf16) families.
-    pub fn is_bf16(&self) -> bool {
-        matches!(self, EngineMode::Bf16(_))
-    }
-}
+// The numeric-mode type lives in the arithmetic-family registry
+// ([`crate::arith::family`]) — parsing, labels, fidelity classes, PE
+// kernels and gate-level costs are all registry concerns now.  Re-exported
+// here because the engine is where every historical caller imported it
+// from.
+pub use crate::arith::family::EngineMode;
 
 /// A matrix engine instance: numeric mode + the physical array geometry it
 /// models + host-side parallelism for the simulation itself.
@@ -164,6 +120,12 @@ impl MatrixEngine {
                 let yb = self.scheduler().gemm_bf16(pool::global(), &xb, &wt, m, k, n, mode);
                 yb.iter().map(|&b| bf16_to_f32(b)).collect()
             }
+            // The registry families with their own element formats run
+            // their family GEMM directly (log-domain Kulisch / hash-LUT);
+            // both are deterministic, and ELMA is thread-count invariant
+            // bit-for-bit by construction.
+            EngineMode::Elma(cfg) => elma::gemm(cfg, x, w, m, k, n, self.threads),
+            EngineMode::Lut(cfg) => lut::gemm(cfg, x, w, m, k, n),
         }
     }
 
@@ -204,7 +166,9 @@ impl MatrixEngine {
         n: usize,
     ) -> (Vec<f32>, PeStats) {
         let mode = match self.mode {
-            EngineMode::Fp32 => NormMode::Accurate, // trace the bf16 shadow
+            // Non-bf16 families trace the bf16 shadow: the PE instrumentation
+            // models the paper's datapath, which those families replace.
+            EngineMode::Fp32 | EngineMode::Elma(_) | EngineMode::Lut(_) => NormMode::Accurate,
             EngineMode::Bf16(md) => md,
         };
         let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
@@ -348,7 +312,7 @@ pub fn matmul_bf16_percall_seed(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::{column_dot, ApproxNorm};
+    use crate::arith::{column_dot, ApproxNorm, NORM_POS};
     use crate::prng::Prng;
 
     #[test]
@@ -403,6 +367,27 @@ mod tests {
         assert_eq!(NormMode::Accurate.label(), "accurate");
         assert!(EngineMode::Bf16(NormMode::Accurate).is_bf16());
         assert!(!EngineMode::Fp32.is_bf16());
+    }
+
+    #[test]
+    fn registry_family_dispatch_runs_family_gemm() {
+        // Elma/Lut engine modes must route to their family GEMM verbatim.
+        let mut rng = Prng::new(29);
+        let (m, k, n) = (6, 24, 5);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let elma_mode = EngineMode::parse("elma-8-1").unwrap();
+        let eng = MatrixEngine::new(elma_mode);
+        assert_eq!(
+            eng.matmul(&x, &w, m, k, n),
+            elma::gemm(crate::arith::ElmaCfg::E8_1, &x, &w, m, k, n, eng.threads)
+        );
+        let lut_mode = EngineMode::parse("lut-4-16").unwrap();
+        let eng = MatrixEngine::new(lut_mode);
+        assert_eq!(
+            eng.matmul(&x, &w, m, k, n),
+            lut::gemm(crate::arith::LutCfg::DEFAULT, &x, &w, m, k, n)
+        );
     }
 
     #[test]

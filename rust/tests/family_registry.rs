@@ -1,0 +1,297 @@
+//! Back-compat and differential contracts of the arithmetic-family
+//! registry redesign.
+//!
+//! The registry (`amfma::arith::family`) replaced the closed `EngineMode`
+//! parser.  These tests pin the two promises that made the redesign safe
+//! to ship:
+//!
+//! 1. **Label back-compat** — every label the pre-registry parser accepted
+//!    (`fp32`, `bf16`, the full `bf16an-k-λ` grid) round-trips through the
+//!    registry bit-identically, and every string it rejected is still
+//!    rejected.  AMFP v2 policy files load unchanged under
+//!    `POLICY_VERSION = 3`.
+//! 2. **Differential fidelity** — the new statistical families track their
+//!    oracles: ELMA log-domain GEMM vs the f32 engine within its error
+//!    envelope (and exactly thread-invariant, because its accumulator is
+//!    an integer Kulisch register), Maddness-LUT GEMM vs exact GEMM on
+//!    clustered batches, and engine dispatch is identical to calling the
+//!    family kernels directly.
+
+use amfma::arith::{elma, family_by_name, family_of, lut, registry, ElmaCfg, Fidelity, LutCfg};
+use amfma::autotune::{self, policy::POLICY_VERSION, PrecisionPolicy, Site};
+use amfma::coordinator::Lane;
+use amfma::prng::Prng;
+use amfma::systolic::{EngineMode, GemmKernel, MatrixEngine};
+use amfma::{ApproxNorm, NormMode};
+
+// ------------------------------------------------------- label grammar --
+
+/// Every label the pre-registry `EngineMode::parse` accepted, exhaustively:
+/// `fp32`, `bf16`, and `bf16an-k-l` for k, l >= 1 with k + l <= 16.  Each
+/// must parse to the same variant as before and round-trip through
+/// `label()` byte-identically.
+#[test]
+fn every_legacy_label_round_trips_through_the_registry() {
+    assert_eq!(EngineMode::parse("fp32"), Some(EngineMode::Fp32));
+    assert_eq!(EngineMode::parse("bf16"), Some(EngineMode::Bf16(NormMode::Accurate)));
+    assert_eq!(EngineMode::Fp32.label(), "fp32");
+    assert_eq!(EngineMode::Bf16(NormMode::Accurate).label(), "bf16");
+
+    let mut accepted = 0u32;
+    for k in 1u32..=16 {
+        for l in 1u32..=16 {
+            let label = format!("bf16an-{k}-{l}");
+            let parsed = EngineMode::parse(&label);
+            if k + l <= 16 {
+                let mode = parsed.unwrap_or_else(|| panic!("{label} must parse"));
+                assert_eq!(mode, EngineMode::Bf16(NormMode::Approx(ApproxNorm::new(k, l))));
+                assert_eq!(mode.label(), label, "label round-trip");
+                assert_eq!(EngineMode::parse(mode.label()), Some(mode), "parse(label()) identity");
+                accepted += 1;
+            } else {
+                assert_eq!(parsed, None, "{label} must stay rejected (k + l > 16)");
+            }
+        }
+    }
+    // The grid size is itself part of the contract: sum_{k=1}^{15} (16-k).
+    assert_eq!(accepted, 120);
+}
+
+/// Strings the pre-registry parser rejected must still be rejected — the
+/// registry introduces new grammars (elma, lut) but must not loosen the
+/// old one, and the new grammars' own edges must hold.
+#[test]
+fn pre_registry_rejections_survive_the_redesign() {
+    let rejected = [
+        // empty / junk
+        "", " ", "posit", "int8",
+        // near-misses of the fixed labels
+        "fp", "FP32", "fp32 ", " fp32", "fp64", "bf16 ", " bf16", "BF16",
+        // bf16an structural failures
+        "bf16an", "bf16an-", "bf16an--", "bf16an-1", "bf16an-1-", "bf16an--2",
+        "bf16an-x-2", "bf16an-1-x", "bf16an-1.0-2",
+        // bf16an range failures (zero fields, per-field > 16, sum > 16)
+        "bf16an-0-2", "bf16an-1-0", "bf16an-0-0", "bf16an-9-9", "bf16an-17-1",
+        "bf16an-1-17", "bf16an-4294967295-2", "bf16an-2-4294967295",
+        // bf16an trailing fields / case / whitespace
+        "bf16an-1-2-3", "bf16an-1-2-", "BF16AN-1-2", "bf16an-1-2 ", " bf16an-1-2",
+        // elma grammar edges (only elma-8-1 exists)
+        "elma", "elma-", "elma-8", "elma-8-", "elma-8-2", "elma-8-0", "elma-7-1",
+        "elma-16-1", "elma-8-1-0", "elma-8-1 ", "ELMA-8-1",
+        // lut grammar edges (C in 1..=64, K a power of two in 2..=256)
+        "lut", "lut-", "lut-4", "lut-4-", "lut-0-16", "lut-65-16", "lut-4-0",
+        "lut-4-1", "lut-4-3", "lut-4-24", "lut-4-512", "lut-4-16-1", "lut-4-16 ",
+        "LUT-4-16",
+    ];
+    for bad in rejected {
+        assert_eq!(EngineMode::parse(bad), None, "{bad:?} must be rejected");
+    }
+}
+
+/// The registry itself: four families, unique prefix-disjoint grammars,
+/// every tune candidate owned, priced and label-round-trippable.
+#[test]
+fn registry_families_are_complete_and_priced() {
+    let names: Vec<_> = registry().iter().map(|f| f.name()).collect();
+    assert_eq!(names, ["fp32", "bf16", "elma", "lut"]);
+    assert!(family_by_name("bf16an").is_some(), "CLI alias for the bf16 family");
+
+    for fam in registry() {
+        for mode in fam.tune_candidates() {
+            assert!(fam.owns(mode), "{} candidate not owned", fam.name());
+            assert_eq!(EngineMode::parse(mode.label()), Some(mode));
+            let area = autotune::mode_pe_area(mode);
+            assert!(area > 0.0, "{} has no gate-level cost", mode.label());
+        }
+    }
+
+    // Gate-level ordering the README quotes: lut < elma < bf16an < bf16 < fp32.
+    let area = |s: &str| autotune::mode_pe_area(EngineMode::parse(s).unwrap());
+    assert!(area("lut-4-16") < area("elma-8-1"));
+    assert!(area("elma-8-1") < area("bf16an-2-2"));
+    assert!(area("bf16an-2-2") < area("bf16"));
+    assert!(area("bf16") < area("fp32"));
+}
+
+/// Lane routing and fidelity classes for the new families: both are cheap
+/// statistical tiers, never admissible as the accurate lane.
+#[test]
+fn new_families_classify_as_cheap_statistical() {
+    let elma = EngineMode::parse("elma-8-1").unwrap();
+    let lutm = EngineMode::parse("lut-4-16").unwrap();
+    assert_eq!(elma.fidelity(), Fidelity::Statistical);
+    assert_eq!(lutm.fidelity(), Fidelity::Statistical);
+    assert_eq!(Lane::of_mode(elma), Lane::Cheap);
+    assert_eq!(Lane::of_mode(lutm), Lane::Cheap);
+    // The legacy classification is untouched.
+    assert_eq!(Lane::of_mode(EngineMode::Fp32), Lane::Accurate);
+    assert_eq!(Lane::of_mode(EngineMode::parse("bf16").unwrap()), Lane::Accurate);
+    assert_eq!(Lane::of_mode(EngineMode::parse("bf16an-1-2").unwrap()), Lane::Cheap);
+    // Fidelity of the legacy families is bit-exact.
+    assert_eq!(EngineMode::Fp32.fidelity(), Fidelity::BitExact);
+    assert_eq!(family_of(EngineMode::parse("bf16an-2-2").unwrap()).fidelity(), Fidelity::BitExact);
+}
+
+// ------------------------------------------------------------- AMFP v2 --
+
+fn mixed_legacy_policy() -> PrecisionPolicy {
+    // Only labels a v2 writer could have produced.
+    let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16an-2-2").unwrap());
+    p.task = "sst2".to_string();
+    let sites = autotune::model_sites(2);
+    p.set(sites[0], EngineMode::parse("bf16").unwrap());
+    p.set(sites[3], EngineMode::parse("bf16an-1-2").unwrap());
+    p.set(Site::decode(sites[1]), EngineMode::parse("bf16an-1-1").unwrap());
+    p
+}
+
+/// An AMFP v2 byte stream (same layout, version field 2) loads unchanged
+/// under POLICY_VERSION = 3, and a load + re-save rewrites only the
+/// version field.
+#[test]
+fn amfp_v2_policy_bytes_load_unchanged_under_v3() {
+    assert_eq!(POLICY_VERSION, 3);
+    let p = mixed_legacy_policy();
+    let v3 = p.to_bytes();
+    assert_eq!(&v3[4..8], &3u32.to_le_bytes(), "writer stamps v3");
+
+    // The byte layout is version-invariant: patching the version field is
+    // exactly what a real v2 writer would have produced.
+    let mut v2 = v3.clone();
+    v2[4..8].copy_from_slice(&2u32.to_le_bytes());
+    let loaded = PrecisionPolicy::from_bytes(&v2).expect("v2 policy must load");
+    assert_eq!(loaded, p, "v2 payload decodes to the identical policy");
+
+    // Re-saving upgrades the version field and nothing else.
+    let resaved = loaded.to_bytes();
+    assert_eq!(&resaved[4..8], &3u32.to_le_bytes());
+    assert_eq!(resaved[8..], v2[8..], "payload bytes unchanged across the upgrade");
+
+    // Future versions are still refused.
+    let mut v9 = v3;
+    v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+    assert!(PrecisionPolicy::from_bytes(&v9).is_err(), "unknown future version must fail");
+}
+
+/// v3 files may assign registry-family labels per site; they round-trip.
+#[test]
+fn amfp_v3_round_trips_registry_family_sites() {
+    let mut p = PrecisionPolicy::uniform(EngineMode::parse("bf16an-2-2").unwrap());
+    p.task = "mixed".to_string();
+    let sites = autotune::model_sites(1);
+    p.set(sites[0], EngineMode::parse("elma-8-1").unwrap());
+    p.set(sites[1], EngineMode::parse("lut-4-16").unwrap());
+    let back = PrecisionPolicy::from_bytes(&p.to_bytes()).expect("v3 round-trip");
+    assert_eq!(back, p);
+}
+
+// ----------------------------------------------------- kernel dispatch --
+
+fn random_batch(rng: &mut Prng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.f32_range(lo, hi)).collect()
+}
+
+/// Registry-parsed bf16 modes keep the kernel-tier bit contract: the
+/// scalar, wide and (where supported) SIMD kernels produce bit-identical
+/// outputs, exactly as they did before the redesign.
+#[test]
+fn kernel_tiers_stay_bit_identical_for_registry_parsed_modes() {
+    let (m, k, n) = (8usize, 96usize, 8usize);
+    let mut rng = Prng::new(0xFA31_17);
+    let x = random_batch(&mut rng, m * k, -2.0, 2.0);
+    let w = random_batch(&mut rng, k * n, -1.0, 1.0);
+    for label in ["bf16", "bf16an-1-2", "bf16an-2-2"] {
+        let mode = EngineMode::parse(label).unwrap();
+        let eng = MatrixEngine::new(mode);
+        let scalar = eng.with_kernel(GemmKernel::Scalar).matmul(&x, &w, m, k, n);
+        let wide = eng.with_kernel(GemmKernel::Wide).matmul(&x, &w, m, k, n);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&scalar), bits(&wide), "{label}: wide kernel diverged");
+        if amfma::arith::simd::supported() {
+            let simd = eng.with_kernel(GemmKernel::Simd).matmul(&x, &w, m, k, n);
+            assert_eq!(bits(&scalar), bits(&simd), "{label}: simd kernel diverged");
+        }
+    }
+}
+
+/// Engine dispatch for the new families is exactly the family GEMM — the
+/// registry added indirection to the API, not to the datapath.
+#[test]
+fn engine_dispatch_is_identical_to_family_gemm() {
+    let (m, k, n) = (6usize, 64usize, 10usize);
+    let mut rng = Prng::new(0xD15_9A7C4);
+    let x = random_batch(&mut rng, m * k, -1.5, 1.5);
+    let w = random_batch(&mut rng, k * n, -1.0, 1.0);
+
+    let eng = MatrixEngine::new(EngineMode::parse("elma-8-1").unwrap());
+    let via_engine = eng.matmul(&x, &w, m, k, n);
+    let direct = elma::gemm(ElmaCfg::E8_1, &x, &w, m, k, n, eng.threads);
+    assert_eq!(
+        via_engine.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        direct.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+    );
+
+    let cfg = LutCfg { c: 4, k: 16 };
+    let leng = MatrixEngine::new(EngineMode::Lut(cfg));
+    let via_engine = leng.matmul(&x, &w, m, k, n);
+    let direct = lut::gemm(cfg, &x, &w, m, k, n);
+    assert_eq!(
+        via_engine.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        direct.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+    );
+}
+
+// ------------------------------------------------------- differentials --
+
+/// ELMA log-domain GEMM vs the f32 oracle: inside the documented relative
+/// error envelope, visibly approximate (it must not silently fall back to
+/// exact arithmetic), and bit-identical across thread counts because the
+/// Kulisch accumulator is an integer register.
+#[test]
+fn elma_engine_tracks_the_f32_oracle_within_envelope() {
+    let (m, k, n) = (16usize, 256usize, 16usize);
+    let mut rng = Prng::new(0xE1_3A);
+    let x = random_batch(&mut rng, m * k, -2.0, 2.0);
+    let w = random_batch(&mut rng, k * n, -1.0, 1.0);
+
+    let exact = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, k, n);
+    let eng = MatrixEngine::new(EngineMode::parse("elma-8-1").unwrap());
+    let y = eng.matmul(&x, &w, m, k, n);
+
+    let rel = autotune::rel_err(&y, &exact);
+    assert!(rel < 0.06, "elma-8-1 rel_err {rel} above envelope");
+    assert!(rel > 1e-6, "elma-8-1 suspiciously exact — log-domain path not taken?");
+
+    // Thread invariance: integer accumulation is associative.
+    let mut single = eng.clone();
+    single.threads = 1;
+    let mut many = eng.clone();
+    many.threads = 4;
+    let a = single.matmul(&x, &w, m, k, n);
+    let b = many.matmul(&x, &w, m, k, n);
+    assert_eq!(
+        a.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        b.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        "elma accumulation must be thread-invariant"
+    );
+}
+
+/// Maddness-LUT GEMM vs exact GEMM on a clustered batch: the hash trees
+/// self-calibrate on the activations, so data drawn from a small set of
+/// levels per dimension is recovered within a tight envelope.
+#[test]
+fn lut_engine_recovers_clustered_batches() {
+    let (m, k, n) = (64usize, 16usize, 8usize);
+    let mut rng = Prng::new(0x1007);
+    let levels = [-3.0f32, -1.0, 1.0, 3.0];
+    let x: Vec<f32> = (0..m * k)
+        .map(|_| levels[rng.below(4) as usize] + rng.f32_range(-0.01, 0.01))
+        .collect();
+    let w = random_batch(&mut rng, k * n, -1.0, 1.0);
+
+    let exact = MatrixEngine::new(EngineMode::Fp32).matmul(&x, &w, m, k, n);
+    let cfg = EngineMode::parse("lut-16-4").unwrap();
+    let y = MatrixEngine::new(cfg).matmul(&x, &w, m, k, n);
+    let rel = autotune::rel_err(&y, &exact);
+    assert!(rel < 0.05, "lut-16-4 rel_err {rel} on clustered batch");
+}

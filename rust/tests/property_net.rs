@@ -28,6 +28,16 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 .collect();
             let n = rng.below(64) as usize;
             let tokens: Vec<u16> = (0..n).map(|_| rng.below(1 << 16) as u16).collect();
+            // Mix of no pin, registered labels and arbitrary strings: the
+            // frame layer carries any utf-8 label; only routing validates.
+            let mode = match rng.below(4) {
+                0 => String::new(),
+                1 => "bf16an-2-2".to_string(),
+                2 => "elma-8-1".to_string(),
+                _ => (0..rng.below(10) as usize)
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect(),
+            };
             Frame::Request {
                 id: rng.next_u64(),
                 trace: rng.next_u64(),
@@ -35,6 +45,7 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 task,
                 tokens,
                 steps: rng.below(1 << 16) as u32,
+                mode,
             }
         }
         7 => Frame::Stream {
@@ -59,7 +70,7 @@ fn random_frame(rng: &mut Prng) -> Frame {
             Frame::Stats { id: rng.next_u64(), body }
         }
         2 => {
-            let err = match rng.below(6) {
+            let err = match rng.below(7) {
                 0 => WireError::UnknownTask,
                 1 => WireError::InvalidLength {
                     len: rng.below(1 << 20) as u32,
@@ -68,6 +79,7 @@ fn random_frame(rng: &mut Prng) -> Frame {
                 2 => WireError::Busy,
                 3 => WireError::NoReplica,
                 4 => WireError::Timeout,
+                5 => WireError::UnknownMode,
                 _ => WireError::ShuttingDown,
             };
             Frame::ReplyErr { id: rng.next_u64(), err }
@@ -121,6 +133,7 @@ fn absurd_declared_lengths_are_rejected() {
         task: "sst2".into(),
         tokens: vec![1, 2, 3],
         steps: 0,
+        mode: String::new(),
     };
     let good = encode(&f);
     // Declared body length: everything from "one too few/many" to absurd.
@@ -158,25 +171,25 @@ fn bad_header_fields_are_rejected() {
     }
 }
 
-/// The retired v1-v3 protocols (no trace/stage/stats/stream extensions)
-/// are rejected outright — there is no version negotiation — and so are
-/// kinds beyond the v4 table.
+/// The retired v1-v4 protocols (no trace/stage/stats/stream/mode
+/// extensions) are rejected outright — there is no version negotiation —
+/// and so are kinds beyond the v5 table.
 #[test]
 fn retired_version_and_unknown_kinds_are_rejected() {
-    for v in 1u8..=3 {
+    for v in 1u8..=4 {
         let mut bytes = encode(&Frame::Health { id: 3 });
         bytes[4] = v;
         assert!(decode(&bytes).is_err(), "v{v} header must be rejected");
     }
     let mut bytes = encode(&Frame::Drain { id: 4 });
     bytes[5] = 8;
-    assert!(decode(&bytes).is_err(), "kind 8 is out of the v4 table");
+    assert!(decode(&bytes).is_err(), "kind 8 is out of the v5 table");
     // A valid kind whose body doesn't fit it is rejected too: a Drain
     // body (8 bytes) relabeled as a Stream (needs 15).
     let mut bytes = encode(&Frame::Drain { id: 4 });
     bytes[5] = 7;
     assert!(decode(&bytes).is_err(), "drain body is not a stream body");
-    // The v4 control frames themselves round-trip.
+    // The control frames themselves round-trip.
     for f in [
         Frame::Health { id: u64::MAX },
         Frame::Drain { id: 0 },
@@ -244,6 +257,7 @@ fn garbage_payload_with_valid_structure_parses() {
             task: "x".into(),
             tokens: tokens.clone(),
             steps: rng.below(1 << 16) as u32,
+            mode: String::new(),
         };
         let (back, _) = decode(&encode(&f)).expect("garbage payload is still a valid frame");
         match back {
